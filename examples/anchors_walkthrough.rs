@@ -1,0 +1,122 @@
+//! Walkthrough of Figures 2–10: the anchors hierarchy on 2-d points,
+//! then the middle-out agglomeration, traced step by step in ASCII.
+//!
+//! Run: `cargo run --release --example anchors_walkthrough`
+
+use anchors_hierarchy::anchors::build_anchors;
+use anchors_hierarchy::data::{Data, DenseMatrix};
+use anchors_hierarchy::metrics::Space;
+use anchors_hierarchy::rng::Rng;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+
+/// Render 2-d points as a terminal scatter plot, labelling each point
+/// with the id of its owning anchor.
+fn plot(space: &Space, owner: &[usize], width: usize, height: usize) {
+    let n = space.n();
+    let (mut xlo, mut xhi, mut ylo, mut yhi) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    let mut row = vec![0f32; 2];
+    let mut coords = Vec::with_capacity(n);
+    for i in 0..n {
+        space.fill_row(i, &mut row);
+        let (x, y) = (row[0] as f64, row[1] as f64);
+        xlo = xlo.min(x);
+        xhi = xhi.max(x);
+        ylo = ylo.min(y);
+        yhi = yhi.max(y);
+        coords.push((x, y));
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (i, &(x, y)) in coords.iter().enumerate() {
+        let gx = ((x - xlo) / (xhi - xlo + 1e-9) * (width - 1) as f64) as usize;
+        let gy = ((y - ylo) / (yhi - ylo + 1e-9) * (height - 1) as f64) as usize;
+        let ch = char::from_digit((owner[i] % 36) as u32, 36).unwrap_or('*');
+        grid[height - 1 - gy][gx] = ch;
+    }
+    for line in grid {
+        println!("  {}", line.iter().collect::<String>());
+    }
+}
+
+fn main() {
+    // Figure 2: a set of points in 2-d — three blobs plus scatter.
+    let mut rng = Rng::new(42);
+    let mut rows = Vec::new();
+    for (cx, cy) in [(-8.0, -3.0), (6.0, 5.0), (0.0, 9.0)] {
+        for _ in 0..60 {
+            rows.push(vec![
+                (cx + rng.normal() * 1.5) as f32,
+                (cy + rng.normal() * 1.5) as f32,
+            ]);
+        }
+    }
+    for _ in 0..30 {
+        rows.push(vec![
+            rng.uniform(-12.0, 12.0) as f32,
+            rng.uniform(-8.0, 12.0) as f32,
+        ]);
+    }
+    let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+    println!("Figures 2-6: growing the anchor set (each digit = owning anchor)\n");
+
+    // Figures 3, 5, 6: anchor sets of growing size. Each point labelled by
+    // its owner; watch new anchors claim the Voronoi-vertex regions.
+    for k in [3usize, 4, 8] {
+        space.reset_count();
+        let set = build_anchors(
+            &space,
+            &(0..space.n() as u32).collect::<Vec<_>>(),
+            k,
+            &mut Rng::new(7),
+        );
+        let mut owner = vec![0usize; space.n()];
+        for (ai, a) in set.anchors.iter().enumerate() {
+            for &(_, p) in &a.owned {
+                owner[p as usize] = ai;
+            }
+        }
+        println!(
+            "k = {k}: {} distance computations (brute force would be {})",
+            space.dist_count(),
+            space.n() * k
+        );
+        plot(&space, &owner, 68, 20);
+        for (ai, a) in set.anchors.iter().enumerate() {
+            println!(
+                "  anchor {ai}: pivot point #{:<4} radius {:>7.3}  owns {:>3}",
+                a.pivot,
+                a.radius(),
+                a.len()
+            );
+        }
+        println!();
+    }
+
+    // Figures 7-10: the middle-out tree. Show the merge structure levels.
+    println!("Figures 7-10: middle-out agglomeration into a metric tree\n");
+    let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 12, seed: 7, exact_radii: false });
+    tree.validate(&space).expect("valid tree");
+    let shape = tree.shape();
+    println!(
+        "tree: {} nodes, {} leaves, depth {}, build {} dists",
+        shape.nodes, shape.leaves, shape.max_depth, tree.build_dists
+    );
+    // Print the top 3 levels of the merge tree with ball stats.
+    fn show(tree: &anchors_hierarchy::tree::MetricTree, id: u32, depth: usize, max_depth: usize) {
+        let n = tree.node(id);
+        println!(
+            "  {}{} r={:<8.3} count={:<4} {}",
+            "    ".repeat(depth),
+            if n.is_leaf() { "leaf" } else { "node" },
+            n.radius,
+            n.count,
+            if depth == max_depth && !n.is_leaf() { "…" } else { "" }
+        );
+        if depth < max_depth {
+            if let Some((a, b)) = n.children {
+                show(tree, a, depth + 1, max_depth);
+                show(tree, b, depth + 1, max_depth);
+            }
+        }
+    }
+    show(&tree, tree.root, 0, 3);
+}

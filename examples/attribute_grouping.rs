@@ -1,0 +1,109 @@
+//! Attribute grouping (paper §4.3): transpose the dataset, standardize,
+//! and find all pairs of attributes with correlation ≥ ρ via the
+//! correlation ↔ distance identity ρ = 1 − D²/2 — plus the §6 extension:
+//! a dependency tree (maximum-correlation spanning tree) over attributes
+//! via the dual-tree MST.
+//!
+//! Run: `cargo run --release --example attribute_grouping`
+
+use anchors_hierarchy::algorithms::{allpairs, mst};
+use anchors_hierarchy::data::{Data, DenseMatrix};
+use anchors_hierarchy::metrics::Space;
+use anchors_hierarchy::rng::Rng;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+
+/// Build a dataset with planted attribute-correlation structure: groups
+/// of attributes driven by shared latent factors plus noise columns.
+fn build_data(rows: usize, seed: u64) -> (DenseMatrix, Vec<(usize, usize)>) {
+    let mut rng = Rng::new(seed);
+    // 4 latent factors; attribute groups of 3 tied to each; 8 noise attrs.
+    let n_factors = 4;
+    let per_group = 3;
+    let noise_attrs = 8;
+    let d = n_factors * per_group + noise_attrs;
+    let mut expected = Vec::new();
+    for g in 0..n_factors {
+        for a in 0..per_group {
+            for b in (a + 1)..per_group {
+                expected.push((g * per_group + a, g * per_group + b));
+            }
+        }
+    }
+    let mut values = Vec::with_capacity(rows * d);
+    for _ in 0..rows {
+        let factors: Vec<f64> = (0..n_factors).map(|_| rng.normal()).collect();
+        for g in 0..n_factors {
+            for _ in 0..per_group {
+                values.push((factors[g] + 0.25 * rng.normal()) as f32);
+            }
+        }
+        for _ in 0..noise_attrs {
+            values.push(rng.normal() as f32);
+        }
+    }
+    (DenseMatrix::new(rows, d, values), expected)
+}
+
+fn main() {
+    let (data, expected) = build_data(2000, 3);
+    println!(
+        "dataset: {} records × {} attributes (4 latent factor groups of 3 + 8 noise)",
+        data.n, data.d
+    );
+
+    // --- correlated pairs at ρ ≥ 0.9 -----------------------------------
+    let rho = 0.90;
+    let (pairs_tree, dists_tree) = allpairs::correlated_attribute_pairs(&data, rho, 4, true);
+    let (pairs_naive, dists_naive) = allpairs::correlated_attribute_pairs(&data, rho, 4, false);
+    println!("\nattribute pairs with ρ ≥ {rho}:");
+    for &(i, j, r) in &pairs_tree {
+        let planted = expected.contains(&(i as usize, j as usize));
+        println!("  attr{i:<3} ~ attr{j:<3}  ρ = {r:.4}  {}", if planted { "(planted)" } else { "" });
+    }
+    assert_eq!(
+        pairs_tree.iter().map(|&(i, j, _)| (i, j)).collect::<Vec<_>>(),
+        pairs_naive.iter().map(|&(i, j, _)| (i, j)).collect::<Vec<_>>(),
+        "dual-tree and naive must agree"
+    );
+    let found: Vec<(usize, usize)> = pairs_tree
+        .iter()
+        .map(|&(i, j, _)| (i as usize, j as usize))
+        .collect();
+    for e in &expected {
+        assert!(found.contains(e), "planted pair {e:?} missed");
+    }
+    println!(
+        "all {} planted pairs found; 0 false positives among noise attrs: {}",
+        expected.len(),
+        found.iter().all(|&(i, j)| i < 12 && j < 12)
+    );
+    println!(
+        "distance computations: naive {dists_naive}  dual-tree {dists_tree}  speedup {:.1}×",
+        dists_naive as f64 / dists_tree as f64
+    );
+
+    // --- dependency tree over attributes (§6) ---------------------------
+    let attrs = allpairs::attribute_view(&data);
+    let space = Space::euclidean(Data::Dense(attrs));
+    let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 4, ..Default::default() });
+    let edges = mst::tree_mst(&space, &tree);
+    println!("\ndependency tree (max-correlation spanning tree over attributes):");
+    let mut grouped_edges = 0;
+    for e in &edges {
+        let rho = allpairs::tau_to_rho(e.dist);
+        let same_group = (e.a as usize / 3 == e.b as usize / 3) && e.a < 12 && e.b < 12;
+        if same_group {
+            grouped_edges += 1;
+        }
+        println!(
+            "  attr{:<3} — attr{:<3}  ρ = {rho:+.4}{}",
+            e.a,
+            e.b,
+            if same_group { "  [intra-group]" } else { "" }
+        );
+    }
+    // Every factor group of 3 should be internally connected: 2 intra-group
+    // edges per group = 8.
+    println!("intra-group edges: {grouped_edges} (expected 8)");
+    assert_eq!(grouped_edges, 8, "dependency tree missed factor structure");
+}

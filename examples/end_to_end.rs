@@ -1,0 +1,164 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! This example proves all layers compose:
+//!   L1/L2 — the AOT-compiled Pallas/JAX pairwise-distance artifacts are
+//!           loaded through PJRT and used on the K-means hot path;
+//!   L3    — the batch coordinator serves a mixed workload of clustering,
+//!           anomaly-detection and all-pairs jobs over four Table-1
+//!           datasets, tree-accelerated, with exact distance accounting.
+//!
+//! It finishes by reporting the paper's headline metric — distance-
+//! computation speedup of the cached-statistics metric tree over the
+//! naive baselines — for every job pair, plus coordinator throughput.
+//!
+//! Run: `cargo run --release --example end_to_end`
+//! (recorded in EXPERIMENTS.md §End-to-end)
+
+use anchors_hierarchy::coordinator::{Coordinator, JobKind, JobOutput, JobSpec, JobState};
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::runtime::BatchDistanceEngine;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let scale = std::env::var("E2E_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05f64);
+    let seed = 20130u64;
+
+    // L1/L2: the XLA batch engine over the AOT artifacts.
+    let engine = match BatchDistanceEngine::open_default() {
+        Ok(e) => {
+            println!(
+                "XLA engine: artifacts loaded (pairwise widths {:?})",
+                e.manifest().widths("pairwise_d2")
+            );
+            Some(Arc::new(e))
+        }
+        Err(e) => {
+            println!("XLA engine unavailable ({e}); running scalar-only");
+            None
+        }
+    };
+
+    // L3: the coordinator.
+    let coord = Coordinator::with_engine(4, 64, engine);
+    let datasets = [
+        DatasetKind::Squiggles,
+        DatasetKind::Cell,
+        DatasetKind::Covtype,
+        DatasetKind::Reuters { half: false },
+    ];
+    println!(
+        "\nworkload: k-means + anomalies + all-pairs on {:?} at scale {scale}\n",
+        datasets.iter().map(|d| d.name()).collect::<Vec<_>>()
+    );
+
+    let t0 = Instant::now();
+    // For each dataset, submit (naive, tree) pairs of each operation.
+    let mut handles: Vec<(String, String, bool, u64)> = Vec::new();
+    for kind in &datasets {
+        let dataset = DatasetSpec { kind: kind.clone(), scale, seed };
+        for (opname, job) in [
+            ("kmeans-k20", JobKind::Kmeans { k: 20, iters: 5, anchors_init: true }),
+            ("anomalies", JobKind::Anomaly { threshold: 15, target_frac: 0.1 }),
+        ] {
+            for use_tree in [false, true] {
+                let spec = JobSpec {
+                    dataset: dataset.clone(),
+                    kind: job.clone(),
+                    use_tree,
+                    rmin: 30,
+                };
+                let id = coord.submit(spec).expect("queue sized for workload");
+                handles.push((kind.name(), opname.to_string(), use_tree, id));
+            }
+        }
+    }
+
+    // Collect and pair up.
+    let mut results: std::collections::HashMap<(String, String, bool), (u64, JobOutput, f64)> =
+        std::collections::HashMap::new();
+    for (ds, op, tree, id) in &handles {
+        match coord.wait(*id) {
+            JobState::Done(r) => {
+                results.insert((ds.clone(), op.clone(), *tree), (r.dists, r.output, r.wall_ms));
+            }
+            JobState::Failed(e) => panic!("job {ds}/{op} failed: {e}"),
+            _ => unreachable!(),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{:<12} {:<12} {:>14} {:>14} {:>9}  result",
+        "dataset", "operation", "naive dists", "tree dists", "speedup"
+    );
+    let mut speedups = Vec::new();
+    for kind in &datasets {
+        for op in ["kmeans-k20", "anomalies"] {
+            let naive = &results[&(kind.name(), op.to_string(), false)];
+            let tree = &results[&(kind.name(), op.to_string(), true)];
+            let speedup = naive.0 as f64 / tree.0.max(1) as f64;
+            speedups.push((kind.name(), op, speedup));
+            // Exactness across the pair where the outputs are comparable.
+            match (&naive.1, &tree.1) {
+                (
+                    JobOutput::Kmeans { distortion: a, .. },
+                    JobOutput::Kmeans { distortion: b, .. },
+                ) => assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                    "{} kmeans mismatch: {a} vs {b}",
+                    kind.name()
+                ),
+                (
+                    JobOutput::Anomaly { n_anomalies: a, .. },
+                    JobOutput::Anomaly { n_anomalies: b, .. },
+                ) => assert_eq!(a, b, "{} anomaly mismatch", kind.name()),
+                _ => {}
+            }
+            println!(
+                "{:<12} {:<12} {:>14} {:>14} {:>8.1}×  {:?}",
+                kind.name(),
+                op,
+                naive.0,
+                tree.0,
+                speedup,
+                tree.1
+            );
+        }
+    }
+
+    let m = coord.shutdown();
+    println!(
+        "\ncoordinator: {} jobs in {wall:.1}s ({:.1} jobs/s), {} total distance computations",
+        m.completed,
+        m.completed as f64 / wall,
+        m.total_dists
+    );
+
+    // Headline assertions: structured data accelerates, reuters does not
+    // (the paper's central qualitative claims).
+    let get = |ds: &str, op: &str| {
+        speedups
+            .iter()
+            .find(|(d, o, _)| d == ds && *o == op)
+            .map(|(_, _, s)| *s)
+            .unwrap()
+    };
+    assert!(
+        get("squiggles", "kmeans-k20") > 3.0,
+        "2-d structured data must accelerate"
+    );
+    assert!(
+        get("cell", "kmeans-k20") > 1.5,
+        "38-d clustered data must accelerate"
+    );
+    let reuters = get("reuters100", "kmeans-k20");
+    assert!(
+        reuters < 2.0,
+        "reuters is supposed to show little-to-anti speedup, got {reuters}"
+    );
+    println!("\nheadline checks passed: structure ⇒ speedup, reuters ⇒ none (paper §5, §7)");
+}

@@ -1,0 +1,65 @@
+//! Quickstart: build a middle-out metric tree over a clustered dataset
+//! and run exact tree-accelerated K-means, comparing distance counts with
+//! the naive baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anchors_hierarchy::algorithms::kmeans;
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+
+fn main() {
+    // 1. A dataset: the `cell` surrogate from Table 1 at 10% scale
+    //    (≈4000 points × 38 dims, 12 latent clusters).
+    let spec = DatasetSpec::scaled(DatasetKind::Cell, 0.10);
+    let space = spec.build();
+    println!(
+        "dataset: {} — {} points × {} dims",
+        spec.kind.name(),
+        space.n(),
+        space.dim()
+    );
+
+    // 2. The anchors-hierarchy middle-out metric tree (§3.1 of the paper).
+    let tree = middle_out::build(&space, &MiddleOutConfig::default());
+    let shape = tree.shape();
+    println!(
+        "tree: {} nodes / {} leaves, depth {}, built with {} distance computations",
+        shape.nodes, shape.leaves, shape.max_depth, tree.build_dists
+    );
+    tree.validate(&space).expect("tree invariants");
+
+    // 3. Exact K-means, naive vs tree-accelerated — identical output,
+    //    very different cost.
+    let k = 12;
+    let iters = 10;
+    let opts = kmeans::KmeansOpts::default();
+
+    let naive = kmeans::naive_lloyd(&space, kmeans::Init::Random, k, iters, &opts);
+    let fast = kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, k, iters, &opts);
+
+    println!("\nK-means, k={k}, {iters} iterations:");
+    println!(
+        "  naive : distortion {:.6e}  {:>12} distance computations",
+        naive.distortion, naive.dists
+    );
+    println!(
+        "  tree  : distortion {:.6e}  {:>12} distance computations",
+        fast.distortion, fast.dists
+    );
+    println!(
+        "  exactness: |Δdistortion| = {:.2e}   speedup: {:.1}×",
+        (naive.distortion - fast.distortion).abs(),
+        naive.dists as f64 / fast.dists as f64
+    );
+
+    // 4. Anchors initialization (Table 4): better starting distortion.
+    let random_start = kmeans::random_init(&space, k, 1);
+    let anchors_start = kmeans::anchors_init(&space, k, 1);
+    println!(
+        "\ninitialization quality (distortion before any iteration):\n  random  {:.6e}\n  anchors {:.6e}  ({:.2}× better)",
+        kmeans::distortion_of(&space, &random_start),
+        kmeans::distortion_of(&space, &anchors_start),
+        kmeans::distortion_of(&space, &random_start) / kmeans::distortion_of(&space, &anchors_start)
+    );
+}

@@ -1,0 +1,83 @@
+"""AOT compile path: lower every (program, shape) variant to HLO TEXT.
+
+HLO *text* (not ``lowered.compile().serialize()``, not a serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The HLO text parser on the rust side
+(``HloModuleProto::from_text_file``) reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Run via ``make artifacts``; emits artifacts/<program>_n{n}_k{k}_d{d}.hlo.txt
+plus artifacts/manifest.json describing every variant (consumed by
+rust/src/runtime/artifacts.rs).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(program: str, n: int, k: int, d: int) -> str:
+    spec = model.PROGRAMS[program]
+    args = spec["args"](n, k, d)
+    lowered = jax.jit(spec["fn"]).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--feature-widths",
+        type=int,
+        nargs="*",
+        default=list(model.FEATURE_WIDTHS),
+        help="padded feature-width variants to emit",
+    )
+    ap.add_argument("--tile-n", type=int, default=model.TILE_N)
+    ap.add_argument("--tile-k", type=int, default=model.TILE_K)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"tile_n": args.tile_n, "tile_k": args.tile_k, "variants": []}
+    for program, spec in model.PROGRAMS.items():
+        for d in args.feature_widths:
+            n, k = args.tile_n, args.tile_k
+            fname = f"{program}_n{n}_k{k}_d{d}.hlo.txt"
+            text = lower_variant(program, n, k, d)
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["variants"].append(
+                {
+                    "program": program,
+                    "n": n,
+                    "k": k,
+                    "d": d,
+                    "file": fname,
+                    "outputs": spec["outputs"],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}: {len(manifest['variants'])} variants")
+
+
+if __name__ == "__main__":
+    main()

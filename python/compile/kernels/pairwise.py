@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernel: tiled squared-Euclidean pairwise distances.
+
+This is the numeric hot-spot of the whole stack: the unprunable residue of
+the metric-tree algorithms (leaf-level point-vs-candidate blocks in
+K-means, dense naive baselines) is exactly an (N x D) . (D x K)
+contraction plus row/column norms.
+
+TPU mapping (see DESIGN.md #Hardware-Adaptation): the grid tiles the
+output into (bn, bk) blocks; each grid step holds an x-tile [bn, d], a
+c-tile [bk, d] and the out-tile [bn, bk] in VMEM, and the inner
+``x @ c.T`` maps onto the MXU systolic array. The d (feature) axis stays
+resident - for the AOT variants we ship (d <= 1024, bn = 256, bk = 128)
+the VMEM footprint is (bn*d + bk*d + bn*bk) * 4B ~= 1.7 MB at d = 1024,
+comfortably under the ~16 MB VMEM budget, leaving room for
+double-buffering the HBM->VMEM pipeline.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter
+into plain HLO. Correctness vs kernels/ref.py is enforced by pytest and
+a hypothesis shape sweep.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output-tile shape. bn is the point-axis tile, bk the center-axis
+# tile. 256 x 128 keeps the MXU-shaped contraction wide while bounding
+# VMEM (see module docstring).
+DEFAULT_BN = 256
+DEFAULT_BK = 128
+
+
+def _pairwise_d2_kernel(x_ref, c_ref, o_ref):
+    """One grid step: o[bn, bk] = ||x||^2 - 2 x c^T + ||c||^2.
+
+    The expansion form is used (instead of materializing the [bn, bk, d]
+    difference tensor) so the core is a single MXU-friendly matmul and the
+    VMEM high-water mark stays at the three resident tiles.
+    """
+    x = x_ref[...]
+    c = c_ref[...]
+    # Row norms: [bn, 1] and [1, bk]; computed on the VPU.
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T
+    # The MXU contraction. preferred_element_type pins the accumulator to
+    # f32 even if inputs were cast to bf16 on a real TPU.
+    xc = jax.lax.dot_general(
+        x,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Squared distances are mathematically >= 0; the expansion can go
+    # slightly negative in float - clamp so sqrt() downstream is safe.
+    o_ref[...] = jnp.maximum(xn + cn - 2.0 * xc, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk"))
+def pairwise_d2(x, c, *, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK):
+    """Tiled pairwise squared-Euclidean distances via Pallas.
+
+    Args:
+      x: [n, d]; n must be a multiple of bn (callers pad; zero-padding is
+         exact for squared Euclidean distances).
+      c: [k, d]; k must be a multiple of bk.
+      bn, bk: output tile shape.
+
+    Returns:
+      [n, k] float32 squared distances.
+    """
+    n, d = x.shape
+    k, d2 = c.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    assert n % bn == 0, f"n={n} not a multiple of bn={bn}"
+    assert k % bk == 0, f"k={k} not a multiple of bk={bk}"
+    grid = (n // bn, k // bk)
+    return pl.pallas_call(
+        _pairwise_d2_kernel,
+        grid=grid,
+        in_specs=[
+            # x-tile varies along grid axis 0 only; the full feature axis
+            # is resident (block d = d).
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            # c-tile varies along grid axis 1 only.
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x.astype(jnp.float32), c.astype(jnp.float32))

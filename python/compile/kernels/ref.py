@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORRECTNESS ground truth: every Pallas kernel in this
+package must match its oracle to float32 tolerance under pytest (see
+python/tests/). They are deliberately written in the most direct form
+(no expansion tricks) so a bug in the optimized kernel cannot be
+mirrored here.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_d2_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance between every row of x and every row of c.
+
+    Args:
+      x: [n, d] float array of points.
+      c: [k, d] float array of centers.
+
+    Returns:
+      [n, k] with out[i, j] = sum_t (x[i, t] - c[j, t])**2.
+    """
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Index of the closest center for every point (ties -> lowest index)."""
+    return jnp.argmin(pairwise_d2_ref(x, c), axis=1).astype(jnp.int32)
+
+
+def kmeans_accumulate_ref(x, c, xmask, cmask):
+    """One dense K-means accumulation pass (oracle for model.kmeans_accumulate).
+
+    Args:
+      x: [n, d] points; rows with xmask == 0 are padding and must not
+         contribute to any output.
+      c: [k, d] centers; columns with cmask == 0 are padding and must never
+         win an assignment.
+      xmask: [n] float 0/1.
+      cmask: [k] float 0/1.
+
+    Returns:
+      counts:  [k]   number of real points assigned to each center.
+      sums:    [k,d] per-center sum of assigned real points.
+      distortion: [] sum over real points of squared distance to the
+                  closest real center.
+      assign:  [n] int32 index of the closest real center (padding rows get
+               whatever argmin produces; callers must mask by xmask).
+    """
+    big = jnp.float32(1e30)
+    d2 = pairwise_d2_ref(x, c) + (1.0 - cmask)[None, :] * big
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind2 = jnp.min(d2, axis=1)
+    onehot = jnp.eye(c.shape[0], dtype=x.dtype)[assign] * xmask[:, None]
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ x
+    distortion = jnp.sum(mind2 * xmask)
+    return counts, sums, distortion, assign

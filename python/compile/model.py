@@ -1,0 +1,138 @@
+"""Layer-2 JAX compute graphs, AOT-lowered to HLO text for the rust runtime.
+
+Every public function here is a pure jax function over fixed shapes; the
+Pallas kernel (kernels/pairwise.py) supplies the inner contraction so it
+lowers into the same HLO module. aot.py lowers each (program, shape)
+variant once; python never runs on the rust request path.
+
+Programs:
+  pairwise_d2(x, c)                      -> (d2,)
+  kmeans_accumulate(x, c, xmask, cmask)  -> (counts, sums, distortion, assign)
+  range_count(x, q, xmask, radius2)      -> (counts,)
+
+Padding contract (mirrored by rust/src/runtime/):
+  * points / centers are zero-padded up to the variant's (n, k); zero
+    padding is EXACT for squared Euclidean distances along d.
+  * xmask/cmask mark real rows; padded centers get +1e30 added to their
+    distance column so they can never win an argmin.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pairwise import pairwise_d2 as _pallas_pairwise_d2
+
+BIG = 1e30  # Additive penalty that disqualifies padded centers.
+
+
+def _block(dim: int, default: int) -> int:
+    """Largest usable tile: the default when it divides dim, else the whole
+    axis (small-shape testing path; AOT variants always use the default)."""
+    return default if dim % default == 0 else dim
+
+
+def pairwise_d2(x, c):
+    """Squared-distance matrix [n, k] (Pallas-tiled). Returns a 1-tuple."""
+    from .kernels import pairwise as pw
+
+    bn = _block(x.shape[0], pw.DEFAULT_BN)
+    bk = _block(c.shape[0], pw.DEFAULT_BK)
+    return (_pallas_pairwise_d2(x, c, bn=bn, bk=bk),)
+
+
+def kmeans_accumulate(x, c, xmask, cmask):
+    """One dense K-means accumulation pass over a tile of points.
+
+    The naive (treeless) K-means baseline in rust streams point tiles
+    through this program and sums the outputs; the tree-accelerated path
+    uses it at leaf nodes where several candidate centroids survive
+    pruning.
+
+    Args:
+      x: [n, d] points (zero-padded rows allowed).
+      c: [k, d] centers (zero-padded rows allowed).
+      xmask: [n] 1.0 for real points, 0.0 for padding.
+      cmask: [k] 1.0 for real centers, 0.0 for padding.
+
+    Returns:
+      counts [k], sums [k, d], distortion [] (sum of min-d2 over real
+      points), assign [n] int32.
+    """
+    (d2,) = pairwise_d2(x, c)
+    d2 = d2 + (1.0 - cmask)[None, :] * jnp.float32(BIG)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind2 = jnp.min(d2, axis=1)
+    # One-hot scatter of point masses to their winning centers. The
+    # one-hot matmul keeps everything dense + fusable (no gather/scatter),
+    # which XLA fuses with the mask multiply.
+    onehot = (
+        (assign[:, None] == jnp.arange(c.shape[0], dtype=jnp.int32)[None, :])
+        .astype(x.dtype)
+        * xmask[:, None]
+    )
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ x
+    distortion = jnp.sum(mind2 * xmask)
+    return counts, sums, distortion, assign
+
+
+def range_count(x, q, xmask, radius2):
+    """Count, for each query row q[j], the real points within sqrt(radius2).
+
+    Used by the anomaly-detection naive baseline: counts[j] = |{i : xmask[i]
+    and D2(x_i, q_j) <= radius2[j]}|.
+
+    Args:
+      x: [n, d] dataset tile, q: [k, d] query tile, xmask: [n],
+      radius2: [k] per-query squared radius.
+
+    Returns:
+      (counts [k] float32,)
+    """
+    (d2,) = pairwise_d2(x, q)
+    inside = (d2 <= radius2[None, :]).astype(jnp.float32) * xmask[:, None]
+    return (jnp.sum(inside, axis=0),)
+
+
+# ---------------------------------------------------------------------------
+# AOT variant registry. Feature widths cover Table 1 of the paper: 2-d
+# synthetic (->8), cell 38 (->64), covtype 54 (->64), gen100 (->128),
+# gen1000 (->1024), reuters 4732 (feature-hashed ->1024 by the rust side).
+# n/k tile sizes match the Pallas block shape so no intra-call remainder
+# handling is needed.
+# ---------------------------------------------------------------------------
+
+FEATURE_WIDTHS = (8, 64, 128, 256, 1024)
+TILE_N = 256
+TILE_K = 128
+
+PROGRAMS = {
+    "pairwise_d2": {
+        "fn": pairwise_d2,
+        "args": lambda n, k, d: (
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+        ),
+        "outputs": ["d2[n,k]f32"],
+    },
+    "kmeans_accumulate": {
+        "fn": kmeans_accumulate,
+        "args": lambda n, k, d: (
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ),
+        "outputs": ["counts[k]f32", "sums[k,d]f32", "distortion[]f32", "assign[n]i32"],
+    },
+    "range_count": {
+        "fn": range_count,
+        "args": lambda n, k, d: (
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ),
+        "outputs": ["counts[k]f32"],
+    },
+}

@@ -1,0 +1,87 @@
+"""AOT artifact integrity: every manifest variant exists, parses as HLO
+text with the declared parameter/result shapes, and the manifest is
+consistent with the program registry. Runs against artifacts/ when built
+(``make artifacts``), otherwise lowers a spot-check subset in-process.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_covers_all_programs_and_widths(self):
+        m = manifest()
+        seen = {(v["program"], v["d"]) for v in m["variants"]}
+        for program in model.PROGRAMS:
+            for d in model.FEATURE_WIDTHS:
+                assert (program, d) in seen, f"missing {program} d={d}"
+
+    def test_tiles_match_model_constants(self):
+        m = manifest()
+        assert m["tile_n"] == model.TILE_N
+        assert m["tile_k"] == model.TILE_K
+        for v in m["variants"]:
+            assert v["n"] == model.TILE_N
+            assert v["k"] == model.TILE_K
+
+    def test_files_exist_and_are_hlo_text(self):
+        m = manifest()
+        for v in m["variants"]:
+            path = os.path.join(ART, v["file"])
+            assert os.path.exists(path), v["file"]
+            with open(path) as f:
+                text = f.read()
+            assert text.startswith("HloModule"), v["file"]
+            assert "ENTRY" in text, v["file"]
+
+    def test_declared_shapes_appear_in_hlo(self):
+        m = manifest()
+        for v in m["variants"]:
+            with open(os.path.join(ART, v["file"])) as f:
+                text = f.read()
+            n, k, d = v["n"], v["k"], v["d"]
+            # Inputs: x[n,d] and c/q[k,d] must appear as parameters.
+            assert re.search(rf"f32\[{n},{d}\]", text), f"{v['file']}: no x shape"
+            assert re.search(rf"f32\[{k},{d}\]", text), f"{v['file']}: no c shape"
+            if v["program"] == "pairwise_d2":
+                assert re.search(rf"f32\[{n},{k}\]", text), "no output tile"
+            if v["program"] == "kmeans_accumulate":
+                assert re.search(rf"s32\[{n}\]", text), "no assign output"
+
+    def test_no_custom_calls(self):
+        # interpret=True must have lowered Pallas to plain HLO — a Mosaic
+        # custom-call would be unloadable by the CPU PJRT client.
+        m = manifest()
+        for v in m["variants"]:
+            with open(os.path.join(ART, v["file"])) as f:
+                text = f.read()
+            assert "custom-call" not in text.lower() or "mosaic" not in text.lower(), (
+                f"{v['file']} contains a Mosaic custom-call"
+            )
+
+
+class TestInProcessLowering:
+    """Spot-check lowering without requiring artifacts on disk."""
+
+    @pytest.mark.parametrize("program", sorted(model.PROGRAMS))
+    def test_lowers_smallest_width(self, program):
+        from compile.aot import lower_variant
+
+        text = lower_variant(program, 256, 128, 8)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text

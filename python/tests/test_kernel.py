@@ -1,0 +1,109 @@
+"""L1 correctness: Pallas pairwise kernel vs the pure-jnp oracle.
+
+The hypothesis sweep exercises shapes (multiples of the block sizes,
+including multi-tile grids), dtypes, and value scales; fixed tests pin
+the exact AOT variants that ship in artifacts/.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pairwise import pairwise_d2
+from compile.kernels.ref import pairwise_d2_ref
+
+
+def _rand(shape, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("n,k,d", [(256, 128, 8), (256, 128, 64), (512, 256, 8)])
+def test_matches_ref_block_shapes(n, k, d):
+    x, c = _rand((n, d), seed=1), _rand((k, d), seed=2)
+    got = pairwise_d2(x, c)
+    want = pairwise_d2_ref(x, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_matches_ref_large_d():
+    # The widest AOT variant (reuters-hashed / gen1000 path).
+    x, c = _rand((256, 1024), seed=3), _rand((128, 1024), seed=4)
+    np.testing.assert_allclose(
+        pairwise_d2(x, c), pairwise_d2_ref(x, c), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_small_blocks_multi_tile_grid():
+    # bn/bk much smaller than n/k: a 4 x 4 grid of tiles.
+    x, c = _rand((32, 16), seed=5), _rand((32, 16), seed=6)
+    got = pairwise_d2(x, c, bn=8, bk=8)
+    np.testing.assert_allclose(got, pairwise_d2_ref(x, c), rtol=1e-5, atol=1e-5)
+
+
+def test_zero_padding_is_exact():
+    # The padding contract rust relies on: zero-padding d adds nothing,
+    # zero rows give plain squared norms.
+    x, c = _rand((16, 6), seed=7), _rand((8, 6), seed=8)
+    xp = jnp.pad(x, ((0, 0), (0, 10)))
+    cp = jnp.pad(c, ((0, 0), (0, 10)))
+    a = pairwise_d2(xp, cp, bn=8, bk=8)
+    b = pairwise_d2_ref(x, c)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_identical_points_zero_distance():
+    x = _rand((8, 4), seed=9)
+    d2 = pairwise_d2(x, x, bn=8, bk=8)
+    np.testing.assert_allclose(jnp.diagonal(d2), jnp.zeros(8), atol=1e-4)
+    # Clamp guarantees non-negativity even where cancellation bites.
+    assert jnp.all(d2 >= 0.0)
+
+
+def test_nonnegative_under_cancellation():
+    # Near-identical large-magnitude points: the expansion form would go
+    # negative without the clamp.
+    base = _rand((8, 16), scale=1e3, seed=10)
+    x = base + 1e-4 * _rand((8, 16), seed=11)
+    d2 = pairwise_d2(x, base, bn=8, bk=8)
+    assert jnp.all(d2 >= 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    tiles_n=st.integers(1, 3),
+    tiles_k=st.integers(1, 3),
+    bn=st.sampled_from([4, 8, 16]),
+    bk=st.sampled_from([4, 8, 16]),
+    d=st.integers(1, 40),
+    scale=st.sampled_from([1e-2, 1.0, 1e2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(tiles_n, tiles_k, bn, bk, d, scale, seed):
+    n, k = tiles_n * bn, tiles_k * bk
+    x = _rand((n, d), scale=scale, seed=seed)
+    c = _rand((k, d), scale=scale, seed=seed + 1)
+    got = pairwise_d2(x, c, bn=bn, bk=bk)
+    want = pairwise_d2_ref(x, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_dtype_promotion(seed):
+    # Integer / f64 inputs are accepted and computed in f32.
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-5, 5, size=(8, 3)), dtype=jnp.int32)
+    c = jnp.asarray(rng.normal(size=(8, 3)), dtype=jnp.float32)
+    got = pairwise_d2(x, c, bn=8, bk=8)
+    want = pairwise_d2_ref(x.astype(jnp.float32), c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert got.dtype == jnp.float32
+
+
+def test_rejects_non_multiple_shapes():
+    x, c = _rand((10, 4)), _rand((8, 4))
+    with pytest.raises(AssertionError):
+        pairwise_d2(x, c, bn=8, bk=8)

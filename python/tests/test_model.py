@@ -1,0 +1,136 @@
+"""L2 correctness: model programs vs oracles, padding contract, AOT lowering."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import kmeans_accumulate_ref, pairwise_d2_ref
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), dtype=jnp.float32)
+
+
+def _masks(n, k, n_real, k_real):
+    xm = jnp.asarray([1.0] * n_real + [0.0] * (n - n_real), dtype=jnp.float32)
+    cm = jnp.asarray([1.0] * k_real + [0.0] * (k - k_real), dtype=jnp.float32)
+    return xm, cm
+
+
+class TestKmeansAccumulate:
+    def test_matches_ref_full(self):
+        x, c = _rand((32, 8), 1), _rand((8, 8), 2)
+        xm, cm = _masks(32, 8, 32, 8)
+        got = model.kmeans_accumulate(x, c, xm, cm)
+        want = kmeans_accumulate_ref(x, c, xm, cm)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+    def test_padded_rows_do_not_contribute(self):
+        x, c = _rand((16, 4), 3), _rand((8, 4), 4)
+        # zero out the padding rows the way rust does
+        x = x.at[10:].set(0.0)
+        c = c.at[5:].set(0.0)
+        xm, cm = _masks(16, 8, 10, 5)
+        counts, sums, distortion, assign = model.kmeans_accumulate(x, c, xm, cm)
+        # Compare against an unpadded oracle run.
+        wc, ws, wd, wa = kmeans_accumulate_ref(
+            x[:10], c[:5], jnp.ones(10), jnp.ones(5)
+        )
+        np.testing.assert_allclose(counts[:5], wc, atol=1e-5)
+        np.testing.assert_allclose(counts[5:], 0.0, atol=1e-5)
+        np.testing.assert_allclose(sums[:5], ws, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(distortion, wd, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(assign[:10]), np.asarray(wa))
+
+    def test_mass_conservation(self):
+        x, c = _rand((64, 8), 5), _rand((16, 8), 6)
+        xm, cm = _masks(64, 16, 50, 12)
+        x = x * xm[:, None]
+        counts, sums, _, _ = model.kmeans_accumulate(x, c, xm, cm)
+        assert float(jnp.sum(counts)) == pytest.approx(50.0)
+        np.testing.assert_allclose(
+            jnp.sum(sums, axis=0), jnp.sum(x, axis=0), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_real=st.integers(1, 24),
+        k_real=st.integers(1, 8),
+        d=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_padding_invariance(self, n_real, k_real, d, seed):
+        # Whatever the real sizes, padding to the tile must not change the
+        # restriction of the outputs to the real prefix.
+        n, k = 24, 8
+        x = _rand((n, d), seed)
+        c = _rand((k, d), seed + 1)
+        xm, cm = _masks(n, k, n_real, k_real)
+        x = x * xm[:, None]
+        c = c * cm[:, None]
+        counts, sums, distortion, assign = model.kmeans_accumulate(x, c, xm, cm)
+        wc, ws, wd, wa = kmeans_accumulate_ref(
+            x[:n_real], c[:k_real], jnp.ones(n_real), jnp.ones(k_real)
+        )
+        np.testing.assert_allclose(counts[:k_real], wc, atol=1e-4)
+        np.testing.assert_allclose(sums[:k_real], ws, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(distortion, wd, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(
+            np.asarray(assign[:n_real]), np.asarray(wa)
+        )
+
+
+class TestRangeCount:
+    def test_basic(self):
+        x = jnp.asarray([[0.0, 0], [1, 0], [2, 0], [5, 0]], dtype=jnp.float32)
+        q = jnp.asarray([[0.0, 0], [5, 0]], dtype=jnp.float32)
+        xm = jnp.ones(4)
+        r2 = jnp.asarray([1.0 + 1e-6, 0.5], dtype=jnp.float32)
+        (counts,) = model.range_count(x, q, xm, r2)
+        # q0: points at d2 {0,1,4,25} -> 2 inside; q1: {25,16,9,0} -> 1.
+        np.testing.assert_allclose(counts, [2.0, 1.0])
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 8))
+    def test_hypothesis_vs_numpy(self, seed, d):
+        x, q = _rand((16, d), seed), _rand((8, d), seed + 1)
+        xm, _ = _masks(16, 8, 13, 8)
+        r2 = jnp.abs(_rand((8,), seed + 2)) * d
+        (counts,) = model.range_count(x, q, xm, r2)
+        d2 = pairwise_d2_ref(x[:13], q)
+        want = np.sum(np.asarray(d2) <= np.asarray(r2)[None, :], axis=0)
+        np.testing.assert_allclose(counts, want)
+
+
+class TestAotLowering:
+    """The lowering itself: HLO text must be emitted and parse-safe."""
+
+    def test_lower_smallest_variant(self):
+        from compile.aot import lower_variant
+
+        text = lower_variant("pairwise_d2", 256, 128, 8)
+        assert "HloModule" in text
+        assert "f32[256,8]" in text and "f32[128,8]" in text
+        assert "f32[256,128]" in text  # the output tile
+
+    def test_lower_accumulate_outputs(self):
+        from compile.aot import lower_variant
+
+        text = lower_variant("kmeans_accumulate", 256, 128, 8)
+        assert "HloModule" in text
+        # tuple of (counts, sums, distortion, assign)
+        assert "f32[128]" in text and "f32[128,8]" in text
+        assert "s32[256]" in text
+
+    def test_program_registry_covers_feature_widths(self):
+        assert set(model.FEATURE_WIDTHS) == {8, 64, 128, 256, 1024}
+        for spec in model.PROGRAMS.values():
+            args = spec["args"](model.TILE_N, model.TILE_K, 8)
+            assert all(a.dtype in (jnp.float32,) for a in args)

@@ -1,0 +1,109 @@
+//! Bench: the micro-level hot paths — scalar distance kernels, XLA tile
+//! throughput, K-means passes, and k-NN queries. This is the profile the
+//! EXPERIMENTS.md §Perf iteration log is based on.
+
+use anchors_hierarchy::algorithms::{kmeans, knn};
+use anchors_hierarchy::bench::harness::Bencher;
+use anchors_hierarchy::data::{Data, DenseMatrix};
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::metrics::{dense_dot, dense_sqdist, Space};
+use anchors_hierarchy::rng::Rng;
+use anchors_hierarchy::runtime::BatchDistanceEngine;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use std::sync::Arc;
+
+fn random_space(n: usize, d: usize, seed: u64) -> Space {
+    let mut rng = Rng::new(seed);
+    let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    Space::euclidean(Data::Dense(DenseMatrix::new(n, d, vals)))
+}
+
+fn main() {
+    let b = Bencher::new(1, 5);
+
+    // --- scalar distance kernels -------------------------------------
+    for d in [8usize, 54, 256, 1024] {
+        let mut rng = Rng::new(d as u64);
+        let a: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let c: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        b.bench(&format!("scalar/dense_sqdist-d{d}-x10k"), |_| {
+            let mut acc = 0.0;
+            for _ in 0..10_000 {
+                acc += dense_sqdist(std::hint::black_box(&a), std::hint::black_box(&c));
+            }
+            acc
+        });
+        b.bench(&format!("scalar/dense_dot-d{d}-x10k"), |_| {
+            let mut acc = 0.0;
+            for _ in 0..10_000 {
+                acc += dense_dot(std::hint::black_box(&a), std::hint::black_box(&c));
+            }
+            acc
+        });
+    }
+
+    // --- XLA tile throughput ------------------------------------------
+    match BatchDistanceEngine::open_default() {
+        Ok(engine) => {
+            for d in [8usize, 64, 1024] {
+                let space = random_space(256, d, 7);
+                let rows: Vec<u32> = (0..256).collect();
+                let centers: Vec<Vec<f32>> = (0..128)
+                    .map(|i| {
+                        let mut rng = Rng::new(1000 + i);
+                        (0..d).map(|_| rng.normal() as f32).collect()
+                    })
+                    .collect();
+                // Warm the compile cache outside the timing loop.
+                let _ = engine.dist2_block(&space, &rows, &centers);
+                b.bench(&format!("xla/pairwise-256x128-d{d}"), |_| {
+                    engine.dist2_block(&space, &rows, &centers).len()
+                });
+            }
+        }
+        Err(e) => println!("xla benches skipped: {e}"),
+    }
+
+    // --- K-means passes -------------------------------------------------
+    let space = DatasetSpec::scaled(DatasetKind::Cell, 0.1).build();
+    let tree = middle_out::build(&space, &MiddleOutConfig::default());
+    let opts = kmeans::KmeansOpts::default();
+    b.bench("kmeans/naive-1pass-k20", |i| {
+        kmeans::naive_lloyd(&space, kmeans::Init::Random, 20, 1, &kmeans::KmeansOpts {
+            seed: i as u64,
+            ..Default::default()
+        })
+        .dists
+    });
+    b.bench("kmeans/tree-1pass-k20", |i| {
+        kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, 20, 1, &kmeans::KmeansOpts {
+            seed: i as u64,
+            ..Default::default()
+        })
+        .dists
+    });
+    if let Ok(engine) = BatchDistanceEngine::open_default() {
+        let xla_opts = kmeans::KmeansOpts {
+            engine: Some(Arc::new(engine)),
+            ..opts
+        };
+        b.bench("kmeans/naive-1pass-k20-xla", |i| {
+            kmeans::naive_lloyd(&space, kmeans::Init::Random, 20, 1, &kmeans::KmeansOpts {
+                seed: i as u64,
+                ..xla_opts.clone()
+            })
+            .dists
+        });
+    }
+
+    // --- k-NN queries ---------------------------------------------------
+    let mut rng = Rng::new(99);
+    b.bench("knn/tree-k10-x100", |_| {
+        let mut acc = 0usize;
+        for _ in 0..100 {
+            let q = rng.below(space.n());
+            acc += knn::tree_knn_point(&space, &tree, q, 10).len();
+        }
+        acc
+    });
+}

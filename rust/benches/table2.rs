@@ -1,0 +1,46 @@
+//! Bench: regenerate Table 2 (distance-computation counts, naive vs
+//! metric-tree, per dataset × operation) and time the sweep.
+//!
+//! Scale via env: `TABLE2_SCALE` (default 0.02 — benches must terminate;
+//! EXPERIMENTS.md records a larger-scale run via the CLI).
+
+use anchors_hierarchy::bench::harness::Bencher;
+use anchors_hierarchy::bench::tables::{self, Table2Config};
+use anchors_hierarchy::dataset::DatasetKind;
+
+fn main() {
+    let scale: f64 = std::env::var("TABLE2_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.02);
+    let cfg = Table2Config {
+        scale,
+        kmeans_iters: 5,
+        rmin: 30,
+        seed: 20130,
+        datasets: Some(vec![
+            DatasetKind::Squiggles,
+            DatasetKind::Voronoi,
+            DatasetKind::Cell,
+            DatasetKind::Covtype,
+            DatasetKind::Reuters { half: true },
+            DatasetKind::Reuters { half: false },
+            DatasetKind::Gen { dims: 100, components: 3 },
+            DatasetKind::Gen { dims: 100, components: 20 },
+            DatasetKind::Gen { dims: 1000, components: 3 },
+            DatasetKind::Gen { dims: 1000, components: 20 },
+        ]),
+    };
+    println!("# Table 2 bench (scale {scale})");
+    let bencher = Bencher::new(0, 1);
+    let rows = bencher.bench("table2/full-sweep", |_| tables::table2(&cfg));
+    tables::print_table2(&rows);
+
+    // Per-dataset timing at the same scale (one representative each).
+    for kind in [DatasetKind::Squiggles, DatasetKind::Cell, DatasetKind::Covtype] {
+        let one = Table2Config { datasets: Some(vec![kind.clone()]), ..cfg.clone() };
+        Bencher::new(1, 3).bench(&format!("table2/{}", kind.name()), |_| {
+            tables::table2(&one).len()
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Bench: regenerate Table 3 (anchors-built vs top-down tree, K-means
+//! distance ratio) and time both builders (with the exact-radii ablation
+//! DESIGN.md calls out).
+
+use anchors_hierarchy::bench::harness::Bencher;
+use anchors_hierarchy::bench::tables;
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::tree::top_down;
+
+fn main() {
+    let scale: f64 = std::env::var("TABLE3_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.02);
+    println!("# Table 3 bench (scale {scale})");
+    let rows = Bencher::new(0, 1).bench("table3/full-sweep", |_| {
+        tables::table3(scale, 5, 30, 20130)
+    });
+    tables::print_table3(&rows);
+
+    // Builder wall-clock comparison (ablation: middle-out vs top-down vs
+    // middle-out with exact radii).
+    for kind in [DatasetKind::Cell, DatasetKind::Covtype] {
+        let space = DatasetSpec::scaled(kind.clone(), scale).build();
+        let b = Bencher::new(1, 3);
+        b.bench(&format!("build/{}/middle-out", kind.name()), |i| {
+            middle_out::build(
+                &space,
+                &MiddleOutConfig { rmin: 30, seed: i as u64, exact_radii: false },
+            )
+            .nodes
+            .len()
+        });
+        b.bench(&format!("build/{}/middle-out-exact", kind.name()), |i| {
+            middle_out::build(
+                &space,
+                &MiddleOutConfig { rmin: 30, seed: i as u64, exact_radii: true },
+            )
+            .nodes
+            .len()
+        });
+        b.bench(&format!("build/{}/top-down", kind.name()), |_| {
+            top_down::build(&space, 30).nodes.len()
+        });
+    }
+}

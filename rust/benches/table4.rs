@@ -1,0 +1,17 @@
+//! Bench: regenerate Table 4 (K-means distortion, random vs anchors
+//! initialization, before/after 50 Lloyd iterations).
+
+use anchors_hierarchy::bench::harness::Bencher;
+use anchors_hierarchy::bench::tables;
+
+fn main() {
+    let scale: f64 = std::env::var("TABLE4_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.02);
+    println!("# Table 4 bench (scale {scale}, 50 iterations)");
+    let rows = Bencher::new(0, 1).bench("table4/full-sweep", |_| {
+        tables::table4(scale, 50, 30, 20130)
+    });
+    tables::print_table4(&rows);
+}

@@ -1,0 +1,57 @@
+//! Bench: anchors-hierarchy and tree construction scaling.
+//!
+//! Measures (a) anchor-set construction distance counts vs the R·k brute
+//! force (the §3 efficiency claim), (b) builder wall-clock scaling in R,
+//! and (c) the perf target from DESIGN.md: middle-out build of the full
+//! 80k-point squiggles dataset.
+
+use anchors_hierarchy::anchors::build_anchors;
+use anchors_hierarchy::bench::harness::Bencher;
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::rng::Rng;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+
+fn main() {
+    // (a) anchors distance-count efficiency.
+    println!("# anchors construction: counted distances vs R*k brute force");
+    for scale in [0.01, 0.05, 0.2] {
+        let space = DatasetSpec::scaled(DatasetKind::Squiggles, scale).build();
+        let r = space.n();
+        let k = (r as f64).sqrt() as usize;
+        space.reset_count();
+        let points: Vec<u32> = (0..r as u32).collect();
+        let set = build_anchors(&space, &points, k, &mut Rng::new(1));
+        println!(
+            "  squiggles R={r:>6} k={k:>4}: {:>10} dists ({:.1}% of R*k), {} anchors",
+            space.dist_count(),
+            100.0 * space.dist_count() as f64 / (r * k) as f64,
+            set.k()
+        );
+    }
+
+    // (b) builder scaling.
+    println!("# middle-out build wall-clock scaling");
+    for scale in [0.05, 0.2, 0.5] {
+        let space = DatasetSpec::scaled(DatasetKind::Squiggles, scale).build();
+        let name = format!("build/squiggles-{}k", space.n() / 1000);
+        Bencher::new(0, 2).bench(&name, |i| {
+            middle_out::build(
+                &space,
+                &MiddleOutConfig { rmin: 30, seed: i as u64, exact_radii: false },
+            )
+            .nodes
+            .len()
+        });
+    }
+
+    // (c) the DESIGN.md perf target: full-size squiggles (80k × 2).
+    let space = DatasetSpec::scaled(DatasetKind::Squiggles, 1.0).build();
+    let tree = Bencher::new(0, 1).bench("build/squiggles-FULL-80k", |_| {
+        middle_out::build(&space, &MiddleOutConfig::default())
+    });
+    println!(
+        "  full squiggles: {} nodes, {} build dists",
+        tree.nodes.len(),
+        tree.build_dists
+    );
+}

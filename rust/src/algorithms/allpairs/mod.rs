@@ -1,0 +1,283 @@
+//! All-pairs / close-pairs search (paper §4.3).
+//!
+//! Finds every pair of points with `D(x, y) ≤ τ` — a special case of the
+//! dual-tree "all-pairs" family (Gray & Moore 2000; Barnes–Hut). The
+//! paper's headline use is *attribute grouping*: standardize each column
+//! to zero mean / unit L2 norm, transpose, and pairs of attributes with
+//! correlation ≥ ρ are exactly pairs of rows with `D ≤ sqrt(2 − 2ρ)`
+//! (eq. 8).
+
+use crate::data::DenseMatrix;
+use crate::metrics::Space;
+use crate::tree::{MetricTree, NodeId};
+
+/// Result of a close-pairs run.
+#[derive(Clone, Debug)]
+pub struct PairsResult {
+    /// (i, j) with i < j and D(i, j) ≤ τ.
+    pub pairs: Vec<(u32, u32)>,
+    pub dists: u64,
+}
+
+/// Naive O(R²/2) scan — the paper's "regular" baseline for the All-Pairs
+/// column of Table 2.
+pub fn naive_close_pairs(space: &Space, tau: f64) -> PairsResult {
+    let before = space.dist_count();
+    let mut pairs = Vec::new();
+    let n = space.n();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if space.dist(i, j) <= tau {
+                pairs.push((i as u32, j as u32));
+            }
+        }
+    }
+    PairsResult { pairs, dists: space.dist_count() - before }
+}
+
+/// Dual-tree close pairs: recurse over node pairs, pruning whenever the
+/// balls are provably farther apart than τ.
+pub fn tree_close_pairs(space: &Space, tree: &MetricTree, tau: f64) -> PairsResult {
+    let before = space.dist_count();
+    let mut pairs = Vec::new();
+    dual(space, tree, tree.root, tree.root, tau, &mut pairs);
+    // Canonical order for comparability with the naive path.
+    pairs.sort_unstable();
+    pairs.dedup();
+    PairsResult { pairs, dists: space.dist_count() - before }
+}
+
+fn dual(
+    space: &Space,
+    tree: &MetricTree,
+    a: NodeId,
+    b: NodeId,
+    tau: f64,
+    out: &mut Vec<(u32, u32)>,
+) {
+    let (na, nb) = (tree.node(a), tree.node(b));
+    if a != b {
+        // Lower bound on any cross distance; one counted pivot-pivot
+        // distance buys the possibility of pruning |a|·|b| pairs.
+        let d = space.dist_vv(&na.pivot, &nb.pivot);
+        if d - na.radius - nb.radius > tau {
+            return;
+        }
+    }
+    match (na.children, nb.children) {
+        (None, None) => {
+            if a == b {
+                for (pi, &p) in na.points.iter().enumerate() {
+                    for &q in na.points.iter().skip(pi + 1) {
+                        if space.dist(p as usize, q as usize) <= tau {
+                            out.push((p.min(q), p.max(q)));
+                        }
+                    }
+                }
+            } else {
+                for &p in &na.points {
+                    for &q in &nb.points {
+                        if p == q {
+                            continue;
+                        }
+                        if space.dist(p as usize, q as usize) <= tau {
+                            out.push((p.min(q), p.max(q)));
+                        }
+                    }
+                }
+            }
+        }
+        (Some((a1, a2)), None) => {
+            dual(space, tree, a1, b, tau, out);
+            dual(space, tree, a2, b, tau, out);
+        }
+        (None, Some((b1, b2))) => {
+            dual(space, tree, a, b1, tau, out);
+            dual(space, tree, a, b2, tau, out);
+        }
+        (Some((a1, a2)), Some((b1, b2))) => {
+            if a == b {
+                // Self pair: three sub-problems, not four.
+                dual(space, tree, a1, a1, tau, out);
+                dual(space, tree, a2, a2, tau, out);
+                dual(space, tree, a1, a2, tau, out);
+            } else if na.radius >= nb.radius {
+                dual(space, tree, a1, b, tau, out);
+                dual(space, tree, a2, b, tau, out);
+            } else {
+                dual(space, tree, a, b1, tau, out);
+                dual(space, tree, a, b2, tau, out);
+            }
+        }
+    }
+}
+
+/// The correlation↔distance bridge of eq. (8): ρ ≥ `rho` ⇔ D ≤ τ.
+pub fn rho_to_tau(rho: f64) -> f64 {
+    (2.0 - 2.0 * rho).max(0.0).sqrt()
+}
+
+/// Inverse of [`rho_to_tau`].
+pub fn tau_to_rho(tau: f64) -> f64 {
+    1.0 - tau * tau / 2.0
+}
+
+/// Prepare an attribute-space view of a dataset for correlation search:
+/// standardize every column, transpose, return the attributes-as-points
+/// matrix (§4.3).
+pub fn attribute_view(data: &DenseMatrix) -> DenseMatrix {
+    let mut m = data.clone();
+    m.standardize_columns();
+    m.transpose()
+}
+
+/// Find all attribute pairs of `data` with correlation ≥ `rho`, returning
+/// `(i, j, rho_ij)` triples. `use_tree` selects the dual-tree or naive
+/// path (both exact).
+pub fn correlated_attribute_pairs(
+    data: &DenseMatrix,
+    rho: f64,
+    rmin: usize,
+    use_tree: bool,
+) -> (Vec<(u32, u32, f64)>, u64) {
+    use crate::data::Data;
+    let attrs = attribute_view(data);
+    let space = Space::euclidean(Data::Dense(attrs));
+    let tau = rho_to_tau(rho);
+    let result = if use_tree {
+        let cfg = crate::tree::middle_out::MiddleOutConfig { rmin, ..Default::default() };
+        let tree = crate::tree::middle_out::build(&space, &cfg);
+        tree_close_pairs(&space, &tree, tau)
+    } else {
+        naive_close_pairs(&space, tau)
+    };
+    let triples = result
+        .pairs
+        .iter()
+        .map(|&(i, j)| {
+            let d = space.dist_uncounted(i as usize, j as usize);
+            (i, j, tau_to_rho(d))
+        })
+        .collect();
+    (triples, result.dists)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    fn blobs(c: usize, per: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for ci in 0..c {
+            let cx = (ci % 3) as f64 * 60.0;
+            let cy = (ci / 3) as f64 * 60.0;
+            for _ in 0..per {
+                rows.push(vec![(cx + rng.normal()) as f32, (cy + rng.normal()) as f32]);
+            }
+        }
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn tree_matches_naive() {
+        let space = blobs(4, 50, 1);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 12, ..Default::default() });
+        for tau in [0.5, 1.5, 4.0] {
+            let a = naive_close_pairs(&space, tau);
+            let b = tree_close_pairs(&space, &tree, tau);
+            assert_eq!(a.pairs, b.pairs, "tau={tau}");
+        }
+    }
+
+    #[test]
+    fn tree_saves_distances_when_pairs_are_local() {
+        let space = blobs(6, 80, 2);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 20, ..Default::default() });
+        let a = naive_close_pairs(&space, 1.0);
+        let b = tree_close_pairs(&space, &tree, 1.0);
+        assert_eq!(a.pairs.len(), b.pairs.len());
+        assert!(
+            b.dists * 5 < a.dists,
+            "tree {} vs naive {}",
+            b.dists,
+            a.dists
+        );
+    }
+
+    #[test]
+    fn zero_tau_finds_only_duplicates() {
+        let rows = vec![
+            vec![1.0f32, 1.0],
+            vec![1.0, 1.0],
+            vec![2.0, 2.0],
+        ];
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 2, ..Default::default() });
+        let r = tree_close_pairs(&space, &tree, 0.0);
+        assert_eq!(r.pairs, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn huge_tau_finds_all_pairs() {
+        let space = blobs(2, 10, 3);
+        let n = space.n();
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 4, ..Default::default() });
+        let r = tree_close_pairs(&space, &tree, 1e9);
+        assert_eq!(r.pairs.len(), n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn rho_tau_roundtrip() {
+        for rho in [-1.0, 0.0, 0.5, 0.9, 1.0] {
+            assert!((tau_to_rho(rho_to_tau(rho)) - rho).abs() < 1e-12);
+        }
+        assert_eq!(rho_to_tau(1.0), 0.0);
+        assert!((rho_to_tau(-1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finds_planted_correlated_attributes() {
+        // 6 attributes: 0&1 strongly positively correlated, 2&3 strongly
+        // negatively, 4&5 independent.
+        let mut rng = Rng::new(4);
+        let n = 400;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let base = rng.normal();
+            let anti = rng.normal();
+            rows.push(vec![
+                base as f32,
+                (base + 0.1 * rng.normal()) as f32,
+                anti as f32,
+                (-anti + 0.1 * rng.normal()) as f32,
+                rng.normal() as f32,
+                rng.normal() as f32,
+            ]);
+        }
+        let data = DenseMatrix::from_rows(&rows);
+        let (pairs, _) = correlated_attribute_pairs(&data, 0.9, 4, true);
+        let keys: Vec<(u32, u32)> = pairs.iter().map(|&(i, j, _)| (i, j)).collect();
+        assert!(keys.contains(&(0, 1)), "missing (0,1): {keys:?}");
+        assert!(!keys.contains(&(2, 3)), "negative pair matched at rho=0.9");
+        assert_eq!(keys.len(), 1, "{keys:?}");
+        assert!(pairs[0].2 > 0.9);
+    }
+
+    #[test]
+    fn tree_and_naive_attribute_pairs_agree() {
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f32>> = (0..150)
+            .map(|_| (0..12).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let (a, _) = correlated_attribute_pairs(&data, 0.05, 3, false);
+        let (b, _) = correlated_attribute_pairs(&data, 0.05, 3, true);
+        let ka: Vec<_> = a.iter().map(|&(i, j, _)| (i, j)).collect();
+        let kb: Vec<_> = b.iter().map(|&(i, j, _)| (i, j)).collect();
+        assert_eq!(ka, kb);
+    }
+}

@@ -1,0 +1,344 @@
+//! Non-parametric anomaly detection (paper §4.2).
+//!
+//! A point is anomalous iff fewer than `threshold` points of the dataset
+//! lie within `radius` of it. The tree-accelerated test keeps two running
+//! quantities while recursing — `found` (points proven within range) and
+//! `possible` (an upper bound on how many could still be) — and prunes
+//! with the paper's four rules:
+//!
+//! 1. node entirely inside the query ball  → add its count wholesale;
+//! 2. node entirely outside                → subtract from the bound;
+//! 3. `found > threshold`                  → early exit: NOT an anomaly;
+//! 4. `possible < threshold`               → early exit: IS an anomaly.
+
+use crate::metrics::Space;
+use crate::tree::{MetricTree, NodeId};
+
+/// Parameters of the anomaly test.
+#[derive(Clone, Copy, Debug)]
+pub struct AnomalyParams {
+    /// Neighborhood radius r.
+    pub radius: f64,
+    /// A point is an anomaly when |{x : D(x,q) ≤ r}| < threshold.
+    /// The query point itself is in the dataset and is counted (both
+    /// paths are consistent about this).
+    pub threshold: u64,
+}
+
+/// Naive test: scan all points, aborting as soon as `threshold` neighbors
+/// are found (this is what makes the paper's "regular" column ≈ R²/2
+/// instead of R² for non-anomalous data).
+pub fn naive_is_anomaly(space: &Space, q: usize, params: &AnomalyParams) -> bool {
+    let mut found = 0u64;
+    for p in 0..space.n() {
+        if space.dist(p, q) <= params.radius {
+            found += 1;
+            if found >= params.threshold {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Tree-accelerated test for a query that is a datapoint.
+pub fn tree_is_anomaly(
+    space: &Space,
+    tree: &MetricTree,
+    q: usize,
+    params: &AnomalyParams,
+) -> bool {
+    let mut qrow = vec![0f32; space.dim()];
+    space.fill_row(q, &mut qrow);
+    let q_sq = space.data.sqnorm(q);
+    tree_is_anomaly_vec(space, tree, &qrow, q_sq, params)
+}
+
+/// Tree-accelerated test for an arbitrary query vector.
+pub fn tree_is_anomaly_vec(
+    space: &Space,
+    tree: &MetricTree,
+    qrow: &[f32],
+    q_sq: f64,
+    params: &AnomalyParams,
+) -> bool {
+    let mut found = 0u64;
+    let mut possible = tree.root_node().count as u64;
+    let verdict = recurse(
+        space,
+        tree,
+        tree.root,
+        qrow,
+        q_sq,
+        params,
+        &mut found,
+        &mut possible,
+    );
+    match verdict {
+        Some(v) => v,
+        // Exhausted the tree without an early exit: exact count known.
+        None => found < params.threshold,
+    }
+}
+
+/// Depth-first descent, closer child first. Returns Some(verdict) on an
+/// early exit (rules 3/4), None to continue.
+#[allow(clippy::too_many_arguments)]
+fn recurse(
+    space: &Space,
+    tree: &MetricTree,
+    node_id: NodeId,
+    qrow: &[f32],
+    q_sq: f64,
+    params: &AnomalyParams,
+    found: &mut u64,
+    possible: &mut u64,
+) -> Option<bool> {
+    let node = tree.node(node_id);
+    let d_pivot = dist_vec(space, qrow, q_sq, &node.pivot, node.pivot_sq);
+
+    // Rule 1: whole node within range.
+    if d_pivot + node.radius <= params.radius {
+        *found += node.count as u64;
+        if *found >= params.threshold {
+            return Some(false); // rule 3
+        }
+        return None;
+    }
+    // Rule 2: whole node out of range.
+    if d_pivot - node.radius > params.radius {
+        *possible -= node.count as u64;
+        if *possible < params.threshold {
+            return Some(true); // rule 4
+        }
+        return None;
+    }
+
+    match node.children {
+        None => {
+            for &p in &node.points {
+                let d = space.dist_to_vec(p as usize, qrow, q_sq);
+                if d <= params.radius {
+                    *found += 1;
+                    if *found >= params.threshold {
+                        return Some(false); // rule 3
+                    }
+                } else {
+                    *possible -= 1;
+                    if *possible < params.threshold {
+                        return Some(true); // rule 4
+                    }
+                }
+            }
+            None
+        }
+        Some((a, b)) => {
+            // Closer child first maximizes early rule-3 exits for normal
+            // points (the common case).
+            let (na, nb) = (tree.node(a), tree.node(b));
+            let da = dist_vec_uncounted(space, qrow, q_sq, &na.pivot, na.pivot_sq);
+            let db = dist_vec_uncounted(space, qrow, q_sq, &nb.pivot, nb.pivot_sq);
+            let (first, second) = if da <= db { (a, b) } else { (b, a) };
+            if let Some(v) = recurse(space, tree, first, qrow, q_sq, params, found, possible) {
+                return Some(v);
+            }
+            recurse(space, tree, second, qrow, q_sq, params, found, possible)
+        }
+    }
+}
+
+#[inline]
+fn dist_vec(space: &Space, a: &[f32], a_sq: f64, b: &[f32], b_sq: f64) -> f64 {
+    space.count_bulk(1);
+    dist_vec_uncounted(space, a, a_sq, b, b_sq)
+}
+
+#[inline]
+fn dist_vec_uncounted(space: &Space, a: &[f32], a_sq: f64, b: &[f32], b_sq: f64) -> f64 {
+    use crate::metrics::{dense_dot, dense_l1, Metric};
+    match space.metric {
+        Metric::Euclidean => {
+            let d2 = a_sq + b_sq - 2.0 * dense_dot(a, b);
+            d2.max(0.0).sqrt()
+        }
+        Metric::L1 => dense_l1(a, b),
+    }
+}
+
+/// Result of sweeping the anomaly test over every datapoint.
+#[derive(Clone, Debug)]
+pub struct AnomalySweep {
+    pub flags: Vec<bool>,
+    pub n_anomalies: usize,
+    pub dists: u64,
+}
+
+/// Run the naive detector over all points.
+pub fn naive_sweep(space: &Space, params: &AnomalyParams) -> AnomalySweep {
+    let before = space.dist_count();
+    let flags: Vec<bool> = (0..space.n())
+        .map(|q| naive_is_anomaly(space, q, params))
+        .collect();
+    let n_anomalies = flags.iter().filter(|&&f| f).count();
+    AnomalySweep { flags, n_anomalies, dists: space.dist_count() - before }
+}
+
+/// Run the tree detector over all points.
+pub fn tree_sweep(space: &Space, tree: &MetricTree, params: &AnomalyParams) -> AnomalySweep {
+    let before = space.dist_count();
+    let flags: Vec<bool> = (0..space.n())
+        .map(|q| tree_is_anomaly(space, tree, q, params))
+        .collect();
+    let n_anomalies = flags.iter().filter(|&&f| f).count();
+    AnomalySweep { flags, n_anomalies, dists: space.dist_count() - before }
+}
+
+/// Choose a radius that makes roughly `target_frac` of the points
+/// anomalous at the given threshold — the paper's "interesting" regime
+/// (§5: ≈10% anomalous). Estimated from a sample, binary-searching the
+/// radius. Uncounted (experimental setup, not algorithm work).
+pub fn calibrate_radius(
+    space: &Space,
+    threshold: u64,
+    target_frac: f64,
+    sample: usize,
+    seed: u64,
+) -> f64 {
+    use crate::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let n = space.n();
+    let sample_ids: Vec<usize> = (0..sample.min(n)).map(|_| rng.below(n)).collect();
+    // kth-nearest-neighbor distance of each sampled point, where
+    // k = threshold: the radius at which the point stops being anomalous.
+    let mut kth: Vec<f64> = sample_ids
+        .iter()
+        .map(|&q| {
+            let mut ds: Vec<f64> = (0..n).map(|p| space.dist_uncounted(p, q)).collect();
+            ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ds[(threshold as usize).min(n - 1)]
+        })
+        .collect();
+    kth.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Radius at the target quantile: points whose kth-NN distance exceeds
+    // the radius are anomalous.
+    let idx = ((1.0 - target_frac) * (kth.len() - 1) as f64).round() as usize;
+    kth[idx.min(kth.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    /// A dense blob plus a few far-out points (the anomalies).
+    fn blob_with_outliers(n_blob: usize, n_out: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for _ in 0..n_blob {
+            rows.push(vec![rng.normal() as f32, rng.normal() as f32]);
+        }
+        for i in 0..n_out {
+            let angle = i as f64;
+            rows.push(vec![
+                (100.0 * angle.cos() + rng.normal()) as f32,
+                (100.0 * angle.sin() + rng.normal()) as f32,
+            ]);
+        }
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn detects_planted_outliers() {
+        let space = blob_with_outliers(500, 8, 1);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let params = AnomalyParams { radius: 5.0, threshold: 10 };
+        let sweep = tree_sweep(&space, &tree, &params);
+        // All 8 planted outliers flagged; blob points not.
+        for q in 500..508 {
+            assert!(sweep.flags[q], "outlier {q} missed");
+        }
+        let blob_flagged = sweep.flags[..500].iter().filter(|&&f| f).count();
+        assert_eq!(blob_flagged, 0, "{blob_flagged} blob points misflagged");
+    }
+
+    #[test]
+    fn tree_matches_naive_exactly() {
+        let space = blob_with_outliers(300, 5, 2);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
+        for (radius, threshold) in [(2.0, 5), (5.0, 20), (0.5, 2), (50.0, 100)] {
+            let params = AnomalyParams { radius, threshold };
+            let a = naive_sweep(&space, &params);
+            let b = tree_sweep(&space, &tree, &params);
+            assert_eq!(a.flags, b.flags, "r={radius} t={threshold}");
+        }
+    }
+
+    #[test]
+    fn tree_saves_distances() {
+        let space = blob_with_outliers(2000, 10, 3);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 30, ..Default::default() });
+        let radius = calibrate_radius(&space, 20, 0.1, 30, 7);
+        let params = AnomalyParams { radius, threshold: 20 };
+        let a = naive_sweep(&space, &params);
+        let b = tree_sweep(&space, &tree, &params);
+        assert_eq!(a.flags, b.flags);
+        assert!(
+            b.dists * 2 < a.dists,
+            "tree {} vs naive {} distances",
+            b.dists,
+            a.dists
+        );
+    }
+
+    #[test]
+    fn threshold_one_everything_normal() {
+        // Every point is within radius 0 of itself → never anomalous at
+        // threshold 1.
+        let space = blob_with_outliers(100, 3, 4);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let params = AnomalyParams { radius: 1e-9, threshold: 1 };
+        let sweep = tree_sweep(&space, &tree, &params);
+        assert_eq!(sweep.n_anomalies, 0);
+    }
+
+    #[test]
+    fn huge_threshold_everything_anomalous() {
+        let space = blob_with_outliers(100, 0, 5);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let params = AnomalyParams { radius: 0.5, threshold: 1000 };
+        let a = naive_sweep(&space, &params);
+        let b = tree_sweep(&space, &tree, &params);
+        assert_eq!(a.n_anomalies, 100);
+        assert_eq!(b.n_anomalies, 100);
+    }
+
+    #[test]
+    fn calibration_hits_target_fraction() {
+        let space = blob_with_outliers(800, 0, 6);
+        let threshold = 15;
+        let radius = calibrate_radius(&space, threshold, 0.1, 60, 8);
+        let params = AnomalyParams { radius, threshold };
+        let sweep = naive_sweep(&space, &params);
+        let frac = sweep.n_anomalies as f64 / space.n() as f64;
+        assert!(
+            (0.02..0.3).contains(&frac),
+            "calibrated fraction {frac} far from 0.1"
+        );
+    }
+
+    #[test]
+    fn vec_query_api() {
+        let space = blob_with_outliers(200, 2, 7);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let params = AnomalyParams { radius: 3.0, threshold: 5 };
+        // Query at the blob center: not an anomaly.
+        let q = vec![0.0f32, 0.0];
+        assert!(!tree_is_anomaly_vec(&space, &tree, &q, 0.0, &params));
+        // Query in the void: anomaly.
+        let q = vec![500.0f32, 500.0];
+        let qsq = 2.0 * 500.0f64 * 500.0;
+        assert!(tree_is_anomaly_vec(&space, &tree, &q, qsq, &params));
+    }
+}

@@ -1,0 +1,249 @@
+//! Region statistics queries — the paper's §1 motivation made concrete.
+//!
+//! "Human users, or statistical programs, often need to query some
+//! quantity (such as a mean or variance) over some subset of the records
+//! … we want the cached sufficient statistic representation to intercept
+//! the request and answer it immediately."
+//!
+//! This module answers **ball queries** — count / mean / per-dimension
+//! variance of all points within radius `r` of a query center — exactly,
+//! by recursing over the tree and consuming whole nodes' cached
+//! statistics whenever the node ball lies entirely inside (or outside)
+//! the query ball. Only boundary leaves touch raw points.
+//!
+//! The second-moment statistic cached per node is Σ‖x‖² (a scalar), which
+//! yields the *total* variance exactly. For per-dimension variance the
+//! tree would need Σx² per dimension; we expose total variance (trace of
+//! the covariance), which is what the distortion-style consumers need.
+
+use crate::metrics::{dense_dot, Space};
+use crate::tree::{MetricTree, NodeId};
+
+/// Exact statistics of the points inside a query ball.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BallStats {
+    pub count: u64,
+    /// Mean of the in-ball points (empty ball ⇒ zeros).
+    pub mean: Vec<f32>,
+    /// Total variance: (1/n)Σ‖x − mean‖² (trace of covariance).
+    pub total_variance: f64,
+    /// Distance computations used.
+    pub dists: u64,
+}
+
+/// Accumulator for the recursion.
+struct Acc {
+    count: u64,
+    sum: Vec<f64>,
+    sumsq: f64,
+    /// Nodes consumed wholesale (telemetry for tests/benches).
+    whole_nodes: usize,
+}
+
+/// Naive baseline: scan all points (R counted distances).
+pub fn naive_ball_stats(space: &Space, center: &[f32], radius: f64) -> BallStats {
+    let before = space.dist_count();
+    let c_sq = dense_dot(center, center);
+    let mut acc = Acc {
+        count: 0,
+        sum: vec![0.0; space.dim()],
+        sumsq: 0.0,
+        whole_nodes: 0,
+    };
+    for p in 0..space.n() {
+        if space.dist_to_vec(p, center, c_sq) <= radius {
+            acc.count += 1;
+            space.accumulate(p, &mut acc.sum);
+            acc.sumsq += space.data.sqnorm(p);
+        }
+    }
+    finish(acc, space.dist_count() - before)
+}
+
+/// Tree-accelerated exact ball statistics.
+pub fn tree_ball_stats(
+    space: &Space,
+    tree: &MetricTree,
+    center: &[f32],
+    radius: f64,
+) -> BallStats {
+    let before = space.dist_count();
+    let c_sq = dense_dot(center, center);
+    let mut acc = Acc {
+        count: 0,
+        sum: vec![0.0; space.dim()],
+        sumsq: 0.0,
+        whole_nodes: 0,
+    };
+    recurse(space, tree, tree.root, center, c_sq, radius, &mut acc);
+    finish(acc, space.dist_count() - before)
+}
+
+fn recurse(
+    space: &Space,
+    tree: &MetricTree,
+    id: NodeId,
+    center: &[f32],
+    c_sq: f64,
+    radius: f64,
+    acc: &mut Acc,
+) {
+    let node = tree.node(id);
+    space.count_bulk(1);
+    let d2 = (c_sq + node.pivot_sq - 2.0 * dense_dot(center, &node.pivot)).max(0.0);
+    let d = d2.sqrt();
+    // Node entirely inside the query ball: consume cached statistics.
+    if d + node.radius <= radius {
+        acc.count += node.count as u64;
+        for (a, s) in acc.sum.iter_mut().zip(&node.sum) {
+            *a += s;
+        }
+        acc.sumsq += node.sumsq;
+        acc.whole_nodes += 1;
+        return;
+    }
+    // Node entirely outside: nothing.
+    if d - node.radius > radius {
+        return;
+    }
+    match node.children {
+        Some((a, b)) => {
+            recurse(space, tree, a, center, c_sq, radius, acc);
+            recurse(space, tree, b, center, c_sq, radius, acc);
+        }
+        None => {
+            for &p in &node.points {
+                if space.dist_to_vec(p as usize, center, c_sq) <= radius {
+                    acc.count += 1;
+                    space.accumulate(p as usize, &mut acc.sum);
+                    acc.sumsq += space.data.sqnorm(p as usize);
+                }
+            }
+        }
+    }
+}
+
+fn finish(acc: Acc, dists: u64) -> BallStats {
+    let n = acc.count;
+    let inv = if n == 0 { 0.0 } else { 1.0 / n as f64 };
+    let mean: Vec<f32> = acc.sum.iter().map(|&s| (s * inv) as f32).collect();
+    // (1/n)Σ‖x‖² − ‖mean‖²  — the sufficient-statistics variance identity.
+    let mean_sq: f64 = mean.iter().map(|&m| (m as f64) * (m as f64)).sum();
+    let total_variance = if n == 0 { 0.0 } else { (acc.sumsq * inv - mean_sq).max(0.0) };
+    BallStats { count: n, mean, total_variance, dists }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    fn clustered(seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for c in 0..6 {
+            for _ in 0..120 {
+                rows.push(vec![
+                    ((c % 3) as f64 * 40.0 + rng.normal()) as f32,
+                    ((c / 3) as f64 * 40.0 + rng.normal()) as f32,
+                ]);
+            }
+        }
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn tree_matches_naive_exactly() {
+        let space = clustered(1);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        for (cx, cy, r) in [(0.0, 0.0, 3.0), (40.0, 0.0, 5.0), (20.0, 20.0, 60.0), (999.0, 999.0, 1.0)] {
+            let center = vec![cx as f32, cy as f32];
+            let a = naive_ball_stats(&space, &center, r);
+            let b = tree_ball_stats(&space, &tree, &center, r);
+            assert_eq!(a.count, b.count, "count at ({cx},{cy},{r})");
+            for (x, y) in a.mean.iter().zip(&b.mean) {
+                assert!((x - y).abs() < 1e-4, "mean {x} vs {y}");
+            }
+            assert!(
+                (a.total_variance - b.total_variance).abs() < 1e-3 * (1.0 + a.total_variance),
+                "variance {} vs {}",
+                a.total_variance,
+                b.total_variance
+            );
+        }
+    }
+
+    #[test]
+    fn whole_cluster_query_uses_cached_stats() {
+        let space = clustered(2);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        // A ball containing one whole blob: far fewer distances than R.
+        let center = vec![0.0f32, 0.0];
+        let b = tree_ball_stats(&space, &tree, &center, 8.0);
+        assert_eq!(b.count, 120);
+        assert!(
+            b.dists < space.n() as u64 / 3,
+            "ball query used {} dists on {} points",
+            b.dists,
+            space.n()
+        );
+        // The blob's mean is ≈ (0,0) and per-point variance ≈ 2 (two unit
+        // dimensions).
+        assert!(b.mean[0].abs() < 0.3 && b.mean[1].abs() < 0.3);
+        assert!((b.total_variance - 2.0).abs() < 0.5, "{}", b.total_variance);
+    }
+
+    #[test]
+    fn empty_ball() {
+        let space = clustered(3);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let b = tree_ball_stats(&space, &tree, &[500.0, 500.0], 1.0);
+        assert_eq!(b.count, 0);
+        assert_eq!(b.total_variance, 0.0);
+    }
+
+    #[test]
+    fn everything_ball_matches_global_stats() {
+        let space = clustered(4);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let b = tree_ball_stats(&space, &tree, &[20.0, 20.0], 1e6);
+        assert_eq!(b.count, space.n() as u64);
+        let global_mean = space.centroid(&(0..space.n() as u32).collect::<Vec<_>>());
+        for (x, y) in b.mean.iter().zip(&global_mean) {
+            assert!((x - y).abs() < 1e-3);
+        }
+        // Root fully inside → O(1) node visits.
+        assert!(b.dists <= 3, "used {} dists", b.dists);
+    }
+
+    #[test]
+    fn variance_identity_against_direct_computation() {
+        let space = clustered(5);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let center = vec![0.0f32, 0.0];
+        let r = 4.0;
+        let b = tree_ball_stats(&space, &tree, &center, r);
+        // Direct two-pass variance.
+        let c_sq = 0.0;
+        let members: Vec<usize> = (0..space.n())
+            .filter(|&p| space.dist_to_vec_uncounted(p, &center, c_sq) <= r)
+            .collect();
+        assert_eq!(members.len() as u64, b.count);
+        let mut direct = 0.0;
+        let mut row = vec![0f32; 2];
+        for &p in &members {
+            space.fill_row(p, &mut row);
+            let dx = row[0] as f64 - b.mean[0] as f64;
+            let dy = row[1] as f64 - b.mean[1] as f64;
+            direct += dx * dx + dy * dy;
+        }
+        direct /= members.len() as f64;
+        assert!(
+            (direct - b.total_variance).abs() < 1e-3 * (1.0 + direct),
+            "direct {direct} vs cached {}",
+            b.total_variance
+        );
+    }
+}

@@ -1,0 +1,372 @@
+//! Mixtures of spherical Gaussians with tree-accelerated EM (paper §6,
+//! following the mrkd-tree acceleration of Moore, NIPS 1999).
+//!
+//! The E-step computes responsibilities `r_k(x) ∝ π_k N(x; μ_k, σ_k² I)`.
+//! For a tree node, the distance from any owned point to μ_k lies in
+//! `[max(0, D(pivot, μ_k) − radius), D(pivot, μ_k) + radius]`, which
+//! brackets every responsibility. When the bracket is tight for all
+//! components the whole node's mass is assigned using its cached
+//! sufficient statistics; otherwise we recurse. With `tau = 0` the result
+//! is exact (bit-comparable to naive EM up to summation order).
+
+use crate::metrics::{dense_dot, Space};
+use crate::tree::{MetricTree, NodeId};
+
+/// Spherical-Gaussian mixture parameters.
+#[derive(Clone, Debug)]
+pub struct Mixture {
+    pub weights: Vec<f64>,
+    pub means: Vec<Vec<f32>>,
+    /// Per-component isotropic variance σ².
+    pub variances: Vec<f64>,
+}
+
+impl Mixture {
+    pub fn k(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Initialize from K-means-style seeds with unit variance.
+    pub fn from_seeds(seeds: Vec<Vec<f32>>) -> Mixture {
+        let k = seeds.len();
+        Mixture {
+            weights: vec![1.0 / k as f64; k],
+            means: seeds,
+            variances: vec![1.0; k],
+        }
+    }
+}
+
+/// Accumulated E-step sufficient statistics.
+struct EmAccum {
+    /// Σ_x r_k(x)
+    resp: Vec<f64>,
+    /// Σ_x r_k(x)·x
+    wsum: Vec<Vec<f64>>,
+    /// Σ_x r_k(x)·‖x‖²
+    wsumsq: Vec<f64>,
+    loglik: f64,
+}
+
+impl EmAccum {
+    fn new(k: usize, d: usize) -> Self {
+        EmAccum {
+            resp: vec![0.0; k],
+            wsum: vec![vec![0.0; d]; k],
+            wsumsq: vec![0.0; k],
+            loglik: 0.0,
+        }
+    }
+}
+
+/// Log of the (unnormalized) component density at squared distance `d2`.
+#[inline]
+fn log_weight(pi: f64, var: f64, d2: f64, dim: usize) -> f64 {
+    pi.ln() - 0.5 * dim as f64 * (2.0 * std::f64::consts::PI * var).ln() - d2 / (2.0 * var)
+}
+
+/// One naive E-step (R·K counted distances) + M-step. Returns loglik.
+pub fn naive_em_step(space: &Space, mix: &mut Mixture) -> f64 {
+    let k = mix.k();
+    let d = space.dim();
+    let m_sq: Vec<f64> = mix.means.iter().map(|m| dense_dot(m, m)).collect();
+    let mut acc = EmAccum::new(k, d);
+    let mut logw = vec![0f64; k];
+    for p in 0..space.n() {
+        for c in 0..k {
+            let dist = space.dist_to_vec(p, &mix.means[c], m_sq[c]);
+            logw[c] = log_weight(mix.weights[c], mix.variances[c], dist * dist, d);
+        }
+        accumulate_point(space, p, &logw, &mut acc);
+    }
+    m_step(space, mix, &acc);
+    acc.loglik
+}
+
+/// One tree E-step + M-step. `tau` bounds the allowed responsibility
+/// bracket width before a node is awarded in bulk (0 = exact).
+pub fn tree_em_step(space: &Space, tree: &MetricTree, mix: &mut Mixture, tau: f64) -> f64 {
+    let k = mix.k();
+    let d = space.dim();
+    let m_sq: Vec<f64> = mix.means.iter().map(|m| dense_dot(m, m)).collect();
+    let mut acc = EmAccum::new(k, d);
+    recurse(space, tree, tree.root, mix, &m_sq, tau, &mut acc);
+    m_step(space, mix, &acc);
+    acc.loglik
+}
+
+fn recurse(
+    space: &Space,
+    tree: &MetricTree,
+    id: NodeId,
+    mix: &Mixture,
+    m_sq: &[f64],
+    tau: f64,
+    acc: &mut EmAccum,
+) {
+    let node = tree.node(id);
+    let k = mix.k();
+    let dim = space.dim();
+    // Bracket log-weights over the node's ball (k counted distances).
+    let mut lo = vec![0f64; k];
+    let mut hi = vec![0f64; k];
+    let mut center = vec![0f64; k];
+    for c in 0..k {
+        space.count_bulk(1);
+        let d2c = m_sq[c] + node.pivot_sq - 2.0 * dense_dot(&mix.means[c], &node.pivot);
+        let dp = d2c.max(0.0).sqrt();
+        let dmin = (dp - node.radius).max(0.0);
+        let dmax = dp + node.radius;
+        lo[c] = log_weight(mix.weights[c], mix.variances[c], dmax * dmax, dim);
+        hi[c] = log_weight(mix.weights[c], mix.variances[c], dmin * dmin, dim);
+        center[c] = log_weight(mix.weights[c], mix.variances[c], dp * dp, dim);
+    }
+    // Responsibility brackets in ratio form:
+    //   r_k(x) = 1 / (1 + Σ_{c≠k} w_c(x)/w_k(x)),
+    // and over the ball  w_c/w_k ≤ exp(hi_c − lo_k),  ≥ exp(lo_c − hi_k).
+    // Anchoring numerator and denominator at the same x makes this far
+    // tighter than bounding w_c and Σw independently.
+    let mut tight = node.radius.is_finite();
+    for c in 0..k {
+        let mut ratio_hi = 0.0f64; // Σ upper bounds on w_j/w_c
+        let mut ratio_lo = 0.0f64; // Σ lower bounds
+        for j in 0..k {
+            if j == c {
+                continue;
+            }
+            ratio_hi += (hi[j] - lo[c]).min(500.0).exp();
+            ratio_lo += (lo[j] - hi[c]).max(-500.0).exp();
+        }
+        let r_lo = 1.0 / (1.0 + ratio_hi);
+        let r_hi = 1.0 / (1.0 + ratio_lo);
+        if r_hi - r_lo > tau {
+            tight = false;
+            break;
+        }
+    }
+    // tau == 0 means exact mode: never award in bulk (the bulk award uses
+    // pivot-centered responsibilities, which is an approximation even when
+    // the bracket is numerically degenerate-tight).
+    if tight && tau > 0.0 && !node.is_leaf() {
+        award_node(space, node, &center, acc);
+        return;
+    }
+    match node.children {
+        Some((a, b)) => {
+            recurse(space, tree, a, mix, m_sq, tau, acc);
+            recurse(space, tree, b, mix, m_sq, tau, acc);
+        }
+        None => {
+            let mut logw = vec![0f64; k];
+            for &p in &node.points {
+                for c in 0..k {
+                    let dist = space.dist_to_vec(p as usize, &mix.means[c], m_sq[c]);
+                    logw[c] = log_weight(mix.weights[c], mix.variances[c], dist * dist, dim);
+                }
+                accumulate_point(space, p as usize, &logw, acc);
+            }
+        }
+    }
+}
+
+/// Award an entire node using responsibilities evaluated at the pivot.
+fn award_node(space: &Space, node: &crate::tree::Node, center_logw: &[f64], acc: &mut EmAccum) {
+    let _ = space;
+    let max = center_logw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let sum: f64 = center_logw.iter().map(|&v| (v - max).exp()).sum();
+    let count = node.count as f64;
+    acc.loglik += count * (max + sum.ln());
+    for (c, &lw) in center_logw.iter().enumerate() {
+        let r = (lw - max).exp() / sum;
+        acc.resp[c] += r * count;
+        for (j, s) in node.sum.iter().enumerate() {
+            acc.wsum[c][j] += r * s;
+        }
+        acc.wsumsq[c] += r * node.sumsq;
+    }
+}
+
+fn accumulate_point(space: &Space, p: usize, logw: &[f64], acc: &mut EmAccum) {
+    let max = logw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let sum: f64 = logw.iter().map(|&v| (v - max).exp()).sum();
+    acc.loglik += max + sum.ln();
+    let psq = space.data.sqnorm(p);
+    for (c, &lw) in logw.iter().enumerate() {
+        let r = (lw - max).exp() / sum;
+        acc.resp[c] += r;
+        acc.wsumsq[c] += r * psq;
+    }
+    // Single data pass for the weighted sums.
+    // (accumulate() adds x once; scale per component via responsibility.)
+    for c in 0..logw.len() {
+        let r = (logw[c] - max).exp() / sum;
+        if r > 0.0 {
+            scaled_accumulate(space, p, r, &mut acc.wsum[c]);
+        }
+    }
+}
+
+fn scaled_accumulate(space: &Space, i: usize, scale: f64, acc: &mut [f64]) {
+    use crate::data::Data;
+    match &space.data {
+        Data::Dense(m) => {
+            for (a, &v) in acc.iter_mut().zip(m.row(i)) {
+                *a += scale * v as f64;
+            }
+        }
+        Data::Sparse(m) => {
+            let (idx, val) = m.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                acc[j as usize] += scale * v as f64;
+            }
+        }
+    }
+}
+
+/// M-step: closed-form updates from the accumulated statistics.
+fn m_step(space: &Space, mix: &mut Mixture, acc: &EmAccum) {
+    let n = space.n() as f64;
+    let d = space.dim() as f64;
+    for c in 0..mix.k() {
+        let r = acc.resp[c];
+        if r < 1e-12 {
+            continue; // dead component keeps its parameters
+        }
+        mix.weights[c] = r / n;
+        let mut mean_sq = 0.0f64;
+        for (j, m) in mix.means[c].iter_mut().enumerate() {
+            let nv = acc.wsum[c][j] / r;
+            *m = nv as f32;
+            mean_sq += nv * nv;
+        }
+        // E[‖x‖²] − ‖μ‖², per dimension.
+        let var = (acc.wsumsq[c] / r - mean_sq) / d;
+        mix.variances[c] = var.max(1e-6);
+    }
+    // Renormalize weights (guards against dead components).
+    let total: f64 = mix.weights.iter().sum();
+    for w in mix.weights.iter_mut() {
+        *w /= total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    fn gmm_space(seed: u64) -> (Space, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(seed);
+        let centers = vec![vec![-20.0f32, 0.0], vec![20.0, 0.0], vec![0.0, 30.0]];
+        let mut rows = Vec::new();
+        for c in &centers {
+            for _ in 0..150 {
+                rows.push(vec![
+                    c[0] + rng.normal() as f32 * 2.0,
+                    c[1] + rng.normal() as f32 * 2.0,
+                ]);
+            }
+        }
+        (
+            Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows))),
+            centers,
+        )
+    }
+
+    fn seeds_near(centers: &[Vec<f32>], jitter: f32) -> Vec<Vec<f32>> {
+        centers
+            .iter()
+            .map(|c| vec![c[0] + jitter, c[1] - jitter])
+            .collect()
+    }
+
+    #[test]
+    fn naive_em_recovers_centers() {
+        let (space, centers) = gmm_space(1);
+        let mut mix = Mixture::from_seeds(seeds_near(&centers, 3.0));
+        for _ in 0..15 {
+            naive_em_step(&space, &mut mix);
+        }
+        for (m, c) in mix.means.iter().zip(&centers) {
+            let d = crate::metrics::dense_euclidean(m, c);
+            assert!(d < 1.0, "mean {m:?} far from {c:?}");
+        }
+        for &v in &mix.variances {
+            assert!((1.0..9.0).contains(&v), "variance {v}");
+        }
+    }
+
+    #[test]
+    fn tree_em_exact_mode_matches_naive() {
+        let (space, centers) = gmm_space(2);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let mut a = Mixture::from_seeds(seeds_near(&centers, 2.0));
+        let mut b = a.clone();
+        for _ in 0..5 {
+            let la = naive_em_step(&space, &mut a);
+            let lb = tree_em_step(&space, &tree, &mut b, 0.0);
+            assert!(
+                (la - lb).abs() < 1e-6 * (1.0 + la.abs()),
+                "loglik {la} vs {lb}"
+            );
+        }
+        for (ma, mb) in a.means.iter().zip(&b.means) {
+            for (x, y) in ma.iter().zip(mb) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_em_approx_close_and_cheaper() {
+        let (space, centers) = gmm_space(3);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let mut exact = Mixture::from_seeds(seeds_near(&centers, 2.0));
+        let mut approx = exact.clone();
+        space.reset_count();
+        for _ in 0..5 {
+            naive_em_step(&space, &mut exact);
+        }
+        let naive_d = space.dist_count();
+        space.reset_count();
+        for _ in 0..5 {
+            tree_em_step(&space, &tree, &mut approx, 0.05);
+        }
+        let tree_d = space.dist_count();
+        assert!(tree_d < naive_d, "tree {tree_d} !< naive {naive_d}");
+        for (ma, mb) in exact.means.iter().zip(&approx.means) {
+            let d = crate::metrics::dense_euclidean(ma, mb);
+            assert!(d < 0.5, "approx mean drifted {d}");
+        }
+    }
+
+    #[test]
+    fn loglik_increases() {
+        let (space, centers) = gmm_space(4);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let mut mix = Mixture::from_seeds(seeds_near(&centers, 4.0));
+        let mut prev = f64::NEG_INFINITY;
+        for _ in 0..8 {
+            let ll = tree_em_step(&space, &tree, &mut mix, 0.0);
+            assert!(ll >= prev - 1e-6 * (1.0 + prev.abs()), "loglik fell: {prev} -> {ll}");
+            prev = ll;
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let (space, centers) = gmm_space(5);
+        let mut mix = Mixture::from_seeds(seeds_near(&centers, 1.0));
+        for _ in 0..5 {
+            naive_em_step(&space, &mut mix);
+        }
+        let total: f64 = mix.weights.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // Balanced design → roughly equal weights.
+        for &w in &mix.weights {
+            assert!((0.2..0.5).contains(&w), "weight {w}");
+        }
+    }
+}

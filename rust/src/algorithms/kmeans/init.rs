@@ -1,0 +1,132 @@
+//! K-means initialization strategies (Table 4 compares Random vs Anchors).
+
+use crate::anchors::build_anchors;
+use crate::metrics::Space;
+use crate::rng::Rng;
+
+/// Initialization strategy.
+#[derive(Clone, Debug)]
+pub enum Init {
+    /// k distinct datapoints chosen uniformly at random.
+    Random,
+    /// Centroids of the k anchors produced by the anchors hierarchy —
+    /// the paper's "Anchors Start".
+    Anchors,
+    /// Explicit seed centroids.
+    Given(Vec<Vec<f32>>),
+}
+
+impl Init {
+    /// Materialize the initial centroids. Distances used by the Anchors
+    /// strategy ARE counted (they're real work), but callers measuring
+    /// per-iteration cost snapshot the counter after init.
+    pub fn centroids(&self, space: &Space, k: usize, seed: u64) -> Vec<Vec<f32>> {
+        match self {
+            Init::Random => random_init(space, k, seed),
+            Init::Anchors => anchors_init(space, k, seed),
+            Init::Given(c) => {
+                assert_eq!(c.len(), k, "Init::Given size mismatch");
+                c.clone()
+            }
+        }
+    }
+}
+
+/// k distinct random datapoints as seeds.
+pub fn random_init(space: &Space, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let k = k.min(space.n());
+    let idx = rng.sample_indices(space.n(), k);
+    idx.into_iter()
+        .map(|i| {
+            let mut row = vec![0f32; space.dim()];
+            space.fill_row(i, &mut row);
+            row
+        })
+        .collect()
+}
+
+/// Build a k-anchor hierarchy and return each anchor's owned-set centroid
+/// (paper §5, Table 4 "Anchors Start").
+pub fn anchors_init(space: &Space, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let points: Vec<u32> = (0..space.n() as u32).collect();
+    let set = build_anchors(space, &points, k, &mut rng);
+    let mut seeds = set.centroid_seeds(space);
+    // If duplicates collapsed the anchor count below k, pad with random
+    // points so the caller still gets k centroids.
+    let mut i = 0;
+    while seeds.len() < k {
+        let mut row = vec![0f32; space.dim()];
+        space.fill_row(rng.below(space.n()), &mut row);
+        seeds.push(row);
+        i += 1;
+        if i > 4 * k {
+            break;
+        }
+    }
+    seeds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+
+    fn space(n: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| vec![rng.normal() as f32, rng.normal() as f32])
+            .collect();
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn random_init_distinct_points() {
+        let s = space(100, 1);
+        let seeds = random_init(&s, 10, 7);
+        assert_eq!(seeds.len(), 10);
+        for (i, a) in seeds.iter().enumerate() {
+            for b in seeds.iter().skip(i + 1) {
+                assert_ne!(a, b, "duplicate seeds");
+            }
+        }
+    }
+
+    #[test]
+    fn random_init_deterministic() {
+        let s = space(50, 2);
+        assert_eq!(random_init(&s, 5, 9), random_init(&s, 5, 9));
+        assert_ne!(random_init(&s, 5, 9), random_init(&s, 5, 10));
+    }
+
+    #[test]
+    fn anchors_init_right_count() {
+        let s = space(200, 3);
+        let seeds = anchors_init(&s, 12, 11);
+        assert_eq!(seeds.len(), 12);
+        assert!(seeds.iter().all(|c| c.len() == 2));
+    }
+
+    #[test]
+    fn given_passes_through() {
+        let s = space(10, 4);
+        let seeds = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let got = Init::Given(seeds.clone()).centroids(&s, 2, 0);
+        assert_eq!(got, seeds);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn given_checks_k() {
+        let s = space(10, 5);
+        Init::Given(vec![vec![0.0, 0.0]]).centroids(&s, 2, 0);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let s = space(4, 6);
+        let seeds = random_init(&s, 10, 1);
+        assert_eq!(seeds.len(), 4);
+    }
+}

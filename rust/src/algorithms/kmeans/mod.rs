@@ -1,0 +1,577 @@
+//! Exact K-means, naive and metric-tree-accelerated (paper §4.1).
+//!
+//! The accelerated pass (`KmeansStep` in the paper) recurses over the
+//! tree carrying the candidate set `Cands` — the centroids that could
+//! possibly own a point of the current node. Candidates are pruned with
+//! the triangle-inequality blacklisting rule
+//!
+//! ```text
+//! D(c*, pivot) + R ≤ D(c, pivot) − R   ⇒   c owns nothing in the node
+//! ```
+//!
+//! and when one candidate remains the node's *cached sufficient
+//! statistics* (count, Σx, Σ‖x‖²) are awarded wholesale — including the
+//! exact distortion contribution — without touching a single point.
+//!
+//! Both paths produce identical assignments (tested); they differ only in
+//! how many distances they evaluate, which is exactly what Table 2
+//! measures.
+
+mod init;
+
+pub use init::{anchors_init, random_init, Init};
+
+use crate::metrics::{dense_dot, Space};
+use crate::runtime::BatchDistanceEngine;
+use crate::tree::{MetricTree, NodeId};
+
+/// Options shared by the K-means drivers.
+#[derive(Clone, Debug)]
+pub struct KmeansOpts {
+    /// Stop when no centroid moves more than this (Euclidean).
+    pub tol: f64,
+    /// Use the XLA batch engine for dense distance blocks when provided.
+    pub engine: Option<std::sync::Arc<BatchDistanceEngine>>,
+    /// Seed for random initialization.
+    pub seed: u64,
+}
+
+impl Default for KmeansOpts {
+    fn default() -> Self {
+        KmeansOpts { tol: 1e-6, engine: None, seed: 0x5EED }
+    }
+}
+
+/// Result of a K-means run.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub centroids: Vec<Vec<f32>>,
+    /// Total distortion (Σ squared distance to owning centroid) of the
+    /// final assignment.
+    pub distortion: f64,
+    /// Iterations actually executed.
+    pub iterations: usize,
+    /// Distance computations consumed (excluding initialization).
+    pub dists: u64,
+}
+
+/// Per-iteration accumulator.
+struct Accum {
+    counts: Vec<u64>,
+    sums: Vec<Vec<f64>>,
+    distortion: f64,
+}
+
+impl Accum {
+    fn new(k: usize, d: usize) -> Self {
+        Accum { counts: vec![0; k], sums: vec![vec![0.0; d]; k], distortion: 0.0 }
+    }
+}
+
+/// Precomputed squared norms of the current centroids.
+fn centroid_sqnorms(centroids: &[Vec<f32>]) -> Vec<f64> {
+    centroids.iter().map(|c| dense_dot(c, c)).collect()
+}
+
+/// Recompute centroid positions from an accumulator; empty clusters keep
+/// their old position (the paper's convention — no re-seeding, so the
+/// naive and tree paths stay bit-identical). Returns max movement.
+fn update_centroids(centroids: &mut [Vec<f32>], acc: &Accum) -> f64 {
+    let mut max_move2 = 0.0f64;
+    for (ci, c) in centroids.iter_mut().enumerate() {
+        if acc.counts[ci] == 0 {
+            continue;
+        }
+        let inv = 1.0 / acc.counts[ci] as f64;
+        let mut move2 = 0.0;
+        for (j, v) in c.iter_mut().enumerate() {
+            let nv = (acc.sums[ci][j] * inv) as f32;
+            let dlt = (nv - *v) as f64;
+            move2 += dlt * dlt;
+            *v = nv;
+        }
+        max_move2 = max_move2.max(move2);
+    }
+    max_move2.sqrt()
+}
+
+// ---------------------------------------------------------------------
+// Naive (treeless) Lloyd iterations — the paper's "regular" baseline.
+// ---------------------------------------------------------------------
+
+/// One naive assignment pass: every point against every centroid
+/// (R·K counted distances).
+fn naive_pass(space: &Space, centroids: &[Vec<f32>], c_sq: &[f64], acc: &mut Accum) {
+    let k = centroids.len();
+    for p in 0..space.n() {
+        let mut best = f64::INFINITY;
+        let mut best_c = 0usize;
+        for ci in 0..k {
+            let d = space.dist_to_vec(p, &centroids[ci], c_sq[ci]);
+            if d < best {
+                best = d;
+                best_c = ci;
+            }
+        }
+        acc.counts[best_c] += 1;
+        space.accumulate(p, &mut acc.sums[best_c]);
+        acc.distortion += best * best;
+    }
+}
+
+/// One naive assignment pass routed through the XLA batch engine: the
+/// whole R×K distance matrix is evaluated in (256 × 128)-tiles on the
+/// PJRT CPU client. Counted identically (R·K).
+fn naive_pass_xla(
+    space: &Space,
+    centroids: &[Vec<f32>],
+    acc: &mut Accum,
+    engine: &BatchDistanceEngine,
+) {
+    let n = space.n();
+    let k = centroids.len();
+    let tile = engine.tile_n();
+    let mut block_rows: Vec<u32> = Vec::with_capacity(tile);
+    let mut row = 0usize;
+    while row < n {
+        let hi = (row + tile).min(n);
+        block_rows.clear();
+        block_rows.extend((row as u32)..(hi as u32));
+        let d2 = engine.dist2_block(space, &block_rows, centroids);
+        space.count_bulk((block_rows.len() * k) as u64);
+        for (bi, &p) in block_rows.iter().enumerate() {
+            let drow = &d2[bi * k..(bi + 1) * k];
+            let (mut best, mut best_c) = (f64::INFINITY, 0usize);
+            for (ci, &v) in drow.iter().enumerate() {
+                if (v as f64) < best {
+                    best = v as f64;
+                    best_c = ci;
+                }
+            }
+            acc.counts[best_c] += 1;
+            space.accumulate(p as usize, &mut acc.sums[best_c]);
+            acc.distortion += best; // d2 is already squared
+        }
+        row = hi;
+    }
+}
+
+/// Naive Lloyd's algorithm: `max_iters` full passes (or until centroids
+/// stop moving).
+pub fn naive_lloyd(
+    space: &Space,
+    init: Init,
+    k: usize,
+    max_iters: usize,
+    opts: &KmeansOpts,
+) -> KmeansResult {
+    let mut centroids = init.centroids(space, k, opts.seed);
+    let before = space.dist_count();
+    let d = space.dim();
+    let mut iterations = 0;
+    let mut distortion = f64::NAN;
+    for _ in 0..max_iters {
+        let c_sq = centroid_sqnorms(&centroids);
+        let mut acc = Accum::new(centroids.len(), d);
+        match (&opts.engine, space.data.is_sparse()) {
+            (Some(engine), false) => naive_pass_xla(space, &centroids, &mut acc, engine),
+            _ => naive_pass(space, &centroids, &c_sq, &mut acc),
+        }
+        iterations += 1;
+        distortion = acc.distortion;
+        let moved = update_centroids(&mut centroids, &acc);
+        if moved <= opts.tol {
+            break;
+        }
+    }
+    KmeansResult {
+        centroids,
+        distortion,
+        iterations,
+        dists: space.dist_count() - before,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tree-accelerated Lloyd iterations (the paper's KmeansStep).
+// ---------------------------------------------------------------------
+
+/// Scratch shared across the recursion of one pass.
+struct StepCtx<'a> {
+    space: &'a Space,
+    tree: &'a MetricTree,
+    centroids: &'a [Vec<f32>],
+    c_sq: &'a [f64],
+    engine: Option<&'a BatchDistanceEngine>,
+}
+
+/// Allocation-free candidate storage for the recursion: candidate sets
+/// live as stacked ranges of one growable vec (each node pushes its kept
+/// set, recurses, then truncates) — the hot loop performs zero heap
+/// allocations after the first pass (EXPERIMENTS.md §Perf).
+struct StepScratch {
+    cands: Vec<u32>,
+    dists: Vec<f64>,
+}
+
+/// One tree pass. `lo..hi` indexes this node's candidate set inside
+/// `scratch.cands`.
+fn kmeans_step(
+    ctx: &StepCtx,
+    node_id: NodeId,
+    lo: usize,
+    hi: usize,
+    scratch: &mut StepScratch,
+    acc: &mut Accum,
+) {
+    let node = ctx.tree.node(node_id);
+    debug_assert!(hi > lo);
+
+    // ---- Step 1: reduce Cands --------------------------------------
+    // Distances from every candidate to the node pivot (counted).
+    if scratch.dists.len() < hi {
+        scratch.dists.resize(hi, 0.0);
+    }
+    ctx.space.count_bulk((hi - lo) as u64);
+    let mut star_pos = lo;
+    let mut star_dist = f64::INFINITY;
+    for i in lo..hi {
+        let cu = scratch.cands[i] as usize;
+        let d2 = ctx.c_sq[cu] + node.pivot_sq
+            - 2.0 * dense_dot(&ctx.centroids[cu], &node.pivot);
+        let d = d2.max(0.0).sqrt();
+        scratch.dists[i] = d;
+        if d < star_dist {
+            star_dist = d;
+            star_pos = i;
+        }
+    }
+    let keep_threshold = star_dist + 2.0 * node.radius; // D(c,p) - R >= D(c*,p) + R
+    let new_lo = scratch.cands.len();
+    for i in lo..hi {
+        if scratch.dists[i] < keep_threshold || i == star_pos {
+            let c = scratch.cands[i];
+            scratch.cands.push(c);
+        }
+    }
+    let new_hi = scratch.cands.len();
+
+    // ---- Step 2: award mass ----------------------------------------
+    if new_hi - new_lo == 1 {
+        // Whole node belongs to the surviving candidate: cached
+        // sufficient statistics award it in O(d), distortion exactly.
+        let c = scratch.cands[new_lo] as usize;
+        acc.counts[c] += node.count as u64;
+        for (j, s) in node.sum.iter().enumerate() {
+            acc.sums[c][j] += s;
+        }
+        acc.distortion += node.distortion_to(&ctx.centroids[c], ctx.c_sq[c]);
+        scratch.cands.truncate(new_lo);
+        return;
+    }
+    match node.children {
+        Some((a, b)) => {
+            kmeans_step(ctx, a, new_lo, new_hi, scratch, acc);
+            kmeans_step(ctx, b, new_lo, new_hi, scratch, acc);
+        }
+        None => leaf_assign(ctx, node_id, &scratch.cands[new_lo..new_hi], acc),
+    }
+    scratch.cands.truncate(new_lo);
+}
+
+/// Assign the points of a leaf among the surviving candidates.
+fn leaf_assign(ctx: &StepCtx, node_id: NodeId, cands: &[u32], acc: &mut Accum) {
+    let node = ctx.tree.node(node_id);
+    // Dense data + engine + big enough block → XLA tile; else scalar.
+    if let (Some(engine), false) = (ctx.engine, ctx.space.data.is_sparse()) {
+        if node.points.len() * cands.len() >= engine.min_block() {
+            let cents: Vec<Vec<f32>> = cands
+                .iter()
+                .map(|&c| ctx.centroids[c as usize].clone())
+                .collect();
+            let d2 = engine.dist2_block(ctx.space, &node.points, &cents);
+            ctx.space
+                .count_bulk((node.points.len() * cands.len()) as u64);
+            for (pi, &p) in node.points.iter().enumerate() {
+                let row = &d2[pi * cands.len()..(pi + 1) * cands.len()];
+                let (mut best, mut best_c) = (f64::INFINITY, 0u32);
+                for (ci, &v) in row.iter().enumerate() {
+                    if (v as f64) < best {
+                        best = v as f64;
+                        best_c = cands[ci];
+                    }
+                }
+                let bc = best_c as usize;
+                acc.counts[bc] += 1;
+                ctx.space.accumulate(p as usize, &mut acc.sums[bc]);
+                acc.distortion += best;
+            }
+            return;
+        }
+    }
+    for &p in &node.points {
+        let (mut best, mut best_c) = (f64::INFINITY, 0u32);
+        for &c in cands {
+            let d = ctx
+                .space
+                .dist_to_vec(p as usize, &ctx.centroids[c as usize], ctx.c_sq[c as usize]);
+            if d < best {
+                best = d;
+                best_c = c;
+            }
+        }
+        let bc = best_c as usize;
+        acc.counts[bc] += 1;
+        ctx.space.accumulate(p as usize, &mut acc.sums[bc]);
+        acc.distortion += best * best;
+    }
+}
+
+/// Tree-accelerated Lloyd's algorithm.
+pub fn tree_lloyd(
+    space: &Space,
+    tree: &MetricTree,
+    init: Init,
+    k: usize,
+    max_iters: usize,
+    opts: &KmeansOpts,
+) -> KmeansResult {
+    let mut centroids = init.centroids(space, k, opts.seed);
+    let before = space.dist_count();
+    let d = space.dim();
+    let mut scratch = StepScratch {
+        cands: (0..centroids.len() as u32).collect(),
+        dists: vec![0.0; centroids.len()],
+    };
+    let n_cands = scratch.cands.len();
+    let mut iterations = 0;
+    let mut distortion = f64::NAN;
+    for _ in 0..max_iters {
+        let c_sq = centroid_sqnorms(&centroids);
+        let mut acc = Accum::new(centroids.len(), d);
+        let ctx = StepCtx {
+            space,
+            tree,
+            centroids: &centroids,
+            c_sq: &c_sq,
+            engine: opts.engine.as_deref(),
+        };
+        kmeans_step(&ctx, tree.root, 0, n_cands, &mut scratch, &mut acc);
+        debug_assert_eq!(scratch.cands.len(), n_cands, "scratch stack leaked");
+        iterations += 1;
+        distortion = acc.distortion;
+        let moved = update_centroids(&mut centroids, &acc);
+        if moved <= opts.tol {
+            break;
+        }
+    }
+    KmeansResult {
+        centroids,
+        distortion,
+        iterations,
+        dists: space.dist_count() - before,
+    }
+}
+
+/// Final assignment of every point to its centroid (for consumers that
+/// need explicit labels; not part of the counted benchmark loop).
+pub fn assign_labels(space: &Space, centroids: &[Vec<f32>]) -> Vec<u32> {
+    let c_sq = centroid_sqnorms(centroids);
+    (0..space.n())
+        .map(|p| {
+            let mut best = f64::INFINITY;
+            let mut best_c = 0u32;
+            for (ci, c) in centroids.iter().enumerate() {
+                let d = space.dist_to_vec_uncounted(p, c, c_sq[ci]);
+                if d < best {
+                    best = d;
+                    best_c = ci as u32;
+                }
+            }
+            best_c
+        })
+        .collect()
+}
+
+/// Distortion of an arbitrary centroid set (uncounted; reporting only).
+pub fn distortion_of(space: &Space, centroids: &[Vec<f32>]) -> f64 {
+    let c_sq = centroid_sqnorms(centroids);
+    (0..space.n())
+        .map(|p| {
+            centroids
+                .iter()
+                .enumerate()
+                .map(|(ci, c)| space.dist_to_vec_uncounted(p, c, c_sq[ci]).powi(2))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+    use crate::tree::top_down;
+
+    fn blobs(c: usize, per: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for _ in 0..c {
+            let center: Vec<f64> = (0..d).map(|_| rng.uniform(-40.0, 40.0)).collect();
+            for _ in 0..per {
+                rows.push(
+                    center
+                        .iter()
+                        .map(|&cv| (cv + rng.normal()) as f32)
+                        .collect::<Vec<f32>>(),
+                );
+            }
+        }
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn naive_and_tree_agree_exactly() {
+        // The core exactness claim: same init ⇒ same distortion trajectory.
+        let space = blobs(5, 80, 3, 1);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        for k in [3usize, 7, 12] {
+            let opts = KmeansOpts::default();
+            let a = naive_lloyd(&space, Init::Random, k, 10, &opts);
+            let b = tree_lloyd(&space, &tree, Init::Random, k, 10, &opts);
+            assert!(
+                (a.distortion - b.distortion).abs() <= 1e-6 * (1.0 + a.distortion),
+                "k={k}: naive {} vs tree {}",
+                a.distortion,
+                b.distortion
+            );
+            // Same final centroids.
+            for (ca, cb) in a.centroids.iter().zip(&b.centroids) {
+                for (x, y) in ca.iter().zip(cb) {
+                    assert!((x - y).abs() < 1e-4, "centroid drift {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_uses_fewer_distances() {
+        let space = blobs(8, 150, 2, 2);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 25, ..Default::default() });
+        let opts = KmeansOpts::default();
+        let a = naive_lloyd(&space, Init::Random, 8, 8, &opts);
+        let b = tree_lloyd(&space, &tree, Init::Random, 8, 8, &opts);
+        assert!(
+            b.dists * 3 < a.dists,
+            "tree {} vs naive {} distances",
+            b.dists,
+            a.dists
+        );
+    }
+
+    #[test]
+    fn works_with_top_down_tree_too() {
+        let space = blobs(4, 60, 3, 3);
+        let tree = top_down::build(&space, 20);
+        let opts = KmeansOpts::default();
+        let a = naive_lloyd(&space, Init::Random, 4, 6, &opts);
+        let b = tree_lloyd(&space, &tree, Init::Random, 4, 6, &opts);
+        assert!((a.distortion - b.distortion).abs() <= 1e-6 * (1.0 + a.distortion));
+    }
+
+    #[test]
+    fn distortion_decreases_monotonically() {
+        let space = blobs(6, 60, 2, 4);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let opts = KmeansOpts::default();
+        let mut prev = f64::INFINITY;
+        for iters in [1usize, 2, 4, 8] {
+            let r = tree_lloyd(&space, &tree, Init::Random, 6, iters, &opts);
+            assert!(
+                r.distortion <= prev + 1e-6 * (1.0 + prev),
+                "distortion rose: {prev} -> {}",
+                r.distortion
+            );
+            prev = r.distortion;
+        }
+    }
+
+    #[test]
+    fn anchors_init_beats_random_before_iterations() {
+        // Table 4's "Start Benefit": anchors-chosen seeds have lower
+        // distortion than random seeds.
+        let space = blobs(10, 100, 3, 5);
+        let k = 10;
+        let random = random_init(&space, k, 99);
+        let anchors = anchors_init(&space, k, 99);
+        let dr = distortion_of(&space, &random);
+        let da = distortion_of(&space, &anchors);
+        assert!(
+            da < dr,
+            "anchors start {da} not better than random start {dr}"
+        );
+    }
+
+    #[test]
+    fn empty_cluster_keeps_position() {
+        // Two far-apart seeds, all data near one of them.
+        let rows: Vec<Vec<f32>> = (0..50)
+            .map(|i| vec![(i % 5) as f32 * 0.01, 0.0])
+            .collect();
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let seeds = vec![vec![0.0f32, 0.0], vec![1000.0f32, 1000.0]];
+        let r = naive_lloyd(&space, Init::Given(seeds.clone()), 2, 5, &KmeansOpts::default());
+        // Far seed owns nothing and must not move.
+        assert_eq!(r.centroids[1], seeds[1]);
+    }
+
+    #[test]
+    fn single_cluster_k1() {
+        let space = blobs(3, 40, 2, 6);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let r = tree_lloyd(&space, &tree, Init::Random, 1, 5, &KmeansOpts::default());
+        // k=1: centroid converges to the global mean.
+        let mean = space.centroid(&(0..space.n() as u32).collect::<Vec<_>>());
+        for (a, b) in r.centroids[0].iter().zip(&mean) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn k_greater_than_distinct_points() {
+        let rows: Vec<Vec<f32>> = vec![vec![0.0, 0.0], vec![1.0, 1.0]];
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let r = naive_lloyd(&space, Init::Random, 5, 3, &KmeansOpts::default());
+        assert!(r.distortion >= 0.0);
+    }
+
+    #[test]
+    fn labels_match_distortion() {
+        let space = blobs(4, 30, 2, 7);
+        let r = naive_lloyd(&space, Init::Random, 4, 10, &KmeansOpts::default());
+        let labels = assign_labels(&space, &r.centroids);
+        let c_sq = centroid_sqnorms(&r.centroids);
+        let manual: f64 = (0..space.n())
+            .map(|p| {
+                space
+                    .dist_to_vec_uncounted(p, &r.centroids[labels[p] as usize], c_sq[labels[p] as usize])
+                    .powi(2)
+            })
+            .sum();
+        assert!((manual - r.distortion).abs() < 1e-5 * (1.0 + manual));
+    }
+
+    #[test]
+    fn sparse_data_kmeans() {
+        use crate::dataset::gen_mixture;
+        let m = gen_mixture(400, 200, 3, 8);
+        let space = Space::euclidean(Data::Sparse(m));
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 20, ..Default::default() });
+        let opts = KmeansOpts::default();
+        let a = naive_lloyd(&space, Init::Random, 3, 6, &opts);
+        let b = tree_lloyd(&space, &tree, Init::Random, 3, 6, &opts);
+        assert!((a.distortion - b.distortion).abs() <= 1e-5 * (1.0 + a.distortion));
+    }
+}

@@ -1,0 +1,234 @@
+//! k-nearest-neighbor search on metric trees — the classic use the paper
+//! motivates in §2.1 ("a search will only need to visit half the
+//! datapoints in a metric tree"). Also serves as the oracle primitive for
+//! the MST extension and several property tests.
+
+use crate::metrics::Space;
+use crate::tree::{MetricTree, NodeId};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A neighbor hit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub id: u32,
+    pub dist: f64,
+}
+
+/// Naive k-NN: scan everything (R counted distances).
+pub fn naive_knn(space: &Space, qrow: &[f32], q_sq: f64, k: usize, skip: Option<u32>) -> Vec<Neighbor> {
+    let mut heap: BinaryHeap<HeapItem> = BinaryHeap::new(); // max-heap by dist
+    for p in 0..space.n() {
+        if skip == Some(p as u32) {
+            continue;
+        }
+        let d = space.dist_to_vec(p, qrow, q_sq);
+        push_bounded(&mut heap, k, p as u32, d);
+    }
+    into_sorted(heap)
+}
+
+/// Tree k-NN: best-first with ball pruning.
+pub fn tree_knn(
+    space: &Space,
+    tree: &MetricTree,
+    qrow: &[f32],
+    q_sq: f64,
+    k: usize,
+    skip: Option<u32>,
+) -> Vec<Neighbor> {
+    let mut result: BinaryHeap<HeapItem> = BinaryHeap::new();
+    // Min-heap on the lower bound of each node's distance to q.
+    let mut frontier: BinaryHeap<Reverse<(OrdF64, NodeId)>> = BinaryHeap::new();
+    frontier.push(Reverse((OrdF64(node_lower_bound(space, tree, tree.root, qrow, q_sq)), tree.root)));
+    while let Some(Reverse((OrdF64(lb), node_id))) = frontier.pop() {
+        if result.len() == k {
+            if let Some(worst) = result.peek() {
+                if lb > worst.dist {
+                    break; // nothing left can improve the result set
+                }
+            }
+        }
+        let node = tree.node(node_id);
+        match node.children {
+            None => {
+                for &p in &node.points {
+                    if skip == Some(p) {
+                        continue;
+                    }
+                    let d = space.dist_to_vec(p as usize, qrow, q_sq);
+                    push_bounded(&mut result, k, p, d);
+                }
+            }
+            Some((a, b)) => {
+                for child in [a, b] {
+                    let lb = node_lower_bound(space, tree, child, qrow, q_sq);
+                    let prune = result.len() == k
+                        && result.peek().map(|w| lb > w.dist).unwrap_or(false);
+                    if !prune {
+                        frontier.push(Reverse((OrdF64(lb), child)));
+                    }
+                }
+            }
+        }
+    }
+    into_sorted(result)
+}
+
+/// Lower bound on the distance from q to any point in the node
+/// (counted: one pivot distance).
+fn node_lower_bound(space: &Space, tree: &MetricTree, id: NodeId, qrow: &[f32], q_sq: f64) -> f64 {
+    use crate::metrics::{dense_dot, dense_l1, Metric};
+    let node = tree.node(id);
+    space.count_bulk(1);
+    let d = match space.metric {
+        Metric::Euclidean => {
+            let d2 = q_sq + node.pivot_sq - 2.0 * dense_dot(qrow, &node.pivot);
+            d2.max(0.0).sqrt()
+        }
+        Metric::L1 => dense_l1(qrow, &node.pivot),
+    };
+    (d - node.radius).max(0.0)
+}
+
+#[derive(PartialEq)]
+struct HeapItem {
+    dist: f64,
+    id: u32,
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.dist
+            .partial_cmp(&other.dist)
+            .unwrap()
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+#[derive(PartialEq, PartialOrd)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap()
+    }
+}
+
+fn push_bounded(heap: &mut BinaryHeap<HeapItem>, k: usize, id: u32, dist: f64) {
+    if heap.len() < k {
+        heap.push(HeapItem { dist, id });
+    } else if let Some(worst) = heap.peek() {
+        if dist < worst.dist {
+            heap.pop();
+            heap.push(HeapItem { dist, id });
+        }
+    }
+}
+
+fn into_sorted(heap: BinaryHeap<HeapItem>) -> Vec<Neighbor> {
+    let mut v: Vec<Neighbor> = heap
+        .into_iter()
+        .map(|h| Neighbor { id: h.id, dist: h.dist })
+        .collect();
+    v.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+    v
+}
+
+/// Convenience: k-NN of a datapoint (excluding itself).
+pub fn tree_knn_point(space: &Space, tree: &MetricTree, q: usize, k: usize) -> Vec<Neighbor> {
+    let mut qrow = vec![0f32; space.dim()];
+    space.fill_row(q, &mut qrow);
+    tree_knn(space, tree, &qrow, space.data.sqnorm(q), k, Some(q as u32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    fn random_space(n: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 3.0).collect();
+        Space::euclidean(Data::Dense(DenseMatrix::new(n, d, vals)))
+    }
+
+    #[test]
+    fn tree_matches_naive() {
+        let space = random_space(400, 3, 1);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..3).map(|_| rng.normal() as f32 * 3.0).collect();
+            let q_sq = q.iter().map(|&v| (v as f64).powi(2)).sum();
+            let a = naive_knn(&space, &q, q_sq, 5, None);
+            let b = tree_knn(&space, &tree, &q, q_sq, 5, None);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x.dist - y.dist).abs() < 1e-9, "{x:?} vs {y:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn skip_excludes_self() {
+        let space = random_space(100, 2, 3);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let hits = tree_knn_point(&space, &tree, 7, 3);
+        assert!(hits.iter().all(|h| h.id != 7));
+        assert!(hits[0].dist > 0.0 || hits[0].id != 7);
+    }
+
+    #[test]
+    fn k_one_is_nearest() {
+        let space = random_space(200, 2, 4);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let q = vec![0.1f32, -0.2];
+        let q_sq = q.iter().map(|&v| (v as f64).powi(2)).sum();
+        let hit = &tree_knn(&space, &tree, &q, q_sq, 1, None)[0];
+        let best = (0..space.n())
+            .map(|p| space.dist_to_vec_uncounted(p, &q, q_sq))
+            .fold(f64::INFINITY, f64::min);
+        assert!((hit.dist - best).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_exceeds_n() {
+        let space = random_space(5, 2, 5);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let q = vec![0.0f32, 0.0];
+        let hits = tree_knn(&space, &tree, &q, 0.0, 50, None);
+        assert_eq!(hits.len(), 5);
+    }
+
+    #[test]
+    fn tree_visits_fewer_points_on_clustered_data() {
+        // §2.1's claim. Build well-separated blobs; a query near one blob
+        // should not pay distances to the others.
+        let mut rng = Rng::new(6);
+        let mut rows = Vec::new();
+        for c in 0..10 {
+            for _ in 0..100 {
+                rows.push(vec![
+                    (c as f64 * 200.0 + rng.normal()) as f32,
+                    rng.normal() as f32,
+                ]);
+            }
+        }
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 20, ..Default::default() });
+        space.reset_count();
+        let q = vec![0.0f32, 0.0];
+        tree_knn(&space, &tree, &q, 0.0, 10, None);
+        let used = space.dist_count();
+        assert!(used < 300, "tree knn used {used} distances on 1000 points");
+    }
+}

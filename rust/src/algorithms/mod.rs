@@ -1,0 +1,8 @@
+pub mod kmeans;
+pub mod anomaly;
+pub mod allpairs;
+pub mod knn;
+pub mod mst;
+pub mod gaussian;
+pub mod ballquery;
+pub mod xmeans;

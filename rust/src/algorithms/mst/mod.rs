@@ -1,0 +1,376 @@
+//! Euclidean minimum spanning trees / dependency trees (paper §6).
+//!
+//! The paper's future-work list includes dependency-tree learning by
+//! running a spanning-tree algorithm in attribute space (maximum
+//! correlation = minimum distance after standardization, eq. 8). We
+//! implement Borůvka's algorithm with tree-accelerated
+//! "nearest-foreign-neighbor" queries: each round, every component finds
+//! its closest outside point using the metric tree, pruning subtrees that
+//! (a) lie entirely inside the component or (b) are provably farther than
+//! the component's current best candidate.
+
+use crate::metrics::Space;
+use crate::tree::{MetricTree, NodeId};
+
+/// An MST edge.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub a: u32,
+    pub b: u32,
+    pub dist: f64,
+}
+
+/// Union–find with path halving.
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect() }
+    }
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+    fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        self.parent[ra as usize] = rb;
+        true
+    }
+}
+
+/// Naive Prim's algorithm — O(R²) counted distances. The oracle baseline.
+pub fn naive_mst(space: &Space) -> Vec<Edge> {
+    let n = space.n();
+    if n <= 1 {
+        return Vec::new();
+    }
+    let mut in_tree = vec![false; n];
+    let mut best_d = vec![f64::INFINITY; n];
+    let mut best_from = vec![0u32; n];
+    let mut edges = Vec::with_capacity(n - 1);
+    in_tree[0] = true;
+    for j in 1..n {
+        best_d[j] = space.dist(0, j);
+        best_from[j] = 0;
+    }
+    for _ in 1..n {
+        // Closest outside point.
+        let (mut pick, mut pick_d) = (usize::MAX, f64::INFINITY);
+        for j in 0..n {
+            if !in_tree[j] && best_d[j] < pick_d {
+                pick = j;
+                pick_d = best_d[j];
+            }
+        }
+        in_tree[pick] = true;
+        edges.push(Edge { a: best_from[pick], b: pick as u32, dist: pick_d });
+        for j in 0..n {
+            if !in_tree[j] {
+                let d = space.dist(pick, j);
+                if d < best_d[j] {
+                    best_d[j] = d;
+                    best_from[j] = pick as u32;
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Borůvka's algorithm with metric-tree nearest-foreign-neighbor queries.
+pub fn tree_mst(space: &Space, tree: &MetricTree) -> Vec<Edge> {
+    let n = space.n();
+    if n <= 1 {
+        return Vec::new();
+    }
+    let mut uf = UnionFind::new(n);
+    let mut edges: Vec<Edge> = Vec::with_capacity(n - 1);
+    let mut n_components = n;
+
+    // Reusable scratch.
+    let mut qrow = vec![0f32; space.dim()];
+
+    while n_components > 1 {
+        // Per-node "all my points share this component" marker for the
+        // current round (u32::MAX = mixed).
+        let node_comp = compute_node_components(space, tree, &mut uf);
+
+        // Best outgoing edge per component root.
+        let mut best: std::collections::HashMap<u32, Edge> = std::collections::HashMap::new();
+        for p in 0..n {
+            let comp = uf.find(p as u32);
+            space.fill_row(p, &mut qrow);
+            let q_sq = space.data.sqnorm(p);
+            let bound = best.get(&comp).map(|e| e.dist).unwrap_or(f64::INFINITY);
+            if let Some((q, d)) =
+                nearest_foreign(space, tree, &node_comp, &mut uf, comp, &qrow, q_sq, p as u32, bound)
+            {
+                let e = Edge { a: p as u32, b: q, dist: d };
+                best
+                    .entry(comp)
+                    .and_modify(|cur| {
+                        if e.dist < cur.dist {
+                            *cur = e;
+                        }
+                    })
+                    .or_insert(e);
+            }
+        }
+        // Merge. (Classic Borůvka: each selected edge joins two components;
+        // duplicates across components collapse via union-find.)
+        let mut progressed = false;
+        for (_, e) in best {
+            if uf.union(e.a, e.b) {
+                edges.push(e);
+                n_components -= 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "Borůvka round made no progress");
+    }
+    edges.sort_by(|x, y| x.dist.partial_cmp(&y.dist).unwrap());
+    edges
+}
+
+/// DFS labelling: the component id if every point under the node agrees,
+/// else u32::MAX.
+fn compute_node_components(space: &Space, tree: &MetricTree, uf: &mut UnionFind) -> Vec<u32> {
+    let _ = space;
+    let mut marks = vec![u32::MAX; tree.nodes.len()];
+    // Process in arena order; children always precede parents in both
+    // builders (nodes are pushed bottom-up), so one forward pass works.
+    for id in 0..tree.nodes.len() {
+        let node = &tree.nodes[id];
+        marks[id] = match node.children {
+            None => {
+                let mut comp = None;
+                let mut same = true;
+                for &p in &node.points {
+                    let c = uf.find(p);
+                    match comp {
+                        None => comp = Some(c),
+                        Some(cc) if cc != c => {
+                            same = false;
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+                if same {
+                    comp.unwrap_or(u32::MAX)
+                } else {
+                    u32::MAX
+                }
+            }
+            Some((a, b)) => {
+                let (ma, mb) = (marks[a as usize], marks[b as usize]);
+                if ma == mb {
+                    ma
+                } else {
+                    u32::MAX
+                }
+            }
+        };
+    }
+    marks
+}
+
+/// Nearest point to `qrow` whose component differs from `comp`.
+/// `bound` seeds the pruning radius with the component's current best.
+#[allow(clippy::too_many_arguments)]
+fn nearest_foreign(
+    space: &Space,
+    tree: &MetricTree,
+    node_comp: &[u32],
+    uf: &mut UnionFind,
+    comp: u32,
+    qrow: &[f32],
+    q_sq: f64,
+    skip: u32,
+    bound: f64,
+) -> Option<(u32, f64)> {
+    let mut best: Option<(u32, f64)> = None;
+    let mut best_d = bound;
+    descend(
+        space, tree, tree.root, node_comp, uf, comp, qrow, q_sq, skip, &mut best, &mut best_d,
+    );
+    best
+}
+
+#[allow(clippy::too_many_arguments)]
+fn descend(
+    space: &Space,
+    tree: &MetricTree,
+    id: NodeId,
+    node_comp: &[u32],
+    uf: &mut UnionFind,
+    comp: u32,
+    qrow: &[f32],
+    q_sq: f64,
+    skip: u32,
+    best: &mut Option<(u32, f64)>,
+    best_d: &mut f64,
+) {
+    // Prune: subtree entirely within our own component.
+    if node_comp[id as usize] == comp {
+        return;
+    }
+    let node = tree.node(id);
+    // Prune: ball lower bound beats current best.
+    space.count_bulk(1);
+    let d_pivot = {
+        use crate::metrics::{dense_dot, dense_l1, Metric};
+        match space.metric {
+            Metric::Euclidean => {
+                let d2 = q_sq + node.pivot_sq - 2.0 * dense_dot(qrow, &node.pivot);
+                d2.max(0.0).sqrt()
+            }
+            Metric::L1 => dense_l1(qrow, &node.pivot),
+        }
+    };
+    if d_pivot - node.radius >= *best_d {
+        return;
+    }
+    match node.children {
+        None => {
+            for &p in &node.points {
+                if p == skip || uf.find(p) == comp {
+                    continue;
+                }
+                let d = space.dist_to_vec(p as usize, qrow, q_sq);
+                if d < *best_d {
+                    *best_d = d;
+                    *best = Some((p, d));
+                }
+            }
+        }
+        Some((a, b)) => {
+            // Closer child first.
+            let (na, nb) = (tree.node(a), tree.node(b));
+            let da = crate::metrics::dense_sqdist(qrow, &na.pivot);
+            let db = crate::metrics::dense_sqdist(qrow, &nb.pivot);
+            let (first, second) = if da <= db { (a, b) } else { (b, a) };
+            descend(space, tree, first, node_comp, uf, comp, qrow, q_sq, skip, best, best_d);
+            descend(space, tree, second, node_comp, uf, comp, qrow, q_sq, skip, best, best_d);
+        }
+    }
+}
+
+/// Total weight of an edge list.
+pub fn total_weight(edges: &[Edge]) -> f64 {
+    edges.iter().map(|e| e.dist).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    fn random_space(n: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 10.0).collect();
+        Space::euclidean(Data::Dense(DenseMatrix::new(n, d, vals)))
+    }
+
+    #[test]
+    fn tree_mst_weight_matches_prim() {
+        // MSTs may differ under ties but total weight is unique-ish for
+        // generic (random continuous) data.
+        for seed in [1u64, 2, 3] {
+            let space = random_space(120, 2, seed);
+            let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 8, ..Default::default() });
+            let a = naive_mst(&space);
+            let b = tree_mst(&space, &tree);
+            assert_eq!(a.len(), 119);
+            assert_eq!(b.len(), 119);
+            let (wa, wb) = (total_weight(&a), total_weight(&b));
+            assert!(
+                (wa - wb).abs() < 1e-6 * (1.0 + wa),
+                "seed {seed}: weights {wa} vs {wb}"
+            );
+        }
+    }
+
+    #[test]
+    fn mst_is_spanning() {
+        let space = random_space(80, 3, 4);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let edges = tree_mst(&space, &tree);
+        let mut uf = UnionFind::new(80);
+        for e in &edges {
+            uf.union(e.a, e.b);
+        }
+        let root = uf.find(0);
+        for i in 1..80 {
+            assert_eq!(uf.find(i), root, "point {i} disconnected");
+        }
+    }
+
+    #[test]
+    fn two_blobs_bridge_once() {
+        // MST of two tight blobs must contain exactly one long bridge edge.
+        let mut rng = Rng::new(5);
+        let mut rows = Vec::new();
+        for _ in 0..40 {
+            rows.push(vec![rng.normal() as f32, rng.normal() as f32]);
+        }
+        for _ in 0..40 {
+            rows.push(vec![(100.0 + rng.normal()) as f32, rng.normal() as f32]);
+        }
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 8, ..Default::default() });
+        let edges = tree_mst(&space, &tree);
+        let long: Vec<&Edge> = edges.iter().filter(|e| e.dist > 50.0).collect();
+        assert_eq!(long.len(), 1, "expected exactly one bridge: {long:?}");
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        let space = random_space(1, 2, 6);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        assert!(tree_mst(&space, &tree).is_empty());
+        let space = random_space(2, 2, 7);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let e = tree_mst(&space, &tree);
+        assert_eq!(e.len(), 1);
+    }
+
+    #[test]
+    fn tree_mst_saves_distances_on_clustered_data() {
+        // The advantage grows with R (naive is Θ(R²), the dual pruning is
+        // ~R·polylog per Borůvka round), so test at a size where the gap
+        // is decisive.
+        let mut rng = Rng::new(8);
+        let mut rows = Vec::new();
+        for c in 0..8 {
+            for _ in 0..100 {
+                rows.push(vec![
+                    ((c % 4) as f64 * 100.0 + rng.normal()) as f32,
+                    ((c / 4) as f64 * 100.0 + rng.normal()) as f32,
+                ]);
+            }
+        }
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
+        space.reset_count();
+        let _ = tree_mst(&space, &tree);
+        let tree_d = space.dist_count();
+        space.reset_count();
+        let _ = naive_mst(&space);
+        let naive_d = space.dist_count();
+        assert!(
+            tree_d * 2 < naive_d,
+            "tree {tree_d} vs naive {naive_d} distances"
+        );
+    }
+}

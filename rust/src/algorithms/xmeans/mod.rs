@@ -1,0 +1,266 @@
+//! X-means: K-means with automatic estimation of k (Pelleg & Moore 2000,
+//! cited in the paper's references as the companion use of these trees).
+//!
+//! Algorithm: run (tree-accelerated, exact) K-means at the current k;
+//! then for every centroid, split it in two, improve the pair *locally*
+//! on the points it owns, and keep the split iff it improves the BIC
+//! (Bayesian Information Criterion) of that local region under an
+//! identical-spherical-Gaussian model. Repeat until no split survives or
+//! `k_max` is reached.
+//!
+//! All heavy lifting reuses the metric tree: global passes via
+//! [`kmeans::tree_lloyd`], local refinement via plain Lloyd over the
+//! owned subsets (which are small).
+
+use crate::algorithms::kmeans::{self, KmeansOpts};
+use crate::metrics::{dense_dot, Space};
+use crate::rng::Rng;
+use crate::tree::MetricTree;
+
+/// Result of an X-means run.
+#[derive(Clone, Debug)]
+pub struct XmeansResult {
+    pub centroids: Vec<Vec<f32>>,
+    pub k: usize,
+    pub distortion: f64,
+    pub bic: f64,
+    pub dists: u64,
+    /// (k, bic) trajectory across improvement rounds.
+    pub history: Vec<(usize, f64)>,
+}
+
+/// BIC of a spherical-Gaussian K-means model (Pelleg & Moore's formula).
+/// `distortion` = Σ min‖x−μ‖², `n` points, `k` centers, `d` dims.
+pub fn bic(distortion: f64, n: usize, k: usize, d: usize) -> f64 {
+    if n <= k {
+        return f64::NEG_INFINITY;
+    }
+    let n_f = n as f64;
+    let d_f = d as f64;
+    // MLE of the shared spherical variance.
+    let var = (distortion / (d_f * (n_f - k as f64))).max(1e-12);
+    // Log-likelihood of the clustered data.
+    let loglik = -0.5 * n_f * d_f * (2.0 * std::f64::consts::PI * var).ln()
+        - 0.5 * d_f * (n_f - k as f64)
+        + n_f * (1.0 / k as f64).ln(); // uniform cluster priors
+    let params = (k as f64) * (d_f + 1.0); // centers + shared variance per center
+    loglik - 0.5 * params * n_f.ln()
+}
+
+/// Local distortion of `points` against a set of centers.
+fn local_distortion(space: &Space, points: &[u32], centers: &[Vec<f32>]) -> f64 {
+    let c_sq: Vec<f64> = centers.iter().map(|c| dense_dot(c, c)).collect();
+    points
+        .iter()
+        .map(|&p| {
+            centers
+                .iter()
+                .enumerate()
+                .map(|(ci, c)| {
+                    space.count_bulk(1);
+                    space.dist_to_vec_uncounted(p as usize, c, c_sq[ci]).powi(2)
+                })
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum()
+}
+
+/// A few Lloyd iterations restricted to `points` with 2 seeds.
+fn local_2means(
+    space: &Space,
+    points: &[u32],
+    seed_a: Vec<f32>,
+    seed_b: Vec<f32>,
+    iters: usize,
+) -> (Vec<Vec<f32>>, f64) {
+    let d = space.dim();
+    let mut centers = vec![seed_a, seed_b];
+    let mut dist = f64::INFINITY;
+    for _ in 0..iters {
+        let c_sq: Vec<f64> = centers.iter().map(|c| dense_dot(c, c)).collect();
+        let mut sums = vec![vec![0f64; d]; 2];
+        let mut counts = [0u64; 2];
+        dist = 0.0;
+        for &p in points {
+            space.count_bulk(2);
+            let d0 = space.dist_to_vec_uncounted(p as usize, &centers[0], c_sq[0]);
+            let d1 = space.dist_to_vec_uncounted(p as usize, &centers[1], c_sq[1]);
+            let (win, dd) = if d0 <= d1 { (0, d0) } else { (1, d1) };
+            counts[win] += 1;
+            space.accumulate(p as usize, &mut sums[win]);
+            dist += dd * dd;
+        }
+        for c in 0..2 {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                for (j, v) in centers[c].iter_mut().enumerate() {
+                    *v = (sums[c][j] * inv) as f32;
+                }
+            }
+        }
+    }
+    (centers, dist)
+}
+
+/// Run X-means between `k_min` and `k_max` clusters.
+pub fn xmeans(
+    space: &Space,
+    tree: &MetricTree,
+    k_min: usize,
+    k_max: usize,
+    opts: &KmeansOpts,
+) -> XmeansResult {
+    assert!(k_min >= 1 && k_min <= k_max);
+    let before = space.dist_count();
+    let d = space.dim();
+    let mut rng = Rng::new(opts.seed ^ 0x9E3779B9);
+    let mut history = Vec::new();
+
+    // Improve-params at k_min.
+    let mut result = kmeans::tree_lloyd(space, tree, kmeans::Init::Anchors, k_min, 10, opts);
+    let mut centroids = result.centroids.clone();
+    history.push((centroids.len(), bic(result.distortion, space.n(), centroids.len(), d)));
+
+    loop {
+        if centroids.len() >= k_max {
+            break;
+        }
+        // Ownership of each point (needed for local split tests).
+        let labels = kmeans::assign_labels(space, &centroids);
+        space.count_bulk((space.n() * centroids.len()) as u64);
+        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); centroids.len()];
+        for (p, &l) in labels.iter().enumerate() {
+            owned[l as usize].push(p as u32);
+        }
+
+        // Improve-structure: try splitting each centroid.
+        let mut next_centroids: Vec<Vec<f32>> = Vec::new();
+        let mut any_split = false;
+        for (ci, center) in centroids.iter().enumerate() {
+            let pts = &owned[ci];
+            if pts.len() < 8 || centroids.len() + (next_centroids.len() - ci) >= k_max {
+                next_centroids.push(center.clone());
+                continue;
+            }
+            // Parent BIC on this region.
+            let parent_dist = local_distortion(space, pts, std::slice::from_ref(center));
+            let parent_bic = bic(parent_dist, pts.len(), 1, d);
+            // Child seeds: center ± a random direction scaled to the
+            // region's spread.
+            let spread = (parent_dist / pts.len() as f64).sqrt().max(1e-6);
+            let dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+            let sa: Vec<f32> = center
+                .iter()
+                .zip(&dir)
+                .map(|(&c, &v)| c + (v / norm * spread) as f32)
+                .collect();
+            let sb: Vec<f32> = center
+                .iter()
+                .zip(&dir)
+                .map(|(&c, &v)| c - (v / norm * spread) as f32)
+                .collect();
+            let (children, child_dist) = local_2means(space, pts, sa, sb, 6);
+            let child_bic = bic(child_dist, pts.len(), 2, d);
+            if child_bic > parent_bic {
+                next_centroids.push(children[0].clone());
+                next_centroids.push(children[1].clone());
+                any_split = true;
+            } else {
+                next_centroids.push(center.clone());
+            }
+        }
+        if !any_split {
+            break;
+        }
+        // Improve-params at the new k (global, tree-accelerated, exact).
+        let k = next_centroids.len();
+        result = kmeans::tree_lloyd(space, tree, kmeans::Init::Given(next_centroids), k, 8, opts);
+        centroids = result.centroids.clone();
+        history.push((k, bic(result.distortion, space.n(), k, d)));
+    }
+
+    let final_bic = bic(result.distortion, space.n(), centroids.len(), d);
+    XmeansResult {
+        k: centroids.len(),
+        centroids,
+        distortion: result.distortion,
+        bic: final_bic,
+        dists: space.dist_count() - before,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    fn blobs(k: usize, per: usize, sep: f64, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for c in 0..k {
+            let cx = (c % 4) as f64 * sep;
+            let cy = (c / 4) as f64 * sep;
+            for _ in 0..per {
+                rows.push(vec![(cx + rng.normal()) as f32, (cy + rng.normal()) as f32]);
+            }
+        }
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn recovers_true_k_on_separated_blobs() {
+        for true_k in [3usize, 5] {
+            let space = blobs(true_k, 120, 40.0, true_k as u64);
+            let tree =
+                middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+            let r = xmeans(&space, &tree, 1, 12, &KmeansOpts::default());
+            assert_eq!(
+                r.k, true_k,
+                "expected k={true_k}, got {} (history {:?})",
+                r.k, r.history
+            );
+        }
+    }
+
+    #[test]
+    fn does_not_oversplit_single_gaussian() {
+        let space = blobs(1, 400, 0.0, 9);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let r = xmeans(&space, &tree, 1, 8, &KmeansOpts::default());
+        assert!(r.k <= 2, "split a single gaussian into {}", r.k);
+    }
+
+    #[test]
+    fn respects_k_max() {
+        let space = blobs(8, 60, 50.0, 11);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let r = xmeans(&space, &tree, 1, 4, &KmeansOpts::default());
+        assert!(r.k <= 4);
+    }
+
+    #[test]
+    fn bic_prefers_right_model() {
+        // Distortion halves when k doubles appropriately → BIC should
+        // reward genuine structure but penalize overfitting.
+        let n = 1000;
+        let d = 2;
+        let good_fit = bic(500.0, n, 3, d);
+        let overfit = bic(480.0, n, 30, d); // tiny gain, huge k
+        assert!(good_fit > overfit);
+        let underfit = bic(50_000.0, n, 1, d);
+        assert!(good_fit > underfit);
+    }
+
+    #[test]
+    fn history_is_monotone_in_k() {
+        let space = blobs(4, 100, 40.0, 13);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let r = xmeans(&space, &tree, 1, 10, &KmeansOpts::default());
+        for w in r.history.windows(2) {
+            assert!(w[1].0 > w[0].0, "k must grow: {:?}", r.history);
+        }
+    }
+}

@@ -1,0 +1,383 @@
+//! The Anchors Hierarchy (paper §3): tree-free localization of points
+//! around k anchors using only the triangle inequality.
+//!
+//! Each anchor `a` owns the points closer to it than to any other anchor,
+//! kept **sorted in decreasing distance** to the anchor's pivot. When a
+//! new anchor `a_new` tries to steal from `a`, the scan walks the sorted
+//! list and stops at the first point with
+//!
+//! ```text
+//! D(x, a_pivot) < D(a_new_pivot, a_pivot) / 2          (paper eq. 6)
+//! ```
+//!
+//! — by the triangle inequality no later point in the list can possibly be
+//! closer to `a_new` than to `a`, so the rest of the list (and often the
+//! entire list, when the anchors are far apart) is skipped without a
+//! single distance computation. That cutoff is the whole trick, and it is
+//! what makes building √R anchors cost ≈ O(R·log k) distances instead of
+//! R·k on structured data.
+
+use crate::metrics::Space;
+use crate::rng::Rng;
+
+/// One anchor: a pivot datapoint plus the points it owns.
+#[derive(Clone, Debug)]
+pub struct Anchor {
+    /// Index of the pivot datapoint.
+    pub pivot: u32,
+    /// `(distance_to_pivot, point_id)`, sorted in DECREASING distance.
+    /// Always contains at least the pivot itself (at distance 0).
+    pub owned: Vec<(f64, u32)>,
+}
+
+impl Anchor {
+    /// Radius = distance to the farthest owned point (paper eq. 5).
+    #[inline]
+    pub fn radius(&self) -> f64 {
+        self.owned.first().map_or(0.0, |&(d, _)| d)
+    }
+
+    pub fn len(&self) -> usize {
+        self.owned.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.owned.is_empty()
+    }
+
+    /// Owned point ids (unsorted order of the distance-sorted list).
+    pub fn point_ids(&self) -> Vec<u32> {
+        self.owned.iter().map(|&(_, p)| p).collect()
+    }
+}
+
+/// A set of anchors over (a subset of) a [`Space`], with the inter-anchor
+/// distance matrix the paper's Figure 4 shows being cached explicitly.
+pub struct AnchorSet {
+    pub anchors: Vec<Anchor>,
+    /// Row-major `k × k` matrix of pivot-to-pivot distances.
+    pub interanchor: Vec<f64>,
+}
+
+impl AnchorSet {
+    pub fn k(&self) -> usize {
+        self.anchors.len()
+    }
+
+    #[inline]
+    pub fn interanchor_dist(&self, i: usize, j: usize) -> f64 {
+        self.interanchor[i * self.anchors.len() + j]
+    }
+
+    /// K-means seeds from the anchors: the centroid of each anchor's
+    /// owned points ("Anchors Start" in Table 4).
+    pub fn centroid_seeds(&self, space: &Space) -> Vec<Vec<f32>> {
+        self.anchors
+            .iter()
+            .map(|a| space.centroid(&a.point_ids()))
+            .collect()
+    }
+
+    /// K-means seeds from the anchor pivot datapoints themselves.
+    pub fn pivot_seeds(&self, space: &Space) -> Vec<Vec<f32>> {
+        self.anchors
+            .iter()
+            .map(|a| {
+                let mut row = vec![0f32; space.dim()];
+                space.fill_row(a.pivot as usize, &mut row);
+                row
+            })
+            .collect()
+    }
+}
+
+/// Build `k` anchors over the given subset of points (paper §3).
+///
+/// The first anchor pivot is chosen at random from `points`; every later
+/// pivot is the point farthest from its owner among the points of the
+/// current largest-radius anchor (i.e. near a vertex of the current
+/// Voronoi partition). May return fewer than `k` anchors if the points
+/// collapse onto fewer than `k` distinct locations.
+pub fn build_anchors(space: &Space, points: &[u32], k: usize, rng: &mut Rng) -> AnchorSet {
+    assert!(!points.is_empty(), "build_anchors on empty point set");
+    let k = k.clamp(1, points.len());
+
+    // --- first anchor owns everything ------------------------------------
+    let first_pivot = points[rng.below(points.len())];
+    let mut row = vec![0f32; space.dim()];
+    space.fill_row(first_pivot as usize, &mut row);
+    let row_sq = space.data.sqnorm(first_pivot as usize);
+    let mut owned: Vec<(f64, u32)> = points
+        .iter()
+        .map(|&p| (space.dist_to_vec(p as usize, &row, row_sq), p))
+        .collect();
+    sort_desc(&mut owned);
+    let mut anchors = vec![Anchor { pivot: first_pivot, owned }];
+    // Densified pivot rows, cached so the per-new-anchor distance pass
+    // doesn't re-densify every existing pivot (perf: O(k²·d) copies saved).
+    let mut pivot_rows: Vec<Vec<f32>> = vec![row];
+
+    // Inter-anchor distances, grown as anchors are added (k × k at the end).
+    let mut inter: Vec<Vec<f64>> = vec![vec![0.0]];
+
+    while anchors.len() < k {
+        // New pivot: farthest owned point of the largest-radius anchor.
+        let (maxrad_idx, maxrad) = anchors
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (i, a.radius()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        if maxrad <= 0.0 {
+            break; // all remaining points are duplicates of their pivots
+        }
+        let new_pivot = anchors[maxrad_idx].owned[0].1;
+        let mut pivot_row = vec![0f32; space.dim()];
+        space.fill_row(new_pivot as usize, &mut pivot_row);
+        let pivot_sq = space.data.sqnorm(new_pivot as usize);
+
+        // Distances from the new pivot to every existing pivot (cached —
+        // this is the matrix of Figure 4, and it feeds the cutoff rule).
+        let d_new: Vec<f64> = pivot_rows
+            .iter()
+            .map(|arow| space.dist_vv(&pivot_row, arow))
+            .collect();
+
+        // Steal pass over every existing anchor.
+        let mut stolen: Vec<(f64, u32)> = Vec::new();
+        for (ai, anchor) in anchors.iter_mut().enumerate() {
+            let threshold = d_new[ai] / 2.0;
+            if anchor.radius() < threshold {
+                // Whole list is inside the safe zone: nothing to check.
+                continue;
+            }
+            // Scan the sorted prefix that could possibly be stolen.
+            let list = &mut anchor.owned;
+            let mut keep_prefix: Vec<(f64, u32)> = Vec::new();
+            let mut cut = list.len();
+            for (pos, &(dist_a, x)) in list.iter().enumerate() {
+                if dist_a < threshold {
+                    cut = pos; // eq. (6): the rest is provably safe
+                    break;
+                }
+                let d = space.dist_to_vec(x as usize, &pivot_row, pivot_sq);
+                if d < dist_a || x == new_pivot {
+                    stolen.push((d, x));
+                } else {
+                    keep_prefix.push((dist_a, x));
+                }
+            }
+            if cut < list.len() || !stolen.is_empty() {
+                // Rebuild: scanned-but-kept prefix + untouched suffix.
+                // Both halves are already in decreasing order.
+                keep_prefix.extend_from_slice(&list[cut..]);
+                *list = keep_prefix;
+            }
+        }
+
+        sort_desc(&mut stolen);
+        anchors.push(Anchor { pivot: new_pivot, owned: stolen });
+        pivot_rows.push(pivot_row);
+
+        // Grow the inter-anchor matrix.
+        for (i, &d) in d_new.iter().enumerate() {
+            inter[i].push(d);
+        }
+        let mut last = d_new;
+        last.push(0.0);
+        inter.push(last);
+    }
+
+    let kk = anchors.len();
+    let mut interanchor = vec![0.0; kk * kk];
+    for i in 0..kk {
+        for j in 0..kk {
+            interanchor[i * kk + j] = inter[i][j];
+        }
+    }
+    AnchorSet { anchors, interanchor }
+}
+
+#[inline]
+fn sort_desc(v: &mut [(f64, u32)]) {
+    v.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(b.1.cmp(&a.1)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::metrics::Space;
+
+    /// Clustered 2-d data: `c` tight blobs of `per` points.
+    fn blobs(c: usize, per: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for ci in 0..c {
+            let cx = (ci % 4) as f64 * 100.0;
+            let cy = (ci / 4) as f64 * 100.0;
+            for _ in 0..per {
+                rows.push(vec![
+                    (cx + rng.normal()) as f32,
+                    (cy + rng.normal()) as f32,
+                ]);
+            }
+        }
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    fn all_points(space: &Space) -> Vec<u32> {
+        (0..space.n() as u32).collect()
+    }
+
+    #[test]
+    fn ownership_partitions_points() {
+        let space = blobs(4, 50, 1);
+        let pts = all_points(&space);
+        let set = build_anchors(&space, &pts, 8, &mut Rng::new(7));
+        let mut seen = vec![false; space.n()];
+        for a in &set.anchors {
+            for &(_, p) in &a.owned {
+                assert!(!seen[p as usize], "point {p} owned twice");
+                seen[p as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some point unowned");
+    }
+
+    #[test]
+    fn each_point_owned_by_nearest_anchor() {
+        // The defining invariant (paper eq. 4).
+        let space = blobs(3, 40, 2);
+        let pts = all_points(&space);
+        let set = build_anchors(&space, &pts, 6, &mut Rng::new(3));
+        let pivots: Vec<u32> = set.anchors.iter().map(|a| a.pivot).collect();
+        for (ai, a) in set.anchors.iter().enumerate() {
+            for &(_, p) in &a.owned {
+                let d_own = space.dist_uncounted(p as usize, a.pivot as usize);
+                for (bi, &bp) in pivots.iter().enumerate() {
+                    if bi == ai {
+                        continue;
+                    }
+                    let d_other = space.dist_uncounted(p as usize, bp as usize);
+                    assert!(
+                        d_own <= d_other + 1e-9,
+                        "point {p}: owner {ai} at {d_own} but anchor {bi} at {d_other}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn owned_lists_sorted_decreasing_and_radius_matches() {
+        let space = blobs(2, 60, 3);
+        let pts = all_points(&space);
+        let set = build_anchors(&space, &pts, 5, &mut Rng::new(11));
+        for a in &set.anchors {
+            for w in a.owned.windows(2) {
+                assert!(w[0].0 >= w[1].0, "owned list not sorted desc");
+            }
+            if let Some(&(d, p)) = a.owned.first() {
+                assert_eq!(a.radius(), d);
+                let real = space.dist_uncounted(p as usize, a.pivot as usize);
+                assert!((real - d).abs() < 1e-9, "cached distance wrong");
+            }
+        }
+    }
+
+    #[test]
+    fn distances_in_owned_lists_are_correct() {
+        let space = blobs(2, 30, 4);
+        let pts = all_points(&space);
+        let set = build_anchors(&space, &pts, 4, &mut Rng::new(13));
+        for a in &set.anchors {
+            for &(d, p) in &a.owned {
+                let real = space.dist_uncounted(p as usize, a.pivot as usize);
+                assert!((real - d).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn interanchor_matrix_is_symmetric_and_correct() {
+        let space = blobs(3, 30, 5);
+        let pts = all_points(&space);
+        let set = build_anchors(&space, &pts, 6, &mut Rng::new(17));
+        let k = set.k();
+        for i in 0..k {
+            assert_eq!(set.interanchor_dist(i, i), 0.0);
+            for j in 0..k {
+                assert!((set.interanchor_dist(i, j) - set.interanchor_dist(j, i)).abs() < 1e-9);
+                let real = space.dist_uncounted(
+                    set.anchors[i].pivot as usize,
+                    set.anchors[j].pivot as usize,
+                );
+                assert!((set.interanchor_dist(i, j) - real).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cutoff_saves_distances_on_clustered_data() {
+        // The headline efficiency claim: building k anchors on well-
+        // clustered data costs far fewer than R*k distances.
+        let space = blobs(8, 200, 6);
+        let pts = all_points(&space);
+        let k = 40;
+        space.reset_count();
+        let set = build_anchors(&space, &pts, k, &mut Rng::new(19));
+        assert_eq!(set.k(), k);
+        let used = space.dist_count();
+        let brute = (space.n() * k) as u64;
+        assert!(
+            used < brute / 3,
+            "anchors used {used} distances, brute force would be {brute}"
+        );
+    }
+
+    #[test]
+    fn handles_duplicates_gracefully() {
+        let rows: Vec<Vec<f32>> = (0..20).map(|_| vec![1.0, 2.0]).collect();
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let pts = all_points(&space);
+        let set = build_anchors(&space, &pts, 5, &mut Rng::new(23));
+        // All duplicates: only one anchor can form.
+        assert_eq!(set.k(), 1);
+        assert_eq!(set.anchors[0].len(), 20);
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let space = blobs(1, 5, 7);
+        let pts = all_points(&space);
+        let set = build_anchors(&space, &pts, 50, &mut Rng::new(29));
+        assert!(set.k() <= 5);
+    }
+
+    #[test]
+    fn works_on_subset_of_points() {
+        let space = blobs(4, 50, 8);
+        let subset: Vec<u32> = (0..space.n() as u32).filter(|p| p % 3 == 0).collect();
+        let set = build_anchors(&space, &subset, 4, &mut Rng::new(31));
+        let total: usize = set.anchors.iter().map(|a| a.len()).sum();
+        assert_eq!(total, subset.len());
+        for a in &set.anchors {
+            for &(_, p) in &a.owned {
+                assert!(subset.contains(&p));
+            }
+        }
+    }
+
+    #[test]
+    fn anchor_seeds_have_right_shape() {
+        let space = blobs(3, 40, 9);
+        let pts = all_points(&space);
+        let set = build_anchors(&space, &pts, 3, &mut Rng::new(37));
+        let seeds = set.centroid_seeds(&space);
+        assert_eq!(seeds.len(), 3);
+        assert!(seeds.iter().all(|s| s.len() == 2));
+        let pivots = set.pivot_seeds(&space);
+        assert_eq!(pivots.len(), 3);
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal wall-clock benchmarking harness (offline replacement for
+//! criterion): warmup, repeated timed runs, and summary statistics.
+
+use std::time::Instant;
+
+/// Statistics over the timed iterations, in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    /// criterion-ish one-liner.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} time: [{} {} {}]  ({} iters)",
+            self.name,
+            fmt_time(self.min),
+            fmt_time(self.mean),
+            fmt_time(self.max),
+            self.iters
+        )
+    }
+}
+
+/// Human time units.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.2} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+/// A tiny bench runner. `warmup` un-timed runs, then `iters` timed runs.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, iters: 5 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters: iters.max(1) }
+    }
+
+    /// Time `f`, which receives the iteration index. The closure's result
+    /// is returned from the last run so the optimizer can't delete work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut(usize) -> T) -> (BenchStats, T) {
+        for w in 0..self.warmup {
+            std::hint::black_box(f(w));
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        let mut last = None;
+        for i in 0..self.iters {
+            let t0 = Instant::now();
+            let out = std::hint::black_box(f(i));
+            times.push(t0.elapsed().as_secs_f64());
+            last = Some(out);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times
+            .iter()
+            .map(|t| (t - mean) * (t - mean))
+            .sum::<f64>()
+            / times.len() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: self.iters,
+            mean,
+            std: var.sqrt(),
+            min: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: times.iter().cloned().fold(0.0, f64::max),
+        };
+        (stats, last.unwrap())
+    }
+
+    /// Run + print the report line; returns the closure result.
+    pub fn bench<T>(&self, name: &str, f: impl FnMut(usize) -> T) -> T {
+        let (stats, out) = self.run(name, f);
+        println!("{}", stats.report());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_expected_iterations() {
+        let b = Bencher::new(2, 4);
+        let count = std::cell::Cell::new(0usize);
+        let (stats, _) = b.run("counting", |_| count.set(count.get() + 1));
+        assert_eq!(count.get(), 6); // 2 warmup + 4 timed
+        assert_eq!(stats.iters, 4);
+        assert!(stats.mean >= 0.0);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max + 1e-12);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(3.0e-6).contains("µs"));
+        assert!(fmt_time(1.5e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains("s"));
+    }
+
+    #[test]
+    fn returns_result() {
+        let b = Bencher::new(0, 3);
+        let (_, out) = b.run("id", |i| i * 2);
+        assert_eq!(out, 4);
+    }
+}

@@ -1,0 +1,52 @@
+//! Benchmark support: a timing harness (criterion is unavailable offline)
+//! and the generators that reproduce every table and figure of the paper.
+
+pub mod harness;
+pub mod tables;
+
+/// Paper-style scientific notation (e.g. `4.08e+07`).
+pub fn fmt_sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let exp = x.abs().log10().floor() as i32;
+    let mantissa = x / 10f64.powi(exp);
+    // Guard against 9.999 rounding up to 10.00.
+    let (mantissa, exp) = if mantissa.abs() >= 9.995 {
+        (mantissa / 10.0, exp + 1)
+    } else {
+        (mantissa, exp)
+    };
+    format!("{mantissa:.2}e{}{:02}", if exp < 0 { "-" } else { "+" }, exp.abs())
+}
+
+/// Fixed-width speedup formatting (matches the paper's bold column).
+pub fn fmt_speedup(x: f64) -> String {
+    if x >= 1000.0 {
+        fmt_sci(x)
+    } else if x >= 10.0 {
+        format!("{x:.0}")
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(fmt_sci(4.08e7), "4.08e+07");
+        assert_eq!(fmt_sci(0.0), "0");
+        assert_eq!(fmt_sci(1474.0), "1.47e+03");
+    }
+
+    #[test]
+    fn speedup_format() {
+        assert_eq!(fmt_speedup(49.4), "49");
+        assert_eq!(fmt_speedup(1474.0), "1.47e+03");
+        assert_eq!(fmt_speedup(0.6), "0.6");
+        assert_eq!(fmt_speedup(2.5), "2.5");
+    }
+}

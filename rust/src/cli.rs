@@ -1,0 +1,168 @@
+//! Hand-rolled CLI argument parsing (offline environment — no clap).
+//!
+//! Grammar: `anchors-hierarchy <command> [--flag value]...`. Flags are
+//! typed at the call site; unknown flags are an error listing the valid
+//! set.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    used: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut it = args.into_iter();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(format!("expected --flag, found {arg:?}"));
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else {
+                let value = it
+                    .next()
+                    .ok_or_else(|| format!("flag --{name} expects a value"))?;
+                flags.insert(name.to_string(), value);
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            used: std::cell::RefCell::new(std::collections::BTreeSet::new()),
+        })
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn raw(&self, name: &str) -> Option<&str> {
+        self.used.borrow_mut().insert(name.to_string());
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// String flag with default.
+    pub fn str_flag(&self, name: &str, default: &str) -> String {
+        self.raw(name).unwrap_or(default).to_string()
+    }
+
+    /// Optional string flag.
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.raw(name).map(str::to_string)
+    }
+
+    /// Typed flag with default.
+    pub fn flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.raw(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name}: cannot parse {v:?}: {e}")),
+        }
+    }
+
+    /// Boolean flag (`--x true|false|1|0`).
+    pub fn bool_flag(&self, name: &str, default: bool) -> Result<bool, String> {
+        match self.raw(name) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("--{name}: expected bool, found {v:?}")),
+        }
+    }
+
+    /// Call after reading all flags: errors on unknown flags (typo guard).
+    pub fn finish(&self) -> Result<(), String> {
+        let used = self.used.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !used.contains(*k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown flag(s) {:?}; valid flags for this command: {:?}",
+                unknown,
+                used.iter().collect::<Vec<_>>()
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("table2 --scale 0.1 --rmin 30");
+        assert_eq!(a.command, "table2");
+        assert_eq!(a.flag("scale", 1.0f64).unwrap(), 0.1);
+        assert_eq!(a.flag("rmin", 5usize).unwrap(), 30);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("kmeans --k=7");
+        assert_eq!(a.flag("k", 0usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("kmeans");
+        assert_eq!(a.flag("k", 3usize).unwrap(), 3);
+        assert_eq!(a.str_flag("dataset", "cell"), "cell");
+        assert!(a.bool_flag("tree", true).unwrap());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(vec!["x".into(), "--k".into()]).is_err());
+    }
+
+    #[test]
+    fn non_flag_errors() {
+        assert!(Args::parse(vec!["x".into(), "k".into()]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("kmeans --k 3 --typo 1");
+        let _ = a.flag("k", 0usize);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_flag() {
+        let a = parse("kmeans --k abc");
+        let err = a.flag("k", 0usize).unwrap_err();
+        assert!(err.contains("--k"), "{err}");
+    }
+
+    #[test]
+    fn bool_parsing() {
+        let a = parse("x --t true --f 0");
+        assert!(a.bool_flag("t", false).unwrap());
+        assert!(!a.bool_flag("f", true).unwrap());
+        let a = parse("x --b maybe");
+        assert!(a.bool_flag("b", false).is_err());
+    }
+}

@@ -1,0 +1,546 @@
+//! The batch-analytics coordinator: the service layer that makes the
+//! paper's algorithms consumable as *jobs* over named datasets.
+//!
+//! Clients submit [`JobSpec`]s (cluster / detect anomalies / find
+//! correlated pairs / span a dependency tree over a dataset, naive or
+//! tree-accelerated). A fixed worker pool executes them. Design points:
+//!
+//! * **Dataset cache** — generating a Table-1 dataset and building its
+//!   metric tree is expensive; both are cached and shared (Arc) across
+//!   jobs keyed by (dataset, rmin).
+//! * **Per-dataset serialization** — a dataset's distance counter is
+//!   shared state; the coordinator runs at most one job per dataset at a
+//!   time so each job's distance accounting is exact. Different datasets
+//!   run fully in parallel.
+//! * **Backpressure** — the queue is bounded; `submit` fails fast with
+//!   [`SubmitError::QueueFull`] instead of buffering unboundedly.
+//! * **No lost or duplicated jobs** — every accepted job reaches exactly
+//!   one terminal state ([`JobState::Done`] / [`JobState::Failed`]);
+//!   verified by property tests.
+
+pub mod server;
+
+use crate::algorithms::{allpairs, anomaly, kmeans, mst};
+use crate::dataset::DatasetSpec;
+use crate::metrics::Space;
+use crate::runtime::BatchDistanceEngine;
+use crate::tree::middle_out::{self, MiddleOutConfig};
+use crate::tree::MetricTree;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// What to run.
+#[derive(Clone, Debug)]
+pub enum JobKind {
+    Kmeans { k: usize, iters: usize, anchors_init: bool },
+    Anomaly { threshold: u64, target_frac: f64 },
+    AllPairs { tau: f64 },
+    Mst,
+}
+
+/// A complete job description.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub dataset: DatasetSpec,
+    pub kind: JobKind,
+    /// Tree-accelerated (true) or naive baseline (false).
+    pub use_tree: bool,
+    /// Leaf threshold for the cached tree.
+    pub rmin: usize,
+}
+
+/// Job identifier.
+pub type JobId = u64;
+
+/// Algorithm-specific result payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobOutput {
+    Kmeans { distortion: f64, iterations: usize },
+    Anomaly { n_anomalies: usize, radius: f64 },
+    AllPairs { n_pairs: usize },
+    Mst { total_weight: f64, n_edges: usize },
+}
+
+/// Terminal result of a job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: JobId,
+    pub output: JobOutput,
+    /// Distance computations attributed to this job (tree build included
+    /// on first use of a dataset/rmin pair).
+    pub dists: u64,
+    pub wall_ms: f64,
+}
+
+/// Lifecycle of a job.
+#[derive(Clone, Debug)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done(JobResult),
+    Failed(String),
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done(_) | JobState::Failed(_))
+    }
+}
+
+/// Submission failures.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    ShuttingDown,
+}
+
+/// Aggregate counters (monotonic).
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub total_dists: AtomicU64,
+}
+
+/// Point-in-time metric values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub total_dists: u64,
+}
+
+struct CachedDataset {
+    space: Arc<Space>,
+    /// Trees per rmin (built lazily under the dataset lock).
+    trees: Mutex<HashMap<usize, Arc<MetricTree>>>,
+    /// Serializes jobs touching this dataset (exact distance accounting).
+    run_lock: Mutex<()>,
+}
+
+struct Inner {
+    queue: Mutex<VecDeque<(JobId, JobSpec)>>,
+    queue_cv: Condvar,
+    capacity: usize,
+    states: Mutex<HashMap<JobId, JobState>>,
+    state_cv: Condvar,
+    datasets: Mutex<HashMap<String, Arc<CachedDataset>>>,
+    metrics: Metrics,
+    shutdown: AtomicBool,
+    engine: Option<Arc<BatchDistanceEngine>>,
+    next_id: AtomicU64,
+}
+
+/// The coordinator service.
+pub struct Coordinator {
+    inner: Arc<Inner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start `n_workers` workers with a queue bound of `capacity`.
+    pub fn new(n_workers: usize, capacity: usize) -> Coordinator {
+        Self::with_engine(n_workers, capacity, None)
+    }
+
+    /// Start with an optional XLA batch engine shared by all jobs.
+    pub fn with_engine(
+        n_workers: usize,
+        capacity: usize,
+        engine: Option<Arc<BatchDistanceEngine>>,
+    ) -> Coordinator {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            capacity: capacity.max(1),
+            states: Mutex::new(HashMap::new()),
+            state_cv: Condvar::new(),
+            datasets: Mutex::new(HashMap::new()),
+            metrics: Metrics::default(),
+            shutdown: AtomicBool::new(false),
+            engine,
+            next_id: AtomicU64::new(1),
+        });
+        let workers = (0..n_workers.max(1))
+            .map(|wid| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("coord-worker-{wid}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Coordinator { inner, workers }
+    }
+
+    /// Submit a job; fails fast when the queue is at capacity.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
+        if self.inner.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let mut queue = self.inner.queue.lock().unwrap();
+        if queue.len() >= self.inner.capacity {
+            self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::QueueFull);
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        queue.push_back((id, spec));
+        self.inner
+            .states
+            .lock()
+            .unwrap()
+            .insert(id, JobState::Queued);
+        self.inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.inner.queue_cv.notify_one();
+        Ok(id)
+    }
+
+    /// Snapshot a job's state.
+    pub fn state(&self, id: JobId) -> Option<JobState> {
+        self.inner.states.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until the job reaches a terminal state.
+    pub fn wait(&self, id: JobId) -> JobState {
+        let mut states = self.inner.states.lock().unwrap();
+        loop {
+            match states.get(&id) {
+                Some(s) if s.is_terminal() => return s.clone(),
+                Some(_) => {
+                    states = self.inner.state_cv.wait(states).unwrap();
+                }
+                None => panic!("unknown job id {id}"),
+            }
+        }
+    }
+
+    /// Current queue depth.
+    pub fn queue_len(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let m = &self.inner.metrics;
+        MetricsSnapshot {
+            submitted: m.submitted.load(Ordering::Relaxed),
+            rejected: m.rejected.load(Ordering::Relaxed),
+            completed: m.completed.load(Ordering::Relaxed),
+            failed: m.failed.load(Ordering::Relaxed),
+            total_dists: m.total_dists.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drain the queue, stop accepting work, and join the workers.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let job = {
+            let mut queue = inner.queue.lock().unwrap();
+            loop {
+                if let Some(job) = queue.pop_front() {
+                    break Some(job);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                queue = inner.queue_cv.wait(queue).unwrap();
+            }
+        };
+        let Some((id, spec)) = job else { return };
+        set_state(&inner, id, JobState::Running);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(&inner, id, &spec)
+        }));
+        match outcome {
+            Ok(Ok(result)) => {
+                inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                inner
+                    .metrics
+                    .total_dists
+                    .fetch_add(result.dists, Ordering::Relaxed);
+                set_state(&inner, id, JobState::Done(result));
+            }
+            Ok(Err(msg)) => {
+                inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                set_state(&inner, id, JobState::Failed(msg));
+            }
+            Err(panic) => {
+                inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "job panicked".into());
+                set_state(&inner, id, JobState::Failed(msg));
+            }
+        }
+    }
+}
+
+fn set_state(inner: &Inner, id: JobId, state: JobState) {
+    inner.states.lock().unwrap().insert(id, state);
+    inner.state_cv.notify_all();
+}
+
+fn dataset_key(spec: &DatasetSpec) -> String {
+    format!("{}@{}@{}", spec.kind.name(), spec.scale, spec.seed)
+}
+
+fn get_dataset(inner: &Inner, spec: &DatasetSpec) -> Arc<CachedDataset> {
+    let key = dataset_key(spec);
+    // Fast path.
+    if let Some(ds) = inner.datasets.lock().unwrap().get(&key) {
+        return ds.clone();
+    }
+    // Build outside the map lock (generation can be slow), then insert —
+    // first writer wins so concurrent builders converge on one copy.
+    let built = Arc::new(CachedDataset {
+        space: Arc::new(spec.build()),
+        trees: Mutex::new(HashMap::new()),
+        run_lock: Mutex::new(()),
+    });
+    let mut map = inner.datasets.lock().unwrap();
+    map.entry(key).or_insert(built).clone()
+}
+
+fn get_tree(ds: &CachedDataset, rmin: usize, seed: u64) -> Arc<MetricTree> {
+    let mut trees = ds.trees.lock().unwrap();
+    if let Some(t) = trees.get(&rmin) {
+        return t.clone();
+    }
+    let cfg = MiddleOutConfig { rmin, seed, exact_radii: false };
+    let tree = Arc::new(middle_out::build(&ds.space, &cfg));
+    trees.insert(rmin, tree.clone());
+    tree
+}
+
+fn run_job(inner: &Inner, _id: JobId, spec: &JobSpec) -> Result<JobResult, String> {
+    let ds = get_dataset(inner, &spec.dataset);
+    // Serialize jobs on this dataset: exact per-job distance accounting.
+    let _guard = ds.run_lock.lock().unwrap();
+    let space = &*ds.space;
+    let start = Instant::now();
+    let before = space.dist_count();
+
+    let output = match &spec.kind {
+        JobKind::Kmeans { k, iters, anchors_init } => {
+            let init = if *anchors_init {
+                kmeans::Init::Anchors
+            } else {
+                kmeans::Init::Random
+            };
+            let opts = kmeans::KmeansOpts {
+                engine: inner.engine.clone(),
+                ..Default::default()
+            };
+            let r = if spec.use_tree {
+                let tree = get_tree(&ds, spec.rmin, spec.dataset.seed);
+                kmeans::tree_lloyd(space, &tree, init, *k, *iters, &opts)
+            } else {
+                kmeans::naive_lloyd(space, init, *k, *iters, &opts)
+            };
+            JobOutput::Kmeans { distortion: r.distortion, iterations: r.iterations }
+        }
+        JobKind::Anomaly { threshold, target_frac } => {
+            let radius = anomaly::calibrate_radius(space, *threshold, *target_frac, 50, 7);
+            let params = anomaly::AnomalyParams { radius, threshold: *threshold };
+            let sweep = if spec.use_tree {
+                let tree = get_tree(&ds, spec.rmin, spec.dataset.seed);
+                anomaly::tree_sweep(space, &tree, &params)
+            } else {
+                anomaly::naive_sweep(space, &params)
+            };
+            JobOutput::Anomaly { n_anomalies: sweep.n_anomalies, radius }
+        }
+        JobKind::AllPairs { tau } => {
+            let r = if spec.use_tree {
+                let tree = get_tree(&ds, spec.rmin, spec.dataset.seed);
+                allpairs::tree_close_pairs(space, &tree, *tau)
+            } else {
+                allpairs::naive_close_pairs(space, *tau)
+            };
+            JobOutput::AllPairs { n_pairs: r.pairs.len() }
+        }
+        JobKind::Mst => {
+            let edges = if spec.use_tree {
+                let tree = get_tree(&ds, spec.rmin, spec.dataset.seed);
+                mst::tree_mst(space, &tree)
+            } else {
+                mst::naive_mst(space)
+            };
+            JobOutput::Mst {
+                total_weight: mst::total_weight(&edges),
+                n_edges: edges.len(),
+            }
+        }
+    };
+
+    Ok(JobResult {
+        id: _id,
+        output,
+        dists: space.dist_count() - before,
+        wall_ms: start.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetKind;
+
+    fn tiny(kind: DatasetKind) -> DatasetSpec {
+        DatasetSpec::scaled(kind, 0.004) // a few hundred rows
+    }
+
+    fn km(k: usize, use_tree: bool) -> JobSpec {
+        JobSpec {
+            dataset: tiny(DatasetKind::Squiggles),
+            kind: JobKind::Kmeans { k, iters: 4, anchors_init: false },
+            use_tree,
+            rmin: 16,
+        }
+    }
+
+    #[test]
+    fn runs_one_job() {
+        let coord = Coordinator::new(2, 16);
+        let id = coord.submit(km(3, true)).unwrap();
+        match coord.wait(id) {
+            JobState::Done(r) => {
+                assert!(r.dists > 0);
+                assert!(matches!(r.output, JobOutput::Kmeans { .. }));
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+    }
+
+    #[test]
+    fn naive_and_tree_jobs_agree() {
+        let coord = Coordinator::new(2, 16);
+        let a = coord.submit(km(4, false)).unwrap();
+        let b = coord.submit(km(4, true)).unwrap();
+        let (ra, rb) = (coord.wait(a), coord.wait(b));
+        let (JobState::Done(ra), JobState::Done(rb)) = (ra, rb) else {
+            panic!("jobs failed");
+        };
+        let (JobOutput::Kmeans { distortion: da, .. }, JobOutput::Kmeans { distortion: db, .. }) =
+            (&ra.output, &rb.output)
+        else {
+            panic!("wrong outputs");
+        };
+        assert!((da - db).abs() < 1e-6 * (1.0 + da), "{da} vs {db}");
+        // And the tree job used fewer distances (cache shares the build).
+        assert!(rb.dists < ra.dists * 2, "tree {} naive {}", rb.dists, ra.dists);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // 1 worker, capacity 2, and jobs slow enough to pile up.
+        let coord = Coordinator::new(1, 2);
+        let mut accepted = Vec::new();
+        let mut rejected = 0;
+        for _ in 0..12 {
+            match coord.submit(km(3, true)) {
+                Ok(id) => accepted.push(id),
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+        assert!(rejected > 0, "queue never filled");
+        for id in accepted {
+            assert!(coord.wait(id).is_terminal());
+        }
+        let m = coord.metrics();
+        assert_eq!(m.rejected, rejected);
+        assert_eq!(m.completed + m.failed, m.submitted);
+    }
+
+    #[test]
+    fn all_kinds_execute() {
+        let coord = Coordinator::new(3, 32);
+        let specs = vec![
+            JobSpec {
+                dataset: tiny(DatasetKind::Squiggles),
+                kind: JobKind::Anomaly { threshold: 5, target_frac: 0.1 },
+                use_tree: true,
+                rmin: 16,
+            },
+            JobSpec {
+                dataset: tiny(DatasetKind::Squiggles),
+                kind: JobKind::AllPairs { tau: 0.5 },
+                use_tree: true,
+                rmin: 16,
+            },
+            JobSpec {
+                dataset: tiny(DatasetKind::Voronoi),
+                kind: JobKind::Mst,
+                use_tree: true,
+                rmin: 16,
+            },
+            km(5, true),
+        ];
+        let ids: Vec<JobId> = specs
+            .into_iter()
+            .map(|s| coord.submit(s).unwrap())
+            .collect();
+        for id in ids {
+            match coord.wait(id) {
+                JobState::Done(_) => {}
+                other => panic!("job {id} -> {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn shutdown_reports_metrics() {
+        let coord = Coordinator::new(2, 8);
+        let id = coord.submit(km(3, true)).unwrap();
+        coord.wait(id);
+        let m = coord.shutdown();
+        assert_eq!(m.submitted, 1);
+        assert_eq!(m.completed, 1);
+        assert!(m.total_dists > 0);
+    }
+
+    #[test]
+    fn dataset_cache_shared_across_jobs() {
+        let coord = Coordinator::new(2, 8);
+        // Two tree jobs on the same dataset: the second must not pay the
+        // tree build again, so its distance count is much lower.
+        let a = coord.submit(km(3, true)).unwrap();
+        let JobState::Done(ra) = coord.wait(a) else { panic!() };
+        let b = coord.submit(km(3, true)).unwrap();
+        let JobState::Done(rb) = coord.wait(b) else { panic!() };
+        assert!(
+            rb.dists <= ra.dists,
+            "second job re-paid the build: {} vs {}",
+            rb.dists,
+            ra.dists
+        );
+    }
+}

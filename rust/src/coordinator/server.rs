@@ -1,0 +1,409 @@
+//! Line-protocol TCP front-end for the [`Coordinator`] — the deployable
+//! "launcher" surface of the system (vLLM-router-style: a thin, fast
+//! network layer over the batch scheduler).
+//!
+//! Protocol: newline-delimited JSON over TCP.
+//!
+//! ```text
+//! → {"cmd":"submit","dataset":"cell","scale":0.01,"op":"kmeans","k":10,
+//!    "iters":5,"tree":true}
+//! ← {"ok":true,"id":3}
+//! → {"cmd":"wait","id":3}
+//! ← {"ok":true,"id":3,"state":"done","dists":12345,
+//!    "output":{"kind":"kmeans","distortion":1.23e4,"iterations":5}}
+//! → {"cmd":"metrics"}            → {"cmd":"ping"}
+//! ```
+//!
+//! One thread per connection (std-only environment; connections are few
+//! and long-lived — the heavy concurrency lives in the coordinator's
+//! worker pool, not here).
+
+use super::{Coordinator, JobKind, JobOutput, JobSpec, JobState};
+use crate::dataset::{DatasetKind, DatasetSpec};
+use crate::json::{self, Value};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running server handle; dropping it stops accepting new connections.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind on `addr` ("127.0.0.1:0" for an ephemeral test port) and serve
+    /// `coordinator` until the handle is dropped.
+    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("coord-server-accept".into())
+            .spawn(move || {
+                // Nonblocking accept loop so `stop` is honored promptly.
+                listener.set_nonblocking(true).expect("nonblocking");
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = Arc::clone(&coordinator);
+                            std::thread::spawn(move || {
+                                let _ = handle_connection(stream, coord);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match handle_request(&line, &coord) {
+            Ok(v) => v,
+            Err(msg) => err_obj(&msg),
+        };
+        writer.write_all(json::write(&response).as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn err_obj(msg: &str) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("ok".into(), Value::Bool(false));
+    m.insert("error".into(), Value::Str(msg.into()));
+    Value::Obj(m)
+}
+
+fn ok_obj(fields: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("ok".into(), Value::Bool(true));
+    for (k, v) in fields {
+        m.insert(k.into(), v);
+    }
+    Value::Obj(m)
+}
+
+fn handle_request(line: &str, coord: &Coordinator) -> Result<Value, String> {
+    let req = json::parse(line).map_err(|e| format!("bad JSON: {e}"))?;
+    let cmd = req
+        .get("cmd")
+        .and_then(Value::as_str)
+        .ok_or("missing \"cmd\"")?;
+    match cmd {
+        "ping" => Ok(ok_obj(vec![("pong", Value::Bool(true))])),
+        "metrics" => {
+            let m = coord.metrics();
+            Ok(ok_obj(vec![
+                ("submitted", Value::Num(m.submitted as f64)),
+                ("completed", Value::Num(m.completed as f64)),
+                ("failed", Value::Num(m.failed as f64)),
+                ("rejected", Value::Num(m.rejected as f64)),
+                ("total_dists", Value::Num(m.total_dists as f64)),
+                ("queue_len", Value::Num(coord.queue_len() as f64)),
+            ]))
+        }
+        "submit" => {
+            let spec = parse_spec(&req)?;
+            match coord.submit(spec) {
+                Ok(id) => Ok(ok_obj(vec![("id", Value::Num(id as f64))])),
+                Err(e) => Err(format!("{e:?}")),
+            }
+        }
+        "state" | "wait" => {
+            let id = req
+                .get("id")
+                .and_then(Value::as_f64)
+                .ok_or("missing \"id\"")? as u64;
+            let state = if cmd == "wait" {
+                coord.wait(id)
+            } else {
+                coord.state(id).ok_or(format!("unknown job {id}"))?
+            };
+            Ok(state_obj(id, &state))
+        }
+        other => Err(format!("unknown cmd {other:?}")),
+    }
+}
+
+fn parse_spec(req: &Value) -> Result<JobSpec, String> {
+    let dataset_name = req
+        .get("dataset")
+        .and_then(Value::as_str)
+        .ok_or("missing \"dataset\"")?;
+    let kind = DatasetKind::parse(dataset_name)
+        .ok_or(format!("unknown dataset {dataset_name:?}"))?;
+    let scale = req.get("scale").and_then(Value::as_f64).unwrap_or(0.01);
+    let seed = req.get("seed").and_then(Value::as_f64).unwrap_or(20130.0) as u64;
+    let dataset = DatasetSpec { kind, scale, seed };
+    let op = req.get("op").and_then(Value::as_str).ok_or("missing \"op\"")?;
+    let num =
+        |key: &str, default: f64| req.get(key).and_then(Value::as_f64).unwrap_or(default);
+    let job = match op {
+        "kmeans" => JobKind::Kmeans {
+            k: num("k", 10.0) as usize,
+            iters: num("iters", 5.0) as usize,
+            anchors_init: matches!(req.get("init").and_then(Value::as_str), Some("anchors")),
+        },
+        "anomaly" => JobKind::Anomaly {
+            threshold: num("threshold", 10.0) as u64,
+            target_frac: num("frac", 0.1),
+        },
+        "allpairs" => JobKind::AllPairs { tau: num("tau", 1.0) },
+        "mst" => JobKind::Mst,
+        other => return Err(format!("unknown op {other:?}")),
+    };
+    let use_tree = !matches!(req.get("tree"), Some(Value::Bool(false)));
+    Ok(JobSpec {
+        dataset,
+        kind: job,
+        use_tree,
+        rmin: num("rmin", 30.0) as usize,
+    })
+}
+
+fn state_obj(id: u64, state: &JobState) -> Value {
+    let mut fields: Vec<(&str, Value)> = vec![("id", Value::Num(id as f64))];
+    match state {
+        JobState::Queued => fields.push(("state", Value::Str("queued".into()))),
+        JobState::Running => fields.push(("state", Value::Str("running".into()))),
+        JobState::Failed(e) => {
+            fields.push(("state", Value::Str("failed".into())));
+            fields.push(("error", Value::Str(e.clone())));
+        }
+        JobState::Done(r) => {
+            fields.push(("state", Value::Str("done".into())));
+            fields.push(("dists", Value::Num(r.dists as f64)));
+            fields.push(("wall_ms", Value::Num(r.wall_ms)));
+            let mut out = BTreeMap::new();
+            match &r.output {
+                JobOutput::Kmeans { distortion, iterations } => {
+                    out.insert("kind".into(), Value::Str("kmeans".into()));
+                    out.insert("distortion".into(), Value::Num(*distortion));
+                    out.insert("iterations".into(), Value::Num(*iterations as f64));
+                }
+                JobOutput::Anomaly { n_anomalies, radius } => {
+                    out.insert("kind".into(), Value::Str("anomaly".into()));
+                    out.insert("n_anomalies".into(), Value::Num(*n_anomalies as f64));
+                    out.insert("radius".into(), Value::Num(*radius));
+                }
+                JobOutput::AllPairs { n_pairs } => {
+                    out.insert("kind".into(), Value::Str("allpairs".into()));
+                    out.insert("n_pairs".into(), Value::Num(*n_pairs as f64));
+                }
+                JobOutput::Mst { total_weight, n_edges } => {
+                    out.insert("kind".into(), Value::Str("mst".into()));
+                    out.insert("total_weight".into(), Value::Num(*total_weight));
+                    out.insert("n_edges".into(), Value::Num(*n_edges as f64));
+                }
+            }
+            fields.push(("output", Value::Obj(out)));
+        }
+    }
+    ok_obj(fields)
+}
+
+/// Minimal blocking client (used by tests and the CLI's `client` mode).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one JSON request line and read one JSON response line.
+    pub fn call(&mut self, request: &Value) -> Result<Value, String> {
+        self.writer
+            .write_all(json::write(request).as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .map_err(|e| format!("send: {e}"))?;
+        let mut line = String::new();
+        self.reader
+            .read_line(&mut line)
+            .map_err(|e| format!("recv: {e}"))?;
+        json::parse(&line).map_err(|e| format!("bad response: {e}"))
+    }
+
+    /// Convenience: build a request object from key/value pairs.
+    pub fn request(fields: Vec<(&str, Value)>) -> Value {
+        let mut m = BTreeMap::new();
+        for (k, v) in fields {
+            m.insert(k.to_string(), v);
+        }
+        Value::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start() -> (Server, Arc<Coordinator>) {
+        let coord = Arc::new(Coordinator::new(2, 16));
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        (server, coord)
+    }
+
+    #[test]
+    fn ping_pong() {
+        let (server, _coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let resp = client
+            .call(&Client::request(vec![("cmd", Value::Str("ping".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(resp.get("pong"), Some(&Value::Bool(true)));
+    }
+
+    #[test]
+    fn submit_and_wait_roundtrip() {
+        let (server, _coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let resp = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("submit".into())),
+                ("dataset", Value::Str("squiggles".into())),
+                ("scale", Value::Num(0.003)),
+                ("op", Value::Str("kmeans".into())),
+                ("k", Value::Num(3.0)),
+                ("iters", Value::Num(2.0)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        let id = resp.get("id").unwrap().as_f64().unwrap();
+        let done = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(id)),
+            ]))
+            .unwrap();
+        assert_eq!(done.get("state").unwrap().as_str(), Some("done"));
+        let output = done.get("output").unwrap();
+        assert_eq!(output.get("kind").unwrap().as_str(), Some("kmeans"));
+        assert!(output.get("distortion").unwrap().as_f64().unwrap() > 0.0);
+        assert!(done.get("dists").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn metrics_reflect_work() {
+        let (server, _coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let submit = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("submit".into())),
+                ("dataset", Value::Str("voronoi".into())),
+                ("scale", Value::Num(0.002)),
+                ("op", Value::Str("mst".into())),
+            ]))
+            .unwrap();
+        let id = submit.get("id").unwrap().as_f64().unwrap();
+        client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(id)),
+            ]))
+            .unwrap();
+        let m = client
+            .call(&Client::request(vec![("cmd", Value::Str("metrics".into()))]))
+            .unwrap();
+        assert_eq!(m.get("completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn bad_requests_get_errors_not_disconnects() {
+        let (server, _coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        for bad in [
+            "not json at all",
+            r#"{"cmd":"nope"}"#,
+            r#"{"cmd":"submit","dataset":"unknown-ds","op":"kmeans"}"#,
+            r#"{"cmd":"submit","dataset":"cell"}"#,
+            r#"{"cmd":"wait"}"#,
+        ] {
+            self_call(&mut client, bad);
+        }
+        // Connection still alive.
+        let resp = client
+            .call(&Client::request(vec![("cmd", Value::Str("ping".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
+    }
+
+    fn self_call(client: &mut Client, raw: &str) {
+        client.writer.write_all(raw.as_bytes()).unwrap();
+        client.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        client.reader.read_line(&mut line).unwrap();
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{raw} → {line}");
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (server, _coord) = start();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let resp = c
+                        .call(&Client::request(vec![
+                            ("cmd", Value::Str("submit".into())),
+                            ("dataset", Value::Str("squiggles".into())),
+                            ("scale", Value::Num(0.002)),
+                            ("seed", Value::Num(i as f64)),
+                            ("op", Value::Str("anomaly".into())),
+                        ]))
+                        .unwrap();
+                    let id = resp.get("id").unwrap().as_f64().unwrap();
+                    let done = c
+                        .call(&Client::request(vec![
+                            ("cmd", Value::Str("wait".into())),
+                            ("id", Value::Num(id)),
+                        ]))
+                        .unwrap();
+                    assert_eq!(done.get("state").unwrap().as_str(), Some("done"));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Point storage: dense row-major and sparse CSR matrices.
+//!
+//! Both carry cached per-row squared norms so Euclidean distances can use
+//! the expansion `||x-y||² = ||x||² + ||y||² − 2x·y` — the same identity
+//! the Pallas kernel (python/compile/kernels/pairwise.py) uses, which is
+//! what makes the scalar path and the XLA path bit-compatible up to f32
+//! rounding.
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug)]
+pub struct DenseMatrix {
+    pub n: usize,
+    pub d: usize,
+    pub values: Vec<f32>,
+    /// Cached ||row_i||² in f64.
+    sqnorms: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn new(n: usize, d: usize, values: Vec<f32>) -> Self {
+        assert_eq!(values.len(), n * d, "shape mismatch");
+        let sqnorms = (0..n)
+            .map(|i| {
+                values[i * d..(i + 1) * d]
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum()
+            })
+            .collect();
+        DenseMatrix { n, d, values, sqnorms }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let n = rows.len();
+        let d = rows.first().map_or(0, |r| r.len());
+        let mut values = Vec::with_capacity(n * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged rows");
+            values.extend_from_slice(r);
+        }
+        DenseMatrix::new(n, d, values)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.values[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn sqnorm(&self, i: usize) -> f64 {
+        self.sqnorms[i]
+    }
+
+    /// L2-normalize every row in place (zero rows are left untouched).
+    /// Turns Euclidean distance into the cosine-equivalent metric
+    /// `sqrt(2 - 2 cos)` — used for bag-of-words data.
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n {
+            let norm = self.sqnorms[i].sqrt();
+            if norm > 0.0 {
+                for v in &mut self.values[i * self.d..(i + 1) * self.d] {
+                    *v = (*v as f64 / norm) as f32;
+                }
+                self.sqnorms[i] = self.values[i * self.d..(i + 1) * self.d]
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum();
+            }
+        }
+    }
+
+    /// Transpose (attributes become points — §4.3 of the paper).
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut values = vec![0f32; self.n * self.d];
+        for i in 0..self.n {
+            for j in 0..self.d {
+                values[j * self.n + i] = self.values[i * self.d + j];
+            }
+        }
+        DenseMatrix::new(self.d, self.n, values)
+    }
+
+    /// Normalize each *column* to zero mean and unit L2 norm, so that
+    /// for the transposed matrix `ρ(x,y) = 1 − D²(x*,y*)/2` (paper eq. 8).
+    pub fn standardize_columns(&mut self) {
+        for j in 0..self.d {
+            let mut mean = 0.0f64;
+            for i in 0..self.n {
+                mean += self.values[i * self.d + j] as f64;
+            }
+            mean /= self.n as f64;
+            let mut ss = 0.0f64;
+            for i in 0..self.n {
+                let v = self.values[i * self.d + j] as f64 - mean;
+                ss += v * v;
+            }
+            let scale = if ss > 0.0 { 1.0 / ss.sqrt() } else { 0.0 };
+            for i in 0..self.n {
+                let v = self.values[i * self.d + j] as f64;
+                self.values[i * self.d + j] = ((v - mean) * scale) as f32;
+            }
+        }
+        // Re-derive row norms.
+        *self = DenseMatrix::new(self.n, self.d, std::mem::take(&mut self.values));
+    }
+}
+
+/// Sparse CSR f32 matrix (for bag-of-words / high-dimensional binary data).
+#[derive(Clone, Debug)]
+pub struct SparseMatrix {
+    pub n: usize,
+    pub d: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    sqnorms: Vec<f64>,
+}
+
+impl SparseMatrix {
+    /// Build from per-row (index, value) pair lists. Indices within a row
+    /// must be strictly increasing.
+    pub fn from_rows(d: usize, rows: &[Vec<(u32, f32)>]) -> Self {
+        let n = rows.len();
+        let nnz: usize = rows.iter().map(|r| r.len()).sum();
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        let mut sqnorms = Vec::with_capacity(n);
+        indptr.push(0);
+        for row in rows {
+            let mut prev: i64 = -1;
+            let mut sq = 0.0f64;
+            for &(idx, val) in row {
+                assert!((idx as usize) < d, "column index out of range");
+                assert!((idx as i64) > prev, "row indices must be increasing");
+                prev = idx as i64;
+                indices.push(idx);
+                values.push(val);
+                sq += (val as f64) * (val as f64);
+            }
+            indptr.push(indices.len());
+            sqnorms.push(sq);
+        }
+        SparseMatrix { n, d, indptr, indices, values, sqnorms }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    #[inline]
+    pub fn sqnorm(&self, i: usize) -> f64 {
+        self.sqnorms[i]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Sparse·sparse dot product (merge join on sorted indices).
+    pub fn dot_rows(&self, i: usize, j: usize) -> f64 {
+        let (ia, va) = self.row(i);
+        let (ib, vb) = self.row(j);
+        let (mut p, mut q) = (0usize, 0usize);
+        let mut acc = 0.0f64;
+        while p < ia.len() && q < ib.len() {
+            match ia[p].cmp(&ib[q]) {
+                std::cmp::Ordering::Less => p += 1,
+                std::cmp::Ordering::Greater => q += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += va[p] as f64 * vb[q] as f64;
+                    p += 1;
+                    q += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Sparse·dense dot product against an arbitrary vector.
+    #[inline]
+    pub fn dot_vec(&self, i: usize, q: &[f32]) -> f64 {
+        let (idx, val) = self.row(i);
+        let mut acc = 0.0f64;
+        for (&j, &v) in idx.iter().zip(val) {
+            acc += v as f64 * q[j as usize] as f64;
+        }
+        acc
+    }
+
+    /// Densify one row into `out` (zero-filled first). `out.len()` may
+    /// exceed `d` (feature-hashed padding is the caller's business).
+    pub fn fill_row(&self, i: usize, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        let (idx, val) = self.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            out[j as usize] = v;
+        }
+    }
+
+    /// Feature-hash to a dense matrix of width `w` (signed hashing to keep
+    /// inner products approximately preserved). Used to feed the fixed-D
+    /// XLA variants with reuters-sized data.
+    pub fn hash_to_dense(&self, w: usize) -> DenseMatrix {
+        let mut values = vec![0f32; self.n * w];
+        for i in 0..self.n {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                // splitmix-style mix of the column id.
+                let mut h = (j as u64).wrapping_add(0x9E3779B97F4A7C15);
+                h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+                h ^= h >> 31;
+                let bucket = (h % w as u64) as usize;
+                let sign = if (h >> 63) == 0 { 1.0f32 } else { -1.0f32 };
+                values[i * w + bucket] += sign * v;
+            }
+        }
+        DenseMatrix::new(self.n, w, values)
+    }
+}
+
+/// The dataset payload handed to [`crate::metrics::Space`].
+#[derive(Clone, Debug)]
+pub enum Data {
+    Dense(DenseMatrix),
+    Sparse(SparseMatrix),
+}
+
+impl Data {
+    pub fn n(&self) -> usize {
+        match self {
+            Data::Dense(m) => m.n,
+            Data::Sparse(m) => m.n,
+        }
+    }
+    pub fn dim(&self) -> usize {
+        match self {
+            Data::Dense(m) => m.d,
+            Data::Sparse(m) => m.d,
+        }
+    }
+    pub fn sqnorm(&self, i: usize) -> f64 {
+        match self {
+            Data::Dense(m) => m.sqnorm(i),
+            Data::Sparse(m) => m.sqnorm(i),
+        }
+    }
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Data::Sparse(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_rows_and_norms() {
+        let m = DenseMatrix::new(2, 3, vec![1.0, 2.0, 2.0, 0.0, 3.0, 4.0]);
+        assert_eq!(m.row(0), &[1.0, 2.0, 2.0]);
+        assert_eq!(m.sqnorm(0), 9.0);
+        assert_eq!(m.sqnorm(1), 25.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = DenseMatrix::new(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!((t.n, t.d), (3, 2));
+        assert_eq!(t.row(0), &[1., 4.]);
+        let tt = t.transpose();
+        assert_eq!(tt.values, m.values);
+    }
+
+    #[test]
+    fn standardize_columns_gives_unit_norm_zero_mean() {
+        let mut m = DenseMatrix::new(4, 2, vec![1., 10., 2., 20., 3., 30., 4., 45.]);
+        m.standardize_columns();
+        for j in 0..2 {
+            let mean: f64 = (0..4).map(|i| m.values[i * 2 + j] as f64).sum::<f64>() / 4.0;
+            let ss: f64 = (0..4).map(|i| (m.values[i * 2 + j] as f64).powi(2)).sum();
+            assert!(mean.abs() < 1e-6, "mean {mean}");
+            assert!((ss - 1.0).abs() < 1e-5, "ss {ss}");
+        }
+    }
+
+    #[test]
+    fn correlation_distance_identity() {
+        // paper eq. (8): rho = 1 - D^2/2 after standardization.
+        let mut m = DenseMatrix::new(
+            5,
+            2,
+            vec![1., 2., 2., 4.2, 3., 5.8, 4., 8.1, 5., 9.9],
+        );
+        // plain correlation first
+        let xs: Vec<f64> = (0..5).map(|i| m.values[i * 2] as f64).collect();
+        let ys: Vec<f64> = (0..5).map(|i| m.values[i * 2 + 1] as f64).collect();
+        let mx = xs.iter().sum::<f64>() / 5.0;
+        let my = ys.iter().sum::<f64>() / 5.0;
+        let cov: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let sx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum::<f64>().sqrt();
+        let sy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum::<f64>().sqrt();
+        let rho = cov / (sx * sy);
+
+        m.standardize_columns();
+        let t = m.transpose();
+        let d2: f64 = (0..5)
+            .map(|i| (t.row(0)[i] as f64 - t.row(1)[i] as f64).powi(2))
+            .sum();
+        assert!((rho - (1.0 - d2 / 2.0)).abs() < 1e-5, "rho {rho} vs {}", 1.0 - d2 / 2.0);
+    }
+
+    #[test]
+    fn sparse_dot_and_norms() {
+        let rows = vec![
+            vec![(0u32, 1.0f32), (3, 2.0)],
+            vec![(1u32, 3.0f32), (3, 4.0)],
+            vec![],
+        ];
+        let m = SparseMatrix::from_rows(5, &rows);
+        assert_eq!(m.n, 3);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.sqnorm(0), 5.0);
+        assert_eq!(m.dot_rows(0, 1), 8.0);
+        assert_eq!(m.dot_rows(0, 2), 0.0);
+        assert_eq!(m.dot_vec(1, &[1., 1., 1., 1., 1.]), 7.0);
+    }
+
+    #[test]
+    fn sparse_fill_row() {
+        let m = SparseMatrix::from_rows(4, &[vec![(1, 2.0), (3, -1.0)]]);
+        let mut out = vec![9.0f32; 6];
+        m.fill_row(0, &mut out);
+        assert_eq!(out, vec![0.0, 2.0, 0.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn hash_to_dense_preserves_norms_approximately() {
+        // Signed feature hashing preserves E[||x||^2]; with few collisions
+        // (nnz << width) norms match almost exactly.
+        let rows = vec![
+            vec![(0u32, 1.0f32), (100, 2.0), (4000, 3.0)],
+            vec![(7u32, 1.5f32), (2000, 2.5)],
+        ];
+        let m = SparseMatrix::from_rows(4732, &rows);
+        let dm = m.hash_to_dense(1024);
+        assert!((dm.sqnorm(0) - 14.0).abs() < 1e-6);
+        assert!((dm.sqnorm(1) - 8.5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "increasing")]
+    fn sparse_rejects_unsorted() {
+        SparseMatrix::from_rows(4, &[vec![(2, 1.0), (1, 1.0)]]);
+    }
+}

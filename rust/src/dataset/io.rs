@@ -1,0 +1,212 @@
+//! Dataset import/export: CSV for dense data, a sparse triplet text
+//! format for sparse data. Lets users bring their own data to the CLI
+//! (`--dataset file:path.csv`) and lets the generators persist datasets
+//! for external analysis.
+
+use crate::data::{Data, DenseMatrix, SparseMatrix};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Save dense data as headerless CSV (one row per line).
+pub fn save_dense_csv(m: &DenseMatrix, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let mut line = String::new();
+    for i in 0..m.n {
+        line.clear();
+        for (j, v) in m.row(i).iter().enumerate() {
+            if j > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{v}"));
+        }
+        line.push('\n');
+        w.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load headerless CSV as dense data. Rejects ragged rows with a line
+/// number in the error.
+pub fn load_dense_csv(path: impl AsRef<Path>) -> Result<DenseMatrix> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut values: Vec<f32> = Vec::new();
+    let mut d = None;
+    let mut n = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row: Vec<f32> = line
+            .split(',')
+            .map(|tok| {
+                tok.trim()
+                    .parse::<f32>()
+                    .map_err(|e| anyhow!("line {}: bad value {tok:?}: {e}", lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        match d {
+            None => d = Some(row.len()),
+            Some(d0) if d0 != row.len() => {
+                bail!("line {}: ragged row ({} vs {} columns)", lineno + 1, row.len(), d0)
+            }
+            _ => {}
+        }
+        values.extend_from_slice(&row);
+        n += 1;
+    }
+    let d = d.ok_or_else(|| anyhow!("empty CSV"))?;
+    Ok(DenseMatrix::new(n, d, values))
+}
+
+/// Save sparse data as a triplet format:
+/// line 1: `n d nnz`, then one `row col value` per line (0-based).
+pub fn save_sparse_triplets(m: &SparseMatrix, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "{} {} {}", m.n, m.d, m.nnz())?;
+    for i in 0..m.n {
+        let (idx, val) = m.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            writeln!(w, "{i} {j} {v}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Load the triplet format written by [`save_sparse_triplets`].
+pub fn load_sparse_triplets(path: impl AsRef<Path>) -> Result<SparseMatrix> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut lines = reader.lines();
+    let header = lines.next().ok_or_else(|| anyhow!("empty file"))??;
+    let parts: Vec<usize> = header
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|e| anyhow!("bad header: {e}")))
+        .collect::<Result<_>>()?;
+    let [n, d, nnz] = parts.as_slice() else {
+        bail!("header must be `n d nnz`");
+    };
+    let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); *n];
+    let mut seen = 0usize;
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(i), Some(j), Some(v)) = (it.next(), it.next(), it.next()) else {
+            bail!("line {}: expected `row col value`", lineno + 2);
+        };
+        let i: usize = i.parse().map_err(|e| anyhow!("line {}: {e}", lineno + 2))?;
+        let j: u32 = j.parse().map_err(|e| anyhow!("line {}: {e}", lineno + 2))?;
+        let v: f32 = v.parse().map_err(|e| anyhow!("line {}: {e}", lineno + 2))?;
+        if i >= *n || (j as usize) >= *d {
+            bail!("line {}: index ({i},{j}) out of bounds", lineno + 2);
+        }
+        rows[i].push((j, v));
+        seen += 1;
+    }
+    if seen != *nnz {
+        bail!("nnz mismatch: header says {nnz}, file has {seen}");
+    }
+    for row in rows.iter_mut() {
+        row.sort_unstable_by_key(|&(j, _)| j);
+    }
+    Ok(SparseMatrix::from_rows(*d, &rows))
+}
+
+/// Load either format based on extension: `.csv` → dense, `.spm` → sparse.
+pub fn load_auto(path: impl AsRef<Path>) -> Result<Data> {
+    let p = path.as_ref();
+    match p.extension().and_then(|e| e.to_str()) {
+        Some("csv") => Ok(Data::Dense(load_dense_csv(p)?)),
+        Some("spm") => Ok(Data::Sparse(load_sparse_triplets(p)?)),
+        other => bail!("unknown dataset extension {other:?} (want .csv or .spm)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{gen_mixture, squiggles};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ah-io-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn dense_csv_roundtrip() {
+        let m = squiggles(200, 1);
+        let path = tmp("dense.csv");
+        save_dense_csv(&m, &path).unwrap();
+        let back = load_dense_csv(&path).unwrap();
+        assert_eq!((back.n, back.d), (m.n, m.d));
+        for i in 0..m.n {
+            for (a, b) in m.row(i).iter().zip(back.row(i)) {
+                assert!((a - b).abs() <= f32::EPSILON * a.abs().max(1.0));
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sparse_triplet_roundtrip() {
+        let m = gen_mixture(150, 500, 3, 2);
+        let path = tmp("sparse.spm");
+        save_sparse_triplets(&m, &path).unwrap();
+        let back = load_sparse_triplets(&path).unwrap();
+        assert_eq!((back.n, back.d), (m.n, m.d));
+        assert_eq!(back.nnz(), m.nnz());
+        for i in 0..m.n {
+            assert_eq!(m.row(i), back.row(i));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let path = tmp("ragged.csv");
+        std::fs::write(&path, "1,2,3\n4,5\n").unwrap();
+        let err = load_dense_csv(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_skips_comments_and_blanks() {
+        let path = tmp("comments.csv");
+        std::fs::write(&path, "# header comment\n1,2\n\n3,4\n").unwrap();
+        let m = load_dense_csv(&path).unwrap();
+        assert_eq!((m.n, m.d), (2, 2));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn triplets_reject_bad_counts_and_bounds() {
+        let path = tmp("bad.spm");
+        std::fs::write(&path, "2 3 2\n0 0 1.0\n").unwrap();
+        assert!(load_sparse_triplets(&path).unwrap_err().to_string().contains("nnz"));
+        std::fs::write(&path, "2 3 1\n5 0 1.0\n").unwrap();
+        assert!(load_sparse_triplets(&path)
+            .unwrap_err()
+            .to_string()
+            .contains("out of bounds"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_auto_dispatches() {
+        let m = squiggles(20, 3);
+        let path = tmp("auto.csv");
+        save_dense_csv(&m, &path).unwrap();
+        assert!(matches!(load_auto(&path).unwrap(), Data::Dense(_)));
+        std::fs::remove_file(&path).ok();
+        assert!(load_auto(tmp("nope.xyz")).is_err());
+    }
+}

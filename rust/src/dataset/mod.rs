@@ -1,0 +1,214 @@
+//! The Table-1 dataset suite.
+//!
+//! Real `cell` / `covtype` / `reuters` files are not available in this
+//! environment, so each is replaced by a synthetic surrogate that
+//! preserves the property the paper's evaluation leans on (see DESIGN.md
+//! §Substitutions): cluster structure for cell/covtype, *absence* of
+//! structure for reuters (that is what produces the paper's anti-speedup),
+//! sparse mixtures for genM-ki, and 2-d manifold/filament structure for
+//! squiggles/voronoi.
+//!
+//! Every generator is deterministic in its seed; `DatasetSpec::scale`
+//! shrinks row counts uniformly so the full Table-2 sweep stays tractable
+//! on one machine while preserving each dataset's structure.
+
+pub mod io;
+mod sparse_gen;
+mod synthetic;
+
+pub use sparse_gen::{gen_mixture, reuters_surrogate};
+pub use synthetic::{cell_surrogate, covtype_surrogate, figure1, squiggles, voronoi};
+
+use crate::data::Data;
+use crate::metrics::Space;
+
+/// Identifies one dataset of Table 1.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetKind {
+    Squiggles,
+    Voronoi,
+    Cell,
+    Covtype,
+    /// reuters100 (full surrogate) — `half: true` gives reuters50.
+    Reuters { half: bool },
+    /// genM-ki: `dims` ∈ {100, 1000, 10000}, `components` = i.
+    Gen { dims: usize, components: usize },
+    /// The Figure-1 two-class spreadsheet.
+    Figure1,
+}
+
+impl DatasetKind {
+    pub fn parse(name: &str) -> Option<DatasetKind> {
+        match name {
+            "squiggles" => Some(DatasetKind::Squiggles),
+            "voronoi" => Some(DatasetKind::Voronoi),
+            "cell" => Some(DatasetKind::Cell),
+            "covtype" => Some(DatasetKind::Covtype),
+            "reuters100" => Some(DatasetKind::Reuters { half: false }),
+            "reuters50" => Some(DatasetKind::Reuters { half: true }),
+            "figure1" => Some(DatasetKind::Figure1),
+            _ => {
+                // genM-ki, e.g. gen100-k3
+                let rest = name.strip_prefix("gen")?;
+                let (dims, k) = rest.split_once("-k")?;
+                Some(DatasetKind::Gen {
+                    dims: dims.parse().ok()?,
+                    components: k.parse().ok()?,
+                })
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            DatasetKind::Squiggles => "squiggles".into(),
+            DatasetKind::Voronoi => "voronoi".into(),
+            DatasetKind::Cell => "cell".into(),
+            DatasetKind::Covtype => "covtype".into(),
+            DatasetKind::Reuters { half: false } => "reuters100".into(),
+            DatasetKind::Reuters { half: true } => "reuters50".into(),
+            DatasetKind::Gen { dims, components } => format!("gen{dims}-k{components}"),
+            DatasetKind::Figure1 => "figure1".into(),
+        }
+    }
+
+    /// Paper row count (Table 1).
+    pub fn paper_rows(&self) -> usize {
+        match self {
+            DatasetKind::Squiggles | DatasetKind::Voronoi => 80_000,
+            DatasetKind::Cell => 39_972,
+            DatasetKind::Covtype => 150_000,
+            DatasetKind::Reuters { half: false } => 10_077,
+            DatasetKind::Reuters { half: true } => 5_038,
+            DatasetKind::Gen { .. } => 100_000,
+            DatasetKind::Figure1 => 100_000,
+        }
+    }
+
+    pub fn dims(&self) -> usize {
+        match self {
+            DatasetKind::Squiggles | DatasetKind::Voronoi => 2,
+            DatasetKind::Cell => 38,
+            DatasetKind::Covtype => 54,
+            DatasetKind::Reuters { .. } => 4_732,
+            DatasetKind::Gen { dims, .. } => *dims,
+            DatasetKind::Figure1 => 1_000,
+        }
+    }
+}
+
+/// A fully-specified dataset build request.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub kind: DatasetKind,
+    /// Row-count multiplier in (0, 1]; 1.0 = the paper's size.
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    pub fn new(kind: DatasetKind) -> Self {
+        DatasetSpec { kind, scale: 1.0, seed: 20130 }
+    }
+
+    pub fn scaled(kind: DatasetKind, scale: f64) -> Self {
+        DatasetSpec { kind, scale, seed: 20130 }
+    }
+
+    pub fn rows(&self) -> usize {
+        ((self.kind.paper_rows() as f64 * self.scale).round() as usize).max(16)
+    }
+
+    /// Generate the dataset as a [`Space`] (Euclidean).
+    pub fn build(&self) -> Space {
+        let r = self.rows();
+        let seed = self.seed;
+        let data: Data = match &self.kind {
+            DatasetKind::Squiggles => Data::Dense(squiggles(r, seed)),
+            DatasetKind::Voronoi => Data::Dense(voronoi(r, seed)),
+            DatasetKind::Cell => Data::Dense(cell_surrogate(r, seed)),
+            DatasetKind::Covtype => Data::Dense(covtype_surrogate(r, seed)),
+            DatasetKind::Reuters { .. } => {
+                Data::Sparse(reuters_surrogate(r, self.kind.dims(), seed))
+            }
+            DatasetKind::Gen { dims, components } => {
+                Data::Sparse(gen_mixture(r, *dims, *components, seed))
+            }
+            DatasetKind::Figure1 => Data::Dense(figure1(r, seed).0),
+        };
+        Space::euclidean(data)
+    }
+}
+
+/// All Table-2 datasets, in paper order (figure1 excluded — it has its own
+/// experiment).
+pub fn table2_datasets() -> Vec<DatasetKind> {
+    vec![
+        DatasetKind::Squiggles,
+        DatasetKind::Voronoi,
+        DatasetKind::Cell,
+        DatasetKind::Covtype,
+        DatasetKind::Reuters { half: true },
+        DatasetKind::Reuters { half: false },
+        DatasetKind::Gen { dims: 100, components: 3 },
+        DatasetKind::Gen { dims: 100, components: 20 },
+        DatasetKind::Gen { dims: 100, components: 100 },
+        DatasetKind::Gen { dims: 1000, components: 3 },
+        DatasetKind::Gen { dims: 1000, components: 20 },
+        DatasetKind::Gen { dims: 1000, components: 100 },
+        DatasetKind::Gen { dims: 10000, components: 3 },
+        DatasetKind::Gen { dims: 10000, components: 20 },
+        DatasetKind::Gen { dims: 10000, components: 100 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in table2_datasets() {
+            let name = kind.name();
+            assert_eq!(DatasetKind::parse(&name), Some(kind.clone()), "{name}");
+        }
+        assert_eq!(DatasetKind::parse("figure1"), Some(DatasetKind::Figure1));
+        assert_eq!(DatasetKind::parse("nope"), None);
+        assert_eq!(DatasetKind::parse("genx-ky"), None);
+    }
+
+    #[test]
+    fn scaled_rows() {
+        let spec = DatasetSpec::scaled(DatasetKind::Squiggles, 0.01);
+        assert_eq!(spec.rows(), 800);
+        let spec = DatasetSpec::scaled(DatasetKind::Cell, 1.0);
+        assert_eq!(spec.rows(), 39_972);
+    }
+
+    #[test]
+    fn builds_have_declared_shapes() {
+        for kind in [
+            DatasetKind::Squiggles,
+            DatasetKind::Voronoi,
+            DatasetKind::Cell,
+            DatasetKind::Covtype,
+            DatasetKind::Reuters { half: false },
+            DatasetKind::Gen { dims: 100, components: 3 },
+        ] {
+            let spec = DatasetSpec::scaled(kind.clone(), 0.005);
+            let space = spec.build();
+            assert_eq!(space.n(), spec.rows(), "{}", kind.name());
+            assert_eq!(space.dim(), kind.dims(), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = DatasetSpec::scaled(DatasetKind::Cell, 0.005).build();
+        let b = DatasetSpec::scaled(DatasetKind::Cell, 0.005).build();
+        assert_eq!(a.n(), b.n());
+        for i in 0..a.n().min(20) {
+            assert_eq!(a.dist_uncounted(0, i), b.dist_uncounted(0, i));
+        }
+    }
+}

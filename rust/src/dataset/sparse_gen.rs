@@ -1,0 +1,203 @@
+//! Sparse synthetic generators: the Reuters bag-of-words surrogate and
+//! the paper's genM-ki sparse mixtures.
+
+use crate::data::SparseMatrix;
+use crate::rng::{Rng, ZipfTable};
+
+/// Reuters bag-of-words surrogate (Table 1: 10077 docs × 4732 terms).
+///
+/// The paper's finding for this dataset is an ANTI-speedup: bag-of-words
+/// news text has too little metric structure for the tree to exploit at
+/// 10k documents. We therefore deliberately generate documents with *no
+/// topic structure*: every document draws its terms i.i.d. from one global
+/// Zipf(1.1) vocabulary distribution, with log-scaled term frequencies and
+/// L2 row normalization (the standard cosine-style preprocessing). What
+/// remains is exactly the structureless high-dimensional cloud whose
+/// behaviour the paper reports.
+pub fn reuters_surrogate(rows: usize, vocab: usize, seed: u64) -> SparseMatrix {
+    let mut rng = Rng::new(seed);
+    let zipf = ZipfTable::new(vocab, 1.1);
+    let mut doc_rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(rows);
+    let mut counts: std::collections::BTreeMap<u32, u32> = std::collections::BTreeMap::new();
+    for _ in 0..rows {
+        counts.clear();
+        // Document length: lognormal-ish, mean ≈ 90 tokens.
+        let len = (30.0 + rng.normal().mul_add(30.0, 60.0).max(0.0)) as usize;
+        for _ in 0..len {
+            let term = zipf.sample(&mut rng) as u32;
+            *counts.entry(term).or_insert(0) += 1;
+        }
+        // log(1 + tf) weights, then L2 normalize.
+        let mut row: Vec<(u32, f32)> = counts
+            .iter()
+            .map(|(&t, &c)| (t, (1.0 + c as f32).ln()))
+            .collect();
+        let norm: f32 = row.iter().map(|&(_, v)| v * v).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            for v in row.iter_mut() {
+                v.1 /= norm;
+            }
+        }
+        doc_rows.push(row);
+    }
+    SparseMatrix::from_rows(vocab, &doc_rows)
+}
+
+/// genM-ki (Table 1): "artificially generated sparse data in M dimensions,
+/// generated from a mixture of i components".
+///
+/// Each component activates a random ~5% subset of the M dimensions; a
+/// point from that component sets each active dimension to 1 w.p. 0.9 and
+/// each inactive dimension to 1 w.p. 0.002 (background noise). The high
+/// within-support probability makes the i modes strongly separated —
+/// within-component distances are several times smaller than
+/// cross-component ones, which is the regime in which the paper's gen
+/// rows show their very large speedups. K-means runs use k = i (the
+/// paper restricts gen experiments to the matching k).
+pub fn gen_mixture(rows: usize, dims: usize, components: usize, seed: u64) -> SparseMatrix {
+    let mut rng = Rng::new(seed);
+    let active_frac = 0.05;
+    let active_count = ((dims as f64 * active_frac) as usize).max(2);
+    let noise_p = 0.002;
+    let active_p = 0.9;
+    // Component supports.
+    let supports: Vec<Vec<usize>> = (0..components)
+        .map(|_| {
+            let mut s = rng.sample_indices(dims, active_count);
+            s.sort_unstable();
+            s
+        })
+        .collect();
+    let mut out_rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(rows);
+    let mut row_set: Vec<u32> = Vec::new();
+    for _ in 0..rows {
+        let c = rng.below(components);
+        row_set.clear();
+        // Active dims: dense Bernoulli over the small support.
+        for &j in &supports[c] {
+            if rng.bool(active_p) {
+                row_set.push(j as u32);
+            }
+        }
+        // Background noise: expected dims*noise_p extra ones, sampled via
+        // a binomial-count + uniform-position scheme (O(nnz), not O(M)).
+        let extra = binomial_sample(&mut rng, dims, noise_p);
+        for _ in 0..extra {
+            row_set.push(rng.below(dims) as u32);
+        }
+        row_set.sort_unstable();
+        row_set.dedup();
+        out_rows.push(row_set.iter().map(|&j| (j, 1.0f32)).collect());
+    }
+    SparseMatrix::from_rows(dims, &out_rows)
+}
+
+/// Sample Binomial(n, p) — normal approximation for large n·p, direct
+/// Bernoulli summation for small (exact where it matters).
+fn binomial_sample(rng: &mut Rng, n: usize, p: f64) -> usize {
+    let mean = n as f64 * p;
+    if mean < 30.0 {
+        // Inverse-CDF via waiting times (geometric skips): O(np).
+        let mut count = 0usize;
+        let mut i = 0f64;
+        let log_q = (1.0 - p).ln();
+        loop {
+            let skip = (rng.f64().ln() / log_q).floor();
+            i += skip + 1.0;
+            if i > n as f64 {
+                return count;
+            }
+            count += 1;
+        }
+    } else {
+        let sd = (mean * (1.0 - p)).sqrt();
+        (rng.normal_ms(mean, sd).round().clamp(0.0, n as f64)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Data;
+    use crate::metrics::Space;
+
+    #[test]
+    fn reuters_rows_normalized_and_sparse() {
+        let m = reuters_surrogate(300, 4732, 1);
+        assert_eq!((m.n, m.d), (300, 4732));
+        for i in 0..m.n {
+            let sq = m.sqnorm(i);
+            assert!((sq - 1.0).abs() < 1e-4, "row {i} norm² = {sq}");
+        }
+        // Sparse: far fewer nonzeros than dense.
+        assert!(m.nnz() < 300 * 200, "nnz {}", m.nnz());
+    }
+
+    #[test]
+    fn reuters_lacks_cluster_structure() {
+        // Pairwise distances should concentrate (ratio of 10th percentile
+        // to 90th percentile close to 1) — the "no structure" regime.
+        let m = reuters_surrogate(200, 2000, 2);
+        let space = Space::euclidean(Data::Sparse(m));
+        let mut ds: Vec<f64> = Vec::new();
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                ds.push(space.dist_uncounted(i, j));
+            }
+        }
+        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p10 = ds[ds.len() / 10];
+        let p90 = ds[ds.len() * 9 / 10];
+        assert!(p90 / p10 < 1.35, "distances too spread: {p10} .. {p90}");
+    }
+
+    #[test]
+    fn gen_mixture_shapes_and_sparsity() {
+        let m = gen_mixture(500, 1000, 20, 3);
+        assert_eq!((m.n, m.d), (500, 1000));
+        // Expected nnz per row ≈ 0.05·1000·0.5 + 0.01·1000 = 35.
+        let mean_nnz = m.nnz() as f64 / 500.0;
+        assert!((20.0..55.0).contains(&mean_nnz), "mean nnz {mean_nnz}");
+    }
+
+    #[test]
+    fn gen_mixture_has_components() {
+        // Same-component points share active dims → markedly closer than
+        // cross-component pairs on average.
+        let m = gen_mixture(600, 500, 3, 4);
+        let space = Space::euclidean(Data::Sparse(m));
+        // Estimate: nearest-neighbor distance vs random-pair distance.
+        let mut nn = 0.0;
+        let mut rnd = 0.0;
+        for i in 0..30 {
+            let mut best = f64::INFINITY;
+            for j in 0..space.n() {
+                if i != j {
+                    best = best.min(space.dist_uncounted(i, j));
+                }
+            }
+            nn += best;
+            rnd += space.dist_uncounted(i, space.n() - 1 - i);
+        }
+        assert!(nn / 30.0 < rnd / 30.0, "nn {} !< rnd {}", nn / 30.0, rnd / 30.0);
+    }
+
+    #[test]
+    fn binomial_sampler_mean() {
+        let mut rng = Rng::new(5);
+        // Small-mean path.
+        let mut acc = 0usize;
+        for _ in 0..2000 {
+            acc += binomial_sample(&mut rng, 1000, 0.01);
+        }
+        let mean = acc as f64 / 2000.0;
+        assert!((mean - 10.0).abs() < 0.8, "small-path mean {mean}");
+        // Large-mean path.
+        let mut acc = 0usize;
+        for _ in 0..2000 {
+            acc += binomial_sample(&mut rng, 10000, 0.01);
+        }
+        let mean = acc as f64 / 2000.0;
+        assert!((mean - 100.0).abs() < 3.0, "large-path mean {mean}");
+    }
+}

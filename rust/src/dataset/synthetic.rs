@@ -1,0 +1,334 @@
+//! Dense synthetic generators: the 2-d manifold datasets, the
+//! cell/covtype surrogates, and the Figure-1 two-class spreadsheet.
+
+use crate::data::DenseMatrix;
+use crate::rng::Rng;
+
+/// `squiggles` (Table 1): "two dimensional data generated from blurred
+/// one-dimensional manifolds". We draw a handful of random smooth curves
+/// (random-phase sinusoid mixtures along a random direction) and blur
+/// points sampled uniformly along them.
+pub fn squiggles(rows: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Rng::new(seed);
+    let n_curves = 12.max(rows / 10_000);
+    // Each curve: start point, heading, sinusoid amplitude/frequency mix.
+    struct Curve {
+        x0: f64,
+        y0: f64,
+        dir: f64,
+        amp: [f64; 3],
+        freq: [f64; 3],
+        phase: [f64; 3],
+        length: f64,
+    }
+    let curves: Vec<Curve> = (0..n_curves)
+        .map(|_| Curve {
+            x0: rng.uniform(-100.0, 100.0),
+            y0: rng.uniform(-100.0, 100.0),
+            dir: rng.uniform(0.0, std::f64::consts::TAU),
+            amp: [rng.uniform(1.0, 8.0), rng.uniform(0.5, 4.0), rng.uniform(0.2, 2.0)],
+            freq: [rng.uniform(0.02, 0.1), rng.uniform(0.1, 0.3), rng.uniform(0.3, 0.8)],
+            phase: [
+                rng.uniform(0.0, std::f64::consts::TAU),
+                rng.uniform(0.0, std::f64::consts::TAU),
+                rng.uniform(0.0, std::f64::consts::TAU),
+            ],
+            length: rng.uniform(40.0, 120.0),
+        })
+        .collect();
+    let blur = 0.6;
+    let mut values = Vec::with_capacity(rows * 2);
+    for _ in 0..rows {
+        let c = &curves[rng.below(curves.len())];
+        let t = rng.uniform(0.0, c.length);
+        let offset: f64 = (0..3)
+            .map(|i| c.amp[i] * (c.freq[i] * t + c.phase[i]).sin())
+            .sum();
+        let (sin, cos) = c.dir.sin_cos();
+        // point = start + t*direction + offset*normal + blur noise
+        let x = c.x0 + t * cos - offset * sin + blur * rng.normal();
+        let y = c.y0 + t * sin + offset * cos + blur * rng.normal();
+        values.push(x as f32);
+        values.push(y as f32);
+    }
+    DenseMatrix::new(rows, 2, values)
+}
+
+/// `voronoi` (Table 1): "two dimensional data with noisy filaments".
+/// We scatter sites, then sample points near the perpendicular bisectors
+/// of neighboring site pairs — the edges of the Voronoi diagram — with
+/// noise.
+pub fn voronoi(rows: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Rng::new(seed);
+    let n_sites = 24;
+    let sites: Vec<(f64, f64)> = (0..n_sites)
+        .map(|_| (rng.uniform(-100.0, 100.0), rng.uniform(-100.0, 100.0)))
+        .collect();
+    // Candidate edges: each site paired with its 3 nearest neighbors.
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for i in 0..n_sites {
+        let mut ds: Vec<(f64, usize)> = (0..n_sites)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let dx = sites[i].0 - sites[j].0;
+                let dy = sites[i].1 - sites[j].1;
+                (dx * dx + dy * dy, j)
+            })
+            .collect();
+        ds.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(_, j) in ds.iter().take(3) {
+            if i < j {
+                edges.push((i, j));
+            } else {
+                edges.push((j, i));
+            }
+        }
+    }
+    edges.sort();
+    edges.dedup();
+
+    let noise = 1.2;
+    let mut values = Vec::with_capacity(rows * 2);
+    for _ in 0..rows {
+        let &(i, j) = &edges[rng.below(edges.len())];
+        let (ax, ay) = sites[i];
+        let (bx, by) = sites[j];
+        // Midpoint of the pair; bisector direction is perpendicular to ab.
+        let (mx, my) = ((ax + bx) / 2.0, (ay + by) / 2.0);
+        let (dx, dy) = (bx - ax, by - ay);
+        let len = (dx * dx + dy * dy).sqrt().max(1e-9);
+        let (px, py) = (-dy / len, dx / len); // unit perpendicular
+        let t = rng.normal() * len * 0.35; // walk along the bisector
+        let x = mx + t * px + noise * rng.normal();
+        let y = my + t * py + noise * rng.normal();
+        values.push(x as f32);
+        values.push(y as f32);
+    }
+    DenseMatrix::new(rows, 2, values)
+}
+
+/// `cell` surrogate: 38 visual features from high-throughput screening.
+/// Modeled as a 12-component Gaussian mixture with per-component diagonal
+/// covariances of widely varying scale plus a shared random linear map —
+/// heavy cluster structure in moderate dimension, the regime where the
+/// paper reports solid metric-tree speedups.
+pub fn cell_surrogate(rows: usize, seed: u64) -> DenseMatrix {
+    gaussian_mixture(rows, 38, 12, 6.0, seed)
+}
+
+/// `covtype` surrogate: 54 features, 7 cover types. Mixture of 7 clusters
+/// over 10 continuous dims (varying scales, like elevation/distances) with
+/// 44 near-binary indicator dims tied to the component.
+pub fn covtype_surrogate(rows: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Rng::new(seed);
+    let k = 7;
+    let d_cont = 10;
+    let d_bin = 44;
+    let d = d_cont + d_bin;
+    // Component definitions.
+    let mut means = Vec::new();
+    let mut scales = Vec::new();
+    let mut bin_probs = Vec::new();
+    for _ in 0..k {
+        means.push((0..d_cont).map(|_| rng.uniform(-40.0, 40.0)).collect::<Vec<f64>>());
+        scales.push((0..d_cont).map(|_| rng.uniform(0.5, 8.0)).collect::<Vec<f64>>());
+        // Each component activates a few indicator blocks strongly.
+        bin_probs.push(
+            (0..d_bin)
+                .map(|_| if rng.bool(0.15) { rng.uniform(0.6, 0.95) } else { rng.uniform(0.0, 0.08) })
+                .collect::<Vec<f64>>(),
+        );
+    }
+    let weights: Vec<f64> = (0..k).map(|_| rng.uniform(0.5, 2.0)).collect();
+    let mut values = Vec::with_capacity(rows * d);
+    for _ in 0..rows {
+        let c = rng.categorical(&weights);
+        for j in 0..d_cont {
+            values.push(rng.normal_ms(means[c][j], scales[c][j]) as f32);
+        }
+        for j in 0..d_bin {
+            values.push(if rng.bool(bin_probs[c][j]) { 1.0 } else { 0.0 });
+        }
+    }
+    DenseMatrix::new(rows, d, values)
+}
+
+/// Generic axis-aligned Gaussian mixture with a shared random rotation-ish
+/// mixing matrix (adds cross-dimension correlation so kd-trees can't just
+/// split single dimensions).
+pub fn gaussian_mixture(rows: usize, d: usize, k: usize, spread: f64, seed: u64) -> DenseMatrix {
+    let mut rng = Rng::new(seed);
+    let means: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.uniform(-spread, spread)).collect())
+        .collect();
+    let scales: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.uniform(0.2, 1.5)).collect())
+        .collect();
+    let weights: Vec<f64> = (0..k).map(|_| rng.uniform(0.5, 2.0)).collect();
+    // Sparse random mixing: each output dim blends 2 latent dims.
+    let mix: Vec<(usize, usize, f64)> = (0..d)
+        .map(|j| (j, rng.below(d), rng.uniform(0.1, 0.5)))
+        .collect();
+    let mut values = Vec::with_capacity(rows * d);
+    let mut latent = vec![0f64; d];
+    for _ in 0..rows {
+        let c = rng.categorical(&weights);
+        for j in 0..d {
+            latent[j] = rng.normal_ms(means[c][j], scales[c][j]);
+        }
+        for &(a, b, w) in &mix {
+            values.push((latent[a] + w * latent[b]) as f32);
+        }
+    }
+    DenseMatrix::new(rows, d, values)
+}
+
+/// The Figure-1 spreadsheet: two classes, 1000 binary attributes.
+/// Class A: attrs 0..200 are 1 w.p. 1/3; class B: w.p. 2/3; attrs
+/// 200..1000 are 1 w.p. 1/2 for everyone. Returns (data, labels).
+pub fn figure1(rows: usize, seed: u64) -> (DenseMatrix, Vec<u8>) {
+    figure1_dims(rows, 1000, 200, seed)
+}
+
+/// Parameterized variant (smaller widths for fast tests).
+pub fn figure1_dims(
+    rows: usize,
+    d: usize,
+    informative: usize,
+    seed: u64,
+) -> (DenseMatrix, Vec<u8>) {
+    assert!(informative <= d);
+    let mut rng = Rng::new(seed);
+    let mut values = Vec::with_capacity(rows * d);
+    let mut labels = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let class_b = rng.bool(0.5);
+        labels.push(class_b as u8);
+        let p_info = if class_b { 2.0 / 3.0 } else { 1.0 / 3.0 };
+        for j in 0..d {
+            let p = if j < informative { p_info } else { 0.5 };
+            values.push(if rng.bool(p) { 1.0 } else { 0.0 });
+        }
+    }
+    (DenseMatrix::new(rows, d, values), labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squiggles_shape_and_spread() {
+        let m = squiggles(2000, 1);
+        assert_eq!((m.n, m.d), (2000, 2));
+        // Points should span a wide area, not collapse.
+        let xs: Vec<f32> = (0..m.n).map(|i| m.row(i)[0]).collect();
+        let (lo, hi) = xs
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+        assert!(hi - lo > 50.0, "span {}", hi - lo);
+    }
+
+    #[test]
+    fn squiggles_is_locally_1d() {
+        // Manifold check: the nearest neighbor of a squiggle point is far
+        // closer than a random point would be under a uniform distribution.
+        let m = squiggles(3000, 2);
+        let mut nn_sum = 0.0;
+        for i in 0..50 {
+            let mut best = f64::INFINITY;
+            for j in 0..m.n {
+                if i == j {
+                    continue;
+                }
+                let dx = (m.row(i)[0] - m.row(j)[0]) as f64;
+                let dy = (m.row(i)[1] - m.row(j)[1]) as f64;
+                best = best.min(dx * dx + dy * dy);
+            }
+            nn_sum += best.sqrt();
+        }
+        assert!(nn_sum / 50.0 < 2.0, "mean NN dist {}", nn_sum / 50.0);
+    }
+
+    #[test]
+    fn voronoi_shape() {
+        let m = voronoi(1500, 3);
+        assert_eq!((m.n, m.d), (1500, 2));
+    }
+
+    #[test]
+    fn cell_surrogate_is_clustered() {
+        let m = cell_surrogate(1000, 4);
+        assert_eq!((m.n, m.d), (1000, 38));
+        // Clustered: mean NN distance << mean pairwise distance.
+        let mean_pair = {
+            let mut acc = 0.0;
+            for i in 0..40 {
+                for j in 40..80 {
+                    acc += crate::metrics::dense_euclidean(m.row(i), m.row(j));
+                }
+            }
+            acc / 1600.0
+        };
+        let mean_nn = {
+            let mut acc = 0.0;
+            for i in 0..40 {
+                let mut best = f64::INFINITY;
+                for j in 0..m.n {
+                    if i != j {
+                        best = best.min(crate::metrics::dense_euclidean(m.row(i), m.row(j)));
+                    }
+                }
+                acc += best;
+            }
+            acc / 40.0
+        };
+        assert!(mean_nn < mean_pair / 2.0, "nn {mean_nn} vs pair {mean_pair}");
+    }
+
+    #[test]
+    fn covtype_surrogate_shape_and_binaries() {
+        let m = covtype_surrogate(500, 5);
+        assert_eq!((m.n, m.d), (500, 54));
+        for i in 0..50 {
+            for j in 10..54 {
+                let v = m.row(i)[j];
+                assert!(v == 0.0 || v == 1.0, "indicator not binary: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn figure1_class_statistics() {
+        let (m, labels) = figure1_dims(4000, 100, 20, 6);
+        assert_eq!(m.n, 4000);
+        // Informative block frequency per class.
+        let mut sum = [0f64; 2];
+        let mut cnt = [0usize; 2];
+        for i in 0..m.n {
+            let c = labels[i] as usize;
+            let ones: f32 = m.row(i)[..20].iter().sum();
+            sum[c] += ones as f64 / 20.0;
+            cnt[c] += 1;
+        }
+        let pa = sum[0] / cnt[0] as f64;
+        let pb = sum[1] / cnt[1] as f64;
+        assert!((pa - 1.0 / 3.0).abs() < 0.03, "class A rate {pa}");
+        assert!((pb - 2.0 / 3.0).abs() < 0.03, "class B rate {pb}");
+        // Noise block is ~1/2 for both.
+        let noise: f64 = (0..200)
+            .map(|i| m.row(i)[20..].iter().sum::<f32>() as f64 / 80.0)
+            .sum::<f64>()
+            / 200.0;
+        assert!((noise - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn gaussian_mixture_deterministic() {
+        let a = gaussian_mixture(100, 8, 3, 5.0, 42);
+        let b = gaussian_mixture(100, 8, 3, 5.0, 42);
+        assert_eq!(a.values, b.values);
+        let c = gaussian_mixture(100, 8, 3, 5.0, 43);
+        assert_ne!(a.values, c.values);
+    }
+}

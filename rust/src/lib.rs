@@ -1,0 +1,49 @@
+//! # anchors-hierarchy
+//!
+//! A production-grade reproduction of **"The Anchors Hierarchy: Using the
+//! Triangle Inequality to Survive High Dimensional Data"** (Andrew W.
+//! Moore, UAI 2000): metric trees decorated with cached sufficient
+//! statistics, built *middle-out* via the anchors hierarchy, and the three
+//! tree-accelerated statistical algorithms the paper evaluates — exact
+//! K-means, non-parametric anomaly detection, and all-pairs (correlated
+//! attribute) search — plus the §6 extensions (dual-tree MST /
+//! dependency trees, accelerated spherical Gaussian mixtures, k-NN).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — all tree/anchor algorithms, dataset suite,
+//!   distance accounting, the batch-job coordinator, and the bench harness
+//!   that regenerates every table and figure of the paper.
+//! * **L2/L1 (python/, build-time only)** — a JAX compute graph wrapping a
+//!   Pallas tiled pairwise-distance kernel, AOT-lowered to HLO text in
+//!   `artifacts/`. The rust [`runtime`] loads those artifacts through
+//!   PJRT (the `xla` crate) and uses them for dense leaf-level distance
+//!   blocks. Python never runs at request time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+//! use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+//! use anchors_hierarchy::algorithms::kmeans;
+//!
+//! let space = DatasetSpec::scaled(DatasetKind::Cell, 0.1).build();
+//! let tree = middle_out::build(&space, &MiddleOutConfig::default());
+//! let result = kmeans::tree_lloyd(
+//!     &space, &tree, kmeans::Init::Anchors, 20, 50, &kmeans::KmeansOpts::default());
+//! println!("distortion {}", result.distortion);
+//! ```
+
+pub mod algorithms;
+pub mod anchors;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod dataset;
+pub mod json;
+pub mod metrics;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod tree;

@@ -1,0 +1,408 @@
+//! `anchors-hierarchy` — CLI front-end for the paper reproduction.
+//!
+//! Commands:
+//!   table2 | table3 | table4 | figure1   regenerate the paper's tables/figures
+//!   kmeans | anomaly | allpairs | mst    run one algorithm on one dataset
+//!   tree                                 build a tree and print its shape
+//!   serve-demo                           drive the batch coordinator
+//!   artifacts                            inspect the AOT artifact manifest
+//!
+//! Every command takes `--scale` (fraction of the paper's dataset sizes)
+//! and `--seed`; run with no command for usage.
+
+use anchors_hierarchy::algorithms::{allpairs, anomaly, kmeans, mst};
+use anchors_hierarchy::bench::tables;
+use anchors_hierarchy::cli::Args;
+use anchors_hierarchy::coordinator::{Coordinator, JobKind, JobSpec, JobState};
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::runtime::BatchDistanceEngine;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::tree::top_down;
+use std::sync::Arc;
+
+const USAGE: &str = "\
+anchors-hierarchy — metric trees with cached sufficient statistics
+  (reproduction of Moore, 'The Anchors Hierarchy', UAI 2000)
+
+USAGE: anchors-hierarchy <command> [--flag value]...
+
+paper experiments
+  table2   [--scale F] [--iters N] [--rmin N] [--datasets a,b,..]  Table 2
+  table3   [--scale F] [--iters N] [--rmin N]                      Table 3
+  table4   [--scale F] [--iters N] [--rmin N]                      Table 4
+  figure1  [--rows N]                                              Figure 1
+
+single runs (common flags: --dataset NAME --scale F --seed N --rmin N
+                           --tree BOOL --xla BOOL)
+  kmeans   [--k N] [--iters N] [--init random|anchors]
+  anomaly  [--threshold N] [--frac F]
+  allpairs [--tau F]            (default: auto-calibrated)
+  mst
+  tree     [--builder middle-out|top-down] [--validate BOOL]
+
+system
+  serve-demo [--workers N] [--jobs N]        exercise the coordinator
+  serve      [--addr HOST:PORT] [--workers N]  TCP JSON-line job server
+  artifacts                                  show the AOT manifest
+
+datasets: squiggles voronoi cell covtype reuters50 reuters100
+          gen{100|1000|10000}-k{3|20|100} figure1
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    match run(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn dataset_spec(args: &Args) -> Result<DatasetSpec, String> {
+    let name = args.str_flag("dataset", "cell");
+    let kind = DatasetKind::parse(&name)
+        .ok_or_else(|| format!("unknown dataset {name:?} (see usage)"))?;
+    Ok(DatasetSpec {
+        kind,
+        scale: args.flag("scale", 0.05f64)?,
+        seed: args.flag("seed", 20130u64)?,
+    })
+}
+
+fn maybe_engine(args: &Args) -> Result<Option<Arc<BatchDistanceEngine>>, String> {
+    if args.bool_flag("xla", false)? {
+        let e = BatchDistanceEngine::open_default()
+            .map_err(|e| format!("--xla requested but engine unavailable: {e}"))?;
+        Ok(Some(Arc::new(e)))
+    } else {
+        Ok(None)
+    }
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    match args.command.as_str() {
+        "table2" => {
+            let mut cfg = tables::Table2Config {
+                scale: args.flag("scale", 0.05)?,
+                kmeans_iters: args.flag("iters", 5)?,
+                rmin: args.flag("rmin", 30)?,
+                seed: args.flag("seed", 20130)?,
+                datasets: None,
+            };
+            if let Some(list) = args.opt_str("datasets") {
+                let kinds = list
+                    .split(',')
+                    .map(|n| {
+                        DatasetKind::parse(n.trim())
+                            .ok_or_else(|| format!("unknown dataset {n:?}"))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                cfg.datasets = Some(kinds);
+            }
+            args.finish()?;
+            println!(
+                "# Table 2 (scale {}, {} k-means iters, rmin {})",
+                cfg.scale, cfg.kmeans_iters, cfg.rmin
+            );
+            let rows = tables::table2(&cfg);
+            tables::print_table2(&rows);
+            Ok(())
+        }
+        "table3" => {
+            let scale = args.flag("scale", 0.03)?;
+            let iters = args.flag("iters", 5)?;
+            let rmin = args.flag("rmin", 30)?;
+            let seed = args.flag("seed", 20130)?;
+            args.finish()?;
+            println!("# Table 3 (scale {scale}, {iters} iters, rmin {rmin})");
+            let rows = tables::table3(scale, iters, rmin, seed);
+            tables::print_table3(&rows);
+            Ok(())
+        }
+        "table4" => {
+            let scale = args.flag("scale", 0.05)?;
+            let iters = args.flag("iters", 50)?;
+            let rmin = args.flag("rmin", 30)?;
+            let seed = args.flag("seed", 20130)?;
+            args.finish()?;
+            println!("# Table 4 (scale {scale}, {iters} iters, rmin {rmin})");
+            let rows = tables::table4(scale, iters, rmin, seed);
+            tables::print_table4(&rows);
+            Ok(())
+        }
+        "figure1" => {
+            let rows = args.flag("rows", 20_000usize)?;
+            let seed = args.flag("seed", 20130)?;
+            args.finish()?;
+            let r = tables::figure1(rows, seed);
+            tables::print_figure1(&r);
+            Ok(())
+        }
+        "kmeans" => {
+            let spec = dataset_spec(args)?;
+            let k = args.flag("k", 20usize)?;
+            let iters = args.flag("iters", 10usize)?;
+            let rmin = args.flag("rmin", 30usize)?;
+            let use_tree = args.bool_flag("tree", true)?;
+            let init_name = args.str_flag("init", "random");
+            let engine = maybe_engine(args)?;
+            args.finish()?;
+            let init = match init_name.as_str() {
+                "random" => kmeans::Init::Random,
+                "anchors" => kmeans::Init::Anchors,
+                other => return Err(format!("unknown init {other:?}")),
+            };
+            let space = spec.build();
+            println!(
+                "dataset {} ({} rows × {} dims), k={k}, iters={iters}, tree={use_tree}",
+                spec.kind.name(),
+                space.n(),
+                space.dim()
+            );
+            let opts = kmeans::KmeansOpts { engine, seed: spec.seed, ..Default::default() };
+            let result = if use_tree {
+                let t0 = std::time::Instant::now();
+                let tree = middle_out::build(
+                    &space,
+                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
+                );
+                println!(
+                    "tree: {} nodes, build {} dists, {:.2}s",
+                    tree.nodes.len(),
+                    tree.build_dists,
+                    t0.elapsed().as_secs_f64()
+                );
+                kmeans::tree_lloyd(&space, &tree, init, k, iters, &opts)
+            } else {
+                kmeans::naive_lloyd(&space, init, k, iters, &opts)
+            };
+            println!(
+                "distortion {:.6e}  iterations {}  distance computations {}",
+                result.distortion, result.iterations, result.dists
+            );
+            Ok(())
+        }
+        "anomaly" => {
+            let spec = dataset_spec(args)?;
+            let threshold = args.flag("threshold", 20u64)?;
+            let frac = args.flag("frac", 0.10f64)?;
+            let rmin = args.flag("rmin", 30usize)?;
+            let use_tree = args.bool_flag("tree", true)?;
+            args.finish()?;
+            let space = spec.build();
+            let radius = anomaly::calibrate_radius(&space, threshold, frac, 50, spec.seed);
+            let params = anomaly::AnomalyParams { radius, threshold };
+            println!(
+                "dataset {} ({} rows), radius {radius:.4}, threshold {threshold}",
+                spec.kind.name(),
+                space.n()
+            );
+            let sweep = if use_tree {
+                let tree = middle_out::build(
+                    &space,
+                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
+                );
+                anomaly::tree_sweep(&space, &tree, &params)
+            } else {
+                anomaly::naive_sweep(&space, &params)
+            };
+            println!(
+                "anomalies {} / {} ({:.1}%), distance computations {}",
+                sweep.n_anomalies,
+                space.n(),
+                100.0 * sweep.n_anomalies as f64 / space.n() as f64,
+                sweep.dists
+            );
+            Ok(())
+        }
+        "allpairs" => {
+            let spec = dataset_spec(args)?;
+            let rmin = args.flag("rmin", 30usize)?;
+            let use_tree = args.bool_flag("tree", true)?;
+            let tau_flag: f64 = args.flag("tau", -1.0)?;
+            args.finish()?;
+            let space = spec.build();
+            let tau = if tau_flag > 0.0 {
+                tau_flag
+            } else {
+                tables::calibrate_tau(&space, spec.seed)
+            };
+            println!(
+                "dataset {} ({} rows), tau {tau:.4}",
+                spec.kind.name(),
+                space.n()
+            );
+            let result = if use_tree {
+                let tree = middle_out::build(
+                    &space,
+                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
+                );
+                allpairs::tree_close_pairs(&space, &tree, tau)
+            } else {
+                allpairs::naive_close_pairs(&space, tau)
+            };
+            println!(
+                "close pairs {}  distance computations {}",
+                result.pairs.len(),
+                result.dists
+            );
+            Ok(())
+        }
+        "mst" => {
+            let spec = dataset_spec(args)?;
+            let rmin = args.flag("rmin", 30usize)?;
+            let use_tree = args.bool_flag("tree", true)?;
+            args.finish()?;
+            let space = spec.build();
+            let edges = if use_tree {
+                let tree = middle_out::build(
+                    &space,
+                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
+                );
+                mst::tree_mst(&space, &tree)
+            } else {
+                mst::naive_mst(&space)
+            };
+            println!(
+                "MST: {} edges, total weight {:.4}, distance computations {}",
+                edges.len(),
+                mst::total_weight(&edges),
+                space.dist_count()
+            );
+            Ok(())
+        }
+        "tree" => {
+            let spec = dataset_spec(args)?;
+            let rmin = args.flag("rmin", 30usize)?;
+            let builder = args.str_flag("builder", "middle-out");
+            let validate = args.bool_flag("validate", false)?;
+            args.finish()?;
+            let space = spec.build();
+            let t0 = std::time::Instant::now();
+            let tree = match builder.as_str() {
+                "middle-out" => middle_out::build(
+                    &space,
+                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
+                ),
+                "top-down" => top_down::build(&space, rmin),
+                other => return Err(format!("unknown builder {other:?}")),
+            };
+            let shape = tree.shape();
+            println!(
+                "{} tree over {} ({} rows × {} dims): {} nodes, {} leaves, depth {}, \
+                 mean leaf size {:.1}, mean leaf radius {:.4}, build {} dists, {:.2}s",
+                builder,
+                spec.kind.name(),
+                space.n(),
+                space.dim(),
+                shape.nodes,
+                shape.leaves,
+                shape.max_depth,
+                shape.mean_leaf_size,
+                shape.mean_leaf_radius,
+                tree.build_dists,
+                t0.elapsed().as_secs_f64()
+            );
+            if validate {
+                tree.validate(&space).map_err(|e| format!("INVALID TREE: {e}"))?;
+                println!("validation OK");
+            }
+            Ok(())
+        }
+        "serve" => {
+            let addr = args.str_flag("addr", "127.0.0.1:7407");
+            let workers = args.flag("workers", 4usize)?;
+            let capacity = args.flag("capacity", 256usize)?;
+            args.finish()?;
+            let engine = BatchDistanceEngine::open_default().ok().map(Arc::new);
+            let coord = Arc::new(Coordinator::with_engine(workers, capacity, engine));
+            let server = anchors_hierarchy::coordinator::server::Server::start(&addr, coord)
+                .map_err(|e| format!("bind {addr}: {e}"))?;
+            println!(
+                "serving newline-delimited JSON on {} ({workers} workers, queue {capacity});\nexample: {{\"cmd\":\"submit\",\"dataset\":\"cell\",\"scale\":0.01,\"op\":\"kmeans\",\"k\":10}}\nCtrl-C to stop",
+                server.addr()
+            );
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "serve-demo" => {
+            let workers = args.flag("workers", 4usize)?;
+            let jobs = args.flag("jobs", 12usize)?;
+            let scale = args.flag("scale", 0.01f64)?;
+            let seed = args.flag("seed", 20130u64)?;
+            args.finish()?;
+            serve_demo(workers, jobs, scale, seed)
+        }
+        "artifacts" => {
+            args.finish()?;
+            let engine = BatchDistanceEngine::open_default()
+                .map_err(|e| format!("{e} (run `make artifacts`)"))?;
+            let m = engine.manifest();
+            println!("tiles: n={} k={}", m.tile_n, m.tile_k);
+            for program in m.programs() {
+                println!("  {program}: widths {:?}", m.widths(program));
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    }
+}
+
+/// Drive the coordinator with a mixed batch of jobs across datasets.
+fn serve_demo(workers: usize, jobs: usize, scale: f64, seed: u64) -> Result<(), String> {
+    println!("coordinator: {workers} workers, submitting {jobs} jobs (scale {scale})");
+    let engine = BatchDistanceEngine::open_default().ok().map(Arc::new);
+    if engine.is_some() {
+        println!("XLA batch engine: enabled");
+    }
+    let coord = Coordinator::with_engine(workers, jobs * 2, engine);
+    let datasets = [
+        DatasetKind::Squiggles,
+        DatasetKind::Voronoi,
+        DatasetKind::Cell,
+        DatasetKind::Covtype,
+    ];
+    let mut ids = Vec::new();
+    for i in 0..jobs {
+        let dataset = DatasetSpec { kind: datasets[i % datasets.len()].clone(), scale, seed };
+        let kind = match i % 3 {
+            0 => JobKind::Kmeans { k: 10, iters: 5, anchors_init: i % 2 == 0 },
+            1 => JobKind::Anomaly { threshold: 10, target_frac: 0.1 },
+            _ => JobKind::AllPairs { tau: 0.5 },
+        };
+        let spec = JobSpec { dataset, kind, use_tree: true, rmin: 30 };
+        match coord.submit(spec) {
+            Ok(id) => ids.push(id),
+            Err(e) => println!("job {i} rejected: {e:?}"),
+        }
+    }
+    for id in ids {
+        match coord.wait(id) {
+            JobState::Done(r) => println!(
+                "job {id}: {:?}  dists {}  wall {:.1} ms",
+                r.output, r.dists, r.wall_ms
+            ),
+            JobState::Failed(e) => println!("job {id} FAILED: {e}"),
+            _ => unreachable!(),
+        }
+    }
+    let m = coord.shutdown();
+    println!(
+        "done: submitted {} completed {} failed {} rejected {} total-dists {}",
+        m.submitted, m.completed, m.failed, m.rejected, m.total_dists
+    );
+    Ok(())
+}

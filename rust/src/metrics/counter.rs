@@ -1,0 +1,87 @@
+//! The distance-computation counter — the paper's measuring stick.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe counter of distance computations. Relaxed ordering is
+/// sufficient: the counter is only read after the algorithm completes (or
+/// for monitoring, where approximate freshness is fine), never used for
+/// synchronization.
+#[derive(Debug, Default)]
+pub struct DistCounter {
+    count: AtomicU64,
+}
+
+impl DistCounter {
+    pub fn new() -> Self {
+        DistCounter { count: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+
+    /// Run `f` and return (result, distances incurred by `f`). Only valid
+    /// when no other thread touches the counter concurrently.
+    pub fn scoped<T>(&self, f: impl FnOnce() -> T) -> (T, u64) {
+        let before = self.get();
+        let out = f();
+        (out, self.get() - before)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn add_get_reset() {
+        let c = DistCounter::new();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+        c.reset();
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn scoped_measures_delta() {
+        let c = DistCounter::new();
+        c.add(5);
+        let (out, delta) = c.scoped(|| {
+            c.add(10);
+            "x"
+        });
+        assert_eq!(out, "x");
+        assert_eq!(delta, 10);
+        assert_eq!(c.get(), 15);
+    }
+
+    #[test]
+    fn concurrent_adds_do_not_lose_counts() {
+        let c = Arc::new(DistCounter::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    c.add(1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+}

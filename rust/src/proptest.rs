@@ -1,0 +1,113 @@
+//! A small property-based-testing driver (the environment is offline, so
+//! the `proptest` crate is unavailable; this provides the same workflow:
+//! many random cases per property, deterministic seeds, and failure
+//! reports that include the reproducing seed).
+
+use crate::rng::Rng;
+
+/// Outcome of a single case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of property `f`. Each case gets a fresh
+/// deterministic [`Rng`]; on failure the panic message carries the seed so
+/// `check_with_seed` can replay it.
+pub fn check(name: &str, cases: u64, f: impl Fn(&mut Rng) -> CaseResult) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (replay seed: {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay one case by explicit seed (for debugging failures).
+pub fn check_with_seed(name: &str, seed: u64, f: impl Fn(&mut Rng) -> CaseResult) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property {name:?} failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper producing `CaseResult`s.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // Interior mutability via a cell since f is Fn.
+        let counter = std::cell::Cell::new(0u64);
+        check("always-true", 25, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always-false", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_see_different_randomness() {
+        let seen = std::cell::RefCell::new(std::collections::HashSet::new());
+        check("distinct-streams", 20, |rng| {
+            seen.borrow_mut().insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.borrow().len(), 20);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = || {
+            let v = std::cell::RefCell::new(Vec::new());
+            check("det", 5, |rng| {
+                v.borrow_mut().push(rng.next_u64());
+                Ok(())
+            });
+            v.into_inner()
+        };
+        assert_eq!(collect(), collect());
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check("macro", 3, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 10, "x was {x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// One compiled (program, shape) variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    pub program: String,
+    pub n: usize,
+    pub k: usize,
+    pub d: usize,
+    pub file: String,
+    pub outputs: Vec<String>,
+}
+
+/// The full artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tile_n: usize,
+    pub tile_k: usize,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let field_usize = |obj: &Value, key: &str| -> Result<usize> {
+            obj.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing numeric field {key:?}"))
+        };
+        let field_str = |obj: &Value, key: &str| -> Result<String> {
+            obj.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("manifest missing string field {key:?}"))
+        };
+        let tile_n = field_usize(&v, "tile_n")?;
+        let tile_k = field_usize(&v, "tile_k")?;
+        let variants = v
+            .get("variants")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing variants array"))?
+            .iter()
+            .map(|item| {
+                Ok(Variant {
+                    program: field_str(item, "program")?,
+                    n: field_usize(item, "n")?,
+                    k: field_usize(item, "k")?,
+                    d: field_usize(item, "d")?,
+                    file: field_str(item, "file")?,
+                    outputs: item
+                        .get("outputs")
+                        .and_then(Value::as_arr)
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(|o| o.as_str().map(str::to_string))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { tile_n, tile_k, variants })
+    }
+
+    /// Programs present in the manifest (deduped).
+    pub fn programs(&self) -> Vec<&str> {
+        let mut p: Vec<&str> = self.variants.iter().map(|v| v.program.as_str()).collect();
+        p.sort();
+        p.dedup();
+        p
+    }
+
+    /// Feature widths available for a program, ascending.
+    pub fn widths(&self, program: &str) -> Vec<usize> {
+        let mut w: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|v| v.program == program)
+            .map(|v| v.d)
+            .collect();
+        w.sort_unstable();
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "tile_n": 256, "tile_k": 128,
+      "variants": [
+        {"program": "pairwise_d2", "n": 256, "k": 128, "d": 8,
+         "file": "pairwise_d2_n256_k128_d8.hlo.txt", "outputs": ["d2[n,k]f32"]},
+        {"program": "pairwise_d2", "n": 256, "k": 128, "d": 64,
+         "file": "pairwise_d2_n256_k128_d64.hlo.txt", "outputs": ["d2[n,k]f32"]},
+        {"program": "kmeans_accumulate", "n": 256, "k": 128, "d": 8,
+         "file": "kmeans_accumulate_n256_k128_d8.hlo.txt",
+         "outputs": ["counts[k]f32", "sums[k,d]f32", "distortion[]f32", "assign[n]i32"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.tile_n, 256);
+        assert_eq!(m.tile_k, 128);
+        assert_eq!(m.variants.len(), 3);
+        assert_eq!(m.variants[0].d, 8);
+        assert_eq!(m.variants[2].outputs.len(), 4);
+    }
+
+    #[test]
+    fn programs_and_widths() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.programs(), vec!["kmeans_accumulate", "pairwise_d2"]);
+        assert_eq!(m.widths("pairwise_d2"), vec![8, 64]);
+        assert!(m.widths("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("{\"tile_n\": 1}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must parse and
+        // contain the three programs at the five widths.
+        let path = {
+            let mut dir = std::env::current_dir().unwrap();
+            loop {
+                let c = dir.join("artifacts/manifest.json");
+                if c.exists() {
+                    break Some(c);
+                }
+                if !dir.pop() {
+                    break None;
+                }
+            }
+        };
+        let Some(path) = path else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(path).unwrap();
+        assert_eq!(
+            m.programs(),
+            vec!["kmeans_accumulate", "pairwise_d2", "range_count"]
+        );
+        assert_eq!(m.widths("pairwise_d2"), vec![8, 64, 128, 256, 1024]);
+    }
+}

@@ -1,0 +1,592 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and run them
+//! from the rust hot path.
+//!
+//! `make artifacts` (python, build-time only) lowers each program variant
+//! to HLO **text** — the interchange format that survives the jax≥0.5 /
+//! xla_extension 0.5.1 proto-id mismatch — plus `manifest.json`. This
+//! module parses the manifest, compiles variants on the PJRT CPU client
+//! *lazily* (first use) and exposes [`BatchDistanceEngine`], which answers
+//! dense (points × centers) squared-distance blocks of arbitrary shape by
+//! tiling/padding to the compiled (tile_n × tile_k × d) shapes.
+//!
+//! Zero padding is exact for squared Euclidean distances, so results for
+//! the real rows/cols are bit-stable; padded rows/cols are sliced away
+//! before returning. Counting: callers account `n·k` distances per block
+//! via [`crate::metrics::Space::count_bulk`] — identical to the scalar
+//! accounting.
+
+mod artifacts;
+
+pub use artifacts::{Manifest, Variant};
+
+use crate::metrics::Space;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Which AOT program a variant implements.
+pub const PROGRAM_PAIRWISE: &str = "pairwise_d2";
+pub const PROGRAM_KMEANS_ACC: &str = "kmeans_accumulate";
+pub const PROGRAM_RANGE_COUNT: &str = "range_count";
+
+/// A compiled executable plus its shape contract.
+struct LoadedVariant {
+    exe: xla::PjRtLoadedExecutable,
+    variant: Variant,
+}
+
+/// The PJRT engine: owns the client and the lazily-compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    loaded: Mutex<HashMap<(String, usize), std::sync::Arc<LoadedVariant>>>,
+}
+
+impl Engine {
+    /// Open the artifact directory (usually `artifacts/`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, dir, manifest, loaded: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open `artifacts/` relative to the repo root, walking up from cwd —
+    /// convenient for tests/benches/examples run from any directory.
+    pub fn open_default() -> Result<Engine> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let candidate = dir.join("artifacts");
+            if candidate.join("manifest.json").exists() {
+                return Engine::open(candidate);
+            }
+            if !dir.pop() {
+                return Err(anyhow!(
+                    "no artifacts/manifest.json found; run `make artifacts`"
+                ));
+            }
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Smallest compiled feature width ≥ `dim`, if any.
+    pub fn width_for(&self, program: &str, dim: usize) -> Option<usize> {
+        self.manifest
+            .variants
+            .iter()
+            .filter(|v| v.program == program && v.d >= dim)
+            .map(|v| v.d)
+            .min()
+    }
+
+    /// Fetch (compiling on first use) the variant of `program` with
+    /// feature width exactly `d`.
+    fn load(&self, program: &str, d: usize) -> Result<std::sync::Arc<LoadedVariant>> {
+        let key = (program.to_string(), d);
+        let mut guard = self.loaded.lock().unwrap();
+        if let Some(v) = guard.get(&key) {
+            return Ok(v.clone());
+        }
+        let variant = self
+            .manifest
+            .variants
+            .iter()
+            .find(|v| v.program == program && v.d == d)
+            .ok_or_else(|| anyhow!("no variant {program} d={d} in manifest"))?
+            .clone();
+        let path = self.dir.join(&variant.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let loaded = std::sync::Arc::new(LoadedVariant { exe, variant });
+        guard.insert(key, loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Run the raw pairwise program once on pre-padded buffers.
+    /// `x` is `tile_n × d` row-major, `c` is `tile_k × d`. Returns the
+    /// `tile_n × tile_k` squared-distance tile.
+    pub fn pairwise_tile(&self, d: usize, x: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        let lv = self.load(PROGRAM_PAIRWISE, d)?;
+        let (n, k) = (lv.variant.n, lv.variant.k);
+        debug_assert_eq!(x.len(), n * d);
+        debug_assert_eq!(c.len(), k * d);
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[n as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let cl = xla::Literal::vec1(c)
+            .reshape(&[k as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let result = lv
+            .exe
+            .execute::<xla::Literal>(&[xl, cl])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Run one `kmeans_accumulate` tile: returns (counts[k], sums[k·d],
+    /// distortion, assign[n]) for the padded tile.
+    pub fn kmeans_accumulate_tile(
+        &self,
+        d: usize,
+        x: &[f32],
+        c: &[f32],
+        xmask: &[f32],
+        cmask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, f32, Vec<i32>)> {
+        let lv = self.load(PROGRAM_KMEANS_ACC, d)?;
+        let (n, k) = (lv.variant.n, lv.variant.k);
+        debug_assert_eq!(x.len(), n * d);
+        debug_assert_eq!(c.len(), k * d);
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[n as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let cl = xla::Literal::vec1(c)
+            .reshape(&[k as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let xm = xla::Literal::vec1(xmask);
+        let cm = xla::Literal::vec1(cmask);
+        let result = lv
+            .exe
+            .execute::<xla::Literal>(&[xl, cl, xm, cm])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let (counts, sums, distortion, assign) =
+            result.to_tuple4().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((
+            counts.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            sums.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            distortion
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?,
+            assign.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Run one `range_count` tile: counts[k] of dataset rows within the
+    /// per-query radius.
+    pub fn range_count_tile(
+        &self,
+        d: usize,
+        x: &[f32],
+        q: &[f32],
+        xmask: &[f32],
+        radius2: &[f32],
+    ) -> Result<Vec<f32>> {
+        let lv = self.load(PROGRAM_RANGE_COUNT, d)?;
+        let (n, k) = (lv.variant.n, lv.variant.k);
+        debug_assert_eq!(x.len(), n * d);
+        debug_assert_eq!(q.len(), k * d);
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[n as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let ql = xla::Literal::vec1(q)
+            .reshape(&[k as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let xm = xla::Literal::vec1(xmask);
+        let r2 = xla::Literal::vec1(radius2);
+        let result = lv
+            .exe
+            .execute::<xla::Literal>(&[xl, ql, xm, r2])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    pub fn tile_n(&self) -> usize {
+        self.manifest.tile_n
+    }
+
+    pub fn tile_k(&self) -> usize {
+        self.manifest.tile_k
+    }
+}
+
+/// High-level batched-distance service used by the algorithms: answers
+/// arbitrary (rows × centers) squared-distance blocks by padding into the
+/// compiled tiles.
+///
+/// **Threading model.** The xla crate's PJRT client is `Rc`-based and
+/// neither `Send` nor `Sync`, so this facade holds only `Send + Sync`
+/// metadata (artifact path + manifest) and each thread lazily opens its
+/// own [`Engine`] on first use (cached in a thread-local). Workers are
+/// long-lived, so the per-thread client cost amortizes to zero.
+#[derive(Debug)]
+pub struct BatchDistanceEngine {
+    dir: PathBuf,
+    manifest: Manifest,
+    /// Blocks smaller than this (n·k product) are not worth the FFI trip;
+    /// callers fall back to scalar loops below it.
+    min_block: usize,
+}
+
+thread_local! {
+    static TL_ENGINES: std::cell::RefCell<HashMap<PathBuf, std::rc::Rc<Engine>>> =
+        std::cell::RefCell::new(HashMap::new());
+}
+
+impl BatchDistanceEngine {
+    /// Open the artifact directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        Ok(BatchDistanceEngine { dir, manifest, min_block: 512 })
+    }
+
+    /// Open `artifacts/` relative to the repo root, walking up from cwd.
+    pub fn open_default() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let candidate = dir.join("artifacts");
+            if candidate.join("manifest.json").exists() {
+                return Self::open(candidate);
+            }
+            if !dir.pop() {
+                return Err(anyhow!(
+                    "no artifacts/manifest.json found; run `make artifacts`"
+                ));
+            }
+        }
+    }
+
+    pub fn with_min_block(mut self, min_block: usize) -> Self {
+        self.min_block = min_block;
+        self
+    }
+
+    pub fn min_block(&self) -> usize {
+        self.min_block
+    }
+
+    pub fn tile_n(&self) -> usize {
+        self.manifest.tile_n
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Smallest compiled feature width ≥ `dim`, if any.
+    pub fn width_for(&self, program: &str, dim: usize) -> Option<usize> {
+        self.manifest
+            .variants
+            .iter()
+            .filter(|v| v.program == program && v.d >= dim)
+            .map(|v| v.d)
+            .min()
+    }
+
+    /// Run `f` against this thread's engine (opened lazily).
+    pub fn with_engine<T>(&self, f: impl FnOnce(&Engine) -> Result<T>) -> Result<T> {
+        TL_ENGINES.with(|cell| {
+            let engine = {
+                let mut map = cell.borrow_mut();
+                match map.get(&self.dir) {
+                    Some(e) => e.clone(),
+                    None => {
+                        let e = std::rc::Rc::new(Engine::open(&self.dir)?);
+                        map.insert(self.dir.clone(), e.clone());
+                        e
+                    }
+                }
+            };
+            f(&engine)
+        })
+    }
+
+    /// Squared distances between dataset rows `rows` and dense `centers`.
+    /// Returns row-major `rows.len() × centers.len()`. Falls back to a
+    /// scalar loop when no compiled width fits the dimension or the
+    /// engine errors.
+    ///
+    /// NOT counted here — callers decide the accounting (the algorithms
+    /// count n·k in bulk, matching the scalar path).
+    pub fn dist2_block(&self, space: &Space, rows: &[u32], centers: &[Vec<f32>]) -> Vec<f32> {
+        let dim = space.dim();
+        let k = centers.len();
+        let width = match self.width_for(PROGRAM_PAIRWISE, dim) {
+            Some(w) => w,
+            None => return scalar_block(space, rows, centers),
+        };
+        let (tn, tk) = (self.manifest.tile_n, self.manifest.tile_k);
+        let mut out = vec![0f32; rows.len() * k];
+        // Pre-pad centers once per K-tile.
+        let mut x_tile = vec![0f32; tn * width];
+        let mut c_tile = vec![0f32; tk * width];
+        let mut kc = 0usize;
+        while kc < k {
+            let kh = (kc + tk).min(k);
+            for v in c_tile.iter_mut() {
+                *v = 0.0;
+            }
+            for (ci, center) in centers[kc..kh].iter().enumerate() {
+                c_tile[ci * width..ci * width + dim].copy_from_slice(center);
+            }
+            let mut rc = 0usize;
+            while rc < rows.len() {
+                let rh = (rc + tn).min(rows.len());
+                for v in x_tile.iter_mut() {
+                    *v = 0.0;
+                }
+                for (ri, &p) in rows[rc..rh].iter().enumerate() {
+                    space.fill_row(p as usize, &mut x_tile[ri * width..(ri + 1) * width]);
+                }
+                let tile = self.with_engine(|e| e.pairwise_tile(width, &x_tile, &c_tile));
+                match tile {
+                    Ok(tile) => {
+                        for ri in 0..(rh - rc) {
+                            for ci in 0..(kh - kc) {
+                                out[(rc + ri) * k + (kc + ci)] = tile[ri * tk + ci];
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        // Degrade gracefully: scalar fill for this block.
+                        for (ri, &p) in rows[rc..rh].iter().enumerate() {
+                            for (ci, center) in centers[kc..kh].iter().enumerate() {
+                                let d = space.dist_to_vec_uncounted(
+                                    p as usize,
+                                    center,
+                                    crate::metrics::dense_dot(center, center),
+                                );
+                                out[(rc + ri) * k + (kc + ci)] = (d * d) as f32;
+                            }
+                        }
+                    }
+                }
+                rc = rh;
+            }
+            kc = kh;
+        }
+        out
+    }
+}
+
+/// Scalar fallback with identical output layout.
+fn scalar_block(space: &Space, rows: &[u32], centers: &[Vec<f32>]) -> Vec<f32> {
+    let k = centers.len();
+    let c_sq: Vec<f64> = centers
+        .iter()
+        .map(|c| crate::metrics::dense_dot(c, c))
+        .collect();
+    let mut out = vec![0f32; rows.len() * k];
+    for (ri, &p) in rows.iter().enumerate() {
+        for (ci, center) in centers.iter().enumerate() {
+            let d = space.dist_to_vec_uncounted(p as usize, center, c_sq[ci]);
+            out[ri * k + ci] = (d * d) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+
+    fn random_space(n: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        Space::euclidean(Data::Dense(DenseMatrix::new(n, d, vals)))
+    }
+
+    fn engine() -> Option<BatchDistanceEngine> {
+        BatchDistanceEngine::open_default().ok()
+    }
+
+    #[test]
+    fn scalar_block_matches_pointwise() {
+        let space = random_space(20, 5, 1);
+        let centers = vec![vec![0.0f32; 5], vec![1.0f32; 5]];
+        let out = scalar_block(&space, &[3, 7, 11], &centers);
+        assert_eq!(out.len(), 6);
+        let d = space.dist_uncounted(3, 3); // 0, sanity
+        assert_eq!(d, 0.0);
+        let expect = space.dist_to_vec_uncounted(7, &centers[1], 5.0).powi(2);
+        assert!((out[3] as f64 - expect).abs() < 1e-4);
+    }
+
+    #[test]
+    fn xla_block_matches_scalar_small_dim() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let space = random_space(300, 7, 2); // pads 7 -> 8
+        let centers: Vec<Vec<f32>> = (0..5)
+            .map(|i| vec![i as f32 * 0.5; 7])
+            .collect();
+        let rows: Vec<u32> = (0..300).collect();
+        let got = eng.dist2_block(&space, &rows, &centers);
+        let want = scalar_block(&space, &rows, &centers);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn xla_block_matches_scalar_wide_dim() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let space = random_space(40, 200, 3); // pads 200 -> 256
+        let centers: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                let mut rng = Rng::new(100 + i);
+                (0..200).map(|_| rng.normal() as f32).collect()
+            })
+            .collect();
+        let rows: Vec<u32> = (0..40).collect();
+        let got = eng.dist2_block(&space, &rows, &centers);
+        let want = scalar_block(&space, &rows, &centers);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-2 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn multi_tile_k() {
+        // More centers than one K-tile (128).
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let space = random_space(64, 4, 4);
+        let centers: Vec<Vec<f32>> = (0..150)
+            .map(|i| vec![(i % 13) as f32, (i % 7) as f32, 0.0, 1.0])
+            .collect();
+        let rows: Vec<u32> = (0..64).collect();
+        let got = eng.dist2_block(&space, &rows, &centers);
+        let want = scalar_block(&space, &rows, &centers);
+        assert_eq!(got.len(), 64 * 150);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn width_selection() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(eng.width_for(PROGRAM_PAIRWISE, 2), Some(8));
+        assert_eq!(eng.width_for(PROGRAM_PAIRWISE, 8), Some(8));
+        assert_eq!(eng.width_for(PROGRAM_PAIRWISE, 9), Some(64));
+        assert_eq!(eng.width_for(PROGRAM_PAIRWISE, 1024), Some(1024));
+        assert_eq!(eng.width_for(PROGRAM_PAIRWISE, 5000), None);
+    }
+
+    #[test]
+    fn kmeans_accumulate_tile_roundtrip() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (tn, tk, d) = (eng.manifest().tile_n, eng.manifest().tile_k, 8usize);
+        let mut rng = Rng::new(5);
+        let mut x = vec![0f32; tn * d];
+        let mut xmask = vec![0f32; tn];
+        let n_real = 100;
+        for i in 0..n_real {
+            xmask[i] = 1.0;
+            for j in 0..d {
+                x[i * d + j] = rng.normal() as f32;
+            }
+        }
+        let mut c = vec![0f32; tk * d];
+        let mut cmask = vec![0f32; tk];
+        let k_real = 4;
+        for i in 0..k_real {
+            cmask[i] = 1.0;
+            for j in 0..d {
+                c[i * d + j] = rng.normal() as f32 * 2.0;
+            }
+        }
+        let (counts, sums, distortion, assign) = eng
+            .with_engine(|e| e.kmeans_accumulate_tile(d, &x, &c, &xmask, &cmask))
+            .unwrap();
+        // Mass conservation.
+        let total: f32 = counts.iter().sum();
+        assert_eq!(total, n_real as f32);
+        for ci in k_real..tk {
+            assert_eq!(counts[ci], 0.0, "padded center got mass");
+        }
+        // Assignments in range for real rows.
+        for i in 0..n_real {
+            assert!((assign[i] as usize) < k_real);
+        }
+        // Distortion equals the sum over real rows of min d2.
+        let mut manual = 0f64;
+        for i in 0..n_real {
+            let mut best = f64::INFINITY;
+            for ci in 0..k_real {
+                let mut d2 = 0f64;
+                for j in 0..d {
+                    let diff = (x[i * d + j] - c[ci * d + j]) as f64;
+                    d2 += diff * diff;
+                }
+                best = best.min(d2);
+            }
+            manual += best;
+        }
+        assert!(
+            (distortion as f64 - manual).abs() < 1e-2 * (1.0 + manual),
+            "{distortion} vs {manual}"
+        );
+        let _ = sums;
+    }
+
+    #[test]
+    fn range_count_tile_matches_manual() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (tn, tk, d) = (eng.manifest().tile_n, eng.manifest().tile_k, 8usize);
+        let mut rng = Rng::new(6);
+        let mut x = vec![0f32; tn * d];
+        let mut xmask = vec![0f32; tn];
+        for i in 0..50 {
+            xmask[i] = 1.0;
+            for j in 0..d {
+                x[i * d + j] = rng.normal() as f32;
+            }
+        }
+        let mut q = vec![0f32; tk * d];
+        for j in 0..d {
+            q[j] = 0.0; // query at origin
+        }
+        let mut r2 = vec![0f32; tk];
+        r2[0] = (d as f32) * 1.0; // within ~1 std in each dim
+        let counts = eng
+            .with_engine(|e| e.range_count_tile(d, &x, &q, &xmask, &r2))
+            .unwrap();
+        let manual = (0..50)
+            .filter(|&i| {
+                let s: f64 = (0..d).map(|j| (x[i * d + j] as f64).powi(2)).sum();
+                s <= r2[0] as f64
+            })
+            .count();
+        assert_eq!(counts[0] as usize, manual);
+    }
+}

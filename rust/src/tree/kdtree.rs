@@ -1,0 +1,229 @@
+//! A plain kd-tree — the baseline the paper argues *against* in high
+//! dimensions (§2.1, Figure 1).
+//!
+//! Used by the `figure1` experiment to demonstrate that on the two-class
+//! 1000-dimensional binary dataset a kd-tree needs many levels to separate
+//! the classes while a metric tree's very first split does it.
+
+use crate::data::DenseMatrix;
+
+#[derive(Debug)]
+pub struct KdNode {
+    /// Splitting dimension (interior nodes).
+    pub split_dim: usize,
+    /// Splitting value.
+    pub split_val: f32,
+    pub count: usize,
+    pub children: Option<(u32, u32)>,
+    /// Leaf point ids.
+    pub points: Vec<u32>,
+}
+
+pub struct KdTree {
+    pub nodes: Vec<KdNode>,
+    pub root: u32,
+    pub rmin: usize,
+}
+
+impl KdTree {
+    pub fn node(&self, id: u32) -> &KdNode {
+        &self.nodes[id as usize]
+    }
+
+    /// Build with the classic "split widest dimension at the median" rule.
+    pub fn build(data: &DenseMatrix, rmin: usize) -> KdTree {
+        let points: Vec<u32> = (0..data.n as u32).collect();
+        let mut nodes = Vec::new();
+        let root = split(data, points, rmin.max(1), &mut nodes, 0);
+        KdTree { nodes, root, rmin }
+    }
+
+    /// Node ids at a given depth (root = depth 0).
+    pub fn nodes_at_depth(&self, depth: usize) -> Vec<u32> {
+        let mut frontier = vec![self.root];
+        for _ in 0..depth {
+            let mut next = Vec::new();
+            for id in frontier {
+                match self.node(id).children {
+                    Some((a, b)) => {
+                        next.push(a);
+                        next.push(b);
+                    }
+                    None => next.push(id), // leaves stay in the frontier
+                }
+            }
+            frontier = next;
+        }
+        frontier
+    }
+
+    /// All points under a node.
+    pub fn points_under(&self, id: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut stack = vec![id];
+        while let Some(nid) = stack.pop() {
+            let n = self.node(nid);
+            match n.children {
+                None => out.extend_from_slice(&n.points),
+                Some((a, b)) => {
+                    stack.push(a);
+                    stack.push(b);
+                }
+            }
+        }
+        out
+    }
+}
+
+fn split(
+    data: &DenseMatrix,
+    points: Vec<u32>,
+    rmin: usize,
+    nodes: &mut Vec<KdNode>,
+    depth: usize,
+) -> u32 {
+    let count = points.len();
+    // Depth cap keeps degenerate data (all duplicates) from recursing
+    // forever; 64 levels is far beyond any real split need.
+    if count <= rmin || depth > 64 {
+        nodes.push(KdNode {
+            split_dim: 0,
+            split_val: 0.0,
+            count,
+            children: None,
+            points,
+        });
+        return (nodes.len() - 1) as u32;
+    }
+    // Widest dimension.
+    let d = data.d;
+    let mut best_dim = 0;
+    let mut best_spread = -1.0f32;
+    for dim in 0..d {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &p in &points {
+            let v = data.row(p as usize)[dim];
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi - lo > best_spread {
+            best_spread = hi - lo;
+            best_dim = dim;
+        }
+    }
+    if best_spread <= 0.0 {
+        nodes.push(KdNode {
+            split_dim: 0,
+            split_val: 0.0,
+            count,
+            children: None,
+            points,
+        });
+        return (nodes.len() - 1) as u32;
+    }
+    // Median split on the widest dimension.
+    let mut vals: Vec<f32> = points
+        .iter()
+        .map(|&p| data.row(p as usize)[best_dim])
+        .collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let split_val = vals[vals.len() / 2];
+    let (mut left, mut right) = (Vec::new(), Vec::new());
+    for &p in &points {
+        if data.row(p as usize)[best_dim] < split_val {
+            left.push(p);
+        } else {
+            right.push(p);
+        }
+    }
+    if left.is_empty() || right.is_empty() {
+        // All values equal to the median: split evenly.
+        let mut all = points;
+        let mid = all.len() / 2;
+        right = all.split_off(mid);
+        left = all;
+    }
+    let l = split(data, left, rmin, nodes, depth + 1);
+    let r = split(data, right, rmin, nodes, depth + 1);
+    nodes.push(KdNode {
+        split_dim: best_dim,
+        split_val,
+        count,
+        children: Some((l, r)),
+        points: Vec::new(),
+    });
+    (nodes.len() - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_dense(n: usize, d: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        DenseMatrix::new(n, d, vals)
+    }
+
+    #[test]
+    fn partitions_all_points() {
+        let data = random_dense(200, 3, 1);
+        let tree = KdTree::build(&data, 10);
+        let mut pts = tree.points_under(tree.root);
+        pts.sort();
+        assert_eq!(pts, (0..200).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn leaves_respect_rmin() {
+        let data = random_dense(500, 2, 2);
+        let tree = KdTree::build(&data, 20);
+        let mut stack = vec![tree.root];
+        while let Some(id) = stack.pop() {
+            let n = tree.node(id);
+            match n.children {
+                None => assert!(n.count <= 20),
+                Some((a, b)) => {
+                    stack.push(a);
+                    stack.push(b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_respects_dimension_rule() {
+        // Interior node: left child strictly below split value.
+        let data = random_dense(100, 2, 3);
+        let tree = KdTree::build(&data, 10);
+        let root = tree.node(tree.root);
+        if let Some((l, _)) = root.children {
+            for p in tree.points_under(l) {
+                assert!(data.row(p as usize)[root.split_dim] < root.split_val);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_terminate() {
+        let data = DenseMatrix::new(64, 2, vec![1.0; 128]);
+        let tree = KdTree::build(&data, 4);
+        assert_eq!(tree.points_under(tree.root).len(), 64);
+    }
+
+    #[test]
+    fn nodes_at_depth_cover_everything() {
+        let data = random_dense(300, 2, 4);
+        let tree = KdTree::build(&data, 10);
+        for depth in [0, 1, 3, 6] {
+            let total: usize = tree
+                .nodes_at_depth(depth)
+                .iter()
+                .map(|&id| tree.points_under(id).len())
+                .sum();
+            assert_eq!(total, 300, "depth {depth}");
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Middle-out metric-tree construction via the Anchors Hierarchy
+//! (paper §3.1).
+//!
+//! For a point set of size R: build √R anchors (cheap, thanks to the
+//! triangle-inequality cutoff), recursively build a subtree inside each
+//! anchor's owned set, then agglomerate the √R subtree roots bottom-up —
+//! at each step merging the pair of nodes whose smallest enclosing ball is
+//! smallest ("most compatible", §3.1). The recursion bottoms out at
+//! `rmin`-sized leaves.
+
+use super::{enclosing_radius, make_leaf, make_parent, MetricTree, Node, NodeId};
+use crate::anchors::build_anchors;
+use crate::metrics::Space;
+use crate::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Tunables for the middle-out builder.
+#[derive(Clone, Debug)]
+pub struct MiddleOutConfig {
+    /// Leaf threshold R_min.
+    pub rmin: usize,
+    /// RNG seed (first-anchor choice).
+    pub seed: u64,
+    /// When true, agglomerated interior nodes get exact radii (an extra
+    /// counted pass over their points) instead of the triangle-inequality
+    /// upper bound. Tighter balls prune better downstream but make the
+    /// build cost ~O(R log R) more distances. Benchmarked in the
+    /// `tree_build` ablation.
+    pub exact_radii: bool,
+}
+
+impl Default for MiddleOutConfig {
+    fn default() -> Self {
+        MiddleOutConfig { rmin: 30, seed: 0xA11C0, exact_radii: false }
+    }
+}
+
+/// Build a middle-out tree over all points of `space`.
+pub fn build(space: &Space, cfg: &MiddleOutConfig) -> MetricTree {
+    let points: Vec<u32> = (0..space.n() as u32).collect();
+    build_subset(space, points, cfg)
+}
+
+/// Build over an explicit point subset.
+pub fn build_subset(space: &Space, points: Vec<u32>, cfg: &MiddleOutConfig) -> MetricTree {
+    assert!(!points.is_empty(), "empty tree");
+    let rmin = cfg.rmin.max(1);
+    let before = space.dist_count();
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut rng = Rng::new(cfg.seed);
+    let root = recurse(space, points, rmin, cfg, &mut rng, &mut nodes);
+    MetricTree {
+        nodes,
+        root,
+        rmin,
+        build_dists: space.dist_count() - before,
+    }
+}
+
+fn recurse(
+    space: &Space,
+    points: Vec<u32>,
+    rmin: usize,
+    cfg: &MiddleOutConfig,
+    rng: &mut Rng,
+    nodes: &mut Vec<Node>,
+) -> NodeId {
+    if points.len() <= rmin {
+        nodes.push(make_leaf(space, points));
+        return (nodes.len() - 1) as NodeId;
+    }
+    // √R anchors (at least 2, else we cannot make progress).
+    let k = ((points.len() as f64).sqrt().ceil() as usize).max(2);
+    let anchor_set = build_anchors(space, &points, k, rng);
+    if anchor_set.k() < 2 {
+        // All duplicates: one leaf holds them all.
+        nodes.push(make_leaf(space, points));
+        return (nodes.len() - 1) as NodeId;
+    }
+
+    // Recursively build a subtree inside each anchor's owned set
+    // (paper Figure 10), then agglomerate the subtree roots
+    // (Figures 8–9).
+    let child_roots: Vec<NodeId> = anchor_set
+        .anchors
+        .iter()
+        .map(|a| recurse(space, a.point_ids(), rmin, cfg, rng, nodes))
+        .collect();
+    agglomerate(space, child_roots, cfg, nodes)
+}
+
+/// Bottom-up agglomeration: repeatedly merge the most compatible pair.
+/// Compatibility = radius of the smallest ball containing both (§3.1).
+fn agglomerate(
+    space: &Space,
+    roots: Vec<NodeId>,
+    cfg: &MiddleOutConfig,
+    nodes: &mut Vec<Node>,
+) -> NodeId {
+    debug_assert!(!roots.is_empty());
+    if roots.len() == 1 {
+        return roots[0];
+    }
+    // Active cluster list; lazy-deletion heap of candidate merges keyed by
+    // enclosing-ball radius. f64 keys wrapped in a total order.
+    let mut active: Vec<NodeId> = roots;
+    let mut alive: Vec<bool> = vec![true; active.len()];
+    let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize)>> = BinaryHeap::new();
+
+    let score = |space: &Space, nodes: &Vec<Node>, a: NodeId, b: NodeId| -> f64 {
+        let (na, nb) = (&nodes[a as usize], &nodes[b as usize]);
+        let d = space.dist_vv(&na.pivot, &nb.pivot);
+        enclosing_radius(d, na.radius, nb.radius)
+    };
+
+    for i in 0..active.len() {
+        for j in (i + 1)..active.len() {
+            let s = score(space, nodes, active[i], active[j]);
+            heap.push(Reverse((OrdF64(s), i, j)));
+        }
+    }
+
+    let mut remaining = active.len();
+    while remaining > 1 {
+        let Reverse((_, i, j)) = heap.pop().expect("heap exhausted with clusters remaining");
+        if !alive[i] || !alive[j] {
+            continue; // stale entry
+        }
+        alive[i] = false;
+        alive[j] = false;
+        let (ia, ib) = (active[i], active[j]);
+        let mut parent = make_parent(space, &nodes[ia as usize], &nodes[ib as usize]);
+        if cfg.exact_radii {
+            tighten_radius(space, &mut parent, nodes, ia, ib);
+        }
+        parent.children = Some((ia, ib));
+        nodes.push(parent);
+        let pid = (nodes.len() - 1) as NodeId;
+        let slot = active.len();
+        active.push(pid);
+        alive.push(true);
+        remaining -= 1;
+        // Score the new cluster against all alive ones.
+        for (idx, &nid) in active.iter().enumerate() {
+            if idx != slot && alive[idx] {
+                let s = score(space, nodes, nid, pid);
+                heap.push(Reverse((OrdF64(s), idx.min(slot), idx.max(slot))));
+            }
+        }
+    }
+    *active
+        .iter()
+        .zip(&alive)
+        .find(|(_, &a)| a)
+        .expect("one cluster must survive")
+        .0
+}
+
+/// Replace the parent's bounded radius with the exact maximum distance
+/// over its points (counted — this is the `exact_radii` ablation).
+fn tighten_radius(space: &Space, parent: &mut Node, nodes: &[Node], a: NodeId, b: NodeId) {
+    let mut radius = 0.0f64;
+    let mut stack = vec![a, b];
+    while let Some(id) = stack.pop() {
+        let n = &nodes[id as usize];
+        match n.children {
+            None => {
+                for &p in &n.points {
+                    let d = space.dist_to_vec(p as usize, &parent.pivot, parent.pivot_sq);
+                    if d > radius {
+                        radius = d;
+                    }
+                }
+            }
+            Some((x, y)) => {
+                stack.push(x);
+                stack.push(y);
+            }
+        }
+    }
+    parent.radius = radius;
+}
+
+/// Total order for f64 scores (no NaNs by construction).
+#[derive(PartialEq, PartialOrd)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+
+    fn random_space(n: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 5.0).collect();
+        Space::euclidean(Data::Dense(DenseMatrix::new(n, d, vals)))
+    }
+
+    fn clustered_space(c: usize, per: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for _ in 0..c {
+            let center: Vec<f64> = (0..d).map(|_| rng.uniform(-50.0, 50.0)).collect();
+            for _ in 0..per {
+                rows.push(
+                    center
+                        .iter()
+                        .map(|&cv| (cv + rng.normal()) as f32)
+                        .collect::<Vec<f32>>(),
+                );
+            }
+        }
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn builds_valid_tree() {
+        let space = random_space(600, 3, 1);
+        let tree = build(&space, &MiddleOutConfig { rmin: 12, ..Default::default() });
+        tree.validate(&space).unwrap();
+        assert_eq!(tree.n_points(), 600);
+    }
+
+    #[test]
+    fn builds_valid_tree_exact_radii() {
+        let space = random_space(400, 2, 2);
+        let tree = build(
+            &space,
+            &MiddleOutConfig { rmin: 10, exact_radii: true, ..Default::default() },
+        );
+        tree.validate(&space).unwrap();
+    }
+
+    #[test]
+    fn exact_radii_are_tighter_or_equal() {
+        let space = clustered_space(6, 80, 3, 3);
+        let loose = build(&space, &MiddleOutConfig { rmin: 10, seed: 5, exact_radii: false });
+        let tight = build(&space, &MiddleOutConfig { rmin: 10, seed: 5, exact_radii: true });
+        assert!(tight.node(tight.root).radius <= loose.node(loose.root).radius + 1e-9);
+    }
+
+    #[test]
+    fn clustered_data_gives_coherent_leaves() {
+        // With well-separated blobs, leaf radii should be much smaller than
+        // the root radius (the tree localizes).
+        let space = clustered_space(8, 60, 2, 4);
+        let tree = build(&space, &MiddleOutConfig { rmin: 20, ..Default::default() });
+        tree.validate(&space).unwrap();
+        let shape = tree.shape();
+        let root_r = tree.node(tree.root).radius;
+        assert!(
+            shape.mean_leaf_radius < root_r / 5.0,
+            "leaves not localized: mean {} vs root {root_r}",
+            shape.mean_leaf_radius
+        );
+    }
+
+    #[test]
+    fn duplicates_collapse_to_leaf() {
+        let rows: Vec<Vec<f32>> = (0..100).map(|_| vec![1.0, 1.0]).collect();
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let tree = build(&space, &MiddleOutConfig { rmin: 8, ..Default::default() });
+        tree.validate(&space).unwrap();
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let space = random_space(300, 2, 6);
+        let t1 = build(&space, &MiddleOutConfig { rmin: 15, seed: 9, exact_radii: false });
+        let t2 = build(&space, &MiddleOutConfig { rmin: 15, seed: 9, exact_radii: false });
+        assert_eq!(t1.nodes.len(), t2.nodes.len());
+        assert_eq!(t1.shape(), t2.shape());
+    }
+
+    #[test]
+    fn subset_build_owns_exactly_subset() {
+        let space = random_space(200, 2, 7);
+        let subset: Vec<u32> = (0..200).filter(|p| p % 3 == 0).collect();
+        let tree = build_subset(&space, subset.clone(), &MiddleOutConfig::default());
+        let mut owned = tree.points_under(tree.root);
+        owned.sort();
+        assert_eq!(owned, subset);
+    }
+
+    #[test]
+    fn cheaper_than_quadratic_on_clustered_data() {
+        let space = clustered_space(10, 100, 2, 8);
+        space.reset_count();
+        let tree = build(&space, &MiddleOutConfig { rmin: 25, ..Default::default() });
+        let n = space.n() as u64;
+        assert!(
+            tree.build_dists < n * n / 10,
+            "build used {} dists (n² = {})",
+            tree.build_dists,
+            n * n
+        );
+    }
+}

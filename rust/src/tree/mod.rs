@@ -1,0 +1,388 @@
+//! Cached-sufficient-statistics metric trees (paper §2, §3.1).
+//!
+//! Every node stores, besides the ball `(pivot, radius)` required by the
+//! metric-tree definition, the *cached sufficient statistics* the paper's
+//! algorithms consume:
+//!
+//! * `count`  — number of owned points,
+//! * `sum`    — Σ x (so the centroid is `sum / count`),
+//! * `sumsq`  — Σ ||x||² (so within-node distortion against any center c
+//!              is exactly `sumsq − 2·c·sum + count·||c||²`, in O(d)).
+//!
+//! Two builders are provided: the classic top-down splitter
+//! ([`top_down::build`]) and the paper's middle-out construction via the
+//! anchors hierarchy ([`middle_out::build`]); Table 3 compares them.
+
+pub mod kdtree;
+pub mod middle_out;
+pub mod serialize;
+pub mod top_down;
+
+use crate::metrics::{dense_dot, Space};
+
+/// Node id within a [`MetricTree`] arena.
+pub type NodeId = u32;
+
+/// One metric-tree node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Ball center. For interior nodes this is the centroid of the owned
+    /// points (which requires the sum/scale ability of footnote 1; for
+    /// general metrics a datapoint pivot would be used instead).
+    pub pivot: Vec<f32>,
+    /// Cached ||pivot||² (Euclidean expansion form).
+    pub pivot_sq: f64,
+    /// Every owned point is within `radius` of `pivot` (eq. 2). Builders
+    /// may store a safe upper bound rather than the exact maximum.
+    pub radius: f64,
+    /// Number of owned points.
+    pub count: u32,
+    /// Cached Σx over owned points.
+    pub sum: Vec<f64>,
+    /// Cached Σ||x||² over owned points.
+    pub sumsq: f64,
+    /// Child node ids; `None` for leaves.
+    pub children: Option<(NodeId, NodeId)>,
+    /// Owned point ids — populated for leaves only.
+    pub points: Vec<u32>,
+}
+
+impl Node {
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_none()
+    }
+
+    /// Centroid of the owned points (from the cached statistics).
+    pub fn centroid(&self) -> Vec<f32> {
+        let inv = if self.count == 0 { 0.0 } else { 1.0 / self.count as f64 };
+        self.sum.iter().map(|&s| (s * inv) as f32).collect()
+    }
+
+    /// Exact sum of squared distances from the owned points to an
+    /// arbitrary center `c` — the cached-sufficient-statistics identity
+    /// that lets K-means award whole nodes in O(d).
+    pub fn distortion_to(&self, c: &[f32], c_sq: f64) -> f64 {
+        let dot: f64 = self
+            .sum
+            .iter()
+            .zip(c)
+            .map(|(&s, &cv)| s * cv as f64)
+            .sum();
+        self.sumsq - 2.0 * dot + self.count as f64 * c_sq
+    }
+}
+
+/// Statistics describing tree shape (for reports and ablation benches).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TreeShape {
+    pub nodes: usize,
+    pub leaves: usize,
+    pub max_depth: usize,
+    pub mean_leaf_size: f64,
+    pub mean_leaf_radius: f64,
+}
+
+/// An arena-allocated metric tree.
+pub struct MetricTree {
+    pub nodes: Vec<Node>,
+    pub root: NodeId,
+    /// Leaf threshold the tree was built with.
+    pub rmin: usize,
+    /// Distance computations spent building this tree.
+    pub build_dists: u64,
+}
+
+impl MetricTree {
+    #[inline]
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn root_node(&self) -> &Node {
+        self.node(self.root)
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.root_node().count as usize
+    }
+
+    /// Ids of all leaves (DFS order).
+    pub fn leaf_ids(&self) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        let mut stack = vec![self.root];
+        while let Some(id) = stack.pop() {
+            match self.node(id).children {
+                None => out.push(id),
+                Some((a, b)) => {
+                    stack.push(b);
+                    stack.push(a);
+                }
+            }
+        }
+        out
+    }
+
+    /// Iterate every point id under `id` (leaf point lists).
+    pub fn points_under(&self, id: NodeId) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.node(id).count as usize);
+        let mut stack = vec![id];
+        while let Some(nid) = stack.pop() {
+            let n = self.node(nid);
+            match n.children {
+                None => out.extend_from_slice(&n.points),
+                Some((a, b)) => {
+                    stack.push(b);
+                    stack.push(a);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn shape(&self) -> TreeShape {
+        let mut shape = TreeShape { nodes: self.nodes.len(), ..Default::default() };
+        let mut stack = vec![(self.root, 1usize)];
+        let mut leaf_radius_sum = 0.0;
+        let mut leaf_count_sum = 0usize;
+        while let Some((id, depth)) = stack.pop() {
+            let n = self.node(id);
+            shape.max_depth = shape.max_depth.max(depth);
+            match n.children {
+                None => {
+                    shape.leaves += 1;
+                    leaf_radius_sum += n.radius;
+                    leaf_count_sum += n.count as usize;
+                }
+                Some((a, b)) => {
+                    stack.push((a, depth + 1));
+                    stack.push((b, depth + 1));
+                }
+            }
+        }
+        if shape.leaves > 0 {
+            shape.mean_leaf_size = leaf_count_sum as f64 / shape.leaves as f64;
+            shape.mean_leaf_radius = leaf_radius_sum / shape.leaves as f64;
+        }
+        shape
+    }
+
+    /// Check every structural invariant against the backing space.
+    /// Used by tests and by `--validate` in the CLI. Does NOT count
+    /// distances.
+    pub fn validate(&self, space: &Space) -> Result<(), String> {
+        let n = space.n();
+        let mut owner = vec![u32::MAX; n];
+        for leaf in self.leaf_ids() {
+            let node = self.node(leaf);
+            if node.points.len() != node.count as usize {
+                return Err(format!("leaf {leaf}: points/count mismatch"));
+            }
+            for &p in &node.points {
+                if owner[p as usize] != u32::MAX {
+                    return Err(format!("point {p} owned by two leaves"));
+                }
+                owner[p as usize] = leaf;
+            }
+        }
+        let in_tree = owner.iter().filter(|&&o| o != u32::MAX).count();
+        if in_tree != self.n_points() {
+            return Err(format!(
+                "tree claims {} points but leaves own {in_tree}",
+                self.n_points()
+            ));
+        }
+
+        // Per-node: ball containment, stats consistency, child partition.
+        let mut stack = vec![self.root];
+        while let Some(id) = stack.pop() {
+            let node = self.node(id);
+            let pts = self.points_under(id);
+            if pts.len() != node.count as usize {
+                return Err(format!("node {id}: count {} != {}", node.count, pts.len()));
+            }
+            // Ball containment (eq. 2) with a small float slack.
+            let slack = 1e-4 * (1.0 + node.radius);
+            for &p in &pts {
+                let d = space.dist_to_vec_uncounted(p as usize, &node.pivot, node.pivot_sq);
+                if d > node.radius + slack {
+                    return Err(format!(
+                        "node {id}: point {p} at {d} outside radius {}",
+                        node.radius
+                    ));
+                }
+            }
+            // Cached statistics.
+            let sum_err: f64 = {
+                let mut acc = vec![0f64; space.dim()];
+                for &p in &pts {
+                    space.accumulate(p as usize, &mut acc);
+                }
+                acc.iter()
+                    .zip(&node.sum)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max)
+            };
+            if sum_err > 1e-3 * (1.0 + node.sumsq.abs()) {
+                return Err(format!("node {id}: cached sum off by {sum_err}"));
+            }
+            let true_sumsq = space.sumsq(&pts);
+            if (true_sumsq - node.sumsq).abs() > 1e-5 * (1.0 + true_sumsq) {
+                return Err(format!(
+                    "node {id}: sumsq {} != {true_sumsq}",
+                    node.sumsq
+                ));
+            }
+            if let Some((a, b)) = node.children {
+                let (ca, cb) = (self.node(a), self.node(b));
+                if ca.count + cb.count != node.count {
+                    return Err(format!("node {id}: children counts don't partition"));
+                }
+                stack.push(a);
+                stack.push(b);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build a node's cached statistics + exact radius for an explicit point
+/// set (costs `|points|` counted distances for the radius pass). Returns
+/// the constructed leaf node; the caller decides whether it stays a leaf.
+pub(crate) fn make_leaf(space: &Space, points: Vec<u32>) -> Node {
+    let d = space.dim();
+    let mut sum = vec![0f64; d];
+    for &p in &points {
+        space.accumulate(p as usize, &mut sum);
+    }
+    let count = points.len() as u32;
+    let inv = if count == 0 { 0.0 } else { 1.0 / count as f64 };
+    let pivot: Vec<f32> = sum.iter().map(|&s| (s * inv) as f32).collect();
+    let pivot_sq = dense_dot(&pivot, &pivot);
+    let sumsq = space.sumsq(&points);
+    let mut radius = 0.0f64;
+    for &p in &points {
+        let dist = space.dist_to_vec(p as usize, &pivot, pivot_sq);
+        if dist > radius {
+            radius = dist;
+        }
+    }
+    Node {
+        pivot,
+        pivot_sq,
+        radius,
+        count,
+        sum,
+        sumsq,
+        children: None,
+        points,
+    }
+}
+
+/// Merge two sibling nodes into a parent whose pivot is the mass-weighted
+/// centroid and whose radius is the triangle-inequality upper bound
+/// `max_i D(pivot, child_i.pivot) + child_i.radius` (2 counted distances).
+pub(crate) fn make_parent(space: &Space, a: &Node, b: &Node) -> Node {
+    let d = a.sum.len();
+    let mut sum = vec![0f64; d];
+    for i in 0..d {
+        sum[i] = a.sum[i] + b.sum[i];
+    }
+    let count = a.count + b.count;
+    let inv = if count == 0 { 0.0 } else { 1.0 / count as f64 };
+    let pivot: Vec<f32> = sum.iter().map(|&s| (s * inv) as f32).collect();
+    let pivot_sq = dense_dot(&pivot, &pivot);
+    let ra = space.dist_vv(&pivot, &a.pivot) + a.radius;
+    let rb = space.dist_vv(&pivot, &b.pivot) + b.radius;
+    Node {
+        pivot,
+        pivot_sq,
+        radius: ra.max(rb),
+        count,
+        sum,
+        sumsq: a.sumsq + b.sumsq,
+        children: None, // caller fills in ids
+        points: Vec::new(),
+    }
+}
+
+/// The "compatibility" score of §3.1: the radius of the smallest ball that
+/// is guaranteed to contain both children's balls — smaller is better.
+#[inline]
+pub(crate) fn enclosing_radius(d: f64, ra: f64, rb: f64) -> f64 {
+    // If one ball already contains the other, the big one's radius.
+    let nested = (d + ra.min(rb)) <= ra.max(rb);
+    if nested {
+        ra.max(rb)
+    } else {
+        (d + ra + rb) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+
+    pub(crate) fn random_space(n: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 5.0).collect();
+        Space::euclidean(Data::Dense(DenseMatrix::new(n, d, vals)))
+    }
+
+    #[test]
+    fn make_leaf_stats_and_radius() {
+        let space = random_space(50, 3, 1);
+        let pts: Vec<u32> = (0..50).collect();
+        let leaf = make_leaf(&space, pts.clone());
+        assert_eq!(leaf.count, 50);
+        // radius is the exact max distance to the centroid
+        let c = leaf.centroid();
+        let csq = dense_dot(&c, &c);
+        let maxd = pts
+            .iter()
+            .map(|&p| space.dist_to_vec_uncounted(p as usize, &c, csq))
+            .fold(0.0, f64::max);
+        assert!((leaf.radius - maxd).abs() < 1e-6);
+    }
+
+    #[test]
+    fn distortion_identity() {
+        // sumsq - 2 c.sum + n||c||^2 == sum of squared distances.
+        let space = random_space(30, 4, 2);
+        let pts: Vec<u32> = (0..30).collect();
+        let leaf = make_leaf(&space, pts.clone());
+        let c = vec![0.5f32, -1.0, 2.0, 0.0];
+        let c_sq = dense_dot(&c, &c);
+        let fast = leaf.distortion_to(&c, c_sq);
+        let slow: f64 = pts
+            .iter()
+            .map(|&p| space.dist_to_vec_uncounted(p as usize, &c, c_sq).powi(2))
+            .sum();
+        assert!((fast - slow).abs() < 1e-5 * (1.0 + slow), "{fast} vs {slow}");
+    }
+
+    #[test]
+    fn make_parent_contains_children() {
+        let space = random_space(40, 2, 3);
+        let a = make_leaf(&space, (0..20).collect());
+        let b = make_leaf(&space, (20..40).collect());
+        let p = make_parent(&space, &a, &b);
+        assert_eq!(p.count, 40);
+        // Every point is inside the parent's (bounded) radius.
+        for i in 0..40u32 {
+            let d = space.dist_to_vec_uncounted(i as usize, &p.pivot, p.pivot_sq);
+            assert!(d <= p.radius + 1e-6, "point {i} escapes parent ball");
+        }
+    }
+
+    #[test]
+    fn enclosing_radius_cases() {
+        // Disjoint balls.
+        assert!((enclosing_radius(10.0, 1.0, 2.0) - 6.5).abs() < 1e-12);
+        // Nested: ball B inside ball A.
+        assert_eq!(enclosing_radius(1.0, 5.0, 1.0), 5.0);
+        // Identical centers.
+        assert_eq!(enclosing_radius(0.0, 2.0, 3.0), 3.0);
+    }
+}

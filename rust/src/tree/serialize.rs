@@ -1,0 +1,267 @@
+//! Metric-tree serialization: build once, reuse across processes.
+//!
+//! Binary format (little-endian), versioned:
+//!
+//! ```text
+//! magic "AHTREE01" | u32 rmin | u64 build_dists | u32 root | u32 n_nodes
+//! per node:
+//!   u32 dim | f32×dim pivot | f64 pivot_sq | f64 radius | u32 count |
+//!   f64×dim sum | f64 sumsq |
+//!   u8 has_children | (u32,u32 children)? | u32 n_points | u32×n points
+//! ```
+//!
+//! The format stores the cached sufficient statistics verbatim, so a
+//! deserialized tree answers queries identically (bit-for-bit) without
+//! touching the dataset.
+
+use super::{MetricTree, Node};
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"AHTREE01";
+
+/// Serialize into any writer.
+pub fn write_tree(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(tree.rmin as u32).to_le_bytes())?;
+    w.write_all(&tree.build_dists.to_le_bytes())?;
+    w.write_all(&tree.root.to_le_bytes())?;
+    w.write_all(&(tree.nodes.len() as u32).to_le_bytes())?;
+    for node in &tree.nodes {
+        w.write_all(&(node.pivot.len() as u32).to_le_bytes())?;
+        for &v in &node.pivot {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&node.pivot_sq.to_le_bytes())?;
+        w.write_all(&node.radius.to_le_bytes())?;
+        w.write_all(&node.count.to_le_bytes())?;
+        for &v in &node.sum {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&node.sumsq.to_le_bytes())?;
+        match node.children {
+            Some((a, b)) => {
+                w.write_all(&[1u8])?;
+                w.write_all(&a.to_le_bytes())?;
+                w.write_all(&b.to_le_bytes())?;
+            }
+            None => w.write_all(&[0u8])?,
+        }
+        w.write_all(&(node.points.len() as u32).to_le_bytes())?;
+        for &p in &node.points {
+            w.write_all(&p.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize from any reader, with structural sanity checks.
+pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an AHTREE01 file");
+    }
+    let rmin = read_u32(r)? as usize;
+    let build_dists = read_u64(r)?;
+    let root = read_u32(r)?;
+    let n_nodes = read_u32(r)? as usize;
+    if n_nodes == 0 || n_nodes > 1 << 28 {
+        bail!("implausible node count {n_nodes}");
+    }
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let dim = read_u32(r)? as usize;
+        if dim > 1 << 24 {
+            bail!("implausible dim {dim}");
+        }
+        let mut pivot = vec![0f32; dim];
+        for v in pivot.iter_mut() {
+            *v = read_f32(r)?;
+        }
+        let pivot_sq = read_f64(r)?;
+        let radius = read_f64(r)?;
+        let count = read_u32(r)?;
+        let mut sum = vec![0f64; dim];
+        for v in sum.iter_mut() {
+            *v = read_f64(r)?;
+        }
+        let sumsq = read_f64(r)?;
+        let mut flag = [0u8];
+        r.read_exact(&mut flag)?;
+        let children = match flag[0] {
+            0 => None,
+            1 => Some((read_u32(r)?, read_u32(r)?)),
+            x => bail!("bad child flag {x}"),
+        };
+        let n_points = read_u32(r)? as usize;
+        let mut points = vec![0u32; n_points];
+        for p in points.iter_mut() {
+            *p = read_u32(r)?;
+        }
+        nodes.push(Node {
+            pivot,
+            pivot_sq,
+            radius,
+            count,
+            sum,
+            sumsq,
+            children,
+            points,
+        });
+    }
+    if root as usize >= nodes.len() {
+        bail!("root {root} out of range");
+    }
+    // Child ids must be in range and each child referenced at most once.
+    let mut seen = vec![false; nodes.len()];
+    for node in &nodes {
+        if let Some((a, b)) = node.children {
+            for c in [a, b] {
+                let ci = c as usize;
+                if ci >= nodes.len() {
+                    bail!("child {c} out of range");
+                }
+                if seen[ci] {
+                    bail!("node {c} has two parents");
+                }
+                seen[ci] = true;
+            }
+        }
+    }
+    Ok(MetricTree { nodes, root, rmin, build_dists })
+}
+
+/// Save to a file path.
+pub fn save(tree: &MetricTree, path: impl AsRef<std::path::Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_tree(tree, &mut f)
+}
+
+/// Load from a file path.
+pub fn load(path: impl AsRef<std::path::Path>) -> Result<MetricTree> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .map_err(|e| anyhow!("open {}: {e}", path.as_ref().display()))?,
+    );
+    read_tree(&mut f)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+fn read_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::metrics::Space;
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    fn space(n: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| vec![rng.normal() as f32 * 5.0, rng.normal() as f32 * 5.0, rng.normal() as f32])
+            .collect();
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let space = space(300, 1);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 12, ..Default::default() });
+        let mut buf = Vec::new();
+        write_tree(&tree, &mut buf).unwrap();
+        let back = read_tree(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.root, tree.root);
+        assert_eq!(back.rmin, tree.rmin);
+        assert_eq!(back.build_dists, tree.build_dists);
+        assert_eq!(back.nodes.len(), tree.nodes.len());
+        for (a, b) in tree.nodes.iter().zip(&back.nodes) {
+            assert_eq!(a.pivot, b.pivot);
+            assert_eq!(a.pivot_sq, b.pivot_sq);
+            assert_eq!(a.radius, b.radius);
+            assert_eq!(a.count, b.count);
+            assert_eq!(a.sum, b.sum);
+            assert_eq!(a.sumsq, b.sumsq);
+            assert_eq!(a.children, b.children);
+            assert_eq!(a.points, b.points);
+        }
+        // Deserialized tree validates against the original space.
+        back.validate(&space).unwrap();
+    }
+
+    #[test]
+    fn loaded_tree_answers_queries_identically() {
+        use crate::algorithms::kmeans;
+        let space = space(400, 2);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let mut buf = Vec::new();
+        write_tree(&tree, &mut buf).unwrap();
+        let back = read_tree(&mut buf.as_slice()).unwrap();
+        let opts = kmeans::KmeansOpts::default();
+        let a = kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, 5, 5, &opts);
+        let b = kmeans::tree_lloyd(&space, &back, kmeans::Init::Random, 5, 5, &opts);
+        assert_eq!(a.distortion, b.distortion);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let space = space(100, 3);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        let path = std::env::temp_dir().join(format!("ahtree-test-{}.bin", std::process::id()));
+        save(&tree, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.nodes.len(), tree.nodes.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_tree(&mut &b"not a tree"[..]).is_err());
+        let mut bad = MAGIC.to_vec();
+        bad.extend_from_slice(&[0xFF; 24]); // implausible header
+        assert!(read_tree(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_cyclic_children() {
+        // Hand-craft a 2-node file where node 1 is referenced twice.
+        let space = space(40, 4);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
+        let mut buf = Vec::new();
+        write_tree(&tree, &mut buf).unwrap();
+        // Corrupt: make root's two children identical (if root has kids).
+        if tree.node(tree.root).children.is_some() {
+            // Find the root node's children bytes — easier: rebuild tree
+            // structure manually via read + mutate + write.
+            let mut t = read_tree(&mut buf.as_slice()).unwrap();
+            let root = t.root as usize;
+            if let Some((a, _)) = t.nodes[root].children {
+                t.nodes[root].children = Some((a, a));
+                let mut buf2 = Vec::new();
+                write_tree(&t, &mut buf2).unwrap();
+                assert!(read_tree(&mut buf2.as_slice()).is_err());
+            }
+        }
+    }
+}

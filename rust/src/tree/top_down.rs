@@ -1,0 +1,161 @@
+//! Classic top-down metric-tree construction (paper §2).
+//!
+//! The splitting rule is the simple linear-cost scheme the paper
+//! describes: let `f1` be the point farthest from the node's pivot
+//! (discovered for free during the radius pass), `f2` the point farthest
+//! from `f1`; points go to whichever of `f1`/`f2` they are closer to, and
+//! each child's pivot is the centroid of its own points.
+
+use super::{make_leaf, MetricTree, Node, NodeId};
+use crate::metrics::Space;
+
+/// Build a top-down metric tree over all points of `space` with leaf
+/// threshold `rmin`.
+pub fn build(space: &Space, rmin: usize) -> MetricTree {
+    let points: Vec<u32> = (0..space.n() as u32).collect();
+    build_subset(space, points, rmin)
+}
+
+/// Build over an explicit subset (used by tests and the coordinator's
+/// incremental jobs).
+pub fn build_subset(space: &Space, points: Vec<u32>, rmin: usize) -> MetricTree {
+    assert!(!points.is_empty(), "empty tree");
+    let rmin = rmin.max(1);
+    let before = space.dist_count();
+    let mut nodes: Vec<Node> = Vec::new();
+    let root = split(space, points, rmin, &mut nodes);
+    MetricTree {
+        nodes,
+        root,
+        rmin,
+        build_dists: space.dist_count() - before,
+    }
+}
+
+fn split(space: &Space, points: Vec<u32>, rmin: usize, nodes: &mut Vec<Node>) -> NodeId {
+    // make_leaf performs the radius pass: one counted distance per point,
+    // and hands us the farthest point (f1) implicitly via a rescan below.
+    let node = make_leaf(space, points);
+    if node.count as usize <= rmin || node.radius <= 0.0 {
+        nodes.push(node);
+        return (nodes.len() - 1) as NodeId;
+    }
+    let points = node.points.clone();
+
+    // f1: farthest from the pivot. (Distances were already paid for inside
+    // make_leaf; recomputing them would double-count, so we re-derive f1
+    // with uncounted evaluations of the same quantities.)
+    let f1 = *points
+        .iter()
+        .max_by(|&&a, &&b| {
+            let da = space.dist_to_vec_uncounted(a as usize, &node.pivot, node.pivot_sq);
+            let db = space.dist_to_vec_uncounted(b as usize, &node.pivot, node.pivot_sq);
+            da.partial_cmp(&db).unwrap()
+        })
+        .unwrap();
+
+    // f2: farthest from f1 (one counted pass).
+    let d1: Vec<f64> = points
+        .iter()
+        .map(|&p| space.dist(p as usize, f1 as usize))
+        .collect();
+    let f2 = points[d1
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0];
+
+    // Assignment pass: one counted distance per point (to f2; d1 cached).
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for (i, &p) in points.iter().enumerate() {
+        let d2 = space.dist(p as usize, f2 as usize);
+        if d1[i] <= d2 {
+            left.push(p);
+        } else {
+            right.push(p);
+        }
+    }
+    // Degenerate split (heavy duplicates): fall back to an even cut so
+    // recursion always terminates.
+    if left.is_empty() || right.is_empty() {
+        let mut all = points;
+        let mid = all.len() / 2;
+        right = all.split_off(mid);
+        left = all;
+    }
+
+    let left_id = split(space, left, rmin, nodes);
+    let right_id = split(space, right, rmin, nodes);
+    let mut parent = node;
+    parent.children = Some((left_id, right_id));
+    parent.points = Vec::new();
+    nodes.push(parent);
+    (nodes.len() - 1) as NodeId
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+
+    fn random_space(n: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 5.0).collect();
+        Space::euclidean(Data::Dense(DenseMatrix::new(n, d, vals)))
+    }
+
+    #[test]
+    fn builds_valid_tree() {
+        let space = random_space(500, 3, 1);
+        let tree = build(&space, 10);
+        tree.validate(&space).unwrap();
+        assert_eq!(tree.n_points(), 500);
+    }
+
+    #[test]
+    fn leaves_respect_rmin() {
+        let space = random_space(300, 2, 2);
+        let tree = build(&space, 25);
+        for leaf in tree.leaf_ids() {
+            assert!(tree.node(leaf).count as usize <= 25);
+        }
+    }
+
+    #[test]
+    fn single_point_tree() {
+        let space = random_space(1, 4, 3);
+        let tree = build(&space, 5);
+        tree.validate(&space).unwrap();
+        assert_eq!(tree.nodes.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_points_terminate() {
+        let rows: Vec<Vec<f32>> = (0..64).map(|_| vec![3.0, -1.0]).collect();
+        let space = Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)));
+        let tree = build(&space, 4);
+        tree.validate(&space).unwrap();
+    }
+
+    #[test]
+    fn build_counts_distances() {
+        let space = random_space(200, 2, 4);
+        let tree = build(&space, 10);
+        assert!(tree.build_dists > 0);
+        assert_eq!(tree.build_dists, space.dist_count());
+    }
+
+    #[test]
+    fn subset_build() {
+        let space = random_space(100, 2, 5);
+        let subset: Vec<u32> = (0..100).filter(|p| p % 2 == 0).collect();
+        let tree = build_subset(&space, subset.clone(), 8);
+        assert_eq!(tree.n_points(), 50);
+        let mut owned = tree.points_under(tree.root);
+        owned.sort();
+        assert_eq!(owned, subset);
+    }
+}

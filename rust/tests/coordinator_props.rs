@@ -1,0 +1,148 @@
+//! Property tests on the coordinator's routing / batching / state
+//! invariants: no job lost, no job duplicated, backpressure holds, and
+//! results are deterministic functions of the spec.
+
+use anchors_hierarchy::coordinator::{
+    Coordinator, JobKind, JobOutput, JobSpec, JobState, SubmitError,
+};
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::prop_assert;
+use anchors_hierarchy::proptest::check;
+use anchors_hierarchy::rng::Rng;
+
+fn random_spec(rng: &mut Rng) -> JobSpec {
+    let kinds = [
+        DatasetKind::Squiggles,
+        DatasetKind::Voronoi,
+        DatasetKind::Cell,
+    ];
+    let dataset = DatasetSpec {
+        kind: kinds[rng.below(kinds.len())].clone(),
+        scale: 0.002 + rng.f64() * 0.002,
+        seed: 1 + rng.below(3) as u64, // few distinct datasets → cache hits
+    };
+    let kind = match rng.below(4) {
+        0 => JobKind::Kmeans {
+            k: 2 + rng.below(6),
+            iters: 1 + rng.below(3),
+            anchors_init: rng.bool(0.5),
+        },
+        1 => JobKind::Anomaly { threshold: 3 + rng.below(10) as u64, target_frac: 0.1 },
+        2 => JobKind::AllPairs { tau: rng.uniform(0.2, 2.0) },
+        _ => JobKind::Mst,
+    };
+    JobSpec { dataset, kind, use_tree: rng.bool(0.7), rmin: 8 + rng.below(24) }
+}
+
+#[test]
+fn prop_no_lost_or_duplicated_jobs() {
+    check("coordinator: every accepted job terminal exactly once", 6, |rng| {
+        let workers = 1 + rng.below(4);
+        let coord = Coordinator::new(workers, 64);
+        let n_jobs = 5 + rng.below(10);
+        let mut ids = Vec::new();
+        for _ in 0..n_jobs {
+            match coord.submit(random_spec(rng)) {
+                Ok(id) => ids.push(id),
+                Err(e) => return Err(format!("submit failed below capacity: {e:?}")),
+            }
+        }
+        // Ids are unique.
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        prop_assert!(sorted.len() == ids.len(), "duplicate job ids");
+        // Every job terminates, exactly one terminal state observed.
+        for id in &ids {
+            let state = coord.wait(*id);
+            prop_assert!(state.is_terminal(), "wait returned non-terminal");
+            if let JobState::Failed(e) = state {
+                return Err(format!("job failed: {e}"));
+            }
+        }
+        let m = coord.shutdown();
+        prop_assert!(
+            m.submitted == ids.len() as u64,
+            "submitted {} != {}",
+            m.submitted,
+            ids.len()
+        );
+        prop_assert!(
+            m.completed + m.failed == m.submitted,
+            "terminal count mismatch: {} + {} != {}",
+            m.completed,
+            m.failed,
+            m.submitted
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_backpressure_cap_holds() {
+    check("coordinator: queue never exceeds capacity", 5, |rng| {
+        let capacity = 1 + rng.below(4);
+        let coord = Coordinator::new(1, capacity);
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        for _ in 0..capacity * 6 {
+            // Observable queue length must never exceed the cap.
+            prop_assert!(
+                coord.queue_len() <= capacity,
+                "queue {} > cap {capacity}",
+                coord.queue_len()
+            );
+            match coord.submit(random_spec(rng)) {
+                Ok(_) => accepted += 1,
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => return Err(format!("{e:?}")),
+            }
+        }
+        let m = coord.shutdown();
+        prop_assert!(m.submitted == accepted, "metrics disagree on accepted");
+        prop_assert!(m.rejected == rejected, "metrics disagree on rejected");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_results_deterministic_in_spec() {
+    check("coordinator: same spec → same result", 5, |rng| {
+        let spec = random_spec(rng);
+        let run = |spec: JobSpec| -> JobOutput {
+            let coord = Coordinator::new(2, 8);
+            let id = coord.submit(spec).unwrap();
+            match coord.wait(id) {
+                JobState::Done(r) => r.output,
+                JobState::Failed(e) => panic!("job failed: {e}"),
+                _ => unreachable!(),
+            }
+        };
+        let a = run(spec.clone());
+        let b = run(spec.clone());
+        // Outputs are deterministic (same dataset seed, same algorithm
+        // seed derivation) — distortions and counts must match exactly.
+        prop_assert!(a == b, "nondeterministic result: {a:?} vs {b:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn mixed_concurrent_load_completes() {
+    // Stress: many jobs across datasets on several workers.
+    let coord = Coordinator::new(4, 128);
+    let mut rng = Rng::new(0xC0);
+    let ids: Vec<_> = (0..40)
+        .map(|_| coord.submit(random_spec(&mut rng)).unwrap())
+        .collect();
+    for id in ids {
+        match coord.wait(id) {
+            JobState::Done(_) => {}
+            JobState::Failed(e) => panic!("job {id} failed: {e}"),
+            _ => unreachable!(),
+        }
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 40);
+    assert_eq!(m.failed, 0);
+}

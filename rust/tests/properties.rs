@@ -1,0 +1,264 @@
+//! Property-based integration tests: randomized invariants over the whole
+//! stack, using the in-tree property driver (`anchors_hierarchy::proptest`).
+//!
+//! Each property runs N random cases; failures print a replay seed.
+
+use anchors_hierarchy::algorithms::{allpairs, anomaly, kmeans, knn};
+use anchors_hierarchy::anchors::build_anchors;
+use anchors_hierarchy::data::{Data, DenseMatrix, SparseMatrix};
+use anchors_hierarchy::metrics::Space;
+use anchors_hierarchy::prop_assert;
+use anchors_hierarchy::proptest::check;
+use anchors_hierarchy::rng::Rng;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::tree::top_down;
+
+/// Random dense space: mixture of a few clusters, random dims/sizes.
+fn random_dense(rng: &mut Rng) -> Space {
+    let n = 30 + rng.below(270);
+    let d = 1 + rng.below(12);
+    let k = 1 + rng.below(6);
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.uniform(-30.0, 30.0)).collect())
+        .collect();
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let c = &centers[rng.below(k)];
+            c.iter().map(|&v| (v + rng.normal() * 2.0) as f32).collect()
+        })
+        .collect();
+    Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+}
+
+/// Random sparse binary space.
+fn random_sparse(rng: &mut Rng) -> Space {
+    let n = 30 + rng.below(150);
+    let d = 50 + rng.below(300);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            let nnz = 1 + rng.below(10);
+            let mut idx = rng.sample_indices(d, nnz.min(d));
+            idx.sort_unstable();
+            idx.into_iter().map(|j| (j as u32, 1.0f32)).collect()
+        })
+        .collect();
+    Space::euclidean(Data::Sparse(SparseMatrix::from_rows(d, &rows)))
+}
+
+fn random_space(rng: &mut Rng) -> Space {
+    if rng.bool(0.25) {
+        random_sparse(rng)
+    } else {
+        random_dense(rng)
+    }
+}
+
+#[test]
+fn prop_middle_out_tree_invariants() {
+    check("middle-out tree invariants", 30, |rng| {
+        let space = random_space(rng);
+        let cfg = MiddleOutConfig {
+            rmin: 2 + rng.below(40),
+            seed: rng.next_u64(),
+            exact_radii: rng.bool(0.3),
+        };
+        let tree = middle_out::build(&space, &cfg);
+        tree.validate(&space).map_err(|e| format!("{cfg:?}: {e}"))
+    });
+}
+
+#[test]
+fn prop_top_down_tree_invariants() {
+    check("top-down tree invariants", 30, |rng| {
+        let space = random_space(rng);
+        let tree = top_down::build(&space, 2 + rng.below(40));
+        tree.validate(&space)
+    });
+}
+
+#[test]
+fn prop_anchor_ownership_is_nearest() {
+    check("anchors: every point owned by its nearest anchor", 25, |rng| {
+        let space = random_space(rng);
+        let points: Vec<u32> = (0..space.n() as u32).collect();
+        let k = 2 + rng.below(12);
+        let set = build_anchors(&space, &points, k, rng);
+        for (ai, a) in set.anchors.iter().enumerate() {
+            for &(_, p) in &a.owned {
+                let own = space.dist_uncounted(p as usize, a.pivot as usize);
+                for b in &set.anchors {
+                    let other = space.dist_uncounted(p as usize, b.pivot as usize);
+                    prop_assert!(
+                        own <= other + 1e-9,
+                        "point {p} (anchor {ai}): own {own} > other {other}"
+                    );
+                }
+            }
+        }
+        // Partition check.
+        let total: usize = set.anchors.iter().map(|a| a.len()).sum();
+        prop_assert!(total == points.len(), "partition broken: {total}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kmeans_tree_equals_naive() {
+    check("kmeans: tree == naive (distortion and centroids)", 20, |rng| {
+        let space = random_space(rng);
+        let tree = middle_out::build(
+            &space,
+            &MiddleOutConfig { rmin: 4 + rng.below(30), seed: rng.next_u64(), exact_radii: false },
+        );
+        let k = 1 + rng.below(8);
+        let iters = 1 + rng.below(6);
+        let opts = kmeans::KmeansOpts { seed: rng.next_u64(), ..Default::default() };
+        let a = kmeans::naive_lloyd(&space, kmeans::Init::Random, k, iters, &opts);
+        let b = kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, k, iters, &opts);
+        prop_assert!(
+            (a.distortion - b.distortion).abs() <= 1e-5 * (1.0 + a.distortion.abs()),
+            "distortion {} vs {}",
+            a.distortion,
+            b.distortion
+        );
+        for (ca, cb) in a.centroids.iter().zip(&b.centroids) {
+            for (x, y) in ca.iter().zip(cb) {
+                prop_assert!((x - y).abs() < 1e-3, "centroid {x} vs {y}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_anomaly_tree_equals_naive() {
+    check("anomaly: tree verdicts == naive verdicts", 20, |rng| {
+        let space = random_space(rng);
+        let tree = middle_out::build(
+            &space,
+            &MiddleOutConfig { rmin: 4 + rng.below(30), seed: rng.next_u64(), exact_radii: false },
+        );
+        let threshold = 1 + rng.below(20) as u64;
+        // Radius spanning trivial to generous.
+        let radius = rng.uniform(0.1, 30.0);
+        let params = anomaly::AnomalyParams { radius, threshold };
+        let a = anomaly::naive_sweep(&space, &params);
+        let b = anomaly::tree_sweep(&space, &tree, &params);
+        prop_assert!(
+            a.flags == b.flags,
+            "verdicts differ at r={radius} t={threshold}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allpairs_tree_equals_naive() {
+    check("allpairs: tree pair set == naive pair set", 20, |rng| {
+        let space = random_space(rng);
+        let tree = middle_out::build(
+            &space,
+            &MiddleOutConfig { rmin: 4 + rng.below(20), seed: rng.next_u64(), exact_radii: false },
+        );
+        let tau = rng.uniform(0.05, 20.0);
+        let a = allpairs::naive_close_pairs(&space, tau);
+        let b = allpairs::tree_close_pairs(&space, &tree, tau);
+        prop_assert!(
+            a.pairs == b.pairs,
+            "pair sets differ at tau={tau}: {} vs {}",
+            a.pairs.len(),
+            b.pairs.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_knn_tree_equals_naive() {
+    check("knn: tree hits == naive hits", 20, |rng| {
+        let space = random_dense(rng);
+        let tree = middle_out::build(
+            &space,
+            &MiddleOutConfig { rmin: 4 + rng.below(20), seed: rng.next_u64(), exact_radii: false },
+        );
+        let k = 1 + rng.below(10);
+        let d = space.dim();
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-30.0, 30.0) as f32).collect();
+        let q_sq = q.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let a = knn::naive_knn(&space, &q, q_sq, k, None);
+        let b = knn::tree_knn(&space, &tree, &q, q_sq, k, None);
+        prop_assert!(a.len() == b.len(), "result sizes differ");
+        for (x, y) in a.iter().zip(&b) {
+            prop_assert!(
+                (x.dist - y.dist).abs() < 1e-9,
+                "knn dists differ: {} vs {}",
+                x.dist,
+                y.dist
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_triangle_inequality_on_generated_datasets() {
+    // The entire edifice rests on the metric axioms — verify them on
+    // samples from every generator family.
+    check("metric axioms across dataset generators", 12, |rng| {
+        use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+        let kinds = [
+            DatasetKind::Squiggles,
+            DatasetKind::Voronoi,
+            DatasetKind::Cell,
+            DatasetKind::Covtype,
+            DatasetKind::Reuters { half: false },
+            DatasetKind::Gen { dims: 100, components: 3 },
+        ];
+        let kind = kinds[rng.below(kinds.len())].clone();
+        let space = DatasetSpec { kind, scale: 0.002, seed: rng.next_u64() }.build();
+        for _ in 0..60 {
+            let (i, j, k) = (
+                rng.below(space.n()),
+                rng.below(space.n()),
+                rng.below(space.n()),
+            );
+            let (dij, djk, dik) = (
+                space.dist_uncounted(i, j),
+                space.dist_uncounted(j, k),
+                space.dist_uncounted(i, k),
+            );
+            prop_assert!(
+                dik <= dij + djk + 1e-6,
+                "triangle violated: d({i},{k})={dik} > {dij}+{djk}"
+            );
+            prop_assert!(
+                (dij - space.dist_uncounted(j, i)).abs() < 1e-9,
+                "symmetry violated"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_distance_counter_consistency() {
+    // Tree + naive runs must account distances without leaks: counter
+    // deltas match the returned `dists` fields exactly.
+    check("distance accounting is leak-free", 15, |rng| {
+        let space = random_dense(rng);
+        let tree = middle_out::build(
+            &space,
+            &MiddleOutConfig { rmin: 8, seed: rng.next_u64(), exact_radii: false },
+        );
+        let before = space.dist_count();
+        let opts = kmeans::KmeansOpts { seed: rng.next_u64(), ..Default::default() };
+        let r = kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, 3, 3, &opts);
+        let delta = space.dist_count() - before;
+        prop_assert!(
+            delta == r.dists,
+            "counter delta {delta} != reported {}",
+            r.dists
+        );
+        Ok(())
+    });
+}
