@@ -14,8 +14,9 @@
 //! Run: `cargo run --release --example end_to_end`
 //! (recorded in EXPERIMENTS.md §End-to-end)
 
-use anchors_hierarchy::coordinator::{Coordinator, JobKind, JobOutput, JobSpec, JobState};
+use anchors_hierarchy::coordinator::{Coordinator, JobSpec, JobState};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{AnomalyQuery, InitKind, KmeansQuery, Query, QueryResult};
 use anchors_hierarchy::runtime::BatchDistanceEngine;
 use std::sync::Arc;
 use std::time::Instant;
@@ -56,29 +57,36 @@ fn main() {
     );
 
     let t0 = Instant::now();
-    // For each dataset, submit (naive, tree) pairs of each operation.
+    // For each dataset, submit (naive, tree) pairs of each operation —
+    // the same typed engine queries the CLI and TCP server construct.
     let mut handles: Vec<(String, String, bool, u64)> = Vec::new();
     for kind in &datasets {
         let dataset = DatasetSpec { kind: kind.clone(), scale, seed };
-        for (opname, job) in [
-            ("kmeans-k20", JobKind::Kmeans { k: 20, iters: 5, anchors_init: true }),
-            ("anomalies", JobKind::Anomaly { threshold: 15, target_frac: 0.1 }),
-        ] {
-            for use_tree in [false, true] {
-                let spec = JobSpec {
-                    dataset: dataset.clone(),
-                    kind: job.clone(),
+        for (opname, use_tree) in
+            [("kmeans-k20", false), ("kmeans-k20", true), ("anomalies", false), ("anomalies", true)]
+        {
+            let query = match opname {
+                "kmeans-k20" => Query::Kmeans(KmeansQuery {
+                    k: 20,
+                    iters: 5,
+                    init: InitKind::Anchors,
                     use_tree,
-                    rmin: 30,
-                };
-                let id = coord.submit(spec).expect("queue sized for workload");
-                handles.push((kind.name(), opname.to_string(), use_tree, id));
-            }
+                }),
+                _ => Query::Anomaly(AnomalyQuery {
+                    threshold: 15,
+                    radius: None,
+                    target_frac: 0.1,
+                    use_tree,
+                }),
+            };
+            let spec = JobSpec { dataset: dataset.clone(), query, rmin: 30 };
+            let id = coord.submit(spec).expect("queue sized for workload");
+            handles.push((kind.name(), opname.to_string(), use_tree, id));
         }
     }
 
     // Collect and pair up.
-    let mut results: std::collections::HashMap<(String, String, bool), (u64, JobOutput, f64)> =
+    let mut results: std::collections::HashMap<(String, String, bool), (u64, QueryResult, f64)> =
         std::collections::HashMap::new();
     for (ds, op, tree, id) in &handles {
         match coord.wait(*id) {
@@ -105,27 +113,27 @@ fn main() {
             // Exactness across the pair where the outputs are comparable.
             match (&naive.1, &tree.1) {
                 (
-                    JobOutput::Kmeans { distortion: a, .. },
-                    JobOutput::Kmeans { distortion: b, .. },
+                    QueryResult::Kmeans { distortion: a, .. },
+                    QueryResult::Kmeans { distortion: b, .. },
                 ) => assert!(
                     (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
                     "{} kmeans mismatch: {a} vs {b}",
                     kind.name()
                 ),
                 (
-                    JobOutput::Anomaly { n_anomalies: a, .. },
-                    JobOutput::Anomaly { n_anomalies: b, .. },
+                    QueryResult::Anomaly { anomalies: a, .. },
+                    QueryResult::Anomaly { anomalies: b, .. },
                 ) => assert_eq!(a, b, "{} anomaly mismatch", kind.name()),
                 _ => {}
             }
             println!(
-                "{:<12} {:<12} {:>14} {:>14} {:>8.1}×  {:?}",
+                "{:<12} {:<12} {:>14} {:>14} {:>8.1}×  {}",
                 kind.name(),
                 op,
                 naive.0,
                 tree.0,
                 speedup,
-                tree.1
+                tree.1.summary()
             );
         }
     }

@@ -1,65 +1,73 @@
-//! Quickstart: build a middle-out metric tree over a clustered dataset
-//! and run exact tree-accelerated K-means, comparing distance counts with
-//! the naive baseline.
+//! Quickstart: the engine facade — build one index over a clustered
+//! dataset, then run many queries against it. Exact tree-accelerated
+//! K-means is compared with the naive baseline (identical answers, far
+//! fewer distance computations), then the same index answers k-NN and
+//! anomaly queries without rebuilding anything.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use anchors_hierarchy::algorithms::kmeans;
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
-use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::engine::{
+    AnomalyQuery, IndexBuilder, KmeansQuery, KnnQuery, KnnTarget, Query, QueryResult,
+};
 
 fn main() {
-    // 1. A dataset: the `cell` surrogate from Table 1 at 10% scale
-    //    (≈4000 points × 38 dims, 12 latent clusters).
-    let spec = DatasetSpec::scaled(DatasetKind::Cell, 0.10);
-    let space = spec.build();
+    // 1. One index: the `cell` surrogate from Table 1 at 10% scale
+    //    (≈4000 points × 38 dims, 12 latent clusters), middle-out
+    //    anchors-hierarchy tree (§3.1), leaf threshold 30.
+    let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Cell, 0.10))
+        .rmin(30)
+        .build();
     println!(
-        "dataset: {} — {} points × {} dims",
-        spec.kind.name(),
-        space.n(),
-        space.dim()
+        "dataset: cell — {} points × {} dims",
+        index.space().n(),
+        index.space().dim()
     );
 
-    // 2. The anchors-hierarchy middle-out metric tree (§3.1 of the paper).
-    let tree = middle_out::build(&space, &MiddleOutConfig::default());
+    // The tree is built lazily, on the first query that needs it.
+    let tree = index.tree();
     let shape = tree.shape();
     println!(
         "tree: {} nodes / {} leaves, depth {}, built with {} distance computations",
         shape.nodes, shape.leaves, shape.max_depth, tree.build_dists
     );
-    tree.validate(&space).expect("tree invariants");
+    tree.validate(index.space()).expect("tree invariants");
 
-    // 3. Exact K-means, naive vs tree-accelerated — identical output,
-    //    very different cost.
+    // 2. Exact K-means, naive vs tree-accelerated — identical output,
+    //    very different cost. Both run through the same dispatcher.
     let k = 12;
-    let iters = 10;
-    let opts = kmeans::KmeansOpts::default();
+    let naive_q = Query::Kmeans(KmeansQuery { k, iters: 10, use_tree: false, ..Default::default() });
+    let tree_q = Query::Kmeans(KmeansQuery { k, iters: 10, use_tree: true, ..Default::default() });
 
-    let naive = kmeans::naive_lloyd(&space, kmeans::Init::Random, k, iters, &opts);
-    let fast = kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, k, iters, &opts);
+    let before = index.dist_count();
+    let naive = index.run(&naive_q);
+    let naive_dists = index.dist_count() - before;
 
-    println!("\nK-means, k={k}, {iters} iterations:");
-    println!(
-        "  naive : distortion {:.6e}  {:>12} distance computations",
-        naive.distortion, naive.dists
-    );
-    println!(
-        "  tree  : distortion {:.6e}  {:>12} distance computations",
-        fast.distortion, fast.dists
-    );
+    let before = index.dist_count();
+    let fast = index.run(&tree_q);
+    let tree_dists = index.dist_count() - before;
+
+    let (QueryResult::Kmeans { distortion: dn, .. }, QueryResult::Kmeans { distortion: dt, .. }) =
+        (&naive, &fast)
+    else {
+        unreachable!("kmeans queries return kmeans results");
+    };
+    println!("\nK-means, k={k}, 10 iterations:");
+    println!("  naive : distortion {dn:.6e}  {naive_dists:>12} distance computations");
+    println!("  tree  : distortion {dt:.6e}  {tree_dists:>12} distance computations");
     println!(
         "  exactness: |Δdistortion| = {:.2e}   speedup: {:.1}×",
-        (naive.distortion - fast.distortion).abs(),
-        naive.dists as f64 / fast.dists as f64
+        (dn - dt).abs(),
+        naive_dists as f64 / tree_dists.max(1) as f64
     );
 
-    // 4. Anchors initialization (Table 4): better starting distortion.
-    let random_start = kmeans::random_init(&space, k, 1);
-    let anchors_start = kmeans::anchors_init(&space, k, 1);
-    println!(
-        "\ninitialization quality (distortion before any iteration):\n  random  {:.6e}\n  anchors {:.6e}  ({:.2}× better)",
-        kmeans::distortion_of(&space, &random_start),
-        kmeans::distortion_of(&space, &anchors_start),
-        kmeans::distortion_of(&space, &random_start) / kmeans::distortion_of(&space, &anchors_start)
-    );
+    // 3. The same index serves other query families — build once, query
+    //    many. A whole workload amortizes over one tree via run_batch.
+    let results = index.run_batch(&[
+        Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 5, ..Default::default() }),
+        Query::Anomaly(AnomalyQuery { threshold: 15, ..Default::default() }),
+    ]);
+    for r in &results {
+        println!("{}", r.summary());
+    }
 }

@@ -1,0 +1,69 @@
+//! Bench: dispatch overhead of the engine facade.
+//!
+//! `Index::run` must be a zero-cost veneer — the same `tree_lloyd` /
+//! `tree_knn` calls, plus one enum match and a couple of Arc clones.
+//! This bench times each query family through the facade and directly
+//! against the algorithm layer, and reports the relative overhead,
+//! which should be well under 1% (noise-dominated).
+
+use anchors_hierarchy::algorithms::{kmeans, knn};
+use anchors_hierarchy::bench::harness::Bencher;
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{IndexBuilder, KmeansQuery, KnnQuery, KnnTarget, Query};
+
+fn main() {
+    let b = Bencher::new(2, 10);
+    let spec = DatasetSpec::scaled(DatasetKind::Squiggles, 0.01); // ≈800 × 2
+    let index = IndexBuilder::new(spec).rmin(30).build();
+    let space = index.space();
+    let tree = index.tree(); // pay the build outside the timing loops
+    let seed = index.seed();
+
+    // --- K-means: facade vs direct -----------------------------------
+    let kq = Query::Kmeans(KmeansQuery { k: 10, iters: 5, ..Default::default() });
+    let facade = b.run("engine/kmeans-k10-via-run", |_| index.run(&kq)).0;
+    let opts = kmeans::KmeansOpts { seed, ..Default::default() };
+    let direct = b
+        .run("direct/kmeans-k10-tree_lloyd", |_| {
+            kmeans::tree_lloyd(space, &tree, kmeans::Init::Random, 10, 5, &opts)
+        })
+        .0;
+    println!("{}", facade.report());
+    println!("{}", direct.report());
+    report_overhead("kmeans", direct.mean, facade.mean);
+
+    // --- k-NN: facade vs direct (per-query cost is tiny, so any
+    //     dispatch overhead would show up loudest here) ----------------
+    let n_queries = 200usize.min(space.n());
+    let knnq: Vec<Query> = (0..n_queries)
+        .map(|i| {
+            Query::Knn(KnnQuery { target: KnnTarget::Point(i as u32), k: 5, use_tree: true })
+        })
+        .collect();
+    let facade = b
+        .run("engine/knn-x200-via-run_batch", |_| index.run_batch(&knnq).len())
+        .0;
+    let mut qrow = vec![0f32; space.dim()];
+    let direct = b
+        .run("direct/knn-x200-tree_knn", |_| {
+            let mut total = 0usize;
+            for i in 0..n_queries {
+                space.fill_row(i, &mut qrow);
+                let q_sq = space.data.sqnorm(i);
+                total += knn::tree_knn(space, &tree, &qrow, q_sq, 5, Some(i as u32)).len();
+            }
+            total
+        })
+        .0;
+    println!("{}", facade.report());
+    println!("{}", direct.report());
+    report_overhead("knn", direct.mean, facade.mean);
+}
+
+fn report_overhead(what: &str, direct_mean: f64, facade_mean: f64) {
+    let overhead = (facade_mean - direct_mean) / direct_mean * 100.0;
+    println!(
+        "{what}: facade overhead {overhead:+.2}% (direct {:.3e}s, via Index::run {:.3e}s)\n",
+        direct_mean, facade_mean
+    );
+}

@@ -1,13 +1,15 @@
 //! The batch-analytics coordinator: the service layer that makes the
 //! paper's algorithms consumable as *jobs* over named datasets.
 //!
-//! Clients submit [`JobSpec`]s (cluster / detect anomalies / find
-//! correlated pairs / span a dependency tree over a dataset, naive or
-//! tree-accelerated). A fixed worker pool executes them. Design points:
+//! Clients submit [`JobSpec`]s — an [`engine::Query`] (any of the eight
+//! algorithm families, naive or tree-accelerated) against a dataset. A
+//! fixed worker pool executes them through the [`engine::Index`] facade.
+//! Design points:
 //!
 //! * **Dataset cache** — generating a Table-1 dataset and building its
 //!   metric tree is expensive; both are cached and shared (Arc) across
-//!   jobs keyed by (dataset, rmin).
+//!   jobs keyed by (dataset, rmin), then assembled into a per-job
+//!   [`engine::Index`] via [`engine::Index::from_parts`].
 //! * **Per-dataset serialization** — a dataset's distance counter is
 //!   shared state; the coordinator runs at most one job per dataset at a
 //!   time so each job's distance accounting is exact. Different datasets
@@ -20,8 +22,8 @@
 
 pub mod server;
 
-use crate::algorithms::{allpairs, anomaly, kmeans, mst};
 use crate::dataset::DatasetSpec;
+use crate::engine::{self, IndexBuilder, Query, QueryResult};
 use crate::metrics::Space;
 use crate::runtime::BatchDistanceEngine;
 use crate::tree::middle_out::{self, MiddleOutConfig};
@@ -31,22 +33,13 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-/// What to run.
-#[derive(Clone, Debug)]
-pub enum JobKind {
-    Kmeans { k: usize, iters: usize, anchors_init: bool },
-    Anomaly { threshold: u64, target_frac: f64 },
-    AllPairs { tau: f64 },
-    Mst,
-}
-
-/// A complete job description.
+/// A complete job description: which dataset, which query, which leaf
+/// threshold for the cached tree. What to run — including the
+/// naive-vs-tree switch — lives inside the [`Query`].
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     pub dataset: DatasetSpec,
-    pub kind: JobKind,
-    /// Tree-accelerated (true) or naive baseline (false).
-    pub use_tree: bool,
+    pub query: Query,
     /// Leaf threshold for the cached tree.
     pub rmin: usize,
 }
@@ -54,20 +47,11 @@ pub struct JobSpec {
 /// Job identifier.
 pub type JobId = u64;
 
-/// Algorithm-specific result payload.
-#[derive(Clone, Debug, PartialEq)]
-pub enum JobOutput {
-    Kmeans { distortion: f64, iterations: usize },
-    Anomaly { n_anomalies: usize, radius: f64 },
-    AllPairs { n_pairs: usize },
-    Mst { total_weight: f64, n_edges: usize },
-}
-
 /// Terminal result of a job.
 #[derive(Clone, Debug)]
 pub struct JobResult {
     pub id: JobId,
-    pub output: JobOutput,
+    pub output: QueryResult,
     /// Distance computations attributed to this job (tree build included
     /// on first use of a dataset/rmin pair).
     pub dists: u64,
@@ -339,71 +323,44 @@ fn get_tree(ds: &CachedDataset, rmin: usize, seed: u64) -> Arc<MetricTree> {
     tree
 }
 
-fn run_job(inner: &Inner, _id: JobId, spec: &JobSpec) -> Result<JobResult, String> {
+/// Assemble the per-job [`engine::Index`] view over the cached parts.
+/// Tree queries get the cached tree (built under the dataset lock on
+/// first use); naive queries get a tree-less index so they never pay
+/// for a build.
+fn get_index(inner: &Inner, ds: &CachedDataset, spec: &JobSpec) -> engine::Index {
+    if spec.query.needs_tree() {
+        let tree = get_tree(ds, spec.rmin, spec.dataset.seed);
+        engine::Index::from_parts(
+            Arc::clone(&ds.space),
+            tree,
+            inner.engine.clone(),
+            spec.dataset.seed,
+            spec.rmin,
+        )
+    } else {
+        IndexBuilder::new(spec.dataset.clone())
+            .rmin(spec.rmin)
+            .batch_engine(inner.engine.clone())
+            .build_on(Arc::clone(&ds.space))
+    }
+}
+
+fn run_job(inner: &Inner, id: JobId, spec: &JobSpec) -> Result<JobResult, String> {
     let ds = get_dataset(inner, &spec.dataset);
     // Serialize jobs on this dataset: exact per-job distance accounting.
-    let _guard = ds.run_lock.lock().unwrap();
-    let space = &*ds.space;
+    // A panicking query (worker catches it below) unwinds while holding
+    // this guard and poisons the mutex; the lock protects no invariant —
+    // only accounting serialization — so recover rather than letting one
+    // bad request permanently fail every later job on the dataset.
+    let _guard = ds.run_lock.lock().unwrap_or_else(|e| e.into_inner());
     let start = Instant::now();
-    let before = space.dist_count();
-
-    let output = match &spec.kind {
-        JobKind::Kmeans { k, iters, anchors_init } => {
-            let init = if *anchors_init {
-                kmeans::Init::Anchors
-            } else {
-                kmeans::Init::Random
-            };
-            let opts = kmeans::KmeansOpts {
-                engine: inner.engine.clone(),
-                ..Default::default()
-            };
-            let r = if spec.use_tree {
-                let tree = get_tree(&ds, spec.rmin, spec.dataset.seed);
-                kmeans::tree_lloyd(space, &tree, init, *k, *iters, &opts)
-            } else {
-                kmeans::naive_lloyd(space, init, *k, *iters, &opts)
-            };
-            JobOutput::Kmeans { distortion: r.distortion, iterations: r.iterations }
-        }
-        JobKind::Anomaly { threshold, target_frac } => {
-            let radius = anomaly::calibrate_radius(space, *threshold, *target_frac, 50, 7);
-            let params = anomaly::AnomalyParams { radius, threshold: *threshold };
-            let sweep = if spec.use_tree {
-                let tree = get_tree(&ds, spec.rmin, spec.dataset.seed);
-                anomaly::tree_sweep(space, &tree, &params)
-            } else {
-                anomaly::naive_sweep(space, &params)
-            };
-            JobOutput::Anomaly { n_anomalies: sweep.n_anomalies, radius }
-        }
-        JobKind::AllPairs { tau } => {
-            let r = if spec.use_tree {
-                let tree = get_tree(&ds, spec.rmin, spec.dataset.seed);
-                allpairs::tree_close_pairs(space, &tree, *tau)
-            } else {
-                allpairs::naive_close_pairs(space, *tau)
-            };
-            JobOutput::AllPairs { n_pairs: r.pairs.len() }
-        }
-        JobKind::Mst => {
-            let edges = if spec.use_tree {
-                let tree = get_tree(&ds, spec.rmin, spec.dataset.seed);
-                mst::tree_mst(space, &tree)
-            } else {
-                mst::naive_mst(space)
-            };
-            JobOutput::Mst {
-                total_weight: mst::total_weight(&edges),
-                n_edges: edges.len(),
-            }
-        }
-    };
-
+    let before = ds.space.dist_count();
+    let index = get_index(inner, &ds, spec);
+    let output = index.run(&spec.query);
     Ok(JobResult {
-        id: _id,
+        id,
         output,
-        dists: space.dist_count() - before,
+        dists: ds.space.dist_count() - before,
         wall_ms: start.elapsed().as_secs_f64() * 1e3,
     })
 }
@@ -412,6 +369,10 @@ fn run_job(inner: &Inner, _id: JobId, spec: &JobSpec) -> Result<JobResult, Strin
 mod tests {
     use super::*;
     use crate::dataset::DatasetKind;
+    use crate::engine::{
+        AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, KmeansQuery, KnnQuery, KnnTarget,
+        MstQuery, XmeansQuery,
+    };
 
     fn tiny(kind: DatasetKind) -> DatasetSpec {
         DatasetSpec::scaled(kind, 0.004) // a few hundred rows
@@ -420,8 +381,7 @@ mod tests {
     fn km(k: usize, use_tree: bool) -> JobSpec {
         JobSpec {
             dataset: tiny(DatasetKind::Squiggles),
-            kind: JobKind::Kmeans { k, iters: 4, anchors_init: false },
-            use_tree,
+            query: Query::Kmeans(KmeansQuery { k, iters: 4, use_tree, ..Default::default() }),
             rmin: 16,
         }
     }
@@ -433,7 +393,7 @@ mod tests {
         match coord.wait(id) {
             JobState::Done(r) => {
                 assert!(r.dists > 0);
-                assert!(matches!(r.output, JobOutput::Kmeans { .. }));
+                assert!(matches!(r.output, QueryResult::Kmeans { .. }));
             }
             other => panic!("unexpected state {other:?}"),
         }
@@ -448,8 +408,10 @@ mod tests {
         let (JobState::Done(ra), JobState::Done(rb)) = (ra, rb) else {
             panic!("jobs failed");
         };
-        let (JobOutput::Kmeans { distortion: da, .. }, JobOutput::Kmeans { distortion: db, .. }) =
-            (&ra.output, &rb.output)
+        let (
+            QueryResult::Kmeans { distortion: da, .. },
+            QueryResult::Kmeans { distortion: db, .. },
+        ) = (&ra.output, &rb.output)
         else {
             panic!("wrong outputs");
         };
@@ -481,25 +443,55 @@ mod tests {
     }
 
     #[test]
-    fn all_kinds_execute() {
+    fn all_query_families_execute() {
         let coord = Coordinator::new(3, 32);
+        let squiggles = tiny(DatasetKind::Squiggles);
         let specs = vec![
             JobSpec {
-                dataset: tiny(DatasetKind::Squiggles),
-                kind: JobKind::Anomaly { threshold: 5, target_frac: 0.1 },
-                use_tree: true,
+                dataset: squiggles.clone(),
+                query: Query::Anomaly(AnomalyQuery { threshold: 5, ..Default::default() }),
                 rmin: 16,
             },
             JobSpec {
-                dataset: tiny(DatasetKind::Squiggles),
-                kind: JobKind::AllPairs { tau: 0.5 },
-                use_tree: true,
+                dataset: squiggles.clone(),
+                query: Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree: true }),
                 rmin: 16,
             },
             JobSpec {
                 dataset: tiny(DatasetKind::Voronoi),
-                kind: JobKind::Mst,
-                use_tree: true,
+                query: Query::Mst(MstQuery { use_tree: true }),
+                rmin: 16,
+            },
+            JobSpec {
+                dataset: squiggles.clone(),
+                query: Query::Xmeans(XmeansQuery { k_min: 1, k_max: 4 }),
+                rmin: 16,
+            },
+            JobSpec {
+                dataset: squiggles.clone(),
+                query: Query::Ball(BallQuery {
+                    center: vec![0.0, 0.0],
+                    radius: 1.0,
+                    use_tree: true,
+                }),
+                rmin: 16,
+            },
+            JobSpec {
+                dataset: squiggles.clone(),
+                query: Query::GaussianEm(GaussianEmQuery {
+                    k: 2,
+                    steps: 2,
+                    ..Default::default()
+                }),
+                rmin: 16,
+            },
+            JobSpec {
+                dataset: squiggles.clone(),
+                query: Query::Knn(KnnQuery {
+                    target: KnnTarget::Point(0),
+                    k: 3,
+                    use_tree: true,
+                }),
                 rmin: 16,
             },
             km(5, true),
@@ -513,6 +505,30 @@ mod tests {
                 JobState::Done(_) => {}
                 other => panic!("job {id} -> {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn failed_job_does_not_wedge_the_dataset() {
+        // A query that panics in the dispatcher (wrong-dimension ball
+        // center on 2-d squiggles) unwinds while holding the dataset's
+        // run lock; later jobs on the same dataset must still succeed.
+        let coord = Coordinator::new(1, 8);
+        let bad = JobSpec {
+            dataset: tiny(DatasetKind::Squiggles),
+            query: Query::Ball(BallQuery {
+                center: vec![0.0, 0.0, 0.0],
+                radius: 1.0,
+                use_tree: true,
+            }),
+            rmin: 16,
+        };
+        let id = coord.submit(bad).unwrap();
+        assert!(matches!(coord.wait(id), JobState::Failed(_)));
+        let id = coord.submit(km(3, true)).unwrap();
+        match coord.wait(id) {
+            JobState::Done(_) => {}
+            other => panic!("dataset wedged after failed job: {other:?}"),
         }
     }
 

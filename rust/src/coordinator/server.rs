@@ -2,7 +2,11 @@
 //! "launcher" surface of the system (vLLM-router-style: a thin, fast
 //! network layer over the batch scheduler).
 //!
-//! Protocol: newline-delimited JSON over TCP.
+//! Protocol: newline-delimited JSON over TCP. The query portion of a
+//! `submit` request is exactly the [`engine::wire`] form of an
+//! [`crate::engine::Query`] (flat `"op"` + options), so the protocol
+//! maps 1:1 onto the typed engine API — every algorithm family the
+//! engine serves is reachable over the wire.
 //!
 //! ```text
 //! → {"cmd":"submit","dataset":"cell","scale":0.01,"op":"kmeans","k":10,
@@ -10,16 +14,24 @@
 //! ← {"ok":true,"id":3}
 //! → {"cmd":"wait","id":3}
 //! ← {"ok":true,"id":3,"state":"done","dists":12345,
-//!    "output":{"kind":"kmeans","distortion":1.23e4,"iterations":5}}
+//!    "output":{"kind":"kmeans","distortion":1.23e4,"iterations":5,...}}
 //! → {"cmd":"metrics"}            → {"cmd":"ping"}
 //! ```
 //!
 //! One thread per connection (std-only environment; connections are few
 //! and long-lived — the heavy concurrency lives in the coordinator's
 //! worker pool, not here).
+//!
+//! Note: `wait`/`state` responses carry the *full* result payload
+//! (pairs, edges, centroids, ...) so the wire maps losslessly onto
+//! [`crate::engine::QueryResult`]. An allpairs query with a generous
+//! tau on a big dataset can make that line large; clients wanting
+//! summaries only should read the derived `n_*` fields and ignore the
+//! payload arrays.
 
-use super::{Coordinator, JobKind, JobOutput, JobSpec, JobState};
+use super::{Coordinator, JobSpec, JobState};
 use crate::dataset::{DatasetKind, DatasetSpec};
+use crate::engine::wire;
 use crate::json::{self, Value};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -167,30 +179,10 @@ fn parse_spec(req: &Value) -> Result<JobSpec, String> {
     let scale = req.get("scale").and_then(Value::as_f64).unwrap_or(0.01);
     let seed = req.get("seed").and_then(Value::as_f64).unwrap_or(20130.0) as u64;
     let dataset = DatasetSpec { kind, scale, seed };
-    let op = req.get("op").and_then(Value::as_str).ok_or("missing \"op\"")?;
-    let num =
-        |key: &str, default: f64| req.get(key).and_then(Value::as_f64).unwrap_or(default);
-    let job = match op {
-        "kmeans" => JobKind::Kmeans {
-            k: num("k", 10.0) as usize,
-            iters: num("iters", 5.0) as usize,
-            anchors_init: matches!(req.get("init").and_then(Value::as_str), Some("anchors")),
-        },
-        "anomaly" => JobKind::Anomaly {
-            threshold: num("threshold", 10.0) as u64,
-            target_frac: num("frac", 0.1),
-        },
-        "allpairs" => JobKind::AllPairs { tau: num("tau", 1.0) },
-        "mst" => JobKind::Mst,
-        other => return Err(format!("unknown op {other:?}")),
-    };
-    let use_tree = !matches!(req.get("tree"), Some(Value::Bool(false)));
-    Ok(JobSpec {
-        dataset,
-        kind: job,
-        use_tree,
-        rmin: num("rmin", 30.0) as usize,
-    })
+    // The rest of the request *is* the wire form of an engine query.
+    let query = wire::query_from_json(req)?;
+    let rmin = req.get("rmin").and_then(Value::as_f64).unwrap_or(30.0) as usize;
+    Ok(JobSpec { dataset, query, rmin })
 }
 
 fn state_obj(id: u64, state: &JobState) -> Value {
@@ -206,29 +198,7 @@ fn state_obj(id: u64, state: &JobState) -> Value {
             fields.push(("state", Value::Str("done".into())));
             fields.push(("dists", Value::Num(r.dists as f64)));
             fields.push(("wall_ms", Value::Num(r.wall_ms)));
-            let mut out = BTreeMap::new();
-            match &r.output {
-                JobOutput::Kmeans { distortion, iterations } => {
-                    out.insert("kind".into(), Value::Str("kmeans".into()));
-                    out.insert("distortion".into(), Value::Num(*distortion));
-                    out.insert("iterations".into(), Value::Num(*iterations as f64));
-                }
-                JobOutput::Anomaly { n_anomalies, radius } => {
-                    out.insert("kind".into(), Value::Str("anomaly".into()));
-                    out.insert("n_anomalies".into(), Value::Num(*n_anomalies as f64));
-                    out.insert("radius".into(), Value::Num(*radius));
-                }
-                JobOutput::AllPairs { n_pairs } => {
-                    out.insert("kind".into(), Value::Str("allpairs".into()));
-                    out.insert("n_pairs".into(), Value::Num(*n_pairs as f64));
-                }
-                JobOutput::Mst { total_weight, n_edges } => {
-                    out.insert("kind".into(), Value::Str("mst".into()));
-                    out.insert("total_weight".into(), Value::Num(*total_weight));
-                    out.insert("n_edges".into(), Value::Num(*n_edges as f64));
-                }
-            }
-            fields.push(("output", Value::Obj(out)));
+            fields.push(("output", wire::result_to_json(&r.output)));
         }
     }
     ok_obj(fields)

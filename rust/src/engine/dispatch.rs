@@ -1,0 +1,200 @@
+//! [`Index::run`] — the single dispatcher mapping every [`Query`]
+//! variant onto the naive/tree implementation pair in
+//! [`crate::algorithms`]. This is the only place in the crate that calls
+//! the algorithm layer on behalf of a consumer; the CLI, coordinator and
+//! server all route through here.
+
+use super::{
+    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, Index, InitKind, KmeansQuery,
+    KnnQuery, KnnTarget, MstQuery, Query, QueryResult, XmeansQuery,
+};
+use crate::algorithms::{allpairs, anomaly, ballquery, gaussian, kmeans, knn, mst, xmeans};
+use crate::metrics::dense_dot;
+
+impl Index {
+    /// Execute one query against the shared index. Invalid inputs
+    /// (dimension mismatches, out-of-range point ids) panic with a
+    /// descriptive message; the coordinator turns panics into
+    /// `JobState::Failed`.
+    pub fn run(&self, query: &Query) -> QueryResult {
+        match query {
+            Query::Kmeans(q) => self.run_kmeans(q),
+            Query::Xmeans(q) => self.run_xmeans(q),
+            Query::Anomaly(q) => self.run_anomaly(q),
+            Query::AllPairs(q) => self.run_allpairs(q),
+            Query::Ball(q) => self.run_ball(q),
+            Query::GaussianEm(q) => self.run_em(q),
+            Query::Knn(q) => self.run_knn(q),
+            Query::Mst(q) => self.run_mst(q),
+        }
+    }
+
+    /// Execute a workload of queries against the shared index, in
+    /// order. Equivalent to calling [`Index::run`] per query (the
+    /// round-trip test asserts bitwise-identical results); the value is
+    /// amortization — dataset and tree are paid for once, and the tree
+    /// is built at most once no matter how many queries need it.
+    pub fn run_batch(&self, queries: &[Query]) -> Vec<QueryResult> {
+        queries.iter().map(|q| self.run(q)).collect()
+    }
+
+    fn kmeans_opts(&self) -> kmeans::KmeansOpts {
+        kmeans::KmeansOpts {
+            engine: self.batch_engine().cloned(),
+            seed: self.seed(),
+            ..Default::default()
+        }
+    }
+
+    fn run_kmeans(&self, q: &KmeansQuery) -> QueryResult {
+        let init = match q.init {
+            InitKind::Random => kmeans::Init::Random,
+            InitKind::Anchors => kmeans::Init::Anchors,
+        };
+        let (k, iters) = (q.k.max(1), q.iters.max(1));
+        let opts = self.kmeans_opts();
+        let r = if q.use_tree {
+            kmeans::tree_lloyd(self.space(), &self.tree(), init, k, iters, &opts)
+        } else {
+            kmeans::naive_lloyd(self.space(), init, k, iters, &opts)
+        };
+        QueryResult::Kmeans {
+            centroids: r.centroids,
+            distortion: r.distortion,
+            iterations: r.iterations,
+        }
+    }
+
+    fn run_xmeans(&self, q: &XmeansQuery) -> QueryResult {
+        let k_min = q.k_min.max(1);
+        let k_max = q.k_max.max(k_min);
+        let r = xmeans::xmeans(self.space(), &self.tree(), k_min, k_max, &self.kmeans_opts());
+        QueryResult::Xmeans {
+            centroids: r.centroids,
+            k: r.k,
+            distortion: r.distortion,
+            bic: r.bic,
+        }
+    }
+
+    fn run_anomaly(&self, q: &AnomalyQuery) -> QueryResult {
+        let radius = q.radius.unwrap_or_else(|| {
+            anomaly::calibrate_radius(self.space(), q.threshold, q.target_frac, 50, self.seed())
+        });
+        let params = anomaly::AnomalyParams { radius, threshold: q.threshold };
+        let sweep = if q.use_tree {
+            anomaly::tree_sweep(self.space(), &self.tree(), &params)
+        } else {
+            anomaly::naive_sweep(self.space(), &params)
+        };
+        let anomalies = sweep
+            .flags
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f)
+            .map(|(i, _)| i as u32)
+            .collect();
+        QueryResult::Anomaly { radius, anomalies }
+    }
+
+    fn run_allpairs(&self, q: &AllPairsQuery) -> QueryResult {
+        let r = if q.use_tree {
+            allpairs::tree_close_pairs(self.space(), &self.tree(), q.tau)
+        } else {
+            allpairs::naive_close_pairs(self.space(), q.tau)
+        };
+        QueryResult::AllPairs { pairs: r.pairs }
+    }
+
+    fn run_ball(&self, q: &BallQuery) -> QueryResult {
+        assert_eq!(
+            q.center.len(),
+            self.space().dim(),
+            "ball query center has dimension {} but the space has {}",
+            q.center.len(),
+            self.space().dim()
+        );
+        let stats = if q.use_tree {
+            ballquery::tree_ball_stats(self.space(), &self.tree(), &q.center, q.radius)
+        } else {
+            ballquery::naive_ball_stats(self.space(), &q.center, q.radius)
+        };
+        QueryResult::Ball {
+            count: stats.count,
+            mean: stats.mean,
+            total_variance: stats.total_variance,
+        }
+    }
+
+    fn run_em(&self, q: &GaussianEmQuery) -> QueryResult {
+        let k = q.k.max(1);
+        let steps = q.steps.max(1);
+        let seeds = match q.init {
+            InitKind::Random => kmeans::random_init(self.space(), k, self.seed()),
+            InitKind::Anchors => kmeans::anchors_init(self.space(), k, self.seed()),
+        };
+        let mut mix = gaussian::Mixture::from_seeds(seeds);
+        let mut loglik = f64::NEG_INFINITY;
+        if q.use_tree {
+            let tree = self.tree();
+            for _ in 0..steps {
+                loglik = gaussian::tree_em_step(self.space(), &tree, &mut mix, q.tau);
+            }
+        } else {
+            for _ in 0..steps {
+                loglik = gaussian::naive_em_step(self.space(), &mut mix);
+            }
+        }
+        QueryResult::GaussianEm {
+            weights: mix.weights,
+            means: mix.means,
+            variances: mix.variances,
+            loglik,
+            steps,
+        }
+    }
+
+    fn run_knn(&self, q: &KnnQuery) -> QueryResult {
+        let space = self.space();
+        let (qrow, q_sq, skip) = match &q.target {
+            KnnTarget::Point(id) => {
+                assert!(
+                    (*id as usize) < space.n(),
+                    "knn query point {id} out of range (n = {})",
+                    space.n()
+                );
+                let mut row = vec![0f32; space.dim()];
+                space.fill_row(*id as usize, &mut row);
+                let sq = space.data.sqnorm(*id as usize);
+                (row, sq, Some(*id))
+            }
+            KnnTarget::Vector(v) => {
+                assert_eq!(
+                    v.len(),
+                    space.dim(),
+                    "knn query vector has dimension {} but the space has {}",
+                    v.len(),
+                    space.dim()
+                );
+                (v.clone(), dense_dot(v, v), None)
+            }
+        };
+        let k = q.k.max(1);
+        let neighbors = if q.use_tree {
+            knn::tree_knn(space, &self.tree(), &qrow, q_sq, k, skip)
+        } else {
+            knn::naive_knn(space, &qrow, q_sq, k, skip)
+        };
+        QueryResult::Knn { neighbors }
+    }
+
+    fn run_mst(&self, q: &MstQuery) -> QueryResult {
+        let edges = if q.use_tree {
+            mst::tree_mst(self.space(), &self.tree())
+        } else {
+            mst::naive_mst(self.space())
+        };
+        let total_weight = mst::total_weight(&edges);
+        QueryResult::Mst { edges, total_weight }
+    }
+}

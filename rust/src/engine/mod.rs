@@ -1,0 +1,306 @@
+//! The engine facade: **build one index, run many queries**.
+//!
+//! The paper's thesis is that a single metric tree decorated with cached
+//! sufficient statistics accelerates a *wide variety* of statistical
+//! algorithms. This module is that thesis as an API. An [`IndexBuilder`]
+//! captures everything needed to stand an index up (dataset, tree
+//! strategy, leaf threshold, seed, optional XLA batch engine); the
+//! resulting [`Index`] owns the [`Space`] (with its distance counter)
+//! and the [`MetricTree`], and answers every [`Query`] variant through
+//! one dispatcher, [`Index::run`]:
+//!
+//! ```no_run
+//! use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+//! use anchors_hierarchy::engine::{IndexBuilder, KmeansQuery, Query, QueryResult};
+//!
+//! let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Cell, 0.1))
+//!     .rmin(30)
+//!     .build();
+//! let result = index.run(&Query::Kmeans(KmeansQuery { k: 20, ..Default::default() }));
+//! if let QueryResult::Kmeans { distortion, .. } = result {
+//!     println!("distortion {distortion}");
+//! }
+//! ```
+//!
+//! Design points:
+//!
+//! * **Build once, query many.** The expensive parts — materializing the
+//!   dataset and building the tree — happen once per index; every query
+//!   family (k-means, x-means, anomaly, all-pairs, ball stats, Gaussian
+//!   EM, k-NN, MST) then shares them. [`Index::run_batch`] amortizes a
+//!   whole workload over one index.
+//! * **Lazy tree.** The tree is built on first need, so a workload of
+//!   naive-baseline queries (every options struct has a `use_tree`
+//!   switch) never pays for a build.
+//! * **Exact accounting.** The index owns the space's distance counter;
+//!   [`Index::dist_count`] exposes it so callers (the coordinator, the
+//!   bench harness) can attribute distance computations to queries.
+//! * **One implementation layer.** The dispatcher calls the same
+//!   `naive_*` / `tree_*` free functions in [`crate::algorithms`] that
+//!   the paper-table benches measure; the facade adds routing, not
+//!   logic. The CLI, the batch [`crate::coordinator`], and the TCP
+//!   server all construct work as [`Query`] values and execute them
+//!   here, and the [`wire`] module gives every query and result a JSON
+//!   form for the network boundary.
+
+mod dispatch;
+pub mod query;
+pub mod wire;
+
+pub use query::{
+    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, InitKind, KmeansQuery, KnnQuery,
+    KnnTarget, MstQuery, Query, QueryResult, XmeansQuery,
+};
+
+use crate::dataset::DatasetSpec;
+use crate::metrics::Space;
+use crate::runtime::BatchDistanceEngine;
+use crate::tree::middle_out::{self, MiddleOutConfig};
+use crate::tree::{top_down, MetricTree};
+use std::sync::{Arc, Mutex};
+
+/// How the index's metric tree is constructed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TreeStrategy {
+    /// Middle-out via the anchors hierarchy (§3 of the paper; default).
+    MiddleOut,
+    /// Classic top-down splitting (§2.2 baseline).
+    TopDown,
+}
+
+impl TreeStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TreeStrategy::MiddleOut => "middle-out",
+            TreeStrategy::TopDown => "top-down",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<TreeStrategy> {
+        match name {
+            "middle-out" => Some(TreeStrategy::MiddleOut),
+            "top-down" => Some(TreeStrategy::TopDown),
+            _ => None,
+        }
+    }
+}
+
+/// Everything needed to stand up an [`Index`]. All knobs default
+/// sensibly: middle-out tree, `rmin = 30` (the paper's Table-2 leaf
+/// threshold), the dataset's own seed, no batch engine.
+#[derive(Clone)]
+pub struct IndexBuilder {
+    dataset: DatasetSpec,
+    strategy: TreeStrategy,
+    rmin: usize,
+    seed: Option<u64>,
+    exact_radii: bool,
+    batch_engine: Option<Arc<BatchDistanceEngine>>,
+}
+
+impl IndexBuilder {
+    pub fn new(dataset: DatasetSpec) -> IndexBuilder {
+        IndexBuilder {
+            dataset,
+            strategy: TreeStrategy::MiddleOut,
+            rmin: 30,
+            seed: None,
+            exact_radii: false,
+            batch_engine: None,
+        }
+    }
+
+    /// Tree construction strategy (default middle-out).
+    pub fn strategy(mut self, strategy: TreeStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Leaf threshold for the tree (default 30).
+    pub fn rmin(mut self, rmin: usize) -> Self {
+        self.rmin = rmin;
+        self
+    }
+
+    /// Seed for tree construction and query-level randomness (centroid
+    /// initialization). Defaults to the dataset's seed, so an index is a
+    /// deterministic function of its builder.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Recompute exact node radii after the middle-out build.
+    pub fn exact_radii(mut self, exact: bool) -> Self {
+        self.exact_radii = exact;
+        self
+    }
+
+    /// Optional XLA batch engine for dense leaf-level distance blocks.
+    pub fn batch_engine(mut self, engine: Option<Arc<BatchDistanceEngine>>) -> Self {
+        self.batch_engine = engine;
+        self
+    }
+
+    /// Materialize the dataset and wrap it in an [`Index`]. The tree is
+    /// built lazily, on the first query that needs it.
+    pub fn build(self) -> Index {
+        let space = Arc::new(self.dataset.build());
+        self.build_on(space)
+    }
+
+    /// Wrap an already-materialized space (e.g. the coordinator's
+    /// dataset cache) without rebuilding it.
+    pub fn build_on(self, space: Arc<Space>) -> Index {
+        let seed = self.seed.unwrap_or(self.dataset.seed);
+        Index {
+            space,
+            tree: Mutex::new(None),
+            strategy: self.strategy,
+            rmin: self.rmin,
+            exact_radii: self.exact_radii,
+            batch_engine: self.batch_engine,
+            seed,
+        }
+    }
+}
+
+/// A built index: the space, its (lazily built) metric tree, and the
+/// distance counter — the shared substrate every [`Query`] runs on.
+pub struct Index {
+    space: Arc<Space>,
+    tree: Mutex<Option<Arc<MetricTree>>>,
+    strategy: TreeStrategy,
+    rmin: usize,
+    exact_radii: bool,
+    batch_engine: Option<Arc<BatchDistanceEngine>>,
+    seed: u64,
+}
+
+impl Index {
+    /// Assemble an index from pre-built parts (used by the coordinator's
+    /// dataset/tree caches). The tree is considered already built;
+    /// `rmin` must be the leaf threshold it was actually built with so
+    /// [`Index::rmin`] reports the truth.
+    pub fn from_parts(
+        space: Arc<Space>,
+        tree: Arc<MetricTree>,
+        batch_engine: Option<Arc<BatchDistanceEngine>>,
+        seed: u64,
+        rmin: usize,
+    ) -> Index {
+        Index {
+            space,
+            tree: Mutex::new(Some(tree)),
+            strategy: TreeStrategy::MiddleOut,
+            rmin,
+            exact_radii: false,
+            batch_engine,
+            seed,
+        }
+    }
+
+    pub fn space(&self) -> &Space {
+        &self.space
+    }
+
+    /// Shared handle to the space (for callers that cache it).
+    pub fn space_shared(&self) -> Arc<Space> {
+        Arc::clone(&self.space)
+    }
+
+    /// The metric tree, building it on first use.
+    pub fn tree(&self) -> Arc<MetricTree> {
+        let mut guard = self.tree.lock().unwrap();
+        if let Some(tree) = guard.as_ref() {
+            return Arc::clone(tree);
+        }
+        let tree = Arc::new(match self.strategy {
+            TreeStrategy::MiddleOut => middle_out::build(
+                &self.space,
+                &MiddleOutConfig {
+                    rmin: self.rmin,
+                    seed: self.seed,
+                    exact_radii: self.exact_radii,
+                },
+            ),
+            TreeStrategy::TopDown => top_down::build(&self.space, self.rmin),
+        });
+        *guard = Some(Arc::clone(&tree));
+        tree
+    }
+
+    /// Whether the tree has been built yet.
+    pub fn tree_built(&self) -> bool {
+        self.tree.lock().unwrap().is_some()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn rmin(&self) -> usize {
+        self.rmin
+    }
+
+    pub fn batch_engine(&self) -> Option<&Arc<BatchDistanceEngine>> {
+        self.batch_engine.as_ref()
+    }
+
+    /// Total distance computations charged to this index's space
+    /// (monotonic; includes the tree build once it happens).
+    pub fn dist_count(&self) -> u64 {
+        self.space.dist_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetKind;
+
+    fn tiny_builder() -> IndexBuilder {
+        IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.004))
+    }
+
+    #[test]
+    fn tree_is_lazy_and_cached() {
+        let index = tiny_builder().rmin(16).build();
+        assert!(!index.tree_built(), "tree built eagerly");
+        let before = index.dist_count();
+        let t1 = index.tree();
+        assert!(index.tree_built());
+        assert!(index.dist_count() > before, "build did no counted work");
+        let mid = index.dist_count();
+        let t2 = index.tree();
+        assert!(Arc::ptr_eq(&t1, &t2), "tree rebuilt on second access");
+        assert_eq!(index.dist_count(), mid, "second access re-paid the build");
+    }
+
+    #[test]
+    fn naive_query_never_builds_tree() {
+        let index = tiny_builder().build();
+        let q = Query::Kmeans(KmeansQuery { k: 3, iters: 2, use_tree: false, ..Default::default() });
+        let _ = index.run(&q);
+        assert!(!index.tree_built(), "naive query built the tree");
+    }
+
+    #[test]
+    fn strategies_differ_but_both_serve_queries() {
+        for strategy in [TreeStrategy::MiddleOut, TreeStrategy::TopDown] {
+            let index = tiny_builder().strategy(strategy).rmin(16).build();
+            let r = index.run(&Query::Kmeans(KmeansQuery { k: 4, iters: 3, ..Default::default() }));
+            assert_eq!(r.kind(), "kmeans");
+        }
+    }
+
+    #[test]
+    fn from_parts_reuses_the_given_tree() {
+        let built = tiny_builder().rmin(16).build();
+        let tree = built.tree();
+        let index = Index::from_parts(built.space_shared(), Arc::clone(&tree), None, 7, 16);
+        assert!(index.tree_built());
+        assert!(Arc::ptr_eq(&index.tree(), &tree));
+        assert_eq!(index.rmin(), 16);
+    }
+}

@@ -1,0 +1,311 @@
+//! The typed query surface of the engine: one [`Query`] variant per
+//! algorithm family the paper's cached-statistics metric tree serves,
+//! each with its own options struct (sensible [`Default`]s throughout),
+//! and the matching [`QueryResult`] payloads.
+//!
+//! Every query carries a `use_tree` switch selecting the
+//! tree-accelerated implementation (default) or the naive baseline the
+//! paper compares against — except X-means, which is defined in terms of
+//! the tree and always uses it.
+
+use crate::algorithms::knn::Neighbor;
+use crate::algorithms::mst::Edge;
+
+/// Centroid / mixture-mean initialization strategy (wire-safe subset of
+/// [`crate::algorithms::kmeans::Init`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitKind {
+    /// k distinct datapoints chosen uniformly at random.
+    Random,
+    /// Centroids of the k anchors of the anchors hierarchy (the paper's
+    /// "Anchors Start", Table 4).
+    Anchors,
+}
+
+impl InitKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InitKind::Random => "random",
+            InitKind::Anchors => "anchors",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<InitKind> {
+        match name {
+            "random" => Some(InitKind::Random),
+            "anchors" => Some(InitKind::Anchors),
+            _ => None,
+        }
+    }
+}
+
+/// Exact K-means (paper §4.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KmeansQuery {
+    pub k: usize,
+    /// Maximum Lloyd iterations (at least one pass always runs).
+    pub iters: usize,
+    pub init: InitKind,
+    pub use_tree: bool,
+}
+
+impl Default for KmeansQuery {
+    fn default() -> Self {
+        KmeansQuery { k: 10, iters: 5, init: InitKind::Random, use_tree: true }
+    }
+}
+
+/// X-means: K-means with BIC-driven estimation of k (Pelleg & Moore).
+/// Tree-only: the algorithm is defined in terms of the shared index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct XmeansQuery {
+    pub k_min: usize,
+    pub k_max: usize,
+}
+
+impl Default for XmeansQuery {
+    fn default() -> Self {
+        XmeansQuery { k_min: 1, k_max: 16 }
+    }
+}
+
+/// Non-parametric anomaly detection sweep (paper §4.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnomalyQuery {
+    /// A point is anomalous when fewer than `threshold` points lie
+    /// within the radius.
+    pub threshold: u64,
+    /// Explicit neighborhood radius; `None` auto-calibrates so roughly
+    /// `target_frac` of the points are anomalous (the paper's §5 setup).
+    pub radius: Option<f64>,
+    pub target_frac: f64,
+    pub use_tree: bool,
+}
+
+impl Default for AnomalyQuery {
+    fn default() -> Self {
+        AnomalyQuery { threshold: 10, radius: None, target_frac: 0.1, use_tree: true }
+    }
+}
+
+/// All close pairs `D(x, y) ≤ tau` (paper §4.3, attribute grouping).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AllPairsQuery {
+    pub tau: f64,
+    pub use_tree: bool,
+}
+
+impl Default for AllPairsQuery {
+    fn default() -> Self {
+        AllPairsQuery { tau: 1.0, use_tree: true }
+    }
+}
+
+/// Exact count / mean / total-variance of the points inside a ball
+/// (the paper's §1 cached-sufficient-statistics motivation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BallQuery {
+    pub center: Vec<f32>,
+    pub radius: f64,
+    pub use_tree: bool,
+}
+
+impl Default for BallQuery {
+    fn default() -> Self {
+        BallQuery { center: Vec::new(), radius: 1.0, use_tree: true }
+    }
+}
+
+/// Spherical-Gaussian mixture EM (paper §6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GaussianEmQuery {
+    pub k: usize,
+    /// EM steps to run (at least one always runs).
+    pub steps: usize,
+    /// Responsibility-bracket width below which whole nodes are awarded
+    /// in bulk; `0.0` is exact (bit-comparable to naive EM).
+    pub tau: f64,
+    pub init: InitKind,
+    pub use_tree: bool,
+}
+
+impl Default for GaussianEmQuery {
+    fn default() -> Self {
+        GaussianEmQuery { k: 5, steps: 5, tau: 0.0, init: InitKind::Random, use_tree: true }
+    }
+}
+
+/// What a k-NN query searches around.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KnnTarget {
+    /// A dataset row (excluded from its own neighbor list).
+    Point(u32),
+    /// An arbitrary query vector of the space's dimension.
+    Vector(Vec<f32>),
+}
+
+/// k-nearest-neighbor search (paper §2.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KnnQuery {
+    pub target: KnnTarget,
+    pub k: usize,
+    pub use_tree: bool,
+}
+
+impl Default for KnnQuery {
+    fn default() -> Self {
+        KnnQuery { target: KnnTarget::Point(0), k: 5, use_tree: true }
+    }
+}
+
+/// Euclidean minimum spanning tree / dependency tree (paper §6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MstQuery {
+    pub use_tree: bool,
+}
+
+impl Default for MstQuery {
+    fn default() -> Self {
+        MstQuery { use_tree: true }
+    }
+}
+
+/// One request against an [`crate::engine::Index`] — the union of every
+/// algorithm family the shared metric tree accelerates.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Query {
+    Kmeans(KmeansQuery),
+    Xmeans(XmeansQuery),
+    Anomaly(AnomalyQuery),
+    AllPairs(AllPairsQuery),
+    Ball(BallQuery),
+    GaussianEm(GaussianEmQuery),
+    Knn(KnnQuery),
+    Mst(MstQuery),
+}
+
+impl Query {
+    /// Stable wire/display name of the algorithm family.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Query::Kmeans(_) => "kmeans",
+            Query::Xmeans(_) => "xmeans",
+            Query::Anomaly(_) => "anomaly",
+            Query::AllPairs(_) => "allpairs",
+            Query::Ball(_) => "ball",
+            Query::GaussianEm(_) => "em",
+            Query::Knn(_) => "knn",
+            Query::Mst(_) => "mst",
+        }
+    }
+
+    /// Whether executing this query touches the metric tree (an
+    /// [`crate::engine::Index`] builds its tree lazily on first need, so
+    /// all-naive workloads never pay for one).
+    pub fn needs_tree(&self) -> bool {
+        match self {
+            Query::Kmeans(q) => q.use_tree,
+            Query::Xmeans(_) => true,
+            Query::Anomaly(q) => q.use_tree,
+            Query::AllPairs(q) => q.use_tree,
+            Query::Ball(q) => q.use_tree,
+            Query::GaussianEm(q) => q.use_tree,
+            Query::Knn(q) => q.use_tree,
+            Query::Mst(q) => q.use_tree,
+        }
+    }
+}
+
+/// The algorithm-specific answer to a [`Query`]; variants correspond
+/// one-to-one (verified by the dispatch round-trip test).
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryResult {
+    Kmeans {
+        centroids: Vec<Vec<f32>>,
+        distortion: f64,
+        iterations: usize,
+    },
+    Xmeans {
+        centroids: Vec<Vec<f32>>,
+        k: usize,
+        distortion: f64,
+        bic: f64,
+    },
+    Anomaly {
+        /// The radius actually used (calibrated when the query left it
+        /// unset).
+        radius: f64,
+        /// Ids of the anomalous points, ascending.
+        anomalies: Vec<u32>,
+    },
+    AllPairs {
+        /// (i, j) with i < j and D(i, j) ≤ tau, ascending.
+        pairs: Vec<(u32, u32)>,
+    },
+    Ball {
+        count: u64,
+        mean: Vec<f32>,
+        total_variance: f64,
+    },
+    GaussianEm {
+        weights: Vec<f64>,
+        means: Vec<Vec<f32>>,
+        variances: Vec<f64>,
+        /// Log-likelihood after the final step.
+        loglik: f64,
+        steps: usize,
+    },
+    Knn {
+        /// Ascending by distance.
+        neighbors: Vec<Neighbor>,
+    },
+    Mst {
+        edges: Vec<Edge>,
+        total_weight: f64,
+    },
+}
+
+impl QueryResult {
+    /// Stable wire/display name; matches [`Query::kind`] of the query
+    /// that produced it.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            QueryResult::Kmeans { .. } => "kmeans",
+            QueryResult::Xmeans { .. } => "xmeans",
+            QueryResult::Anomaly { .. } => "anomaly",
+            QueryResult::AllPairs { .. } => "allpairs",
+            QueryResult::Ball { .. } => "ball",
+            QueryResult::GaussianEm { .. } => "em",
+            QueryResult::Knn { .. } => "knn",
+            QueryResult::Mst { .. } => "mst",
+        }
+    }
+
+    /// One-line human summary (CLI and server logs).
+    pub fn summary(&self) -> String {
+        match self {
+            QueryResult::Kmeans { distortion, iterations, centroids } => format!(
+                "kmeans: k={} distortion {distortion:.6e} after {iterations} iterations",
+                centroids.len()
+            ),
+            QueryResult::Xmeans { k, distortion, bic, .. } => {
+                format!("xmeans: chose k={k} distortion {distortion:.6e} bic {bic:.4e}")
+            }
+            QueryResult::Anomaly { radius, anomalies } => {
+                format!("anomaly: {} anomalies at radius {radius:.4}", anomalies.len())
+            }
+            QueryResult::AllPairs { pairs } => format!("allpairs: {} close pairs", pairs.len()),
+            QueryResult::Ball { count, total_variance, .. } => {
+                format!("ball: {count} points, total variance {total_variance:.4}")
+            }
+            QueryResult::GaussianEm { loglik, steps, weights, .. } => format!(
+                "em: k={} loglik {loglik:.6e} after {steps} steps",
+                weights.len()
+            ),
+            QueryResult::Knn { neighbors } => format!("knn: {} neighbors", neighbors.len()),
+            QueryResult::Mst { edges, total_weight } => {
+                format!("mst: {} edges, total weight {total_weight:.4}", edges.len())
+            }
+        }
+    }
+}

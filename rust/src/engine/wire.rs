@@ -1,0 +1,519 @@
+//! JSON wire format for [`Query`] / [`QueryResult`] over the crate's
+//! own [`crate::json`] module (offline environment — no serde).
+//!
+//! Queries serialize flat — `{"op": "kmeans", "k": 10, ...}` — so a
+//! server request embeds one directly next to its transport fields
+//! (`cmd`, `dataset`, ...). Missing fields take the same defaults as
+//! the option structs' [`Default`] impls, and `"tree"` defaults to
+//! `true` unless explicitly `false`, preserving the historical server
+//! protocol. Results serialize as `{"kind": ..., ...}` with derived
+//! convenience counts (`n_anomalies`, `n_pairs`, `n_edges`) written but
+//! ignored on read, so `parse(write(x)) == x` for every variant.
+
+use super::{
+    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, InitKind, KmeansQuery, KnnQuery,
+    KnnTarget, MstQuery, Query, QueryResult, XmeansQuery,
+};
+use crate::algorithms::knn::Neighbor;
+use crate::algorithms::mst::Edge;
+use crate::json::Value;
+use std::collections::BTreeMap;
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Value::Obj(m)
+}
+
+fn num(x: f64) -> Value {
+    Value::Num(x)
+}
+
+fn f32_row(row: &[f32]) -> Value {
+    Value::Arr(row.iter().map(|&v| num(v as f64)).collect())
+}
+
+fn f32_rows(rows: &[Vec<f32>]) -> Value {
+    Value::Arr(rows.iter().map(|r| f32_row(r)).collect())
+}
+
+fn f64_row(row: &[f64]) -> Value {
+    Value::Arr(row.iter().map(|&v| num(v)).collect())
+}
+
+fn get_f64(v: &Value, key: &str) -> Option<f64> {
+    v.get(key).and_then(Value::as_f64)
+}
+
+fn get_or(v: &Value, key: &str, default: f64) -> f64 {
+    get_f64(v, key).unwrap_or(default)
+}
+
+/// `"tree"` defaults to true unless explicitly false (historical server
+/// behavior: `"tree": 0`-style junk also reads as true).
+fn tree_flag(v: &Value) -> bool {
+    !matches!(v.get(key_tree()), Some(Value::Bool(false)))
+}
+
+fn key_tree() -> &'static str {
+    "tree"
+}
+
+fn parse_f32_row(v: &Value, what: &str) -> Result<Vec<f32>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("{what}: expected array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| format!("{what}: expected number"))
+        })
+        .collect()
+}
+
+fn parse_f32_rows(v: &Value, what: &str) -> Result<Vec<Vec<f32>>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("{what}: expected array of arrays"))?
+        .iter()
+        .map(|row| parse_f32_row(row, what))
+        .collect()
+}
+
+fn parse_f64_row(v: &Value, what: &str) -> Result<Vec<f64>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("{what}: expected array"))?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| format!("{what}: expected number")))
+        .collect()
+}
+
+fn field<'a>(v: &'a Value, key: &str) -> Result<&'a Value, String> {
+    v.get(key).ok_or_else(|| format!("missing \"{key}\""))
+}
+
+fn init_kind(v: &Value) -> Result<InitKind, String> {
+    match v.get("init") {
+        None => Ok(InitKind::Random),
+        Some(Value::Str(s)) => {
+            InitKind::parse(s).ok_or_else(|| format!("unknown init {s:?}"))
+        }
+        Some(other) => Err(format!("bad init field {other:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Queries
+// ---------------------------------------------------------------------
+
+/// Serialize a query as a flat `{"op": ..., ...}` object.
+pub fn query_to_json(q: &Query) -> Value {
+    let mut fields: Vec<(&str, Value)> = vec![("op", Value::Str(q.kind().into()))];
+    match q {
+        Query::Kmeans(q) => {
+            fields.push(("k", num(q.k as f64)));
+            fields.push(("iters", num(q.iters as f64)));
+            fields.push(("init", Value::Str(q.init.name().into())));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::Xmeans(q) => {
+            fields.push(("k_min", num(q.k_min as f64)));
+            fields.push(("k_max", num(q.k_max as f64)));
+        }
+        Query::Anomaly(q) => {
+            fields.push(("threshold", num(q.threshold as f64)));
+            if let Some(r) = q.radius {
+                fields.push(("radius", num(r)));
+            }
+            fields.push(("frac", num(q.target_frac)));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::AllPairs(q) => {
+            fields.push(("tau", num(q.tau)));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::Ball(q) => {
+            fields.push(("center", f32_row(&q.center)));
+            fields.push(("radius", num(q.radius)));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::GaussianEm(q) => {
+            fields.push(("k", num(q.k as f64)));
+            fields.push(("steps", num(q.steps as f64)));
+            fields.push(("tau", num(q.tau)));
+            fields.push(("init", Value::Str(q.init.name().into())));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::Knn(q) => {
+            match &q.target {
+                KnnTarget::Point(id) => fields.push(("point", num(*id as f64))),
+                KnnTarget::Vector(v) => fields.push(("vector", f32_row(v))),
+            }
+            fields.push(("k", num(q.k as f64)));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::Mst(q) => {
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+    }
+    obj(fields)
+}
+
+/// Parse a query from a flat object carrying an `"op"` field (extra
+/// fields — `cmd`, `dataset`, ... — are ignored, so a whole server
+/// request parses directly).
+pub fn query_from_json(v: &Value) -> Result<Query, String> {
+    let op = v
+        .get("op")
+        .and_then(Value::as_str)
+        .ok_or("missing \"op\"")?;
+    let use_tree = tree_flag(v);
+    match op {
+        "kmeans" => {
+            let d = KmeansQuery::default();
+            Ok(Query::Kmeans(KmeansQuery {
+                k: get_or(v, "k", d.k as f64) as usize,
+                iters: get_or(v, "iters", d.iters as f64) as usize,
+                init: init_kind(v)?,
+                use_tree,
+            }))
+        }
+        "xmeans" => {
+            let d = XmeansQuery::default();
+            Ok(Query::Xmeans(XmeansQuery {
+                k_min: get_or(v, "k_min", d.k_min as f64) as usize,
+                k_max: get_or(v, "k_max", d.k_max as f64) as usize,
+            }))
+        }
+        "anomaly" => {
+            let d = AnomalyQuery::default();
+            Ok(Query::Anomaly(AnomalyQuery {
+                threshold: get_or(v, "threshold", d.threshold as f64) as u64,
+                radius: get_f64(v, "radius"),
+                target_frac: get_or(v, "frac", d.target_frac),
+                use_tree,
+            }))
+        }
+        "allpairs" => {
+            let d = AllPairsQuery::default();
+            Ok(Query::AllPairs(AllPairsQuery { tau: get_or(v, "tau", d.tau), use_tree }))
+        }
+        "ball" => {
+            let center = parse_f32_row(field(v, "center")?, "center")?;
+            let d = BallQuery::default();
+            Ok(Query::Ball(BallQuery {
+                center,
+                radius: get_or(v, "radius", d.radius),
+                use_tree,
+            }))
+        }
+        "em" => {
+            let d = GaussianEmQuery::default();
+            Ok(Query::GaussianEm(GaussianEmQuery {
+                k: get_or(v, "k", d.k as f64) as usize,
+                steps: get_or(v, "steps", d.steps as f64) as usize,
+                tau: get_or(v, "tau", d.tau),
+                init: init_kind(v)?,
+                use_tree,
+            }))
+        }
+        "knn" => {
+            let target = match (v.get("point"), v.get("vector")) {
+                (Some(p), None) => KnnTarget::Point(
+                    p.as_f64().ok_or("bad \"point\"")? as u32,
+                ),
+                (None, Some(vec)) => KnnTarget::Vector(parse_f32_row(vec, "vector")?),
+                (None, None) => return Err("knn needs \"point\" or \"vector\"".into()),
+                (Some(_), Some(_)) => {
+                    return Err("knn takes \"point\" or \"vector\", not both".into())
+                }
+            };
+            let d = KnnQuery::default();
+            Ok(Query::Knn(KnnQuery { target, k: get_or(v, "k", d.k as f64) as usize, use_tree }))
+        }
+        "mst" => Ok(Query::Mst(MstQuery { use_tree })),
+        other => Err(format!("unknown op {other:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Results
+// ---------------------------------------------------------------------
+
+/// Serialize a result as `{"kind": ..., ...}`.
+pub fn result_to_json(r: &QueryResult) -> Value {
+    let mut fields: Vec<(&str, Value)> = vec![("kind", Value::Str(r.kind().into()))];
+    match r {
+        QueryResult::Kmeans { centroids, distortion, iterations } => {
+            fields.push(("distortion", num(*distortion)));
+            fields.push(("iterations", num(*iterations as f64)));
+            fields.push(("centroids", f32_rows(centroids)));
+        }
+        QueryResult::Xmeans { centroids, k, distortion, bic } => {
+            fields.push(("k", num(*k as f64)));
+            fields.push(("distortion", num(*distortion)));
+            fields.push(("bic", num(*bic)));
+            fields.push(("centroids", f32_rows(centroids)));
+        }
+        QueryResult::Anomaly { radius, anomalies } => {
+            fields.push(("radius", num(*radius)));
+            fields.push(("n_anomalies", num(anomalies.len() as f64)));
+            fields.push((
+                "anomalies",
+                Value::Arr(anomalies.iter().map(|&i| num(i as f64)).collect()),
+            ));
+        }
+        QueryResult::AllPairs { pairs } => {
+            fields.push(("n_pairs", num(pairs.len() as f64)));
+            fields.push((
+                "pairs",
+                Value::Arr(
+                    pairs
+                        .iter()
+                        .map(|&(i, j)| Value::Arr(vec![num(i as f64), num(j as f64)]))
+                        .collect(),
+                ),
+            ));
+        }
+        QueryResult::Ball { count, mean, total_variance } => {
+            fields.push(("count", num(*count as f64)));
+            fields.push(("total_variance", num(*total_variance)));
+            fields.push(("mean", f32_row(mean)));
+        }
+        QueryResult::GaussianEm { weights, means, variances, loglik, steps } => {
+            fields.push(("loglik", num(*loglik)));
+            fields.push(("steps", num(*steps as f64)));
+            fields.push(("weights", f64_row(weights)));
+            fields.push(("variances", f64_row(variances)));
+            fields.push(("means", f32_rows(means)));
+        }
+        QueryResult::Knn { neighbors } => {
+            fields.push((
+                "neighbors",
+                Value::Arr(
+                    neighbors
+                        .iter()
+                        .map(|n| Value::Arr(vec![num(n.id as f64), num(n.dist)]))
+                        .collect(),
+                ),
+            ));
+        }
+        QueryResult::Mst { edges, total_weight } => {
+            fields.push(("n_edges", num(edges.len() as f64)));
+            fields.push(("total_weight", num(*total_weight)));
+            fields.push((
+                "edges",
+                Value::Arr(
+                    edges
+                        .iter()
+                        .map(|e| Value::Arr(vec![num(e.a as f64), num(e.b as f64), num(e.dist)]))
+                        .collect(),
+                ),
+            ));
+        }
+    }
+    obj(fields)
+}
+
+/// Parse a result from its `{"kind": ..., ...}` form.
+pub fn result_from_json(v: &Value) -> Result<QueryResult, String> {
+    let kind = v
+        .get("kind")
+        .and_then(Value::as_str)
+        .ok_or("missing \"kind\"")?;
+    match kind {
+        "kmeans" => Ok(QueryResult::Kmeans {
+            centroids: parse_f32_rows(field(v, "centroids")?, "centroids")?,
+            distortion: get_f64(v, "distortion").ok_or("missing \"distortion\"")?,
+            iterations: get_f64(v, "iterations").ok_or("missing \"iterations\"")? as usize,
+        }),
+        "xmeans" => Ok(QueryResult::Xmeans {
+            centroids: parse_f32_rows(field(v, "centroids")?, "centroids")?,
+            k: get_f64(v, "k").ok_or("missing \"k\"")? as usize,
+            distortion: get_f64(v, "distortion").ok_or("missing \"distortion\"")?,
+            bic: get_f64(v, "bic").ok_or("missing \"bic\"")?,
+        }),
+        "anomaly" => {
+            let anomalies = field(v, "anomalies")?
+                .as_arr()
+                .ok_or("bad \"anomalies\"")?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as u32).ok_or("bad anomaly id"))
+                .collect::<Result<_, _>>()?;
+            Ok(QueryResult::Anomaly {
+                radius: get_f64(v, "radius").ok_or("missing \"radius\"")?,
+                anomalies,
+            })
+        }
+        "allpairs" => {
+            let pairs = field(v, "pairs")?
+                .as_arr()
+                .ok_or("bad \"pairs\"")?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr().filter(|p| p.len() == 2).ok_or("bad pair")?;
+                    let i = p[0].as_f64().ok_or("bad pair")? as u32;
+                    let j = p[1].as_f64().ok_or("bad pair")? as u32;
+                    Ok::<(u32, u32), &str>((i, j))
+                })
+                .collect::<Result<_, _>>()?;
+            Ok(QueryResult::AllPairs { pairs })
+        }
+        "ball" => Ok(QueryResult::Ball {
+            count: get_f64(v, "count").ok_or("missing \"count\"")? as u64,
+            mean: parse_f32_row(field(v, "mean")?, "mean")?,
+            total_variance: get_f64(v, "total_variance").ok_or("missing \"total_variance\"")?,
+        }),
+        "em" => Ok(QueryResult::GaussianEm {
+            weights: parse_f64_row(field(v, "weights")?, "weights")?,
+            means: parse_f32_rows(field(v, "means")?, "means")?,
+            variances: parse_f64_row(field(v, "variances")?, "variances")?,
+            loglik: get_f64(v, "loglik").ok_or("missing \"loglik\"")?,
+            steps: get_f64(v, "steps").ok_or("missing \"steps\"")? as usize,
+        }),
+        "knn" => {
+            let neighbors = field(v, "neighbors")?
+                .as_arr()
+                .ok_or("bad \"neighbors\"")?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr().filter(|p| p.len() == 2).ok_or("bad neighbor")?;
+                    let id = p[0].as_f64().ok_or("bad neighbor")? as u32;
+                    let dist = p[1].as_f64().ok_or("bad neighbor")?;
+                    Ok::<Neighbor, &str>(Neighbor { id, dist })
+                })
+                .collect::<Result<_, _>>()?;
+            Ok(QueryResult::Knn { neighbors })
+        }
+        "mst" => {
+            let edges = field(v, "edges")?
+                .as_arr()
+                .ok_or("bad \"edges\"")?
+                .iter()
+                .map(|e| {
+                    let e = e.as_arr().filter(|e| e.len() == 3).ok_or("bad edge")?;
+                    let a = e[0].as_f64().ok_or("bad edge")? as u32;
+                    let b = e[1].as_f64().ok_or("bad edge")? as u32;
+                    let dist = e[2].as_f64().ok_or("bad edge")?;
+                    Ok::<Edge, &str>(Edge { a, b, dist })
+                })
+                .collect::<Result<_, _>>()?;
+            Ok(QueryResult::Mst {
+                edges,
+                total_weight: get_f64(v, "total_weight").ok_or("missing \"total_weight\"")?,
+            })
+        }
+        other => Err(format!("unknown result kind {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn roundtrip_query(q: Query) {
+        let text = json::write(&query_to_json(&q));
+        let back = query_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(q, back, "wire-mangled query: {text}");
+    }
+
+    #[test]
+    fn every_query_variant_roundtrips() {
+        roundtrip_query(Query::Kmeans(KmeansQuery {
+            k: 7,
+            iters: 3,
+            init: InitKind::Anchors,
+            use_tree: false,
+        }));
+        roundtrip_query(Query::Xmeans(XmeansQuery { k_min: 2, k_max: 9 }));
+        roundtrip_query(Query::Anomaly(AnomalyQuery {
+            threshold: 12,
+            radius: Some(0.75),
+            target_frac: 0.2,
+            use_tree: true,
+        }));
+        roundtrip_query(Query::Anomaly(AnomalyQuery { radius: None, ..Default::default() }));
+        roundtrip_query(Query::AllPairs(AllPairsQuery { tau: 1.25, use_tree: false }));
+        roundtrip_query(Query::Ball(BallQuery {
+            center: vec![0.5, -1.5, 3.0],
+            radius: 2.0,
+            use_tree: true,
+        }));
+        roundtrip_query(Query::GaussianEm(GaussianEmQuery {
+            k: 4,
+            steps: 6,
+            tau: 0.01,
+            init: InitKind::Random,
+            use_tree: true,
+        }));
+        roundtrip_query(Query::Knn(KnnQuery {
+            target: KnnTarget::Point(17),
+            k: 3,
+            use_tree: true,
+        }));
+        roundtrip_query(Query::Knn(KnnQuery {
+            target: KnnTarget::Vector(vec![1.0, 2.0]),
+            k: 8,
+            use_tree: false,
+        }));
+        roundtrip_query(Query::Mst(MstQuery { use_tree: false }));
+    }
+
+    #[test]
+    fn query_defaults_fill_in() {
+        let v = json::parse(r#"{"op":"kmeans"}"#).unwrap();
+        assert_eq!(query_from_json(&v).unwrap(), Query::Kmeans(KmeansQuery::default()));
+        let v = json::parse(r#"{"op":"mst"}"#).unwrap();
+        assert_eq!(query_from_json(&v).unwrap(), Query::Mst(MstQuery { use_tree: true }));
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let v = json::parse(r#"{"op":"nope"}"#).unwrap();
+        assert!(query_from_json(&v).is_err());
+    }
+
+    fn roundtrip_result(r: QueryResult) {
+        let text = json::write(&result_to_json(&r));
+        let back = result_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(r, back, "wire-mangled result: {text}");
+    }
+
+    #[test]
+    fn every_result_variant_roundtrips() {
+        roundtrip_result(QueryResult::Kmeans {
+            centroids: vec![vec![1.5, -2.25], vec![0.0, 3.125]],
+            distortion: 123.456,
+            iterations: 4,
+        });
+        roundtrip_result(QueryResult::Xmeans {
+            centroids: vec![vec![0.5]],
+            k: 1,
+            distortion: 9.0,
+            bic: -12.5,
+        });
+        roundtrip_result(QueryResult::Anomaly { radius: 0.5, anomalies: vec![3, 9, 41] });
+        roundtrip_result(QueryResult::AllPairs { pairs: vec![(0, 4), (2, 7)] });
+        roundtrip_result(QueryResult::Ball {
+            count: 42,
+            mean: vec![1.0, 2.0],
+            total_variance: 0.25,
+        });
+        roundtrip_result(QueryResult::GaussianEm {
+            weights: vec![0.5, 0.5],
+            means: vec![vec![0.0], vec![1.0]],
+            variances: vec![1.0, 2.0],
+            loglik: -321.75,
+            steps: 5,
+        });
+        roundtrip_result(QueryResult::Knn {
+            neighbors: vec![Neighbor { id: 3, dist: 0.5 }, Neighbor { id: 8, dist: 1.25 }],
+        });
+        roundtrip_result(QueryResult::Mst {
+            edges: vec![Edge { a: 0, b: 1, dist: 0.5 }],
+            total_weight: 0.5,
+        });
+    }
+}

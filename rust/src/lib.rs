@@ -22,17 +22,30 @@
 //!
 //! ## Quickstart
 //!
+//! Build one [`engine::Index`] over a dataset, then run any of the eight
+//! query families against it — the build-once / query-many model the
+//! paper argues for:
+//!
 //! ```no_run
 //! use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
-//! use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
-//! use anchors_hierarchy::algorithms::kmeans;
+//! use anchors_hierarchy::engine::{IndexBuilder, KmeansQuery, KnnQuery, KnnTarget, Query,
+//!                                 QueryResult};
 //!
-//! let space = DatasetSpec::scaled(DatasetKind::Cell, 0.1).build();
-//! let tree = middle_out::build(&space, &MiddleOutConfig::default());
-//! let result = kmeans::tree_lloyd(
-//!     &space, &tree, kmeans::Init::Anchors, 20, 50, &kmeans::KmeansOpts::default());
-//! println!("distortion {}", result.distortion);
+//! let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Cell, 0.1))
+//!     .rmin(30)
+//!     .build();
+//! let results = index.run_batch(&[
+//!     Query::Kmeans(KmeansQuery { k: 20, iters: 10, ..Default::default() }),
+//!     Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 5, ..Default::default() }),
+//! ]);
+//! if let QueryResult::Kmeans { distortion, .. } = &results[0] {
+//!     println!("distortion {distortion} ({} distance computations)", index.dist_count());
+//! }
 //! ```
+//!
+//! The free functions in [`algorithms`] remain available for
+//! fine-grained control; the [`engine`] facade is how the CLI, the batch
+//! [`coordinator`] and the TCP server construct and execute work.
 
 pub mod algorithms;
 pub mod anchors;
@@ -41,6 +54,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod dataset;
+pub mod engine;
 pub mod json;
 pub mod metrics;
 pub mod proptest;

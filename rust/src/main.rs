@@ -2,22 +2,27 @@
 //!
 //! Commands:
 //!   table2 | table3 | table4 | figure1   regenerate the paper's tables/figures
-//!   kmeans | anomaly | allpairs | mst    run one algorithm on one dataset
+//!   kmeans | xmeans | anomaly | allpairs |
+//!   ball | em | knn | mst                run one engine query on one dataset
 //!   tree                                 build a tree and print its shape
 //!   serve-demo                           drive the batch coordinator
+//!   serve                                TCP JSON-line job server
 //!   artifacts                            inspect the AOT artifact manifest
 //!
-//! Every command takes `--scale` (fraction of the paper's dataset sizes)
-//! and `--seed`; run with no command for usage.
+//! Every single-run command is a thin wrapper over the engine facade:
+//! flags build an [`engine::Query`], an [`engine::IndexBuilder`] stands
+//! up the index, and [`engine::Index::run`] executes it. Run with no
+//! command for usage.
 
-use anchors_hierarchy::algorithms::{allpairs, anomaly, kmeans, mst};
 use anchors_hierarchy::bench::tables;
 use anchors_hierarchy::cli::Args;
-use anchors_hierarchy::coordinator::{Coordinator, JobKind, JobSpec, JobState};
+use anchors_hierarchy::coordinator::{Coordinator, JobSpec, JobState};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{
+    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, Index, IndexBuilder, InitKind,
+    KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, TreeStrategy, XmeansQuery,
+};
 use anchors_hierarchy::runtime::BatchDistanceEngine;
-use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
-use anchors_hierarchy::tree::top_down;
 use std::sync::Arc;
 
 const USAGE: &str = "\
@@ -32,13 +37,18 @@ paper experiments
   table4   [--scale F] [--iters N] [--rmin N]                      Table 4
   figure1  [--rows N]                                              Figure 1
 
-single runs (common flags: --dataset NAME --scale F --seed N --rmin N
-                           --tree BOOL --xla BOOL)
+engine queries (common flags: --dataset NAME --scale F --seed N --rmin N
+                              --tree BOOL --builder middle-out|top-down
+                              --xla BOOL)
   kmeans   [--k N] [--iters N] [--init random|anchors]
-  anomaly  [--threshold N] [--frac F]
+  xmeans   [--kmin N] [--kmax N]
+  anomaly  [--threshold N] [--frac F] [--radius F]
   allpairs [--tau F]            (default: auto-calibrated)
+  ball     [--radius F]         (ball at the dataset mean)
+  em       [--k N] [--steps N] [--tau F] [--init random|anchors]
+  knn      [--point N] [--k N]
   mst
-  tree     [--builder middle-out|top-down] [--validate BOOL]
+  tree     [--validate BOOL]    build only; print the tree's shape
 
 system
   serve-demo [--workers N] [--jobs N]        exercise the coordinator
@@ -85,6 +95,45 @@ fn maybe_engine(args: &Args) -> Result<Option<Arc<BatchDistanceEngine>>, String>
     } else {
         Ok(None)
     }
+}
+
+/// Shared flag handling for the engine-query commands: build the index
+/// from `--dataset/--scale/--seed/--rmin/--builder/--xla`.
+fn build_index(args: &Args) -> Result<(DatasetSpec, Index), String> {
+    let spec = dataset_spec(args)?;
+    let rmin = args.flag("rmin", 30usize)?;
+    let builder_name = args.str_flag("builder", "middle-out");
+    let strategy = TreeStrategy::parse(&builder_name)
+        .ok_or_else(|| format!("unknown builder {builder_name:?}"))?;
+    let engine = maybe_engine(args)?;
+    let index = IndexBuilder::new(spec.clone())
+        .rmin(rmin)
+        .strategy(strategy)
+        .batch_engine(engine)
+        .build();
+    println!(
+        "dataset {} ({} rows × {} dims)",
+        spec.kind.name(),
+        index.space().n(),
+        index.space().dim()
+    );
+    Ok((spec, index))
+}
+
+/// Execute one query against a fresh index and report the result plus
+/// the engine's exact distance accounting.
+fn run_query(args: &Args, index: &Index, query: Query) -> Result<(), String> {
+    args.finish()?;
+    let before = index.dist_count();
+    let t0 = std::time::Instant::now();
+    let result = index.run(&query);
+    println!("{}", result.summary());
+    println!(
+        "distance computations {}  wall {:.2}s",
+        index.dist_count() - before,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
 }
 
 fn run(args: &Args) -> Result<(), String> {
@@ -147,162 +196,101 @@ fn run(args: &Args) -> Result<(), String> {
             Ok(())
         }
         "kmeans" => {
-            let spec = dataset_spec(args)?;
-            let k = args.flag("k", 20usize)?;
-            let iters = args.flag("iters", 10usize)?;
-            let rmin = args.flag("rmin", 30usize)?;
-            let use_tree = args.bool_flag("tree", true)?;
+            let (_, index) = build_index(args)?;
             let init_name = args.str_flag("init", "random");
-            let engine = maybe_engine(args)?;
-            args.finish()?;
-            let init = match init_name.as_str() {
-                "random" => kmeans::Init::Random,
-                "anchors" => kmeans::Init::Anchors,
-                other => return Err(format!("unknown init {other:?}")),
-            };
-            let space = spec.build();
-            println!(
-                "dataset {} ({} rows × {} dims), k={k}, iters={iters}, tree={use_tree}",
-                spec.kind.name(),
-                space.n(),
-                space.dim()
-            );
-            let opts = kmeans::KmeansOpts { engine, seed: spec.seed, ..Default::default() };
-            let result = if use_tree {
-                let t0 = std::time::Instant::now();
-                let tree = middle_out::build(
-                    &space,
-                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
-                );
-                println!(
-                    "tree: {} nodes, build {} dists, {:.2}s",
-                    tree.nodes.len(),
-                    tree.build_dists,
-                    t0.elapsed().as_secs_f64()
-                );
-                kmeans::tree_lloyd(&space, &tree, init, k, iters, &opts)
-            } else {
-                kmeans::naive_lloyd(&space, init, k, iters, &opts)
-            };
-            println!(
-                "distortion {:.6e}  iterations {}  distance computations {}",
-                result.distortion, result.iterations, result.dists
-            );
-            Ok(())
+            let init = InitKind::parse(&init_name)
+                .ok_or_else(|| format!("unknown init {init_name:?}"))?;
+            let query = Query::Kmeans(KmeansQuery {
+                k: args.flag("k", 20usize)?,
+                iters: args.flag("iters", 10usize)?,
+                init,
+                use_tree: args.bool_flag("tree", true)?,
+            });
+            run_query(args, &index, query)
+        }
+        "xmeans" => {
+            let (_, index) = build_index(args)?;
+            let query = Query::Xmeans(XmeansQuery {
+                k_min: args.flag("kmin", 1usize)?,
+                k_max: args.flag("kmax", 16usize)?,
+            });
+            run_query(args, &index, query)
         }
         "anomaly" => {
-            let spec = dataset_spec(args)?;
-            let threshold = args.flag("threshold", 20u64)?;
-            let frac = args.flag("frac", 0.10f64)?;
-            let rmin = args.flag("rmin", 30usize)?;
-            let use_tree = args.bool_flag("tree", true)?;
-            args.finish()?;
-            let space = spec.build();
-            let radius = anomaly::calibrate_radius(&space, threshold, frac, 50, spec.seed);
-            let params = anomaly::AnomalyParams { radius, threshold };
-            println!(
-                "dataset {} ({} rows), radius {radius:.4}, threshold {threshold}",
-                spec.kind.name(),
-                space.n()
-            );
-            let sweep = if use_tree {
-                let tree = middle_out::build(
-                    &space,
-                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
-                );
-                anomaly::tree_sweep(&space, &tree, &params)
-            } else {
-                anomaly::naive_sweep(&space, &params)
-            };
-            println!(
-                "anomalies {} / {} ({:.1}%), distance computations {}",
-                sweep.n_anomalies,
-                space.n(),
-                100.0 * sweep.n_anomalies as f64 / space.n() as f64,
-                sweep.dists
-            );
-            Ok(())
+            let (_, index) = build_index(args)?;
+            let radius: f64 = args.flag("radius", -1.0)?;
+            let query = Query::Anomaly(AnomalyQuery {
+                threshold: args.flag("threshold", 20u64)?,
+                radius: (radius > 0.0).then_some(radius),
+                target_frac: args.flag("frac", 0.10f64)?,
+                use_tree: args.bool_flag("tree", true)?,
+            });
+            run_query(args, &index, query)
         }
         "allpairs" => {
-            let spec = dataset_spec(args)?;
-            let rmin = args.flag("rmin", 30usize)?;
-            let use_tree = args.bool_flag("tree", true)?;
+            let (spec, index) = build_index(args)?;
             let tau_flag: f64 = args.flag("tau", -1.0)?;
-            args.finish()?;
-            let space = spec.build();
             let tau = if tau_flag > 0.0 {
                 tau_flag
             } else {
-                tables::calibrate_tau(&space, spec.seed)
+                tables::calibrate_tau(index.space(), spec.seed)
             };
-            println!(
-                "dataset {} ({} rows), tau {tau:.4}",
-                spec.kind.name(),
-                space.n()
-            );
-            let result = if use_tree {
-                let tree = middle_out::build(
-                    &space,
-                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
-                );
-                allpairs::tree_close_pairs(&space, &tree, tau)
-            } else {
-                allpairs::naive_close_pairs(&space, tau)
-            };
-            println!(
-                "close pairs {}  distance computations {}",
-                result.pairs.len(),
-                result.dists
-            );
-            Ok(())
+            println!("tau {tau:.4}");
+            let query =
+                Query::AllPairs(AllPairsQuery { tau, use_tree: args.bool_flag("tree", true)? });
+            run_query(args, &index, query)
+        }
+        "ball" => {
+            let (_, index) = build_index(args)?;
+            // Center at the dataset mean — the §1 "query some quantity
+            // over some subset of the records" demo.
+            let all: Vec<u32> = (0..index.space().n() as u32).collect();
+            let center = index.space().centroid(&all);
+            let query = Query::Ball(BallQuery {
+                center,
+                radius: args.flag("radius", 1.0f64)?,
+                use_tree: args.bool_flag("tree", true)?,
+            });
+            run_query(args, &index, query)
+        }
+        "em" => {
+            let (_, index) = build_index(args)?;
+            let init_name = args.str_flag("init", "random");
+            let init = InitKind::parse(&init_name)
+                .ok_or_else(|| format!("unknown init {init_name:?}"))?;
+            let query = Query::GaussianEm(GaussianEmQuery {
+                k: args.flag("k", 5usize)?,
+                steps: args.flag("steps", 5usize)?,
+                tau: args.flag("tau", 0.0f64)?,
+                init,
+                use_tree: args.bool_flag("tree", true)?,
+            });
+            run_query(args, &index, query)
+        }
+        "knn" => {
+            let (_, index) = build_index(args)?;
+            let query = Query::Knn(KnnQuery {
+                target: KnnTarget::Point(args.flag("point", 0u32)?),
+                k: args.flag("k", 5usize)?,
+                use_tree: args.bool_flag("tree", true)?,
+            });
+            run_query(args, &index, query)
         }
         "mst" => {
-            let spec = dataset_spec(args)?;
-            let rmin = args.flag("rmin", 30usize)?;
-            let use_tree = args.bool_flag("tree", true)?;
-            args.finish()?;
-            let space = spec.build();
-            let edges = if use_tree {
-                let tree = middle_out::build(
-                    &space,
-                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
-                );
-                mst::tree_mst(&space, &tree)
-            } else {
-                mst::naive_mst(&space)
-            };
-            println!(
-                "MST: {} edges, total weight {:.4}, distance computations {}",
-                edges.len(),
-                mst::total_weight(&edges),
-                space.dist_count()
-            );
-            Ok(())
+            let (_, index) = build_index(args)?;
+            let query = Query::Mst(MstQuery { use_tree: args.bool_flag("tree", true)? });
+            run_query(args, &index, query)
         }
         "tree" => {
-            let spec = dataset_spec(args)?;
-            let rmin = args.flag("rmin", 30usize)?;
-            let builder = args.str_flag("builder", "middle-out");
+            let (_, index) = build_index(args)?;
             let validate = args.bool_flag("validate", false)?;
             args.finish()?;
-            let space = spec.build();
             let t0 = std::time::Instant::now();
-            let tree = match builder.as_str() {
-                "middle-out" => middle_out::build(
-                    &space,
-                    &MiddleOutConfig { rmin, seed: spec.seed, exact_radii: false },
-                ),
-                "top-down" => top_down::build(&space, rmin),
-                other => return Err(format!("unknown builder {other:?}")),
-            };
+            let tree = index.tree();
             let shape = tree.shape();
             println!(
-                "{} tree over {} ({} rows × {} dims): {} nodes, {} leaves, depth {}, \
-                 mean leaf size {:.1}, mean leaf radius {:.4}, build {} dists, {:.2}s",
-                builder,
-                spec.kind.name(),
-                space.n(),
-                space.dim(),
+                "{} nodes, {} leaves, depth {}, mean leaf size {:.1}, \
+                 mean leaf radius {:.4}, build {} dists, {:.2}s",
                 shape.nodes,
                 shape.leaves,
                 shape.max_depth,
@@ -312,7 +300,8 @@ fn run(args: &Args) -> Result<(), String> {
                 t0.elapsed().as_secs_f64()
             );
             if validate {
-                tree.validate(&space).map_err(|e| format!("INVALID TREE: {e}"))?;
+                tree.validate(index.space())
+                    .map_err(|e| format!("INVALID TREE: {e}"))?;
                 println!("validation OK");
             }
             Ok(())
@@ -361,7 +350,8 @@ fn run(args: &Args) -> Result<(), String> {
     }
 }
 
-/// Drive the coordinator with a mixed batch of jobs across datasets.
+/// Drive the coordinator with a mixed batch of engine queries across
+/// datasets — every query family in rotation.
 fn serve_demo(workers: usize, jobs: usize, scale: f64, seed: u64) -> Result<(), String> {
     println!("coordinator: {workers} workers, submitting {jobs} jobs (scale {scale})");
     let engine = BatchDistanceEngine::open_default().ok().map(Arc::new);
@@ -378,12 +368,19 @@ fn serve_demo(workers: usize, jobs: usize, scale: f64, seed: u64) -> Result<(), 
     let mut ids = Vec::new();
     for i in 0..jobs {
         let dataset = DatasetSpec { kind: datasets[i % datasets.len()].clone(), scale, seed };
-        let kind = match i % 3 {
-            0 => JobKind::Kmeans { k: 10, iters: 5, anchors_init: i % 2 == 0 },
-            1 => JobKind::Anomaly { threshold: 10, target_frac: 0.1 },
-            _ => JobKind::AllPairs { tau: 0.5 },
+        let query = match i % 5 {
+            0 => Query::Kmeans(KmeansQuery {
+                k: 10,
+                iters: 5,
+                init: if i % 2 == 0 { InitKind::Anchors } else { InitKind::Random },
+                use_tree: true,
+            }),
+            1 => Query::Anomaly(AnomalyQuery { threshold: 10, ..Default::default() }),
+            2 => Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree: true }),
+            3 => Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 5, use_tree: true }),
+            _ => Query::Mst(MstQuery { use_tree: true }),
         };
-        let spec = JobSpec { dataset, kind, use_tree: true, rmin: 30 };
+        let spec = JobSpec { dataset, query, rmin: 30 };
         match coord.submit(spec) {
             Ok(id) => ids.push(id),
             Err(e) => println!("job {i} rejected: {e:?}"),
@@ -392,8 +389,10 @@ fn serve_demo(workers: usize, jobs: usize, scale: f64, seed: u64) -> Result<(), 
     for id in ids {
         match coord.wait(id) {
             JobState::Done(r) => println!(
-                "job {id}: {:?}  dists {}  wall {:.1} ms",
-                r.output, r.dists, r.wall_ms
+                "job {id}: {}  dists {}  wall {:.1} ms",
+                r.output.summary(),
+                r.dists,
+                r.wall_ms
             ),
             JobState::Failed(e) => println!("job {id} FAILED: {e}"),
             _ => unreachable!(),

@@ -2,10 +2,12 @@
 //! invariants: no job lost, no job duplicated, backpressure holds, and
 //! results are deterministic functions of the spec.
 
-use anchors_hierarchy::coordinator::{
-    Coordinator, JobKind, JobOutput, JobSpec, JobState, SubmitError,
-};
+use anchors_hierarchy::coordinator::{Coordinator, JobSpec, JobState, SubmitError};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{
+    AllPairsQuery, AnomalyQuery, InitKind, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
+    QueryResult,
+};
 use anchors_hierarchy::prop_assert;
 use anchors_hierarchy::proptest::check;
 use anchors_hierarchy::rng::Rng;
@@ -21,17 +23,29 @@ fn random_spec(rng: &mut Rng) -> JobSpec {
         scale: 0.002 + rng.f64() * 0.002,
         seed: 1 + rng.below(3) as u64, // few distinct datasets → cache hits
     };
-    let kind = match rng.below(4) {
-        0 => JobKind::Kmeans {
+    let use_tree = rng.bool(0.7);
+    let query = match rng.below(5) {
+        0 => Query::Kmeans(KmeansQuery {
             k: 2 + rng.below(6),
             iters: 1 + rng.below(3),
-            anchors_init: rng.bool(0.5),
-        },
-        1 => JobKind::Anomaly { threshold: 3 + rng.below(10) as u64, target_frac: 0.1 },
-        2 => JobKind::AllPairs { tau: rng.uniform(0.2, 2.0) },
-        _ => JobKind::Mst,
+            init: if rng.bool(0.5) { InitKind::Anchors } else { InitKind::Random },
+            use_tree,
+        }),
+        1 => Query::Anomaly(AnomalyQuery {
+            threshold: 3 + rng.below(10) as u64,
+            radius: None,
+            target_frac: 0.1,
+            use_tree,
+        }),
+        2 => Query::AllPairs(AllPairsQuery { tau: rng.uniform(0.2, 2.0), use_tree }),
+        3 => Query::Knn(KnnQuery {
+            target: KnnTarget::Point(rng.below(16) as u32),
+            k: 1 + rng.below(8),
+            use_tree,
+        }),
+        _ => Query::Mst(MstQuery { use_tree }),
     };
-    JobSpec { dataset, kind, use_tree: rng.bool(0.7), rmin: 8 + rng.below(24) }
+    JobSpec { dataset, query, rmin: 8 + rng.below(24) }
 }
 
 #[test]
@@ -109,7 +123,7 @@ fn prop_backpressure_cap_holds() {
 fn prop_results_deterministic_in_spec() {
     check("coordinator: same spec → same result", 5, |rng| {
         let spec = random_spec(rng);
-        let run = |spec: JobSpec| -> JobOutput {
+        let run = |spec: JobSpec| -> QueryResult {
             let coord = Coordinator::new(2, 8);
             let id = coord.submit(spec).unwrap();
             match coord.wait(id) {

@@ -1,0 +1,171 @@
+//! Engine-facade integration tests: every [`Query`] variant dispatches
+//! through [`Index::run`] to the matching [`QueryResult`] variant, and
+//! [`Index::run_batch`] is bitwise-identical to sequential `run` calls
+//! on the shared index.
+
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{
+    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, Index, IndexBuilder, KmeansQuery,
+    KnnQuery, KnnTarget, MstQuery, Query, QueryResult, XmeansQuery,
+};
+
+fn tiny_index() -> Index {
+    // ≈160 rows × 2 dims: every family finishes fast, including x-means.
+    IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.002))
+        .rmin(16)
+        .build()
+}
+
+/// One query of every family, exercising both naive and tree paths.
+fn all_families(use_tree: bool) -> Vec<Query> {
+    vec![
+        Query::Kmeans(KmeansQuery { k: 3, iters: 3, use_tree, ..Default::default() }),
+        Query::Xmeans(XmeansQuery { k_min: 1, k_max: 4 }),
+        Query::Anomaly(AnomalyQuery { threshold: 5, use_tree, ..Default::default() }),
+        Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree }),
+        Query::Ball(BallQuery { center: vec![0.0, 0.0], radius: 1.0, use_tree }),
+        Query::GaussianEm(GaussianEmQuery { k: 2, steps: 2, use_tree, ..Default::default() }),
+        Query::Knn(KnnQuery { target: KnnTarget::Point(3), k: 4, use_tree }),
+        Query::Mst(MstQuery { use_tree }),
+    ]
+}
+
+#[test]
+fn every_query_variant_dispatches_to_matching_result() {
+    for use_tree in [true, false] {
+        let index = tiny_index();
+        let queries = all_families(use_tree);
+        assert_eq!(queries.len(), 8, "all eight algorithm families covered");
+        for query in &queries {
+            let result = index.run(query);
+            assert_eq!(
+                result.kind(),
+                query.kind(),
+                "query {query:?} produced a {} result",
+                result.kind()
+            );
+        }
+    }
+}
+
+#[test]
+fn run_batch_is_bitwise_identical_to_sequential_runs() {
+    let index = tiny_index();
+    let queries = all_families(true);
+    let batch = index.run_batch(&queries);
+    let sequential: Vec<QueryResult> = queries.iter().map(|q| index.run(q)).collect();
+    assert_eq!(batch.len(), sequential.len());
+    for (q, (a, b)) in queries.iter().zip(batch.iter().zip(&sequential)) {
+        assert_eq!(a, b, "batch vs sequential diverged for {q:?}");
+    }
+}
+
+#[test]
+fn naive_and_tree_kmeans_agree_through_the_facade() {
+    let index = tiny_index();
+    let naive = index.run(&Query::Kmeans(KmeansQuery {
+        k: 4,
+        iters: 5,
+        use_tree: false,
+        ..Default::default()
+    }));
+    let tree = index.run(&Query::Kmeans(KmeansQuery {
+        k: 4,
+        iters: 5,
+        use_tree: true,
+        ..Default::default()
+    }));
+    let (
+        QueryResult::Kmeans { distortion: dn, .. },
+        QueryResult::Kmeans { distortion: dt, .. },
+    ) = (&naive, &tree)
+    else {
+        panic!("wrong result variants");
+    };
+    assert!((dn - dt).abs() <= 1e-6 * (1.0 + dn), "naive {dn} vs tree {dt}");
+}
+
+#[test]
+fn naive_and_tree_agree_exactly_for_discrete_outputs() {
+    let index = tiny_index();
+    for (naive_q, tree_q) in [
+        (
+            Query::Anomaly(AnomalyQuery { threshold: 5, use_tree: false, ..Default::default() }),
+            Query::Anomaly(AnomalyQuery { threshold: 5, use_tree: true, ..Default::default() }),
+        ),
+        (
+            Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree: false }),
+            Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree: true }),
+        ),
+    ] {
+        let a = index.run(&naive_q);
+        let b = index.run(&tree_q);
+        assert_eq!(a, b, "naive vs tree diverged for {naive_q:?}");
+    }
+}
+
+#[test]
+fn naive_and_tree_knn_agree_on_distances() {
+    // Ids can legitimately differ on exact distance ties at the
+    // k-boundary (visit-order dependent), so compare like the knn
+    // property tests do: element-wise distances.
+    let index = tiny_index();
+    let naive = index.run(&Query::Knn(KnnQuery {
+        target: KnnTarget::Point(7),
+        k: 5,
+        use_tree: false,
+    }));
+    let tree = index.run(&Query::Knn(KnnQuery {
+        target: KnnTarget::Point(7),
+        k: 5,
+        use_tree: true,
+    }));
+    let (QueryResult::Knn { neighbors: a }, QueryResult::Knn { neighbors: b }) = (&naive, &tree)
+    else {
+        panic!("wrong result variants");
+    };
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert!((x.dist - y.dist).abs() < 1e-9, "knn dists differ: {} vs {}", x.dist, y.dist);
+    }
+}
+
+#[test]
+fn tree_path_saves_distances_on_the_shared_index() {
+    let index = tiny_index();
+    index.tree(); // pay the build up front so the comparison is pure query cost
+    let naive_q = Query::Kmeans(KmeansQuery {
+        k: 6,
+        iters: 6,
+        use_tree: false,
+        ..Default::default()
+    });
+    let tree_q = Query::Kmeans(KmeansQuery { k: 6, iters: 6, use_tree: true, ..Default::default() });
+    let before = index.dist_count();
+    index.run(&naive_q);
+    let naive_dists = index.dist_count() - before;
+    let before = index.dist_count();
+    index.run(&tree_q);
+    let tree_dists = index.dist_count() - before;
+    assert!(
+        tree_dists < naive_dists,
+        "tree {tree_dists} vs naive {naive_dists} distances"
+    );
+}
+
+#[test]
+fn knn_vector_target_sees_the_point_it_copies() {
+    let index = tiny_index();
+    let space = index.space();
+    let mut row = vec![0f32; space.dim()];
+    space.fill_row(5, &mut row);
+    let by_vec = index.run(&Query::Knn(KnnQuery {
+        target: KnnTarget::Vector(row),
+        k: 4,
+        use_tree: true,
+    }));
+    let QueryResult::Knn { neighbors } = by_vec else { panic!("wrong variant") };
+    // The vector query sees point 5 itself at distance 0.
+    assert_eq!(neighbors[0].id, 5);
+    assert!(neighbors[0].dist <= 1e-6);
+}

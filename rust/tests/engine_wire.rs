@@ -1,0 +1,133 @@
+//! JSON wire-format integration tests: every [`Query`] / [`QueryResult`]
+//! variant survives a serde round-trip through the crate's `json`
+//! module — including *real* results produced by the dispatcher — and
+//! the whole path is exercised end-to-end against the TCP
+//! [`Server`] / [`Client`] pair.
+
+use anchors_hierarchy::coordinator::server::{Client, Server};
+use anchors_hierarchy::coordinator::Coordinator;
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{
+    wire, AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, IndexBuilder, InitKind,
+    KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, XmeansQuery,
+};
+use anchors_hierarchy::json::{self, Value};
+use std::sync::Arc;
+
+fn every_query() -> Vec<Query> {
+    vec![
+        Query::Kmeans(KmeansQuery { k: 3, iters: 2, init: InitKind::Anchors, use_tree: true }),
+        Query::Xmeans(XmeansQuery { k_min: 1, k_max: 4 }),
+        Query::Anomaly(AnomalyQuery {
+            threshold: 5,
+            radius: Some(0.8),
+            target_frac: 0.1,
+            use_tree: false,
+        }),
+        Query::AllPairs(AllPairsQuery { tau: 0.4, use_tree: true }),
+        Query::Ball(BallQuery { center: vec![0.0, 0.0], radius: 1.5, use_tree: true }),
+        Query::GaussianEm(GaussianEmQuery {
+            k: 2,
+            steps: 2,
+            tau: 0.0,
+            init: InitKind::Random,
+            use_tree: true,
+        }),
+        Query::Knn(KnnQuery { target: KnnTarget::Point(1), k: 3, use_tree: true }),
+        Query::Mst(MstQuery { use_tree: true }),
+    ]
+}
+
+#[test]
+fn every_query_variant_roundtrips_through_json_text() {
+    for q in every_query() {
+        let text = json::write(&wire::query_to_json(&q));
+        let back = wire::query_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(q, back, "query mangled by the wire: {text}");
+    }
+}
+
+#[test]
+fn every_real_result_roundtrips_through_json_text() {
+    // Results produced by the actual dispatcher — not synthetic values —
+    // must survive text serialization bit-for-bit (PartialEq on f64s).
+    let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.002))
+        .rmin(16)
+        .build();
+    for q in every_query() {
+        let result = index.run(&q);
+        let text = json::write(&wire::result_to_json(&result));
+        let back = wire::result_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(result, back, "result mangled by the wire for {q:?}: {text}");
+    }
+}
+
+fn start_server() -> (Server, Arc<Coordinator>) {
+    let coord = Arc::new(Coordinator::new(2, 32));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    (server, coord)
+}
+
+/// Submit every op over TCP, wait for it, and check the returned output
+/// parses back into the QueryResult variant matching the submitted op.
+#[test]
+fn all_ops_execute_end_to_end_over_tcp() {
+    let (server, _coord) = start_server();
+    let mut client = Client::connect(server.addr()).unwrap();
+    for query in every_query() {
+        // The submit request is transport fields + the wire form of the
+        // query, flattened into one object.
+        let Value::Obj(query_fields) = wire::query_to_json(&query) else {
+            panic!("query wire form must be an object");
+        };
+        let mut fields = vec![
+            ("cmd", Value::Str("submit".into())),
+            ("dataset", Value::Str("squiggles".into())),
+            ("scale", Value::Num(0.002)),
+            ("rmin", Value::Num(16.0)),
+        ];
+        let owned: Vec<(String, Value)> = query_fields.into_iter().collect();
+        for (k, v) in &owned {
+            fields.push((k.as_str(), v.clone()));
+        }
+        let resp = client.call(&Client::request(fields)).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{query:?} → {resp:?}");
+        let id = resp.get("id").unwrap().as_f64().unwrap();
+        let done = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(id)),
+            ]))
+            .unwrap();
+        assert_eq!(
+            done.get("state").and_then(Value::as_str),
+            Some("done"),
+            "{query:?} → {done:?}"
+        );
+        let output = done.get("output").expect("done response carries output");
+        let result = wire::result_from_json(output)
+            .unwrap_or_else(|e| panic!("unparseable output for {query:?}: {e}"));
+        assert_eq!(result.kind(), query.kind(), "op/result kind mismatch");
+        assert!(done.get("dists").unwrap().as_f64().unwrap() >= 0.0);
+    }
+}
+
+#[test]
+fn server_rejects_malformed_queries_without_dropping_connection() {
+    let (server, _coord) = start_server();
+    let mut client = Client::connect(server.addr()).unwrap();
+    for bad in [
+        r#"{"cmd":"submit","dataset":"squiggles","op":"knn"}"#, // no point/vector
+        r#"{"cmd":"submit","dataset":"squiggles","op":"ball"}"#, // no center
+        r#"{"cmd":"submit","dataset":"squiggles","op":"warp"}"#, // unknown op
+        r#"{"cmd":"submit","dataset":"squiggles","op":"kmeans","init":"best"}"#,
+    ] {
+        let resp = client.call(&json::parse(bad).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "{bad} → {resp:?}");
+    }
+    // Connection still alive and serving.
+    let resp = client
+        .call(&Client::request(vec![("cmd", Value::Str("ping".into()))]))
+        .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
+}

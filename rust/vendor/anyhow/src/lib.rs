@@ -1,0 +1,116 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The workspace builds in an offline image, so the real crates.io
+//! `anyhow` cannot be fetched. This shim provides the exact subset the
+//! crate uses — [`Error`], [`Result`], the [`anyhow!`] / [`bail!`]
+//! macros, and the [`Context`] extension trait — with the same calling
+//! conventions, so the dependent code is source-compatible with the real
+//! crate if it is ever swapped back in.
+
+use std::fmt;
+
+/// A string-backed error value. Context frames are joined with `": "`,
+/// matching anyhow's single-line `{:#}` rendering.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prepend a context frame.
+    pub fn context(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::msg(err)
+    }
+}
+
+/// `anyhow::Result<T>` — the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding context to any displayable error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let err = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(err)?;
+        Ok(())
+    }
+
+    #[test]
+    fn from_std_error_and_macros() {
+        assert!(fails_io().unwrap_err().to_string().contains("gone"));
+        let e: Error = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f() -> Result<()> {
+            bail!("stop {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop 1");
+    }
+}

@@ -1,0 +1,111 @@
+//! Offline stand-in for the `xla` (PJRT) crate.
+//!
+//! The image this workspace builds in has no PJRT shared library and no
+//! network to fetch the real binding, so this shim mirrors the minimal
+//! API surface used by `anchors_hierarchy::runtime` and fails at runtime
+//! with a descriptive error. Every consumer of the runtime already
+//! treats engine errors as "fall back to the scalar path", so linking
+//! this shim degrades the system gracefully instead of breaking the
+//! build. Swap the real `xla` crate back into `Cargo.toml` (same API) to
+//! re-enable the AOT tile programs.
+
+use std::path::Path;
+
+/// Error type matching the real crate's `{:?}`-oriented usage.
+pub struct XlaError(String);
+
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable() -> XlaError {
+    XlaError("PJRT unavailable: offline xla shim is linked (see rust/vendor/xla)".into())
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the shim.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled executable (never constructed by the shim).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer (never constructed by the shim).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple4(self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module text (never constructed by the shim).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation graph.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
