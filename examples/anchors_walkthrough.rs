@@ -93,7 +93,8 @@ fn main() {
 
     // Figures 7-10: the middle-out tree. Show the merge structure levels.
     println!("Figures 7-10: middle-out agglomeration into a metric tree\n");
-    let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 12, seed: 7, exact_radii: false });
+    let tree =
+        middle_out::build(&space, &MiddleOutConfig { rmin: 12, seed: 7, ..Default::default() });
     tree.validate(&space).expect("valid tree");
     let shape = tree.shape();
     println!(

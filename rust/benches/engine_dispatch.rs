@@ -10,11 +10,17 @@ use anchors_hierarchy::algorithms::{kmeans, knn};
 use anchors_hierarchy::bench::harness::Bencher;
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
 use anchors_hierarchy::engine::{IndexBuilder, KmeansQuery, KnnQuery, KnnTarget, Query};
+use anchors_hierarchy::parallel::Parallelism;
 
 fn main() {
     let b = Bencher::new(2, 10);
     let spec = DatasetSpec::scaled(DatasetKind::Squiggles, 0.01); // ≈800 × 2
-    let index = IndexBuilder::new(spec).rmin(30).build();
+    // Pin everything serial: this bench isolates dispatch overhead, so
+    // facade and direct paths must run on identical (single-core) budgets.
+    let index = IndexBuilder::new(spec)
+        .rmin(30)
+        .parallelism(Parallelism::Serial)
+        .build();
     let space = index.space();
     let tree = index.tree(); // pay the build outside the timing loops
     let seed = index.seed();
@@ -22,7 +28,11 @@ fn main() {
     // --- K-means: facade vs direct -----------------------------------
     let kq = Query::Kmeans(KmeansQuery { k: 10, iters: 5, ..Default::default() });
     let facade = b.run("engine/kmeans-k10-via-run", |_| index.run(&kq)).0;
-    let opts = kmeans::KmeansOpts { seed, ..Default::default() };
+    let opts = kmeans::KmeansOpts {
+        seed,
+        parallelism: Parallelism::Serial,
+        ..Default::default()
+    };
     let direct = b
         .run("direct/kmeans-k10-tree_lloyd", |_| {
             kmeans::tree_lloyd(space, &tree, kmeans::Init::Random, 10, 5, &opts)

@@ -7,6 +7,7 @@ use anchors_hierarchy::bench::harness::Bencher;
 use anchors_hierarchy::data::{Data, DenseMatrix};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
 use anchors_hierarchy::metrics::{dense_dot, dense_sqdist, Space};
+use anchors_hierarchy::parallel::Parallelism;
 use anchors_hierarchy::rng::Rng;
 use anchors_hierarchy::runtime::BatchDistanceEngine;
 use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
@@ -67,18 +68,19 @@ fn main() {
     // --- K-means passes -------------------------------------------------
     let space = DatasetSpec::scaled(DatasetKind::Cell, 0.1).build();
     let tree = middle_out::build(&space, &MiddleOutConfig::default());
-    let opts = kmeans::KmeansOpts::default();
+    // Serial: these lines are the single-core hot-path baselines.
+    let opts = kmeans::KmeansOpts { parallelism: Parallelism::Serial, ..Default::default() };
     b.bench("kmeans/naive-1pass-k20", |i| {
         kmeans::naive_lloyd(&space, kmeans::Init::Random, 20, 1, &kmeans::KmeansOpts {
             seed: i as u64,
-            ..Default::default()
+            ..opts.clone()
         })
         .dists
     });
     b.bench("kmeans/tree-1pass-k20", |i| {
         kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, 20, 1, &kmeans::KmeansOpts {
             seed: i as u64,
-            ..Default::default()
+            ..opts.clone()
         })
         .dists
     });

@@ -1,0 +1,132 @@
+//! Bench: parallel execution layer scaling — middle-out tree build and
+//! `Engine::run_batch` throughput at 1/2/4/8 threads on a 50k × 64
+//! synthetic Gaussian-mixture dataset.
+//!
+//! Prints one report line per configuration and overwrites the
+//! repo-root `BENCH_parallel.json` baseline (the acceptance target for
+//! this subsystem is ≥ 2× build and batch speedup at 4 threads vs 1).
+
+use anchors_hierarchy::bench::harness::Bencher;
+use anchors_hierarchy::data::Data;
+use anchors_hierarchy::dataset::gaussian_mixture;
+use anchors_hierarchy::engine::{BallQuery, Index, KmeansQuery, KnnQuery, KnnTarget, Query};
+use anchors_hierarchy::metrics::Space;
+use anchors_hierarchy::parallel::Parallelism;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+const ROWS: usize = 50_000;
+const DIMS: usize = 64;
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    println!("# parallel scaling: {ROWS} x {DIMS} gaussian mixture");
+    let space = Arc::new(Space::euclidean(Data::Dense(gaussian_mixture(
+        ROWS, DIMS, 32, 25.0, 7,
+    ))));
+
+    // --- tree build scaling ---------------------------------------------
+    let mut build_secs = Vec::new();
+    for &threads in &THREADS {
+        let cfg = MiddleOutConfig {
+            rmin: 30,
+            seed: 7,
+            parallelism: Parallelism::Fixed(threads),
+            ..Default::default()
+        };
+        let bencher = Bencher::new(0, 1);
+        let (stats, tree) = bencher.run(&format!("build/middle-out-{threads}t"), |_| {
+            middle_out::build(&space, &cfg)
+        });
+        println!("{}", stats.report());
+        assert_eq!(tree.n_points(), ROWS);
+        build_secs.push(stats.mean);
+    }
+
+    // --- batch-query scaling ---------------------------------------------
+    // One shared tree (its cost is measured above); the batch mixes the
+    // query families a read-mostly workload would: point knn, ball
+    // stats around dataset rows, a couple of small k-means runs.
+    let tree = Arc::new(middle_out::build(
+        &space,
+        &MiddleOutConfig {
+            rmin: 30,
+            seed: 7,
+            parallelism: Parallelism::Fixed(*THREADS.iter().max().unwrap()),
+            ..Default::default()
+        },
+    ));
+    let mut row = vec![0f32; space.dim()];
+    let mut workload: Vec<Query> = Vec::new();
+    for i in 0..48u32 {
+        workload.push(Query::Knn(KnnQuery {
+            target: KnnTarget::Point(i * 997 % ROWS as u32),
+            k: 10,
+            use_tree: true,
+        }));
+    }
+    for i in 0..12usize {
+        space.fill_row(i * 4099 % ROWS, &mut row);
+        workload.push(Query::Ball(BallQuery {
+            center: row.clone(),
+            radius: 8.0,
+            use_tree: true,
+        }));
+    }
+    for _ in 0..4 {
+        workload.push(Query::Kmeans(KmeansQuery { k: 16, iters: 2, ..Default::default() }));
+    }
+
+    let mut batch_secs = Vec::new();
+    for &threads in &THREADS {
+        let index = Index::from_parts(Arc::clone(&space), Arc::clone(&tree), None, 7, 30)
+            .with_parallelism(Parallelism::Fixed(threads));
+        let bencher = Bencher::new(1, 2);
+        let (stats, n) = bencher.run(&format!("batch/{}q-{threads}t", workload.len()), |_| {
+            index.run_batch(&workload).len()
+        });
+        println!("{}", stats.report());
+        assert_eq!(n, workload.len());
+        batch_secs.push(stats.mean);
+    }
+
+    // --- record the baseline ----------------------------------------------
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"status\": \"measured\",");
+    let _ = writeln!(
+        json,
+        "  \"dataset\": {{ \"rows\": {ROWS}, \"dims\": {DIMS}, \
+         \"kind\": \"gaussian_mixture\", \"seed\": 7 }},"
+    );
+    let _ = writeln!(json, "  \"batch_queries\": {},", workload.len());
+    for (name, secs) in [("build_secs", &build_secs), ("batch_secs", &batch_secs)] {
+        let vals: Vec<String> = THREADS
+            .iter()
+            .zip(secs.iter())
+            .map(|(t, s)| format!("    {{ \"threads\": {t}, \"secs\": {s:.6} }}"))
+            .collect();
+        let _ = writeln!(json, "  \"{name}\": [\n{}\n  ],", vals.join(",\n"));
+    }
+    let _ = writeln!(
+        json,
+        "  \"build_speedup_4t\": {:.3},",
+        build_secs[0] / build_secs[2]
+    );
+    let _ = writeln!(
+        json,
+        "  \"batch_speedup_4t\": {:.3}",
+        batch_secs[0] / batch_secs[2]
+    );
+    let _ = writeln!(json, "}}");
+    // Anchor on the manifest dir: cargo runs benches with cwd = rust/,
+    // but the committed baseline lives at the repo root.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_parallel.json");
+    std::fs::write(path, &json).expect("write BENCH_parallel.json");
+    println!(
+        "speedup at 4 threads: build {:.2}x, batch {:.2}x  (baseline -> {path})",
+        build_secs[0] / build_secs[2],
+        batch_secs[0] / batch_secs[2]
+    );
+}

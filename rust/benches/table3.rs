@@ -5,6 +5,7 @@
 use anchors_hierarchy::bench::harness::Bencher;
 use anchors_hierarchy::bench::tables;
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::parallel::Parallelism;
 use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
 use anchors_hierarchy::tree::top_down;
 
@@ -27,7 +28,12 @@ fn main() {
         b.bench(&format!("build/{}/middle-out", kind.name()), |i| {
             middle_out::build(
                 &space,
-                &MiddleOutConfig { rmin: 30, seed: i as u64, exact_radii: false },
+                &MiddleOutConfig {
+                    rmin: 30,
+                    seed: i as u64,
+                    parallelism: Parallelism::Serial,
+                    ..Default::default()
+                },
             )
             .nodes
             .len()
@@ -35,7 +41,13 @@ fn main() {
         b.bench(&format!("build/{}/middle-out-exact", kind.name()), |i| {
             middle_out::build(
                 &space,
-                &MiddleOutConfig { rmin: 30, seed: i as u64, exact_radii: true },
+                &MiddleOutConfig {
+                    rmin: 30,
+                    seed: i as u64,
+                    exact_radii: true,
+                    parallelism: Parallelism::Serial,
+                    ..Default::default()
+                },
             )
             .nodes
             .len()

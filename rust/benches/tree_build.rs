@@ -8,6 +8,7 @@
 use anchors_hierarchy::anchors::build_anchors;
 use anchors_hierarchy::bench::harness::Bencher;
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::parallel::Parallelism;
 use anchors_hierarchy::rng::Rng;
 use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
 
@@ -37,7 +38,12 @@ fn main() {
         Bencher::new(0, 2).bench(&name, |i| {
             middle_out::build(
                 &space,
-                &MiddleOutConfig { rmin: 30, seed: i as u64, exact_radii: false },
+                &MiddleOutConfig {
+                    rmin: 30,
+                    seed: i as u64,
+                    parallelism: Parallelism::Serial,
+                    ..Default::default()
+                },
             )
             .nodes
             .len()
@@ -47,7 +53,10 @@ fn main() {
     // (c) the DESIGN.md perf target: full-size squiggles (80k × 2).
     let space = DatasetSpec::scaled(DatasetKind::Squiggles, 1.0).build();
     let tree = Bencher::new(0, 1).bench("build/squiggles-FULL-80k", |_| {
-        middle_out::build(&space, &MiddleOutConfig::default())
+        middle_out::build(
+            &space,
+            &MiddleOutConfig { parallelism: Parallelism::Serial, ..Default::default() },
+        )
     });
     println!(
         "  full squiggles: {} nodes, {} build dists",

@@ -1,7 +1,8 @@
 //! K-means initialization strategies (Table 4 compares Random vs Anchors).
 
-use crate::anchors::build_anchors;
+use crate::anchors::build_anchors_ex;
 use crate::metrics::Space;
+use crate::parallel::Executor;
 use crate::rng::Rng;
 
 /// Initialization strategy.
@@ -21,9 +22,23 @@ impl Init {
     /// strategy ARE counted (they're real work), but callers measuring
     /// per-iteration cost snapshot the counter after init.
     pub fn centroids(&self, space: &Space, k: usize, seed: u64) -> Vec<Vec<f32>> {
+        self.centroids_ex(space, k, seed, &Executor::serial())
+    }
+
+    /// [`Init::centroids`] with a worker budget: the Anchors strategy's
+    /// O(R·√R)-distance hierarchy build fans out on `exec` (bit-identical
+    /// seeds for every thread count); the other strategies are cheap and
+    /// stay serial.
+    pub fn centroids_ex(
+        &self,
+        space: &Space,
+        k: usize,
+        seed: u64,
+        exec: &Executor,
+    ) -> Vec<Vec<f32>> {
         match self {
             Init::Random => random_init(space, k, seed),
-            Init::Anchors => anchors_init(space, k, seed),
+            Init::Anchors => anchors_init_ex(space, k, seed, exec),
             Init::Given(c) => {
                 assert_eq!(c.len(), k, "Init::Given size mismatch");
                 c.clone()
@@ -49,9 +64,14 @@ pub fn random_init(space: &Space, k: usize, seed: u64) -> Vec<Vec<f32>> {
 /// Build a k-anchor hierarchy and return each anchor's owned-set centroid
 /// (paper §5, Table 4 "Anchors Start").
 pub fn anchors_init(space: &Space, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    anchors_init_ex(space, k, seed, &Executor::serial())
+}
+
+/// [`anchors_init`] with the hierarchy build fanned out on `exec`.
+pub fn anchors_init_ex(space: &Space, k: usize, seed: u64, exec: &Executor) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
     let points: Vec<u32> = (0..space.n() as u32).collect();
-    let set = build_anchors(space, &points, k, &mut rng);
+    let set = build_anchors_ex(space, &points, k, &mut rng, exec);
     let mut seeds = set.centroid_seeds(space);
     // If duplicates collapsed the anchor count below k, pad with random
     // points so the caller still gets k centroids.

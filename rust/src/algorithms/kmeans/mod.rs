@@ -16,14 +16,26 @@
 //! Both paths produce identical assignments (tested); they differ only in
 //! how many distances they evaluate, which is exactly what Table 2
 //! measures.
+//!
+//! Both drivers honor [`KmeansOpts::parallelism`]: the naive pass fans
+//! out over fixed point chunks and the tree pass over a fixed subtree
+//! frontier, in both cases reducing per-worker accumulators in work-item
+//! order — so every thread count yields bit-identical centroids,
+//! distortion and distance counts (see [`crate::parallel`]).
 
 mod init;
 
-pub use init::{anchors_init, random_init, Init};
+pub use init::{anchors_init, anchors_init_ex, random_init, Init};
 
 use crate::metrics::{dense_dot, Space};
+use crate::parallel::{Executor, Parallelism};
 use crate::runtime::BatchDistanceEngine;
-use crate::tree::{MetricTree, NodeId};
+use crate::tree::{MetricTree, Node, NodeId};
+
+/// Points per parallel work item in the chunked assignment passes.
+/// Fixed — never a function of thread count — so partial accumulators
+/// merge in the same order on every schedule (bit-reproducibility).
+const ASSIGN_CHUNK: usize = 4096;
 
 /// Options shared by the K-means drivers.
 #[derive(Clone, Debug)]
@@ -34,11 +46,20 @@ pub struct KmeansOpts {
     pub engine: Option<std::sync::Arc<BatchDistanceEngine>>,
     /// Seed for random initialization.
     pub seed: u64,
+    /// Worker budget for the assignment passes (naive point chunks /
+    /// tree frontier subtrees). Results are bit-identical for every
+    /// setting; see [`crate::parallel`] for the determinism contract.
+    pub parallelism: Parallelism,
 }
 
 impl Default for KmeansOpts {
     fn default() -> Self {
-        KmeansOpts { tol: 1e-6, engine: None, seed: 0x5EED }
+        KmeansOpts {
+            tol: 1e-6,
+            engine: None,
+            seed: 0x5EED,
+            parallelism: Parallelism::default(),
+        }
     }
 }
 
@@ -65,6 +86,21 @@ struct Accum {
 impl Accum {
     fn new(k: usize, d: usize) -> Self {
         Accum { counts: vec![0; k], sums: vec![vec![0.0; d]; k], distortion: 0.0 }
+    }
+
+    /// Fold another accumulator in. Counts are exact (integers); the
+    /// float sums adopt the caller's merge order, so merging partials in
+    /// work-item order keeps every pass deterministic.
+    fn merge(&mut self, other: &Accum) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        for (s, os) in self.sums.iter_mut().zip(&other.sums) {
+            for (v, ov) in s.iter_mut().zip(os) {
+                *v += ov;
+            }
+        }
+        self.distortion += other.distortion;
     }
 }
 
@@ -100,22 +136,38 @@ fn update_centroids(centroids: &mut [Vec<f32>], acc: &Accum) -> f64 {
 // ---------------------------------------------------------------------
 
 /// One naive assignment pass: every point against every centroid
-/// (R·K counted distances).
-fn naive_pass(space: &Space, centroids: &[Vec<f32>], c_sq: &[f64], acc: &mut Accum) {
+/// (R·K counted distances). Fans out over fixed [`ASSIGN_CHUNK`]-sized
+/// point chunks, each filling a private accumulator; partials merge in
+/// chunk order, so the pass is bit-identical at every thread count.
+fn naive_pass(
+    space: &Space,
+    centroids: &[Vec<f32>],
+    c_sq: &[f64],
+    acc: &mut Accum,
+    exec: &Executor,
+) {
     let k = centroids.len();
-    for p in 0..space.n() {
-        let mut best = f64::INFINITY;
-        let mut best_c = 0usize;
-        for ci in 0..k {
-            let d = space.dist_to_vec(p, &centroids[ci], c_sq[ci]);
-            if d < best {
-                best = d;
-                best_c = ci;
+    let d = space.dim();
+    let partials = exec.map_chunks(space.n(), ASSIGN_CHUNK, |range| {
+        let mut part = Accum::new(k, d);
+        for p in range {
+            let mut best = f64::INFINITY;
+            let mut best_c = 0usize;
+            for ci in 0..k {
+                let dist = space.dist_to_vec(p, &centroids[ci], c_sq[ci]);
+                if dist < best {
+                    best = dist;
+                    best_c = ci;
+                }
             }
+            part.counts[best_c] += 1;
+            space.accumulate(p, &mut part.sums[best_c]);
+            part.distortion += best * best;
         }
-        acc.counts[best_c] += 1;
-        space.accumulate(p, &mut acc.sums[best_c]);
-        acc.distortion += best * best;
+        part
+    });
+    for part in &partials {
+        acc.merge(part);
     }
 }
 
@@ -165,7 +217,8 @@ pub fn naive_lloyd(
     max_iters: usize,
     opts: &KmeansOpts,
 ) -> KmeansResult {
-    let mut centroids = init.centroids(space, k, opts.seed);
+    let exec = Executor::new(opts.parallelism);
+    let mut centroids = init.centroids_ex(space, k, opts.seed, &exec);
     let before = space.dist_count();
     let d = space.dim();
     let mut iterations = 0;
@@ -175,7 +228,7 @@ pub fn naive_lloyd(
         let mut acc = Accum::new(centroids.len(), d);
         match (&opts.engine, space.data.is_sparse()) {
             (Some(engine), false) => naive_pass_xla(space, &centroids, &mut acc, engine),
-            _ => naive_pass(space, &centroids, &c_sq, &mut acc),
+            _ => naive_pass(space, &centroids, &c_sq, &mut acc, &exec),
         }
         iterations += 1;
         distortion = acc.distortion;
@@ -214,20 +267,16 @@ struct StepScratch {
     dists: Vec<f64>,
 }
 
-/// One tree pass. `lo..hi` indexes this node's candidate set inside
-/// `scratch.cands`.
-fn kmeans_step(
+/// Step 1 of the paper's KmeansStep: prune the candidate range `lo..hi`
+/// against `node` with the blacklisting rule, pushing the surviving set
+/// onto the top of `scratch.cands`. Returns the surviving range.
+fn reduce_cands(
     ctx: &StepCtx,
-    node_id: NodeId,
+    node: &Node,
     lo: usize,
     hi: usize,
     scratch: &mut StepScratch,
-    acc: &mut Accum,
-) {
-    let node = ctx.tree.node(node_id);
-    debug_assert!(hi > lo);
-
-    // ---- Step 1: reduce Cands --------------------------------------
+) -> (usize, usize) {
     // Distances from every candidate to the node pivot (counted).
     if scratch.dists.len() < hi {
         scratch.dists.resize(hi, 0.0);
@@ -254,18 +303,37 @@ fn kmeans_step(
             scratch.cands.push(c);
         }
     }
-    let new_hi = scratch.cands.len();
+    (new_lo, scratch.cands.len())
+}
+
+/// Award a whole node to candidate `c`: cached sufficient statistics
+/// deliver count, Σx and the exact distortion contribution in O(d).
+fn award_node(ctx: &StepCtx, node: &Node, c: usize, acc: &mut Accum) {
+    acc.counts[c] += node.count as u64;
+    for (j, s) in node.sum.iter().enumerate() {
+        acc.sums[c][j] += s;
+    }
+    acc.distortion += node.distortion_to(&ctx.centroids[c], ctx.c_sq[c]);
+}
+
+/// One tree pass. `lo..hi` indexes this node's candidate set inside
+/// `scratch.cands`.
+fn kmeans_step(
+    ctx: &StepCtx,
+    node_id: NodeId,
+    lo: usize,
+    hi: usize,
+    scratch: &mut StepScratch,
+    acc: &mut Accum,
+) {
+    let node = ctx.tree.node(node_id);
+    debug_assert!(hi > lo);
+    let (new_lo, new_hi) = reduce_cands(ctx, node, lo, hi, scratch);
 
     // ---- Step 2: award mass ----------------------------------------
     if new_hi - new_lo == 1 {
-        // Whole node belongs to the surviving candidate: cached
-        // sufficient statistics award it in O(d), distortion exactly.
-        let c = scratch.cands[new_lo] as usize;
-        acc.counts[c] += node.count as u64;
-        for (j, s) in node.sum.iter().enumerate() {
-            acc.sums[c][j] += s;
-        }
-        acc.distortion += node.distortion_to(&ctx.centroids[c], ctx.c_sq[c]);
+        // Whole node belongs to the surviving candidate.
+        award_node(ctx, node, scratch.cands[new_lo] as usize, acc);
         scratch.cands.truncate(new_lo);
         return;
     }
@@ -277,6 +345,84 @@ fn kmeans_step(
         None => leaf_assign(ctx, node_id, &scratch.cands[new_lo..new_hi], acc),
     }
     scratch.cands.truncate(new_lo);
+}
+
+// ---------------------------------------------------------------------
+// Parallel decomposition of one tree pass.
+//
+// The node-award traversal partitions the tree at a *fixed* frontier
+// (depth- and size-bounded, never thread-count-dependent): the serial
+// collector walks the top of the tree doing exactly the work kmeans_step
+// would — pruning candidates, awarding single-candidate nodes, assigning
+// shallow leaves — and emits one task per surviving subtree pair. Tasks
+// then run on the executor with per-worker accumulators that are reduced
+// in task order, so the pass is bit-identical at every thread count and
+// its counted distances are exactly the serial traversal's.
+// ---------------------------------------------------------------------
+
+/// A unit of parallel work: the two children of a node whose candidate
+/// set is already reduced.
+struct StepTask {
+    children: (NodeId, NodeId),
+    cands: Vec<u32>,
+}
+
+/// Subtrees at or below this point count stay whole (one task).
+const STEP_TASK_GRAIN: u32 = 512;
+/// Maximum frontier depth: at most 2^STEP_FRONTIER_DEPTH tasks per pass.
+const STEP_FRONTIER_DEPTH: usize = 8;
+
+/// Walk the top of the tree exactly as [`kmeans_step`] would, emitting a
+/// [`StepTask`] wherever the remaining subtree is small or deep enough;
+/// awards and shallow-leaf assignments accumulate into `acc` in DFS
+/// order (the same order the serial pass uses).
+#[allow(clippy::too_many_arguments)]
+fn collect_step_tasks(
+    ctx: &StepCtx,
+    node_id: NodeId,
+    lo: usize,
+    hi: usize,
+    depth: usize,
+    scratch: &mut StepScratch,
+    acc: &mut Accum,
+    tasks: &mut Vec<StepTask>,
+) {
+    let node = ctx.tree.node(node_id);
+    debug_assert!(hi > lo);
+    let (new_lo, new_hi) = reduce_cands(ctx, node, lo, hi, scratch);
+    if new_hi - new_lo == 1 {
+        award_node(ctx, node, scratch.cands[new_lo] as usize, acc);
+        scratch.cands.truncate(new_lo);
+        return;
+    }
+    match node.children {
+        Some((a, b)) => {
+            if depth == 0 || node.count <= STEP_TASK_GRAIN {
+                tasks.push(StepTask {
+                    children: (a, b),
+                    cands: scratch.cands[new_lo..new_hi].to_vec(),
+                });
+            } else {
+                collect_step_tasks(ctx, a, new_lo, new_hi, depth - 1, scratch, acc, tasks);
+                collect_step_tasks(ctx, b, new_lo, new_hi, depth - 1, scratch, acc, tasks);
+            }
+        }
+        None => leaf_assign(ctx, node_id, &scratch.cands[new_lo..new_hi], acc),
+    }
+    scratch.cands.truncate(new_lo);
+}
+
+/// Run one frontier task: a standard [`kmeans_step`] recursion over each
+/// child with a private scratch and accumulator.
+fn run_step_task(ctx: &StepCtx, task: &StepTask) -> Accum {
+    let mut acc = Accum::new(ctx.centroids.len(), ctx.space.dim());
+    let n0 = task.cands.len();
+    let mut scratch = StepScratch { cands: task.cands.clone(), dists: vec![0.0; n0] };
+    let (a, b) = task.children;
+    kmeans_step(ctx, a, 0, n0, &mut scratch, &mut acc);
+    kmeans_step(ctx, b, 0, n0, &mut scratch, &mut acc);
+    debug_assert_eq!(scratch.cands.len(), n0, "task scratch stack leaked");
+    acc
 }
 
 /// Assign the points of a leaf among the surviving candidates.
@@ -336,7 +482,8 @@ pub fn tree_lloyd(
     max_iters: usize,
     opts: &KmeansOpts,
 ) -> KmeansResult {
-    let mut centroids = init.centroids(space, k, opts.seed);
+    let exec = Executor::new(opts.parallelism);
+    let mut centroids = init.centroids_ex(space, k, opts.seed, &exec);
     let before = space.dist_count();
     let d = space.dim();
     let mut scratch = StepScratch {
@@ -356,8 +503,22 @@ pub fn tree_lloyd(
             c_sq: &c_sq,
             engine: opts.engine.as_deref(),
         };
-        kmeans_step(&ctx, tree.root, 0, n_cands, &mut scratch, &mut acc);
+        let mut tasks: Vec<StepTask> = Vec::new();
+        collect_step_tasks(
+            &ctx,
+            tree.root,
+            0,
+            n_cands,
+            STEP_FRONTIER_DEPTH,
+            &mut scratch,
+            &mut acc,
+            &mut tasks,
+        );
         debug_assert_eq!(scratch.cands.len(), n_cands, "scratch stack leaked");
+        let partials = exec.map_tasks(tasks.len(), |i| run_step_task(&ctx, &tasks[i]));
+        for part in &partials {
+            acc.merge(part);
+        }
         iterations += 1;
         distortion = acc.distortion;
         let moved = update_centroids(&mut centroids, &acc);
@@ -376,21 +537,33 @@ pub fn tree_lloyd(
 /// Final assignment of every point to its centroid (for consumers that
 /// need explicit labels; not part of the counted benchmark loop).
 pub fn assign_labels(space: &Space, centroids: &[Vec<f32>]) -> Vec<u32> {
+    assign_labels_ex(space, centroids, &Executor::serial())
+}
+
+/// [`assign_labels`] fanned out over point chunks; the label vector is
+/// identical for every thread count (each point's label is independent).
+pub fn assign_labels_ex(space: &Space, centroids: &[Vec<f32>], exec: &Executor) -> Vec<u32> {
     let c_sq = centroid_sqnorms(centroids);
-    (0..space.n())
-        .map(|p| {
-            let mut best = f64::INFINITY;
-            let mut best_c = 0u32;
-            for (ci, c) in centroids.iter().enumerate() {
-                let d = space.dist_to_vec_uncounted(p, c, c_sq[ci]);
-                if d < best {
-                    best = d;
-                    best_c = ci as u32;
+    let mut labels = Vec::with_capacity(space.n());
+    for chunk in exec.map_chunks(space.n(), ASSIGN_CHUNK, |range| {
+        range
+            .map(|p| {
+                let mut best = f64::INFINITY;
+                let mut best_c = 0u32;
+                for (ci, c) in centroids.iter().enumerate() {
+                    let d = space.dist_to_vec_uncounted(p, c, c_sq[ci]);
+                    if d < best {
+                        best = d;
+                        best_c = ci as u32;
+                    }
                 }
-            }
-            best_c
-        })
-        .collect()
+                best_c
+            })
+            .collect::<Vec<u32>>()
+    }) {
+        labels.extend(chunk);
+    }
+    labels
 }
 
 /// Distortion of an arbitrary centroid set (uncounted; reporting only).
@@ -561,6 +734,39 @@ mod tests {
             })
             .sum();
         assert!((manual - r.distortion).abs() < 1e-5 * (1.0 + manual));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_a_single_bit() {
+        // The parallel decomposition contract: naive and tree passes
+        // produce bit-identical centroids, distortion and distance
+        // counts at every thread count.
+        let space = blobs(6, 120, 4, 21);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let run = |parallelism: Parallelism| {
+            let opts = KmeansOpts { parallelism, ..Default::default() };
+            let naive = naive_lloyd(&space, Init::Random, 7, 6, &opts);
+            let tree_r = tree_lloyd(&space, &tree, Init::Random, 7, 6, &opts);
+            (naive, tree_r)
+        };
+        let (n1, t1) = run(Parallelism::Serial);
+        for threads in [2usize, 8] {
+            let (nt, tt) = run(Parallelism::Fixed(threads));
+            assert_eq!(n1.centroids, nt.centroids, "naive centroids, {threads} threads");
+            assert_eq!(
+                n1.distortion.to_bits(),
+                nt.distortion.to_bits(),
+                "naive distortion, {threads} threads"
+            );
+            assert_eq!(n1.dists, nt.dists, "naive dists, {threads} threads");
+            assert_eq!(t1.centroids, tt.centroids, "tree centroids, {threads} threads");
+            assert_eq!(
+                t1.distortion.to_bits(),
+                tt.distortion.to_bits(),
+                "tree distortion, {threads} threads"
+            );
+            assert_eq!(t1.dists, tt.dists, "tree dists, {threads} threads");
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use crate::algorithms::kmeans::{self, KmeansOpts};
 use crate::metrics::{dense_dot, Space};
+use crate::parallel::Executor;
 use crate::rng::Rng;
 use crate::tree::MetricTree;
 
@@ -113,6 +114,9 @@ pub fn xmeans(
     assert!(k_min >= 1 && k_min <= k_max);
     let before = space.dist_count();
     let d = space.dim();
+    // The global improve-params passes parallelize inside tree_lloyd;
+    // the ownership pass below fans out over point chunks here.
+    let exec = Executor::new(opts.parallelism);
     let mut rng = Rng::new(opts.seed ^ 0x9E3779B9);
     let mut history = Vec::new();
 
@@ -126,7 +130,7 @@ pub fn xmeans(
             break;
         }
         // Ownership of each point (needed for local split tests).
-        let labels = kmeans::assign_labels(space, &centroids);
+        let labels = kmeans::assign_labels_ex(space, &centroids, &exec);
         space.count_bulk((space.n() * centroids.len()) as u64);
         let mut owned: Vec<Vec<u32>> = vec![Vec::new(); centroids.len()];
         for (p, &l) in labels.iter().enumerate() {

@@ -18,7 +18,13 @@
 //! R·k on structured data.
 
 use crate::metrics::Space;
+use crate::parallel::Executor;
 use crate::rng::Rng;
+
+/// Points per parallel work item in the chunked passes. Fixed (never a
+/// function of thread count) so the merge order — and therefore every
+/// result bit — is identical on any schedule.
+const POINT_CHUNK: usize = 2048;
 
 /// One anchor: a pivot datapoint plus the points it owns.
 #[derive(Clone, Debug)]
@@ -91,6 +97,13 @@ impl AnchorSet {
     }
 }
 
+/// Build `k` anchors over the given subset of points (paper §3),
+/// single-threaded. See [`build_anchors_ex`] for the parallel form; the
+/// two produce bit-identical anchor sets.
+pub fn build_anchors(space: &Space, points: &[u32], k: usize, rng: &mut Rng) -> AnchorSet {
+    build_anchors_ex(space, points, k, rng, &Executor::serial())
+}
+
 /// Build `k` anchors over the given subset of points (paper §3).
 ///
 /// The first anchor pivot is chosen at random from `points`; every later
@@ -98,7 +111,19 @@ impl AnchorSet {
 /// current largest-radius anchor (i.e. near a vertex of the current
 /// Voronoi partition). May return fewer than `k` anchors if the points
 /// collapse onto fewer than `k` distinct locations.
-pub fn build_anchors(space: &Space, points: &[u32], k: usize, rng: &mut Rng) -> AnchorSet {
+///
+/// The two hot passes — the point-to-first-anchor assignment and the
+/// scanned prefix of every steal pass — fan out over fixed-size point
+/// chunks on `exec`, with per-chunk results merged in chunk order; the
+/// result is bit-identical for every thread count, and the counted
+/// distance evaluations are exactly the set the serial scan performs.
+pub fn build_anchors_ex(
+    space: &Space,
+    points: &[u32],
+    k: usize,
+    rng: &mut Rng,
+    exec: &Executor,
+) -> AnchorSet {
     assert!(!points.is_empty(), "build_anchors on empty point set");
     let k = k.clamp(1, points.len());
 
@@ -107,10 +132,15 @@ pub fn build_anchors(space: &Space, points: &[u32], k: usize, rng: &mut Rng) -> 
     let mut row = vec![0f32; space.dim()];
     space.fill_row(first_pivot as usize, &mut row);
     let row_sq = space.data.sqnorm(first_pivot as usize);
-    let mut owned: Vec<(f64, u32)> = points
-        .iter()
-        .map(|&p| (space.dist_to_vec(p as usize, &row, row_sq), p))
-        .collect();
+    let mut owned: Vec<(f64, u32)> = Vec::with_capacity(points.len());
+    for chunk in exec.map_chunks(points.len(), POINT_CHUNK, |r| {
+        points[r]
+            .iter()
+            .map(|&p| (space.dist_to_vec(p as usize, &row, row_sq), p))
+            .collect::<Vec<_>>()
+    }) {
+        owned.extend(chunk);
+    }
     sort_desc(&mut owned);
     let mut anchors = vec![Anchor { pivot: first_pivot, owned }];
     // Densified pivot rows, cached so the per-new-anchor distance pass
@@ -143,36 +173,44 @@ pub fn build_anchors(space: &Space, points: &[u32], k: usize, rng: &mut Rng) -> 
             .map(|arow| space.dist_vv(&pivot_row, arow))
             .collect();
 
-        // Steal pass over every existing anchor.
+        // Steal pass over every existing anchor. The owned list is
+        // sorted in decreasing distance, so eq. (6)'s early exit is a
+        // binary search: everything from `cut` on is provably safe and
+        // the scanned prefix `[0, cut)` has no cross-point dependencies —
+        // it fans out over point chunks, merged back in chunk order.
         let mut stolen: Vec<(f64, u32)> = Vec::new();
         for (ai, anchor) in anchors.iter_mut().enumerate() {
             let threshold = d_new[ai] / 2.0;
-            if anchor.radius() < threshold {
+            let cut = anchor.owned.partition_point(|&(d, _)| d >= threshold);
+            if cut == 0 {
                 // Whole list is inside the safe zone: nothing to check.
                 continue;
             }
-            // Scan the sorted prefix that could possibly be stolen.
-            let list = &mut anchor.owned;
-            let mut keep_prefix: Vec<(f64, u32)> = Vec::new();
-            let mut cut = list.len();
-            for (pos, &(dist_a, x)) in list.iter().enumerate() {
-                if dist_a < threshold {
-                    cut = pos; // eq. (6): the rest is provably safe
-                    break;
-                }
-                let d = space.dist_to_vec(x as usize, &pivot_row, pivot_sq);
-                if d < dist_a || x == new_pivot {
-                    stolen.push((d, x));
-                } else {
-                    keep_prefix.push((dist_a, x));
-                }
+            let parts = {
+                let scan = &anchor.owned[..cut];
+                exec.map_chunks(cut, POINT_CHUNK, |r| {
+                    let mut keep: Vec<(f64, u32)> = Vec::new();
+                    let mut steal: Vec<(f64, u32)> = Vec::new();
+                    for &(dist_a, x) in &scan[r] {
+                        let d = space.dist_to_vec(x as usize, &pivot_row, pivot_sq);
+                        if d < dist_a || x == new_pivot {
+                            steal.push((d, x));
+                        } else {
+                            keep.push((dist_a, x));
+                        }
+                    }
+                    (keep, steal)
+                })
+            };
+            // Rebuild: scanned-but-kept prefix + untouched suffix. Both
+            // halves are already in decreasing order.
+            let mut keep_prefix: Vec<(f64, u32)> = Vec::with_capacity(anchor.owned.len());
+            for (keep, steal) in parts {
+                keep_prefix.extend(keep);
+                stolen.extend(steal);
             }
-            if cut < list.len() || !stolen.is_empty() {
-                // Rebuild: scanned-but-kept prefix + untouched suffix.
-                // Both halves are already in decreasing order.
-                keep_prefix.extend_from_slice(&list[cut..]);
-                *list = keep_prefix;
-            }
+            keep_prefix.extend_from_slice(&anchor.owned[cut..]);
+            anchor.owned = keep_prefix;
         }
 
         sort_desc(&mut stolen);
@@ -365,6 +403,28 @@ mod tests {
         for a in &set.anchors {
             for &(_, p) in &a.owned {
                 assert!(subset.contains(&p));
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_and_counts_match() {
+        use crate::parallel::{Executor, Parallelism};
+        let space = blobs(6, 120, 41);
+        let pts = all_points(&space);
+        space.reset_count();
+        let serial = build_anchors_ex(&space, &pts, 12, &mut Rng::new(5), &Executor::serial());
+        let serial_dists = space.dist_count();
+        for threads in [2usize, 8] {
+            let exec = Executor::new(Parallelism::Fixed(threads));
+            space.reset_count();
+            let par = build_anchors_ex(&space, &pts, 12, &mut Rng::new(5), &exec);
+            assert_eq!(space.dist_count(), serial_dists, "{threads} threads");
+            assert_eq!(par.k(), serial.k());
+            assert_eq!(par.interanchor, serial.interanchor);
+            for (a, b) in serial.anchors.iter().zip(&par.anchors) {
+                assert_eq!(a.pivot, b.pivot);
+                assert_eq!(a.owned, b.owned);
             }
         }
     }

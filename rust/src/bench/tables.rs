@@ -101,7 +101,7 @@ pub fn table2_dataset(kind: &DatasetKind, cfg: &Table2Config) -> Vec<Table2Row> 
     // The shared middle-out tree (its build cost is reported alongside).
     let tree = middle_out::build(
         &space,
-        &MiddleOutConfig { rmin: cfg.rmin, seed: cfg.seed, exact_radii: false },
+        &MiddleOutConfig { rmin: cfg.rmin, seed: cfg.seed, ..Default::default() },
     );
     let build = tree.build_dists;
 
@@ -244,7 +244,7 @@ pub fn table3(scale: f64, kmeans_iters: usize, rmin: usize, seed: u64) -> Vec<Ta
         let space = spec.build();
         let anchors_tree = middle_out::build(
             &space,
-            &MiddleOutConfig { rmin, seed, exact_radii: false },
+            &MiddleOutConfig { rmin, seed, ..Default::default() },
         );
         let topdown_tree = top_down::build(&space, rmin);
         let ks = match &kind {
@@ -326,7 +326,7 @@ pub fn table4(scale: f64, iters: usize, rmin: usize, seed: u64) -> Vec<Table4Row
         let space = spec.build();
         let tree = middle_out::build(
             &space,
-            &MiddleOutConfig { rmin, seed, exact_radii: false },
+            &MiddleOutConfig { rmin, seed, ..Default::default() },
         );
         for k in [100usize, 20, 3] {
             // Scaled-down datasets can have fewer rows than the paper's k.
@@ -419,7 +419,7 @@ pub fn figure1(rows: usize, seed: u64) -> Figure1Result {
     // here: its poles are extreme noise points.)
     let tree = middle_out::build(
         &space,
-        &MiddleOutConfig { rmin: (rows / 2).max(2), seed, exact_radii: false },
+        &MiddleOutConfig { rmin: (rows / 2).max(2), seed, ..Default::default() },
     );
     let root = tree.root_node();
     let purity = |points: &[u32]| -> f64 {

@@ -19,12 +19,17 @@
 //! * **No lost or duplicated jobs** — every accepted job reaches exactly
 //!   one terminal state ([`JobState::Done`] / [`JobState::Failed`]);
 //!   verified by property tests.
+//! * **Worker-pool concurrency first** — jobs run serial internally by
+//!   default (the pool is the parallelism); `PALLAS_THREADS` opts a
+//!   deployment into intra-job parallelism via [`crate::parallel`],
+//!   which changes wall-clock only, never results or distance counts.
 
 pub mod server;
 
 use crate::dataset::DatasetSpec;
 use crate::engine::{self, IndexBuilder, Query, QueryResult};
 use crate::metrics::Space;
+use crate::parallel::Parallelism;
 use crate::runtime::BatchDistanceEngine;
 use crate::tree::middle_out::{self, MiddleOutConfig};
 use crate::tree::MetricTree;
@@ -118,6 +123,12 @@ struct Inner {
     metrics: Metrics,
     shutdown: AtomicBool,
     engine: Option<Arc<BatchDistanceEngine>>,
+    /// Intra-job worker budget. The pool's own workers are the primary
+    /// source of concurrency, so jobs default to serial execution —
+    /// `PALLAS_THREADS` overrides for single-tenant deployments where
+    /// one big job should use the whole machine. Results and distance
+    /// accounting are identical either way.
+    parallelism: Parallelism,
     next_id: AtomicU64,
 }
 
@@ -149,6 +160,7 @@ impl Coordinator {
             metrics: Metrics::default(),
             shutdown: AtomicBool::new(false),
             engine,
+            parallelism: Parallelism::from_env().unwrap_or(Parallelism::Serial),
             next_id: AtomicU64::new(1),
         });
         let workers = (0..n_workers.max(1))
@@ -312,12 +324,17 @@ fn get_dataset(inner: &Inner, spec: &DatasetSpec) -> Arc<CachedDataset> {
     map.entry(key).or_insert(built).clone()
 }
 
-fn get_tree(ds: &CachedDataset, rmin: usize, seed: u64) -> Arc<MetricTree> {
+fn get_tree(
+    ds: &CachedDataset,
+    rmin: usize,
+    seed: u64,
+    parallelism: Parallelism,
+) -> Arc<MetricTree> {
     let mut trees = ds.trees.lock().unwrap();
     if let Some(t) = trees.get(&rmin) {
         return t.clone();
     }
-    let cfg = MiddleOutConfig { rmin, seed, exact_radii: false };
+    let cfg = MiddleOutConfig { rmin, seed, parallelism, ..Default::default() };
     let tree = Arc::new(middle_out::build(&ds.space, &cfg));
     trees.insert(rmin, tree.clone());
     tree
@@ -329,7 +346,7 @@ fn get_tree(ds: &CachedDataset, rmin: usize, seed: u64) -> Arc<MetricTree> {
 /// for a build.
 fn get_index(inner: &Inner, ds: &CachedDataset, spec: &JobSpec) -> engine::Index {
     if spec.query.needs_tree() {
-        let tree = get_tree(ds, spec.rmin, spec.dataset.seed);
+        let tree = get_tree(ds, spec.rmin, spec.dataset.seed, inner.parallelism);
         engine::Index::from_parts(
             Arc::clone(&ds.space),
             tree,
@@ -337,10 +354,12 @@ fn get_index(inner: &Inner, ds: &CachedDataset, spec: &JobSpec) -> engine::Index
             spec.dataset.seed,
             spec.rmin,
         )
+        .with_parallelism(inner.parallelism)
     } else {
         IndexBuilder::new(spec.dataset.clone())
             .rmin(spec.rmin)
             .batch_engine(inner.engine.clone())
+            .parallelism(inner.parallelism)
             .build_on(Arc::clone(&ds.space))
     }
 }

@@ -17,7 +17,9 @@ mod sparse_gen;
 mod synthetic;
 
 pub use sparse_gen::{gen_mixture, reuters_surrogate};
-pub use synthetic::{cell_surrogate, covtype_surrogate, figure1, squiggles, voronoi};
+pub use synthetic::{
+    cell_surrogate, covtype_surrogate, figure1, gaussian_mixture, squiggles, voronoi,
+};
 
 use crate::data::Data;
 use crate::metrics::Space;

@@ -10,6 +10,7 @@ use super::{
 };
 use crate::algorithms::{allpairs, anomaly, ballquery, gaussian, kmeans, knn, mst, xmeans};
 use crate::metrics::dense_dot;
+use crate::parallel::{Executor, Parallelism};
 
 impl Index {
     /// Execute one query against the shared index. Invalid inputs
@@ -17,9 +18,18 @@ impl Index {
     /// descriptive message; the coordinator turns panics into
     /// `JobState::Failed`.
     pub fn run(&self, query: &Query) -> QueryResult {
+        self.run_with(query, self.parallelism())
+    }
+
+    /// [`Index::run`] with an explicit worker budget for the query's
+    /// internal passes. Results are identical for every budget (the
+    /// determinism contract of [`crate::parallel`]); `run_batch` uses
+    /// this to keep per-query work serial when the batch itself already
+    /// saturates the workers.
+    fn run_with(&self, query: &Query, parallelism: Parallelism) -> QueryResult {
         match query {
-            Query::Kmeans(q) => self.run_kmeans(q),
-            Query::Xmeans(q) => self.run_xmeans(q),
+            Query::Kmeans(q) => self.run_kmeans(q, parallelism),
+            Query::Xmeans(q) => self.run_xmeans(q, parallelism),
             Query::Anomaly(q) => self.run_anomaly(q),
             Query::AllPairs(q) => self.run_allpairs(q),
             Query::Ball(q) => self.run_ball(q),
@@ -29,30 +39,48 @@ impl Index {
         }
     }
 
-    /// Execute a workload of queries against the shared index, in
-    /// order. Equivalent to calling [`Index::run`] per query (the
-    /// round-trip test asserts bitwise-identical results); the value is
-    /// amortization — dataset and tree are paid for once, and the tree
-    /// is built at most once no matter how many queries need it.
+    /// Execute a workload of queries against the shared index,
+    /// dispatching them across [`Index::parallelism`] workers. Results
+    /// come back in submission order and are bitwise identical to
+    /// sequential [`Index::run`] calls (each query is a deterministic
+    /// function of the index — the round-trip test asserts this), so
+    /// the fan-out buys throughput only. The tree is built once up
+    /// front when any query needs it; the sharded distance counter
+    /// keeps [`Index::dist_count`] exact under the concurrency.
     pub fn run_batch(&self, queries: &[Query]) -> Vec<QueryResult> {
-        queries.iter().map(|q| self.run(q)).collect()
+        if queries.iter().any(|q| q.needs_tree()) {
+            self.tree(); // build once, not under the workers' lock races
+        }
+        // Divide the budget: one worker per query first, and any spare
+        // threads go to each query's internal passes (a single-query
+        // "batch" gets the whole budget inside the query). Results are
+        // the budget-independent ones either way.
+        let budget = self.parallelism().threads();
+        let workers = budget.min(queries.len()).max(1);
+        let per_query = match budget / workers {
+            0 | 1 => Parallelism::Serial,
+            spare => Parallelism::Fixed(spare),
+        };
+        let exec = Executor::new(self.parallelism());
+        exec.map_tasks(queries.len(), |i| self.run_with(&queries[i], per_query))
     }
 
-    fn kmeans_opts(&self) -> kmeans::KmeansOpts {
+    fn kmeans_opts(&self, parallelism: Parallelism) -> kmeans::KmeansOpts {
         kmeans::KmeansOpts {
             engine: self.batch_engine().cloned(),
             seed: self.seed(),
+            parallelism,
             ..Default::default()
         }
     }
 
-    fn run_kmeans(&self, q: &KmeansQuery) -> QueryResult {
+    fn run_kmeans(&self, q: &KmeansQuery, parallelism: Parallelism) -> QueryResult {
         let init = match q.init {
             InitKind::Random => kmeans::Init::Random,
             InitKind::Anchors => kmeans::Init::Anchors,
         };
         let (k, iters) = (q.k.max(1), q.iters.max(1));
-        let opts = self.kmeans_opts();
+        let opts = self.kmeans_opts(parallelism);
         let r = if q.use_tree {
             kmeans::tree_lloyd(self.space(), &self.tree(), init, k, iters, &opts)
         } else {
@@ -65,10 +93,16 @@ impl Index {
         }
     }
 
-    fn run_xmeans(&self, q: &XmeansQuery) -> QueryResult {
+    fn run_xmeans(&self, q: &XmeansQuery, parallelism: Parallelism) -> QueryResult {
         let k_min = q.k_min.max(1);
         let k_max = q.k_max.max(k_min);
-        let r = xmeans::xmeans(self.space(), &self.tree(), k_min, k_max, &self.kmeans_opts());
+        let r = xmeans::xmeans(
+            self.space(),
+            &self.tree(),
+            k_min,
+            k_max,
+            &self.kmeans_opts(parallelism),
+        );
         QueryResult::Xmeans {
             centroids: r.centroids,
             k: r.k,

@@ -9,17 +9,19 @@
 //! and the [`MetricTree`], and answers every [`Query`] variant through
 //! one dispatcher, [`Index::run`]:
 //!
-//! ```no_run
+//! ```
 //! use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
 //! use anchors_hierarchy::engine::{IndexBuilder, KmeansQuery, Query, QueryResult};
+//! use anchors_hierarchy::parallel::Parallelism;
 //!
-//! let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Cell, 0.1))
-//!     .rmin(30)
+//! let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.004))
+//!     .rmin(16)
+//!     .parallelism(Parallelism::Fixed(2)) // tree build + queries may use 2 workers
 //!     .build();
-//! let result = index.run(&Query::Kmeans(KmeansQuery { k: 20, ..Default::default() }));
-//! if let QueryResult::Kmeans { distortion, .. } = result {
-//!     println!("distortion {distortion}");
-//! }
+//! let result = index.run(&Query::Kmeans(KmeansQuery { k: 5, iters: 3, ..Default::default() }));
+//! let QueryResult::Kmeans { distortion, .. } = result else { panic!("wrong variant") };
+//! assert!(distortion.is_finite());
+//! assert!(index.dist_count() > 0);
 //! ```
 //!
 //! Design points:
@@ -34,7 +36,13 @@
 //!   switch) never pays for a build.
 //! * **Exact accounting.** The index owns the space's distance counter;
 //!   [`Index::dist_count`] exposes it so callers (the coordinator, the
-//!   bench harness) can attribute distance computations to queries.
+//!   bench harness) can attribute distance computations to queries. The
+//!   counter is sharded per thread, so counts stay exact when builds and
+//!   batches run on many workers.
+//! * **Deterministic parallelism.** [`IndexBuilder::parallelism`] sets
+//!   the worker budget for the tree build, the k-means/x-means passes,
+//!   and [`Index::run_batch`]'s query fan-out. Every thread count yields
+//!   bit-identical trees and results (see [`crate::parallel`]).
 //! * **One implementation layer.** The dispatcher calls the same
 //!   `naive_*` / `tree_*` free functions in [`crate::algorithms`] that
 //!   the paper-table benches measure; the facade adds routing, not
@@ -54,6 +62,7 @@ pub use query::{
 
 use crate::dataset::DatasetSpec;
 use crate::metrics::Space;
+use crate::parallel::Parallelism;
 use crate::runtime::BatchDistanceEngine;
 use crate::tree::middle_out::{self, MiddleOutConfig};
 use crate::tree::{top_down, MetricTree};
@@ -96,6 +105,7 @@ pub struct IndexBuilder {
     seed: Option<u64>,
     exact_radii: bool,
     batch_engine: Option<Arc<BatchDistanceEngine>>,
+    parallelism: Parallelism,
 }
 
 impl IndexBuilder {
@@ -107,6 +117,7 @@ impl IndexBuilder {
             seed: None,
             exact_radii: false,
             batch_engine: None,
+            parallelism: Parallelism::default(),
         }
     }
 
@@ -142,6 +153,15 @@ impl IndexBuilder {
         self
     }
 
+    /// Worker budget for the tree build, the parallel assignment passes
+    /// and [`Index::run_batch`]. Defaults to `PALLAS_THREADS` when set,
+    /// else one worker per hardware thread; results are bit-identical
+    /// for every setting.
+    pub fn parallelism(mut self, parallelism: Parallelism) -> Self {
+        self.parallelism = parallelism;
+        self
+    }
+
     /// Materialize the dataset and wrap it in an [`Index`]. The tree is
     /// built lazily, on the first query that needs it.
     pub fn build(self) -> Index {
@@ -161,6 +181,7 @@ impl IndexBuilder {
             exact_radii: self.exact_radii,
             batch_engine: self.batch_engine,
             seed,
+            parallelism: self.parallelism,
         }
     }
 }
@@ -175,6 +196,7 @@ pub struct Index {
     exact_radii: bool,
     batch_engine: Option<Arc<BatchDistanceEngine>>,
     seed: u64,
+    parallelism: Parallelism,
 }
 
 impl Index {
@@ -197,7 +219,21 @@ impl Index {
             exact_radii: false,
             batch_engine,
             seed,
+            parallelism: Parallelism::default(),
         }
+    }
+
+    /// Replace the worker budget (used by the coordinator, which keeps
+    /// per-job work serial by default so its own worker pool provides
+    /// the concurrency).
+    pub fn with_parallelism(mut self, parallelism: Parallelism) -> Index {
+        self.parallelism = parallelism;
+        self
+    }
+
+    /// The worker budget builds and batches run with.
+    pub fn parallelism(&self) -> Parallelism {
+        self.parallelism
     }
 
     pub fn space(&self) -> &Space {
@@ -222,9 +258,12 @@ impl Index {
                     rmin: self.rmin,
                     seed: self.seed,
                     exact_radii: self.exact_radii,
+                    parallelism: self.parallelism,
                 },
             ),
-            TreeStrategy::TopDown => top_down::build(&self.space, self.rmin),
+            TreeStrategy::TopDown => {
+                top_down::build_par(&self.space, self.rmin, self.parallelism)
+            }
         });
         *guard = Some(Arc::clone(&tree));
         tree

@@ -12,35 +12,43 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — all tree/anchor algorithms, dataset suite,
-//!   distance accounting, the batch-job coordinator, and the bench harness
-//!   that regenerates every table and figure of the paper.
+//!   distance accounting, the [`parallel`] execution layer, the batch-job
+//!   coordinator, and the bench harness that regenerates every table and
+//!   figure of the paper.
 //! * **L2/L1 (python/, build-time only)** — a JAX compute graph wrapping a
 //!   Pallas tiled pairwise-distance kernel, AOT-lowered to HLO text in
 //!   `artifacts/`. The rust [`runtime`] loads those artifacts through
 //!   PJRT (the `xla` crate) and uses them for dense leaf-level distance
 //!   blocks. Python never runs at request time.
 //!
+//! `docs/ARCHITECTURE.md` maps every paper section to its module and
+//! traces a query's life from TCP op to tree traversal.
+//!
 //! ## Quickstart
 //!
 //! Build one [`engine::Index`] over a dataset, then run any of the eight
 //! query families against it — the build-once / query-many model the
-//! paper argues for:
+//! paper argues for. The [`parallel::Parallelism`] knob sets the worker
+//! budget for the tree build and for batch dispatch; every setting
+//! produces bit-identical results, so it is purely a wall-clock control:
 //!
-//! ```no_run
+//! ```
 //! use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
 //! use anchors_hierarchy::engine::{IndexBuilder, KmeansQuery, KnnQuery, KnnTarget, Query,
 //!                                 QueryResult};
+//! use anchors_hierarchy::parallel::Parallelism;
 //!
-//! let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Cell, 0.1))
-//!     .rmin(30)
+//! let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.004))
+//!     .rmin(16)
+//!     .parallelism(Parallelism::Fixed(2)) // or Auto (default) / Serial
 //!     .build();
 //! let results = index.run_batch(&[
-//!     Query::Kmeans(KmeansQuery { k: 20, iters: 10, ..Default::default() }),
+//!     Query::Kmeans(KmeansQuery { k: 4, iters: 3, ..Default::default() }),
 //!     Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 5, ..Default::default() }),
 //! ]);
-//! if let QueryResult::Kmeans { distortion, .. } = &results[0] {
-//!     println!("distortion {distortion} ({} distance computations)", index.dist_count());
-//! }
+//! assert_eq!(results.len(), 2);
+//! let QueryResult::Kmeans { distortion, .. } = &results[0] else { panic!("wrong variant") };
+//! assert!(distortion.is_finite() && index.dist_count() > 0);
 //! ```
 //!
 //! The free functions in [`algorithms`] remain available for
@@ -57,6 +65,7 @@ pub mod dataset;
 pub mod engine;
 pub mod json;
 pub mod metrics;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;

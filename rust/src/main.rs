@@ -22,6 +22,7 @@ use anchors_hierarchy::engine::{
     AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, Index, IndexBuilder, InitKind,
     KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, TreeStrategy, XmeansQuery,
 };
+use anchors_hierarchy::parallel::Parallelism;
 use anchors_hierarchy::runtime::BatchDistanceEngine;
 use std::sync::Arc;
 
@@ -39,7 +40,7 @@ paper experiments
 
 engine queries (common flags: --dataset NAME --scale F --seed N --rmin N
                               --tree BOOL --builder middle-out|top-down
-                              --xla BOOL)
+                              --xla BOOL --threads auto|serial|N)
   kmeans   [--k N] [--iters N] [--init random|anchors]
   xmeans   [--kmin N] [--kmax N]
   anomaly  [--threshold N] [--frac F] [--radius F]
@@ -106,10 +107,16 @@ fn build_index(args: &Args) -> Result<(DatasetSpec, Index), String> {
     let strategy = TreeStrategy::parse(&builder_name)
         .ok_or_else(|| format!("unknown builder {builder_name:?}"))?;
     let engine = maybe_engine(args)?;
+    let parallelism = match args.opt_str("threads") {
+        None => Parallelism::default(), // $PALLAS_THREADS, else auto
+        Some(raw) => Parallelism::parse(&raw)
+            .ok_or_else(|| format!("--threads: expected auto|serial|N, found {raw:?}"))?,
+    };
     let index = IndexBuilder::new(spec.clone())
         .rmin(rmin)
         .strategy(strategy)
         .batch_engine(engine)
+        .parallelism(parallelism)
         .build();
     println!(
         "dataset {} ({} rows × {} dims)",

@@ -1,6 +1,36 @@
 //! The distance-computation counter — the paper's measuring stick.
+//!
+//! Sharded per thread: with the parallel execution layer
+//! ([`crate::parallel`]) many workers bump the counter concurrently, and
+//! a single cache line of `AtomicU64` would serialize every distance
+//! evaluation in the machine through one contended cell. Each thread is
+//! instead assigned one of `SHARDS` cache-line-aligned cells
+//! (round-robin at first use) and adds there; reads sum the shards.
+//! Totals stay **exact** under any concurrency — each shard add is
+//! atomic and the total is a plain sum — which is what lets the
+//! serial ≡ parallel equivalence tests assert identical distance counts
+//! across thread counts.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Number of counter cells. More shards than typical worker counts so
+/// round-robin assignment rarely aliases two hot threads onto one line.
+const SHARDS: usize = 16;
+
+/// One cache line worth of counter, so two shards never false-share.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+struct Shard {
+    count: AtomicU64,
+}
+
+/// Monotonically increasing round-robin source of shard assignments.
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's shard index, fixed at first use.
+    static SHARD_INDEX: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+}
 
 /// Thread-safe counter of distance computations. Relaxed ordering is
 /// sufficient: the counter is only read after the algorithm completes (or
@@ -8,30 +38,38 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// synchronization.
 #[derive(Debug, Default)]
 pub struct DistCounter {
-    count: AtomicU64,
+    shards: [Shard; SHARDS],
 }
 
 impl DistCounter {
     pub fn new() -> Self {
-        DistCounter { count: AtomicU64::new(0) }
+        DistCounter::default()
     }
 
     #[inline]
     pub fn add(&self, n: u64) {
-        self.count.fetch_add(n, Ordering::Relaxed);
+        let shard = SHARD_INDEX.with(|i| *i);
+        self.shards[shard].count.fetch_add(n, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn get(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
+        self.shards
+            .iter()
+            .map(|s| s.count.load(Ordering::Relaxed))
+            .sum()
     }
 
     pub fn reset(&self) {
-        self.count.store(0, Ordering::Relaxed);
+        for s in &self.shards {
+            s.count.store(0, Ordering::Relaxed);
+        }
     }
 
     /// Run `f` and return (result, distances incurred by `f`). Only valid
-    /// when no other thread touches the counter concurrently.
+    /// when no other thread touches the counter concurrently — `f` may
+    /// itself be internally parallel (its workers' shards are included in
+    /// the delta), but a concurrent *unrelated* workload would pollute it.
     pub fn scoped<T>(&self, f: impl FnOnce() -> T) -> (T, u64) {
         let before = self.get();
         let out = f();
@@ -83,5 +121,21 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn shards_spread_across_threads_but_total_is_exact() {
+        // Many short-lived threads each add a distinct amount; whatever
+        // shard each lands on, the sum must be exact.
+        let c = Arc::new(DistCounter::new());
+        let mut handles = Vec::new();
+        for i in 1..=32u64 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || c.add(i)));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), (1..=32).sum::<u64>());
     }
 }

@@ -1,0 +1,319 @@
+//! The parallel execution layer: a std-only scoped-thread executor with
+//! **deterministic decomposition**.
+//!
+//! The paper makes individual queries cheap via the triangle inequality;
+//! this module makes the *system* fast via threads — tree builds fan out
+//! over anchor subtrees, assignment passes fan out over point chunks, and
+//! [`crate::engine::Index::run_batch`] fans out over queries. Pestov's
+//! lower bounds (PAPERS.md) say per-query pruning gains shrink as
+//! dimension grows, which makes throughput parallelism the remaining
+//! lever in high dimensions.
+//!
+//! ## The determinism contract
+//!
+//! Every consumer in this crate follows two rules that make results
+//! **bit-reproducible under any thread count** (enforced by
+//! `tests/parallel_equivalence.rs`):
+//!
+//! 1. **Fixed decomposition.** Work is split by *data* (fixed chunk
+//!    sizes, anchor boundaries, a fixed tree frontier), never by thread
+//!    count. The same work items exist whether 1 or 64 threads run them.
+//! 2. **Ordered reduction.** Partial results (per-chunk sufficient
+//!    statistics, per-subtree arenas, per-task accumulators) are merged
+//!    in work-item order, so floating-point association is identical on
+//!    every schedule.
+//!
+//! Under those rules the executor is free to schedule work items onto
+//! threads in any order — scheduling affects wall-clock only, never
+//! values. Distance *counts* stay exact as well: the sharded
+//! [`crate::metrics::DistCounter`] is additive, and the decomposition
+//! rules guarantee the same multiset of distance evaluations.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How much of the machine a build or query may use. The knob threads
+/// through [`crate::engine::IndexBuilder`], [`crate::tree::middle_out::MiddleOutConfig`]
+/// and [`crate::algorithms::kmeans::KmeansOpts`]; results are identical
+/// for every setting (see the module docs), so it is purely a
+/// wall-clock/resource control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Single-threaded: all work runs on the calling thread.
+    Serial,
+    /// Exactly this many worker threads (clamped to at least 1).
+    Fixed(usize),
+    /// One worker per available hardware thread.
+    Auto,
+}
+
+impl Parallelism {
+    /// Worker-thread budget this setting resolves to.
+    pub fn threads(self) -> usize {
+        match self {
+            Parallelism::Serial => 1,
+            Parallelism::Fixed(n) => n.max(1),
+            Parallelism::Auto => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+
+    /// The `PALLAS_THREADS` environment override, if set to a valid
+    /// thread count (`1` selects the serial path).
+    pub fn from_env() -> Option<Parallelism> {
+        let raw = std::env::var("PALLAS_THREADS").ok()?;
+        match raw.trim().parse::<usize>() {
+            Ok(0) => Some(Parallelism::Auto),
+            Ok(1) => Some(Parallelism::Serial),
+            Ok(n) => Some(Parallelism::Fixed(n)),
+            Err(_) => None,
+        }
+    }
+
+    /// Parse a CLI-style spec: `"serial"`, `"auto"`, or a thread count.
+    pub fn parse(name: &str) -> Option<Parallelism> {
+        match name {
+            "serial" => Some(Parallelism::Serial),
+            "auto" => Some(Parallelism::Auto),
+            _ => match name.parse::<usize>() {
+                Ok(0) => Some(Parallelism::Auto),
+                Ok(1) => Some(Parallelism::Serial),
+                Ok(n) => Some(Parallelism::Fixed(n)),
+                Err(_) => None,
+            },
+        }
+    }
+}
+
+impl Default for Parallelism {
+    /// `PALLAS_THREADS` when set, otherwise [`Parallelism::Auto`].
+    fn default() -> Self {
+        Parallelism::from_env().unwrap_or(Parallelism::Auto)
+    }
+}
+
+/// A scoped-thread work-chunk executor. Cheap to construct (it holds only
+/// the resolved thread budget); threads are spawned per call via
+/// [`std::thread::scope`], so borrowed data flows into tasks without
+/// `Arc` plumbing.
+#[derive(Clone, Copy, Debug)]
+pub struct Executor {
+    threads: usize,
+}
+
+impl Executor {
+    pub fn new(parallelism: Parallelism) -> Executor {
+        Executor { threads: parallelism.threads() }
+    }
+
+    /// An executor that runs everything on the calling thread.
+    pub fn serial() -> Executor {
+        Executor { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run tasks `0..n`, returning results **in task order**. Tasks are
+    /// claimed from a shared atomic cursor, so long tasks don't stall
+    /// short ones. The calling thread works alongside `threads - 1`
+    /// spawned workers (keeping spawn overhead off the hot path for
+    /// small fan-outs and the caller busy for large ones); a panicking
+    /// task is propagated to the caller after all workers have stopped.
+    pub fn map_tasks<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let drain = |out: &mut Vec<(usize, T)>| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            out.push((i, f(i)));
+        };
+        let buckets: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (1..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut out = Vec::new();
+                        drain(&mut out);
+                        out
+                    })
+                })
+                .collect();
+            let mut own = Vec::new();
+            drain(&mut own);
+            let mut all = vec![own];
+            for h in handles {
+                all.push(
+                    h.join()
+                        .unwrap_or_else(|panic| std::panic::resume_unwind(panic)),
+                );
+            }
+            all
+        });
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for bucket in buckets {
+            for (i, v) in bucket {
+                slots[i] = Some(v);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every task index produces exactly one result"))
+            .collect()
+    }
+
+    /// Split `0..n` into fixed `chunk`-sized ranges and map each,
+    /// returning results in chunk order. The chunk boundaries depend only
+    /// on `n` and `chunk` — never on the thread count — which is rule 1
+    /// of the determinism contract.
+    pub fn map_chunks<T, F>(&self, n: usize, chunk: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+    {
+        assert!(chunk > 0, "map_chunks with zero chunk size");
+        let n_chunks = (n + chunk - 1) / chunk;
+        self.map_tasks(n_chunks, |c| f(c * chunk..((c + 1) * chunk).min(n)))
+    }
+}
+
+/// Run two closures, the second on a spawned thread when `threads > 1`
+/// (rayon-`join` style, used by the top-down tree builder's two-way
+/// recursion). Panics from either side propagate to the caller.
+pub fn join<A, B, FA, FB>(threads: usize, fa: FA, fb: FB) -> (A, B)
+where
+    A: Send,
+    B: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B + Send,
+{
+    if threads <= 1 {
+        let a = fa();
+        let b = fb();
+        (a, b)
+    } else {
+        std::thread::scope(|s| {
+            let hb = s.spawn(fb);
+            let a = fa();
+            let b = hb
+                .join()
+                .unwrap_or_else(|panic| std::panic::resume_unwind(panic));
+            (a, b)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn threads_resolution() {
+        assert_eq!(Parallelism::Serial.threads(), 1);
+        assert_eq!(Parallelism::Fixed(4).threads(), 4);
+        assert_eq!(Parallelism::Fixed(0).threads(), 1);
+        assert!(Parallelism::Auto.threads() >= 1);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Parallelism::parse("serial"), Some(Parallelism::Serial));
+        assert_eq!(Parallelism::parse("auto"), Some(Parallelism::Auto));
+        assert_eq!(Parallelism::parse("1"), Some(Parallelism::Serial));
+        assert_eq!(Parallelism::parse("6"), Some(Parallelism::Fixed(6)));
+        assert_eq!(Parallelism::parse("0"), Some(Parallelism::Auto));
+        assert_eq!(Parallelism::parse("banana"), None);
+    }
+
+    #[test]
+    fn map_tasks_preserves_order() {
+        for threads in [1usize, 2, 8] {
+            let exec = Executor::new(Parallelism::Fixed(threads));
+            let out = exec.map_tasks(100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_tasks_empty_and_single() {
+        let exec = Executor::new(Parallelism::Fixed(4));
+        assert_eq!(exec.map_tasks(0, |i| i), Vec::<usize>::new());
+        assert_eq!(exec.map_tasks(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn map_tasks_runs_each_exactly_once() {
+        let exec = Executor::new(Parallelism::Fixed(8));
+        let hits: Vec<AtomicU64> = (0..50).map(|_| AtomicU64::new(0)).collect();
+        exec.map_tasks(50, |i| hits[i].fetch_add(1, Ordering::Relaxed));
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} run count");
+        }
+    }
+
+    #[test]
+    fn map_chunks_covers_range_exactly() {
+        let exec = Executor::new(Parallelism::Fixed(3));
+        for (n, chunk) in [(10usize, 3usize), (9, 3), (1, 5), (0, 4), (1000, 7)] {
+            let ranges = exec.map_chunks(n, chunk, |r| r);
+            let mut expect = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expect, "n={n} chunk={chunk}");
+                assert!(r.end - r.start <= chunk);
+                expect = r.end;
+            }
+            assert_eq!(expect, n, "n={n} chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_ignore_thread_count() {
+        let a = Executor::new(Parallelism::Serial).map_chunks(103, 10, |r| r);
+        let b = Executor::new(Parallelism::Fixed(8)).map_chunks(103, 10, |r| r);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn join_returns_both() {
+        for threads in [1usize, 4] {
+            let (a, b) = join(threads, || 2 + 2, || "ok");
+            assert_eq!(a, 4);
+            assert_eq!(b, "ok");
+        }
+    }
+
+    #[test]
+    fn map_tasks_propagates_panics() {
+        let exec = Executor::new(Parallelism::Fixed(4));
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.map_tasks(16, |i| {
+                if i == 9 {
+                    panic!("boom from task 9");
+                }
+                i
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+            .unwrap_or("");
+        assert!(msg.contains("boom"), "payload lost: {msg:?}");
+    }
+}

@@ -7,10 +7,24 @@
 //! at each step merging the pair of nodes whose smallest enclosing ball is
 //! smallest ("most compatible", §3.1). The recursion bottoms out at
 //! `rmin`-sized leaves.
+//!
+//! ## Parallel builds
+//!
+//! Once an anchor frontier is fixed, its subtrees share nothing: the
+//! top-level √R anchor subtrees build concurrently on
+//! [`MiddleOutConfig::parallelism`] workers, each into a private arena
+//! that is spliced into the shared arena in anchor order (so the layout —
+//! and every node — is byte-identical to the sequential schedule). The
+//! anchor passes themselves fan out over point chunks inside
+//! [`build_anchors_ex`]. Each subtree derives its RNG by forking the
+//! parent stream per anchor index *before* any sibling builds, which is
+//! what decouples sibling builds from each other; determinism across
+//! thread counts is asserted by `tests/parallel_equivalence.rs`.
 
-use super::{enclosing_radius, make_leaf, make_parent, MetricTree, Node, NodeId};
-use crate::anchors::build_anchors;
+use super::{enclosing_radius, make_leaf, make_parent, splice_arena, MetricTree, Node, NodeId};
+use crate::anchors::build_anchors_ex;
 use crate::metrics::Space;
+use crate::parallel::{Executor, Parallelism};
 use crate::rng::Rng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -28,11 +42,19 @@ pub struct MiddleOutConfig {
     /// build cost ~O(R log R) more distances. Benchmarked in the
     /// `tree_build` ablation.
     pub exact_radii: bool,
+    /// Worker budget for the build. The produced tree is bit-identical
+    /// for every setting; this knob trades wall-clock for cores only.
+    pub parallelism: Parallelism,
 }
 
 impl Default for MiddleOutConfig {
     fn default() -> Self {
-        MiddleOutConfig { rmin: 30, seed: 0xA11C0, exact_radii: false }
+        MiddleOutConfig {
+            rmin: 30,
+            seed: 0xA11C0,
+            exact_radii: false,
+            parallelism: Parallelism::default(),
+        }
     }
 }
 
@@ -49,7 +71,8 @@ pub fn build_subset(space: &Space, points: Vec<u32>, cfg: &MiddleOutConfig) -> M
     let before = space.dist_count();
     let mut nodes: Vec<Node> = Vec::new();
     let mut rng = Rng::new(cfg.seed);
-    let root = recurse(space, points, rmin, cfg, &mut rng, &mut nodes);
+    let exec = Executor::new(cfg.parallelism);
+    let root = recurse(space, points, rmin, cfg, &mut rng, &mut nodes, &exec, true);
     MetricTree {
         nodes,
         root,
@@ -58,6 +81,7 @@ pub fn build_subset(space: &Space, points: Vec<u32>, cfg: &MiddleOutConfig) -> M
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn recurse(
     space: &Space,
     points: Vec<u32>,
@@ -65,6 +89,8 @@ fn recurse(
     cfg: &MiddleOutConfig,
     rng: &mut Rng,
     nodes: &mut Vec<Node>,
+    exec: &Executor,
+    fan_out: bool,
 ) -> NodeId {
     if points.len() <= rmin {
         nodes.push(make_leaf(space, points));
@@ -72,21 +98,55 @@ fn recurse(
     }
     // √R anchors (at least 2, else we cannot make progress).
     let k = ((points.len() as f64).sqrt().ceil() as usize).max(2);
-    let anchor_set = build_anchors(space, &points, k, rng);
+    let anchor_set = build_anchors_ex(space, &points, k, rng, exec);
     if anchor_set.k() < 2 {
         // All duplicates: one leaf holds them all.
         nodes.push(make_leaf(space, points));
         return (nodes.len() - 1) as NodeId;
     }
 
+    // One RNG per subtree, forked in anchor order *before* any subtree
+    // builds: each child's stream is a function of this node's state and
+    // its anchor index alone — never of a sibling's build — so siblings
+    // may build in any order (or concurrently) with identical results.
+    let mut child_rngs: Vec<Rng> = (0..anchor_set.k()).map(|i| rng.fork(i as u64)).collect();
+
     // Recursively build a subtree inside each anchor's owned set
     // (paper Figure 10), then agglomerate the subtree roots
-    // (Figures 8–9).
-    let child_roots: Vec<NodeId> = anchor_set
-        .anchors
-        .iter()
-        .map(|a| recurse(space, a.point_ids(), rmin, cfg, rng, nodes))
-        .collect();
+    // (Figures 8–9). With workers available, the top-level subtrees
+    // build concurrently into private arenas spliced back in anchor
+    // order — exactly the layout the sequential loop produces.
+    let child_roots: Vec<NodeId> = if fan_out && exec.threads() > 1 {
+        let serial = Executor::serial();
+        let subtrees: Vec<(Vec<Node>, NodeId)> = exec.map_tasks(anchor_set.k(), |i| {
+            let mut local: Vec<Node> = Vec::new();
+            let mut local_rng = child_rngs[i].clone();
+            let local_root = recurse(
+                space,
+                anchor_set.anchors[i].point_ids(),
+                rmin,
+                cfg,
+                &mut local_rng,
+                &mut local,
+                &serial,
+                false,
+            );
+            (local, local_root)
+        });
+        subtrees
+            .into_iter()
+            .map(|(local, local_root)| splice_arena(nodes, local, local_root))
+            .collect()
+    } else {
+        anchor_set
+            .anchors
+            .iter()
+            .zip(child_rngs.iter_mut())
+            .map(|(a, crng)| {
+                recurse(space, a.point_ids(), rmin, cfg, crng, nodes, exec, false)
+            })
+            .collect()
+    };
     agglomerate(space, child_roots, cfg, nodes)
 }
 
@@ -242,8 +302,12 @@ mod tests {
     #[test]
     fn exact_radii_are_tighter_or_equal() {
         let space = clustered_space(6, 80, 3, 3);
-        let loose = build(&space, &MiddleOutConfig { rmin: 10, seed: 5, exact_radii: false });
-        let tight = build(&space, &MiddleOutConfig { rmin: 10, seed: 5, exact_radii: true });
+        let loose =
+            build(&space, &MiddleOutConfig { rmin: 10, seed: 5, ..Default::default() });
+        let tight = build(
+            &space,
+            &MiddleOutConfig { rmin: 10, seed: 5, exact_radii: true, ..Default::default() },
+        );
         assert!(tight.node(tight.root).radius <= loose.node(loose.root).radius + 1e-9);
     }
 
@@ -274,8 +338,8 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let space = random_space(300, 2, 6);
-        let t1 = build(&space, &MiddleOutConfig { rmin: 15, seed: 9, exact_radii: false });
-        let t2 = build(&space, &MiddleOutConfig { rmin: 15, seed: 9, exact_radii: false });
+        let t1 = build(&space, &MiddleOutConfig { rmin: 15, seed: 9, ..Default::default() });
+        let t2 = build(&space, &MiddleOutConfig { rmin: 15, seed: 9, ..Default::default() });
         assert_eq!(t1.nodes.len(), t2.nodes.len());
         assert_eq!(t1.shape(), t2.shape());
     }

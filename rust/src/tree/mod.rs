@@ -305,6 +305,22 @@ pub(crate) fn make_parent(space: &Space, a: &Node, b: &Node) -> Node {
     }
 }
 
+/// Append a subtree arena built off to the side (by a parallel build
+/// task) onto `nodes`, remapping its internal child ids by the insertion
+/// offset. Returns the remapped root id. Splicing local arenas in task
+/// order reproduces exactly the layout the sequential recursion builds,
+/// so parallel and serial builds yield byte-identical trees.
+pub(crate) fn splice_arena(nodes: &mut Vec<Node>, mut local: Vec<Node>, root: NodeId) -> NodeId {
+    let offset = nodes.len() as NodeId;
+    for n in &mut local {
+        if let Some((a, b)) = n.children {
+            n.children = Some((a + offset, b + offset));
+        }
+    }
+    nodes.extend(local);
+    root + offset
+}
+
 /// The "compatibility" score of §3.1: the radius of the smallest ball that
 /// is guaranteed to contain both children's balls — smaller is better.
 #[inline]

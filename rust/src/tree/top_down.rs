@@ -5,25 +5,56 @@
 //! (discovered for free during the radius pass), `f2` the point farthest
 //! from `f1`; points go to whichever of `f1`/`f2` they are closer to, and
 //! each child's pivot is the centroid of its own points.
+//!
+//! Once a node's two sides are fixed they share nothing, so
+//! [`build_par`] builds the top `⌈log2(threads)⌉ + 1` split levels with
+//! one [`parallel::join`] per node, splicing each side's private arena
+//! back left-then-right — byte-identical to the sequential recursion at
+//! every thread count (the builder uses no randomness at all).
 
-use super::{make_leaf, MetricTree, Node, NodeId};
+use super::{make_leaf, splice_arena, MetricTree, Node, NodeId};
 use crate::metrics::Space;
+use crate::parallel::{self, Parallelism};
 
 /// Build a top-down metric tree over all points of `space` with leaf
-/// threshold `rmin`.
+/// threshold `rmin`, single-threaded.
 pub fn build(space: &Space, rmin: usize) -> MetricTree {
+    build_par(space, rmin, Parallelism::Serial)
+}
+
+/// Build a top-down metric tree with the given worker budget. The result
+/// is byte-identical to [`build`] for every setting.
+pub fn build_par(space: &Space, rmin: usize, parallelism: Parallelism) -> MetricTree {
     let points: Vec<u32> = (0..space.n() as u32).collect();
-    build_subset(space, points, rmin)
+    build_subset_par(space, points, rmin, parallelism)
 }
 
 /// Build over an explicit subset (used by tests and the coordinator's
 /// incremental jobs).
 pub fn build_subset(space: &Space, points: Vec<u32>, rmin: usize) -> MetricTree {
+    build_subset_par(space, points, rmin, Parallelism::Serial)
+}
+
+/// Subset build with a worker budget.
+pub fn build_subset_par(
+    space: &Space,
+    points: Vec<u32>,
+    rmin: usize,
+    parallelism: Parallelism,
+) -> MetricTree {
     assert!(!points.is_empty(), "empty tree");
     let rmin = rmin.max(1);
+    let threads = parallelism.threads();
+    // Fan out the top ⌈log2(threads)⌉ + 1 levels: up to 2·threads leaf
+    // tasks, enough to cover imbalance between the two sides of a split.
+    let levels = if threads <= 1 {
+        0
+    } else {
+        (usize::BITS - (threads - 1).leading_zeros()) as usize + 1
+    };
     let before = space.dist_count();
     let mut nodes: Vec<Node> = Vec::new();
-    let root = split(space, points, rmin, &mut nodes);
+    let root = split(space, points, rmin, &mut nodes, threads, levels);
     MetricTree {
         nodes,
         root,
@@ -32,7 +63,14 @@ pub fn build_subset(space: &Space, points: Vec<u32>, rmin: usize) -> MetricTree 
     }
 }
 
-fn split(space: &Space, points: Vec<u32>, rmin: usize, nodes: &mut Vec<Node>) -> NodeId {
+fn split(
+    space: &Space,
+    points: Vec<u32>,
+    rmin: usize,
+    nodes: &mut Vec<Node>,
+    threads: usize,
+    levels: usize,
+) -> NodeId {
     // make_leaf performs the radius pass: one counted distance per point,
     // and hands us the farthest point (f1) implicitly via a rescan below.
     let node = make_leaf(space, points);
@@ -86,8 +124,35 @@ fn split(space: &Space, points: Vec<u32>, rmin: usize, nodes: &mut Vec<Node>) ->
         left = all;
     }
 
-    let left_id = split(space, left, rmin, nodes);
-    let right_id = split(space, right, rmin, nodes);
+    // Two independent sides: build them concurrently while parallel
+    // levels remain (and both sides are big enough to be worth a
+    // thread), splicing the private arenas back left-then-right so the
+    // layout matches the sequential recursion exactly.
+    let fan_out = levels > 0 && threads > 1 && left.len() > rmin && right.len() > rmin;
+    let (left_id, right_id) = if fan_out {
+        let ((lnodes, lroot), (rnodes, rroot)) = parallel::join(
+            threads,
+            || {
+                let mut local = Vec::new();
+                let root = split(space, left, rmin, &mut local, threads, levels - 1);
+                (local, root)
+            },
+            || {
+                let mut local = Vec::new();
+                let root = split(space, right, rmin, &mut local, threads, levels - 1);
+                (local, root)
+            },
+        );
+        let left_id = splice_arena(nodes, lnodes, lroot);
+        let right_id = splice_arena(nodes, rnodes, rroot);
+        (left_id, right_id)
+    } else {
+        // (levels passes through unchanged: a small side here does not
+        // preclude fanning out a bigger split further down.)
+        let left_id = split(space, left, rmin, nodes, threads, levels);
+        let right_id = split(space, right, rmin, nodes, threads, levels);
+        (left_id, right_id)
+    };
     let mut parent = node;
     parent.children = Some((left_id, right_id));
     parent.points = Vec::new();
@@ -146,6 +211,24 @@ mod tests {
         let tree = build(&space, 10);
         assert!(tree.build_dists > 0);
         assert_eq!(tree.build_dists, space.dist_count());
+    }
+
+    #[test]
+    fn parallel_build_is_byte_identical() {
+        let space = random_space(800, 3, 9);
+        let serial = build(&space, 12);
+        for threads in [2usize, 8] {
+            let par = build_par(&space, 12, Parallelism::Fixed(threads));
+            assert_eq!(par.root, serial.root);
+            assert_eq!(par.nodes.len(), serial.nodes.len());
+            for (a, b) in serial.nodes.iter().zip(&par.nodes) {
+                assert_eq!(a.pivot, b.pivot);
+                assert_eq!(a.radius.to_bits(), b.radius.to_bits());
+                assert_eq!(a.count, b.count);
+                assert_eq!(a.children, b.children);
+                assert_eq!(a.points, b.points);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Serial ≡ parallel equivalence: the determinism contract of
+//! `crate::parallel` holds end to end. For thread counts {1, 2, 8}, on
+//! dense and sparse synthetic datasets, the parallel execution layer
+//! must produce the **same tree shape (byte-identical nodes), the same
+//! k-means centers (bit-equal), and the same exact distance counts** as
+//! the serial schedule — parallelism is a wall-clock knob, never a
+//! semantics knob.
+
+use anchors_hierarchy::algorithms::{kmeans, xmeans};
+use anchors_hierarchy::data::Data;
+use anchors_hierarchy::dataset::{gaussian_mixture, gen_mixture, DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{
+    BallQuery, IndexBuilder, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
+};
+use anchors_hierarchy::metrics::Space;
+use anchors_hierarchy::parallel::Parallelism;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::tree::{top_down, MetricTree};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn dense_space() -> Space {
+    Space::euclidean(Data::Dense(gaussian_mixture(1800, 16, 6, 20.0, 42)))
+}
+
+fn sparse_space() -> Space {
+    Space::euclidean(Data::Sparse(gen_mixture(700, 120, 4, 42)))
+}
+
+/// Byte-level equality of two trees: layout, ball geometry, cached
+/// sufficient statistics and leaf point lists.
+fn assert_trees_identical(a: &MetricTree, b: &MetricTree, what: &str) {
+    assert_eq!(a.root, b.root, "{what}: root id");
+    assert_eq!(a.nodes.len(), b.nodes.len(), "{what}: node count");
+    assert_eq!(a.build_dists, b.build_dists, "{what}: build distance count");
+    for (i, (na, nb)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        assert_eq!(na.pivot, nb.pivot, "{what}: node {i} pivot");
+        assert_eq!(
+            na.radius.to_bits(),
+            nb.radius.to_bits(),
+            "{what}: node {i} radius"
+        );
+        assert_eq!(na.count, nb.count, "{what}: node {i} count");
+        assert_eq!(na.sum, nb.sum, "{what}: node {i} cached sum");
+        assert_eq!(
+            na.sumsq.to_bits(),
+            nb.sumsq.to_bits(),
+            "{what}: node {i} cached sumsq"
+        );
+        assert_eq!(na.children, nb.children, "{what}: node {i} children");
+        assert_eq!(na.points, nb.points, "{what}: node {i} points");
+    }
+}
+
+#[test]
+fn middle_out_tree_identical_across_thread_counts_dense() {
+    let space = dense_space();
+    let build = |threads: usize| {
+        space.reset_count();
+        middle_out::build(
+            &space,
+            &MiddleOutConfig {
+                rmin: 16,
+                seed: 7,
+                parallelism: Parallelism::Fixed(threads),
+                ..Default::default()
+            },
+        )
+    };
+    let reference = build(1);
+    reference.validate(&space).unwrap();
+    for &threads in &THREAD_COUNTS[1..] {
+        let tree = build(threads);
+        assert_trees_identical(&reference, &tree, &format!("dense middle-out, {threads} threads"));
+    }
+}
+
+#[test]
+fn middle_out_tree_identical_across_thread_counts_sparse() {
+    let space = sparse_space();
+    let build = |threads: usize| {
+        middle_out::build(
+            &space,
+            &MiddleOutConfig {
+                rmin: 12,
+                seed: 3,
+                parallelism: Parallelism::Fixed(threads),
+                ..Default::default()
+            },
+        )
+    };
+    let reference = build(1);
+    reference.validate(&space).unwrap();
+    for &threads in &THREAD_COUNTS[1..] {
+        let tree = build(threads);
+        assert_trees_identical(&reference, &tree, &format!("sparse middle-out, {threads} threads"));
+    }
+}
+
+#[test]
+fn top_down_tree_identical_across_thread_counts() {
+    let space = dense_space();
+    let reference = top_down::build_par(&space, 16, Parallelism::Fixed(1));
+    for &threads in &THREAD_COUNTS[1..] {
+        let tree = top_down::build_par(&space, 16, Parallelism::Fixed(threads));
+        assert_trees_identical(&reference, &tree, &format!("top-down, {threads} threads"));
+    }
+}
+
+/// K-means: same centers (bit-equal), same distortion, same exact
+/// distance counts — naive and tree paths, dense and sparse data.
+#[test]
+fn kmeans_centers_and_counts_identical_across_thread_counts() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = middle_out::build(
+            &space,
+            &MiddleOutConfig {
+                rmin: 16,
+                seed: 5,
+                parallelism: Parallelism::Serial,
+                ..Default::default()
+            },
+        );
+        let run = |threads: usize| {
+            let opts = kmeans::KmeansOpts {
+                parallelism: Parallelism::Fixed(threads),
+                ..Default::default()
+            };
+            let naive = kmeans::naive_lloyd(&space, kmeans::Init::Random, 6, 5, &opts);
+            let tree_r = kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, 6, 5, &opts);
+            (naive, tree_r)
+        };
+        let (n_ref, t_ref) = run(1);
+        for &threads in &THREAD_COUNTS[1..] {
+            let (n, t) = run(threads);
+            assert_eq!(n_ref.centroids, n.centroids, "{label} naive centers, {threads} threads");
+            assert_eq!(
+                n_ref.distortion.to_bits(),
+                n.distortion.to_bits(),
+                "{label} naive distortion, {threads} threads"
+            );
+            assert_eq!(n_ref.dists, n.dists, "{label} naive dist count, {threads} threads");
+            assert_eq!(t_ref.centroids, t.centroids, "{label} tree centers, {threads} threads");
+            assert_eq!(
+                t_ref.distortion.to_bits(),
+                t.distortion.to_bits(),
+                "{label} tree distortion, {threads} threads"
+            );
+            assert_eq!(t_ref.dists, t.dists, "{label} tree dist count, {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn xmeans_identical_across_thread_counts() {
+    let space = dense_space();
+    let tree = middle_out::build(
+        &space,
+        &MiddleOutConfig {
+            rmin: 16,
+            seed: 11,
+            parallelism: Parallelism::Serial,
+            ..Default::default()
+        },
+    );
+    let run = |threads: usize| {
+        let opts = kmeans::KmeansOpts {
+            parallelism: Parallelism::Fixed(threads),
+            ..Default::default()
+        };
+        xmeans::xmeans(&space, &tree, 1, 10, &opts)
+    };
+    let reference = run(1);
+    for &threads in &THREAD_COUNTS[1..] {
+        let r = run(threads);
+        assert_eq!(reference.k, r.k, "{threads} threads");
+        assert_eq!(reference.centroids, r.centroids, "{threads} threads");
+        assert_eq!(reference.bic.to_bits(), r.bic.to_bits(), "{threads} threads");
+        assert_eq!(reference.dists, r.dists, "{threads} threads");
+    }
+}
+
+/// `Engine::run_batch` dispatches across a worker pool; the results (and
+/// the index's total distance count) must match the serial index exactly.
+#[test]
+fn run_batch_identical_across_thread_counts() {
+    let workload: Vec<Query> = vec![
+        Query::Kmeans(KmeansQuery { k: 4, iters: 3, ..Default::default() }),
+        Query::Knn(KnnQuery { target: KnnTarget::Point(3), k: 5, ..Default::default() }),
+        Query::Ball(BallQuery { center: vec![0.0; 2], radius: 2.0, use_tree: true }),
+        Query::Mst(MstQuery { use_tree: true }),
+        Query::Kmeans(KmeansQuery { k: 7, iters: 2, use_tree: false, ..Default::default() }),
+    ];
+    let run = |threads: usize| {
+        let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.004))
+            .rmin(16)
+            .parallelism(Parallelism::Fixed(threads))
+            .build();
+        let results = index.run_batch(&workload);
+        (results, index.dist_count())
+    };
+    let (ref_results, ref_dists) = run(1);
+    for &threads in &THREAD_COUNTS[1..] {
+        let (results, dists) = run(threads);
+        assert_eq!(ref_results, results, "{threads} threads");
+        assert_eq!(ref_dists, dists, "total distance count, {threads} threads");
+    }
+}

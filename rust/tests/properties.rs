@@ -61,6 +61,7 @@ fn prop_middle_out_tree_invariants() {
             rmin: 2 + rng.below(40),
             seed: rng.next_u64(),
             exact_radii: rng.bool(0.3),
+            ..Default::default()
         };
         let tree = middle_out::build(&space, &cfg);
         tree.validate(&space).map_err(|e| format!("{cfg:?}: {e}"))
@@ -108,7 +109,11 @@ fn prop_kmeans_tree_equals_naive() {
         let space = random_space(rng);
         let tree = middle_out::build(
             &space,
-            &MiddleOutConfig { rmin: 4 + rng.below(30), seed: rng.next_u64(), exact_radii: false },
+            &MiddleOutConfig {
+                rmin: 4 + rng.below(30),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
         );
         let k = 1 + rng.below(8);
         let iters = 1 + rng.below(6);
@@ -136,7 +141,11 @@ fn prop_anomaly_tree_equals_naive() {
         let space = random_space(rng);
         let tree = middle_out::build(
             &space,
-            &MiddleOutConfig { rmin: 4 + rng.below(30), seed: rng.next_u64(), exact_radii: false },
+            &MiddleOutConfig {
+                rmin: 4 + rng.below(30),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
         );
         let threshold = 1 + rng.below(20) as u64;
         // Radius spanning trivial to generous.
@@ -158,7 +167,11 @@ fn prop_allpairs_tree_equals_naive() {
         let space = random_space(rng);
         let tree = middle_out::build(
             &space,
-            &MiddleOutConfig { rmin: 4 + rng.below(20), seed: rng.next_u64(), exact_radii: false },
+            &MiddleOutConfig {
+                rmin: 4 + rng.below(20),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
         );
         let tau = rng.uniform(0.05, 20.0);
         let a = allpairs::naive_close_pairs(&space, tau);
@@ -179,7 +192,11 @@ fn prop_knn_tree_equals_naive() {
         let space = random_dense(rng);
         let tree = middle_out::build(
             &space,
-            &MiddleOutConfig { rmin: 4 + rng.below(20), seed: rng.next_u64(), exact_radii: false },
+            &MiddleOutConfig {
+                rmin: 4 + rng.below(20),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
         );
         let k = 1 + rng.below(10);
         let d = space.dim();
@@ -248,7 +265,7 @@ fn prop_distance_counter_consistency() {
         let space = random_dense(rng);
         let tree = middle_out::build(
             &space,
-            &MiddleOutConfig { rmin: 8, seed: rng.next_u64(), exact_radii: false },
+            &MiddleOutConfig { rmin: 8, seed: rng.next_u64(), ..Default::default() },
         );
         let before = space.dist_count();
         let opts = kmeans::KmeansOpts { seed: rng.next_u64(), ..Default::default() };
