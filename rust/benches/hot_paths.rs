@@ -1,16 +1,21 @@
-//! Bench: the micro-level hot paths — scalar distance kernels, XLA tile
+//! Bench: the micro-level hot paths — scalar distance kernels, blocked
+//! leaf-scan kernels (before/after vs the pointwise loops they
+//! replaced), the persistent worker pool vs spawn-per-pass, XLA tile
 //! throughput, K-means passes, and k-NN queries. This is the profile the
-//! EXPERIMENTS.md §Perf iteration log is based on.
+//! docs/EXPERIMENTS.md §Perf iteration log is based on; the leaf-kernel
+//! and pool sections overwrite the repo-root `BENCH_hot_paths.json`
+//! baseline.
 
 use anchors_hierarchy::algorithms::{kmeans, knn};
 use anchors_hierarchy::bench::harness::Bencher;
 use anchors_hierarchy::data::{Data, DenseMatrix};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
-use anchors_hierarchy::metrics::{dense_dot, dense_sqdist, Space};
-use anchors_hierarchy::parallel::Parallelism;
+use anchors_hierarchy::metrics::{block, dense_dot, dense_sqdist, Space};
+use anchors_hierarchy::parallel::{Executor, Parallelism};
 use anchors_hierarchy::rng::Rng;
 use anchors_hierarchy::runtime::BatchDistanceEngine;
 use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use std::fmt::Write as _;
 use std::sync::Arc;
 
 fn random_space(n: usize, d: usize, seed: u64) -> Space {
@@ -42,6 +47,122 @@ fn main() {
             acc
         });
     }
+
+    // --- blocked leaf-scan kernels vs pointwise loops -------------------
+    // The 50k × 64 hot-path dataset: one full scan per iteration, in the
+    // two shapes the leaf scans use (single query; candidate centers).
+    const ROWS: usize = 50_000;
+    const DIMS: usize = 64;
+    let big = random_space(ROWS, DIMS, 11);
+    let all_rows: Vec<u32> = (0..ROWS as u32).collect();
+    let q: Vec<f32> = {
+        let mut rng = Rng::new(12);
+        (0..DIMS).map(|_| rng.normal() as f32).collect()
+    };
+    let q_sq: f64 = q.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let kb = Bencher::new(1, 5);
+
+    let (vec_pointwise, _) = kb.run("leaf/to-vec-pointwise-50k", |_| {
+        let mut acc = 0.0f64;
+        for p in 0..ROWS {
+            acc += big.dist_to_vec(p, &q, q_sq);
+        }
+        acc
+    });
+    println!("{}", vec_pointwise.report());
+    let (vec_blocked, _) = kb.run("leaf/to-vec-blocked-50k", |_| {
+        let mut out: Vec<f64> = Vec::new();
+        block::dists_to_vec(&big, &all_rows, &q, q_sq, &mut out);
+        out.iter().sum::<f64>()
+    });
+    println!("{}", vec_blocked.report());
+
+    let centers: Vec<Vec<f32>> = (0..16)
+        .map(|i| {
+            let mut rng = Rng::new(100 + i);
+            (0..DIMS).map(|_| rng.normal() as f32).collect()
+        })
+        .collect();
+    let c_sq: Vec<f64> = centers.iter().map(|c| dense_dot(c, c)).collect();
+    let ident: Vec<u32> = (0..centers.len() as u32).collect();
+    let (cent_pointwise, _) = kb.run("leaf/to-centers-k16-pointwise-50k", |_| {
+        let mut acc = 0.0f64;
+        for p in 0..ROWS {
+            for (ci, c) in centers.iter().enumerate() {
+                acc += big.dist_to_vec(p, c, c_sq[ci]);
+            }
+        }
+        acc
+    });
+    println!("{}", cent_pointwise.report());
+    let (cent_blocked, _) = kb.run("leaf/to-centers-k16-blocked-50k", |_| {
+        let mut out: Vec<f64> = Vec::new();
+        block::dists_range_to_centers(&big, 0..ROWS, &ident, &centers, &c_sq, &mut out);
+        out.iter().sum::<f64>()
+    });
+    println!("{}", cent_blocked.report());
+
+    // --- persistent pool vs spawn-per-pass fan-out ----------------------
+    // 64 small parallel passes at 4 workers — the per-iteration frontier
+    // shape. "Spawn" builds a fresh executor (and pool) per pass, which
+    // is what every pass paid before the persistent pool.
+    let passes = 64usize;
+    let fan = |exec: &Executor| -> usize {
+        exec.map_chunks(ROWS, 4096, |r| {
+            let mut n = 0usize;
+            for p in r {
+                n += (big.data.sqnorm(p) > 0.0) as usize;
+            }
+            n
+        })
+        .iter()
+        .sum()
+    };
+    let (pool_spawn, _) = kb.run("pool/spawn-per-pass-x64-4t", |_| {
+        let mut total = 0usize;
+        for _ in 0..passes {
+            let exec = Executor::new(Parallelism::Fixed(4));
+            total += fan(&exec);
+        }
+        total
+    });
+    println!("{}", pool_spawn.report());
+    let (pool_persistent, _) = kb.run("pool/persistent-x64-4t", |_| {
+        let exec = Executor::new(Parallelism::Fixed(4));
+        let mut total = 0usize;
+        for _ in 0..passes {
+            total += fan(&exec);
+        }
+        total
+    });
+    println!("{}", pool_persistent.report());
+
+    // --- record the baseline --------------------------------------------
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"status\": \"measured\",");
+    let _ = writeln!(
+        json,
+        "  \"dataset\": {{ \"rows\": {ROWS}, \"dims\": {DIMS}, \"kind\": \"gaussian\", \"seed\": 11 }},"
+    );
+    for (name, before, after) in [
+        ("leaf_to_vec", &vec_pointwise, &vec_blocked),
+        ("leaf_to_centers_k16", &cent_pointwise, &cent_blocked),
+        ("pool_fanout_x64_4t", &pool_spawn, &pool_persistent),
+    ] {
+        let _ = writeln!(
+            json,
+            "  \"{name}\": {{ \"before_secs\": {:.6}, \"after_secs\": {:.6}, \"speedup\": {:.3} }},",
+            before.mean,
+            after.mean,
+            before.mean / after.mean
+        );
+    }
+    let _ = writeln!(json, "  \"note\": \"before = pointwise scan / spawn-per-pass; after = blocked kernel / persistent pool\"");
+    let _ = writeln!(json, "}}");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_paths.json");
+    std::fs::write(path, &json).expect("write BENCH_hot_paths.json");
+    println!("leaf-kernel/pool baseline -> {path}");
 
     // --- XLA tile throughput ------------------------------------------
     match BatchDistanceEngine::open_default() {

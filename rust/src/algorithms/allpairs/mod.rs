@@ -8,7 +8,7 @@
 //! (eq. 8).
 
 use crate::data::DenseMatrix;
-use crate::metrics::Space;
+use crate::metrics::{block, Space};
 use crate::tree::{MetricTree, NodeId};
 
 /// Result of a close-pairs run.
@@ -25,10 +25,19 @@ pub fn naive_close_pairs(space: &Space, tau: f64) -> PairsResult {
     let before = space.dist_count();
     let mut pairs = Vec::new();
     let n = space.n();
+    let ids: Vec<u32> = (0..n as u32).collect();
+    let mut dists: Vec<f64> = Vec::new();
+    // One blocked row-tail per point: the same R(R−1)/2 counted
+    // distances as the classic double loop, tile-accounted.
     for i in 0..n {
-        for j in (i + 1)..n {
-            if space.dist(i, j) <= tau {
-                pairs.push((i as u32, j as u32));
+        let tail = &ids[i + 1..];
+        if tail.is_empty() {
+            break;
+        }
+        block::dists_rows(space, &ids[i..i + 1], tail, &mut dists);
+        for (&j, &d) in tail.iter().zip(&dists) {
+            if d <= tau {
+                pairs.push((i as u32, j));
             }
         }
     }
@@ -40,7 +49,9 @@ pub fn naive_close_pairs(space: &Space, tau: f64) -> PairsResult {
 pub fn tree_close_pairs(space: &Space, tree: &MetricTree, tau: f64) -> PairsResult {
     let before = space.dist_count();
     let mut pairs = Vec::new();
-    dual(space, tree, tree.root, tree.root, tau, &mut pairs);
+    // Leaf-scan scratch reused by every surviving leaf pair.
+    let mut dists: Vec<f64> = Vec::new();
+    dual(space, tree, tree.root, tree.root, tau, &mut pairs, &mut dists);
     // Canonical order for comparability with the naive path.
     pairs.sort_unstable();
     pairs.dedup();
@@ -54,6 +65,7 @@ fn dual(
     b: NodeId,
     tau: f64,
     out: &mut Vec<(u32, u32)>,
+    dists: &mut Vec<f64>,
 ) {
     let (na, nb) = (tree.node(a), tree.node(b));
     if a != b {
@@ -67,20 +79,29 @@ fn dual(
     match (na.children, nb.children) {
         (None, None) => {
             if a == b {
+                // Upper triangle, one blocked row-tail per point: the
+                // same |L|·(|L|−1)/2 counted distances as the pointwise
+                // double loop.
                 for (pi, &p) in na.points.iter().enumerate() {
-                    for &q in na.points.iter().skip(pi + 1) {
-                        if space.dist(p as usize, q as usize) <= tau {
+                    let tail = &na.points[pi + 1..];
+                    if tail.is_empty() {
+                        break;
+                    }
+                    block::dists_rows(space, &na.points[pi..pi + 1], tail, dists);
+                    for (&q, &d) in tail.iter().zip(dists.iter()) {
+                        if d <= tau {
                             out.push((p.min(q), p.max(q)));
                         }
                     }
                 }
             } else {
-                for &p in &na.points {
-                    for &q in &nb.points {
-                        if p == q {
-                            continue;
-                        }
-                        if space.dist(p as usize, q as usize) <= tau {
+                // Distinct leaves partition the points (no p == q), so
+                // the full |A|·|B| block matches the scalar accounting.
+                block::dists_rows(space, &na.points, &nb.points, dists);
+                for (pi, &p) in na.points.iter().enumerate() {
+                    let row = &dists[pi * nb.points.len()..(pi + 1) * nb.points.len()];
+                    for (&q, &d) in nb.points.iter().zip(row) {
+                        if d <= tau {
                             out.push((p.min(q), p.max(q)));
                         }
                     }
@@ -88,25 +109,25 @@ fn dual(
             }
         }
         (Some((a1, a2)), None) => {
-            dual(space, tree, a1, b, tau, out);
-            dual(space, tree, a2, b, tau, out);
+            dual(space, tree, a1, b, tau, out, dists);
+            dual(space, tree, a2, b, tau, out, dists);
         }
         (None, Some((b1, b2))) => {
-            dual(space, tree, a, b1, tau, out);
-            dual(space, tree, a, b2, tau, out);
+            dual(space, tree, a, b1, tau, out, dists);
+            dual(space, tree, a, b2, tau, out, dists);
         }
         (Some((a1, a2)), Some((b1, b2))) => {
             if a == b {
                 // Self pair: three sub-problems, not four.
-                dual(space, tree, a1, a1, tau, out);
-                dual(space, tree, a2, a2, tau, out);
-                dual(space, tree, a1, a2, tau, out);
+                dual(space, tree, a1, a1, tau, out, dists);
+                dual(space, tree, a2, a2, tau, out, dists);
+                dual(space, tree, a1, a2, tau, out, dists);
             } else if na.radius >= nb.radius {
-                dual(space, tree, a1, b, tau, out);
-                dual(space, tree, a2, b, tau, out);
+                dual(space, tree, a1, b, tau, out, dists);
+                dual(space, tree, a2, b, tau, out, dists);
             } else {
-                dual(space, tree, a, b1, tau, out);
-                dual(space, tree, a, b2, tau, out);
+                dual(space, tree, a, b1, tau, out, dists);
+                dual(space, tree, a, b2, tau, out, dists);
             }
         }
     }

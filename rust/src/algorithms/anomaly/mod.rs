@@ -11,7 +11,7 @@
 //! 3. `found > threshold`                  → early exit: NOT an anomaly;
 //! 4. `possible < threshold`               → early exit: IS an anomaly.
 
-use crate::metrics::Space;
+use crate::metrics::{block, Space};
 use crate::tree::{MetricTree, NodeId};
 
 /// Parameters of the anomaly test.
@@ -64,6 +64,7 @@ pub fn tree_is_anomaly_vec(
 ) -> bool {
     let mut found = 0u64;
     let mut possible = tree.root_node().count as u64;
+    let mut dists: Vec<f64> = Vec::new();
     let verdict = recurse(
         space,
         tree,
@@ -73,6 +74,7 @@ pub fn tree_is_anomaly_vec(
         params,
         &mut found,
         &mut possible,
+        &mut dists,
     );
     match verdict {
         Some(v) => v,
@@ -93,6 +95,7 @@ fn recurse(
     params: &AnomalyParams,
     found: &mut u64,
     possible: &mut u64,
+    dists: &mut Vec<f64>,
 ) -> Option<bool> {
     let node = tree.node(node_id);
     let d_pivot = dist_vec(space, qrow, q_sq, &node.pivot, node.pivot_sq);
@@ -116,6 +119,25 @@ fn recurse(
 
     match node.children {
         None => {
+            let leaf = node.points.len() as u64;
+            if *found + leaf < params.threshold
+                && *possible >= leaf
+                && *possible - leaf >= params.threshold
+            {
+                // Neither rule 3 nor rule 4 can trigger inside this leaf
+                // no matter how its points fall, so the scalar scan would
+                // visit every point — the blocked kernel is safe and its
+                // bulk accounting matches the pointwise count exactly.
+                block::dists_to_vec(space, &node.points, qrow, q_sq, dists);
+                for &d in dists.iter() {
+                    if d <= params.radius {
+                        *found += 1;
+                    } else {
+                        *possible -= 1;
+                    }
+                }
+                return None;
+            }
             for &p in &node.points {
                 let d = space.dist_to_vec(p as usize, qrow, q_sq);
                 if d <= params.radius {
@@ -139,10 +161,12 @@ fn recurse(
             let da = dist_vec_uncounted(space, qrow, q_sq, &na.pivot, na.pivot_sq);
             let db = dist_vec_uncounted(space, qrow, q_sq, &nb.pivot, nb.pivot_sq);
             let (first, second) = if da <= db { (a, b) } else { (b, a) };
-            if let Some(v) = recurse(space, tree, first, qrow, q_sq, params, found, possible) {
+            if let Some(v) =
+                recurse(space, tree, first, qrow, q_sq, params, found, possible, dists)
+            {
                 return Some(v);
             }
-            recurse(space, tree, second, qrow, q_sq, params, found, possible)
+            recurse(space, tree, second, qrow, q_sq, params, found, possible, dists)
         }
     }
 }

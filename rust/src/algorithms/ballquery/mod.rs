@@ -16,7 +16,7 @@
 //! tree would need Σx² per dimension; we expose total variance (trace of
 //! the covariance), which is what the distortion-style consumers need.
 
-use crate::metrics::{dense_dot, Space};
+use crate::metrics::{block, dense_dot, Space};
 use crate::tree::{MetricTree, NodeId};
 
 /// Exact statistics of the points inside a query ball.
@@ -50,12 +50,22 @@ pub fn naive_ball_stats(space: &Space, center: &[f32], radius: f64) -> BallStats
         sumsq: 0.0,
         whole_nodes: 0,
     };
-    for p in 0..space.n() {
-        if space.dist_to_vec(p, center, c_sq) <= radius {
-            acc.count += 1;
-            space.accumulate(p, &mut acc.sum);
-            acc.sumsq += space.data.sqnorm(p);
+    // Streamed through the blocked kernel in fixed chunks (O(chunk)
+    // extra memory, identical distances and counts to the pointwise scan).
+    let mut dists: Vec<f64> = Vec::new();
+    let mut lo = 0usize;
+    while lo < space.n() {
+        let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        block::dists_range_to_vec(space, lo..hi, center, c_sq, &mut dists);
+        for (off, &d) in dists.iter().enumerate() {
+            if d <= radius {
+                let p = lo + off;
+                acc.count += 1;
+                space.accumulate(p, &mut acc.sum);
+                acc.sumsq += space.data.sqnorm(p);
+            }
         }
+        lo = hi;
     }
     finish(acc, space.dist_count() - before)
 }
@@ -75,10 +85,13 @@ pub fn tree_ball_stats(
         sumsq: 0.0,
         whole_nodes: 0,
     };
-    recurse(space, tree, tree.root, center, c_sq, radius, &mut acc);
+    // Leaf-scan scratch, reused across every boundary leaf of the query.
+    let mut dists: Vec<f64> = Vec::new();
+    recurse(space, tree, tree.root, center, c_sq, radius, &mut acc, &mut dists);
     finish(acc, space.dist_count() - before)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn recurse(
     space: &Space,
     tree: &MetricTree,
@@ -87,6 +100,7 @@ fn recurse(
     c_sq: f64,
     radius: f64,
     acc: &mut Acc,
+    dists: &mut Vec<f64>,
 ) {
     let node = tree.node(id);
     space.count_bulk(1);
@@ -108,12 +122,15 @@ fn recurse(
     }
     match node.children {
         Some((a, b)) => {
-            recurse(space, tree, a, center, c_sq, radius, acc);
-            recurse(space, tree, b, center, c_sq, radius, acc);
+            recurse(space, tree, a, center, c_sq, radius, acc, dists);
+            recurse(space, tree, b, center, c_sq, radius, acc, dists);
         }
         None => {
-            for &p in &node.points {
-                if space.dist_to_vec(p as usize, center, c_sq) <= radius {
+            // Boundary leaf: blocked kernel over the whole point list
+            // (bit-identical to the pointwise scan, counted the same).
+            block::dists_to_vec(space, &node.points, center, c_sq, dists);
+            for (&p, &d) in node.points.iter().zip(dists.iter()) {
+                if d <= radius {
                     acc.count += 1;
                     space.accumulate(p as usize, &mut acc.sum);
                     acc.sumsq += space.data.sqnorm(p as usize);

@@ -27,7 +27,7 @@ mod init;
 
 pub use init::{anchors_init, anchors_init_ex, random_init, Init};
 
-use crate::metrics::{dense_dot, Space};
+use crate::metrics::{block, dense_dot, Space};
 use crate::parallel::{Executor, Parallelism};
 use crate::runtime::BatchDistanceEngine;
 use crate::tree::{MetricTree, Node, NodeId};
@@ -136,9 +136,11 @@ fn update_centroids(centroids: &mut [Vec<f32>], acc: &Accum) -> f64 {
 // ---------------------------------------------------------------------
 
 /// One naive assignment pass: every point against every centroid
-/// (R·K counted distances). Fans out over fixed [`ASSIGN_CHUNK`]-sized
-/// point chunks, each filling a private accumulator; partials merge in
-/// chunk order, so the pass is bit-identical at every thread count.
+/// (R·K counted distances) through the blocked kernel, tile by tile.
+/// Fans out over fixed [`ASSIGN_CHUNK`]-sized point chunks, each filling
+/// a private accumulator; partials merge in chunk order, so the pass is
+/// bit-identical at every thread count (and to the pointwise scan the
+/// kernel replaces — see [`crate::metrics::block`]).
 fn naive_pass(
     space: &Space,
     centroids: &[Vec<f32>],
@@ -148,21 +150,29 @@ fn naive_pass(
 ) {
     let k = centroids.len();
     let d = space.dim();
+    let ident: Vec<u32> = (0..k as u32).collect();
     let partials = exec.map_chunks(space.n(), ASSIGN_CHUNK, |range| {
         let mut part = Accum::new(k, d);
-        for p in range {
-            let mut best = f64::INFINITY;
-            let mut best_c = 0usize;
-            for ci in 0..k {
-                let dist = space.dist_to_vec(p, &centroids[ci], c_sq[ci]);
-                if dist < best {
-                    best = dist;
-                    best_c = ci;
+        let mut dists: Vec<f64> = Vec::new();
+        let mut lo = range.start;
+        while lo < range.end {
+            let hi = (lo + block::TILE).min(range.end);
+            block::dists_range_to_centers(space, lo..hi, &ident, centroids, c_sq, &mut dists);
+            for (ti, p) in (lo..hi).enumerate() {
+                let row = &dists[ti * k..(ti + 1) * k];
+                let mut best = f64::INFINITY;
+                let mut best_c = 0usize;
+                for (ci, &dist) in row.iter().enumerate() {
+                    if dist < best {
+                        best = dist;
+                        best_c = ci;
+                    }
                 }
+                part.counts[best_c] += 1;
+                space.accumulate(p, &mut part.sums[best_c]);
+                part.distortion += best * best;
             }
-            part.counts[best_c] += 1;
-            space.accumulate(p, &mut part.sums[best_c]);
-            part.distortion += best * best;
+            lo = hi;
         }
         part
     });
@@ -209,7 +219,9 @@ fn naive_pass_xla(
 }
 
 /// Naive Lloyd's algorithm: `max_iters` full passes (or until centroids
-/// stop moving).
+/// stop moving). Builds a fresh executor from [`KmeansOpts::parallelism`];
+/// callers that hold a long-lived pool (the engine facade) use
+/// [`naive_lloyd_ex`].
 pub fn naive_lloyd(
     space: &Space,
     init: Init,
@@ -217,8 +229,20 @@ pub fn naive_lloyd(
     max_iters: usize,
     opts: &KmeansOpts,
 ) -> KmeansResult {
-    let exec = Executor::new(opts.parallelism);
-    let mut centroids = init.centroids_ex(space, k, opts.seed, &exec);
+    naive_lloyd_ex(space, init, k, max_iters, opts, &Executor::new(opts.parallelism))
+}
+
+/// [`naive_lloyd`] on an explicit executor, so repeated runs share one
+/// persistent worker pool instead of re-resolving `opts.parallelism`.
+pub fn naive_lloyd_ex(
+    space: &Space,
+    init: Init,
+    k: usize,
+    max_iters: usize,
+    opts: &KmeansOpts,
+    exec: &Executor,
+) -> KmeansResult {
+    let mut centroids = init.centroids_ex(space, k, opts.seed, exec);
     let before = space.dist_count();
     let d = space.dim();
     let mut iterations = 0;
@@ -228,7 +252,7 @@ pub fn naive_lloyd(
         let mut acc = Accum::new(centroids.len(), d);
         match (&opts.engine, space.data.is_sparse()) {
             (Some(engine), false) => naive_pass_xla(space, &centroids, &mut acc, engine),
-            _ => naive_pass(space, &centroids, &c_sq, &mut acc, &exec),
+            _ => naive_pass(space, &centroids, &c_sq, &mut acc, exec),
         }
         iterations += 1;
         distortion = acc.distortion;
@@ -261,10 +285,13 @@ struct StepCtx<'a> {
 /// Allocation-free candidate storage for the recursion: candidate sets
 /// live as stacked ranges of one growable vec (each node pushes its kept
 /// set, recurses, then truncates) — the hot loop performs zero heap
-/// allocations after the first pass (EXPERIMENTS.md §Perf).
+/// allocations after the first pass (docs/EXPERIMENTS.md §Perf).
 struct StepScratch {
     cands: Vec<u32>,
     dists: Vec<f64>,
+    /// Blocked-kernel output buffer for leaf assignment (row-major
+    /// points × candidates), reused across every leaf of the pass.
+    block: Vec<f64>,
 }
 
 /// Step 1 of the paper's KmeansStep: prune the candidate range `lo..hi`
@@ -342,7 +369,10 @@ fn kmeans_step(
             kmeans_step(ctx, a, new_lo, new_hi, scratch, acc);
             kmeans_step(ctx, b, new_lo, new_hi, scratch, acc);
         }
-        None => leaf_assign(ctx, node_id, &scratch.cands[new_lo..new_hi], acc),
+        None => {
+            let StepScratch { cands, block, .. } = scratch;
+            leaf_assign(ctx, node_id, &cands[new_lo..new_hi], acc, block);
+        }
     }
     scratch.cands.truncate(new_lo);
 }
@@ -407,7 +437,10 @@ fn collect_step_tasks(
                 collect_step_tasks(ctx, b, new_lo, new_hi, depth - 1, scratch, acc, tasks);
             }
         }
-        None => leaf_assign(ctx, node_id, &scratch.cands[new_lo..new_hi], acc),
+        None => {
+            let StepScratch { cands, block, .. } = scratch;
+            leaf_assign(ctx, node_id, &cands[new_lo..new_hi], acc, block);
+        }
     }
     scratch.cands.truncate(new_lo);
 }
@@ -417,7 +450,11 @@ fn collect_step_tasks(
 fn run_step_task(ctx: &StepCtx, task: &StepTask) -> Accum {
     let mut acc = Accum::new(ctx.centroids.len(), ctx.space.dim());
     let n0 = task.cands.len();
-    let mut scratch = StepScratch { cands: task.cands.clone(), dists: vec![0.0; n0] };
+    let mut scratch = StepScratch {
+        cands: task.cands.clone(),
+        dists: vec![0.0; n0],
+        block: Vec::new(),
+    };
     let (a, b) = task.children;
     kmeans_step(ctx, a, 0, n0, &mut scratch, &mut acc);
     kmeans_step(ctx, b, 0, n0, &mut scratch, &mut acc);
@@ -426,9 +463,16 @@ fn run_step_task(ctx: &StepCtx, task: &StepTask) -> Accum {
 }
 
 /// Assign the points of a leaf among the surviving candidates.
-fn leaf_assign(ctx: &StepCtx, node_id: NodeId, cands: &[u32], acc: &mut Accum) {
+fn leaf_assign(
+    ctx: &StepCtx,
+    node_id: NodeId,
+    cands: &[u32],
+    acc: &mut Accum,
+    dists: &mut Vec<f64>,
+) {
     let node = ctx.tree.node(node_id);
-    // Dense data + engine + big enough block → XLA tile; else scalar.
+    // Dense data + engine + big enough block → XLA tile; else the
+    // blocked scalar kernel (bit-identical to the pointwise scan).
     if let (Some(engine), false) = (ctx.engine, ctx.space.data.is_sparse()) {
         if node.points.len() * cands.len() >= engine.min_block() {
             let cents: Vec<Vec<f32>> = cands
@@ -455,12 +499,11 @@ fn leaf_assign(ctx: &StepCtx, node_id: NodeId, cands: &[u32], acc: &mut Accum) {
             return;
         }
     }
-    for &p in &node.points {
+    block::dists_to_centers(ctx.space, &node.points, cands, ctx.centroids, ctx.c_sq, dists);
+    for (pi, &p) in node.points.iter().enumerate() {
+        let row = &dists[pi * cands.len()..(pi + 1) * cands.len()];
         let (mut best, mut best_c) = (f64::INFINITY, 0u32);
-        for &c in cands {
-            let d = ctx
-                .space
-                .dist_to_vec(p as usize, &ctx.centroids[c as usize], ctx.c_sq[c as usize]);
+        for (&c, &d) in cands.iter().zip(row) {
             if d < best {
                 best = d;
                 best_c = c;
@@ -473,7 +516,9 @@ fn leaf_assign(ctx: &StepCtx, node_id: NodeId, cands: &[u32], acc: &mut Accum) {
     }
 }
 
-/// Tree-accelerated Lloyd's algorithm.
+/// Tree-accelerated Lloyd's algorithm. Builds a fresh executor from
+/// [`KmeansOpts::parallelism`]; callers that hold a long-lived pool use
+/// [`tree_lloyd_ex`].
 pub fn tree_lloyd(
     space: &Space,
     tree: &MetricTree,
@@ -482,13 +527,28 @@ pub fn tree_lloyd(
     max_iters: usize,
     opts: &KmeansOpts,
 ) -> KmeansResult {
-    let exec = Executor::new(opts.parallelism);
-    let mut centroids = init.centroids_ex(space, k, opts.seed, &exec);
+    tree_lloyd_ex(space, tree, init, k, max_iters, opts, &Executor::new(opts.parallelism))
+}
+
+/// [`tree_lloyd`] on an explicit executor, so every iteration's frontier
+/// fan-out reuses one persistent worker pool.
+#[allow(clippy::too_many_arguments)]
+pub fn tree_lloyd_ex(
+    space: &Space,
+    tree: &MetricTree,
+    init: Init,
+    k: usize,
+    max_iters: usize,
+    opts: &KmeansOpts,
+    exec: &Executor,
+) -> KmeansResult {
+    let mut centroids = init.centroids_ex(space, k, opts.seed, exec);
     let before = space.dist_count();
     let d = space.dim();
     let mut scratch = StepScratch {
         cands: (0..centroids.len() as u32).collect(),
         dists: vec![0.0; centroids.len()],
+        block: Vec::new(),
     };
     let n_cands = scratch.cands.len();
     let mut iterations = 0;

@@ -3,7 +3,7 @@
 //! datapoints in a metric tree"). Also serves as the oracle primitive for
 //! the MST extension and several property tests.
 
-use crate::metrics::Space;
+use crate::metrics::{block, Space};
 use crate::tree::{MetricTree, NodeId};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -15,15 +15,33 @@ pub struct Neighbor {
     pub dist: f64,
 }
 
-/// Naive k-NN: scan everything (R counted distances).
+/// Naive k-NN: scan everything (R counted distances) through the blocked
+/// leaf-scan kernel, streamed in fixed chunks (O(chunk) extra memory).
+/// The skipped point splits the scan into two ranges, so its distance is
+/// neither computed nor counted — exactly the pointwise behavior.
 pub fn naive_knn(space: &Space, qrow: &[f32], q_sq: f64, k: usize, skip: Option<u32>) -> Vec<Neighbor> {
     let mut heap: BinaryHeap<HeapItem> = BinaryHeap::new(); // max-heap by dist
-    for p in 0..space.n() {
-        if skip == Some(p as u32) {
-            continue;
+    let n = space.n();
+    let segments = match skip {
+        // Clamped so an out-of-range skip degrades to a full scan
+        // (matching the old per-point filter) instead of panicking.
+        Some(s) => {
+            let s = (s as usize).min(n);
+            [0..s, (s + 1).min(n)..n]
         }
-        let d = space.dist_to_vec(p, qrow, q_sq);
-        push_bounded(&mut heap, k, p as u32, d);
+        None => [0..n, n..n],
+    };
+    let mut dists: Vec<f64> = Vec::new();
+    for seg in segments {
+        let mut lo = seg.start;
+        while lo < seg.end {
+            let hi = (lo + block::SCAN_CHUNK).min(seg.end);
+            block::dists_range_to_vec(space, lo..hi, qrow, q_sq, &mut dists);
+            for (off, &d) in dists.iter().enumerate() {
+                push_bounded(&mut heap, k, (lo + off) as u32, d);
+            }
+            lo = hi;
+        }
     }
     into_sorted(heap)
 }
@@ -40,6 +58,10 @@ pub fn tree_knn(
     let mut result: BinaryHeap<HeapItem> = BinaryHeap::new();
     // Min-heap on the lower bound of each node's distance to q.
     let mut frontier: BinaryHeap<Reverse<(OrdF64, NodeId)>> = BinaryHeap::new();
+    // Scratch reused across leaf scans: the candidate ids of the current
+    // leaf (minus `skip`) and their blocked-kernel distances.
+    let mut ids: Vec<u32> = Vec::new();
+    let mut dists: Vec<f64> = Vec::new();
     frontier.push(Reverse((OrdF64(node_lower_bound(space, tree, tree.root, qrow, q_sq)), tree.root)));
     while let Some(Reverse((OrdF64(lb), node_id))) = frontier.pop() {
         if result.len() == k {
@@ -52,11 +74,10 @@ pub fn tree_knn(
         let node = tree.node(node_id);
         match node.children {
             None => {
-                for &p in &node.points {
-                    if skip == Some(p) {
-                        continue;
-                    }
-                    let d = space.dist_to_vec(p as usize, qrow, q_sq);
+                ids.clear();
+                ids.extend(node.points.iter().copied().filter(|&p| skip != Some(p)));
+                block::dists_to_vec(space, &ids, qrow, q_sq, &mut dists);
+                for (&p, &d) in ids.iter().zip(&dists) {
                     push_bounded(&mut result, k, p, d);
                 }
             }

@@ -103,7 +103,9 @@ fn local_2means(
     (centers, dist)
 }
 
-/// Run X-means between `k_min` and `k_max` clusters.
+/// Run X-means between `k_min` and `k_max` clusters. Builds a fresh
+/// executor from [`KmeansOpts::parallelism`]; callers that hold a
+/// long-lived pool (the engine facade) use [`xmeans_ex`].
 pub fn xmeans(
     space: &Space,
     tree: &MetricTree,
@@ -111,17 +113,29 @@ pub fn xmeans(
     k_max: usize,
     opts: &KmeansOpts,
 ) -> XmeansResult {
+    xmeans_ex(space, tree, k_min, k_max, opts, &Executor::new(opts.parallelism))
+}
+
+/// [`xmeans`] on an explicit executor: the global improve-params passes
+/// (via [`kmeans::tree_lloyd_ex`]) and the ownership pass all reuse one
+/// persistent worker pool across every improvement round.
+pub fn xmeans_ex(
+    space: &Space,
+    tree: &MetricTree,
+    k_min: usize,
+    k_max: usize,
+    opts: &KmeansOpts,
+    exec: &Executor,
+) -> XmeansResult {
     assert!(k_min >= 1 && k_min <= k_max);
     let before = space.dist_count();
     let d = space.dim();
-    // The global improve-params passes parallelize inside tree_lloyd;
-    // the ownership pass below fans out over point chunks here.
-    let exec = Executor::new(opts.parallelism);
     let mut rng = Rng::new(opts.seed ^ 0x9E3779B9);
     let mut history = Vec::new();
 
     // Improve-params at k_min.
-    let mut result = kmeans::tree_lloyd(space, tree, kmeans::Init::Anchors, k_min, 10, opts);
+    let mut result =
+        kmeans::tree_lloyd_ex(space, tree, kmeans::Init::Anchors, k_min, 10, opts, exec);
     let mut centroids = result.centroids.clone();
     history.push((centroids.len(), bic(result.distortion, space.n(), centroids.len(), d)));
 
@@ -130,7 +144,7 @@ pub fn xmeans(
             break;
         }
         // Ownership of each point (needed for local split tests).
-        let labels = kmeans::assign_labels_ex(space, &centroids, &exec);
+        let labels = kmeans::assign_labels_ex(space, &centroids, exec);
         space.count_bulk((space.n() * centroids.len()) as u64);
         let mut owned: Vec<Vec<u32>> = vec![Vec::new(); centroids.len()];
         for (p, &l) in labels.iter().enumerate() {
@@ -179,7 +193,15 @@ pub fn xmeans(
         }
         // Improve-params at the new k (global, tree-accelerated, exact).
         let k = next_centroids.len();
-        result = kmeans::tree_lloyd(space, tree, kmeans::Init::Given(next_centroids), k, 8, opts);
+        result = kmeans::tree_lloyd_ex(
+            space,
+            tree,
+            kmeans::Init::Given(next_centroids),
+            k,
+            8,
+            opts,
+            exec,
+        );
         centroids = result.centroids.clone();
         history.push((k, bic(result.distortion, space.n(), k, d)));
     }

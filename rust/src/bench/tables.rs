@@ -2,13 +2,13 @@
 //!
 //! Each function returns structured rows AND knows how to print itself in
 //! the paper's layout, so the CLI (`anchors-hierarchy table2 ...`), the
-//! bench binaries, and EXPERIMENTS.md all share one implementation.
+//! bench binaries, and docs/EXPERIMENTS.md all share one implementation.
 //!
 //! Scaling: the paper's full row counts (Table 1) are expensive on a
 //! single machine, so every experiment takes a `scale` factor. Speedups
 //! are *ratios* of distance counts, so the qualitative shape (who wins,
 //! roughly by how much, Reuters' anti-speedup) is preserved at reduced
-//! scale; EXPERIMENTS.md records the scale used for each reported run.
+//! scale; docs/EXPERIMENTS.md records the scale used for each reported run.
 
 use crate::algorithms::{allpairs, anomaly, kmeans};
 use crate::dataset::{DatasetKind, DatasetSpec};

@@ -29,7 +29,7 @@ pub mod server;
 use crate::dataset::DatasetSpec;
 use crate::engine::{self, IndexBuilder, Query, QueryResult};
 use crate::metrics::Space;
-use crate::parallel::Parallelism;
+use crate::parallel::{Executor, Parallelism};
 use crate::runtime::BatchDistanceEngine;
 use crate::tree::middle_out::{self, MiddleOutConfig};
 use crate::tree::MetricTree;
@@ -150,6 +150,7 @@ impl Coordinator {
         capacity: usize,
         engine: Option<Arc<BatchDistanceEngine>>,
     ) -> Coordinator {
+        let parallelism = Parallelism::from_env().unwrap_or(Parallelism::Serial);
         let inner = Arc::new(Inner {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
@@ -160,7 +161,7 @@ impl Coordinator {
             metrics: Metrics::default(),
             shutdown: AtomicBool::new(false),
             engine,
-            parallelism: Parallelism::from_env().unwrap_or(Parallelism::Serial),
+            parallelism,
             next_id: AtomicU64::new(1),
         });
         let workers = (0..n_workers.max(1))
@@ -254,6 +255,13 @@ impl Drop for Coordinator {
 }
 
 fn worker_loop(inner: Arc<Inner>) {
+    // One executor (and persistent worker pool) per coordinator worker:
+    // repeated jobs on this worker reuse its parked threads, while
+    // concurrent jobs on other workers keep fully independent pools (a
+    // single shared pool would serialize every job's parallel passes on
+    // the broadcast channel). With the default serial budget this is
+    // poolless and free.
+    let exec = Executor::new(inner.parallelism);
     loop {
         let job = {
             let mut queue = inner.queue.lock().unwrap();
@@ -270,7 +278,7 @@ fn worker_loop(inner: Arc<Inner>) {
         let Some((id, spec)) = job else { return };
         set_state(&inner, id, JobState::Running);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_job(&inner, id, &spec)
+            run_job(&inner, id, &spec, &exec)
         }));
         match outcome {
             Ok(Ok(result)) => {
@@ -324,18 +332,13 @@ fn get_dataset(inner: &Inner, spec: &DatasetSpec) -> Arc<CachedDataset> {
     map.entry(key).or_insert(built).clone()
 }
 
-fn get_tree(
-    ds: &CachedDataset,
-    rmin: usize,
-    seed: u64,
-    parallelism: Parallelism,
-) -> Arc<MetricTree> {
+fn get_tree(ds: &CachedDataset, rmin: usize, seed: u64, exec: &Executor) -> Arc<MetricTree> {
     let mut trees = ds.trees.lock().unwrap();
     if let Some(t) = trees.get(&rmin) {
         return t.clone();
     }
-    let cfg = MiddleOutConfig { rmin, seed, parallelism, ..Default::default() };
-    let tree = Arc::new(middle_out::build(&ds.space, &cfg));
+    let cfg = MiddleOutConfig { rmin, seed, ..Default::default() };
+    let tree = Arc::new(middle_out::build_ex(&ds.space, &cfg, exec));
     trees.insert(rmin, tree.clone());
     tree
 }
@@ -343,10 +346,15 @@ fn get_tree(
 /// Assemble the per-job [`engine::Index`] view over the cached parts.
 /// Tree queries get the cached tree (built under the dataset lock on
 /// first use); naive queries get a tree-less index so they never pay
-/// for a build.
-fn get_index(inner: &Inner, ds: &CachedDataset, spec: &JobSpec) -> engine::Index {
+/// for a build. Both reuse the calling worker's executor/pool.
+fn get_index(
+    inner: &Inner,
+    ds: &CachedDataset,
+    spec: &JobSpec,
+    exec: &Executor,
+) -> engine::Index {
     if spec.query.needs_tree() {
-        let tree = get_tree(ds, spec.rmin, spec.dataset.seed, inner.parallelism);
+        let tree = get_tree(ds, spec.rmin, spec.dataset.seed, exec);
         engine::Index::from_parts(
             Arc::clone(&ds.space),
             tree,
@@ -354,17 +362,20 @@ fn get_index(inner: &Inner, ds: &CachedDataset, spec: &JobSpec) -> engine::Index
             spec.dataset.seed,
             spec.rmin,
         )
-        .with_parallelism(inner.parallelism)
+        .with_executor(exec.clone())
     } else {
+        // (No .parallelism() call: with_executor supersedes both the
+        // budget and the executor, making `exec` the single source of
+        // truth for this job's concurrency.)
         IndexBuilder::new(spec.dataset.clone())
             .rmin(spec.rmin)
             .batch_engine(inner.engine.clone())
-            .parallelism(inner.parallelism)
             .build_on(Arc::clone(&ds.space))
+            .with_executor(exec.clone())
     }
 }
 
-fn run_job(inner: &Inner, id: JobId, spec: &JobSpec) -> Result<JobResult, String> {
+fn run_job(inner: &Inner, id: JobId, spec: &JobSpec, exec: &Executor) -> Result<JobResult, String> {
     let ds = get_dataset(inner, &spec.dataset);
     // Serialize jobs on this dataset: exact per-job distance accounting.
     // A panicking query (worker catches it below) unwinds while holding
@@ -374,7 +385,7 @@ fn run_job(inner: &Inner, id: JobId, spec: &JobSpec) -> Result<JobResult, String
     let _guard = ds.run_lock.lock().unwrap_or_else(|e| e.into_inner());
     let start = Instant::now();
     let before = ds.space.dist_count();
-    let index = get_index(inner, &ds, spec);
+    let index = get_index(inner, &ds, spec, exec);
     let output = index.run(&spec.query);
     Ok(JobResult {
         id,

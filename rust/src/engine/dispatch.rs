@@ -18,18 +18,18 @@ impl Index {
     /// descriptive message; the coordinator turns panics into
     /// `JobState::Failed`.
     pub fn run(&self, query: &Query) -> QueryResult {
-        self.run_with(query, self.parallelism())
+        self.run_with(query, self.executor())
     }
 
-    /// [`Index::run`] with an explicit worker budget for the query's
-    /// internal passes. Results are identical for every budget (the
-    /// determinism contract of [`crate::parallel`]); `run_batch` uses
-    /// this to keep per-query work serial when the batch itself already
-    /// saturates the workers.
-    fn run_with(&self, query: &Query, parallelism: Parallelism) -> QueryResult {
+    /// [`Index::run`] with an explicit executor for the query's internal
+    /// passes. Results are identical for every budget (the determinism
+    /// contract of [`crate::parallel`]); `run_batch` uses this to keep
+    /// per-query work serial when the batch itself already saturates the
+    /// workers, while single queries reuse the index's persistent pool.
+    fn run_with(&self, query: &Query, exec: &Executor) -> QueryResult {
         match query {
-            Query::Kmeans(q) => self.run_kmeans(q, parallelism),
-            Query::Xmeans(q) => self.run_xmeans(q, parallelism),
+            Query::Kmeans(q) => self.run_kmeans(q, exec),
+            Query::Xmeans(q) => self.run_xmeans(q, exec),
             Query::Anomaly(q) => self.run_anomaly(q),
             Query::AllPairs(q) => self.run_allpairs(q),
             Query::Ball(q) => self.run_ball(q),
@@ -49,42 +49,64 @@ impl Index {
     /// keeps [`Index::dist_count`] exact under the concurrency.
     pub fn run_batch(&self, queries: &[Query]) -> Vec<QueryResult> {
         if queries.iter().any(|q| q.needs_tree()) {
-            self.tree(); // build once, not under the workers' lock races
+            // Build once, before the fan-out. Load-bearing beyond
+            // performance: tasks inside a pool epoch must never reach a
+            // lazy tree *build* (see the invariant on `Index::tree`).
+            self.tree();
         }
         // Divide the budget: one worker per query first, and any spare
         // threads go to each query's internal passes (a single-query
         // "batch" gets the whole budget inside the query). Results are
         // the budget-independent ones either way.
+        if queries.len() == 1 {
+            // A single-query "batch" gets the whole budget inside the
+            // query, on the index's persistent pool.
+            return vec![self.run(&queries[0])];
+        }
         let budget = self.parallelism().threads();
         let workers = budget.min(queries.len()).max(1);
-        let per_query = match budget / workers {
-            0 | 1 => Parallelism::Serial,
-            spare => Parallelism::Fixed(spare),
+        let spare = budget / workers;
+        // When the batch saturates the budget each query runs serial
+        // inside; leftover budget goes to a scoped per-query executor.
+        // Its fan-outs never broadcast (pool epochs don't nest — the
+        // in-task guard is deliberately global rather than per-pool, so
+        // cross-pool broadcast cycles can't deadlock), which makes one
+        // shared instance safe; the cost is that this corner — batches
+        // smaller than half the budget — still pays scoped spawns per
+        // pass, exactly the pre-pool behavior.
+        let per_query = if spare > 1 {
+            Executor::new(Parallelism::Fixed(spare))
+        } else {
+            Executor::serial()
         };
-        let exec = Executor::new(self.parallelism());
-        exec.map_tasks(queries.len(), |i| self.run_with(&queries[i], per_query))
+        self.executor()
+            .map_tasks(queries.len(), |i| self.run_with(&queries[i], &per_query))
     }
 
-    fn kmeans_opts(&self, parallelism: Parallelism) -> kmeans::KmeansOpts {
+    fn kmeans_opts(&self) -> kmeans::KmeansOpts {
         kmeans::KmeansOpts {
             engine: self.batch_engine().cloned(),
             seed: self.seed(),
-            parallelism,
+            // The *_ex entry points below take the executor explicitly
+            // and never read this field; it only matters if these opts
+            // are forwarded to a non-_ex entry point, where the index's
+            // own budget is the right default.
+            parallelism: self.parallelism(),
             ..Default::default()
         }
     }
 
-    fn run_kmeans(&self, q: &KmeansQuery, parallelism: Parallelism) -> QueryResult {
+    fn run_kmeans(&self, q: &KmeansQuery, exec: &Executor) -> QueryResult {
         let init = match q.init {
             InitKind::Random => kmeans::Init::Random,
             InitKind::Anchors => kmeans::Init::Anchors,
         };
         let (k, iters) = (q.k.max(1), q.iters.max(1));
-        let opts = self.kmeans_opts(parallelism);
+        let opts = self.kmeans_opts();
         let r = if q.use_tree {
-            kmeans::tree_lloyd(self.space(), &self.tree(), init, k, iters, &opts)
+            kmeans::tree_lloyd_ex(self.space(), &self.tree(), init, k, iters, &opts, exec)
         } else {
-            kmeans::naive_lloyd(self.space(), init, k, iters, &opts)
+            kmeans::naive_lloyd_ex(self.space(), init, k, iters, &opts, exec)
         };
         QueryResult::Kmeans {
             centroids: r.centroids,
@@ -93,15 +115,16 @@ impl Index {
         }
     }
 
-    fn run_xmeans(&self, q: &XmeansQuery, parallelism: Parallelism) -> QueryResult {
+    fn run_xmeans(&self, q: &XmeansQuery, exec: &Executor) -> QueryResult {
         let k_min = q.k_min.max(1);
         let k_max = q.k_max.max(k_min);
-        let r = xmeans::xmeans(
+        let r = xmeans::xmeans_ex(
             self.space(),
             &self.tree(),
             k_min,
             k_max,
-            &self.kmeans_opts(parallelism),
+            &self.kmeans_opts(),
+            exec,
         );
         QueryResult::Xmeans {
             centroids: r.centroids,

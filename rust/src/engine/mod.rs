@@ -62,7 +62,7 @@ pub use query::{
 
 use crate::dataset::DatasetSpec;
 use crate::metrics::Space;
-use crate::parallel::Parallelism;
+use crate::parallel::{Executor, Parallelism};
 use crate::runtime::BatchDistanceEngine;
 use crate::tree::middle_out::{self, MiddleOutConfig};
 use crate::tree::{top_down, MetricTree};
@@ -181,6 +181,7 @@ impl IndexBuilder {
             exact_radii: self.exact_radii,
             batch_engine: self.batch_engine,
             seed,
+            executor: Executor::new(self.parallelism),
             parallelism: self.parallelism,
         }
     }
@@ -196,6 +197,10 @@ pub struct Index {
     exact_radii: bool,
     batch_engine: Option<Arc<BatchDistanceEngine>>,
     seed: u64,
+    /// The index's persistent worker pool: tree builds, the parallel
+    /// query passes and `run_batch` all fan out here, so repeated
+    /// queries never re-pay thread spawn/join.
+    executor: Executor,
     parallelism: Parallelism,
 }
 
@@ -211,6 +216,7 @@ impl Index {
         seed: u64,
         rmin: usize,
     ) -> Index {
+        let parallelism = Parallelism::default();
         Index {
             space,
             tree: Mutex::new(Some(tree)),
@@ -219,16 +225,33 @@ impl Index {
             exact_radii: false,
             batch_engine,
             seed,
-            parallelism: Parallelism::default(),
+            executor: Executor::new(parallelism),
+            parallelism,
         }
     }
 
     /// Replace the worker budget (used by the coordinator, which keeps
     /// per-job work serial by default so its own worker pool provides
-    /// the concurrency).
+    /// the concurrency). This also replaces the executor — prefer
+    /// [`Index::with_executor`] when a long-lived pool already exists.
     pub fn with_parallelism(mut self, parallelism: Parallelism) -> Index {
         self.parallelism = parallelism;
+        self.executor = Executor::new(parallelism);
         self
+    }
+
+    /// Adopt an existing executor (and its persistent worker pool), so
+    /// many indexes — e.g. every job the coordinator assembles over a
+    /// cached dataset — share one set of parked worker threads.
+    pub fn with_executor(mut self, executor: Executor) -> Index {
+        self.parallelism = Parallelism::Fixed(executor.threads());
+        self.executor = executor;
+        self
+    }
+
+    /// The executor queries and builds fan out on.
+    pub fn executor(&self) -> &Executor {
+        &self.executor
     }
 
     /// The worker budget builds and batches run with.
@@ -246,13 +269,28 @@ impl Index {
     }
 
     /// The metric tree, building it on first use.
+    ///
+    /// Lock-ordering invariant: the build runs under the tree mutex and
+    /// broadcasts on this index's worker pool, so it must never be
+    /// *reached* from inside a pool epoch — a task blocking on this
+    /// mutex would keep its epoch open while the builder waits for the
+    /// broadcast channel. [`Index::run_batch`] upholds this by
+    /// materializing the tree before fanning out (and
+    /// [`crate::engine::Query::needs_tree`] covers every dispatch path
+    /// that touches the tree); the debug assertion catches any future
+    /// path that breaks the invariant.
     pub fn tree(&self) -> Arc<MetricTree> {
         let mut guard = self.tree.lock().unwrap();
         if let Some(tree) = guard.as_ref() {
             return Arc::clone(tree);
         }
+        debug_assert!(
+            !crate::parallel::in_pool_task(),
+            "lazy tree build reached from inside a pool epoch — pre-build \
+             the tree before fanning out (see Index::run_batch)"
+        );
         let tree = Arc::new(match self.strategy {
-            TreeStrategy::MiddleOut => middle_out::build(
+            TreeStrategy::MiddleOut => middle_out::build_ex(
                 &self.space,
                 &MiddleOutConfig {
                     rmin: self.rmin,
@@ -260,9 +298,10 @@ impl Index {
                     exact_radii: self.exact_radii,
                     parallelism: self.parallelism,
                 },
+                &self.executor,
             ),
             TreeStrategy::TopDown => {
-                top_down::build_par(&self.space, self.rmin, self.parallelism)
+                top_down::build_ex(&self.space, self.rmin, &self.executor)
             }
         });
         *guard = Some(Arc::clone(&tree));

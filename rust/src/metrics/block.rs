@@ -1,0 +1,430 @@
+//! Blocked distance kernels for leaf scans and assignment passes.
+//!
+//! Every algorithm family ends up in the same hot loop: "distances from a
+//! set of dataset rows to one or more targets". Point-at-a-time
+//! [`Space::dist_to_vec`] pays a counter increment and a metric dispatch
+//! per distance; these kernels hoist the dispatch out of the loop,
+//! account whole tiles at once through [`Space::count_bulk`], and write
+//! into a caller-owned scratch buffer so the scan loop that follows
+//! (heap pushes, threshold tests, arg-min selection) runs branch-free of
+//! the distance math. This is the metrics-level promotion of the scalar
+//! kernel that previously lived inside `runtime::BatchDistanceEngine`
+//! (which now delegates its non-XLA fallback to [`dist2_block`]), so the
+//! leaf scans of knn/ballquery/anomaly/allpairs and the k-means naive
+//! pass share one cache-friendly implementation instead of only the
+//! kmeans-via-XLA path enjoying it. Before/after throughput is recorded
+//! in `BENCH_hot_paths.json` (docs/EXPERIMENTS.md §Blocked kernels).
+//!
+//! ## Bit-identity contract
+//!
+//! Each element is computed by *exactly* the expression the scalar
+//! [`Space::dist_to_vec_uncounted`] / [`Space::dist_uncounted`] paths
+//! use (same cached squared norms, same [`dense_dot`] accumulation
+//! order, same `max(0)·sqrt` clamping), so swapping a scalar loop for a
+//! blocked kernel changes neither a single result bit nor the distance
+//! count — `tests/parallel_equivalence.rs` asserts both on dense and
+//! sparse data. That is what lets the tree algorithms adopt the kernels
+//! without perturbing the paper's Table-2 accounting.
+
+use super::{dense_dot, dense_l1, Metric, Space};
+use crate::data::Data;
+use std::ops::Range;
+
+/// Rows per accounting tile. Each tile is one `count_bulk` call and one
+/// metric dispatch; the tile's distances land contiguously in the output
+/// buffer while its rows are still warm in cache.
+pub const TILE: usize = 128;
+
+/// Rows per *streamed* chunk for full-dataset scans that consume
+/// distances as they go (naive knn / ball stats): big enough to
+/// amortize the kernel call, small enough that the `f64` buffer stays
+/// cache-resident instead of growing O(n).
+pub const SCAN_CHUNK: usize = 4096;
+
+/// Distances from each listed dataset row to a single dense query
+/// vector with precomputed squared norm — the leaf-scan shape of knn,
+/// ball queries and the anomaly sweep. Counted: `rows.len()` distances,
+/// accounted per tile. `out` is cleared and refilled (reuse it across
+/// leaves to stay allocation-free).
+pub fn dists_to_vec(space: &Space, rows: &[u32], q: &[f32], q_sq: f64, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(rows.len());
+    let mut lo = 0usize;
+    while lo < rows.len() {
+        let hi = (lo + TILE).min(rows.len());
+        let tile = &rows[lo..hi];
+        match (&space.data, space.metric) {
+            (Data::Dense(m), Metric::Euclidean) => {
+                for &p in tile {
+                    let i = p as usize;
+                    let d2 = m.sqnorm(i) + q_sq - 2.0 * dense_dot(m.row(i), q);
+                    out.push(d2.max(0.0).sqrt());
+                }
+            }
+            (Data::Dense(m), Metric::L1) => {
+                for &p in tile {
+                    out.push(dense_l1(m.row(p as usize), q));
+                }
+            }
+            (Data::Sparse(m), Metric::Euclidean) => {
+                for &p in tile {
+                    let i = p as usize;
+                    let d2 = m.sqnorm(i) + q_sq - 2.0 * m.dot_vec(i, q);
+                    out.push(d2.max(0.0).sqrt());
+                }
+            }
+            (Data::Sparse(_), Metric::L1) => unreachable!("rejected in Space::new"),
+        }
+        space.count_bulk((hi - lo) as u64);
+        lo = hi;
+    }
+}
+
+/// Distances from dataset rows to a candidate subset of centers — the
+/// leaf-assignment shape of the k-means tree pass. `cand` indexes into
+/// `centroids`/`c_sq`, so call sites pass their full center table plus
+/// the surviving candidate list without cloning center vectors. Output
+/// is row-major `rows.len() × cand.len()`; counted `rows·cand` per tile.
+pub fn dists_to_centers(
+    space: &Space,
+    rows: &[u32],
+    cand: &[u32],
+    centroids: &[Vec<f32>],
+    c_sq: &[f64],
+    out: &mut Vec<f64>,
+) {
+    fill_centers(space, rows.len(), |t| rows[t] as usize, cand, centroids, c_sq, out);
+}
+
+/// [`dists_to_vec`] over a contiguous row range — full-dataset scans
+/// (naive baselines) that have no id list to begin with.
+pub fn dists_range_to_vec(
+    space: &Space,
+    rows: Range<usize>,
+    q: &[f32],
+    q_sq: f64,
+    out: &mut Vec<f64>,
+) {
+    out.clear();
+    out.reserve(rows.len());
+    let mut lo = rows.start;
+    while lo < rows.end {
+        let hi = (lo + TILE).min(rows.end);
+        match (&space.data, space.metric) {
+            (Data::Dense(m), Metric::Euclidean) => {
+                for i in lo..hi {
+                    let d2 = m.sqnorm(i) + q_sq - 2.0 * dense_dot(m.row(i), q);
+                    out.push(d2.max(0.0).sqrt());
+                }
+            }
+            (Data::Dense(m), Metric::L1) => {
+                for i in lo..hi {
+                    out.push(dense_l1(m.row(i), q));
+                }
+            }
+            (Data::Sparse(m), Metric::Euclidean) => {
+                for i in lo..hi {
+                    let d2 = m.sqnorm(i) + q_sq - 2.0 * m.dot_vec(i, q);
+                    out.push(d2.max(0.0).sqrt());
+                }
+            }
+            (Data::Sparse(_), Metric::L1) => unreachable!("rejected in Space::new"),
+        }
+        space.count_bulk((hi - lo) as u64);
+        lo = hi;
+    }
+}
+
+/// [`dists_to_centers`] over a contiguous row range — the chunked naive
+/// k-means pass shape (chunks are ranges, not id lists).
+pub fn dists_range_to_centers(
+    space: &Space,
+    rows: Range<usize>,
+    cand: &[u32],
+    centroids: &[Vec<f32>],
+    c_sq: &[f64],
+    out: &mut Vec<f64>,
+) {
+    let base = rows.start;
+    fill_centers(space, rows.len(), |t| base + t, cand, centroids, c_sq, out);
+}
+
+fn fill_centers(
+    space: &Space,
+    n: usize,
+    row_of: impl Fn(usize) -> usize,
+    cand: &[u32],
+    centroids: &[Vec<f32>],
+    c_sq: &[f64],
+    out: &mut Vec<f64>,
+) {
+    let k = cand.len();
+    out.clear();
+    out.reserve(n * k);
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + TILE).min(n);
+        match (&space.data, space.metric) {
+            (Data::Dense(m), Metric::Euclidean) => {
+                for t in lo..hi {
+                    let i = row_of(t);
+                    let (row, r_sq) = (m.row(i), m.sqnorm(i));
+                    for &c in cand {
+                        let cu = c as usize;
+                        let d2 = r_sq + c_sq[cu] - 2.0 * dense_dot(row, &centroids[cu]);
+                        out.push(d2.max(0.0).sqrt());
+                    }
+                }
+            }
+            (Data::Dense(m), Metric::L1) => {
+                for t in lo..hi {
+                    let row = m.row(row_of(t));
+                    for &c in cand {
+                        out.push(dense_l1(row, &centroids[c as usize]));
+                    }
+                }
+            }
+            (Data::Sparse(m), Metric::Euclidean) => {
+                for t in lo..hi {
+                    let i = row_of(t);
+                    let r_sq = m.sqnorm(i);
+                    for &c in cand {
+                        let cu = c as usize;
+                        let d2 = r_sq + c_sq[cu] - 2.0 * m.dot_vec(i, &centroids[cu]);
+                        out.push(d2.max(0.0).sqrt());
+                    }
+                }
+            }
+            (Data::Sparse(_), Metric::L1) => unreachable!("rejected in Space::new"),
+        }
+        space.count_bulk(((hi - lo) * k) as u64);
+        lo = hi;
+    }
+}
+
+/// Row-to-row distances for a pair of dataset row lists — the dual-tree
+/// leaf-leaf shape of all-pairs search. Output is row-major
+/// `a.len() × b.len()`; counted `|a|·|b|` per tile. Per-element math is
+/// exactly [`Space::dist_uncounted`].
+pub fn dists_rows(space: &Space, a: &[u32], b: &[u32], out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(a.len() * b.len());
+    let mut lo = 0usize;
+    while lo < a.len() {
+        let hi = (lo + TILE).min(a.len());
+        let tile = &a[lo..hi];
+        match (&space.data, space.metric) {
+            (Data::Dense(m), Metric::Euclidean) => {
+                for &p in tile {
+                    let i = p as usize;
+                    let (row, r_sq) = (m.row(i), m.sqnorm(i));
+                    for &q in b {
+                        let j = q as usize;
+                        let d2 = r_sq + m.sqnorm(j) - 2.0 * dense_dot(row, m.row(j));
+                        out.push(d2.max(0.0).sqrt());
+                    }
+                }
+            }
+            (Data::Dense(m), Metric::L1) => {
+                for &p in tile {
+                    let row = m.row(p as usize);
+                    for &q in b {
+                        out.push(dense_l1(row, m.row(q as usize)));
+                    }
+                }
+            }
+            (Data::Sparse(m), Metric::Euclidean) => {
+                for &p in tile {
+                    let i = p as usize;
+                    let r_sq = m.sqnorm(i);
+                    for &q in b {
+                        let j = q as usize;
+                        let d2 = r_sq + m.sqnorm(j) - 2.0 * m.dot_rows(i, j);
+                        out.push(d2.max(0.0).sqrt());
+                    }
+                }
+            }
+            (Data::Sparse(_), Metric::L1) => unreachable!("rejected in Space::new"),
+        }
+        space.count_bulk(((hi - lo) * b.len()) as u64);
+        lo = hi;
+    }
+}
+
+/// Squared distances between dataset rows and dense centers, row-major
+/// `rows.len() × centers.len()` as `f32` — the tile layout the XLA batch
+/// engine produces. This is the scalar kernel promoted out of
+/// `runtime::BatchDistanceEngine` (which now calls it as its non-XLA
+/// fallback). NOT counted: callers decide the accounting, matching the
+/// engine's bulk-count convention.
+pub fn dist2_block(space: &Space, rows: &[u32], centers: &[Vec<f32>]) -> Vec<f32> {
+    let k = centers.len();
+    let c_sq: Vec<f64> = centers.iter().map(|c| dense_dot(c, c)).collect();
+    let mut out = vec![0f32; rows.len() * k];
+    for (ri, &p) in rows.iter().enumerate() {
+        for (ci, center) in centers.iter().enumerate() {
+            let d = space.dist_to_vec_uncounted(p as usize, center, c_sq[ci]);
+            out[ri * k + ci] = (d * d) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DenseMatrix, SparseMatrix};
+    use crate::rng::Rng;
+
+    fn dense_space(n: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 2.0).collect();
+        Space::euclidean(Data::Dense(DenseMatrix::new(n, d, vals)))
+    }
+
+    fn sparse_space(n: usize, d: usize, seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<(u32, f32)>> = (0..n)
+            .map(|_| {
+                (0..d as u32)
+                    .filter(|_| rng.below(3) == 0)
+                    .map(|j| (j, rng.normal() as f32))
+                    .collect()
+            })
+            .collect();
+        Space::euclidean(Data::Sparse(SparseMatrix::from_rows(d, &rows)))
+    }
+
+    #[test]
+    fn to_vec_bit_identical_and_counted() {
+        for space in [dense_space(300, 9, 1), sparse_space(300, 40, 2)] {
+            let q: Vec<f32> = (0..space.dim()).map(|j| (j as f32).sin()).collect();
+            let q_sq: f64 = q.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let rows: Vec<u32> = (0..space.n() as u32).step_by(2).collect();
+            space.reset_count();
+            let mut blocked = Vec::new();
+            dists_to_vec(&space, &rows, &q, q_sq, &mut blocked);
+            let blocked_count = space.dist_count();
+            space.reset_count();
+            let scalar: Vec<f64> = rows
+                .iter()
+                .map(|&p| space.dist_to_vec(p as usize, &q, q_sq))
+                .collect();
+            assert_eq!(space.dist_count(), blocked_count, "count mismatch");
+            assert_eq!(blocked.len(), scalar.len());
+            for (b, s) in blocked.iter().zip(&scalar) {
+                assert_eq!(b.to_bits(), s.to_bits(), "blocked {b} vs scalar {s}");
+            }
+            // The range form agrees with the id form on contiguous rows.
+            let ids: Vec<u32> = (20..170).collect();
+            let mut by_ids = Vec::new();
+            dists_to_vec(&space, &ids, &q, q_sq, &mut by_ids);
+            let mut by_range = Vec::new();
+            dists_range_to_vec(&space, 20..170, &q, q_sq, &mut by_range);
+            assert_eq!(by_ids, by_range);
+        }
+    }
+
+    #[test]
+    fn to_centers_bit_identical_and_counted() {
+        for space in [dense_space(200, 6, 3), sparse_space(200, 30, 4)] {
+            let mut rng = Rng::new(9);
+            let centroids: Vec<Vec<f32>> = (0..7)
+                .map(|_| (0..space.dim()).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let c_sq: Vec<f64> = centroids.iter().map(|c| dense_dot(c, c)).collect();
+            let cand: Vec<u32> = vec![0, 2, 5, 6];
+            let rows: Vec<u32> = (0..space.n() as u32).step_by(3).collect();
+            space.reset_count();
+            let mut blocked = Vec::new();
+            dists_to_centers(&space, &rows, &cand, &centroids, &c_sq, &mut blocked);
+            let blocked_count = space.dist_count();
+            space.reset_count();
+            let mut scalar = Vec::new();
+            for &p in &rows {
+                for &c in &cand {
+                    scalar.push(space.dist_to_vec(
+                        p as usize,
+                        &centroids[c as usize],
+                        c_sq[c as usize],
+                    ));
+                }
+            }
+            assert_eq!(space.dist_count(), blocked_count, "count mismatch");
+            for (b, s) in blocked.iter().zip(&scalar) {
+                assert_eq!(b.to_bits(), s.to_bits());
+            }
+            // The range form agrees with the id form on contiguous rows.
+            let mut by_range = Vec::new();
+            let ident: Vec<u32> = (0..centroids.len() as u32).collect();
+            dists_range_to_centers(&space, 10..60, &ident, &centroids, &c_sq, &mut by_range);
+            let ids: Vec<u32> = (10..60).collect();
+            let mut by_ids = Vec::new();
+            dists_to_centers(&space, &ids, &ident, &centroids, &c_sq, &mut by_ids);
+            assert_eq!(by_range, by_ids);
+        }
+    }
+
+    #[test]
+    fn rows_bit_identical_and_counted() {
+        for space in [dense_space(120, 5, 5), sparse_space(120, 25, 6)] {
+            let a: Vec<u32> = (0..40).collect();
+            let b: Vec<u32> = (60..110).collect();
+            space.reset_count();
+            let mut blocked = Vec::new();
+            dists_rows(&space, &a, &b, &mut blocked);
+            let blocked_count = space.dist_count();
+            space.reset_count();
+            let mut scalar = Vec::new();
+            for &p in &a {
+                for &q in &b {
+                    scalar.push(space.dist(p as usize, q as usize));
+                }
+            }
+            assert_eq!(space.dist_count(), blocked_count, "count mismatch");
+            for (x, y) in blocked.iter().zip(&scalar) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn l1_variant_matches_scalar() {
+        let space = Space::new(
+            Data::Dense(DenseMatrix::new(4, 3, vec![
+                0., 0., 0., 1., -2., 3., 4., 4., 4., -1., 0., 1.,
+            ])),
+            Metric::L1,
+        );
+        let q = [1.0f32, 1.0, 1.0];
+        let rows: Vec<u32> = (0..4).collect();
+        let mut blocked = Vec::new();
+        dists_to_vec(&space, &rows, &q, 3.0, &mut blocked);
+        for (i, b) in blocked.iter().enumerate() {
+            let s = space.dist_to_vec_uncounted(i, &q, 3.0);
+            assert_eq!(b.to_bits(), s.to_bits());
+        }
+    }
+
+    #[test]
+    fn dist2_block_matches_pointwise() {
+        let space = dense_space(30, 5, 7);
+        let centers = vec![vec![0.0f32; 5], vec![1.0f32; 5]];
+        let out = dist2_block(&space, &[3, 7, 11], &centers);
+        assert_eq!(out.len(), 6);
+        let expect = space.dist_to_vec_uncounted(7, &centers[1], 5.0).powi(2);
+        assert!((out[3] as f64 - expect).abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let space = dense_space(10, 3, 8);
+        let mut out = vec![1.0];
+        dists_to_vec(&space, &[], &[0.0; 3], 0.0, &mut out);
+        assert!(out.is_empty());
+        dists_rows(&space, &[], &[1, 2], &mut out);
+        assert!(out.is_empty());
+        dists_rows(&space, &[1, 2], &[], &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -6,6 +6,7 @@
 //! Batched XLA evaluations (rust/src/runtime/) count `n·k` per tile — the
 //! same accounting a scalar loop would produce.
 
+pub mod block;
 mod counter;
 
 pub use counter::DistCounter;
@@ -113,7 +114,7 @@ impl Space {
                 // Expansion form with both norms cached: one fused
                 // multiply-add per element (vs subtract+square), and the
                 // dot kernel is 4-way unrolled. ~1.7× faster at d ≥ 54
-                // (see EXPERIMENTS.md §Perf).
+                // (see docs/EXPERIMENTS.md §Perf).
                 let d2 = m.sqnorm(i) + m.sqnorm(j) - 2.0 * dense_dot(m.row(i), m.row(j));
                 d2.max(0.0).sqrt()
             }

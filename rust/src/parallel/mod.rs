@@ -1,5 +1,5 @@
-//! The parallel execution layer: a std-only scoped-thread executor with
-//! **deterministic decomposition**.
+//! The parallel execution layer: a std-only executor with **deterministic
+//! decomposition** and a **persistent worker pool**.
 //!
 //! The paper makes individual queries cheap via the triangle inequality;
 //! this module makes the *system* fast via threads — tree builds fan out
@@ -28,9 +28,26 @@
 //! values. Distance *counts* stay exact as well: the sharded
 //! [`crate::metrics::DistCounter`] is additive, and the decomposition
 //! rules guarantee the same multiset of distance evaluations.
+//!
+//! ## The persistent pool
+//!
+//! An [`Executor`] with `threads > 1` owns a long-lived worker pool:
+//! `threads - 1` parked OS threads plus the calling thread, woken per
+//! call through a broadcast work channel (one epoch per `map_tasks` /
+//! `map_chunks` / `join`). Hot loops that issue many small fan-outs —
+//! per-anchor steal scans, per-iteration k-means frontiers, batch query
+//! dispatch — therefore pay a condvar wake instead of a thread
+//! spawn/join per pass (docs/EXPERIMENTS.md §Pool). The pool is created
+//! lazily on the first parallel call, shared by `clone`d executors, and
+//! torn down when the last clone drops. Tasks that are themselves
+//! running *on* the pool fall back to scoped spawning for their own
+//! nested fan-outs, so reentrancy can never deadlock the work channel.
 
+use std::any::Any;
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// How much of the machine a build or query may use. The knob threads
 /// through [`crate::engine::IndexBuilder`], [`crate::tree::middle_out::MiddleOutConfig`]
@@ -60,15 +77,11 @@ impl Parallelism {
     }
 
     /// The `PALLAS_THREADS` environment override, if set to a valid
-    /// thread count (`1` selects the serial path).
+    /// spec — same grammar as [`Parallelism::parse`] (`serial`, `auto`,
+    /// or a thread count; `1` selects the serial path).
     pub fn from_env() -> Option<Parallelism> {
         let raw = std::env::var("PALLAS_THREADS").ok()?;
-        match raw.trim().parse::<usize>() {
-            Ok(0) => Some(Parallelism::Auto),
-            Ok(1) => Some(Parallelism::Serial),
-            Ok(n) => Some(Parallelism::Fixed(n)),
-            Err(_) => None,
-        }
+        Parallelism::parse(raw.trim())
     }
 
     /// Parse a CLI-style spec: `"serial"`, `"auto"`, or a thread count.
@@ -93,35 +106,305 @@ impl Default for Parallelism {
     }
 }
 
-/// A scoped-thread work-chunk executor. Cheap to construct (it holds only
-/// the resolved thread budget); threads are spawned per call via
-/// [`std::thread::scope`], so borrowed data flows into tasks without
-/// `Arc` plumbing.
-#[derive(Clone, Copy, Debug)]
-pub struct Executor {
+thread_local! {
+    /// Set while this thread is executing a pool job (worker threads and
+    /// the broadcasting caller alike). Nested fan-outs issued from inside
+    /// a pool task must not broadcast on a pool again — the channel is
+    /// one-job-at-a-time — so they take the scoped-spawn path instead.
+    static IN_POOL_TASK: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Whether the current thread is executing inside a pool epoch. Used by
+/// consumers to assert lock-ordering invariants — e.g. the engine's
+/// lazy tree build must not be reached from inside an epoch, because a
+/// task blocking on a long-held external lock keeps its epoch (and the
+/// pool's broadcast channel) open, and the lock holder may need that
+/// channel to make progress.
+pub(crate) fn in_pool_task() -> bool {
+    IN_POOL_TASK.with(|c| c.get())
+}
+
+/// RAII flag for [`IN_POOL_TASK`], exception-safe under unwinding.
+struct PoolTaskGuard {
+    prev: bool,
+}
+
+impl PoolTaskGuard {
+    fn enter() -> PoolTaskGuard {
+        let prev = IN_POOL_TASK.with(|c| c.replace(true));
+        PoolTaskGuard { prev }
+    }
+}
+
+impl Drop for PoolTaskGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL_TASK.with(|c| c.set(prev));
+    }
+}
+
+/// A broadcast job: a type-erased pointer to the caller's drain closure.
+/// The pointee lives on the broadcasting caller's stack; validity is
+/// guaranteed because [`WorkerPool::run`] does not return until every
+/// worker has finished the epoch (and the job slot is cleared before the
+/// next epoch can start).
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn() + Sync),
+}
+
+// SAFETY: the pointer is only dereferenced by pool workers between job
+// publication and epoch completion, a window during which the caller is
+// blocked inside `WorkerPool::run` keeping the pointee alive. The
+// pointee is `Sync`, so shared access from many threads is sound.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Bumped once per broadcast; workers join each epoch at most once.
+    epoch: u64,
+    job: Option<Job>,
+    /// Pool workers this epoch wants (small fan-outs need few); workers
+    /// beyond this skip the epoch without touching the job.
+    expected: usize,
+    /// Workers that have registered for the current epoch.
+    joined: usize,
+    /// Workers that have finished the current epoch.
+    finished: usize,
+    /// First panic payload observed this epoch (re-thrown by the caller).
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+/// Poison-tolerant state lock: the pool's state mutex protects plain
+/// bookkeeping (no invariants that a panic could half-apply), so a
+/// poisoned lock is recovered rather than cascading the panic into a
+/// hung broadcast.
+fn lock_state(m: &Mutex<PoolState>) -> std::sync::MutexGuard<'_, PoolState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for the next epoch.
+    work_cv: Condvar,
+    /// The broadcasting caller parks here waiting for `finished == workers`.
+    done_cv: Condvar,
+    workers: usize,
+}
+
+/// The persistent pool: `workers` parked threads plus whichever thread is
+/// currently broadcasting. One job runs at a time; concurrent broadcasts
+/// from different threads serialize on `broadcast_lock`.
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    broadcast_lock: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                expected: 0,
+                joined: 0,
+                finished: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            workers,
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pallas-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, broadcast_lock: Mutex::new(()), handles }
+    }
+
+    /// Broadcast `job` to up to `wanted` parked workers, run `on_caller`
+    /// on the calling thread, and block until every registered worker
+    /// has finished the epoch. Small fan-outs wake only the workers they
+    /// can feed instead of the whole pool (every worker that *checks*
+    /// the epoch self-registers while slots remain, so lost
+    /// `notify_one`s cannot strand the epoch — non-waiting workers
+    /// always re-check before parking). Panics from any participant
+    /// propagate to the caller after the epoch completes (so borrowed
+    /// data stays alive throughout).
+    fn run(&self, wanted: usize, on_caller: impl FnOnce(), job: &(dyn Fn() + Sync)) {
+        let _serialize = self
+            .broadcast_lock
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        // SAFETY: erase the borrow's lifetime; see `Job` for why the
+        // pointee outlives every dereference.
+        let job = Job { f: unsafe { std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(job) } };
+        let expected = wanted.clamp(1, self.shared.workers);
+        {
+            let mut st = lock_state(&self.shared.state);
+            debug_assert!(st.job.is_none(), "overlapping pool epochs");
+            st.job = Some(job);
+            st.epoch += 1;
+            st.expected = expected;
+            st.joined = 0;
+            st.finished = 0;
+            if expected == self.shared.workers {
+                self.shared.work_cv.notify_all();
+            } else {
+                for _ in 0..expected {
+                    self.shared.work_cv.notify_one();
+                }
+            }
+        }
+        let caller_panic = {
+            let _guard = PoolTaskGuard::enter();
+            catch_unwind(AssertUnwindSafe(on_caller)).err()
+        };
+        let mut st = lock_state(&self.shared.state);
+        while st.finished < st.expected {
+            st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        let worker_panic = st.panic.take();
+        drop(st);
+        if let Some(payload) = caller_panic.or(worker_panic) {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_state(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_state(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    // Register only while the epoch has open slots and a
+                    // live job; a full (or already-completed) epoch is
+                    // skipped without touching the job pointer.
+                    if st.joined < st.expected && st.job.is_some() {
+                        st.joined += 1;
+                        break st.job.expect("registered for a jobless epoch");
+                    }
+                    continue; // re-check: epoch == seen now, so we park
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let result = {
+            let _guard = PoolTaskGuard::enter();
+            // SAFETY: the broadcasting caller blocks until this worker
+            // reports `finished`, keeping the pointee alive.
+            catch_unwind(AssertUnwindSafe(|| unsafe { (*job.f)() }))
+        };
+        let mut st = lock_state(&shared.state);
+        if let Err(payload) = result {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        st.finished += 1;
+        shared.done_cv.notify_all();
+    }
+}
+
+struct ExecInner {
     threads: usize,
+    /// Created on the first parallel call, then reused by every
+    /// subsequent `map_tasks`/`map_chunks`/`join` on this executor (and
+    /// its clones) until the last clone drops.
+    pool: OnceLock<WorkerPool>,
+}
+
+/// A deterministic work-chunk executor backed by a persistent worker
+/// pool. Cheap to construct (the pool is lazy) and cheap to `clone`
+/// (clones share the pool); borrowed data flows into tasks without
+/// `Arc` plumbing because the broadcasting caller blocks until the
+/// epoch completes.
+#[derive(Clone)]
+pub struct Executor {
+    inner: Arc<ExecInner>,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("threads", &self.inner.threads)
+            .field("pool_started", &self.inner.pool.get().is_some())
+            .finish()
+    }
 }
 
 impl Executor {
     pub fn new(parallelism: Parallelism) -> Executor {
-        Executor { threads: parallelism.threads() }
+        Executor {
+            inner: Arc::new(ExecInner {
+                threads: parallelism.threads(),
+                pool: OnceLock::new(),
+            }),
+        }
     }
 
     /// An executor that runs everything on the calling thread.
     pub fn serial() -> Executor {
-        Executor { threads: 1 }
+        Executor::new(Parallelism::Serial)
     }
 
     pub fn threads(&self) -> usize {
-        self.threads
+        self.inner.threads
+    }
+
+    /// Whether the persistent pool has been spun up yet (it starts on
+    /// the first parallel call).
+    pub fn pool_started(&self) -> bool {
+        self.inner.pool.get().is_some()
+    }
+
+    /// The pool, if this executor may use one *right now*: parallel
+    /// budget, and not already inside a pool task (nested fan-outs take
+    /// the scoped path — the work channel is one job at a time).
+    fn usable_pool(&self) -> Option<&WorkerPool> {
+        if self.inner.threads <= 1 || IN_POOL_TASK.with(|c| c.get()) {
+            return None;
+        }
+        Some(
+            self.inner
+                .pool
+                .get_or_init(|| WorkerPool::new(self.inner.threads - 1)),
+        )
     }
 
     /// Run tasks `0..n`, returning results **in task order**. Tasks are
     /// claimed from a shared atomic cursor, so long tasks don't stall
-    /// short ones. The calling thread works alongside `threads - 1`
-    /// spawned workers (keeping spawn overhead off the hot path for
-    /// small fan-outs and the caller busy for large ones); a panicking
-    /// task is propagated to the caller after all workers have stopped.
+    /// short ones. The calling thread works alongside the pool's
+    /// `threads - 1` persistent workers — repeated calls reuse the same
+    /// parked threads instead of spawning — and a panicking task is
+    /// propagated to the caller after all workers have stopped.
     pub fn map_tasks<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -130,39 +413,32 @@ impl Executor {
         if n == 0 {
             return Vec::new();
         }
-        let workers = self.threads.min(n);
+        let workers = self.inner.threads.min(n);
         if workers <= 1 {
             return (0..n).map(f).collect();
         }
         let next = AtomicUsize::new(0);
-        let drain = |out: &mut Vec<(usize, T)>| loop {
-            let i = next.fetch_add(1, Ordering::Relaxed);
-            if i >= n {
-                break;
+        let buckets: Mutex<Vec<Vec<(usize, T)>>> = Mutex::new(Vec::new());
+        let drain = || {
+            let mut out: Vec<(usize, T)> = Vec::new();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                out.push((i, f(i)));
             }
-            out.push((i, f(i)));
+            if !out.is_empty() {
+                buckets.lock().unwrap_or_else(|e| e.into_inner()).push(out);
+            }
         };
-        let buckets: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (1..workers)
-                .map(|_| {
-                    s.spawn(|| {
-                        let mut out = Vec::new();
-                        drain(&mut out);
-                        out
-                    })
-                })
-                .collect();
-            let mut own = Vec::new();
-            drain(&mut own);
-            let mut all = vec![own];
-            for h in handles {
-                all.push(
-                    h.join()
-                        .unwrap_or_else(|panic| std::panic::resume_unwind(panic)),
-                );
-            }
-            all
-        });
+        match self.usable_pool() {
+            // The caller drains too, so `workers - 1` pool threads cover
+            // the fan-out; waking more would find an empty cursor.
+            Some(pool) => pool.run(workers - 1, &drain, &drain),
+            None => scoped_fanout(workers, &drain),
+        }
+        let buckets = buckets.into_inner().unwrap_or_else(|e| e.into_inner());
         let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
         slots.resize_with(n, || None);
         for bucket in buckets {
@@ -186,14 +462,86 @@ impl Executor {
         F: Fn(Range<usize>) -> T + Sync,
     {
         assert!(chunk > 0, "map_chunks with zero chunk size");
-        let n_chunks = (n + chunk - 1) / chunk;
+        let n_chunks = n.div_ceil(chunk);
         self.map_tasks(n_chunks, |c| f(c * chunk..((c + 1) * chunk).min(n)))
+    }
+
+    /// Run two closures, the second on a pool worker when one is
+    /// available (rayon-`join` style, used by the top-down tree
+    /// builder's two-way recursion). Nested joins — issued from inside a
+    /// pool task — fall back to a scoped spawn. Panics from either side
+    /// propagate to the caller.
+    pub fn join<A, B, FA, FB>(&self, fa: FA, fb: FB) -> (A, B)
+    where
+        A: Send,
+        B: Send,
+        FA: FnOnce() -> A + Send,
+        FB: FnOnce() -> B + Send,
+    {
+        match self.usable_pool() {
+            None => join(self.inner.threads, fa, fb),
+            Some(pool) => {
+                let fb_slot: Mutex<Option<FB>> = Mutex::new(Some(fb));
+                let b_out: Mutex<Option<B>> = Mutex::new(None);
+                let mut a_out: Option<A> = None;
+                pool.run(
+                    1, // one side runs on one worker; fa stays on the caller
+                    || a_out = Some(fa()),
+                    &|| {
+                        let fb = fb_slot.lock().unwrap_or_else(|e| e.into_inner()).take();
+                        if let Some(fb) = fb {
+                            let b = fb();
+                            *b_out.lock().unwrap_or_else(|e| e.into_inner()) = Some(b);
+                        }
+                    },
+                );
+                (
+                    a_out.expect("join caller side ran"),
+                    b_out
+                        .into_inner()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .expect("join pool side ran"),
+                )
+            }
+        }
     }
 }
 
-/// Run two closures, the second on a spawned thread when `threads > 1`
-/// (rayon-`join` style, used by the top-down tree builder's two-way
-/// recursion). Panics from either side propagate to the caller.
+/// Scoped-thread fan-out: every participant runs the same drain closure.
+/// Used when no pool is available (serial executors never get here) or
+/// when the caller is itself a pool task (nested fan-out). Spawned
+/// threads inherit the caller's pool-task flag: a nested fan-out's
+/// helper threads are still "inside" the enclosing pool epoch, and
+/// letting them broadcast on the pool would deadlock against the
+/// epoch's own broadcast lock.
+fn scoped_fanout(workers: usize, drain: &(dyn Fn() + Sync)) {
+    let inherit = IN_POOL_TASK.with(|c| c.get());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (1..workers)
+            .map(|_| {
+                s.spawn(move || {
+                    IN_POOL_TASK.with(|c| c.set(inherit));
+                    drain();
+                })
+            })
+            .collect();
+        let own = catch_unwind(AssertUnwindSafe(drain)).err();
+        let mut first_panic = own;
+        for h in handles {
+            if let Err(payload) = h.join() {
+                first_panic.get_or_insert(payload);
+            }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+    });
+}
+
+/// Run two closures, the second on a spawned thread when `threads > 1`.
+/// The scoped-spawn primitive behind [`Executor::join`]'s nested-context
+/// fallback (the top-down builder's recursion lands here below the top
+/// split). Panics from either side propagate to the caller.
 pub fn join<A, B, FA, FB>(threads: usize, fa: FA, fb: FB) -> (A, B)
 where
     A: Send,
@@ -206,8 +554,15 @@ where
         let b = fb();
         (a, b)
     } else {
+        // The spawned side inherits the caller's pool-task flag so that
+        // recursion below a pool epoch (e.g. the top-down builder's
+        // nested joins) never broadcasts on a pool mid-epoch.
+        let inherit = IN_POOL_TASK.with(|c| c.get());
         std::thread::scope(|s| {
-            let hb = s.spawn(fb);
+            let hb = s.spawn(move || {
+                IN_POOL_TASK.with(|c| c.set(inherit));
+                fb()
+            });
             let a = fa();
             let b = hb
                 .join()
@@ -291,9 +646,13 @@ mod tests {
     #[test]
     fn join_returns_both() {
         for threads in [1usize, 4] {
-            let (a, b) = join(threads, || 2 + 2, || "ok");
+            let exec = Executor::new(Parallelism::Fixed(threads));
+            let (a, b) = exec.join(|| 2 + 2, || "ok");
             assert_eq!(a, 4);
             assert_eq!(b, "ok");
+            // The free-function form still works for nested callers.
+            let (a, b) = join(threads, || 1, || 2);
+            assert_eq!((a, b), (1, 2));
         }
     }
 
@@ -315,5 +674,107 @@ mod tests {
             .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
             .unwrap_or("");
         assert!(msg.contains("boom"), "payload lost: {msg:?}");
+        // The pool survives a panicked epoch and keeps serving.
+        let out = exec.map_tasks(8, |i| i * 3);
+        assert_eq!(out, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_lazy_and_reused_across_calls() {
+        let exec = Executor::new(Parallelism::Fixed(4));
+        assert!(!exec.pool_started(), "pool must start lazily");
+        let _ = exec.map_tasks(16, |i| i);
+        assert!(exec.pool_started());
+        // Clones share the same pool instance.
+        let clone = exec.clone();
+        assert!(clone.pool_started());
+        for round in 0..20 {
+            let out = clone.map_tasks(10, |i| i + round);
+            assert_eq!(out[9], 9 + round);
+        }
+    }
+
+    #[test]
+    fn serial_executor_never_starts_a_pool() {
+        let exec = Executor::serial();
+        let _ = exec.map_tasks(32, |i| i);
+        assert!(!exec.pool_started());
+    }
+
+    #[test]
+    fn nested_map_tasks_does_not_deadlock() {
+        // A task running on the pool fans out again on the same executor:
+        // the inner call must take the scoped path, not the work channel.
+        let exec = Executor::new(Parallelism::Fixed(4));
+        let exec2 = exec.clone();
+        let out = exec.map_tasks(6, |i| {
+            let inner = exec2.map_tasks(4, |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 40 + 6);
+        }
+    }
+
+    #[test]
+    fn nested_join_does_not_deadlock() {
+        let exec = Executor::new(Parallelism::Fixed(4));
+        let exec2 = exec.clone();
+        let (a, b) = exec.join(
+            || exec2.join(|| 1, || 2),
+            || exec2.join(|| 3, || 4),
+        );
+        assert_eq!((a, b), ((1, 2), (3, 4)));
+    }
+
+    #[test]
+    fn deeply_nested_joins_do_not_deadlock() {
+        // Regression: a thread spawned by a *nested* (scoped) join must
+        // inherit the pool-task flag, or the next nesting level would
+        // broadcast on the pool mid-epoch and deadlock — the shape of
+        // the top-down builder's recursion at 8 threads.
+        fn nest(exec: &Executor, depth: usize) -> usize {
+            if depth == 0 {
+                return 1;
+            }
+            let (a, b) = exec.join(|| nest(exec, depth - 1), || nest(exec, depth - 1));
+            a + b
+        }
+        let exec = Executor::new(Parallelism::Fixed(8));
+        assert_eq!(nest(&exec, 4), 16);
+    }
+
+    #[test]
+    fn doubly_nested_map_tasks_does_not_deadlock() {
+        // Same regression for map_tasks: scoped-fan-out helper threads
+        // inherit the flag, so a third nesting level stays scoped.
+        let exec = Executor::new(Parallelism::Fixed(3));
+        let e2 = exec.clone();
+        let out = exec.map_tasks(4, |i| {
+            e2.map_tasks(3, |j| e2.map_tasks(2, |k| i + j + k).iter().sum::<usize>())
+                .iter()
+                .sum::<usize>()
+        });
+        let serial = Executor::serial();
+        let expect = serial.map_tasks(4, |i| {
+            serial
+                .map_tasks(3, |j| serial.map_tasks(2, |k| i + j + k).iter().sum::<usize>())
+                .iter()
+                .sum::<usize>()
+        });
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn concurrent_broadcasts_from_two_threads_serialize() {
+        let exec = Executor::new(Parallelism::Fixed(3));
+        std::thread::scope(|s| {
+            let e1 = exec.clone();
+            let e2 = exec.clone();
+            let h1 = s.spawn(move || e1.map_tasks(200, |i| i as u64).iter().sum::<u64>());
+            let h2 = s.spawn(move || e2.map_tasks(200, |i| (i * 2) as u64).iter().sum::<u64>());
+            assert_eq!(h1.join().unwrap(), 199 * 200 / 2);
+            assert_eq!(h2.join().unwrap(), 199 * 200);
+        });
     }
 }

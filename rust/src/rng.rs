@@ -4,7 +4,7 @@
 //! initialization, property tests — goes through [`Rng`], a xoshiro256++
 //! generator seeded via SplitMix64. Same seed ⇒ same dataset ⇒ same
 //! distance counts, which is what makes the paper-table reproductions
-//! (EXPERIMENTS.md) stable across runs and machines.
+//! (docs/EXPERIMENTS.md) stable across runs and machines.
 
 /// SplitMix64 step — used to expand a single `u64` seed into the four
 /// xoshiro words (the construction recommended by the xoshiro authors).

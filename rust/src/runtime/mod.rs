@@ -323,7 +323,7 @@ impl BatchDistanceEngine {
         let k = centers.len();
         let width = match self.width_for(PROGRAM_PAIRWISE, dim) {
             Some(w) => w,
-            None => return scalar_block(space, rows, centers),
+            None => return crate::metrics::block::dist2_block(space, rows, centers),
         };
         let (tn, tk) = (self.manifest.tile_n, self.manifest.tile_k);
         let mut out = vec![0f32; rows.len() * k];
@@ -379,22 +379,11 @@ impl BatchDistanceEngine {
     }
 }
 
-/// Scalar fallback with identical output layout.
-fn scalar_block(space: &Space, rows: &[u32], centers: &[Vec<f32>]) -> Vec<f32> {
-    let k = centers.len();
-    let c_sq: Vec<f64> = centers
-        .iter()
-        .map(|c| crate::metrics::dense_dot(c, c))
-        .collect();
-    let mut out = vec![0f32; rows.len() * k];
-    for (ri, &p) in rows.iter().enumerate() {
-        for (ci, center) in centers.iter().enumerate() {
-            let d = space.dist_to_vec_uncounted(p as usize, center, c_sq[ci]);
-            out[ri * k + ci] = (d * d) as f32;
-        }
-    }
-    out
-}
+/// Scalar fallback with identical output layout — the kernel itself now
+/// lives at the metrics level ([`crate::metrics::block::dist2_block`])
+/// so the non-XLA algorithm paths share it too.
+#[cfg(test)]
+use crate::metrics::block::dist2_block as scalar_block;
 
 #[cfg(test)]
 mod tests {

@@ -20,8 +20,17 @@
 //! parent stream per anchor index *before* any sibling builds, which is
 //! what decouples sibling builds from each other; determinism across
 //! thread counts is asserted by `tests/parallel_equivalence.rs`.
+//!
+//! The agglomeration phase is parallel too on wide frontiers: the roots
+//! partition into ⌈√F⌉ spatial buckets that merge independently on the
+//! executor before a small cross-bucket heap finishes the job (see
+//! `agglomerate`) — removing both the serial O(F²) heap init and the
+//! last serial fraction of the build at high thread counts.
 
-use super::{enclosing_radius, make_leaf, make_parent, splice_arena, MetricTree, Node, NodeId};
+use super::{
+    enclosing_radius, make_leaf, make_parent, splice_arena, splice_offset_arena, MetricTree,
+    Node, NodeId,
+};
 use crate::anchors::build_anchors_ex;
 use crate::metrics::Space;
 use crate::parallel::{Executor, Parallelism};
@@ -60,19 +69,36 @@ impl Default for MiddleOutConfig {
 
 /// Build a middle-out tree over all points of `space`.
 pub fn build(space: &Space, cfg: &MiddleOutConfig) -> MetricTree {
+    build_ex(space, cfg, &Executor::new(cfg.parallelism))
+}
+
+/// [`build`] on an explicit executor, so repeated builds (the engine's
+/// lazy tree, the coordinator's per-rmin cache) share one persistent
+/// worker pool instead of resolving [`MiddleOutConfig::parallelism`]
+/// each time.
+pub fn build_ex(space: &Space, cfg: &MiddleOutConfig, exec: &Executor) -> MetricTree {
     let points: Vec<u32> = (0..space.n() as u32).collect();
-    build_subset(space, points, cfg)
+    build_subset_ex(space, points, cfg, exec)
 }
 
 /// Build over an explicit point subset.
 pub fn build_subset(space: &Space, points: Vec<u32>, cfg: &MiddleOutConfig) -> MetricTree {
+    build_subset_ex(space, points, cfg, &Executor::new(cfg.parallelism))
+}
+
+/// [`build_subset`] on an explicit executor.
+pub fn build_subset_ex(
+    space: &Space,
+    points: Vec<u32>,
+    cfg: &MiddleOutConfig,
+    exec: &Executor,
+) -> MetricTree {
     assert!(!points.is_empty(), "empty tree");
     let rmin = cfg.rmin.max(1);
     let before = space.dist_count();
     let mut nodes: Vec<Node> = Vec::new();
     let mut rng = Rng::new(cfg.seed);
-    let exec = Executor::new(cfg.parallelism);
-    let root = recurse(space, points, rmin, cfg, &mut rng, &mut nodes, &exec, true);
+    let root = recurse(space, points, rmin, cfg, &mut rng, &mut nodes, exec, true);
     MetricTree {
         nodes,
         root,
@@ -147,16 +173,120 @@ fn recurse(
             })
             .collect()
     };
-    agglomerate(space, child_roots, cfg, nodes)
+    agglomerate(space, child_roots, cfg, nodes, exec)
 }
+
+/// Frontiers at least this wide agglomerate through the partitioned
+/// scheme; narrower ones use one serial heap (the O(F²) init is cheap
+/// there and the merge quality is the reference). A constant — never a
+/// function of thread count — so the decomposition, and therefore every
+/// result bit and distance count, is identical on any schedule.
+const PARTITION_MIN_ROOTS: usize = 64;
 
 /// Bottom-up agglomeration: repeatedly merge the most compatible pair.
 /// Compatibility = radius of the smallest ball containing both (§3.1).
+///
+/// Wide frontiers (≥ [`PARTITION_MIN_ROOTS`], i.e. √R ≥ 64 subtree
+/// roots) do not pay the serial all-pairs heap init. Instead the roots
+/// are partitioned into ⌈√F⌉ spatial buckets around evenly-strided
+/// leader pivots, each bucket agglomerates independently — fanned out on
+/// the executor, into private offset-encoded arenas spliced back in
+/// bucket order — and a small cross-bucket heap merges the ⌈√F⌉
+/// survivors. Besides removing the residual serial fraction from the
+/// build (ROADMAP), the partition drops the heap-init distance cost from
+/// F²/2 to ≈ F·√F·3/2, which is what Pestov's lower bounds say matters
+/// most in high dimensions where per-query pruning cannot win back
+/// build-time waste.
 fn agglomerate(
     space: &Space,
     roots: Vec<NodeId>,
     cfg: &MiddleOutConfig,
     nodes: &mut Vec<Node>,
+    exec: &Executor,
+) -> NodeId {
+    debug_assert!(!roots.is_empty());
+    if roots.len() == 1 {
+        return roots[0];
+    }
+    if roots.len() < PARTITION_MIN_ROOTS {
+        let base = nodes.len() as NodeId;
+        let mut local: Vec<Node> = Vec::new();
+        let root = agglomerate_into(space, &roots, cfg, nodes, base, &mut local);
+        return splice_offset_arena(nodes, local, root, base);
+    }
+
+    let f = roots.len();
+    let b = (f as f64).sqrt().ceil() as usize;
+    // Leaders: evenly strided over the frontier (deterministic; anchor
+    // order already spreads pivots across the point set).
+    let leaders: Vec<NodeId> = (0..b).map(|i| roots[i * f / b]).collect();
+    // Assign every root to its nearest leader pivot: F·B counted
+    // pivot-pivot distances, the same set at every thread count. Ties
+    // break to the earliest leader.
+    let mut buckets: Vec<Vec<NodeId>> = vec![Vec::new(); b];
+    for &r in &roots {
+        let rn = &nodes[r as usize];
+        let mut best = f64::INFINITY;
+        let mut best_b = 0usize;
+        for (bi, &l) in leaders.iter().enumerate() {
+            let d = space.dist_vv(&rn.pivot, &nodes[l as usize].pivot);
+            if d < best {
+                best = d;
+                best_b = bi;
+            }
+        }
+        buckets[best_b].push(r);
+    }
+    buckets.retain(|bucket| !bucket.is_empty());
+
+    // Per-bucket merges fan out on the executor. Each task reads the
+    // shared arena snapshot and appends parents to a private arena with
+    // ids offset-encoded from `base`; splicing in bucket order makes the
+    // layout a function of the partition alone.
+    let base = nodes.len() as NodeId;
+    let built: Vec<(Vec<Node>, NodeId)> = {
+        let shared: &[Node] = nodes;
+        exec.map_tasks(buckets.len(), |bi| {
+            let mut local: Vec<Node> = Vec::new();
+            let root = agglomerate_into(space, &buckets[bi], cfg, shared, base, &mut local);
+            (local, root)
+        })
+    };
+    let bucket_roots: Vec<NodeId> = built
+        .into_iter()
+        .map(|(local, root)| splice_offset_arena(nodes, local, root, base))
+        .collect();
+
+    // Cross-bucket phase: one small heap over the ⌈√F⌉ survivors.
+    let base = nodes.len() as NodeId;
+    let mut local: Vec<Node> = Vec::new();
+    let root = agglomerate_into(space, &bucket_roots, cfg, nodes, base, &mut local);
+    splice_offset_arena(nodes, local, root, base)
+}
+
+/// Resolve a node id against the shared-arena snapshot + local arena
+/// split used by the agglomeration tasks (`id >= base` is local).
+#[inline]
+fn node_at<'a>(shared: &'a [Node], base: NodeId, local: &'a [Node], id: NodeId) -> &'a Node {
+    if id < base {
+        &shared[id as usize]
+    } else {
+        &local[(id - base) as usize]
+    }
+}
+
+/// The serial most-compatible-pair heap over one set of roots, appending
+/// parents to `local` with ids offset-encoded from `base`. Returns the
+/// surviving root (offset-encoded if it is a new parent). This is the
+/// building block of both the per-bucket and the cross-bucket phases;
+/// the single-heap path calls it with an empty partition of one.
+fn agglomerate_into(
+    space: &Space,
+    roots: &[NodeId],
+    cfg: &MiddleOutConfig,
+    shared: &[Node],
+    base: NodeId,
+    local: &mut Vec<Node>,
 ) -> NodeId {
     debug_assert!(!roots.is_empty());
     if roots.len() == 1 {
@@ -164,19 +294,19 @@ fn agglomerate(
     }
     // Active cluster list; lazy-deletion heap of candidate merges keyed by
     // enclosing-ball radius. f64 keys wrapped in a total order.
-    let mut active: Vec<NodeId> = roots;
+    let mut active: Vec<NodeId> = roots.to_vec();
     let mut alive: Vec<bool> = vec![true; active.len()];
     let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize)>> = BinaryHeap::new();
 
-    let score = |space: &Space, nodes: &Vec<Node>, a: NodeId, b: NodeId| -> f64 {
-        let (na, nb) = (&nodes[a as usize], &nodes[b as usize]);
+    let score = |local: &[Node], a: NodeId, b: NodeId| -> f64 {
+        let (na, nb) = (node_at(shared, base, local, a), node_at(shared, base, local, b));
         let d = space.dist_vv(&na.pivot, &nb.pivot);
         enclosing_radius(d, na.radius, nb.radius)
     };
 
     for i in 0..active.len() {
         for j in (i + 1)..active.len() {
-            let s = score(space, nodes, active[i], active[j]);
+            let s = score(local, active[i], active[j]);
             heap.push(Reverse((OrdF64(s), i, j)));
         }
     }
@@ -190,13 +320,17 @@ fn agglomerate(
         alive[i] = false;
         alive[j] = false;
         let (ia, ib) = (active[i], active[j]);
-        let mut parent = make_parent(space, &nodes[ia as usize], &nodes[ib as usize]);
+        let mut parent = make_parent(
+            space,
+            node_at(shared, base, local, ia),
+            node_at(shared, base, local, ib),
+        );
         if cfg.exact_radii {
-            tighten_radius(space, &mut parent, nodes, ia, ib);
+            tighten_radius(space, &mut parent, shared, base, local, ia, ib);
         }
         parent.children = Some((ia, ib));
-        nodes.push(parent);
-        let pid = (nodes.len() - 1) as NodeId;
+        local.push(parent);
+        let pid = base + (local.len() - 1) as NodeId;
         let slot = active.len();
         active.push(pid);
         alive.push(true);
@@ -204,7 +338,7 @@ fn agglomerate(
         // Score the new cluster against all alive ones.
         for (idx, &nid) in active.iter().enumerate() {
             if idx != slot && alive[idx] {
-                let s = score(space, nodes, nid, pid);
+                let s = score(local, nid, pid);
                 heap.push(Reverse((OrdF64(s), idx.min(slot), idx.max(slot))));
             }
         }
@@ -219,11 +353,19 @@ fn agglomerate(
 
 /// Replace the parent's bounded radius with the exact maximum distance
 /// over its points (counted — this is the `exact_radii` ablation).
-fn tighten_radius(space: &Space, parent: &mut Node, nodes: &[Node], a: NodeId, b: NodeId) {
+fn tighten_radius(
+    space: &Space,
+    parent: &mut Node,
+    shared: &[Node],
+    base: NodeId,
+    local: &[Node],
+    a: NodeId,
+    b: NodeId,
+) {
     let mut radius = 0.0f64;
     let mut stack = vec![a, b];
     while let Some(id) = stack.pop() {
-        let n = &nodes[id as usize];
+        let n = node_at(shared, base, local, id);
         match n.children {
             None => {
                 for &p in &n.points {

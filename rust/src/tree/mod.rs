@@ -321,6 +321,32 @@ pub(crate) fn splice_arena(nodes: &mut Vec<Node>, mut local: Vec<Node>, root: No
     root + offset
 }
 
+/// Like [`splice_arena`], but for a local arena built *against* a
+/// snapshot of the shared arena: node ids `< base` already point into
+/// `nodes` and pass through unchanged, ids `>= base` are offset-encoded
+/// locals (`base + position`) and are rebased onto the insertion point.
+/// Used by the partitioned agglomeration, whose per-bucket merge tasks
+/// create parents over children living in the shared arena. Splicing the
+/// buckets in bucket order keeps the layout a pure function of the
+/// decomposition — never of the schedule.
+pub(crate) fn splice_offset_arena(
+    nodes: &mut Vec<Node>,
+    mut local: Vec<Node>,
+    root: NodeId,
+    base: NodeId,
+) -> NodeId {
+    debug_assert!(nodes.len() >= base as usize, "splice below its own base");
+    let shift = nodes.len() as NodeId - base;
+    let rebase = |id: NodeId| if id < base { id } else { id + shift };
+    for n in &mut local {
+        if let Some((a, b)) = n.children {
+            n.children = Some((rebase(a), rebase(b)));
+        }
+    }
+    nodes.extend(local);
+    rebase(root)
+}
+
 /// The "compatibility" score of §3.1: the radius of the smallest ball that
 /// is guaranteed to contain both children's balls — smaller is better.
 #[inline]

@@ -8,13 +8,15 @@
 //!
 //! Once a node's two sides are fixed they share nothing, so
 //! [`build_par`] builds the top `⌈log2(threads)⌉ + 1` split levels with
-//! one [`parallel::join`] per node, splicing each side's private arena
-//! back left-then-right — byte-identical to the sequential recursion at
-//! every thread count (the builder uses no randomness at all).
+//! one [`Executor::join`] per node (the top split on the persistent
+//! pool, deeper ones on scoped spawns), splicing each side's private
+//! arena back left-then-right — byte-identical to the sequential
+//! recursion at every thread count (the builder uses no randomness at
+//! all).
 
 use super::{make_leaf, splice_arena, MetricTree, Node, NodeId};
 use crate::metrics::Space;
-use crate::parallel::{self, Parallelism};
+use crate::parallel::{Executor, Parallelism};
 
 /// Build a top-down metric tree over all points of `space` with leaf
 /// threshold `rmin`, single-threaded.
@@ -25,8 +27,15 @@ pub fn build(space: &Space, rmin: usize) -> MetricTree {
 /// Build a top-down metric tree with the given worker budget. The result
 /// is byte-identical to [`build`] for every setting.
 pub fn build_par(space: &Space, rmin: usize, parallelism: Parallelism) -> MetricTree {
+    build_ex(space, rmin, &Executor::new(parallelism))
+}
+
+/// [`build_par`] on an explicit executor, so repeated builds reuse one
+/// persistent worker pool (the top split's two sides run via
+/// [`Executor::join`]; deeper splits fall back to scoped spawns).
+pub fn build_ex(space: &Space, rmin: usize, exec: &Executor) -> MetricTree {
     let points: Vec<u32> = (0..space.n() as u32).collect();
-    build_subset_par(space, points, rmin, parallelism)
+    build_subset_ex(space, points, rmin, exec)
 }
 
 /// Build over an explicit subset (used by tests and the coordinator's
@@ -42,9 +51,19 @@ pub fn build_subset_par(
     rmin: usize,
     parallelism: Parallelism,
 ) -> MetricTree {
+    build_subset_ex(space, points, rmin, &Executor::new(parallelism))
+}
+
+/// Subset build on an explicit executor.
+pub fn build_subset_ex(
+    space: &Space,
+    points: Vec<u32>,
+    rmin: usize,
+    exec: &Executor,
+) -> MetricTree {
     assert!(!points.is_empty(), "empty tree");
     let rmin = rmin.max(1);
-    let threads = parallelism.threads();
+    let threads = exec.threads();
     // Fan out the top ⌈log2(threads)⌉ + 1 levels: up to 2·threads leaf
     // tasks, enough to cover imbalance between the two sides of a split.
     let levels = if threads <= 1 {
@@ -54,7 +73,7 @@ pub fn build_subset_par(
     };
     let before = space.dist_count();
     let mut nodes: Vec<Node> = Vec::new();
-    let root = split(space, points, rmin, &mut nodes, threads, levels);
+    let root = split(space, points, rmin, &mut nodes, exec, levels);
     MetricTree {
         nodes,
         root,
@@ -68,7 +87,7 @@ fn split(
     points: Vec<u32>,
     rmin: usize,
     nodes: &mut Vec<Node>,
-    threads: usize,
+    exec: &Executor,
     levels: usize,
 ) -> NodeId {
     // make_leaf performs the radius pass: one counted distance per point,
@@ -128,18 +147,21 @@ fn split(
     // levels remain (and both sides are big enough to be worth a
     // thread), splicing the private arenas back left-then-right so the
     // layout matches the sequential recursion exactly.
-    let fan_out = levels > 0 && threads > 1 && left.len() > rmin && right.len() > rmin;
+    let fan_out =
+        levels > 0 && exec.threads() > 1 && left.len() > rmin && right.len() > rmin;
     let (left_id, right_id) = if fan_out {
-        let ((lnodes, lroot), (rnodes, rroot)) = parallel::join(
-            threads,
+        // The top split runs on the persistent pool; recursive joins
+        // issued from inside pool tasks fall back to scoped spawns
+        // (see `Executor::join`).
+        let ((lnodes, lroot), (rnodes, rroot)) = exec.join(
             || {
                 let mut local = Vec::new();
-                let root = split(space, left, rmin, &mut local, threads, levels - 1);
+                let root = split(space, left, rmin, &mut local, exec, levels - 1);
                 (local, root)
             },
             || {
                 let mut local = Vec::new();
-                let root = split(space, right, rmin, &mut local, threads, levels - 1);
+                let root = split(space, right, rmin, &mut local, exec, levels - 1);
                 (local, root)
             },
         );
@@ -149,8 +171,8 @@ fn split(
     } else {
         // (levels passes through unchanged: a small side here does not
         // preclude fanning out a bigger split further down.)
-        let left_id = split(space, left, rmin, nodes, threads, levels);
-        let right_id = split(space, right, rmin, nodes, threads, levels);
+        let left_id = split(space, left, rmin, nodes, exec, levels);
+        let right_id = split(space, right, rmin, nodes, exec, levels);
         (left_id, right_id)
     };
     let mut parent = node;

@@ -206,3 +206,156 @@ fn run_batch_identical_across_thread_counts() {
         assert_eq!(ref_dists, dists, "total distance count, {threads} threads");
     }
 }
+
+/// Pool reuse: one `Executor` (and its persistent worker pool) shared
+/// across repeated builds and query batches keeps every distance count
+/// exact — the pool amortizes thread spawn, never accounting.
+#[test]
+fn pool_reuse_keeps_counts_exact_across_repeated_builds() {
+    use anchors_hierarchy::parallel::Executor;
+    let space = dense_space();
+    let cfg = MiddleOutConfig {
+        rmin: 16,
+        seed: 7,
+        parallelism: Parallelism::Fixed(4),
+        ..Default::default()
+    };
+    // Fresh-executor reference.
+    let reference = middle_out::build(&space, &cfg);
+    // One executor, three consecutive builds: identical trees and
+    // identical per-build distance counts every time.
+    let exec = Executor::new(Parallelism::Fixed(4));
+    for round in 0..3 {
+        let tree = middle_out::build_ex(&space, &cfg, &exec);
+        assert_trees_identical(&reference, &tree, &format!("pool-reuse build {round}"));
+        assert_eq!(
+            tree.build_dists, reference.build_dists,
+            "pool-reuse build {round} distance count"
+        );
+    }
+    assert!(exec.pool_started(), "parallel build never touched the pool");
+}
+
+#[test]
+fn pool_reuse_keeps_counts_exact_across_repeated_batches() {
+    let workload: Vec<Query> = vec![
+        Query::Knn(KnnQuery { target: KnnTarget::Point(1), k: 4, ..Default::default() }),
+        Query::Kmeans(KmeansQuery { k: 3, iters: 2, ..Default::default() }),
+        Query::Ball(BallQuery { center: vec![0.0; 2], radius: 1.5, use_tree: true }),
+        Query::Kmeans(KmeansQuery { k: 5, iters: 2, use_tree: false, ..Default::default() }),
+    ];
+    let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.004))
+        .rmin(16)
+        .parallelism(Parallelism::Fixed(4))
+        .build();
+    index.tree(); // pay the build outside the measured deltas
+    let before = index.dist_count();
+    let first = index.run_batch(&workload);
+    let first_delta = index.dist_count() - before;
+    // Same index, same pool, three more rounds: bit-equal results and
+    // the exact same distance delta each round.
+    for round in 0..3 {
+        let before = index.dist_count();
+        let again = index.run_batch(&workload);
+        assert_eq!(first, again, "batch results drifted on round {round}");
+        assert_eq!(
+            index.dist_count() - before,
+            first_delta,
+            "batch distance delta drifted on round {round}"
+        );
+    }
+}
+
+/// Kernel equivalence: the blocked leaf-scan kernels of
+/// `metrics::block` return bit-identical distances and consume exactly
+/// the same distance count as the scalar path, on dense and sparse data.
+#[test]
+fn blocked_kernels_bit_identical_to_scalar_dense_and_sparse() {
+    use anchors_hierarchy::metrics::{block, dense_dot};
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let d = space.dim();
+        let q: Vec<f32> = (0..d).map(|j| ((j * 7 % 13) as f32) * 0.25 - 1.0).collect();
+        let q_sq: f64 = q.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let rows: Vec<u32> = (0..space.n() as u32).step_by(3).collect();
+
+        // Single-query shape (knn / ball / anomaly leaf scans).
+        space.reset_count();
+        let mut blocked = Vec::new();
+        block::dists_to_vec(&space, &rows, &q, q_sq, &mut blocked);
+        let blocked_count = space.dist_count();
+        space.reset_count();
+        for (i, &p) in rows.iter().enumerate() {
+            let s = space.dist_to_vec(p as usize, &q, q_sq);
+            assert_eq!(blocked[i].to_bits(), s.to_bits(), "{label} dists_to_vec row {p}");
+        }
+        assert_eq!(space.dist_count(), blocked_count, "{label} dists_to_vec count");
+
+        // Multi-center shape (k-means leaf assignment / naive pass).
+        let centroids: Vec<Vec<f32>> = (0..5)
+            .map(|c| (0..d).map(|j| ((c + j) % 5) as f32 * 0.5 - 1.0).collect())
+            .collect();
+        let c_sq: Vec<f64> = centroids.iter().map(|c| dense_dot(c, c)).collect();
+        let cand: Vec<u32> = vec![0, 1, 3, 4];
+        space.reset_count();
+        block::dists_to_centers(&space, &rows, &cand, &centroids, &c_sq, &mut blocked);
+        let blocked_count = space.dist_count();
+        space.reset_count();
+        let mut at = 0usize;
+        for &p in &rows {
+            for &c in &cand {
+                let s = space.dist_to_vec(p as usize, &centroids[c as usize], c_sq[c as usize]);
+                assert_eq!(blocked[at].to_bits(), s.to_bits(), "{label} centers row {p}");
+                at += 1;
+            }
+        }
+        assert_eq!(space.dist_count(), blocked_count, "{label} dists_to_centers count");
+
+        // Row-to-row shape (all-pairs leaf-leaf blocks).
+        let a: Vec<u32> = (0..40).collect();
+        let b: Vec<u32> = (50..90).collect();
+        space.reset_count();
+        block::dists_rows(&space, &a, &b, &mut blocked);
+        let blocked_count = space.dist_count();
+        space.reset_count();
+        let mut at = 0usize;
+        for &p in &a {
+            for &qq in &b {
+                let s = space.dist(p as usize, qq as usize);
+                assert_eq!(blocked[at].to_bits(), s.to_bits(), "{label} rows ({p},{qq})");
+                at += 1;
+            }
+        }
+        assert_eq!(space.dist_count(), blocked_count, "{label} dists_rows count");
+    }
+}
+
+/// The partitioned agglomeration only engages on wide frontiers
+/// (√R ≥ 64 subtree roots, i.e. R ≥ ~4100 points at the top level);
+/// build big enough to cross that threshold and assert the tree is
+/// still byte-identical — including exact build distance counts — at
+/// every thread count, with the persistent pool active.
+#[test]
+fn partitioned_agglomeration_identical_across_thread_counts() {
+    let space = Space::euclidean(Data::Dense(gaussian_mixture(9000, 8, 12, 18.0, 13)));
+    let build = |threads: usize| {
+        middle_out::build(
+            &space,
+            &MiddleOutConfig {
+                rmin: 30,
+                seed: 21,
+                parallelism: Parallelism::Fixed(threads),
+                ..Default::default()
+            },
+        )
+    };
+    let reference = build(1);
+    reference.validate(&space).unwrap();
+    for &threads in &THREAD_COUNTS[1..] {
+        let tree = build(threads);
+        assert_trees_identical(
+            &reference,
+            &tree,
+            &format!("partitioned agglomeration, {threads} threads"),
+        );
+    }
+}
