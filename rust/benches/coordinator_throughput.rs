@@ -1,0 +1,136 @@
+//! Bench: sharded-coordinator throughput — jobs/sec for a mixed
+//! 8-dataset job stream at shard counts {1, 2, 4, 8}.
+//!
+//! Each iteration stands up a fresh `ShardedCoordinator` (2 workers per
+//! shard), submits the whole stream, waits for every job, and shuts
+//! down — so the measurement includes the serving-scale costs the
+//! router exists to parallelize: dataset generation, tree builds, and
+//! the per-dataset run-lock serialization. With one shard every job
+//! funnels through one queue and one cache mutex; with N shards the
+//! eight datasets spread across independent shards and only same-dataset
+//! jobs serialize.
+//!
+//! Prints one report line per shard count and overwrites the repo-root
+//! `BENCH_shards.json` baseline (committed as `status:"pending"` until
+//! run on a machine with a toolchain, per the BENCH_* convention).
+
+use anchors_hierarchy::bench::harness::Bencher;
+use anchors_hierarchy::coordinator::{JobSpec, JobState, ShardedCoordinator};
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{
+    AllPairsQuery, AnomalyQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
+};
+use std::fmt::Write as _;
+
+const SHARDS: [usize; 4] = [1, 2, 4, 8];
+const WORKERS_PER_SHARD: usize = 2;
+const SCALE: f64 = 0.004;
+const JOBS_PER_DATASET: usize = 6;
+
+/// Eight distinct dataset cache keys: four Table-1 kinds × two seeds.
+fn datasets() -> Vec<DatasetSpec> {
+    let kinds = [
+        DatasetKind::Squiggles,
+        DatasetKind::Voronoi,
+        DatasetKind::Cell,
+        DatasetKind::Covtype,
+    ];
+    let mut specs = Vec::new();
+    for seed in [20130u64, 20131] {
+        for kind in &kinds {
+            specs.push(DatasetSpec { kind: kind.clone(), scale: SCALE, seed });
+        }
+    }
+    specs
+}
+
+/// A mixed stream over the 8 datasets: every query family in rotation,
+/// interleaved round-robin across datasets so shards stay busy.
+fn stream() -> Vec<JobSpec> {
+    let datasets = datasets();
+    let mut jobs = Vec::new();
+    for round in 0..JOBS_PER_DATASET {
+        for dataset in &datasets {
+            let query = match round % 5 {
+                0 => Query::Kmeans(KmeansQuery {
+                    k: 8,
+                    iters: 3,
+                    use_tree: true,
+                    ..Default::default()
+                }),
+                1 => Query::Anomaly(AnomalyQuery { threshold: 10, ..Default::default() }),
+                2 => Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree: true }),
+                3 => Query::Knn(KnnQuery {
+                    target: KnnTarget::Point(round as u32),
+                    k: 5,
+                    use_tree: true,
+                }),
+                _ => Query::Mst(MstQuery { use_tree: true }),
+            };
+            jobs.push(JobSpec { dataset: dataset.clone(), query, rmin: 30 });
+        }
+    }
+    jobs
+}
+
+fn main() {
+    let jobs = stream();
+    println!(
+        "# coordinator throughput: {} jobs over 8 datasets (scale {SCALE}), \
+         {WORKERS_PER_SHARD} workers/shard",
+        jobs.len()
+    );
+
+    let mut rates = Vec::new();
+    for &n_shards in &SHARDS {
+        let bencher = Bencher::new(1, 3);
+        let (stats, completed) = bencher.run(&format!("coordinator/{n_shards}-shards"), |_| {
+            let coord = ShardedCoordinator::new(n_shards, WORKERS_PER_SHARD, jobs.len() + 1);
+            let ids: Vec<_> = jobs
+                .iter()
+                .map(|j| coord.submit(j.clone()).expect("capacity covers the stream"))
+                .collect();
+            let mut done = 0usize;
+            for id in ids {
+                match coord.wait(id) {
+                    JobState::Done(_) => done += 1,
+                    JobState::Failed(e) => panic!("job failed: {e}"),
+                    _ => unreachable!(),
+                }
+            }
+            let m = coord.shutdown();
+            assert_eq!(m.completed as usize, done);
+            done
+        });
+        println!("{}", stats.report());
+        assert_eq!(completed, jobs.len());
+        rates.push(jobs.len() as f64 / stats.mean);
+    }
+
+    // --- record the baseline ----------------------------------------------
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"status\": \"measured\",");
+    let _ = writeln!(
+        json,
+        "  \"stream\": {{ \"jobs\": {}, \"datasets\": 8, \"scale\": {SCALE}, \
+         \"workers_per_shard\": {WORKERS_PER_SHARD} }},",
+        jobs.len()
+    );
+    let vals: Vec<String> = SHARDS
+        .iter()
+        .zip(&rates)
+        .map(|(s, r)| format!("    {{ \"shards\": {s}, \"jobs_per_sec\": {r:.3} }}"))
+        .collect();
+    let _ = writeln!(json, "  \"throughput\": [\n{}\n  ],", vals.join(",\n"));
+    let _ = writeln!(json, "  \"speedup_4_shards\": {:.3}", rates[2] / rates[0]);
+    let _ = writeln!(json, "}}");
+    // Anchor on the manifest dir: cargo runs benches with cwd = rust/,
+    // but the committed baseline lives at the repo root.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_shards.json");
+    std::fs::write(path, &json).expect("write BENCH_shards.json");
+    println!(
+        "speedup at 4 shards: {:.2}x  (baseline -> {path})",
+        rates[2] / rates[0]
+    );
+}

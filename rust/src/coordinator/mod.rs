@@ -23,8 +23,20 @@
 //!   default (the pool is the parallelism); `PALLAS_THREADS` opts a
 //!   deployment into intra-job parallelism via [`crate::parallel`],
 //!   which changes wall-clock only, never results or distance counts.
+//! * **Cancellation** — [`Coordinator::cancel`] abandons a job that is
+//!   still queued (it moves to `Failed("cancelled")`); a job that has
+//!   started running is never interrupted, so results stay exact.
+//!
+//! One `Coordinator` is one *shard*: a self-contained queue + worker
+//! pool + dataset/tree cache. [`shard::ShardedCoordinator`] composes N
+//! of them behind a consistent-hash router on the dataset cache key so
+//! different datasets never contend on a lock, a queue, or a cache
+//! mutex — see the [`shard`] module docs.
 
 pub mod server;
+pub mod shard;
+
+pub use shard::ShardedCoordinator;
 
 use crate::dataset::DatasetSpec;
 use crate::engine::{self, IndexBuilder, Query, QueryResult};
@@ -47,6 +59,29 @@ pub struct JobSpec {
     pub query: Query,
     /// Leaf threshold for the cached tree.
     pub rmin: usize,
+}
+
+impl JobSpec {
+    /// The cache key this job routes on: `(dataset, rmin)`. The sharded
+    /// router ([`shard::ShardedCoordinator`]) hashes exactly this
+    /// string, so every job stream for one `(dataset, rmin)` pair lands
+    /// on one shard, where it shares that shard's cached `Space` and
+    /// tree and serializes on that shard's per-dataset run lock (exact
+    /// per-job distance accounting). Jobs with different keys never
+    /// contend across shards.
+    ///
+    /// Tradeoff (deliberate): because `rmin` is part of the key, one
+    /// dataset queried at two `rmin` values may land on two shards,
+    /// each generating and holding its own `Space` copy. That buys
+    /// cross-`rmin` parallelism — the two streams stop serializing on
+    /// one run lock — at the cost of duplicated generation time and
+    /// resident memory per extra `rmin`. Deployments that pin one
+    /// `rmin` per dataset (the common case; the CLI default is 30)
+    /// never pay it. Dataset generation counts no distances, so the
+    /// duplication never changes any job's distance accounting.
+    pub fn route_key(&self) -> String {
+        format!("{}#rmin={}", dataset_key(&self.dataset), self.rmin)
+    }
 }
 
 /// Job identifier.
@@ -92,17 +127,37 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Jobs cancelled while still queued. Each is also counted under
+    /// `failed` (its terminal state is `Failed("cancelled")`), so
+    /// `completed + failed == submitted` keeps holding.
+    pub cancelled: AtomicU64,
     pub total_dists: AtomicU64,
 }
 
 /// Point-in-time metric values.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub rejected: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Subset of `failed`: jobs cancelled while still queued.
+    pub cancelled: u64,
     pub total_dists: u64,
+}
+
+impl MetricsSnapshot {
+    /// Field-wise sum — the aggregate view over coordinator shards.
+    pub fn merge(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted + other.submitted,
+            rejected: self.rejected + other.rejected,
+            completed: self.completed + other.completed,
+            failed: self.failed + other.failed,
+            cancelled: self.cancelled + other.cancelled,
+            total_dists: self.total_dists + other.total_dists,
+        }
+    }
 }
 
 struct CachedDataset {
@@ -204,15 +259,28 @@ impl Coordinator {
     }
 
     /// Block until the job reaches a terminal state.
+    ///
+    /// # Panics
+    /// On an unknown job id; untrusted ids (e.g. off the wire) should
+    /// go through [`Coordinator::wait_checked`] instead.
     pub fn wait(&self, id: JobId) -> JobState {
+        self.wait_checked(id)
+            .unwrap_or_else(|| panic!("unknown job id {id}"))
+    }
+
+    /// Non-panicking [`Coordinator::wait`]: `None` for an id this
+    /// coordinator has never issued. Sound against check-then-wait
+    /// races because job states are never evicted — an id seen once
+    /// stays resolvable for the coordinator's lifetime.
+    pub fn wait_checked(&self, id: JobId) -> Option<JobState> {
         let mut states = self.inner.states.lock().unwrap();
         loop {
             match states.get(&id) {
-                Some(s) if s.is_terminal() => return s.clone(),
+                Some(s) if s.is_terminal() => return Some(s.clone()),
                 Some(_) => {
                     states = self.inner.state_cv.wait(states).unwrap();
                 }
-                None => panic!("unknown job id {id}"),
+                None => return None,
             }
         }
     }
@@ -229,8 +297,30 @@ impl Coordinator {
             rejected: m.rejected.load(Ordering::Relaxed),
             completed: m.completed.load(Ordering::Relaxed),
             failed: m.failed.load(Ordering::Relaxed),
+            cancelled: m.cancelled.load(Ordering::Relaxed),
             total_dists: m.total_dists.load(Ordering::Relaxed),
         }
+    }
+
+    /// Cancel a job that is still queued: it is removed from the queue
+    /// and moves to [`JobState::Failed`] with message `"cancelled"`
+    /// (waiters are woken). Returns `false` — and changes nothing — if
+    /// the job has already started running, already finished, or is
+    /// unknown: a running job is never interrupted, so its distance
+    /// accounting and result stay exact.
+    pub fn cancel(&self, id: JobId) -> bool {
+        // Holding the queue lock pins the race with worker pop: a job
+        // found in the queue here cannot simultaneously be claimed.
+        let mut queue = self.inner.queue.lock().unwrap();
+        let Some(pos) = queue.iter().position(|(jid, _)| *jid == id) else {
+            return false;
+        };
+        queue.remove(pos);
+        drop(queue);
+        self.inner.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        self.inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        set_state(&self.inner, id, JobState::Failed("cancelled".into()));
+        true
     }
 
     /// Drain the queue, stop accepting work, and join the workers.

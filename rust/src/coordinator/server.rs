@@ -1,6 +1,8 @@
-//! Line-protocol TCP front-end for the [`Coordinator`] — the deployable
-//! "launcher" surface of the system (vLLM-router-style: a thin, fast
-//! network layer over the batch scheduler).
+//! Line-protocol TCP front-end for the [`ShardedCoordinator`] — the
+//! deployable "launcher" surface of the system (vLLM-router-style: a
+//! thin, fast network layer over the batch scheduler). With one shard
+//! (the default) this is exactly the classic single-coordinator server;
+//! with N shards every request routes by the job id's shard tag.
 //!
 //! Protocol: newline-delimited JSON over TCP. The query portion of a
 //! `submit` request is exactly the [`engine::wire`] form of an
@@ -16,7 +18,23 @@
 //! ← {"ok":true,"id":3,"state":"done","dists":12345,
 //!    "output":{"kind":"kmeans","distortion":1.23e4,"iterations":5,...}}
 //! → {"cmd":"metrics"}            → {"cmd":"ping"}
+//! → {"cmd":"cancel","id":4}      → {"cmd":"shards"}
 //! ```
+//!
+//! Ops beyond `ping`/`submit`/`state`/`wait`:
+//!
+//! * **`cancel`** — `{"cmd":"cancel","id":N}` abandons a job that is
+//!   still queued: `{"ok":true,"id":N,"cancelled":true}`, and the job's
+//!   terminal state becomes `failed` with error `"cancelled"`. Once the
+//!   job is running (or finished, or unknown) the request is a no-op
+//!   and the response is `{"ok":false,...}` — a started job always runs
+//!   to completion so its accounting stays exact.
+//! * **`metrics`** — aggregate counters plus queue depth: `queue_len`
+//!   is the total across shards and `shard_queue_lens` the per-shard
+//!   depths (index = shard).
+//! * **`shards`** — introspection: `{"ok":true,"shards":N,"per_shard":
+//!   [{"shard":0,"queue_len":..,"submitted":..,"completed":..,
+//!   "failed":..,"rejected":..,"cancelled":..,"total_dists":..},...]}`.
 //!
 //! One thread per connection (std-only environment; connections are few
 //! and long-lived — the heavy concurrency lives in the coordinator's
@@ -29,7 +47,7 @@
 //! summaries only should read the derived `n_*` fields and ignore the
 //! payload arrays.
 
-use super::{Coordinator, JobSpec, JobState};
+use super::{JobSpec, JobState, MetricsSnapshot, ShardedCoordinator};
 use crate::dataset::{DatasetKind, DatasetSpec};
 use crate::engine::wire;
 use crate::json::{self, Value};
@@ -49,7 +67,7 @@ pub struct Server {
 impl Server {
     /// Bind on `addr` ("127.0.0.1:0" for an ephemeral test port) and serve
     /// `coordinator` until the handle is dropped.
-    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> std::io::Result<Server> {
+    pub fn start(addr: &str, coordinator: Arc<ShardedCoordinator>) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -91,7 +109,7 @@ impl Drop for Server {
     }
 }
 
-fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) -> std::io::Result<()> {
+fn handle_connection(stream: TcpStream, coord: Arc<ShardedCoordinator>) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -127,7 +145,7 @@ fn ok_obj(fields: Vec<(&str, Value)>) -> Value {
     Value::Obj(m)
 }
 
-fn handle_request(line: &str, coord: &Coordinator) -> Result<Value, String> {
+fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, String> {
     let req = json::parse(line).map_err(|e| format!("bad JSON: {e}"))?;
     let cmd = req
         .get("cmd")
@@ -137,13 +155,36 @@ fn handle_request(line: &str, coord: &Coordinator) -> Result<Value, String> {
         "ping" => Ok(ok_obj(vec![("pong", Value::Bool(true))])),
         "metrics" => {
             let m = coord.metrics();
+            // One queue-lock pass: the reported total is the sum of the
+            // reported per-shard depths, so a monitoring client can
+            // cross-check them within a single response.
+            let lens = coord.shard_queue_lens();
+            let total: usize = lens.iter().sum();
+            let per_shard: Vec<Value> =
+                lens.into_iter().map(|q| Value::Num(q as f64)).collect();
             Ok(ok_obj(vec![
                 ("submitted", Value::Num(m.submitted as f64)),
                 ("completed", Value::Num(m.completed as f64)),
                 ("failed", Value::Num(m.failed as f64)),
                 ("rejected", Value::Num(m.rejected as f64)),
+                ("cancelled", Value::Num(m.cancelled as f64)),
                 ("total_dists", Value::Num(m.total_dists as f64)),
-                ("queue_len", Value::Num(coord.queue_len() as f64)),
+                ("queue_len", Value::Num(total as f64)),
+                ("shard_queue_lens", Value::Arr(per_shard)),
+            ]))
+        }
+        "shards" => {
+            let lens = coord.shard_queue_lens();
+            let per_shard: Vec<Value> = coord
+                .shard_metrics()
+                .into_iter()
+                .zip(lens)
+                .enumerate()
+                .map(|(shard, (m, queue_len))| shard_obj(shard, &m, queue_len))
+                .collect();
+            Ok(ok_obj(vec![
+                ("shards", Value::Num(coord.n_shards() as f64)),
+                ("per_shard", Value::Arr(per_shard)),
             ]))
         }
         "submit" => {
@@ -153,20 +194,50 @@ fn handle_request(line: &str, coord: &Coordinator) -> Result<Value, String> {
                 Err(e) => Err(format!("{e:?}")),
             }
         }
+        "cancel" => {
+            let id = req
+                .get("id")
+                .and_then(Value::as_f64)
+                .ok_or("missing \"id\"")? as u64;
+            if coord.cancel(id) {
+                Ok(ok_obj(vec![
+                    ("id", Value::Num(id as f64)),
+                    ("cancelled", Value::Bool(true)),
+                ]))
+            } else {
+                Err(format!(
+                    "job {id} is not queued (already running, finished, or unknown)"
+                ))
+            }
+        }
         "state" | "wait" => {
             let id = req
                 .get("id")
                 .and_then(Value::as_f64)
                 .ok_or("missing \"id\"")? as u64;
             let state = if cmd == "wait" {
-                coord.wait(id)
+                coord.wait_checked(id)
             } else {
-                coord.state(id).ok_or(format!("unknown job {id}"))?
+                coord.state(id)
             };
+            let state = state.ok_or(format!("unknown job {id}"))?;
             Ok(state_obj(id, &state))
         }
         other => Err(format!("unknown cmd {other:?}")),
     }
+}
+
+fn shard_obj(shard: usize, m: &MetricsSnapshot, queue_len: usize) -> Value {
+    let mut obj = BTreeMap::new();
+    obj.insert("shard".into(), Value::Num(shard as f64));
+    obj.insert("queue_len".into(), Value::Num(queue_len as f64));
+    obj.insert("submitted".into(), Value::Num(m.submitted as f64));
+    obj.insert("completed".into(), Value::Num(m.completed as f64));
+    obj.insert("failed".into(), Value::Num(m.failed as f64));
+    obj.insert("rejected".into(), Value::Num(m.rejected as f64));
+    obj.insert("cancelled".into(), Value::Num(m.cancelled as f64));
+    obj.insert("total_dists".into(), Value::Num(m.total_dists as f64));
+    Value::Obj(obj)
 }
 
 fn parse_spec(req: &Value) -> Result<JobSpec, String> {
@@ -243,9 +314,12 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::shard;
 
-    fn start() -> (Server, Arc<Coordinator>) {
-        let coord = Arc::new(Coordinator::new(2, 16));
+    /// `PALLAS_SHARDS`-aware server (1 shard by default), so the CI
+    /// `PALLAS_SHARDS=4` pass drives this whole suite sharded.
+    fn start() -> (Server, Arc<ShardedCoordinator>) {
+        let coord = Arc::new(ShardedCoordinator::new(shard::default_shards().unwrap(), 2, 16));
         let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
         (server, coord)
     }
@@ -342,6 +416,145 @@ mod tests {
         client.reader.read_line(&mut line).unwrap();
         let v = json::parse(&line).unwrap();
         assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{raw} → {line}");
+    }
+
+    #[test]
+    fn metrics_surface_queue_depths() {
+        let (server, coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let m = client
+            .call(&Client::request(vec![("cmd", Value::Str("metrics".into()))]))
+            .unwrap();
+        assert_eq!(m.get("queue_len").and_then(Value::as_f64), Some(0.0));
+        let lens = m.get("shard_queue_lens").and_then(Value::as_arr).unwrap();
+        assert_eq!(lens.len(), coord.n_shards());
+        assert_eq!(m.get("cancelled").and_then(Value::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn shards_op_reports_per_shard_state() {
+        let (server, coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let resp = client
+            .call(&Client::request(vec![("cmd", Value::Str("shards".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(
+            resp.get("shards").and_then(Value::as_f64),
+            Some(coord.n_shards() as f64)
+        );
+        let per = resp.get("per_shard").and_then(Value::as_arr).unwrap();
+        assert_eq!(per.len(), coord.n_shards());
+        for (i, shard) in per.iter().enumerate() {
+            assert_eq!(shard.get("shard").and_then(Value::as_f64), Some(i as f64));
+            assert_eq!(shard.get("queue_len").and_then(Value::as_f64), Some(0.0));
+            assert!(shard.get("submitted").is_some());
+        }
+    }
+
+    #[test]
+    fn cancel_op_rejects_non_queued_jobs() {
+        let (server, _coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        // Unknown job: ok:false, connection stays usable.
+        let resp = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("cancel".into())),
+                ("id", Value::Num(999_999.0)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        // A finished job is not cancellable either.
+        let submit = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("submit".into())),
+                ("dataset", Value::Str("squiggles".into())),
+                ("scale", Value::Num(0.002)),
+                ("op", Value::Str("mst".into())),
+            ]))
+            .unwrap();
+        let id = submit.get("id").unwrap().as_f64().unwrap();
+        client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(id)),
+            ]))
+            .unwrap();
+        let resp = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("cancel".into())),
+                ("id", Value::Num(id)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "{resp:?}");
+    }
+
+    #[test]
+    fn cancel_op_abandons_queued_jobs() {
+        // A dedicated 1-worker, 1-shard coordinator: the worker is held
+        // busy by an expensive first job, so the second job is reliably
+        // still queued when the cancel lands.
+        let coord = Arc::new(ShardedCoordinator::new(1, 1, 16));
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let submit = |client: &mut Client, op: &str, scale: f64| -> f64 {
+            let resp = client
+                .call(&Client::request(vec![
+                    ("cmd", Value::Str("submit".into())),
+                    ("dataset", Value::Str("cell".into())),
+                    ("scale", Value::Num(scale)),
+                    ("op", Value::Str(op.into())),
+                ]))
+                .unwrap();
+            resp.get("id").unwrap().as_f64().unwrap()
+        };
+        let busy = submit(&mut client, "mst", 0.01);
+        let doomed = submit(&mut client, "mst", 0.005);
+        let resp = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("cancel".into())),
+                ("id", Value::Num(doomed)),
+            ]))
+            .unwrap();
+        // In the (unlikely) event the first job finished before the
+        // cancel arrived, the second may already be running — then the
+        // cancel correctly reports ok:false. Otherwise the job must
+        // land in failed("cancelled").
+        if resp.get("ok") == Some(&Value::Bool(true)) {
+            assert_eq!(resp.get("cancelled"), Some(&Value::Bool(true)));
+            let state = client
+                .call(&Client::request(vec![
+                    ("cmd", Value::Str("wait".into())),
+                    ("id", Value::Num(doomed)),
+                ]))
+                .unwrap();
+            assert_eq!(state.get("state").and_then(Value::as_str), Some("failed"));
+            assert_eq!(state.get("error").and_then(Value::as_str), Some("cancelled"));
+            let m = client
+                .call(&Client::request(vec![("cmd", Value::Str("metrics".into()))]))
+                .unwrap();
+            assert_eq!(m.get("cancelled").and_then(Value::as_f64), Some(1.0));
+        }
+        let done = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(busy)),
+            ]))
+            .unwrap();
+        assert_eq!(done.get("state").and_then(Value::as_str), Some("done"));
+    }
+
+    #[test]
+    fn wait_on_unknown_id_is_an_error_not_a_hang() {
+        let (server, _coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let resp = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(123_456.0)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
     }
 
     #[test]

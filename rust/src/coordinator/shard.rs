@@ -1,0 +1,433 @@
+//! Sharded coordinator: consistent-hash dataset routing over N
+//! independent [`Coordinator`] shards.
+//!
+//! A single [`Coordinator`] scales until many datasets' jobs contend on
+//! its shared queue mutex, its dataset-cache mutex, and (per dataset)
+//! its run lock. [`ShardedCoordinator`] removes that ceiling the same
+//! way the anchors hierarchy treats points: localize work, then exploit
+//! the locality. Each shard is a complete, self-contained coordinator —
+//! its own bounded queue, worker pool, dataset/tree cache, and (per
+//! worker) [`crate::parallel::Executor`] — and a thin router hashes the
+//! job's route key `(dataset, rmin)` ([`JobSpec::route_key`]) onto a
+//! consistent-hash ring to pick the shard. Jobs for one `(dataset,
+//! rmin)` pair therefore always land on the same shard (its caches stay
+//! hot and its distance accounting exact), while jobs for different
+//! datasets never touch a common lock.
+//!
+//! ## JobId encoding
+//!
+//! Returned [`JobId`]s are globally unique: the shard index lives in
+//! the [`SHARD_BITS`] bits above the shard-local sequential id
+//! ([`encode_job_id`] / [`decode_job_id`]). `state` / `wait` /
+//! `cancel` decode the shard from the id and route directly — no
+//! broadcast. Shard 0's tag is zero, so with one shard every id equals
+//! the local id and `ShardedCoordinator::new(1, ..)` behaves exactly
+//! like today's `Coordinator`, byte for byte.
+//!
+//! The tag sits at bit [`SHARD_SHIFT`] = 44 — not 56 — so every
+//! encoded id stays below 2⁵² and survives the JSON wire protocol's
+//! `f64` number representation exactly (integers are exact in an f64
+//! only up to 2⁵³). 2⁴⁴ local jobs per shard is ~17 trillion — far
+//! beyond any process lifetime this side of a restart.
+//!
+//! ## Determinism contract
+//!
+//! The shard count is a pure throughput knob. For any job stream,
+//! results — and, because the route key pins each `(dataset, rmin)`
+//! stream to one shard and one cache, per-job distance counts — are
+//! identical at every shard count (`tests/coordinator_props.rs`
+//! pins shards {1, 2, 4}). The ring itself is deterministic: same
+//! shard count ⇒ same ring ⇒ same routing, on every machine.
+//!
+//! ## Why a consistent-hash ring (and not `hash % N`)
+//!
+//! The ring ([`VNODES`] virtual points per shard, FNV-1a + splitmix64
+//! finalizer) keeps the assignment stable under resharding: growing N
+//! shards to N+1 remaps only ~1/(N+1) of the key space instead of
+//! almost all of it,
+//! which is what makes this the stepping stone to multi-process /
+//! multi-host serving where shards and their warm caches move between
+//! processes.
+
+use super::{Coordinator, JobId, JobSpec, JobState, MetricsSnapshot, SubmitError};
+use crate::runtime::BatchDistanceEngine;
+use std::sync::Arc;
+
+/// Bits of a [`JobId`] reserved for the shard index.
+pub const SHARD_BITS: u32 = 8;
+/// Maximum shard count representable in the [`JobId`] tag.
+pub const MAX_SHARDS: usize = 1 << SHARD_BITS;
+/// Virtual points per shard on the consistent-hash ring.
+pub const VNODES: usize = 256;
+/// Bit position of the shard tag. Low enough that every encoded id is
+/// ≤ 2⁵² and therefore exact as a JSON `f64` (see the module docs).
+pub const SHARD_SHIFT: u32 = 44;
+
+const LOCAL_MASK: u64 = (1 << SHARD_SHIFT) - 1;
+
+/// Tag a shard-local job id with its shard index (the [`SHARD_BITS`]
+/// bits at [`SHARD_SHIFT`]). Shard 0 is the identity:
+/// `encode_job_id(0, id) == id`.
+pub fn encode_job_id(shard: usize, local: JobId) -> JobId {
+    debug_assert!(shard < MAX_SHARDS, "shard {shard} out of range");
+    debug_assert!(local <= LOCAL_MASK, "local id {local} overflows the tag");
+    ((shard as u64) << SHARD_SHIFT) | local
+}
+
+/// Split a global [`JobId`] into `(shard, local)`.
+pub fn decode_job_id(id: JobId) -> (usize, JobId) {
+    ((id >> SHARD_SHIFT) as usize, id & LOCAL_MASK)
+}
+
+/// Default shard count: `PALLAS_SHARDS` when set, otherwise 1 —
+/// today's single-coordinator behavior. This is the *single* owner of
+/// the variable's semantics — the CLI (`--shards` fallback), the
+/// servers, and the test suites all go through here, so the behavior
+/// cannot diverge between consumers.
+///
+/// A variable that is *set but unparseable* is a loud `Err`, never a
+/// silent fallback: the CI `PALLAS_SHARDS=4` pass exists to exercise
+/// the sharded path, and quietly degrading to one shard would turn
+/// that coverage green while testing nothing. The value is returned
+/// unclamped — [`ShardedCoordinator::with_engine`] is the single
+/// clamp point, for flag and env values alike.
+pub fn default_shards() -> Result<usize, String> {
+    match std::env::var("PALLAS_SHARDS") {
+        Err(_) => Ok(1),
+        Ok(raw) => raw
+            .trim()
+            .parse::<usize>()
+            .map_err(|e| format!("$PALLAS_SHARDS: cannot parse {raw:?}: {e}")),
+    }
+}
+
+/// Ring hash: FNV-1a folded through a splitmix64 finalizer.
+/// Deterministic, allocation-free, std-only. FNV-1a alone has weak
+/// avalanche on the short, structured strings we hash (vnode labels,
+/// route keys) — its raw output clumps badly on the ring (measured:
+/// one of 4 shards owning ~7% of the key space); the finalizer's
+/// multiply-xorshift cascade restores balance to within a few percent.
+fn ring_hash(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+/// A consistent-hash ring: each shard contributes [`VNODES`] points;
+/// a key routes to the shard owning the first point clockwise of the
+/// key's hash.
+struct Ring {
+    /// Sorted `(point, shard)` pairs.
+    points: Vec<(u64, u32)>,
+}
+
+impl Ring {
+    fn new(n_shards: usize) -> Ring {
+        let mut points = Vec::with_capacity(n_shards * VNODES);
+        for shard in 0..n_shards {
+            for vnode in 0..VNODES {
+                let point = ring_hash(format!("shard-{shard}#vnode-{vnode}").as_bytes());
+                points.push((point, shard as u32));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    fn route(&self, key: &str) -> usize {
+        let h = ring_hash(key.as_bytes());
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        // Wrap past the last point back to the ring's first.
+        let (_, shard) = self.points[if i == self.points.len() { 0 } else { i }];
+        shard as usize
+    }
+}
+
+/// N independent [`Coordinator`] shards behind a consistent-hash
+/// router. Drop-in for a single `Coordinator` — same `submit` / `state`
+/// / `wait` / `cancel` / `queue_len` / `metrics` / `shutdown` surface —
+/// plus per-shard introspection ([`ShardedCoordinator::shard_metrics`],
+/// [`ShardedCoordinator::shard_queue_lens`]).
+pub struct ShardedCoordinator {
+    shards: Vec<Coordinator>,
+    ring: Ring,
+}
+
+impl ShardedCoordinator {
+    /// `n_shards` shards (clamped to `1..=`[`MAX_SHARDS`]), each with
+    /// its own pool of `workers_per_shard` workers and a queue bounded
+    /// at `capacity_per_shard`.
+    pub fn new(n_shards: usize, workers_per_shard: usize, capacity_per_shard: usize) -> Self {
+        Self::with_engine(n_shards, workers_per_shard, capacity_per_shard, None)
+    }
+
+    /// As [`ShardedCoordinator::new`], with an optional XLA batch
+    /// engine shared by all shards (it is internally synchronized and
+    /// stateless across calls, so sharing it does not re-introduce a
+    /// cross-shard serialization point for the scalar path).
+    pub fn with_engine(
+        n_shards: usize,
+        workers_per_shard: usize,
+        capacity_per_shard: usize,
+        engine: Option<Arc<BatchDistanceEngine>>,
+    ) -> Self {
+        let n = n_shards.clamp(1, MAX_SHARDS);
+        let shards = (0..n)
+            .map(|_| {
+                Coordinator::with_engine(workers_per_shard, capacity_per_shard, engine.clone())
+            })
+            .collect();
+        ShardedCoordinator { shards, ring: Ring::new(n) }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard `spec` routes to — a pure function of
+    /// [`JobSpec::route_key`] and the shard count.
+    pub fn shard_of(&self, spec: &JobSpec) -> usize {
+        self.ring.route(&spec.route_key())
+    }
+
+    /// Route and submit; the returned id is globally unique and carries
+    /// its shard tag, so every other call routes without a broadcast.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
+        let shard = self.shard_of(&spec);
+        self.shards[shard]
+            .submit(spec)
+            .map(|local| encode_job_id(shard, local))
+    }
+
+    /// Snapshot a job's state (`None` for ids no shard has seen).
+    pub fn state(&self, id: JobId) -> Option<JobState> {
+        let (shard, local) = decode_job_id(id);
+        self.shards.get(shard)?.state(local)
+    }
+
+    /// Block until the job reaches a terminal state.
+    ///
+    /// # Panics
+    /// Like [`Coordinator::wait`], panics on an unknown job id;
+    /// untrusted ids (e.g. off the wire) should go through
+    /// [`ShardedCoordinator::wait_checked`] instead.
+    pub fn wait(&self, id: JobId) -> JobState {
+        self.wait_checked(id)
+            .unwrap_or_else(|| panic!("unknown job id {id}"))
+    }
+
+    /// Non-panicking [`ShardedCoordinator::wait`]: `None` when the id's
+    /// shard tag names no shard or its shard never issued the local id.
+    pub fn wait_checked(&self, id: JobId) -> Option<JobState> {
+        let (shard, local) = decode_job_id(id);
+        self.shards.get(shard)?.wait_checked(local)
+    }
+
+    /// Cancel a still-queued job on whichever shard owns it; see
+    /// [`Coordinator::cancel`] for the exact semantics.
+    pub fn cancel(&self, id: JobId) -> bool {
+        let (shard, local) = decode_job_id(id);
+        self.shards.get(shard).is_some_and(|coord| coord.cancel(local))
+    }
+
+    /// Total queue depth across shards.
+    pub fn queue_len(&self) -> usize {
+        self.shards.iter().map(Coordinator::queue_len).sum()
+    }
+
+    /// Per-shard queue depths, indexed by shard.
+    pub fn shard_queue_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(Coordinator::queue_len).collect()
+    }
+
+    /// Aggregate metrics across shards (field-wise sums).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shards
+            .iter()
+            .map(Coordinator::metrics)
+            .fold(MetricsSnapshot::default(), |acc, m| acc.merge(&m))
+    }
+
+    /// Per-shard metric snapshots, indexed by shard.
+    pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(Coordinator::metrics).collect()
+    }
+
+    /// Drain and join every shard, in shard order (deterministic:
+    /// shard i's queue is fully drained and its workers joined before
+    /// shard i+1 starts shutting down), then return the aggregate
+    /// metrics.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        self.shards
+            .into_iter()
+            .map(Coordinator::shutdown)
+            .fold(MetricsSnapshot::default(), |acc, m| acc.merge(&m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, DatasetSpec};
+    use crate::engine::{KmeansQuery, Query, QueryResult};
+
+    fn km_spec(seed: u64, rmin: usize) -> JobSpec {
+        let query = KmeansQuery { k: 3, iters: 2, use_tree: true, ..Default::default() };
+        JobSpec {
+            dataset: DatasetSpec { kind: DatasetKind::Squiggles, scale: 0.003, seed },
+            query: Query::Kmeans(query),
+            rmin,
+        }
+    }
+
+    #[test]
+    fn job_id_roundtrip() {
+        for shard in [0usize, 1, 7, MAX_SHARDS - 1] {
+            for local in [1u64, 42, LOCAL_MASK] {
+                let id = encode_job_id(shard, local);
+                assert_eq!(decode_job_id(id), (shard, local));
+            }
+        }
+        // Shard 0 is the identity: single-shard ids match today's.
+        assert_eq!(encode_job_id(0, 17), 17);
+        // Every encodable id survives the wire's f64 number type
+        // exactly — the reason the tag sits at bit 44, not 56.
+        let max = encode_job_id(MAX_SHARDS - 1, LOCAL_MASK);
+        assert!(max < (1 << 53));
+        assert_eq!(max as f64 as u64, max);
+        let small_on_last_shard = encode_job_id(MAX_SHARDS - 1, 1);
+        assert_eq!(small_on_last_shard as f64 as u64, small_on_last_shard);
+    }
+
+    #[test]
+    fn ring_routing_is_deterministic_and_in_range() {
+        for n in [1usize, 2, 4, 8] {
+            let a = Ring::new(n);
+            let b = Ring::new(n);
+            for seed in 0..64u64 {
+                let key = km_spec(seed, 16).route_key();
+                let shard = a.route(&key);
+                assert!(shard < n);
+                assert_eq!(shard, b.route(&key), "ring not deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_spreads_keys_over_shards() {
+        let n = 4;
+        let ring = Ring::new(n);
+        let mut hits = vec![0usize; n];
+        for seed in 0..256u64 {
+            for rmin in [8usize, 16, 30] {
+                hits[ring.route(&km_spec(seed, rmin).route_key())] += 1;
+            }
+        }
+        // Not a balance proof, just a sanity floor: every shard owns a
+        // real fraction of a 768-key universe.
+        for (shard, &h) in hits.iter().enumerate() {
+            assert!(h > 768 / (n * 8), "shard {shard} nearly empty: {hits:?}");
+        }
+    }
+
+    #[test]
+    fn resharding_moves_few_keys() {
+        // The consistent-hash property: going 4 → 5 shards remaps only
+        // a minority of keys (hash % N would remap ~80% of them).
+        let before = Ring::new(4);
+        let after = Ring::new(5);
+        let total = 512usize;
+        let moved = (0..total as u64)
+            .filter(|&seed| {
+                let key = km_spec(seed, 16).route_key();
+                before.route(&key) != after.route(&key)
+            })
+            .count();
+        assert!(moved < total / 2, "resharding moved {moved}/{total} keys");
+    }
+
+    #[test]
+    fn submit_wait_across_shards() {
+        let coord = ShardedCoordinator::new(4, 1, 32);
+        let ids: Vec<JobId> = (0..8)
+            .map(|seed| coord.submit(km_spec(seed, 16)).unwrap())
+            .collect();
+        // Ids are globally unique even though shards count locally.
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "duplicate global ids");
+        for id in &ids {
+            let JobState::Done(r) = coord.wait(*id) else {
+                panic!("job {id} did not complete");
+            };
+            assert!(matches!(r.output, QueryResult::Kmeans { .. }));
+            assert!(r.dists > 0);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.submitted, 8);
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn state_and_cancel_route_by_id_tag() {
+        let coord = ShardedCoordinator::new(4, 1, 32);
+        let id = coord.submit(km_spec(1, 16)).unwrap();
+        assert!(coord.state(id).is_some());
+        // An id tagged for a shard that does not exist is unknown, not
+        // a panic (state) and not a cancel.
+        let bogus = encode_job_id(MAX_SHARDS - 1, 1);
+        assert!(coord.state(bogus).is_none());
+        assert!(!coord.cancel(bogus));
+        assert!(coord.wait_checked(bogus).is_none());
+        // An unknown local id on an existing shard: None, not a hang.
+        assert!(coord.wait_checked(encode_job_id(0, 999)).is_none());
+        assert!(coord.wait(id).is_terminal());
+        // Terminal jobs are not cancellable.
+        assert!(!coord.cancel(id));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn single_shard_matches_plain_coordinator_ids() {
+        let sharded = ShardedCoordinator::new(1, 2, 16);
+        let plain = Coordinator::new(2, 16);
+        for seed in 0..3u64 {
+            let a = sharded.submit(km_spec(seed, 16)).unwrap();
+            let b = plain.submit(km_spec(seed, 16)).unwrap();
+            assert_eq!(a, b, "N=1 ids must match the plain coordinator's");
+        }
+    }
+
+    #[test]
+    fn per_shard_introspection_sums_to_aggregate() {
+        let coord = ShardedCoordinator::new(4, 1, 32);
+        let ids: Vec<JobId> = (0..6)
+            .map(|seed| coord.submit(km_spec(seed, 16)).unwrap())
+            .collect();
+        for id in ids {
+            coord.wait(id);
+        }
+        let agg = coord.metrics();
+        let per = coord.shard_metrics();
+        assert_eq!(per.len(), 4);
+        let summed = per
+            .iter()
+            .fold(MetricsSnapshot::default(), |acc, m| acc.merge(m));
+        assert_eq!(summed, agg);
+        assert_eq!(agg.submitted, 6);
+        assert_eq!(
+            coord.shard_queue_lens().iter().sum::<usize>(),
+            coord.queue_len()
+        );
+        coord.shutdown();
+    }
+}

@@ -206,9 +206,11 @@ pub struct Index {
 
 impl Index {
     /// Assemble an index from pre-built parts (used by the coordinator's
-    /// dataset/tree caches). The tree is considered already built;
-    /// `rmin` must be the leaf threshold it was actually built with so
-    /// [`Index::rmin`] reports the truth.
+    /// dataset/tree caches — each shard of a
+    /// [`crate::coordinator::ShardedCoordinator`] assembles its jobs'
+    /// views this way over its own cache). The tree is considered
+    /// already built; `rmin` must be the leaf threshold it was actually
+    /// built with so [`Index::rmin`] reports the truth.
     pub fn from_parts(
         space: Arc<Space>,
         tree: Arc<MetricTree>,

@@ -13,8 +13,10 @@
 //!
 //! * **L3 (this crate)** — all tree/anchor algorithms, dataset suite,
 //!   distance accounting, the [`parallel`] execution layer, the batch-job
-//!   coordinator, and the bench harness that regenerates every table and
-//!   figure of the paper.
+//!   coordinator (shardable via
+//!   [`coordinator::ShardedCoordinator`]: consistent-hash dataset
+//!   routing over N independent shards), and the bench harness that
+//!   regenerates every table and figure of the paper.
 //! * **L2/L1 (python/, build-time only)** — a JAX compute graph wrapping a
 //!   Pallas tiled pairwise-distance kernel, AOT-lowered to HLO text in
 //!   `artifacts/`. The rust [`runtime`] loads those artifacts through

@@ -16,7 +16,7 @@
 
 use anchors_hierarchy::bench::tables;
 use anchors_hierarchy::cli::Args;
-use anchors_hierarchy::coordinator::{Coordinator, JobSpec, JobState};
+use anchors_hierarchy::coordinator::{shard, JobSpec, JobState, ShardedCoordinator};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
 use anchors_hierarchy::engine::{
     AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, Index, IndexBuilder, InitKind,
@@ -52,8 +52,11 @@ engine queries (common flags: --dataset NAME --scale F --seed N --rmin N
   tree     [--validate BOOL]    build only; print the tree's shape
 
 system
-  serve-demo [--workers N] [--jobs N]        exercise the coordinator
-  serve      [--addr HOST:PORT] [--workers N]  TCP JSON-line job server
+  serve-demo [--workers N] [--jobs N] [--shards N]  exercise the coordinator
+  serve      [--addr HOST:PORT] [--workers N] [--shards N] [--capacity N]
+             TCP JSON-line job server; --shards N = independent
+             coordinator shards (consistent-hash dataset routing),
+             --workers per shard. Default shards: $PALLAS_SHARDS, else 1
   artifacts                                  show the AOT manifest
 
 datasets: squiggles voronoi cell covtype reuters50 reuters100
@@ -317,13 +320,21 @@ fn run(args: &Args) -> Result<(), String> {
             let addr = args.str_flag("addr", "127.0.0.1:7407");
             let workers = args.flag("workers", 4usize)?;
             let capacity = args.flag("capacity", 256usize)?;
+            // --shards wins; else $PALLAS_SHARDS (shard::default_shards
+            // is its single owner — a set-but-invalid value errors
+            // loudly even when the flag is given); else 1. Out-of-range
+            // values are clamped by the constructor.
+            let shards = args.flag("shards", shard::default_shards()?)?;
             args.finish()?;
             let engine = BatchDistanceEngine::open_default().ok().map(Arc::new);
-            let coord = Arc::new(Coordinator::with_engine(workers, capacity, engine));
+            let coord = Arc::new(ShardedCoordinator::with_engine(
+                shards, workers, capacity, engine,
+            ));
+            let shards = coord.n_shards();
             let server = anchors_hierarchy::coordinator::server::Server::start(&addr, coord)
                 .map_err(|e| format!("bind {addr}: {e}"))?;
             println!(
-                "serving newline-delimited JSON on {} ({workers} workers, queue {capacity});\nexample: {{\"cmd\":\"submit\",\"dataset\":\"cell\",\"scale\":0.01,\"op\":\"kmeans\",\"k\":10}}\nCtrl-C to stop",
+                "serving newline-delimited JSON on {} ({shards} shard(s) × {workers} workers, queue {capacity} each);\nexample: {{\"cmd\":\"submit\",\"dataset\":\"cell\",\"scale\":0.01,\"op\":\"kmeans\",\"k\":10}}\nCtrl-C to stop",
                 server.addr()
             );
             loop {
@@ -335,8 +346,9 @@ fn run(args: &Args) -> Result<(), String> {
             let jobs = args.flag("jobs", 12usize)?;
             let scale = args.flag("scale", 0.01f64)?;
             let seed = args.flag("seed", 20130u64)?;
+            let shards = args.flag("shards", shard::default_shards()?)?;
             args.finish()?;
-            serve_demo(workers, jobs, scale, seed)
+            serve_demo(shards, workers, jobs, scale, seed)
         }
         "artifacts" => {
             args.finish()?;
@@ -359,13 +371,24 @@ fn run(args: &Args) -> Result<(), String> {
 
 /// Drive the coordinator with a mixed batch of engine queries across
 /// datasets — every query family in rotation.
-fn serve_demo(workers: usize, jobs: usize, scale: f64, seed: u64) -> Result<(), String> {
-    println!("coordinator: {workers} workers, submitting {jobs} jobs (scale {scale})");
+fn serve_demo(
+    shards: usize,
+    workers: usize,
+    jobs: usize,
+    scale: f64,
+    seed: u64,
+) -> Result<(), String> {
     let engine = BatchDistanceEngine::open_default().ok().map(Arc::new);
     if engine.is_some() {
         println!("XLA batch engine: enabled");
     }
-    let coord = Coordinator::with_engine(workers, jobs * 2, engine);
+    let coord = ShardedCoordinator::with_engine(shards, workers, jobs * 2, engine);
+    // Report the clamped count the coordinator actually runs with, not
+    // the requested one.
+    let shards = coord.n_shards();
+    println!(
+        "coordinator: {shards} shard(s) × {workers} workers, submitting {jobs} jobs (scale {scale})"
+    );
     let datasets = [
         DatasetKind::Squiggles,
         DatasetKind::Voronoi,
@@ -405,10 +428,16 @@ fn serve_demo(workers: usize, jobs: usize, scale: f64, seed: u64) -> Result<(), 
             _ => unreachable!(),
         }
     }
+    for (shard, m) in coord.shard_metrics().iter().enumerate() {
+        println!(
+            "shard {shard}: submitted {} completed {} failed {} dists {}",
+            m.submitted, m.completed, m.failed, m.total_dists
+        );
+    }
     let m = coord.shutdown();
     println!(
-        "done: submitted {} completed {} failed {} rejected {} total-dists {}",
-        m.submitted, m.completed, m.failed, m.rejected, m.total_dists
+        "done: submitted {} completed {} failed {} rejected {} cancelled {} total-dists {}",
+        m.submitted, m.completed, m.failed, m.rejected, m.cancelled, m.total_dists
     );
     Ok(())
 }

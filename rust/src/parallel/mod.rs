@@ -42,6 +42,12 @@
 //! torn down when the last clone drops. Tasks that are themselves
 //! running *on* the pool fall back to scoped spawning for their own
 //! nested fan-outs, so reentrancy can never deadlock the work channel.
+//!
+//! Executors deliberately stay *per consumer*: every coordinator worker
+//! owns one, on every shard of a
+//! [`crate::coordinator::ShardedCoordinator`] — a process-global pool
+//! would re-introduce exactly the cross-job serialization point (one
+//! broadcast channel) that the sharded coordinator exists to remove.
 
 use std::any::Any;
 use std::ops::Range;

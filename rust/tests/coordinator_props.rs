@@ -1,8 +1,16 @@
 //! Property tests on the coordinator's routing / batching / state
 //! invariants: no job lost, no job duplicated, backpressure holds, and
 //! results are deterministic functions of the spec.
+//!
+//! The second half pins the sharded router's contract
+//! ([`ShardedCoordinator`]): the shard count is a pure throughput knob
+//! — results *and per-job distance counts* are identical at shards
+//! {1, 2, 4} — and no job is lost or duplicated under concurrent
+//! submit / wait / shutdown across shards.
 
-use anchors_hierarchy::coordinator::{Coordinator, JobSpec, JobState, SubmitError};
+use anchors_hierarchy::coordinator::{
+    Coordinator, JobSpec, JobState, ShardedCoordinator, SubmitError,
+};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
 use anchors_hierarchy::engine::{
     AllPairsQuery, AnomalyQuery, InitKind, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
@@ -139,6 +147,162 @@ fn prop_results_deterministic_in_spec() {
         prop_assert!(a == b, "nondeterministic result: {a:?} vs {b:?}");
         Ok(())
     });
+}
+
+/// The acceptance bar for the sharded router: for any mixed
+/// multi-dataset job stream, shard counts 1, 2 and 4 produce identical
+/// `QueryResult`s *and* exactly identical per-job distance counts.
+///
+/// One worker per shard keeps the accounting comparison exact: each
+/// shard drains FIFO, and since all jobs for one `(dataset, rmin)` pair
+/// route to one shard, the same job in the stream pays the one-time
+/// dataset/tree build at every shard count.
+#[test]
+fn prop_shard_count_is_a_pure_throughput_knob() {
+    check("sharded: results and per-job dists identical at 1/2/4 shards", 4, |rng| {
+        let n_jobs = 6 + rng.below(6);
+        let mut specs: Vec<JobSpec> = (0..n_jobs).map(|_| random_spec(rng)).collect();
+        // Quantize scale and rmin so the stream *shares* (dataset, rmin)
+        // pairs — the interesting case for per-job accounting: the job
+        // that pays the one-time dataset/tree build must be the same
+        // one at every shard count.
+        for (i, s) in specs.iter_mut().enumerate() {
+            s.dataset.scale = [0.002, 0.003][i % 2];
+            s.rmin = [12, 24][(i / 2) % 2];
+        }
+        let run = |n_shards: usize| -> Result<Vec<(u64, QueryResult)>, String> {
+            let coord = ShardedCoordinator::new(n_shards, 1, 64);
+            let ids: Vec<_> = specs
+                .iter()
+                .map(|s| coord.submit(s.clone()))
+                .collect::<Result<_, _>>()
+                .map_err(|e| format!("submit failed below capacity: {e:?}"))?;
+            let outcomes = ids
+                .iter()
+                .map(|id| match coord.wait(*id) {
+                    JobState::Done(r) => Ok((r.dists, r.output)),
+                    JobState::Failed(e) => Err(format!("job failed: {e}")),
+                    _ => unreachable!("wait returned non-terminal"),
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            coord.shutdown();
+            Ok(outcomes)
+        };
+        let base = run(1)?;
+        for n_shards in [2usize, 4] {
+            let got = run(n_shards)?;
+            for (i, (a, b)) in base.iter().zip(&got).enumerate() {
+                prop_assert!(
+                    a.1 == b.1,
+                    "job {i}: result diverged at {n_shards} shards"
+                );
+                prop_assert!(
+                    a.0 == b.0,
+                    "job {i}: dists {} at 1 shard vs {} at {n_shards}",
+                    a.0,
+                    b.0
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// No job lost or duplicated when many threads submit and wait
+/// concurrently against a sharded coordinator, racing its shutdown.
+#[test]
+fn prop_sharded_no_lost_or_duplicated_jobs_under_concurrency() {
+    check("sharded: concurrent submit/wait/shutdown loses nothing", 4, |rng| {
+        let n_shards = 1 + rng.below(4);
+        let workers = 1 + rng.below(3);
+        let coord = std::sync::Arc::new(ShardedCoordinator::new(n_shards, workers, 256));
+        let n_threads = 2 + rng.below(3);
+        let jobs_per_thread = 3 + rng.below(5);
+        // Pre-generate specs on the test's RNG (the submitter threads
+        // must not share it).
+        let spec_sets: Vec<Vec<JobSpec>> = (0..n_threads)
+            .map(|_| (0..jobs_per_thread).map(|_| random_spec(rng)).collect())
+            .collect();
+        let mut all_ids = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = spec_sets
+                .into_iter()
+                .map(|specs| {
+                    let coord = std::sync::Arc::clone(&coord);
+                    scope.spawn(move || {
+                        let ids: Vec<_> = specs
+                            .into_iter()
+                            .map(|s| coord.submit(s).expect("below capacity"))
+                            .collect();
+                        // Wait for our own jobs from this thread, like a
+                        // real client would.
+                        for id in &ids {
+                            assert!(coord.wait(*id).is_terminal());
+                        }
+                        ids
+                    })
+                })
+                .collect();
+            for h in handles {
+                all_ids.extend(h.join().expect("submitter thread panicked"));
+            }
+        });
+        let expected = all_ids.len() as u64;
+        let mut sorted = all_ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        prop_assert!(sorted.len() == all_ids.len(), "duplicate global job ids");
+        let coord = std::sync::Arc::into_inner(coord).expect("all clones joined");
+        let m = coord.shutdown();
+        prop_assert!(m.submitted == expected, "submitted {} != {expected}", m.submitted);
+        prop_assert!(
+            m.completed + m.failed == m.submitted,
+            "terminal count mismatch: {} + {} != {}",
+            m.completed,
+            m.failed,
+            m.submitted
+        );
+        Ok(())
+    });
+}
+
+/// Cancellation: a queued job moves to `Failed("cancelled")` exactly
+/// once, running/terminal jobs are untouchable, and the metrics
+/// invariant `completed + failed == submitted` survives cancels.
+#[test]
+fn sharded_cancel_semantics() {
+    // One shard, one worker: the first (expensive) job holds the worker
+    // while the rest sit in the queue.
+    let coord = ShardedCoordinator::new(1, 1, 16);
+    let mut rng = Rng::new(0xCA);
+    let busy = coord.submit(random_spec(&mut rng)).unwrap();
+    let queued: Vec<_> = (0..4)
+        .map(|_| coord.submit(random_spec(&mut rng)).unwrap())
+        .collect();
+    let victim = queued[2];
+    let cancelled = coord.cancel(victim);
+    if cancelled {
+        // Double-cancel must not double-count.
+        assert!(!coord.cancel(victim), "cancel succeeded twice");
+        let JobState::Failed(e) = coord.wait(victim) else {
+            panic!("cancelled job not failed");
+        };
+        assert_eq!(e, "cancelled");
+    }
+    // Unknown ids are not cancellable.
+    assert!(!coord.cancel(0xDEAD_BEEF));
+    for id in queued.iter().chain([&busy]) {
+        assert!(coord.wait(*id).is_terminal());
+    }
+    // A terminal job is not cancellable.
+    assert!(!coord.cancel(busy));
+    let m = coord.shutdown();
+    assert_eq!(m.submitted, 5);
+    assert_eq!(m.completed + m.failed, m.submitted);
+    assert_eq!(m.cancelled, u64::from(cancelled));
+    if cancelled {
+        assert!(m.failed >= 1);
+    }
 }
 
 #[test]

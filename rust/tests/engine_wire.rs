@@ -5,7 +5,7 @@
 //! [`Server`] / [`Client`] pair.
 
 use anchors_hierarchy::coordinator::server::{Client, Server};
-use anchors_hierarchy::coordinator::Coordinator;
+use anchors_hierarchy::coordinator::{shard, ShardedCoordinator};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
 use anchors_hierarchy::engine::{
     wire, AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, IndexBuilder, InitKind,
@@ -62,8 +62,10 @@ fn every_real_result_roundtrips_through_json_text() {
     }
 }
 
-fn start_server() -> (Server, Arc<Coordinator>) {
-    let coord = Arc::new(Coordinator::new(2, 32));
+// `PALLAS_SHARDS`-aware (1 shard by default): the CI `PALLAS_SHARDS=4`
+// pass runs this whole wire suite against the sharded router.
+fn start_server() -> (Server, Arc<ShardedCoordinator>) {
+    let coord = Arc::new(ShardedCoordinator::new(shard::default_shards().unwrap(), 2, 32));
     let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
     (server, coord)
 }
