@@ -97,10 +97,109 @@ fn main() {
     println!("{}", cent_pointwise.report());
     let (cent_blocked, _) = kb.run("leaf/to-centers-k16-blocked-50k", |_| {
         let mut out: Vec<f64> = Vec::new();
-        block::dists_range_to_centers(&big, 0..ROWS, &ident, &centers, &c_sq, &mut out);
+        block::dists_contig_to_centers(&big, 0..ROWS, &ident, &centers, &c_sq, &mut out);
         out.iter().sum::<f64>()
     });
     println!("{}", cent_blocked.report());
+
+    // --- gather vs contiguous leaf scans (tree-order layout) ------------
+    // Build real trees and sweep every leaf in the two leaf-scan shapes:
+    // "gather" reads each leaf through its original-id list against the
+    // unpermuted dataset (the pre-layout path), "contig" streams the
+    // leaf's arena rows as one sequential slab. Same distances, same
+    // counts — the delta is pure memory behavior. Two regimes: the
+    // 50k×64 hot-path set (cache-resident rows, gather cost = pointer
+    // chasing) and a 5k×2000 high-dim set (each row is 8 KB; gather
+    // cost = TLB/prefetch misses).
+    let hi_dim = random_space(5_000, 2_000, 21);
+    let mut layout_results: Vec<(String, f64, f64)> = Vec::new();
+    for (label, space) in [("50kx64", &big), ("5kx2000", &hi_dim)] {
+        let tree = middle_out::build(
+            space,
+            &MiddleOutConfig { rmin: 64, ..Default::default() },
+        );
+        let arena = tree.arena();
+        let leaves = tree.leaf_ids();
+        let lq: Vec<f32> = {
+            let mut rng = Rng::new(31);
+            (0..space.dim()).map(|_| rng.normal() as f32).collect()
+        };
+        let lq_sq: f64 = lq.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let lcenters: Vec<Vec<f32>> = (0..16)
+            .map(|i| {
+                let mut rng = Rng::new(300 + i);
+                (0..space.dim()).map(|_| rng.normal() as f32).collect()
+            })
+            .collect();
+        let lc_sq: Vec<f64> = lcenters.iter().map(|c| dense_dot(c, c)).collect();
+        let lident: Vec<u32> = (0..lcenters.len() as u32).collect();
+
+        let (vec_gather, _) = kb.run(&format!("leaf/to-vec-gather-{label}"), |_| {
+            let mut out: Vec<f64> = Vec::new();
+            let mut acc = 0.0f64;
+            for &leaf in &leaves {
+                block::dists_to_vec(space, tree.points_under(leaf), &lq, lq_sq, &mut out);
+                acc += out.iter().sum::<f64>();
+            }
+            acc
+        });
+        println!("{}", vec_gather.report());
+        let (vec_contig, _) = kb.run(&format!("leaf/to-vec-contig-{label}"), |_| {
+            let mut out: Vec<f64> = Vec::new();
+            let mut acc = 0.0f64;
+            for &leaf in &leaves {
+                block::dists_contig_to_vec(arena, tree.node_rows(leaf), &lq, lq_sq, &mut out);
+                acc += out.iter().sum::<f64>();
+            }
+            acc
+        });
+        println!("{}", vec_contig.report());
+        layout_results.push((
+            format!("leaf_scan_to_vec_{label}"),
+            vec_gather.mean,
+            vec_contig.mean,
+        ));
+
+        let (cent_gather, _) = kb.run(&format!("leaf/to-centers-k16-gather-{label}"), |_| {
+            let mut out: Vec<f64> = Vec::new();
+            let mut acc = 0.0f64;
+            for &leaf in &leaves {
+                block::dists_to_centers(
+                    space,
+                    tree.points_under(leaf),
+                    &lident,
+                    &lcenters,
+                    &lc_sq,
+                    &mut out,
+                );
+                acc += out.iter().sum::<f64>();
+            }
+            acc
+        });
+        println!("{}", cent_gather.report());
+        let (cent_contig, _) = kb.run(&format!("leaf/to-centers-k16-contig-{label}"), |_| {
+            let mut out: Vec<f64> = Vec::new();
+            let mut acc = 0.0f64;
+            for &leaf in &leaves {
+                block::dists_contig_to_centers(
+                    arena,
+                    tree.node_rows(leaf),
+                    &lident,
+                    &lcenters,
+                    &lc_sq,
+                    &mut out,
+                );
+                acc += out.iter().sum::<f64>();
+            }
+            acc
+        });
+        println!("{}", cent_contig.report());
+        layout_results.push((
+            format!("leaf_scan_to_centers_k16_{label}"),
+            cent_gather.mean,
+            cent_contig.mean,
+        ));
+    }
 
     // --- persistent pool vs spawn-per-pass fan-out ----------------------
     // 64 small parallel passes at 4 workers — the per-iteration frontier
@@ -145,20 +244,22 @@ fn main() {
         json,
         "  \"dataset\": {{ \"rows\": {ROWS}, \"dims\": {DIMS}, \"kind\": \"gaussian\", \"seed\": 11 }},"
     );
-    for (name, before, after) in [
-        ("leaf_to_vec", &vec_pointwise, &vec_blocked),
-        ("leaf_to_centers_k16", &cent_pointwise, &cent_blocked),
-        ("pool_fanout_x64_4t", &pool_spawn, &pool_persistent),
-    ] {
+    let mut rows: Vec<(String, f64, f64)> = vec![
+        ("leaf_to_vec".into(), vec_pointwise.mean, vec_blocked.mean),
+        ("leaf_to_centers_k16".into(), cent_pointwise.mean, cent_blocked.mean),
+        ("pool_fanout_x64_4t".into(), pool_spawn.mean, pool_persistent.mean),
+    ];
+    rows.extend(layout_results);
+    for (name, before, after) in &rows {
         let _ = writeln!(
             json,
             "  \"{name}\": {{ \"before_secs\": {:.6}, \"after_secs\": {:.6}, \"speedup\": {:.3} }},",
-            before.mean,
-            after.mean,
-            before.mean / after.mean
+            before,
+            after,
+            before / after
         );
     }
-    let _ = writeln!(json, "  \"note\": \"before = pointwise scan / spawn-per-pass; after = blocked kernel / persistent pool\"");
+    let _ = writeln!(json, "  \"note\": \"before = pointwise scan / spawn-per-pass / gather leaf scan; after = blocked kernel / persistent pool / contiguous arena scan (leaf_scan_* rows: 50k×64 and 5k×2000 trees, rmin 64)\"");
     let _ = writeln!(json, "}}");
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_paths.json");
     std::fs::write(path, &json).expect("write BENCH_hot_paths.json");

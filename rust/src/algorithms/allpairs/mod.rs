@@ -25,19 +25,17 @@ pub fn naive_close_pairs(space: &Space, tau: f64) -> PairsResult {
     let before = space.dist_count();
     let mut pairs = Vec::new();
     let n = space.n();
-    let ids: Vec<u32> = (0..n as u32).collect();
     let mut dists: Vec<f64> = Vec::new();
-    // One blocked row-tail per point: the same R(R−1)/2 counted
+    // One contiguous row-tail per point: the same R(R−1)/2 counted
     // distances as the classic double loop, tile-accounted.
     for i in 0..n {
-        let tail = &ids[i + 1..];
-        if tail.is_empty() {
+        if i + 1 >= n {
             break;
         }
-        block::dists_rows(space, &ids[i..i + 1], tail, &mut dists);
-        for (&j, &d) in tail.iter().zip(&dists) {
+        block::dists_contig_rows(space, i..i + 1, i + 1..n, &mut dists);
+        for (off, &d) in dists.iter().enumerate() {
             if d <= tau {
-                pairs.push((i as u32, j));
+                pairs.push((i as u32, (i + 1 + off) as u32));
             }
         }
     }
@@ -78,17 +76,25 @@ fn dual(
     }
     match (na.children, nb.children) {
         (None, None) => {
+            // Leaf blocks run on the tree-order arena: each side is one
+            // contiguous row slab, and the `layout.inv` slices give the
+            // original ids for the emitted pairs — same distances, same
+            // counts, same pair stream as the gather kernels.
+            let arena = tree.arena();
+            let ra = tree.node_rows(a);
+            let ids_a = tree.points_under(a);
             if a == b {
-                // Upper triangle, one blocked row-tail per point: the
-                // same |L|·(|L|−1)/2 counted distances as the pointwise
-                // double loop.
-                for (pi, &p) in na.points.iter().enumerate() {
-                    let tail = &na.points[pi + 1..];
-                    if tail.is_empty() {
+                // Upper triangle, one contiguous row-tail per point:
+                // the same |L|·(|L|−1)/2 counted distances as the
+                // pointwise double loop.
+                for (pi, &p) in ids_a.iter().enumerate() {
+                    let tail_ids = &ids_a[pi + 1..];
+                    if tail_ids.is_empty() {
                         break;
                     }
-                    block::dists_rows(space, &na.points[pi..pi + 1], tail, dists);
-                    for (&q, &d) in tail.iter().zip(dists.iter()) {
+                    let r = ra.start + pi;
+                    block::dists_contig_rows(arena, r..r + 1, r + 1..ra.end, dists);
+                    for (&q, &d) in tail_ids.iter().zip(dists.iter()) {
                         if d <= tau {
                             out.push((p.min(q), p.max(q)));
                         }
@@ -97,10 +103,12 @@ fn dual(
             } else {
                 // Distinct leaves partition the points (no p == q), so
                 // the full |A|·|B| block matches the scalar accounting.
-                block::dists_rows(space, &na.points, &nb.points, dists);
-                for (pi, &p) in na.points.iter().enumerate() {
-                    let row = &dists[pi * nb.points.len()..(pi + 1) * nb.points.len()];
-                    for (&q, &d) in nb.points.iter().zip(row) {
+                let rb = tree.node_rows(b);
+                let ids_b = tree.points_under(b);
+                block::dists_contig_rows(arena, ra, rb, dists);
+                for (pi, &p) in ids_a.iter().enumerate() {
+                    let row = &dists[pi * ids_b.len()..(pi + 1) * ids_b.len()];
+                    for (&q, &d) in ids_b.iter().zip(row) {
                         if d <= tau {
                             out.push((p.min(q), p.max(q)));
                         }

@@ -119,16 +119,19 @@ fn recurse(
 
     match node.children {
         None => {
-            let leaf = node.points.len() as u64;
+            let arena = tree.arena();
+            let rows = tree.node_rows(node_id);
+            let leaf = rows.len() as u64;
             if *found + leaf < params.threshold
                 && *possible >= leaf
                 && *possible - leaf >= params.threshold
             {
                 // Neither rule 3 nor rule 4 can trigger inside this leaf
                 // no matter how its points fall, so the scalar scan would
-                // visit every point — the blocked kernel is safe and its
-                // bulk accounting matches the pointwise count exactly.
-                block::dists_to_vec(space, &node.points, qrow, q_sq, dists);
+                // visit every point — the contiguous kernel over the
+                // leaf's arena slab is safe and its bulk accounting
+                // matches the pointwise count exactly.
+                block::dists_contig_to_vec(arena, rows, qrow, q_sq, dists);
                 for &d in dists.iter() {
                     if d <= params.radius {
                         *found += 1;
@@ -138,8 +141,11 @@ fn recurse(
                 }
                 return None;
             }
-            for &p in &node.points {
-                let d = space.dist_to_vec(p as usize, qrow, q_sq);
+            // Early-exit-eligible leaf: pointwise over the same arena
+            // rows (sequential reads; same values, same per-point
+            // counting, same exit points as the gather scan).
+            for r in rows {
+                let d = arena.dist_to_vec(r, qrow, q_sq);
                 if d <= params.radius {
                     *found += 1;
                     if *found >= params.threshold {

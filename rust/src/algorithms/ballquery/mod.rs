@@ -56,7 +56,7 @@ pub fn naive_ball_stats(space: &Space, center: &[f32], radius: f64) -> BallStats
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
-        block::dists_range_to_vec(space, lo..hi, center, c_sq, &mut dists);
+        block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
         for (off, &d) in dists.iter().enumerate() {
             if d <= radius {
                 let p = lo + off;
@@ -126,14 +126,20 @@ fn recurse(
             recurse(space, tree, b, center, c_sq, radius, acc, dists);
         }
         None => {
-            // Boundary leaf: blocked kernel over the whole point list
-            // (bit-identical to the pointwise scan, counted the same).
-            block::dists_to_vec(space, &node.points, center, c_sq, dists);
-            for (&p, &d) in node.points.iter().zip(dists.iter()) {
+            // Boundary leaf: contiguous kernel over the leaf's arena
+            // rows — one sequential slab, bit-identical distances and
+            // the same count as the gather scan it replaces. In-ball
+            // rows accumulate straight from the arena (each arena row
+            // is a bit-exact copy of its dataset row, so the sums match
+            // the gather path add for add).
+            let arena = tree.arena();
+            let rows = tree.node_rows(id);
+            block::dists_contig_to_vec(arena, rows.clone(), center, c_sq, dists);
+            for (r, &d) in rows.zip(dists.iter()) {
                 if d <= radius {
                     acc.count += 1;
-                    space.accumulate(p as usize, &mut acc.sum);
-                    acc.sumsq += space.data.sqnorm(p as usize);
+                    arena.accumulate(r, &mut acc.sum);
+                    acc.sumsq += arena.data.sqnorm(r);
                 }
             }
         }

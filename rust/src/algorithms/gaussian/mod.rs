@@ -9,7 +9,7 @@
 //! sufficient statistics; otherwise we recurse. With `tau = 0` the result
 //! is exact (bit-comparable to naive EM up to summation order).
 
-use crate::metrics::{dense_dot, Space};
+use crate::metrics::{block, dense_dot, Space};
 use crate::tree::{MetricTree, NodeId};
 
 /// Spherical-Gaussian mixture parameters.
@@ -83,6 +83,15 @@ pub fn naive_em_step(space: &Space, mix: &mut Mixture) -> f64 {
     acc.loglik
 }
 
+/// Scratch reused across every leaf of one tree E-step: the identity
+/// candidate list (every component scores every leaf point), the
+/// contiguous-kernel output block and the per-point log-weight row.
+struct EmScratch {
+    ident: Vec<u32>,
+    dists: Vec<f64>,
+    logw: Vec<f64>,
+}
+
 /// One tree E-step + M-step. `tau` bounds the allowed responsibility
 /// bracket width before a node is awarded in bulk (0 = exact).
 pub fn tree_em_step(space: &Space, tree: &MetricTree, mix: &mut Mixture, tau: f64) -> f64 {
@@ -90,11 +99,17 @@ pub fn tree_em_step(space: &Space, tree: &MetricTree, mix: &mut Mixture, tau: f6
     let d = space.dim();
     let m_sq: Vec<f64> = mix.means.iter().map(|m| dense_dot(m, m)).collect();
     let mut acc = EmAccum::new(k, d);
-    recurse(space, tree, tree.root, mix, &m_sq, tau, &mut acc);
+    let mut scratch = EmScratch {
+        ident: (0..k as u32).collect(),
+        dists: Vec::new(),
+        logw: vec![0f64; k],
+    };
+    recurse(space, tree, tree.root, mix, &m_sq, tau, &mut acc, &mut scratch);
     m_step(space, mix, &acc);
     acc.loglik
 }
 
+#[allow(clippy::too_many_arguments)]
 fn recurse(
     space: &Space,
     tree: &MetricTree,
@@ -103,6 +118,7 @@ fn recurse(
     m_sq: &[f64],
     tau: f64,
     acc: &mut EmAccum,
+    scratch: &mut EmScratch,
 ) {
     let node = tree.node(id);
     let k = mix.k();
@@ -153,17 +169,32 @@ fn recurse(
     }
     match node.children {
         Some((a, b)) => {
-            recurse(space, tree, a, mix, m_sq, tau, acc);
-            recurse(space, tree, b, mix, m_sq, tau, acc);
+            recurse(space, tree, a, mix, m_sq, tau, acc, scratch);
+            recurse(space, tree, b, mix, m_sq, tau, acc, scratch);
         }
         None => {
-            let mut logw = vec![0f64; k];
-            for &p in &node.points {
+            // Leaf E-step on the tree-order arena: one contiguous
+            // kernel call delivers the full |leaf| × k distance block
+            // (bit-identical values, same |leaf|·k count as the
+            // pointwise loop), then responsibilities accumulate per
+            // row exactly as before.
+            let arena = tree.arena();
+            let rows = tree.node_rows(id);
+            block::dists_contig_to_centers(
+                arena,
+                rows.clone(),
+                &scratch.ident,
+                &mix.means,
+                m_sq,
+                &mut scratch.dists,
+            );
+            for (t, r) in rows.enumerate() {
+                let drow = &scratch.dists[t * k..(t + 1) * k];
                 for c in 0..k {
-                    let dist = space.dist_to_vec(p as usize, &mix.means[c], m_sq[c]);
-                    logw[c] = log_weight(mix.weights[c], mix.variances[c], dist * dist, dim);
+                    scratch.logw[c] =
+                        log_weight(mix.weights[c], mix.variances[c], drow[c] * drow[c], dim);
                 }
-                accumulate_point(space, p as usize, &logw, acc);
+                accumulate_point(arena, r, &scratch.logw, acc);
             }
         }
     }

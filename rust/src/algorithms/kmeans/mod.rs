@@ -157,7 +157,7 @@ fn naive_pass(
         let mut lo = range.start;
         while lo < range.end {
             let hi = (lo + block::TILE).min(range.end);
-            block::dists_range_to_centers(space, lo..hi, &ident, centroids, c_sq, &mut dists);
+            block::dists_contig_to_centers(space, lo..hi, &ident, centroids, c_sq, &mut dists);
             for (ti, p) in (lo..hi).enumerate() {
                 let row = &dists[ti * k..(ti + 1) * k];
                 let mut best = f64::INFINITY;
@@ -277,6 +277,10 @@ pub fn naive_lloyd_ex(
 struct StepCtx<'a> {
     space: &'a Space,
     tree: &'a MetricTree,
+    /// The tree-order arena: every leaf is one contiguous row range
+    /// here, so leaf assignment streams a sequential slab instead of
+    /// gathering scattered rows. Shares `space`'s distance counter.
+    arena: &'a Space,
     centroids: &'a [Vec<f32>],
     c_sq: &'a [f64],
     engine: Option<&'a BatchDistanceEngine>,
@@ -292,6 +296,10 @@ struct StepScratch {
     /// Blocked-kernel output buffer for leaf assignment (row-major
     /// points × candidates), reused across every leaf of the pass.
     block: Vec<f64>,
+    /// Arena row-id buffer for the XLA leaf path (its API takes
+    /// `&[u32]`), reused across leaves so the hot loop stays
+    /// allocation-free.
+    row_ids: Vec<u32>,
 }
 
 /// Step 1 of the paper's KmeansStep: prune the candidate range `lo..hi`
@@ -370,8 +378,8 @@ fn kmeans_step(
             kmeans_step(ctx, b, new_lo, new_hi, scratch, acc);
         }
         None => {
-            let StepScratch { cands, block, .. } = scratch;
-            leaf_assign(ctx, node_id, &cands[new_lo..new_hi], acc, block);
+            let StepScratch { cands, block, row_ids, .. } = scratch;
+            leaf_assign(ctx, node_id, &cands[new_lo..new_hi], acc, block, row_ids);
         }
     }
     scratch.cands.truncate(new_lo);
@@ -438,8 +446,8 @@ fn collect_step_tasks(
             }
         }
         None => {
-            let StepScratch { cands, block, .. } = scratch;
-            leaf_assign(ctx, node_id, &cands[new_lo..new_hi], acc, block);
+            let StepScratch { cands, block, row_ids, .. } = scratch;
+            leaf_assign(ctx, node_id, &cands[new_lo..new_hi], acc, block, row_ids);
         }
     }
     scratch.cands.truncate(new_lo);
@@ -454,6 +462,7 @@ fn run_step_task(ctx: &StepCtx, task: &StepTask) -> Accum {
         cands: task.cands.clone(),
         dists: vec![0.0; n0],
         block: Vec::new(),
+        row_ids: Vec::new(),
     };
     let (a, b) = task.children;
     kmeans_step(ctx, a, 0, n0, &mut scratch, &mut acc);
@@ -469,20 +478,24 @@ fn leaf_assign(
     cands: &[u32],
     acc: &mut Accum,
     dists: &mut Vec<f64>,
+    row_ids: &mut Vec<u32>,
 ) {
-    let node = ctx.tree.node(node_id);
+    let rows = ctx.tree.node_rows(node_id);
     // Dense data + engine + big enough block → XLA tile; else the
-    // blocked scalar kernel (bit-identical to the pointwise scan).
-    if let (Some(engine), false) = (ctx.engine, ctx.space.data.is_sparse()) {
-        if node.points.len() * cands.len() >= engine.min_block() {
+    // contiguous scalar kernel (bit-identical to the pointwise scan).
+    // Either way the rows come from the tree-order arena — one
+    // sequential slab per leaf, no gather.
+    if let (Some(engine), false) = (ctx.engine, ctx.arena.data.is_sparse()) {
+        if rows.len() * cands.len() >= engine.min_block() {
             let cents: Vec<Vec<f32>> = cands
                 .iter()
                 .map(|&c| ctx.centroids[c as usize].clone())
                 .collect();
-            let d2 = engine.dist2_block(ctx.space, &node.points, &cents);
-            ctx.space
-                .count_bulk((node.points.len() * cands.len()) as u64);
-            for (pi, &p) in node.points.iter().enumerate() {
+            row_ids.clear();
+            row_ids.extend(rows.start as u32..rows.end as u32);
+            let d2 = engine.dist2_block(ctx.arena, row_ids, &cents);
+            ctx.arena.count_bulk((rows.len() * cands.len()) as u64);
+            for (pi, r) in rows.enumerate() {
                 let row = &d2[pi * cands.len()..(pi + 1) * cands.len()];
                 let (mut best, mut best_c) = (f64::INFINITY, 0u32);
                 for (ci, &v) in row.iter().enumerate() {
@@ -493,14 +506,14 @@ fn leaf_assign(
                 }
                 let bc = best_c as usize;
                 acc.counts[bc] += 1;
-                ctx.space.accumulate(p as usize, &mut acc.sums[bc]);
+                ctx.arena.accumulate(r, &mut acc.sums[bc]);
                 acc.distortion += best;
             }
             return;
         }
     }
-    block::dists_to_centers(ctx.space, &node.points, cands, ctx.centroids, ctx.c_sq, dists);
-    for (pi, &p) in node.points.iter().enumerate() {
+    block::dists_contig_to_centers(ctx.arena, rows.clone(), cands, ctx.centroids, ctx.c_sq, dists);
+    for (pi, r) in rows.enumerate() {
         let row = &dists[pi * cands.len()..(pi + 1) * cands.len()];
         let (mut best, mut best_c) = (f64::INFINITY, 0u32);
         for (&c, &d) in cands.iter().zip(row) {
@@ -511,7 +524,7 @@ fn leaf_assign(
         }
         let bc = best_c as usize;
         acc.counts[bc] += 1;
-        ctx.space.accumulate(p as usize, &mut acc.sums[bc]);
+        ctx.arena.accumulate(r, &mut acc.sums[bc]);
         acc.distortion += best * best;
     }
 }
@@ -549,6 +562,7 @@ pub fn tree_lloyd_ex(
         cands: (0..centroids.len() as u32).collect(),
         dists: vec![0.0; centroids.len()],
         block: Vec::new(),
+        row_ids: Vec::new(),
     };
     let n_cands = scratch.cands.len();
     let mut iterations = 0;
@@ -559,6 +573,7 @@ pub fn tree_lloyd_ex(
         let ctx = StepCtx {
             space,
             tree,
+            arena: tree.arena(),
             centroids: &centroids,
             c_sq: &c_sq,
             engine: opts.engine.as_deref(),

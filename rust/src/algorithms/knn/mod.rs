@@ -36,7 +36,7 @@ pub fn naive_knn(space: &Space, qrow: &[f32], q_sq: f64, k: usize, skip: Option<
         let mut lo = seg.start;
         while lo < seg.end {
             let hi = (lo + block::SCAN_CHUNK).min(seg.end);
-            block::dists_range_to_vec(space, lo..hi, qrow, q_sq, &mut dists);
+            block::dists_contig_to_vec(space, lo..hi, qrow, q_sq, &mut dists);
             for (off, &d) in dists.iter().enumerate() {
                 push_bounded(&mut heap, k, (lo + off) as u32, d);
             }
@@ -58,9 +58,18 @@ pub fn tree_knn(
     let mut result: BinaryHeap<HeapItem> = BinaryHeap::new();
     // Min-heap on the lower bound of each node's distance to q.
     let mut frontier: BinaryHeap<Reverse<(OrdF64, NodeId)>> = BinaryHeap::new();
-    // Scratch reused across leaf scans: the candidate ids of the current
-    // leaf (minus `skip`) and their blocked-kernel distances.
-    let mut ids: Vec<u32> = Vec::new();
+    // Leaf scans run on the tree-order arena: a leaf is one contiguous
+    // row range, its original ids the matching `layout.inv` slice. The
+    // skipped point (a dataset id) is translated to its arena row once;
+    // excluding it splits a leaf into two contiguous sub-scans, so its
+    // distance is neither computed nor counted — exactly the old
+    // filtered-gather behavior, point for point.
+    let arena = tree.arena();
+    let skip_row: Option<usize> = skip
+        .and_then(|p| tree.layout.perm.get(p as usize).copied())
+        .filter(|&r| r != u32::MAX)
+        .map(|r| r as usize);
+    // Scratch reused across leaf scans.
     let mut dists: Vec<f64> = Vec::new();
     frontier.push(Reverse((OrdF64(node_lower_bound(space, tree, tree.root, qrow, q_sq)), tree.root)));
     while let Some(Reverse((OrdF64(lb), node_id))) = frontier.pop() {
@@ -74,11 +83,20 @@ pub fn tree_knn(
         let node = tree.node(node_id);
         match node.children {
             None => {
-                ids.clear();
-                ids.extend(node.points.iter().copied().filter(|&p| skip != Some(p)));
-                block::dists_to_vec(space, &ids, qrow, q_sq, &mut dists);
-                for (&p, &d) in ids.iter().zip(&dists) {
-                    push_bounded(&mut result, k, p, d);
+                let rows = tree.node_rows(node_id);
+                let segs = match skip_row {
+                    Some(s) if rows.contains(&s) => [rows.start..s, s + 1..rows.end],
+                    _ => [rows.clone(), rows.end..rows.end],
+                };
+                for seg in segs {
+                    if seg.is_empty() {
+                        continue;
+                    }
+                    let ids = &tree.layout.inv[seg.clone()];
+                    block::dists_contig_to_vec(arena, seg, qrow, q_sq, &mut dists);
+                    for (&p, &d) in ids.iter().zip(&dists) {
+                        push_bounded(&mut result, k, p, d);
+                    }
                 }
             }
             Some((a, b)) => {

@@ -153,7 +153,7 @@ fn compute_node_components(space: &Space, tree: &MetricTree, uf: &mut UnionFind)
             None => {
                 let mut comp = None;
                 let mut same = true;
-                for &p in &node.points {
+                for &p in tree.points_under(id as NodeId) {
                     let c = uf.find(p);
                     match comp {
                         None => comp = Some(c),
@@ -241,11 +241,18 @@ fn descend(
     }
     match node.children {
         None => {
-            for &p in &node.points {
+            // Leaf scan over the tree-order arena: rows stream
+            // sequentially, ids come from the matching layout slice.
+            // Stays pointwise (not a kernel) because the component
+            // filter skips rows — computing their distances anyway
+            // would inflate the count the paper measures.
+            let arena = tree.arena();
+            let ids = tree.points_under(id);
+            for (r, &p) in tree.node_rows(id).zip(ids.iter()) {
                 if p == skip || uf.find(p) == comp {
                     continue;
                 }
-                let d = space.dist_to_vec(p as usize, qrow, q_sq);
+                let d = arena.dist_to_vec(r, qrow, q_sq);
                 if d < *best_d {
                     *best_d = d;
                     *best = Some((p, d));

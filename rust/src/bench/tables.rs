@@ -432,10 +432,10 @@ pub fn figure1(rows: usize, seed: u64) -> Figure1Result {
     };
     let (pa, pb) = match root.children {
         Some((a, b)) => (
-            purity(&tree.points_under(a)),
-            purity(&tree.points_under(b)),
+            purity(tree.points_under(a)),
+            purity(tree.points_under(b)),
         ),
-        None => (purity(&tree.points_under(tree.root)), 1.0),
+        None => (purity(tree.points_under(tree.root)), 1.0),
     };
 
     // kd-tree purity by depth.

@@ -51,6 +51,31 @@ impl DenseMatrix {
         self.sqnorms[i]
     }
 
+    /// One contiguous slab of rows plus the matching cached squared
+    /// norms — the zero-gather view the contiguous leaf-scan kernels
+    /// read ([`crate::metrics::block`]). Values are `(hi−lo)·d` floats
+    /// in storage order.
+    #[inline]
+    pub fn rows_slab(&self, rows: std::ops::Range<usize>) -> (&[f32], &[f64]) {
+        (
+            &self.values[rows.start * self.d..rows.end * self.d],
+            &self.sqnorms[rows],
+        )
+    }
+
+    /// Copy the listed rows (in order, repeats allowed) into a new
+    /// matrix. Cached norms are copied, not recomputed, so the selected
+    /// rows are bit-identical to the originals in every cached quantity.
+    pub fn select_rows(&self, ids: &[u32]) -> DenseMatrix {
+        let mut values = Vec::with_capacity(ids.len() * self.d);
+        let mut sqnorms = Vec::with_capacity(ids.len());
+        for &i in ids {
+            values.extend_from_slice(self.row(i as usize));
+            sqnorms.push(self.sqnorms[i as usize]);
+        }
+        DenseMatrix { n: ids.len(), d: self.d, values, sqnorms }
+    }
+
     /// L2-normalize every row in place (zero rows are left untouched).
     /// Turns Euclidean distance into the cosine-equivalent metric
     /// `sqrt(2 - 2 cos)` — used for bag-of-words data.
@@ -159,6 +184,30 @@ impl SparseMatrix {
         self.indices.len()
     }
 
+    /// Copy the listed rows (in order, repeats allowed) into a new CSR
+    /// matrix. Per-row index/value segments and cached norms are copied
+    /// verbatim, so the selected rows are bit-identical to the
+    /// originals.
+    pub fn select_rows(&self, ids: &[u32]) -> SparseMatrix {
+        let nnz: usize = ids
+            .iter()
+            .map(|&i| self.indptr[i as usize + 1] - self.indptr[i as usize])
+            .sum();
+        let mut indptr = Vec::with_capacity(ids.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        let mut sqnorms = Vec::with_capacity(ids.len());
+        indptr.push(0);
+        for &i in ids {
+            let (idx, val) = self.row(i as usize);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(val);
+            indptr.push(indices.len());
+            sqnorms.push(self.sqnorms[i as usize]);
+        }
+        SparseMatrix { n: ids.len(), d: self.d, indptr, indices, values, sqnorms }
+    }
+
     /// Sparse·sparse dot product (merge join on sorted indices).
     pub fn dot_rows(&self, i: usize, j: usize) -> f64 {
         let (ia, va) = self.row(i);
@@ -252,6 +301,16 @@ impl Data {
     }
     pub fn is_sparse(&self) -> bool {
         matches!(self, Data::Sparse(_))
+    }
+
+    /// Copy the listed rows (in order) into a new payload of the same
+    /// kind — the permutation primitive behind the tree-order arena
+    /// ([`crate::tree::Layout`]).
+    pub fn select_rows(&self, ids: &[u32]) -> Data {
+        match self {
+            Data::Dense(m) => Data::Dense(m.select_rows(ids)),
+            Data::Sparse(m) => Data::Sparse(m.select_rows(ids)),
+        }
     }
 }
 
@@ -357,5 +416,36 @@ mod tests {
     #[should_panic(expected = "increasing")]
     fn sparse_rejects_unsorted() {
         SparseMatrix::from_rows(4, &[vec![(2, 1.0), (1, 1.0)]]);
+    }
+
+    #[test]
+    fn dense_select_rows_is_bit_exact() {
+        let m = DenseMatrix::new(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = m.select_rows(&[2, 0, 2]);
+        assert_eq!((s.n, s.d), (3, 2));
+        assert_eq!(s.row(0), m.row(2));
+        assert_eq!(s.row(1), m.row(0));
+        assert_eq!(s.sqnorm(0).to_bits(), m.sqnorm(2).to_bits());
+        assert_eq!(s.sqnorm(2).to_bits(), m.sqnorm(2).to_bits());
+        let (slab, norms) = s.rows_slab(1..3);
+        assert_eq!(slab, &[1., 2., 5., 6.]);
+        assert_eq!(norms.len(), 2);
+    }
+
+    #[test]
+    fn sparse_select_rows_is_bit_exact() {
+        let rows = vec![
+            vec![(0u32, 1.0f32), (3, 2.0)],
+            vec![(1u32, 3.0f32)],
+            vec![],
+        ];
+        let m = SparseMatrix::from_rows(5, &rows);
+        let s = m.select_rows(&[1, 2, 0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.row(0), m.row(1));
+        assert_eq!(s.row(1), m.row(2));
+        assert_eq!(s.row(2), m.row(0));
+        assert_eq!(s.sqnorm(2).to_bits(), m.sqnorm(0).to_bits());
+        assert_eq!(s.nnz(), 3);
     }
 }

@@ -272,6 +272,18 @@ impl Index {
 
     /// The metric tree, building it on first use.
     ///
+    /// The built tree carries the tree-order memory layout
+    /// ([`crate::tree::Layout`]): a permuted copy of the dataset (the
+    /// *arena*, sharing this index's distance counter) in which every
+    /// leaf is one contiguous row range, so leaf scans stream
+    /// sequential slabs instead of gathering scattered rows. All ids
+    /// crossing the query boundary — results out, point targets in —
+    /// remain dataset ids; translation happens inside the algorithms
+    /// through zero-cost layout views, and results are bit-identical
+    /// to the pre-layout gather path (`tests/layout_equivalence.rs`).
+    /// The price is one extra resident copy of the dataset per built
+    /// tree.
+    ///
     /// Lock-ordering invariant: the build runs under the tree mutex and
     /// broadcasts on this index's worker pool, so it must never be
     /// *reached* from inside a pool epoch — a task blocking on this

@@ -15,6 +15,21 @@
 //! kmeans-via-XLA path enjoying it. Before/after throughput is recorded
 //! in `BENCH_hot_paths.json` (docs/EXPERIMENTS.md §Blocked kernels).
 //!
+//! ## Gather vs contiguous forms
+//!
+//! Each shape comes in two forms. The **gather** forms
+//! ([`dists_to_vec`], [`dists_to_centers`], [`dists_rows`]) take an
+//! explicit `rows: &[u32]` id list and chase one pointer per row — the
+//! only option when the candidate set is scattered (and the honest
+//! baseline the `hot_paths` bench measures). The **contiguous** forms
+//! ([`dists_contig_to_vec`], [`dists_contig_to_centers`],
+//! [`dists_contig_rows`]) take a `Range<usize>` and stream the rows as
+//! one sequential slab — zero index indirection, hardware-prefetcher
+//! friendly. Since the tree-order layout ([`crate::tree::Layout`])
+//! made every leaf a contiguous range of the permuted arena, **all**
+//! tree leaf scans use the contiguous forms; the gather forms remain
+//! for genuinely scattered row sets and as the before/after reference.
+//!
 //! ## Bit-identity contract
 //!
 //! Each element is computed by *exactly* the expression the scalar
@@ -96,9 +111,11 @@ pub fn dists_to_centers(
     fill_centers(space, rows.len(), |t| rows[t] as usize, cand, centroids, c_sq, out);
 }
 
-/// [`dists_to_vec`] over a contiguous row range — full-dataset scans
-/// (naive baselines) that have no id list to begin with.
-pub fn dists_range_to_vec(
+/// [`dists_to_vec`] over a contiguous row range, reading the rows as
+/// one sequential slab — the zero-gather form every tree leaf scan
+/// (knn / ball / anomaly) uses on the tree-order arena, and the
+/// streamed form of the naive full-dataset scans.
+pub fn dists_contig_to_vec(
     space: &Space,
     rows: Range<usize>,
     q: &[f32],
@@ -111,9 +128,20 @@ pub fn dists_range_to_vec(
     while lo < rows.end {
         let hi = (lo + TILE).min(rows.end);
         match (&space.data, space.metric) {
+            // Dense Euclidean: one values slab + one norms slice per
+            // tile ([`crate::data::DenseMatrix::rows_slab`]) — same
+            // math as the per-row form, no per-row slice arithmetic.
+            (Data::Dense(m), Metric::Euclidean) if m.d > 0 => {
+                let (slab, norms) = m.rows_slab(lo..hi);
+                for (row, &r_sq) in slab.chunks_exact(m.d).zip(norms) {
+                    let d2 = r_sq + q_sq - 2.0 * dense_dot(row, q);
+                    out.push(d2.max(0.0).sqrt());
+                }
+            }
             (Data::Dense(m), Metric::Euclidean) => {
+                // d == 0: every distance degenerates to √q_sq.
                 for i in lo..hi {
-                    let d2 = m.sqnorm(i) + q_sq - 2.0 * dense_dot(m.row(i), q);
+                    let d2 = m.sqnorm(i) + q_sq;
                     out.push(d2.max(0.0).sqrt());
                 }
             }
@@ -135,9 +163,11 @@ pub fn dists_range_to_vec(
     }
 }
 
-/// [`dists_to_centers`] over a contiguous row range — the chunked naive
-/// k-means pass shape (chunks are ranges, not id lists).
-pub fn dists_range_to_centers(
+/// [`dists_to_centers`] over a contiguous row range — the k-means leaf
+/// assignment on the tree-order arena and the chunked naive pass
+/// (chunks are ranges, not id lists). Also the gaussian-EM leaf shape
+/// (every mixture component as a "center").
+pub fn dists_contig_to_centers(
     space: &Space,
     rows: Range<usize>,
     cand: &[u32],
@@ -145,6 +175,31 @@ pub fn dists_range_to_centers(
     c_sq: &[f64],
     out: &mut Vec<f64>,
 ) {
+    // Dense Euclidean (the hot arm) streams each tile as one values
+    // slab + norms slice; everything else shares the gather-form body
+    // through a sequential row_of.
+    if let (Data::Dense(m), Metric::Euclidean) = (&space.data, space.metric) {
+        if m.d > 0 {
+            let k = cand.len();
+            out.clear();
+            out.reserve(rows.len() * k);
+            let mut lo = rows.start;
+            while lo < rows.end {
+                let hi = (lo + TILE).min(rows.end);
+                let (slab, norms) = m.rows_slab(lo..hi);
+                for (row, &r_sq) in slab.chunks_exact(m.d).zip(norms) {
+                    for &c in cand {
+                        let cu = c as usize;
+                        let d2 = r_sq + c_sq[cu] - 2.0 * dense_dot(row, &centroids[cu]);
+                        out.push(d2.max(0.0).sqrt());
+                    }
+                }
+                space.count_bulk(((hi - lo) * k) as u64);
+                lo = hi;
+            }
+            return;
+        }
+    }
     let base = rows.start;
     fill_centers(space, rows.len(), |t| base + t, cand, centroids, c_sq, out);
 }
@@ -251,6 +306,64 @@ pub fn dists_rows(space: &Space, a: &[u32], b: &[u32], out: &mut Vec<f64>) {
     }
 }
 
+/// [`dists_rows`] over two contiguous row ranges — the dual-tree
+/// leaf-leaf shape of all-pairs search on the tree-order arena, where a
+/// node's points are one sequential slab on each side. Output is
+/// row-major `a.len() × b.len()`; counted `|a|·|b|` per tile;
+/// per-element math is exactly [`Space::dist_uncounted`].
+pub fn dists_contig_rows(space: &Space, a: Range<usize>, b: Range<usize>, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(a.len() * b.len());
+    let mut lo = a.start;
+    while lo < a.end {
+        let hi = (lo + TILE).min(a.end);
+        match (&space.data, space.metric) {
+            (Data::Dense(m), Metric::Euclidean) if m.d > 0 => {
+                // Both sides stream as slabs: the a-tile's rows
+                // sequentially, the whole b-side re-read per a-row
+                // (b is a leaf — small and cache-resident).
+                let (a_slab, a_norms) = m.rows_slab(lo..hi);
+                let (b_slab, b_norms) = m.rows_slab(b.clone());
+                for (row, &r_sq) in a_slab.chunks_exact(m.d).zip(a_norms) {
+                    for (brow, &b_sq) in b_slab.chunks_exact(m.d).zip(b_norms) {
+                        let d2 = r_sq + b_sq - 2.0 * dense_dot(row, brow);
+                        out.push(d2.max(0.0).sqrt());
+                    }
+                }
+            }
+            (Data::Dense(m), Metric::Euclidean) => {
+                // d == 0: all distances degenerate to 0.
+                for i in lo..hi {
+                    for j in b.clone() {
+                        let d2 = m.sqnorm(i) + m.sqnorm(j);
+                        out.push(d2.max(0.0).sqrt());
+                    }
+                }
+            }
+            (Data::Dense(m), Metric::L1) => {
+                for i in lo..hi {
+                    let row = m.row(i);
+                    for j in b.clone() {
+                        out.push(dense_l1(row, m.row(j)));
+                    }
+                }
+            }
+            (Data::Sparse(m), Metric::Euclidean) => {
+                for i in lo..hi {
+                    let r_sq = m.sqnorm(i);
+                    for j in b.clone() {
+                        let d2 = r_sq + m.sqnorm(j) - 2.0 * m.dot_rows(i, j);
+                        out.push(d2.max(0.0).sqrt());
+                    }
+                }
+            }
+            (Data::Sparse(_), Metric::L1) => unreachable!("rejected in Space::new"),
+        }
+        space.count_bulk(((hi - lo) * b.len()) as u64);
+        lo = hi;
+    }
+}
+
 /// Squared distances between dataset rows and dense centers, row-major
 /// `rows.len() × centers.len()` as `f32` — the tile layout the XLA batch
 /// engine produces. This is the scalar kernel promoted out of
@@ -315,12 +428,12 @@ mod tests {
             for (b, s) in blocked.iter().zip(&scalar) {
                 assert_eq!(b.to_bits(), s.to_bits(), "blocked {b} vs scalar {s}");
             }
-            // The range form agrees with the id form on contiguous rows.
+            // The contiguous form agrees with the gather form bit-wise.
             let ids: Vec<u32> = (20..170).collect();
             let mut by_ids = Vec::new();
             dists_to_vec(&space, &ids, &q, q_sq, &mut by_ids);
             let mut by_range = Vec::new();
-            dists_range_to_vec(&space, 20..170, &q, q_sq, &mut by_range);
+            dists_contig_to_vec(&space, 20..170, &q, q_sq, &mut by_range);
             assert_eq!(by_ids, by_range);
         }
     }
@@ -354,10 +467,10 @@ mod tests {
             for (b, s) in blocked.iter().zip(&scalar) {
                 assert_eq!(b.to_bits(), s.to_bits());
             }
-            // The range form agrees with the id form on contiguous rows.
+            // The contiguous form agrees with the gather form bit-wise.
             let mut by_range = Vec::new();
             let ident: Vec<u32> = (0..centroids.len() as u32).collect();
-            dists_range_to_centers(&space, 10..60, &ident, &centroids, &c_sq, &mut by_range);
+            dists_contig_to_centers(&space, 10..60, &ident, &centroids, &c_sq, &mut by_range);
             let ids: Vec<u32> = (10..60).collect();
             let mut by_ids = Vec::new();
             dists_to_centers(&space, &ids, &ident, &centroids, &c_sq, &mut by_ids);
@@ -383,6 +496,16 @@ mod tests {
             }
             assert_eq!(space.dist_count(), blocked_count, "count mismatch");
             for (x, y) in blocked.iter().zip(&scalar) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            // The contiguous form agrees with the gather form bit-wise,
+            // counts included.
+            space.reset_count();
+            let mut contig = Vec::new();
+            dists_contig_rows(&space, 0..40, 60..110, &mut contig);
+            assert_eq!(space.dist_count(), blocked_count, "contig count mismatch");
+            assert_eq!(contig.len(), blocked.len());
+            for (x, y) in contig.iter().zip(&blocked) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }

@@ -63,6 +63,21 @@ impl Space {
         Arc::clone(&self.counter)
     }
 
+    /// A new space holding the listed rows (in order), **sharing this
+    /// space's distance counter** — so distances evaluated on the view
+    /// are charged to the same Table-2 budget as distances on the
+    /// original. This is how the tree-order arena is built
+    /// ([`crate::tree::Layout`]): row `r` of the view is a bit-exact
+    /// copy of row `ids[r]`, cached norms included, so every distance
+    /// expression evaluates to the identical bits on either space.
+    pub fn select_rows(&self, ids: &[u32]) -> Space {
+        Space {
+            data: self.data.select_rows(ids),
+            metric: self.metric,
+            counter: Arc::clone(&self.counter),
+        }
+    }
+
     /// Distances computed so far.
     pub fn dist_count(&self) -> u64 {
         self.counter.get()

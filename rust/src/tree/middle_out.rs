@@ -99,11 +99,17 @@ pub fn build_subset_ex(
     let mut nodes: Vec<Node> = Vec::new();
     let mut rng = Rng::new(cfg.seed);
     let root = recurse(space, points, rmin, cfg, &mut rng, &mut nodes, exec, true);
+    // Permute the dataset into tree order (uncounted copy work; the
+    // layout is a pure function of the schedule-independent node arena,
+    // so builds stay byte-identical at every thread count).
+    let (layout, arena) = super::finalize_layout(space, &mut nodes, root);
     MetricTree {
         nodes,
         root,
         rmin,
         build_dists: space.dist_count() - before,
+        layout,
+        arena: Some(arena),
     }
 }
 
@@ -491,7 +497,7 @@ mod tests {
         let space = random_space(200, 2, 7);
         let subset: Vec<u32> = (0..200).filter(|p| p % 3 == 0).collect();
         let tree = build_subset(&space, subset.clone(), &MiddleOutConfig::default());
-        let mut owned = tree.points_under(tree.root);
+        let mut owned = tree.points_under(tree.root).to_vec();
         owned.sort();
         assert_eq!(owned, subset);
     }

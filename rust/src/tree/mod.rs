@@ -43,8 +43,17 @@ pub struct Node {
     pub sumsq: f64,
     /// Child node ids; `None` for leaves.
     pub children: Option<(NodeId, NodeId)>,
-    /// Owned point ids — populated for leaves only.
+    /// Owned point ids — a **builder-phase** container only. The
+    /// builders fill it for leaves while the tree is under
+    /// construction; [`finalize_layout`] drains every leaf's list into
+    /// [`Layout::inv`] and leaves this empty. Query code must use
+    /// [`MetricTree::points_under`] / [`MetricTree::node_rows`] instead.
     pub points: Vec<u32>,
+    /// First arena row owned by this node. Because leaves are laid out
+    /// in DFS order, **every** node (interior included) owns the
+    /// contiguous arena range `row_start .. row_start + count`.
+    /// Assigned by [`finalize_layout`]; meaningless before it runs.
+    pub row_start: u32,
 }
 
 impl Node {
@@ -82,6 +91,30 @@ pub struct TreeShape {
     pub mean_leaf_radius: f64,
 }
 
+/// The tree-order permutation: after a build finalizes, the dataset is
+/// permuted so that every leaf's points occupy one contiguous range of
+/// rows (the *arena*), leaves laid out in DFS order. Leaf scans then
+/// read one sequential slab instead of gathering scattered rows — the
+/// cache-aware node-contiguous storage of Omohundro's ball trees and
+/// Ciaccia et al.'s M-tree pages — and a future mmap backend can serve
+/// a node's points as a single byte range.
+///
+/// Conventions: `perm[original_id] = arena_row` (`u32::MAX` for points
+/// outside a subset tree) and `inv[arena_row] = original_id`. Because
+/// `inv` is exactly the concatenation of the builder's leaf point lists
+/// in DFS order, `&inv[node_rows]` *is* the pre-permutation id list of
+/// any node — id translation back to dataset ids at the result boundary
+/// is a zero-cost slice view, and every scan enumerates points in the
+/// identical order the gather path did (results stay bit-identical,
+/// distance counts exact).
+#[derive(Clone, Debug, Default)]
+pub struct Layout {
+    /// Original id → arena row (`u32::MAX` if not in the tree).
+    pub perm: Vec<u32>,
+    /// Arena row → original id (length = points owned by the tree).
+    pub inv: Vec<u32>,
+}
+
 /// An arena-allocated metric tree.
 pub struct MetricTree {
     pub nodes: Vec<Node>,
@@ -90,6 +123,13 @@ pub struct MetricTree {
     pub rmin: usize,
     /// Distance computations spent building this tree.
     pub build_dists: u64,
+    /// The tree-order permutation (see [`Layout`]).
+    pub layout: Layout,
+    /// The dataset permuted into tree order, sharing the original
+    /// space's distance counter. Always present on freshly built trees;
+    /// `None` right after [`serialize::read_tree`] until
+    /// [`MetricTree::attach_arena`] rebuilds it from the dataset.
+    pub arena: Option<Space>,
 }
 
 impl MetricTree {
@@ -122,21 +162,45 @@ impl MetricTree {
         out
     }
 
-    /// Iterate every point id under `id` (leaf point lists).
-    pub fn points_under(&self, id: NodeId) -> Vec<u32> {
-        let mut out = Vec::with_capacity(self.node(id).count as usize);
-        let mut stack = vec![id];
-        while let Some(nid) = stack.pop() {
-            let n = self.node(nid);
-            match n.children {
-                None => out.extend_from_slice(&n.points),
-                Some((a, b)) => {
-                    stack.push(b);
-                    stack.push(a);
-                }
-            }
-        }
-        out
+    /// The contiguous arena rows owned by `id` (leaves *and* interior
+    /// nodes — DFS leaf order makes every subtree a single range).
+    #[inline]
+    pub fn node_rows(&self, id: NodeId) -> std::ops::Range<usize> {
+        let n = self.node(id);
+        let start = n.row_start as usize;
+        start..start + n.count as usize
+    }
+
+    /// Every original point id under `id`, as a borrowed view into the
+    /// layout — allocation-free for leaves and interior nodes alike
+    /// (the slice is exactly the pre-permutation point list, in the
+    /// order the builder produced it).
+    #[inline]
+    pub fn points_under(&self, id: NodeId) -> &[u32] {
+        &self.layout.inv[self.node_rows(id)]
+    }
+
+    /// The tree-order arena. Panics if the tree was deserialized and
+    /// the arena has not been re-attached yet.
+    #[inline]
+    pub fn arena(&self) -> &Space {
+        self.arena
+            .as_ref()
+            .expect("tree has no arena — call attach_arena(&space) after deserializing")
+    }
+
+    /// Rebuild the permuted arena from the original dataset (needed
+    /// after [`serialize::read_tree`], which persists the permutation
+    /// but not the data). The arena shares `space`'s distance counter.
+    pub fn attach_arena(&mut self, space: &Space) {
+        assert_eq!(
+            self.layout.perm.len(),
+            space.n(),
+            "tree layout was built for a {}-row dataset, got {} rows",
+            self.layout.perm.len(),
+            space.n()
+        );
+        self.arena = Some(space.select_rows(&self.layout.inv));
     }
 
     pub fn shape(&self) -> TreeShape {
@@ -166,30 +230,103 @@ impl MetricTree {
         shape
     }
 
-    /// Check every structural invariant against the backing space.
-    /// Used by tests and by `--validate` in the CLI. Does NOT count
-    /// distances.
+    /// Check every structural invariant against the backing space —
+    /// including the tree-order layout: leaf ranges disjoint, sorted
+    /// and covering `0..n_points`, `perm`/`inv` mutual inverses, and
+    /// (when attached) the arena bit-consistent with the original
+    /// rows. Used by tests and by `--validate` in the CLI. Does NOT
+    /// count distances.
     pub fn validate(&self, space: &Space) -> Result<(), String> {
         let n = space.n();
-        let mut owner = vec![u32::MAX; n];
-        for leaf in self.leaf_ids() {
-            let node = self.node(leaf);
-            if node.points.len() != node.count as usize {
-                return Err(format!("leaf {leaf}: points/count mismatch"));
-            }
-            for &p in &node.points {
-                if owner[p as usize] != u32::MAX {
-                    return Err(format!("point {p} owned by two leaves"));
-                }
-                owner[p as usize] = leaf;
-            }
-        }
-        let in_tree = owner.iter().filter(|&&o| o != u32::MAX).count();
-        if in_tree != self.n_points() {
+        let n_rows = self.layout.inv.len();
+
+        // --- layout: perm/inv are mutual inverses over the tree's rows.
+        if self.layout.perm.len() != n {
             return Err(format!(
-                "tree claims {} points but leaves own {in_tree}",
+                "layout.perm maps {} dataset ids but the space has {n} rows",
+                self.layout.perm.len()
+            ));
+        }
+        if n_rows != self.n_points() {
+            return Err(format!(
+                "layout.inv holds {n_rows} rows but the root owns {} points",
                 self.n_points()
             ));
+        }
+        for (row, &orig) in self.layout.inv.iter().enumerate() {
+            if orig as usize >= n {
+                return Err(format!("layout.inv[{row}] = {orig} is out of range (n = {n})"));
+            }
+            if self.layout.perm[orig as usize] != row as u32 {
+                return Err(format!(
+                    "perm/inv disagree: inv[{row}] = {orig} but perm[{orig}] = {}",
+                    self.layout.perm[orig as usize]
+                ));
+            }
+        }
+        let mapped = self.layout.perm.iter().filter(|&&r| r != u32::MAX).count();
+        if mapped != n_rows {
+            return Err(format!(
+                "perm maps {mapped} dataset ids into the arena but inv holds {n_rows} rows \
+                 — some id is mapped twice or to a dangling row"
+            ));
+        }
+
+        // --- leaves: DFS ranges are consecutive — hence disjoint,
+        // sorted, and covering 0..n_rows exactly — and builder point
+        // lists were drained into the layout.
+        let mut next = 0usize;
+        for leaf in self.leaf_ids() {
+            let node = self.node(leaf);
+            if !node.points.is_empty() {
+                return Err(format!(
+                    "leaf {leaf}: builder point list not drained — finalize_layout never ran"
+                ));
+            }
+            let start = node.row_start as usize;
+            if start != next {
+                return Err(format!(
+                    "leaf {leaf}: rows start at {start} but the previous leaf ended at {next} \
+                     — leaf ranges must tile 0..{n_rows} in DFS order"
+                ));
+            }
+            next = start + node.count as usize;
+            if next > n_rows {
+                return Err(format!(
+                    "leaf {leaf}: range {start}..{next} runs past the arena ({n_rows} rows)"
+                ));
+            }
+        }
+        if next != n_rows {
+            return Err(format!(
+                "leaf ranges cover {next} rows but the layout holds {n_rows}"
+            ));
+        }
+
+        // --- arena (when attached): row-for-row copy of the original
+        // dataset under the permutation — values and cached norms.
+        if let Some(arena) = self.arena.as_ref() {
+            if arena.n() != n_rows {
+                return Err(format!(
+                    "arena holds {} rows but the layout maps {n_rows}",
+                    arena.n()
+                ));
+            }
+            use crate::data::Data;
+            for (row, &orig) in self.layout.inv.iter().enumerate() {
+                let o = orig as usize;
+                let same = arena.data.sqnorm(row).to_bits() == space.data.sqnorm(o).to_bits()
+                    && match (&arena.data, &space.data) {
+                        (Data::Dense(a), Data::Dense(s)) => a.row(row) == s.row(o),
+                        (Data::Sparse(a), Data::Sparse(s)) => a.row(row) == s.row(o),
+                        _ => false,
+                    };
+                if !same {
+                    return Err(format!(
+                        "arena row {row} is not a copy of dataset row {orig}"
+                    ));
+                }
+            }
         }
 
         // Per-node: ball containment, stats consistency, child partition.
@@ -198,11 +335,15 @@ impl MetricTree {
             let node = self.node(id);
             let pts = self.points_under(id);
             if pts.len() != node.count as usize {
-                return Err(format!("node {id}: count {} != {}", node.count, pts.len()));
+                return Err(format!(
+                    "node {id}: cached count {} but its arena range holds {} rows",
+                    node.count,
+                    pts.len()
+                ));
             }
             // Ball containment (eq. 2) with a small float slack.
             let slack = 1e-4 * (1.0 + node.radius);
-            for &p in &pts {
+            for &p in pts {
                 let d = space.dist_to_vec_uncounted(p as usize, &node.pivot, node.pivot_sq);
                 if d > node.radius + slack {
                     return Err(format!(
@@ -214,7 +355,7 @@ impl MetricTree {
             // Cached statistics.
             let sum_err: f64 = {
                 let mut acc = vec![0f64; space.dim()];
-                for &p in &pts {
+                for &p in pts {
                     space.accumulate(p as usize, &mut acc);
                 }
                 acc.iter()
@@ -225,7 +366,7 @@ impl MetricTree {
             if sum_err > 1e-3 * (1.0 + node.sumsq.abs()) {
                 return Err(format!("node {id}: cached sum off by {sum_err}"));
             }
-            let true_sumsq = space.sumsq(&pts);
+            let true_sumsq = space.sumsq(pts);
             if (true_sumsq - node.sumsq).abs() > 1e-5 * (1.0 + true_sumsq) {
                 return Err(format!(
                     "node {id}: sumsq {} != {true_sumsq}",
@@ -235,7 +376,27 @@ impl MetricTree {
             if let Some((a, b)) = node.children {
                 let (ca, cb) = (self.node(a), self.node(b));
                 if ca.count + cb.count != node.count {
-                    return Err(format!("node {id}: children counts don't partition"));
+                    return Err(format!(
+                        "node {id}: children own {} + {} points but the parent claims {}",
+                        ca.count, cb.count, node.count
+                    ));
+                }
+                // Children tile the parent's arena range: first child's
+                // rows start where the parent's do, second child's start
+                // where the first's end.
+                if ca.row_start != node.row_start
+                    || cb.row_start != ca.row_start + ca.count
+                {
+                    return Err(format!(
+                        "node {id}: children rows ({}..{}, {}..{}) don't tile the parent's \
+                         {}..{}",
+                        ca.row_start,
+                        ca.row_start + ca.count,
+                        cb.row_start,
+                        cb.row_start + cb.count,
+                        node.row_start,
+                        node.row_start + node.count
+                    ));
                 }
                 stack.push(a);
                 stack.push(b);
@@ -275,6 +436,7 @@ pub(crate) fn make_leaf(space: &Space, points: Vec<u32>) -> Node {
         sumsq,
         children: None,
         points,
+        row_start: 0,
     }
 }
 
@@ -302,7 +464,54 @@ pub(crate) fn make_parent(space: &Space, a: &Node, b: &Node) -> Node {
         sumsq: a.sumsq + b.sumsq,
         children: None, // caller fills in ids
         points: Vec::new(),
+        row_start: 0,
     }
+}
+
+/// Finalize a freshly built arena of nodes into the tree-order layout:
+/// walk the tree DFS left-to-right, drain every leaf's builder point
+/// list into `Layout::inv` (assigning the leaf its contiguous row
+/// range), propagate `row_start` to interior nodes, invert the
+/// permutation, and copy the dataset into tree order. Runs no counted
+/// distance work, is independent of thread count (the node arena is
+/// already schedule-independent), and preserves per-leaf point order —
+/// which is what keeps every downstream scan bit-identical to the
+/// pre-layout gather path.
+pub(crate) fn finalize_layout(space: &Space, nodes: &mut [Node], root: NodeId) -> (Layout, Space) {
+    let mut inv: Vec<u32> = Vec::with_capacity(nodes[root as usize].count as usize);
+    let mut stack = vec![root];
+    while let Some(id) = stack.pop() {
+        let n = &mut nodes[id as usize];
+        match n.children {
+            None => {
+                n.row_start = inv.len() as u32;
+                inv.append(&mut n.points);
+            }
+            Some((a, b)) => {
+                stack.push(b);
+                stack.push(a);
+            }
+        }
+    }
+    // Interior row ranges: children precede parents in arena order (both
+    // builders push bottom-up), so one forward pass suffices. The first
+    // child's DFS leaves come first, so its start is the parent's.
+    for i in 0..nodes.len() {
+        if let Some((a, b)) = nodes[i].children {
+            let (sa, sb) = (nodes[a as usize].row_start, nodes[b as usize].row_start);
+            debug_assert!(
+                (a as usize) < i && (b as usize) < i,
+                "child pushed after its parent"
+            );
+            nodes[i].row_start = sa.min(sb);
+        }
+    }
+    let mut perm = vec![u32::MAX; space.n()];
+    for (row, &orig) in inv.iter().enumerate() {
+        perm[orig as usize] = row as u32;
+    }
+    let arena = space.select_rows(&inv);
+    (Layout { perm, inv }, arena)
 }
 
 /// Append a subtree arena built off to the side (by a parallel build

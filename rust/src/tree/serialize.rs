@@ -3,22 +3,30 @@
 //! Binary format (little-endian), versioned:
 //!
 //! ```text
-//! magic "AHTREE01" | u32 rmin | u64 build_dists | u32 root | u32 n_nodes
+//! magic "AHTREE02" | u32 rmin | u64 build_dists | u32 root | u32 n_nodes
 //! per node:
 //!   u32 dim | f32×dim pivot | f64 pivot_sq | f64 radius | u32 count |
 //!   f64×dim sum | f64 sumsq |
-//!   u8 has_children | (u32,u32 children)? | u32 n_points | u32×n points
+//!   u8 has_children | (u32,u32 children)? | u32 row_start
+//! then the tree-order layout:
+//!   u32 perm_len (= dataset rows) | u32 n_rows | u32×n_rows inv
 //! ```
 //!
-//! The format stores the cached sufficient statistics verbatim, so a
+//! Version 2 stores leaf point lists as `(row_start, count)` ranges into
+//! the tree-order arena plus one `inv` array (arena row → original id),
+//! instead of v1's per-leaf id vectors — the on-disk mirror of the
+//! in-memory [`super::Layout`]. `perm` is reconstructed from `inv` on
+//! load. The cached sufficient statistics are stored verbatim, so a
 //! deserialized tree answers queries identically (bit-for-bit) without
-//! touching the dataset.
+//! touching the dataset — **after** the caller re-attaches the permuted
+//! arena with [`MetricTree::attach_arena`] (the snapshot persists the
+//! permutation, not the data; leaf scans need the rows).
 
-use super::{MetricTree, Node};
+use super::{Layout, MetricTree, Node};
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 
-const MAGIC: &[u8; 8] = b"AHTREE01";
+const MAGIC: &[u8; 8] = b"AHTREE02";
 
 /// Serialize into any writer.
 pub fn write_tree(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
@@ -47,20 +55,25 @@ pub fn write_tree(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
             }
             None => w.write_all(&[0u8])?,
         }
-        w.write_all(&(node.points.len() as u32).to_le_bytes())?;
-        for &p in &node.points {
-            w.write_all(&p.to_le_bytes())?;
-        }
+        w.write_all(&node.row_start.to_le_bytes())?;
+    }
+    w.write_all(&(tree.layout.perm.len() as u32).to_le_bytes())?;
+    w.write_all(&(tree.layout.inv.len() as u32).to_le_bytes())?;
+    for &p in &tree.layout.inv {
+        w.write_all(&p.to_le_bytes())?;
     }
     Ok(())
 }
 
-/// Deserialize from any reader, with structural sanity checks.
+/// Deserialize from any reader, with structural sanity checks. The
+/// returned tree has its layout but **no arena** — call
+/// [`MetricTree::attach_arena`] with the dataset before running any
+/// leaf-scanning query.
 pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        bail!("not an AHTREE01 file");
+        bail!("not an AHTREE02 file");
     }
     let rmin = read_u32(r)? as usize;
     let build_dists = read_u64(r)?;
@@ -94,11 +107,7 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
             1 => Some((read_u32(r)?, read_u32(r)?)),
             x => bail!("bad child flag {x}"),
         };
-        let n_points = read_u32(r)? as usize;
-        let mut points = vec![0u32; n_points];
-        for p in points.iter_mut() {
-            *p = read_u32(r)?;
-        }
+        let row_start = read_u32(r)?;
         nodes.push(Node {
             pivot,
             pivot_sq,
@@ -107,13 +116,18 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
             sum,
             sumsq,
             children,
-            points,
+            points: Vec::new(),
+            row_start,
         });
     }
     if root as usize >= nodes.len() {
         bail!("root {root} out of range");
     }
-    // Child ids must be in range and each child referenced at most once.
+    // Child ids must be in range, the root must not be anyone's child,
+    // and each child is referenced at most once. Together these make
+    // every node reachable from the root part of a proper tree, so the
+    // tile walk below always terminates (any cycle reachable from the
+    // root would need a double reference or a root-as-child edge).
     let mut seen = vec![false; nodes.len()];
     for node in &nodes {
         if let Some((a, b)) = node.children {
@@ -122,6 +136,9 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
                 if ci >= nodes.len() {
                     bail!("child {c} out of range");
                 }
+                if c == root {
+                    bail!("root {root} referenced as a child");
+                }
                 if seen[ci] {
                     bail!("node {c} has two parents");
                 }
@@ -129,7 +146,85 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
             }
         }
     }
-    Ok(MetricTree { nodes, root, rmin, build_dists })
+    // Layout: inv entries in range and unique (perm reconstruction
+    // catches duplicates), row ranges within the arena.
+    let perm_len = read_u32(r)? as usize;
+    let n_rows = read_u32(r)? as usize;
+    if perm_len > 1 << 31 || n_rows > perm_len {
+        bail!("implausible layout sizes perm_len={perm_len} n_rows={n_rows}");
+    }
+    if n_rows != nodes[root as usize].count as usize {
+        bail!(
+            "layout holds {n_rows} rows but the root owns {}",
+            nodes[root as usize].count
+        );
+    }
+    let mut inv = vec![0u32; n_rows];
+    let mut perm = vec![u32::MAX; perm_len];
+    for (row, p) in inv.iter_mut().enumerate() {
+        let orig = read_u32(r)?;
+        if orig as usize >= perm_len {
+            bail!("inv[{row}] = {orig} out of range (perm_len {perm_len})");
+        }
+        if perm[orig as usize] != u32::MAX {
+            bail!("dataset row {orig} appears twice in the layout");
+        }
+        perm[orig as usize] = row as u32;
+        *p = orig;
+    }
+    for (id, node) in nodes.iter().enumerate() {
+        if node.row_start as usize + node.count as usize > n_rows {
+            bail!(
+                "node {id}: rows {}..{} run past the {n_rows}-row arena",
+                node.row_start,
+                u64::from(node.row_start) + u64::from(node.count)
+            );
+        }
+    }
+    // Row ranges must actually tile the arena (the same invariant
+    // `MetricTree::validate` enforces): leaves consecutive in DFS
+    // order covering 0..n_rows, children tiling their parent. Without
+    // this, a snapshot with zeroed/corrupt row_start fields would
+    // deserialize cleanly and then silently answer queries with the
+    // wrong points.
+    let mut next = 0usize;
+    let mut stack = vec![root];
+    while let Some(id) = stack.pop() {
+        let node = &nodes[id as usize];
+        match node.children {
+            None => {
+                if node.row_start as usize != next {
+                    bail!(
+                        "leaf {id}: rows start at {} but the previous leaf ended at {next}",
+                        node.row_start
+                    );
+                }
+                next += node.count as usize;
+            }
+            Some((a, b)) => {
+                let (ca, cb) = (&nodes[a as usize], &nodes[b as usize]);
+                if ca.row_start != node.row_start
+                    || u64::from(cb.row_start) != u64::from(ca.row_start) + u64::from(ca.count)
+                    || u64::from(ca.count) + u64::from(cb.count) != u64::from(node.count)
+                {
+                    bail!("node {id}: children don't tile its row range");
+                }
+                stack.push(b);
+                stack.push(a);
+            }
+        }
+    }
+    if next != n_rows {
+        bail!("leaf ranges cover {next} of {n_rows} arena rows");
+    }
+    Ok(MetricTree {
+        nodes,
+        root,
+        rmin,
+        build_dists,
+        layout: Layout { perm, inv },
+        arena: None,
+    })
 }
 
 /// Save to a file path.
@@ -138,7 +233,8 @@ pub fn save(tree: &MetricTree, path: impl AsRef<std::path::Path>) -> Result<()> 
     write_tree(tree, &mut f)
 }
 
-/// Load from a file path.
+/// Load from a file path. Remember to [`MetricTree::attach_arena`]
+/// before querying.
 pub fn load(path: impl AsRef<std::path::Path>) -> Result<MetricTree> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path.as_ref())
@@ -190,7 +286,7 @@ mod tests {
         let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 12, ..Default::default() });
         let mut buf = Vec::new();
         write_tree(&tree, &mut buf).unwrap();
-        let back = read_tree(&mut buf.as_slice()).unwrap();
+        let mut back = read_tree(&mut buf.as_slice()).unwrap();
         assert_eq!(back.root, tree.root);
         assert_eq!(back.rmin, tree.rmin);
         assert_eq!(back.build_dists, tree.build_dists);
@@ -203,9 +299,14 @@ mod tests {
             assert_eq!(a.sum, b.sum);
             assert_eq!(a.sumsq, b.sumsq);
             assert_eq!(a.children, b.children);
-            assert_eq!(a.points, b.points);
+            assert_eq!(a.row_start, b.row_start);
         }
-        // Deserialized tree validates against the original space.
+        assert_eq!(back.layout.perm, tree.layout.perm);
+        assert_eq!(back.layout.inv, tree.layout.inv);
+        assert!(back.arena.is_none(), "snapshot must not carry the data");
+        // After attaching the arena, the tree validates against the
+        // original space.
+        back.attach_arena(&space);
         back.validate(&space).unwrap();
     }
 
@@ -216,12 +317,14 @@ mod tests {
         let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
         let mut buf = Vec::new();
         write_tree(&tree, &mut buf).unwrap();
-        let back = read_tree(&mut buf.as_slice()).unwrap();
+        let mut back = read_tree(&mut buf.as_slice()).unwrap();
+        back.attach_arena(&space);
         let opts = kmeans::KmeansOpts::default();
         let a = kmeans::tree_lloyd(&space, &tree, kmeans::Init::Random, 5, 5, &opts);
         let b = kmeans::tree_lloyd(&space, &back, kmeans::Init::Random, 5, 5, &opts);
         assert_eq!(a.distortion, b.distortion);
         assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.dists, b.dists);
     }
 
     #[test]
@@ -232,6 +335,7 @@ mod tests {
         save(&tree, &path).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back.nodes.len(), tree.nodes.len());
+        assert_eq!(back.layout.inv, tree.layout.inv);
         std::fs::remove_file(&path).ok();
     }
 
@@ -241,19 +345,20 @@ mod tests {
         let mut bad = MAGIC.to_vec();
         bad.extend_from_slice(&[0xFF; 24]); // implausible header
         assert!(read_tree(&mut bad.as_slice()).is_err());
+        // v1 snapshots are refused by magic, not misparsed.
+        let mut v1 = b"AHTREE01".to_vec();
+        v1.extend_from_slice(&[0u8; 24]);
+        assert!(read_tree(&mut v1.as_slice()).is_err());
     }
 
     #[test]
     fn rejects_cyclic_children() {
-        // Hand-craft a 2-node file where node 1 is referenced twice.
+        // Hand-craft a file where the root's children are identical.
         let space = space(40, 4);
         let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
         let mut buf = Vec::new();
         write_tree(&tree, &mut buf).unwrap();
-        // Corrupt: make root's two children identical (if root has kids).
         if tree.node(tree.root).children.is_some() {
-            // Find the root node's children bytes — easier: rebuild tree
-            // structure manually via read + mutate + write.
             let mut t = read_tree(&mut buf.as_slice()).unwrap();
             let root = t.root as usize;
             if let Some((a, _)) = t.nodes[root].children {
@@ -263,5 +368,37 @@ mod tests {
                 assert!(read_tree(&mut buf2.as_slice()).is_err());
             }
         }
+    }
+
+    #[test]
+    fn rejects_corrupt_row_ranges() {
+        // Zeroed row_start fields (truncation / writer bug) must be
+        // refused at load time, not surface as wrong query answers.
+        let space = space(80, 6);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
+        let mut buf = Vec::new();
+        write_tree(&tree, &mut buf).unwrap();
+        let mut t = read_tree(&mut buf.as_slice()).unwrap();
+        if t.nodes.len() > 1 {
+            for node in &mut t.nodes {
+                node.row_start = 0;
+            }
+            let mut buf2 = Vec::new();
+            write_tree(&t, &mut buf2).unwrap();
+            assert!(read_tree(&mut buf2.as_slice()).is_err());
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_layout_rows() {
+        let space = space(60, 5);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
+        let mut buf = Vec::new();
+        write_tree(&tree, &mut buf).unwrap();
+        let mut t = read_tree(&mut buf.as_slice()).unwrap();
+        t.layout.inv[1] = t.layout.inv[0];
+        let mut buf2 = Vec::new();
+        write_tree(&t, &mut buf2).unwrap();
+        assert!(read_tree(&mut buf2.as_slice()).is_err());
     }
 }

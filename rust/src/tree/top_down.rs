@@ -74,11 +74,16 @@ pub fn build_subset_ex(
     let before = space.dist_count();
     let mut nodes: Vec<Node> = Vec::new();
     let root = split(space, points, rmin, &mut nodes, exec, levels);
+    // Permute the dataset into tree order (uncounted; see
+    // `tree::finalize_layout`).
+    let (layout, arena) = super::finalize_layout(space, &mut nodes, root);
     MetricTree {
         nodes,
         root,
         rmin,
         build_dists: space.dist_count() - before,
+        layout,
+        arena: Some(arena),
     }
 }
 
@@ -248,8 +253,10 @@ mod tests {
                 assert_eq!(a.radius.to_bits(), b.radius.to_bits());
                 assert_eq!(a.count, b.count);
                 assert_eq!(a.children, b.children);
-                assert_eq!(a.points, b.points);
+                assert_eq!(a.row_start, b.row_start);
             }
+            assert_eq!(par.layout.perm, serial.layout.perm);
+            assert_eq!(par.layout.inv, serial.layout.inv);
         }
     }
 
@@ -259,7 +266,7 @@ mod tests {
         let subset: Vec<u32> = (0..100).filter(|p| p % 2 == 0).collect();
         let tree = build_subset(&space, subset.clone(), 8);
         assert_eq!(tree.n_points(), 50);
-        let mut owned = tree.points_under(tree.root);
+        let mut owned = tree.points_under(tree.root).to_vec();
         owned.sort();
         assert_eq!(owned, subset);
     }

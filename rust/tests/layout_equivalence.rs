@@ -1,0 +1,419 @@
+//! Equivalence proofs for the tree-order memory layout.
+//!
+//! The layout refactor (contiguous leaf arenas + zero-gather kernels)
+//! claims to change *nothing* observable: every query result
+//! bit-identical, every distance count exact. These tests prove it at
+//! three levels rather than assuming it:
+//!
+//! 1. **Kernel level** — for every leaf of a real tree, the contiguous
+//!    kernel over the arena rows returns bit-identical distances and
+//!    the same count as the gather kernel over the original rows (the
+//!    pre-layout scan it replaced).
+//! 2. **Boundary level** — a *pre-permutation reference path*: the same
+//!    dataset physically permuted into leaf order up front, queried
+//!    through an identity-layout copy of the tree (so no id translation
+//!    happens at all). Mapping the reference's results through the
+//!    layout must reproduce the layout path's results exactly, with
+//!    exact per-query distance counts — for every algorithm family with
+//!    a leaf scan: knn, ball, anomaly, allpairs, kmeans, EM.
+//! 3. **Snapshot level** — serialize → deserialize → re-attach arena
+//!    replays knn/kmeans/allpairs bit-identically against a fresh
+//!    build, dense + sparse, threads {1, 8}.
+//!
+//! (MST is deliberately absent from level 2: its Borůvka rounds seed
+//! each component's pruning bound from the scan-order-dependent running
+//! best, so per-round distance *counts* legitimately depend on point
+//! order — the layout path itself preserves the original order, which
+//! the cross-thread and naive-vs-tree tests already pin down.)
+
+use anchors_hierarchy::algorithms::{allpairs, anomaly, ballquery, gaussian, kmeans, knn};
+use anchors_hierarchy::data::Data;
+use anchors_hierarchy::dataset::{gaussian_mixture, gen_mixture};
+use anchors_hierarchy::metrics::{block, dense_dot, Space};
+use anchors_hierarchy::parallel::Parallelism;
+use anchors_hierarchy::rng::Rng;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::tree::{serialize, top_down, Layout, MetricTree};
+
+fn dense_space() -> Space {
+    Space::euclidean(Data::Dense(gaussian_mixture(900, 8, 5, 18.0, 77)))
+}
+
+fn sparse_space() -> Space {
+    Space::euclidean(Data::Sparse(gen_mixture(500, 90, 4, 77)))
+}
+
+fn build(space: &Space, rmin: usize) -> MetricTree {
+    middle_out::build(space, &MiddleOutConfig { rmin, seed: 9, ..Default::default() })
+}
+
+/// The pre-permutation reference: the dataset physically copied into
+/// tree order (its own fresh distance counter) plus a clone of the tree
+/// whose layout is the identity — leaf scans read the permuted data
+/// directly and results come back in arena-row ids, exactly what the
+/// old gather path would produce on the permuted dataset.
+fn reference_pair(space: &Space, tree: &MetricTree) -> (Space, MetricTree) {
+    let permuted = space.select_rows(&tree.layout.inv);
+    let space2 = Space::new(permuted.data.clone(), space.metric);
+    let n = tree.layout.inv.len() as u32;
+    let ident: Vec<u32> = (0..n).collect();
+    let mut tree2 = MetricTree {
+        nodes: tree.nodes.clone(),
+        root: tree.root,
+        rmin: tree.rmin,
+        build_dists: tree.build_dists,
+        layout: Layout { perm: ident.clone(), inv: ident },
+        arena: None,
+    };
+    tree2.attach_arena(&space2);
+    (space2, tree2)
+}
+
+fn query_vec(dim: usize, seed: u64) -> (Vec<f32>, f64) {
+    let mut rng = Rng::new(seed);
+    let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 4.0).collect();
+    let q_sq = dense_dot(&q, &q);
+    (q, q_sq)
+}
+
+fn given_seeds(dim: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..k)
+        .map(|_| (0..dim).map(|_| rng.normal() as f32 * 6.0).collect())
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Level 1: per-leaf kernel oracle.
+// ---------------------------------------------------------------------
+
+#[test]
+fn contig_leaf_kernels_match_gather_reference_per_leaf() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 20);
+        let arena = tree.arena();
+        let (q, q_sq) = query_vec(space.dim(), 3);
+        let centroids = given_seeds(space.dim(), 6, 4);
+        let c_sq: Vec<f64> = centroids.iter().map(|c| dense_dot(c, c)).collect();
+        let cand: Vec<u32> = vec![0, 2, 3, 5];
+        let (mut gather, mut contig) = (Vec::new(), Vec::new());
+        let leaves = tree.leaf_ids();
+        for &leaf in &leaves {
+            let ids = tree.points_under(leaf);
+            let rows = tree.node_rows(leaf);
+
+            // Single-query shape (knn / ball / anomaly leaves).
+            space.reset_count();
+            block::dists_to_vec(&space, ids, &q, q_sq, &mut gather);
+            let gather_count = space.dist_count();
+            space.reset_count();
+            block::dists_contig_to_vec(arena, rows.clone(), &q, q_sq, &mut contig);
+            assert_eq!(space.dist_count(), gather_count, "{label} leaf {leaf} to_vec count");
+            assert_eq!(gather.len(), contig.len());
+            for (g, c) in gather.iter().zip(&contig) {
+                assert_eq!(g.to_bits(), c.to_bits(), "{label} leaf {leaf} to_vec");
+            }
+
+            // Multi-center shape (kmeans leaf_assign / EM leaves).
+            space.reset_count();
+            block::dists_to_centers(&space, ids, &cand, &centroids, &c_sq, &mut gather);
+            let gather_count = space.dist_count();
+            space.reset_count();
+            block::dists_contig_to_centers(arena, rows, &cand, &centroids, &c_sq, &mut contig);
+            assert_eq!(space.dist_count(), gather_count, "{label} leaf {leaf} centers count");
+            for (g, c) in gather.iter().zip(&contig) {
+                assert_eq!(g.to_bits(), c.to_bits(), "{label} leaf {leaf} centers");
+            }
+        }
+
+        // Leaf-leaf shape (allpairs blocks): first leaf vs last leaf.
+        let (a, b) = (leaves[0], *leaves.last().unwrap());
+        space.reset_count();
+        block::dists_rows(&space, tree.points_under(a), tree.points_under(b), &mut gather);
+        let gather_count = space.dist_count();
+        space.reset_count();
+        block::dists_contig_rows(arena, tree.node_rows(a), tree.node_rows(b), &mut contig);
+        assert_eq!(space.dist_count(), gather_count, "{label} leaf-leaf count");
+        assert_eq!(gather.len(), contig.len());
+        for (g, c) in gather.iter().zip(&contig) {
+            assert_eq!(g.to_bits(), c.to_bits(), "{label} leaf-leaf");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Level 2: pre-permutation reference path, per algorithm family.
+// ---------------------------------------------------------------------
+
+#[test]
+fn knn_matches_pre_permutation_reference() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let (space2, tree2) = reference_pair(&space, &tree);
+        let inv = &tree.layout.inv;
+
+        // Vector targets.
+        for seed in 0..6u64 {
+            let (q, q_sq) = query_vec(space.dim(), 100 + seed);
+            let before = space.dist_count();
+            let got = knn::tree_knn(&space, &tree, &q, q_sq, 7, None);
+            let got_dists = space.dist_count() - before;
+            let before = space2.dist_count();
+            let reference = knn::tree_knn(&space2, &tree2, &q, q_sq, 7, None);
+            let ref_dists = space2.dist_count() - before;
+            assert_eq!(got_dists, ref_dists, "{label} q{seed}: distance count");
+            assert_eq!(got.len(), reference.len());
+            for (g, r) in got.iter().zip(&reference) {
+                assert_eq!(g.id, inv[r.id as usize], "{label} q{seed}: id");
+                assert_eq!(g.dist.to_bits(), r.dist.to_bits(), "{label} q{seed}: dist");
+            }
+        }
+
+        // Point targets (exercises the skip-row split).
+        for q in [0usize, 7, space.n() - 1] {
+            let before = space.dist_count();
+            let got = knn::tree_knn_point(&space, &tree, q, 5);
+            let got_dists = space.dist_count() - before;
+            let q_row = tree.layout.perm[q] as usize;
+            let before = space2.dist_count();
+            let reference = knn::tree_knn_point(&space2, &tree2, q_row, 5);
+            let ref_dists = space2.dist_count() - before;
+            assert_eq!(got_dists, ref_dists, "{label} point {q}: distance count");
+            for (g, r) in got.iter().zip(&reference) {
+                assert_eq!(g.id, inv[r.id as usize], "{label} point {q}: id");
+                assert_eq!(g.dist.to_bits(), r.dist.to_bits(), "{label} point {q}: dist");
+            }
+        }
+    }
+}
+
+#[test]
+fn ball_stats_match_pre_permutation_reference() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let (space2, tree2) = reference_pair(&space, &tree);
+        for (seed, radius) in [(1u64, 2.0), (2, 8.0), (3, 40.0)] {
+            let (center, _) = query_vec(space.dim(), 200 + seed);
+            let got = ballquery::tree_ball_stats(&space, &tree, &center, radius);
+            let reference = ballquery::tree_ball_stats(&space2, &tree2, &center, radius);
+            assert_eq!(got.count, reference.count, "{label} r={radius}: count");
+            assert_eq!(got.mean, reference.mean, "{label} r={radius}: mean");
+            assert_eq!(
+                got.total_variance.to_bits(),
+                reference.total_variance.to_bits(),
+                "{label} r={radius}: variance"
+            );
+            assert_eq!(got.dists, reference.dists, "{label} r={radius}: distance count");
+        }
+    }
+}
+
+#[test]
+fn anomaly_sweep_matches_pre_permutation_reference() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let (space2, tree2) = reference_pair(&space, &tree);
+        let params = anomaly::AnomalyParams { radius: 4.0, threshold: 12 };
+        let got = anomaly::tree_sweep(&space, &tree, &params);
+        let reference = anomaly::tree_sweep(&space2, &tree2, &params);
+        assert_eq!(got.n_anomalies, reference.n_anomalies, "{label}: anomaly total");
+        assert_eq!(got.dists, reference.dists, "{label}: distance count");
+        for (q, &flag) in got.flags.iter().enumerate() {
+            let row = tree.layout.perm[q] as usize;
+            assert_eq!(flag, reference.flags[row], "{label}: flag of point {q}");
+        }
+    }
+}
+
+#[test]
+fn allpairs_match_pre_permutation_reference() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let (space2, tree2) = reference_pair(&space, &tree);
+        let inv = &tree.layout.inv;
+        for tau in [0.8, 3.0] {
+            let got = allpairs::tree_close_pairs(&space, &tree, tau);
+            let reference = allpairs::tree_close_pairs(&space2, &tree2, tau);
+            assert_eq!(got.dists, reference.dists, "{label} tau={tau}: distance count");
+            let mut mapped: Vec<(u32, u32)> = reference
+                .pairs
+                .iter()
+                .map(|&(i, j)| {
+                    let (a, b) = (inv[i as usize], inv[j as usize]);
+                    (a.min(b), a.max(b))
+                })
+                .collect();
+            mapped.sort_unstable();
+            assert_eq!(got.pairs, mapped, "{label} tau={tau}: pair set");
+        }
+    }
+}
+
+#[test]
+fn kmeans_matches_pre_permutation_reference() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let (space2, tree2) = reference_pair(&space, &tree);
+        let seeds = given_seeds(space.dim(), 6, 31);
+        for threads in [1usize, 8] {
+            let opts = kmeans::KmeansOpts {
+                parallelism: Parallelism::Fixed(threads),
+                ..Default::default()
+            };
+            let got = kmeans::tree_lloyd(
+                &space,
+                &tree,
+                kmeans::Init::Given(seeds.clone()),
+                seeds.len(),
+                5,
+                &opts,
+            );
+            let reference = kmeans::tree_lloyd(
+                &space2,
+                &tree2,
+                kmeans::Init::Given(seeds.clone()),
+                seeds.len(),
+                5,
+                &opts,
+            );
+            assert_eq!(got.centroids, reference.centroids, "{label} {threads}t: centers");
+            assert_eq!(
+                got.distortion.to_bits(),
+                reference.distortion.to_bits(),
+                "{label} {threads}t: distortion"
+            );
+            assert_eq!(got.dists, reference.dists, "{label} {threads}t: distance count");
+        }
+    }
+}
+
+#[test]
+fn gaussian_em_matches_pre_permutation_reference() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let (space2, tree2) = reference_pair(&space, &tree);
+        let seeds = given_seeds(space.dim(), 4, 57);
+        for tau in [0.0, 0.05] {
+            let mut got_mix = gaussian::Mixture::from_seeds(seeds.clone());
+            let mut ref_mix = gaussian::Mixture::from_seeds(seeds.clone());
+            for step in 0..3 {
+                let before = space.dist_count();
+                let got_ll = gaussian::tree_em_step(&space, &tree, &mut got_mix, tau);
+                let got_dists = space.dist_count() - before;
+                let before = space2.dist_count();
+                let ref_ll = gaussian::tree_em_step(&space2, &tree2, &mut ref_mix, tau);
+                let ref_dists = space2.dist_count() - before;
+                assert_eq!(
+                    got_ll.to_bits(),
+                    ref_ll.to_bits(),
+                    "{label} tau={tau} step {step}: loglik"
+                );
+                assert_eq!(got_dists, ref_dists, "{label} tau={tau} step {step}: count");
+            }
+            assert_eq!(got_mix.means, ref_mix.means, "{label} tau={tau}: means");
+            assert_eq!(got_mix.weights, ref_mix.weights, "{label} tau={tau}: weights");
+            assert_eq!(got_mix.variances, ref_mix.variances, "{label} tau={tau}: variances");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Level 3: snapshot roundtrip replays queries bit-identically.
+// ---------------------------------------------------------------------
+
+#[test]
+fn snapshot_roundtrip_replays_queries_identically() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let mut buf = Vec::new();
+        serialize::write_tree(&tree, &mut buf).unwrap();
+        let mut back = serialize::read_tree(&mut buf.as_slice()).unwrap();
+        back.attach_arena(&space);
+        back.validate(&space).unwrap();
+
+        let (q, q_sq) = query_vec(space.dim(), 500);
+        let seeds = given_seeds(space.dim(), 5, 43);
+        for threads in [1usize, 8] {
+            // knn
+            let before = space.dist_count();
+            let a = knn::tree_knn(&space, &tree, &q, q_sq, 6, None);
+            let a_dists = space.dist_count() - before;
+            let before = space.dist_count();
+            let b = knn::tree_knn(&space, &back, &q, q_sq, 6, None);
+            let b_dists = space.dist_count() - before;
+            assert_eq!(a, b, "{label} {threads}t: knn result");
+            assert_eq!(a_dists, b_dists, "{label} {threads}t: knn count");
+
+            // kmeans (the only family here with a parallel pass).
+            let opts = kmeans::KmeansOpts {
+                parallelism: Parallelism::Fixed(threads),
+                ..Default::default()
+            };
+            let a = kmeans::tree_lloyd(
+                &space,
+                &tree,
+                kmeans::Init::Given(seeds.clone()),
+                seeds.len(),
+                4,
+                &opts,
+            );
+            let b = kmeans::tree_lloyd(
+                &space,
+                &back,
+                kmeans::Init::Given(seeds.clone()),
+                seeds.len(),
+                4,
+                &opts,
+            );
+            assert_eq!(a.centroids, b.centroids, "{label} {threads}t: kmeans centers");
+            assert_eq!(
+                a.distortion.to_bits(),
+                b.distortion.to_bits(),
+                "{label} {threads}t: kmeans distortion"
+            );
+            assert_eq!(a.dists, b.dists, "{label} {threads}t: kmeans count");
+
+            // allpairs
+            let a = allpairs::tree_close_pairs(&space, &tree, 1.5);
+            let b = allpairs::tree_close_pairs(&space, &back, 1.5);
+            assert_eq!(a.pairs, b.pairs, "{label} {threads}t: allpairs pairs");
+            assert_eq!(a.dists, b.dists, "{label} {threads}t: allpairs count");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layout structure on both builders and on subset trees.
+// ---------------------------------------------------------------------
+
+#[test]
+fn layout_validates_on_both_builders_and_subsets() {
+    let space = dense_space();
+    let mid = build(&space, 16);
+    mid.validate(&space).unwrap();
+    let td = top_down::build(&space, 16);
+    td.validate(&space).unwrap();
+
+    // Subset tree: perm marks outside points as unmapped; points_under
+    // still yields exactly the subset.
+    let subset: Vec<u32> = (0..space.n() as u32).filter(|p| p % 3 != 0).collect();
+    let sub = middle_out::build_subset(
+        &space,
+        subset.clone(),
+        &MiddleOutConfig { rmin: 12, ..Default::default() },
+    );
+    sub.validate(&space).unwrap();
+    let mut owned = sub.points_under(sub.root).to_vec();
+    owned.sort_unstable();
+    assert_eq!(owned, subset);
+    for p in (0..space.n() as u32).filter(|p| p % 3 == 0) {
+        assert_eq!(sub.layout.perm[p as usize], u32::MAX, "outside point {p} mapped");
+    }
+
+    // points_under is a zero-copy view consistent with node_rows on
+    // every node, leaves and interiors alike.
+    for id in 0..mid.nodes.len() as u32 {
+        let rows = mid.node_rows(id);
+        assert_eq!(mid.points_under(id).len(), rows.len(), "node {id} view length");
+    }
+}

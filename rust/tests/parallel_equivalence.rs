@@ -27,8 +27,9 @@ fn sparse_space() -> Space {
     Space::euclidean(Data::Sparse(gen_mixture(700, 120, 4, 42)))
 }
 
-/// Byte-level equality of two trees: layout, ball geometry, cached
-/// sufficient statistics and leaf point lists.
+/// Byte-level equality of two trees: arena layout, ball geometry,
+/// cached sufficient statistics, leaf row ranges and the tree-order
+/// permutation.
 fn assert_trees_identical(a: &MetricTree, b: &MetricTree, what: &str) {
     assert_eq!(a.root, b.root, "{what}: root id");
     assert_eq!(a.nodes.len(), b.nodes.len(), "{what}: node count");
@@ -48,8 +49,10 @@ fn assert_trees_identical(a: &MetricTree, b: &MetricTree, what: &str) {
             "{what}: node {i} cached sumsq"
         );
         assert_eq!(na.children, nb.children, "{what}: node {i} children");
-        assert_eq!(na.points, nb.points, "{what}: node {i} points");
+        assert_eq!(na.row_start, nb.row_start, "{what}: node {i} row range");
     }
+    assert_eq!(a.layout.perm, b.layout.perm, "{what}: layout perm");
+    assert_eq!(a.layout.inv, b.layout.inv, "{what}: layout inv");
 }
 
 #[test]
