@@ -184,11 +184,17 @@ pub fn correlated_attribute_pairs(
         .pairs
         .iter()
         .map(|&(i, j)| {
+            // Recomputing the pair distance for the rho output is a fresh
+            // distance evaluation, so it joins the eq.-6 accounting (the
+            // search result's count alone used to under-report by one per
+            // reported pair).
+            space.count_bulk(1);
+            // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
             let d = space.dist_uncounted(i as usize, j as usize);
             (i, j, tau_to_rho(d))
         })
         .collect();
-    (triples, result.dists)
+    (triples, result.dists + result.pairs.len() as u64)
 }
 
 #[cfg(test)]
@@ -294,6 +300,40 @@ mod tests {
         assert!(!keys.contains(&(2, 3)), "negative pair matched at rho=0.9");
         assert_eq!(keys.len(), 1, "{keys:?}");
         assert!(pairs[0].2 > 0.9);
+    }
+
+    #[test]
+    fn attribute_pairs_count_includes_rho_recomputation() {
+        // The reported distance total must cover *every* evaluation,
+        // including the per-pair recompute that turns a tau into the
+        // output rho (previously uncounted: the total under-reported by
+        // one distance per reported pair).
+        let mut rng = Rng::new(11);
+        let n = 200;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let base = rng.normal();
+            rows.push(vec![
+                base as f32,
+                (base + 0.2 * rng.normal()) as f32,
+                (base + 0.3 * rng.normal()) as f32,
+                rng.normal() as f32,
+            ]);
+        }
+        let data = DenseMatrix::from_rows(&rows);
+        let rho = 0.8;
+        let rmin = 3;
+        let (pairs, reported) = correlated_attribute_pairs(&data, rho, rmin, true);
+        // Replicate the search on an identical attribute space (the
+        // build is deterministic) to get the search-only count.
+        let attrs = attribute_view(&data);
+        let space = Space::euclidean(Data::Dense(attrs));
+        let cfg = MiddleOutConfig { rmin, ..Default::default() };
+        let tree = middle_out::build(&space, &cfg);
+        let search = tree_close_pairs(&space, &tree, rho_to_tau(rho));
+        assert_eq!(search.pairs.len(), pairs.len());
+        assert!(!pairs.is_empty(), "planted correlations not found");
+        assert_eq!(reported, search.dists + pairs.len() as u64);
     }
 
     #[test]

@@ -65,10 +65,17 @@ pub fn tree_is_anomaly_vec(
     let mut found = 0u64;
     let mut possible = tree.root_node().count as u64;
     let mut dists: Vec<f64> = Vec::new();
+    // The root's pivot distance is computed here and *counted* by
+    // `recurse` on entry — every visited node pays for its pivot
+    // distance exactly once (the same evaluation also serves as the
+    // parent's child-ordering key, so it is never recomputed).
+    let root_node = tree.root_node();
+    let d_root = dist_vec_uncounted(space, qrow, q_sq, &root_node.pivot, root_node.pivot_sq);
     let verdict = recurse(
         space,
         tree,
         tree.root,
+        d_root,
         qrow,
         q_sq,
         params,
@@ -85,11 +92,18 @@ pub fn tree_is_anomaly_vec(
 
 /// Depth-first descent, closer child first. Returns Some(verdict) on an
 /// early exit (rules 3/4), None to continue.
+///
+/// `d_pivot` is the query's distance to this node's pivot, computed by
+/// the caller (it doubles as the child-ordering key there) and accounted
+/// here: one counted pivot distance per visited node, same as computing
+/// it on entry, but without the former duplicate uncounted evaluation in
+/// the parent.
 #[allow(clippy::too_many_arguments)]
 fn recurse(
     space: &Space,
     tree: &MetricTree,
     node_id: NodeId,
+    d_pivot: f64,
     qrow: &[f32],
     q_sq: f64,
     params: &AnomalyParams,
@@ -98,7 +112,7 @@ fn recurse(
     dists: &mut Vec<f64>,
 ) -> Option<bool> {
     let node = tree.node(node_id);
-    let d_pivot = dist_vec(space, qrow, q_sq, &node.pivot, node.pivot_sq);
+    space.count_bulk(1);
 
     // Rule 1: whole node within range.
     if d_pivot + node.radius <= params.radius {
@@ -162,35 +176,40 @@ fn recurse(
         }
         Some((a, b)) => {
             // Closer child first maximizes early rule-3 exits for normal
-            // points (the common case).
+            // points (the common case). These evaluations are handed down
+            // and counted by each child on entry — computed once, counted
+            // once.
             let (na, nb) = (tree.node(a), tree.node(b));
             let da = dist_vec_uncounted(space, qrow, q_sq, &na.pivot, na.pivot_sq);
             let db = dist_vec_uncounted(space, qrow, q_sq, &nb.pivot, nb.pivot_sq);
-            let (first, second) = if da <= db { (a, b) } else { (b, a) };
-            if let Some(v) =
-                recurse(space, tree, first, qrow, q_sq, params, found, possible, dists)
-            {
+            let ((first, d_first), (second, d_second)) =
+                if da <= db { ((a, da), (b, db)) } else { ((b, db), (a, da)) };
+            if let Some(v) = recurse(
+                space, tree, first, d_first, qrow, q_sq, params, found, possible, dists,
+            ) {
                 return Some(v);
             }
-            recurse(space, tree, second, qrow, q_sq, params, found, possible, dists)
+            recurse(
+                space, tree, second, d_second, qrow, q_sq, params, found, possible, dists,
+            )
         }
     }
 }
 
-#[inline]
-fn dist_vec(space: &Space, a: &[f32], a_sq: f64, b: &[f32], b_sq: f64) -> f64 {
-    space.count_bulk(1);
-    dist_vec_uncounted(space, a, a_sq, b, b_sq)
-}
-
+/// Pivot distance via the cached-norm dot formula. Accounting happens in
+/// `recurse` (one `count_bulk(1)` per visited node), not here: each
+/// evaluation serves both as the parent's ordering key and as the child's
+/// bound, and must be paid for exactly once.
 #[inline]
 fn dist_vec_uncounted(space: &Space, a: &[f32], a_sq: f64, b: &[f32], b_sq: f64) -> f64 {
     use crate::metrics::{dense_dot, dense_l1, Metric};
     match space.metric {
         Metric::Euclidean => {
+            // pallas-lint: allow(uncounted-dist, counted once per visited node in recurse)
             let d2 = a_sq + b_sq - 2.0 * dense_dot(a, b);
             d2.max(0.0).sqrt()
         }
+        // pallas-lint: allow(uncounted-dist, counted once per visited node in recurse)
         Metric::L1 => dense_l1(a, b),
     }
 }
@@ -243,6 +262,7 @@ pub fn calibrate_radius(
     let mut kth: Vec<f64> = sample_ids
         .iter()
         .map(|&q| {
+            // pallas-lint: allow(uncounted-dist, calibration is experimental setup; documented uncounted)
             let mut ds: Vec<f64> = (0..n).map(|p| space.dist_uncounted(p, q)).collect();
             ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
             ds[(threshold as usize).min(n - 1)]
@@ -356,6 +376,135 @@ mod tests {
             (0.02..0.3).contains(&frac),
             "calibrated fraction {frac} far from 0.1"
         );
+    }
+
+    /// Reference recursion in the *old* style: every visited node pays a
+    /// counted pivot distance on entry, and the parent separately
+    /// recomputes both children's pivot distances (uncounted) for
+    /// ordering. The production path now threads the parent's evaluation
+    /// down instead; flags and distance counts must be identical.
+    #[allow(clippy::too_many_arguments)]
+    fn reference_recurse(
+        space: &Space,
+        tree: &MetricTree,
+        node_id: NodeId,
+        qrow: &[f32],
+        q_sq: f64,
+        params: &AnomalyParams,
+        found: &mut u64,
+        possible: &mut u64,
+        dists: &mut Vec<f64>,
+    ) -> Option<bool> {
+        let node = tree.node(node_id);
+        space.count_bulk(1);
+        let d_pivot = dist_vec_uncounted(space, qrow, q_sq, &node.pivot, node.pivot_sq);
+        if d_pivot + node.radius <= params.radius {
+            *found += node.count as u64;
+            if *found >= params.threshold {
+                return Some(false);
+            }
+            return None;
+        }
+        if d_pivot - node.radius > params.radius {
+            *possible -= node.count as u64;
+            if *possible < params.threshold {
+                return Some(true);
+            }
+            return None;
+        }
+        match node.children {
+            None => {
+                let arena = tree.arena();
+                let rows = tree.node_rows(node_id);
+                let leaf = rows.len() as u64;
+                if *found + leaf < params.threshold
+                    && *possible >= leaf
+                    && *possible - leaf >= params.threshold
+                {
+                    crate::metrics::block::dists_contig_to_vec(arena, rows, qrow, q_sq, dists);
+                    for &d in dists.iter() {
+                        if d <= params.radius {
+                            *found += 1;
+                        } else {
+                            *possible -= 1;
+                        }
+                    }
+                    return None;
+                }
+                for r in rows {
+                    let d = arena.dist_to_vec(r, qrow, q_sq);
+                    if d <= params.radius {
+                        *found += 1;
+                        if *found >= params.threshold {
+                            return Some(false);
+                        }
+                    } else {
+                        *possible -= 1;
+                        if *possible < params.threshold {
+                            return Some(true);
+                        }
+                    }
+                }
+                None
+            }
+            Some((a, b)) => {
+                let (na, nb) = (tree.node(a), tree.node(b));
+                let da = dist_vec_uncounted(space, qrow, q_sq, &na.pivot, na.pivot_sq);
+                let db = dist_vec_uncounted(space, qrow, q_sq, &nb.pivot, nb.pivot_sq);
+                let (first, second) = if da <= db { (a, b) } else { (b, a) };
+                if let Some(v) = reference_recurse(
+                    space, tree, first, qrow, q_sq, params, found, possible, dists,
+                ) {
+                    return Some(v);
+                }
+                reference_recurse(space, tree, second, qrow, q_sq, params, found, possible, dists)
+            }
+        }
+    }
+
+    fn reference_is_anomaly(
+        space: &Space,
+        tree: &MetricTree,
+        q: usize,
+        params: &AnomalyParams,
+    ) -> bool {
+        let mut qrow = vec![0f32; space.dim()];
+        space.fill_row(q, &mut qrow);
+        let q_sq = space.data.sqnorm(q);
+        let mut found = 0u64;
+        let mut possible = tree.root_node().count as u64;
+        let mut dists = Vec::new();
+        match reference_recurse(
+            space, tree, tree.root, &qrow, q_sq, params, &mut found, &mut possible, &mut dists,
+        ) {
+            Some(v) => v,
+            None => found < params.threshold,
+        }
+    }
+
+    #[test]
+    fn threaded_pivot_distance_matches_reference_exactly() {
+        // The fix that threads d_pivot down the recursion must change
+        // neither verdicts nor the eq.-6 distance accounting relative to
+        // the recompute-at-entry reference, query by query.
+        let space = blob_with_outliers(400, 6, 9);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 12, ..Default::default() });
+        for (radius, threshold) in [(2.0, 5), (5.0, 20), (0.5, 2)] {
+            let params = AnomalyParams { radius, threshold };
+            for q in (0..space.n()).step_by(7) {
+                space.reset_count();
+                let want = reference_is_anomaly(&space, &tree, q, &params);
+                let want_dists = space.dist_count();
+                space.reset_count();
+                let got = tree_is_anomaly(&space, &tree, q, &params);
+                let got_dists = space.dist_count();
+                assert_eq!(got, want, "q={q} r={radius} t={threshold}");
+                assert_eq!(
+                    got_dists, want_dists,
+                    "q={q} r={radius} t={threshold}: accounting drifted"
+                );
+            }
+        }
     }
 
     #[test]

@@ -106,6 +106,7 @@ impl Accum {
 
 /// Precomputed squared norms of the current centroids.
 fn centroid_sqnorms(centroids: &[Vec<f32>]) -> Vec<f64> {
+    // pallas-lint: allow(uncounted-dist, centroid norm staging reused by the counted kernels)
     centroids.iter().map(|c| dense_dot(c, c)).collect()
 }
 
@@ -322,6 +323,7 @@ fn reduce_cands(
     for i in lo..hi {
         let cu = scratch.cands[i] as usize;
         let d2 = ctx.c_sq[cu] + node.pivot_sq
+            // pallas-lint: allow(uncounted-dist, counted via count_bulk at loop entry above)
             - 2.0 * dense_dot(&ctx.centroids[cu], &node.pivot);
         let d = d2.max(0.0).sqrt();
         scratch.dists[i] = d;
@@ -626,6 +628,7 @@ pub fn assign_labels_ex(space: &Space, centroids: &[Vec<f32>], exec: &Executor) 
                 let mut best = f64::INFINITY;
                 let mut best_c = 0u32;
                 for (ci, c) in centroids.iter().enumerate() {
+                    // pallas-lint: allow(uncounted-dist, label readout; documented uncounted reporting pass)
                     let d = space.dist_to_vec_uncounted(p, c, c_sq[ci]);
                     if d < best {
                         best = d;
@@ -649,6 +652,7 @@ pub fn distortion_of(space: &Space, centroids: &[Vec<f32>]) -> f64 {
             centroids
                 .iter()
                 .enumerate()
+                // pallas-lint: allow(uncounted-dist, documented uncounted; reporting only)
                 .map(|(ci, c)| space.dist_to_vec_uncounted(p, c, c_sq[ci]).powi(2))
                 .fold(f64::INFINITY, f64::min)
         })

@@ -122,9 +122,11 @@ fn node_lower_bound(space: &Space, tree: &MetricTree, id: NodeId, qrow: &[f32], 
     space.count_bulk(1);
     let d = match space.metric {
         Metric::Euclidean => {
+            // pallas-lint: allow(uncounted-dist, counted via count_bulk above)
             let d2 = q_sq + node.pivot_sq - 2.0 * dense_dot(qrow, &node.pivot);
             d2.max(0.0).sqrt()
         }
+        // pallas-lint: allow(uncounted-dist, counted via count_bulk above)
         Metric::L1 => dense_l1(qrow, &node.pivot),
     };
     (d - node.radius).max(0.0)

@@ -103,8 +103,11 @@ pub fn tree_mst(space: &Space, tree: &MetricTree) -> Vec<Edge> {
         // current round (u32::MAX = mixed).
         let node_comp = compute_node_components(space, tree, &mut uf);
 
-        // Best outgoing edge per component root.
-        let mut best: std::collections::HashMap<u32, Edge> = std::collections::HashMap::new();
+        // Best outgoing edge per component root. BTreeMap, not HashMap:
+        // the merge loop below iterates this map, and hash iteration
+        // order would make edge orientation and union order (hence
+        // later-round distance counts) vary run to run.
+        let mut best: std::collections::BTreeMap<u32, Edge> = std::collections::BTreeMap::new();
         for p in 0..n {
             let comp = uf.find(p as u32);
             space.fill_row(p, &mut qrow);
@@ -230,9 +233,11 @@ fn descend(
         use crate::metrics::{dense_dot, dense_l1, Metric};
         match space.metric {
             Metric::Euclidean => {
+                // pallas-lint: allow(uncounted-dist, counted via count_bulk(1) above)
                 let d2 = q_sq + node.pivot_sq - 2.0 * dense_dot(qrow, &node.pivot);
                 d2.max(0.0).sqrt()
             }
+            // pallas-lint: allow(uncounted-dist, counted via count_bulk(1) above)
             Metric::L1 => dense_l1(qrow, &node.pivot),
         }
     };
@@ -260,9 +265,13 @@ fn descend(
             }
         }
         Some((a, b)) => {
-            // Closer child first.
+            // Closer child first. The comparisons are a traversal-order
+            // heuristic only: they never reach results, and each child
+            // pays its own counted pivot distance on entry.
             let (na, nb) = (tree.node(a), tree.node(b));
+            // pallas-lint: allow(uncounted-dist, prune-order heuristic; children count on entry)
             let da = crate::metrics::dense_sqdist(qrow, &na.pivot);
+            // pallas-lint: allow(uncounted-dist, prune-order heuristic; children count on entry)
             let db = crate::metrics::dense_sqdist(qrow, &nb.pivot);
             let (first, second) = if da <= db { (a, b) } else { (b, a) };
             descend(space, tree, first, node_comp, uf, comp, qrow, q_sq, skip, best, best_d);
@@ -350,6 +359,29 @@ mod tests {
         let tree = middle_out::build(&space, &MiddleOutConfig::default());
         let e = tree_mst(&space, &tree);
         assert_eq!(e.len(), 1);
+    }
+
+    #[test]
+    fn tree_mst_is_deterministic_across_runs() {
+        // Regression for the Borůvka merge map: with a HashMap, per-round
+        // merge order (hence edge orientation and later-round distance
+        // counts) varied run to run. Repeated runs must now be
+        // bit-identical, edges and accounting both.
+        let space = random_space(150, 3, 9);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 8, ..Default::default() });
+        space.reset_count();
+        let first = tree_mst(&space, &tree);
+        let first_dists = space.dist_count();
+        for _ in 0..2 {
+            space.reset_count();
+            let again = tree_mst(&space, &tree);
+            assert_eq!(space.dist_count(), first_dists, "distance count drifted");
+            assert_eq!(again.len(), first.len());
+            for (x, y) in first.iter().zip(&again) {
+                assert_eq!((x.a, x.b), (y.a, y.b), "edge orientation drifted");
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+            }
+        }
     }
 
     #[test]

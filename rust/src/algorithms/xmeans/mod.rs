@@ -50,6 +50,7 @@ pub fn bic(distortion: f64, n: usize, k: usize, d: usize) -> f64 {
 
 /// Local distortion of `points` against a set of centers.
 fn local_distortion(space: &Space, points: &[u32], centers: &[Vec<f32>]) -> f64 {
+    // pallas-lint: allow(uncounted-dist, centroid norm staging for local distortion)
     let c_sq: Vec<f64> = centers.iter().map(|c| dense_dot(c, c)).collect();
     points
         .iter()
@@ -59,6 +60,7 @@ fn local_distortion(space: &Space, points: &[u32], centers: &[Vec<f32>]) -> f64 
                 .enumerate()
                 .map(|(ci, c)| {
                     space.count_bulk(1);
+                    // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
                     space.dist_to_vec_uncounted(p as usize, c, c_sq[ci]).powi(2)
                 })
                 .fold(f64::INFINITY, f64::min)
@@ -78,13 +80,16 @@ fn local_2means(
     let mut centers = vec![seed_a, seed_b];
     let mut dist = f64::INFINITY;
     for _ in 0..iters {
+        // pallas-lint: allow(uncounted-dist, centroid norm staging per Lloyd iteration)
         let c_sq: Vec<f64> = centers.iter().map(|c| dense_dot(c, c)).collect();
         let mut sums = vec![vec![0f64; d]; 2];
         let mut counts = [0u64; 2];
         dist = 0.0;
         for &p in points {
             space.count_bulk(2);
+            // pallas-lint: allow(uncounted-dist, counted via the count_bulk 2 above)
             let d0 = space.dist_to_vec_uncounted(p as usize, &centers[0], c_sq[0]);
+            // pallas-lint: allow(uncounted-dist, counted via the count_bulk 2 above)
             let d1 = space.dist_to_vec_uncounted(p as usize, &centers[1], c_sq[1]);
             let (win, dd) = if d0 <= d1 { (0, d0) } else { (1, d1) };
             counts[win] += 1;

@@ -50,6 +50,7 @@
 use super::{JobSpec, JobState, MetricsSnapshot, ShardedCoordinator};
 use crate::dataset::{DatasetKind, DatasetSpec};
 use crate::engine::wire;
+use crate::ids;
 use crate::json::{self, Value};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -76,7 +77,11 @@ impl Server {
             .name("coord-server-accept".into())
             .spawn(move || {
                 // Nonblocking accept loop so `stop` is honored promptly.
-                listener.set_nonblocking(true).expect("nonblocking");
+                // Without nonblocking mode `stop` cannot be polled; give
+                // up on serving rather than take the process down.
+                if listener.set_nonblocking(true).is_err() {
+                    return;
+                }
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
@@ -160,16 +165,18 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
             // cross-check them within a single response.
             let lens = coord.shard_queue_lens();
             let total: usize = lens.iter().sum();
-            let per_shard: Vec<Value> =
-                lens.into_iter().map(|q| Value::Num(q as f64)).collect();
+            let per_shard: Vec<Value> = lens
+                .into_iter()
+                .map(|q| Value::Num(ids::wire_from_usize(q)))
+                .collect();
             Ok(ok_obj(vec![
-                ("submitted", Value::Num(m.submitted as f64)),
-                ("completed", Value::Num(m.completed as f64)),
-                ("failed", Value::Num(m.failed as f64)),
-                ("rejected", Value::Num(m.rejected as f64)),
-                ("cancelled", Value::Num(m.cancelled as f64)),
-                ("total_dists", Value::Num(m.total_dists as f64)),
-                ("queue_len", Value::Num(total as f64)),
+                ("submitted", Value::Num(ids::wire_from_u64(m.submitted))),
+                ("completed", Value::Num(ids::wire_from_u64(m.completed))),
+                ("failed", Value::Num(ids::wire_from_u64(m.failed))),
+                ("rejected", Value::Num(ids::wire_from_u64(m.rejected))),
+                ("cancelled", Value::Num(ids::wire_from_u64(m.cancelled))),
+                ("total_dists", Value::Num(ids::wire_from_u64(m.total_dists))),
+                ("queue_len", Value::Num(ids::wire_from_usize(total))),
                 ("shard_queue_lens", Value::Arr(per_shard)),
             ]))
         }
@@ -183,25 +190,28 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
                 .map(|(shard, (m, queue_len))| shard_obj(shard, &m, queue_len))
                 .collect();
             Ok(ok_obj(vec![
-                ("shards", Value::Num(coord.n_shards() as f64)),
+                ("shards", Value::Num(ids::wire_from_usize(coord.n_shards()))),
                 ("per_shard", Value::Arr(per_shard)),
             ]))
         }
         "submit" => {
             let spec = parse_spec(&req)?;
             match coord.submit(spec) {
-                Ok(id) => Ok(ok_obj(vec![("id", Value::Num(id as f64))])),
+                Ok(id) => Ok(ok_obj(vec![("id", Value::Num(ids::wire_from_u64(id)))])),
                 Err(e) => Err(format!("{e:?}")),
             }
         }
         "cancel" => {
-            let id = req
+            // Checked id parse: a raw `as u64` would turn garbage like
+            // -1.5 into 0 and silently alias a real job.
+            let raw = req
                 .get("id")
                 .and_then(Value::as_f64)
-                .ok_or("missing \"id\"")? as u64;
+                .ok_or("missing \"id\"")?;
+            let id = ids::wire_u64(raw, "id")?;
             if coord.cancel(id) {
                 Ok(ok_obj(vec![
-                    ("id", Value::Num(id as f64)),
+                    ("id", Value::Num(ids::wire_from_u64(id))),
                     ("cancelled", Value::Bool(true)),
                 ]))
             } else {
@@ -211,10 +221,11 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
             }
         }
         "state" | "wait" => {
-            let id = req
+            let raw = req
                 .get("id")
                 .and_then(Value::as_f64)
-                .ok_or("missing \"id\"")? as u64;
+                .ok_or("missing \"id\"")?;
+            let id = ids::wire_u64(raw, "id")?;
             let state = if cmd == "wait" {
                 coord.wait_checked(id)
             } else {
@@ -229,14 +240,14 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
 
 fn shard_obj(shard: usize, m: &MetricsSnapshot, queue_len: usize) -> Value {
     let mut obj = BTreeMap::new();
-    obj.insert("shard".into(), Value::Num(shard as f64));
-    obj.insert("queue_len".into(), Value::Num(queue_len as f64));
-    obj.insert("submitted".into(), Value::Num(m.submitted as f64));
-    obj.insert("completed".into(), Value::Num(m.completed as f64));
-    obj.insert("failed".into(), Value::Num(m.failed as f64));
-    obj.insert("rejected".into(), Value::Num(m.rejected as f64));
-    obj.insert("cancelled".into(), Value::Num(m.cancelled as f64));
-    obj.insert("total_dists".into(), Value::Num(m.total_dists as f64));
+    obj.insert("shard".into(), Value::Num(ids::wire_from_usize(shard)));
+    obj.insert("queue_len".into(), Value::Num(ids::wire_from_usize(queue_len)));
+    obj.insert("submitted".into(), Value::Num(ids::wire_from_u64(m.submitted)));
+    obj.insert("completed".into(), Value::Num(ids::wire_from_u64(m.completed)));
+    obj.insert("failed".into(), Value::Num(ids::wire_from_u64(m.failed)));
+    obj.insert("rejected".into(), Value::Num(ids::wire_from_u64(m.rejected)));
+    obj.insert("cancelled".into(), Value::Num(ids::wire_from_u64(m.cancelled)));
+    obj.insert("total_dists".into(), Value::Num(ids::wire_from_u64(m.total_dists)));
     Value::Obj(obj)
 }
 
@@ -248,16 +259,22 @@ fn parse_spec(req: &Value) -> Result<JobSpec, String> {
     let kind = DatasetKind::parse(dataset_name)
         .ok_or(format!("unknown dataset {dataset_name:?}"))?;
     let scale = req.get("scale").and_then(Value::as_f64).unwrap_or(0.01);
-    let seed = req.get("seed").and_then(Value::as_f64).unwrap_or(20130.0) as u64;
+    let seed = match req.get("seed").and_then(Value::as_f64) {
+        Some(raw) => ids::wire_u64(raw, "seed")?,
+        None => 20130,
+    };
     let dataset = DatasetSpec { kind, scale, seed };
     // The rest of the request *is* the wire form of an engine query.
     let query = wire::query_from_json(req)?;
-    let rmin = req.get("rmin").and_then(Value::as_f64).unwrap_or(30.0) as usize;
+    let rmin = match req.get("rmin").and_then(Value::as_f64) {
+        Some(raw) => ids::wire_usize(raw, "rmin")?,
+        None => 30,
+    };
     Ok(JobSpec { dataset, query, rmin })
 }
 
 fn state_obj(id: u64, state: &JobState) -> Value {
-    let mut fields: Vec<(&str, Value)> = vec![("id", Value::Num(id as f64))];
+    let mut fields: Vec<(&str, Value)> = vec![("id", Value::Num(ids::wire_from_u64(id)))];
     match state {
         JobState::Queued => fields.push(("state", Value::Str("queued".into()))),
         JobState::Running => fields.push(("state", Value::Str("running".into()))),
@@ -267,7 +284,7 @@ fn state_obj(id: u64, state: &JobState) -> Value {
         }
         JobState::Done(r) => {
             fields.push(("state", Value::Str("done".into())));
-            fields.push(("dists", Value::Num(r.dists as f64)));
+            fields.push(("dists", Value::Num(ids::wire_from_u64(r.dists))));
             fields.push(("wall_ms", Value::Num(r.wall_ms)));
             fields.push(("output", wire::result_to_json(&r.output)));
         }
@@ -399,6 +416,19 @@ mod tests {
             r#"{"cmd":"submit","dataset":"unknown-ds","op":"kmeans"}"#,
             r#"{"cmd":"submit","dataset":"cell"}"#,
             r#"{"cmd":"wait"}"#,
+            // Garbage numerics: each of these would alias a real id (or
+            // truncate silently) under a raw `as` cast. They must come
+            // back as errors, never panics or bogus lookups.
+            r#"{"cmd":"wait","id":-1.5}"#,
+            r#"{"cmd":"wait","id":0.25}"#,
+            r#"{"cmd":"wait","id":1e300}"#,
+            r#"{"cmd":"cancel","id":-1}"#,
+            r#"{"cmd":"cancel","id":1e300}"#,
+            r#"{"cmd":"state","id":9.5}"#,
+            r#"{"cmd":"submit","dataset":"cell","op":"mst","seed":-3}"#,
+            r#"{"cmd":"submit","dataset":"cell","op":"mst","seed":0.5}"#,
+            r#"{"cmd":"submit","dataset":"cell","op":"mst","rmin":-30}"#,
+            r#"{"cmd":"submit","dataset":"cell","op":"mst","rmin":1e300}"#,
         ] {
             self_call(&mut client, bad);
         }

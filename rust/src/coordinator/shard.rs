@@ -50,6 +50,7 @@
 //! processes.
 
 use super::{Coordinator, JobId, JobSpec, JobState, MetricsSnapshot, SubmitError};
+use crate::ids;
 use crate::runtime::BatchDistanceEngine;
 use std::sync::Arc;
 
@@ -71,12 +72,14 @@ const LOCAL_MASK: u64 = (1 << SHARD_SHIFT) - 1;
 pub fn encode_job_id(shard: usize, local: JobId) -> JobId {
     debug_assert!(shard < MAX_SHARDS, "shard {shard} out of range");
     debug_assert!(local <= LOCAL_MASK, "local id {local} overflows the tag");
-    ((shard as u64) << SHARD_SHIFT) | local
+    (ids::u64_from_usize(shard) << SHARD_SHIFT) | local
 }
 
 /// Split a global [`JobId`] into `(shard, local)`.
 pub fn decode_job_id(id: JobId) -> (usize, JobId) {
-    ((id >> SHARD_SHIFT) as usize, id & LOCAL_MASK)
+    // The tag is at most `SHARD_BITS` + the bits above it — far below
+    // `u32::MAX` — so the usize conversion is lossless on every target.
+    (ids::usize_from_u64(id >> SHARD_SHIFT), id & LOCAL_MASK)
 }
 
 /// Default shard count: `PALLAS_SHARDS` when set, otherwise 1 —
@@ -110,7 +113,7 @@ pub fn default_shards() -> Result<usize, String> {
 fn ring_hash(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
-        h ^= b as u64;
+        h ^= u64::from(b);
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h ^= h >> 30;
@@ -124,8 +127,10 @@ fn ring_hash(bytes: &[u8]) -> u64 {
 /// a key routes to the shard owning the first point clockwise of the
 /// key's hash.
 struct Ring {
-    /// Sorted `(point, shard)` pairs.
-    points: Vec<(u64, u32)>,
+    /// Sorted `(point, shard)` pairs. The shard is stored as `usize`
+    /// outright — `(u64, u32)` pads to the same 16 bytes, so narrowing
+    /// would buy nothing and cost a cast on every route.
+    points: Vec<(u64, usize)>,
 }
 
 impl Ring {
@@ -134,7 +139,7 @@ impl Ring {
         for shard in 0..n_shards {
             for vnode in 0..VNODES {
                 let point = ring_hash(format!("shard-{shard}#vnode-{vnode}").as_bytes());
-                points.push((point, shard as u32));
+                points.push((point, shard));
             }
         }
         points.sort_unstable();
@@ -146,7 +151,7 @@ impl Ring {
         let i = self.points.partition_point(|&(p, _)| p < h);
         // Wrap past the last point back to the ring's first.
         let (_, shard) = self.points[if i == self.points.len() { 0 } else { i }];
-        shard as usize
+        shard
     }
 }
 

@@ -233,6 +233,7 @@ impl Index {
                     v.len(),
                     space.dim()
                 );
+                // pallas-lint: allow(uncounted-dist, query norm staging; knn distances counted in the search)
                 (v.clone(), dense_dot(v, v), None)
             }
         };

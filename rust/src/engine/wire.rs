@@ -16,6 +16,7 @@ use super::{
 };
 use crate::algorithms::knn::Neighbor;
 use crate::algorithms::mst::Edge;
+use crate::ids;
 use crate::json::Value;
 use std::collections::BTreeMap;
 
@@ -32,7 +33,7 @@ fn num(x: f64) -> Value {
 }
 
 fn f32_row(row: &[f32]) -> Value {
-    Value::Arr(row.iter().map(|&v| num(v as f64)).collect())
+    Value::Arr(row.iter().map(|&v| num(f64::from(v))).collect())
 }
 
 fn f32_rows(rows: &[Vec<f32>]) -> Value {
@@ -49,6 +50,34 @@ fn get_f64(v: &Value, key: &str) -> Option<f64> {
 
 fn get_or(v: &Value, key: &str, default: f64) -> f64 {
     get_f64(v, key).unwrap_or(default)
+}
+
+/// Optional count field: absent takes the default, present must be a
+/// whole non-negative in-range number (garbage like `-1.5` or `1e300`
+/// is an error, not a silent truncation).
+fn get_usize(v: &Value, key: &str, default: usize) -> Result<usize, String> {
+    match get_f64(v, key) {
+        Some(raw) => ids::wire_usize(raw, key),
+        None => Ok(default),
+    }
+}
+
+fn get_u64(v: &Value, key: &str, default: u64) -> Result<u64, String> {
+    match get_f64(v, key) {
+        Some(raw) => ids::wire_u64(raw, key),
+        None => Ok(default),
+    }
+}
+
+/// Required count field, checked the same way.
+fn req_usize(v: &Value, key: &str) -> Result<usize, String> {
+    let raw = get_f64(v, key).ok_or_else(|| format!("missing \"{key}\""))?;
+    ids::wire_usize(raw, key)
+}
+
+fn req_u64(v: &Value, key: &str) -> Result<u64, String> {
+    let raw = get_f64(v, key).ok_or_else(|| format!("missing \"{key}\""))?;
+    ids::wire_u64(raw, key)
 }
 
 /// `"tree"` defaults to true unless explicitly false (historical server
@@ -112,17 +141,17 @@ pub fn query_to_json(q: &Query) -> Value {
     let mut fields: Vec<(&str, Value)> = vec![("op", Value::Str(q.kind().into()))];
     match q {
         Query::Kmeans(q) => {
-            fields.push(("k", num(q.k as f64)));
-            fields.push(("iters", num(q.iters as f64)));
+            fields.push(("k", num(ids::wire_from_usize(q.k))));
+            fields.push(("iters", num(ids::wire_from_usize(q.iters))));
             fields.push(("init", Value::Str(q.init.name().into())));
             fields.push((key_tree(), Value::Bool(q.use_tree)));
         }
         Query::Xmeans(q) => {
-            fields.push(("k_min", num(q.k_min as f64)));
-            fields.push(("k_max", num(q.k_max as f64)));
+            fields.push(("k_min", num(ids::wire_from_usize(q.k_min))));
+            fields.push(("k_max", num(ids::wire_from_usize(q.k_max))));
         }
         Query::Anomaly(q) => {
-            fields.push(("threshold", num(q.threshold as f64)));
+            fields.push(("threshold", num(ids::wire_from_u64(q.threshold))));
             if let Some(r) = q.radius {
                 fields.push(("radius", num(r)));
             }
@@ -139,18 +168,18 @@ pub fn query_to_json(q: &Query) -> Value {
             fields.push((key_tree(), Value::Bool(q.use_tree)));
         }
         Query::GaussianEm(q) => {
-            fields.push(("k", num(q.k as f64)));
-            fields.push(("steps", num(q.steps as f64)));
+            fields.push(("k", num(ids::wire_from_usize(q.k))));
+            fields.push(("steps", num(ids::wire_from_usize(q.steps))));
             fields.push(("tau", num(q.tau)));
             fields.push(("init", Value::Str(q.init.name().into())));
             fields.push((key_tree(), Value::Bool(q.use_tree)));
         }
         Query::Knn(q) => {
             match &q.target {
-                KnnTarget::Point(id) => fields.push(("point", num(*id as f64))),
+                KnnTarget::Point(id) => fields.push(("point", num(ids::wire_from_u32(*id)))),
                 KnnTarget::Vector(v) => fields.push(("vector", f32_row(v))),
             }
-            fields.push(("k", num(q.k as f64)));
+            fields.push(("k", num(ids::wire_from_usize(q.k))));
             fields.push((key_tree(), Value::Bool(q.use_tree)));
         }
         Query::Mst(q) => {
@@ -173,8 +202,8 @@ pub fn query_from_json(v: &Value) -> Result<Query, String> {
         "kmeans" => {
             let d = KmeansQuery::default();
             Ok(Query::Kmeans(KmeansQuery {
-                k: get_or(v, "k", d.k as f64) as usize,
-                iters: get_or(v, "iters", d.iters as f64) as usize,
+                k: get_usize(v, "k", d.k)?,
+                iters: get_usize(v, "iters", d.iters)?,
                 init: init_kind(v)?,
                 use_tree,
             }))
@@ -182,14 +211,14 @@ pub fn query_from_json(v: &Value) -> Result<Query, String> {
         "xmeans" => {
             let d = XmeansQuery::default();
             Ok(Query::Xmeans(XmeansQuery {
-                k_min: get_or(v, "k_min", d.k_min as f64) as usize,
-                k_max: get_or(v, "k_max", d.k_max as f64) as usize,
+                k_min: get_usize(v, "k_min", d.k_min)?,
+                k_max: get_usize(v, "k_max", d.k_max)?,
             }))
         }
         "anomaly" => {
             let d = AnomalyQuery::default();
             Ok(Query::Anomaly(AnomalyQuery {
-                threshold: get_or(v, "threshold", d.threshold as f64) as u64,
+                threshold: get_u64(v, "threshold", d.threshold)?,
                 radius: get_f64(v, "radius"),
                 target_frac: get_or(v, "frac", d.target_frac),
                 use_tree,
@@ -211,8 +240,8 @@ pub fn query_from_json(v: &Value) -> Result<Query, String> {
         "em" => {
             let d = GaussianEmQuery::default();
             Ok(Query::GaussianEm(GaussianEmQuery {
-                k: get_or(v, "k", d.k as f64) as usize,
-                steps: get_or(v, "steps", d.steps as f64) as usize,
+                k: get_usize(v, "k", d.k)?,
+                steps: get_usize(v, "steps", d.steps)?,
                 tau: get_or(v, "tau", d.tau),
                 init: init_kind(v)?,
                 use_tree,
@@ -220,9 +249,10 @@ pub fn query_from_json(v: &Value) -> Result<Query, String> {
         }
         "knn" => {
             let target = match (v.get("point"), v.get("vector")) {
-                (Some(p), None) => KnnTarget::Point(
-                    p.as_f64().ok_or("bad \"point\"")? as u32,
-                ),
+                (Some(p), None) => {
+                    let raw = p.as_f64().ok_or("bad \"point\"")?;
+                    KnnTarget::Point(ids::wire_u32(raw, "point")?)
+                }
                 (None, Some(vec)) => KnnTarget::Vector(parse_f32_row(vec, "vector")?),
                 (None, None) => return Err("knn needs \"point\" or \"vector\"".into()),
                 (Some(_), Some(_)) => {
@@ -230,7 +260,7 @@ pub fn query_from_json(v: &Value) -> Result<Query, String> {
                 }
             };
             let d = KnnQuery::default();
-            Ok(Query::Knn(KnnQuery { target, k: get_or(v, "k", d.k as f64) as usize, use_tree }))
+            Ok(Query::Knn(KnnQuery { target, k: get_usize(v, "k", d.k)?, use_tree }))
         }
         "mst" => Ok(Query::Mst(MstQuery { use_tree })),
         other => Err(format!("unknown op {other:?}")),
@@ -247,43 +277,48 @@ pub fn result_to_json(r: &QueryResult) -> Value {
     match r {
         QueryResult::Kmeans { centroids, distortion, iterations } => {
             fields.push(("distortion", num(*distortion)));
-            fields.push(("iterations", num(*iterations as f64)));
+            fields.push(("iterations", num(ids::wire_from_usize(*iterations))));
             fields.push(("centroids", f32_rows(centroids)));
         }
         QueryResult::Xmeans { centroids, k, distortion, bic } => {
-            fields.push(("k", num(*k as f64)));
+            fields.push(("k", num(ids::wire_from_usize(*k))));
             fields.push(("distortion", num(*distortion)));
             fields.push(("bic", num(*bic)));
             fields.push(("centroids", f32_rows(centroids)));
         }
         QueryResult::Anomaly { radius, anomalies } => {
             fields.push(("radius", num(*radius)));
-            fields.push(("n_anomalies", num(anomalies.len() as f64)));
+            fields.push(("n_anomalies", num(ids::wire_from_usize(anomalies.len()))));
             fields.push((
                 "anomalies",
-                Value::Arr(anomalies.iter().map(|&i| num(i as f64)).collect()),
+                Value::Arr(anomalies.iter().map(|&i| num(ids::wire_from_u32(i))).collect()),
             ));
         }
         QueryResult::AllPairs { pairs } => {
-            fields.push(("n_pairs", num(pairs.len() as f64)));
+            fields.push(("n_pairs", num(ids::wire_from_usize(pairs.len()))));
             fields.push((
                 "pairs",
                 Value::Arr(
                     pairs
                         .iter()
-                        .map(|&(i, j)| Value::Arr(vec![num(i as f64), num(j as f64)]))
+                        .map(|&(i, j)| {
+                            Value::Arr(vec![
+                                num(ids::wire_from_u32(i)),
+                                num(ids::wire_from_u32(j)),
+                            ])
+                        })
                         .collect(),
                 ),
             ));
         }
         QueryResult::Ball { count, mean, total_variance } => {
-            fields.push(("count", num(*count as f64)));
+            fields.push(("count", num(ids::wire_from_u64(*count))));
             fields.push(("total_variance", num(*total_variance)));
             fields.push(("mean", f32_row(mean)));
         }
         QueryResult::GaussianEm { weights, means, variances, loglik, steps } => {
             fields.push(("loglik", num(*loglik)));
-            fields.push(("steps", num(*steps as f64)));
+            fields.push(("steps", num(ids::wire_from_usize(*steps))));
             fields.push(("weights", f64_row(weights)));
             fields.push(("variances", f64_row(variances)));
             fields.push(("means", f32_rows(means)));
@@ -294,20 +329,26 @@ pub fn result_to_json(r: &QueryResult) -> Value {
                 Value::Arr(
                     neighbors
                         .iter()
-                        .map(|n| Value::Arr(vec![num(n.id as f64), num(n.dist)]))
+                        .map(|n| Value::Arr(vec![num(ids::wire_from_u32(n.id)), num(n.dist)]))
                         .collect(),
                 ),
             ));
         }
         QueryResult::Mst { edges, total_weight } => {
-            fields.push(("n_edges", num(edges.len() as f64)));
+            fields.push(("n_edges", num(ids::wire_from_usize(edges.len()))));
             fields.push(("total_weight", num(*total_weight)));
             fields.push((
                 "edges",
                 Value::Arr(
                     edges
                         .iter()
-                        .map(|e| Value::Arr(vec![num(e.a as f64), num(e.b as f64), num(e.dist)]))
+                        .map(|e| {
+                            Value::Arr(vec![
+                                num(ids::wire_from_u32(e.a)),
+                                num(ids::wire_from_u32(e.b)),
+                                num(e.dist),
+                            ])
+                        })
                         .collect(),
                 ),
             ));
@@ -326,11 +367,11 @@ pub fn result_from_json(v: &Value) -> Result<QueryResult, String> {
         "kmeans" => Ok(QueryResult::Kmeans {
             centroids: parse_f32_rows(field(v, "centroids")?, "centroids")?,
             distortion: get_f64(v, "distortion").ok_or("missing \"distortion\"")?,
-            iterations: get_f64(v, "iterations").ok_or("missing \"iterations\"")? as usize,
+            iterations: req_usize(v, "iterations")?,
         }),
         "xmeans" => Ok(QueryResult::Xmeans {
             centroids: parse_f32_rows(field(v, "centroids")?, "centroids")?,
-            k: get_f64(v, "k").ok_or("missing \"k\"")? as usize,
+            k: req_usize(v, "k")?,
             distortion: get_f64(v, "distortion").ok_or("missing \"distortion\"")?,
             bic: get_f64(v, "bic").ok_or("missing \"bic\"")?,
         }),
@@ -339,7 +380,10 @@ pub fn result_from_json(v: &Value) -> Result<QueryResult, String> {
                 .as_arr()
                 .ok_or("bad \"anomalies\"")?
                 .iter()
-                .map(|x| x.as_f64().map(|f| f as u32).ok_or("bad anomaly id"))
+                .map(|x| {
+                    let raw = x.as_f64().ok_or_else(|| "bad anomaly id".to_string())?;
+                    ids::wire_u32(raw, "anomaly id")
+                })
                 .collect::<Result<_, _>>()?;
             Ok(QueryResult::Anomaly {
                 radius: get_f64(v, "radius").ok_or("missing \"radius\"")?,
@@ -352,16 +396,19 @@ pub fn result_from_json(v: &Value) -> Result<QueryResult, String> {
                 .ok_or("bad \"pairs\"")?
                 .iter()
                 .map(|p| {
-                    let p = p.as_arr().filter(|p| p.len() == 2).ok_or("bad pair")?;
-                    let i = p[0].as_f64().ok_or("bad pair")? as u32;
-                    let j = p[1].as_f64().ok_or("bad pair")? as u32;
-                    Ok::<(u32, u32), &str>((i, j))
+                    let (i, j) = match p.as_arr() {
+                        Some([i, j]) => (i, j),
+                        _ => return Err("bad pair".to_string()),
+                    };
+                    let i = ids::wire_u32(i.as_f64().ok_or("bad pair")?, "pair id")?;
+                    let j = ids::wire_u32(j.as_f64().ok_or("bad pair")?, "pair id")?;
+                    Ok((i, j))
                 })
                 .collect::<Result<_, _>>()?;
             Ok(QueryResult::AllPairs { pairs })
         }
         "ball" => Ok(QueryResult::Ball {
-            count: get_f64(v, "count").ok_or("missing \"count\"")? as u64,
+            count: req_u64(v, "count")?,
             mean: parse_f32_row(field(v, "mean")?, "mean")?,
             total_variance: get_f64(v, "total_variance").ok_or("missing \"total_variance\"")?,
         }),
@@ -370,7 +417,7 @@ pub fn result_from_json(v: &Value) -> Result<QueryResult, String> {
             means: parse_f32_rows(field(v, "means")?, "means")?,
             variances: parse_f64_row(field(v, "variances")?, "variances")?,
             loglik: get_f64(v, "loglik").ok_or("missing \"loglik\"")?,
-            steps: get_f64(v, "steps").ok_or("missing \"steps\"")? as usize,
+            steps: req_usize(v, "steps")?,
         }),
         "knn" => {
             let neighbors = field(v, "neighbors")?
@@ -378,10 +425,13 @@ pub fn result_from_json(v: &Value) -> Result<QueryResult, String> {
                 .ok_or("bad \"neighbors\"")?
                 .iter()
                 .map(|p| {
-                    let p = p.as_arr().filter(|p| p.len() == 2).ok_or("bad neighbor")?;
-                    let id = p[0].as_f64().ok_or("bad neighbor")? as u32;
-                    let dist = p[1].as_f64().ok_or("bad neighbor")?;
-                    Ok::<Neighbor, &str>(Neighbor { id, dist })
+                    let (id, dist) = match p.as_arr() {
+                        Some([id, dist]) => (id, dist),
+                        _ => return Err("bad neighbor".to_string()),
+                    };
+                    let id = ids::wire_u32(id.as_f64().ok_or("bad neighbor")?, "neighbor id")?;
+                    let dist = dist.as_f64().ok_or("bad neighbor")?;
+                    Ok(Neighbor { id, dist })
                 })
                 .collect::<Result<_, _>>()?;
             Ok(QueryResult::Knn { neighbors })
@@ -392,11 +442,14 @@ pub fn result_from_json(v: &Value) -> Result<QueryResult, String> {
                 .ok_or("bad \"edges\"")?
                 .iter()
                 .map(|e| {
-                    let e = e.as_arr().filter(|e| e.len() == 3).ok_or("bad edge")?;
-                    let a = e[0].as_f64().ok_or("bad edge")? as u32;
-                    let b = e[1].as_f64().ok_or("bad edge")? as u32;
-                    let dist = e[2].as_f64().ok_or("bad edge")?;
-                    Ok::<Edge, &str>(Edge { a, b, dist })
+                    let (a, b, dist) = match e.as_arr() {
+                        Some([a, b, dist]) => (a, b, dist),
+                        _ => return Err("bad edge".to_string()),
+                    };
+                    let a = ids::wire_u32(a.as_f64().ok_or("bad edge")?, "edge endpoint")?;
+                    let b = ids::wire_u32(b.as_f64().ok_or("bad edge")?, "edge endpoint")?;
+                    let dist = dist.as_f64().ok_or("bad edge")?;
+                    Ok(Edge { a, b, dist })
                 })
                 .collect::<Result<_, _>>()?;
             Ok(QueryResult::Mst {

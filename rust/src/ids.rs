@@ -1,0 +1,129 @@
+//! Checked conversions for ids, counts and wire numbers.
+//!
+//! The JSON wire protocol carries every integer as an `f64`, which is
+//! exact only up to `2^53`; job ids keep an 8-bit shard tag at bit 44
+//! precisely so they stay inside that window (see
+//! [`crate::coordinator::shard`]). A raw `as` cast on an untrusted wire
+//! number is silently wrong twice over: `-1.5 as u64` saturates to `0`
+//! (aliasing a real id) and `1e300 as usize` saturates to `usize::MAX`
+//! (turning a malformed request into an allocation attempt). This module
+//! is the one sanctioned home for those conversions — everything here
+//! validates or is provably lossless, and the `lossy-cast` lint
+//! (docs/LINTS.md) denies `as` casts in the wire/serialization surfaces
+//! so call sites must come through these helpers.
+
+/// Largest integer magnitude an `f64` JSON number represents exactly.
+pub const MAX_WIRE_INT: u64 = 1 << 53;
+
+/// Parse an untrusted wire number as a `u64` id/count: finite,
+/// non-negative, integral and at most `2^53`.
+pub fn wire_u64(x: f64, what: &str) -> Result<u64, String> {
+    if x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= MAX_WIRE_INT as f64 {
+        Ok(x as u64)
+    } else {
+        Err(format!("{what}: expected a non-negative integer <= 2^53, got {x}"))
+    }
+}
+
+/// Parse an untrusted wire number as a `u32` (point/row ids).
+pub fn wire_u32(x: f64, what: &str) -> Result<u32, String> {
+    let v = wire_u64(x, what)?;
+    u32::try_from(v).map_err(|_| format!("{what}: {v} does not fit in u32"))
+}
+
+/// Parse an untrusted wire number as a `usize` count (k, rmin, iters…).
+/// Capped at `u32::MAX` so absurd requests fail loudly instead of
+/// attempting an absurd allocation.
+pub fn wire_usize(x: f64, what: &str) -> Result<usize, String> {
+    let v = wire_u64(x, what)?;
+    if v > u64::from(u32::MAX) {
+        return Err(format!("{what}: {v} is implausibly large for a count"));
+    }
+    Ok(v as usize)
+}
+
+/// Serialize a `u64` id/count onto the wire. Exact for all values this
+/// codebase produces (job ids are `< 2^52` by construction; distance
+/// counts would need years of work to pass `2^53`).
+pub fn wire_from_u64(x: u64) -> f64 {
+    debug_assert!(x <= MAX_WIRE_INT, "wire integer {x} exceeds 2^53");
+    x as f64
+}
+
+/// Serialize a `usize` count onto the wire (see [`wire_from_u64`]).
+pub fn wire_from_usize(x: usize) -> f64 {
+    wire_from_u64(x as u64)
+}
+
+/// Serialize a `u32` id onto the wire (always exact).
+pub fn wire_from_u32(x: u32) -> f64 {
+    f64::from(x)
+}
+
+/// Lossless named widening: row/node ids are `u32`, indexing wants
+/// `usize` (always at least 32 bits on supported targets).
+pub fn usize_from_u32(x: u32) -> usize {
+    x as usize
+}
+
+/// Lossless named widening for shard/job arithmetic.
+pub fn u64_from_usize(x: usize) -> u64 {
+    x as u64
+}
+
+/// Narrow a small `u64` (a decoded shard tag, a bounded length) to
+/// `usize`. Debug-asserts the bound the caller is relying on.
+pub fn usize_from_u64(x: u64) -> usize {
+    debug_assert!(x <= u64::from(u32::MAX), "value {x} too large for an index");
+    x as usize
+}
+
+/// Checked narrowing with context for error messages.
+pub fn u32_from_usize(x: usize, what: &str) -> Result<u32, String> {
+    u32::try_from(x).map_err(|_| format!("{what}: {x} does not fit in u32"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_u64_accepts_integers() {
+        assert_eq!(wire_u64(0.0, "id"), Ok(0));
+        assert_eq!(wire_u64(7.0, "id"), Ok(7));
+        assert_eq!(wire_u64(MAX_WIRE_INT as f64, "id"), Ok(MAX_WIRE_INT));
+    }
+
+    #[test]
+    fn wire_u64_rejects_garbage() {
+        assert!(wire_u64(-1.5, "id").is_err());
+        assert!(wire_u64(-1.0, "id").is_err());
+        assert!(wire_u64(0.5, "id").is_err());
+        assert!(wire_u64(1e300, "id").is_err());
+        assert!(wire_u64(f64::NAN, "id").is_err());
+        assert!(wire_u64(f64::INFINITY, "id").is_err());
+    }
+
+    #[test]
+    fn wire_u32_rejects_overflow() {
+        assert_eq!(wire_u32(4294967295.0, "row"), Ok(u32::MAX));
+        assert!(wire_u32(4294967296.0, "row").is_err());
+    }
+
+    #[test]
+    fn wire_usize_caps_counts() {
+        assert_eq!(wire_usize(10.0, "k"), Ok(10));
+        assert!(wire_usize(1e18, "k").is_err());
+    }
+
+    #[test]
+    fn roundtrips() {
+        for v in [0u64, 1, 77, (1 << 44) + 3, MAX_WIRE_INT] {
+            assert_eq!(wire_u64(wire_from_u64(v), "v"), Ok(v));
+        }
+        assert_eq!(wire_from_u32(9), 9.0);
+        assert_eq!(usize_from_u32(u32::MAX), u32::MAX as usize);
+        assert_eq!(u32_from_usize(12, "n"), Ok(12));
+        assert!(u32_from_usize(usize::MAX, "n").is_err());
+    }
+}

@@ -75,7 +75,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -121,14 +121,17 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        // The scanned bytes are all ASCII digits/signs, but fail soft
+        // anyway: this is wire-facing code.
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| format!("invalid number bytes at {start}"))?;
         s.parse::<f64>()
             .map(Value::Num)
             .map_err(|e| format!("bad number {s:?} at byte {start}: {e}"))
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -170,7 +173,8 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| "invalid utf-8 in string")?;
-                    let ch = rest.chars().next().unwrap();
+                    // `peek()` returned `Some`, so `rest` is non-empty.
+                    let ch = rest.chars().next().ok_or("unterminated string")?;
                     out.push(ch);
                     self.i += ch.len_utf8();
                 }
@@ -179,7 +183,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Value, String> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -209,7 +213,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value, String> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -220,7 +224,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let val = self.value()?;
             map.insert(key, val);
             self.skip_ws();

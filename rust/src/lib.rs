@@ -57,6 +57,13 @@
 //! fine-grained control; the [`engine`] facade is how the CLI, the batch
 //! [`coordinator`] and the TCP server construct and execute work.
 
+// `deny` rather than `forbid` for unsafe_code: the one sanctioned unsafe
+// surface is the worker pool in `parallel/` (scoped-lifetime transmute +
+// Send assertion), which opts back in with documented `#[allow]`s. A
+// `forbid` here would make those local opt-ins impossible.
+#![deny(unsafe_code)]
+#![deny(unreachable_pub)]
+
 pub mod algorithms;
 pub mod anchors;
 pub mod bench;
@@ -65,6 +72,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dataset;
 pub mod engine;
+pub mod ids;
 pub mod json;
 pub mod metrics;
 pub mod parallel;

@@ -338,6 +338,7 @@ fn run(args: &Args) -> Result<(), String> {
                 server.addr()
             );
             loop {
+                // pallas-lint: allow(threads, CLI serve loop parks the foreground thread; not a result-producing path)
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
         }

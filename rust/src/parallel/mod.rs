@@ -163,6 +163,7 @@ struct Job {
 // publication and epoch completion, a window during which the caller is
 // blocked inside `WorkerPool::run` keeping the pointee alive. The
 // pointee is `Sync`, so shared access from many threads is sound.
+#[allow(unsafe_code)] // crate-wide deny; this is a sanctioned unsafe site
 unsafe impl Send for Job {}
 
 struct PoolState {
@@ -244,6 +245,7 @@ impl WorkerPool {
     /// always re-check before parking). Panics from any participant
     /// propagate to the caller after the epoch completes (so borrowed
     /// data stays alive throughout).
+    #[allow(unsafe_code)] // crate-wide deny; lifetime-erasure site documented on `Job`
     fn run(&self, wanted: usize, on_caller: impl FnOnce(), job: &(dyn Fn() + Sync)) {
         let _serialize = self
             .broadcast_lock
@@ -299,6 +301,7 @@ impl Drop for WorkerPool {
     }
 }
 
+#[allow(unsafe_code)] // crate-wide deny; job-pointer dereference documented on `Job`
 fn worker_loop(shared: &PoolShared) {
     let mut seen = 0u64;
     loop {

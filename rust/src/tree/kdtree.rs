@@ -103,6 +103,7 @@ fn split(
         let mut lo = f32::INFINITY;
         let mut hi = f32::NEG_INFINITY;
         for &p in &points {
+            // pallas-lint: allow(uncounted-dist, coordinate access for the kd split; no distance computed)
             let v = data.row(p as usize)[dim];
             lo = lo.min(v);
             hi = hi.max(v);
@@ -125,12 +126,14 @@ fn split(
     // Median split on the widest dimension.
     let mut vals: Vec<f32> = points
         .iter()
+        // pallas-lint: allow(uncounted-dist, coordinate access for the kd split; no distance computed)
         .map(|&p| data.row(p as usize)[best_dim])
         .collect();
     vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let split_val = vals[vals.len() / 2];
     let (mut left, mut right) = (Vec::new(), Vec::new());
     for &p in &points {
+        // pallas-lint: allow(uncounted-dist, coordinate access for the kd split; no distance computed)
         if data.row(p as usize)[best_dim] < split_val {
             left.push(p);
         } else {

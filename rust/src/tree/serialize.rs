@@ -23,20 +23,27 @@
 //! permutation, not the data; leaf scans need the rows).
 
 use super::{Layout, MetricTree, Node};
+use crate::ids::{self, usize_from_u32};
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 8] = b"AHTREE02";
 
+/// Checked length → u32 for the on-disk header fields: a tree too big
+/// for the format is a loud error, never a truncated snapshot.
+fn len_u32(n: usize, what: &str) -> Result<u32> {
+    ids::u32_from_usize(n, what).map_err(|e| anyhow!(e))
+}
+
 /// Serialize into any writer.
 pub fn write_tree(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
     w.write_all(MAGIC)?;
-    w.write_all(&(tree.rmin as u32).to_le_bytes())?;
+    w.write_all(&len_u32(tree.rmin, "rmin")?.to_le_bytes())?;
     w.write_all(&tree.build_dists.to_le_bytes())?;
     w.write_all(&tree.root.to_le_bytes())?;
-    w.write_all(&(tree.nodes.len() as u32).to_le_bytes())?;
+    w.write_all(&len_u32(tree.nodes.len(), "node count")?.to_le_bytes())?;
     for node in &tree.nodes {
-        w.write_all(&(node.pivot.len() as u32).to_le_bytes())?;
+        w.write_all(&len_u32(node.pivot.len(), "pivot dim")?.to_le_bytes())?;
         for &v in &node.pivot {
             w.write_all(&v.to_le_bytes())?;
         }
@@ -57,8 +64,8 @@ pub fn write_tree(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
         }
         w.write_all(&node.row_start.to_le_bytes())?;
     }
-    w.write_all(&(tree.layout.perm.len() as u32).to_le_bytes())?;
-    w.write_all(&(tree.layout.inv.len() as u32).to_le_bytes())?;
+    w.write_all(&len_u32(tree.layout.perm.len(), "perm len")?.to_le_bytes())?;
+    w.write_all(&len_u32(tree.layout.inv.len(), "inv len")?.to_le_bytes())?;
     for &p in &tree.layout.inv {
         w.write_all(&p.to_le_bytes())?;
     }
@@ -75,16 +82,16 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
     if &magic != MAGIC {
         bail!("not an AHTREE02 file");
     }
-    let rmin = read_u32(r)? as usize;
+    let rmin = usize_from_u32(read_u32(r)?);
     let build_dists = read_u64(r)?;
     let root = read_u32(r)?;
-    let n_nodes = read_u32(r)? as usize;
+    let n_nodes = usize_from_u32(read_u32(r)?);
     if n_nodes == 0 || n_nodes > 1 << 28 {
         bail!("implausible node count {n_nodes}");
     }
     let mut nodes = Vec::with_capacity(n_nodes);
     for _ in 0..n_nodes {
-        let dim = read_u32(r)? as usize;
+        let dim = usize_from_u32(read_u32(r)?);
         if dim > 1 << 24 {
             bail!("implausible dim {dim}");
         }
@@ -120,7 +127,7 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
             row_start,
         });
     }
-    if root as usize >= nodes.len() {
+    if usize_from_u32(root) >= nodes.len() {
         bail!("root {root} out of range");
     }
     // Child ids must be in range, the root must not be anyone's child,
@@ -132,7 +139,7 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
     for node in &nodes {
         if let Some((a, b)) = node.children {
             for c in [a, b] {
-                let ci = c as usize;
+                let ci = usize_from_u32(c);
                 if ci >= nodes.len() {
                     bail!("child {c} out of range");
                 }
@@ -148,32 +155,35 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
     }
     // Layout: inv entries in range and unique (perm reconstruction
     // catches duplicates), row ranges within the arena.
-    let perm_len = read_u32(r)? as usize;
-    let n_rows = read_u32(r)? as usize;
+    let perm_len = usize_from_u32(read_u32(r)?);
+    let n_rows = usize_from_u32(read_u32(r)?);
     if perm_len > 1 << 31 || n_rows > perm_len {
         bail!("implausible layout sizes perm_len={perm_len} n_rows={n_rows}");
     }
-    if n_rows != nodes[root as usize].count as usize {
+    if n_rows != usize_from_u32(nodes[usize_from_u32(root)].count) {
         bail!(
             "layout holds {n_rows} rows but the root owns {}",
-            nodes[root as usize].count
+            nodes[usize_from_u32(root)].count
         );
     }
     let mut inv = vec![0u32; n_rows];
     let mut perm = vec![u32::MAX; perm_len];
     for (row, p) in inv.iter_mut().enumerate() {
         let orig = read_u32(r)?;
-        if orig as usize >= perm_len {
+        let oi = usize_from_u32(orig);
+        if oi >= perm_len {
             bail!("inv[{row}] = {orig} out of range (perm_len {perm_len})");
         }
-        if perm[orig as usize] != u32::MAX {
+        if perm[oi] != u32::MAX {
             bail!("dataset row {orig} appears twice in the layout");
         }
-        perm[orig as usize] = row as u32;
+        // `row < n_rows ≤ perm_len ≤ 2^31` (checked above), so this
+        // never saturates.
+        perm[oi] = len_u32(row, "arena row")?;
         *p = orig;
     }
     for (id, node) in nodes.iter().enumerate() {
-        if node.row_start as usize + node.count as usize > n_rows {
+        if usize_from_u32(node.row_start) + usize_from_u32(node.count) > n_rows {
             bail!(
                 "node {id}: rows {}..{} run past the {n_rows}-row arena",
                 node.row_start,
@@ -190,19 +200,19 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
     let mut next = 0usize;
     let mut stack = vec![root];
     while let Some(id) = stack.pop() {
-        let node = &nodes[id as usize];
+        let node = &nodes[usize_from_u32(id)];
         match node.children {
             None => {
-                if node.row_start as usize != next {
+                if usize_from_u32(node.row_start) != next {
                     bail!(
                         "leaf {id}: rows start at {} but the previous leaf ended at {next}",
                         node.row_start
                     );
                 }
-                next += node.count as usize;
+                next += usize_from_u32(node.count);
             }
             Some((a, b)) => {
-                let (ca, cb) = (&nodes[a as usize], &nodes[b as usize]);
+                let (ca, cb) = (&nodes[usize_from_u32(a)], &nodes[usize_from_u32(b)]);
                 if ca.row_start != node.row_start
                     || u64::from(cb.row_start) != u64::from(ca.row_start) + u64::from(ca.count)
                     || u64::from(ca.count) + u64::from(cb.count) != u64::from(node.count)

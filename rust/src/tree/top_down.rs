@@ -110,7 +110,9 @@ fn split(
     let f1 = *points
         .iter()
         .max_by(|&&a, &&b| {
+            // pallas-lint: allow(uncounted-dist, distances already counted in make_leaf; recomputing would double-count)
             let da = space.dist_to_vec_uncounted(a as usize, &node.pivot, node.pivot_sq);
+            // pallas-lint: allow(uncounted-dist, distances already counted in make_leaf; recomputing would double-count)
             let db = space.dist_to_vec_uncounted(b as usize, &node.pivot, node.pivot_sq);
             da.partial_cmp(&db).unwrap()
         })

@@ -1,0 +1,7 @@
+//! Repo tooling for the anchors-hierarchy workspace.
+//!
+//! The only subcommand today is `lint` — a std-only static-analysis pass
+//! (`pallas-lint`) that enforces the determinism & accounting contract at
+//! the source level. See [`lint`] and `docs/LINTS.md`.
+
+pub mod lint;

@@ -1,0 +1,863 @@
+//! `pallas-lint`: source-level enforcement of the determinism & accounting
+//! contract (see `docs/LINTS.md`).
+//!
+//! The whole reproduction rests on two invariants the type system cannot
+//! see: results must be a pure function of the inputs (bit-identical at
+//! every thread/shard count), and every point-to-point distance must be
+//! counted exactly once (the paper's eq.-6 accounting). This pass
+//! tokenizes every `.rs` file — comments and string/char literals
+//! stripped, `#[cfg(test)]` modules skipped — and denies the source
+//! patterns that historically break those invariants:
+//!
+//! | rule            | denies                                              |
+//! |-----------------|-----------------------------------------------------|
+//! | `hash-order`    | hash-ordered containers in result-producing paths   |
+//! | `wall-clock`    | time/env reads inside algorithm, tree, metrics code |
+//! | `uncounted-dist`| raw coordinate math outside the counted kernels     |
+//! | `threads`       | thread primitives outside `parallel/`/`coordinator/`|
+//! | `panic-wire`    | unwrap/expect/panic/index panics in wire handling   |
+//! | `lossy-cast`    | lossy `as` casts on id/count/wire values            |
+//!
+//! Suppression is scoped and audited: `// pallas-lint: allow(rule, reason)`
+//! on the offending line (trailing) or on comment lines directly above it.
+//! The reason is mandatory — an allow without one is itself an error
+//! (rule `bad-allow`).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One rule violation (or malformed directive) at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the repo root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule name (one of [`RULE_NAMES`], or `bad-allow`).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Result of linting one file.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Violations that were **not** suppressed, in line order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Violations suppressed by a `pallas-lint: allow(rule, reason)`.
+    pub suppressed: usize,
+}
+
+/// Names of the deny-by-default rules, in D1–D6 order.
+pub const RULE_NAMES: [&str; 6] = [
+    "hash-order",
+    "wall-clock",
+    "uncounted-dist",
+    "threads",
+    "panic-wire",
+    "lossy-cast",
+];
+
+// ---------------------------------------------------------------------------
+// Rule scopes (path prefixes / exact files, relative to the repo root).
+// ---------------------------------------------------------------------------
+
+/// D1: result-producing paths where iteration order reaches outputs.
+const HASH_FREE_DIRS: [&str; 5] = [
+    "rust/src/algorithms/",
+    "rust/src/tree/",
+    "rust/src/engine/",
+    "rust/src/metrics/",
+    "rust/src/anchors/",
+];
+
+/// D2: pure-algorithm code — no clocks, no environment.
+const CLOCK_FREE_DIRS: [&str; 4] = [
+    "rust/src/algorithms/",
+    "rust/src/tree/",
+    "rust/src/metrics/",
+    "rust/src/anchors/",
+];
+
+/// D3: code that must route distance math through the counted kernels.
+/// `metrics/` and `data.rs` are exempt: they *implement* those kernels.
+const COUNTED_DIRS: [&str; 4] = [
+    "rust/src/algorithms/",
+    "rust/src/tree/",
+    "rust/src/engine/",
+    "rust/src/anchors/",
+];
+
+/// D4: the only homes for thread primitives.
+const THREAD_EXEMPT_DIRS: [&str; 2] = ["rust/src/parallel/", "rust/src/coordinator/"];
+
+/// D5: wire-facing code where a panic kills a client connection.
+const WIRE_FILES: [&str; 3] = [
+    "rust/src/coordinator/server.rs",
+    "rust/src/engine/wire.rs",
+    "rust/src/json.rs",
+];
+
+/// D6: id/count/wire conversion surfaces (checked helpers live in
+/// `crate::ids`, which is the one sanctioned home for the raw casts).
+const CAST_FILES: [&str; 4] = [
+    "rust/src/engine/wire.rs",
+    "rust/src/coordinator/server.rs",
+    "rust/src/coordinator/shard.rs",
+    "rust/src/tree/serialize.rs",
+];
+
+// ---------------------------------------------------------------------------
+// Rule token tables.
+// ---------------------------------------------------------------------------
+
+const HASH_TOKENS: [&str; 6] = [
+    "HashMap",
+    "HashSet",
+    "RandomState",
+    "DefaultHasher",
+    "hash_map",
+    "hash_set",
+];
+
+const CLOCK_TOKENS: [&str; 6] = [
+    "std::time",
+    "Instant",
+    "SystemTime",
+    "std::env",
+    "env::var",
+    "elapsed",
+];
+
+const UNCOUNTED_TOKENS: [&str; 10] = [
+    "dist_uncounted",
+    "dist_to_vec_uncounted",
+    "dense_dot",
+    "dense_sqdist",
+    "dense_euclidean",
+    "dense_l1",
+    "dot_rows",
+    "dot_vec",
+    "rows_slab",
+    ".row(",
+];
+
+const THREAD_TOKENS: [&str; 5] = [
+    "std::thread",
+    "thread::spawn",
+    "thread::scope",
+    "thread::Builder",
+    "JoinHandle",
+];
+
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+const CAST_TOKENS: [&str; 10] = [
+    " as usize",
+    " as u64",
+    " as u32",
+    " as u16",
+    " as u8",
+    " as i64",
+    " as i32",
+    " as i16",
+    " as i8",
+    " as f64",
+];
+
+fn rule_hint(rule: &str) -> &'static str {
+    match rule {
+        "hash-order" => {
+            "hash-ordered container in a result-producing path; per-instance \
+             RandomState makes iteration order nondeterministic — use \
+             BTreeMap/BTreeSet or sort before iterating"
+        }
+        "wall-clock" => {
+            "wall-clock or environment read inside algorithm code; results \
+             must be a pure function of the inputs — timing and config \
+             belong in bench/, coordinator/ or main.rs"
+        }
+        "uncounted-dist" => {
+            "raw coordinate math outside the counted kernels; route through \
+             Space::dist/dist2/dist_to_vec or metrics::block, or pair the \
+             call with Space::count_bulk so eq.-6 accounting stays exact"
+        }
+        "threads" => {
+            "thread primitive outside parallel/ and coordinator/; all \
+             fan-out goes through parallel::Executor's fixed decomposition"
+        }
+        "panic-wire" => {
+            "potential panic in wire/server code; malformed client input \
+             must produce an ok:false error response, never kill the \
+             connection thread"
+        }
+        "lossy-cast" => {
+            "lossy `as` cast on an id/count/wire value; use the checked \
+             helpers in crate::ids (or From/try_from for infallible widths)"
+        }
+        _ => "",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sanitizer: split source into lines of (code, comment) with string and
+// char literal contents removed, so token matching never fires inside
+// literals and directives can be read from comment text.
+// ---------------------------------------------------------------------------
+
+/// One source line: `code` with literals blanked, `comment` text joined.
+#[derive(Debug, Default, Clone)]
+struct SrcLine {
+    code: String,
+    comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(chars[i - 1])
+}
+
+/// `r"`, `r#"`, `br"` … starting at `i`: returns (hash count, index past
+/// the opening quote).
+fn raw_string_open(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+fn sanitize(src: &str) -> Vec<SrcLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = SrcLine::default();
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    if let Some((hashes, after)) = raw_string_open(&chars, i) {
+                        cur.code.push('"');
+                        mode = Mode::RawStr(hashes);
+                        i = after;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs. lifetime: a literal is 'x' or an
+                    // escape; anything else ('a in generics, 'static) is a
+                    // lifetime and stays in the code text.
+                    let is_char_lit = match chars.get(i + 1) {
+                        Some('\\') => true,
+                        Some(&n) if n != '\'' => chars.get(i + 2) == Some(&'\''),
+                        _ => false,
+                    };
+                    if is_char_lit {
+                        mode = Mode::CharLit;
+                    } else {
+                        cur.code.push('\'');
+                    }
+                    i += 1;
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    mode = if depth <= 1 {
+                        Mode::Code
+                    } else {
+                        Mode::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' && chars.get(i + 1) == Some(&'\n') {
+                    i += 1; // let the newline be processed normally
+                } else if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut k = i + 1;
+                    let mut seen = 0u32;
+                    while seen < hashes && chars.get(k) == Some(&'#') {
+                        seen += 1;
+                        k += 1;
+                    }
+                    if seen == hashes {
+                        cur.code.push('"');
+                        mode = Mode::Code;
+                        i = k;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '\'' {
+                        mode = Mode::Code;
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+// ---------------------------------------------------------------------------
+// `#[cfg(test)] mod … { }` skipping: test code may time, spawn and unwrap.
+// ---------------------------------------------------------------------------
+
+fn brace_delta(code: &str) -> i32 {
+    let mut d = 0;
+    for c in code.chars() {
+        if c == '{' {
+            d += 1;
+        } else if c == '}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+/// Per-line flag: true when the line belongs to a `#[cfg(test)]` item.
+fn test_mod_lines(lines: &[SrcLine]) -> Vec<bool> {
+    let mut flags = vec![false; lines.len()];
+    let mut pending_attr = false;
+    let mut inside = false;
+    let mut depth: i32 = 0;
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.trim();
+        if inside {
+            flags[idx] = true;
+            depth += brace_delta(code);
+            if depth <= 0 {
+                inside = false;
+            }
+            continue;
+        }
+        if code.contains("#[cfg(test)]") {
+            pending_attr = true;
+            flags[idx] = true;
+            continue;
+        }
+        if pending_attr {
+            flags[idx] = true;
+            if code.is_empty() || code.starts_with("#[") {
+                continue; // further attributes between cfg(test) and item
+            }
+            pending_attr = false;
+            if code.starts_with("mod ") || code.starts_with("pub mod ") {
+                depth = brace_delta(code);
+                if depth > 0 {
+                    inside = true;
+                }
+            }
+            // cfg(test) on a single-line non-mod item: that line is already
+            // flagged; multi-line test items outside a test mod are not a
+            // pattern this repo uses.
+        }
+    }
+    flags
+}
+
+// ---------------------------------------------------------------------------
+// Suppression directives.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Directive {
+    None,
+    Allow(&'static str),
+    Malformed(String),
+}
+
+fn parse_directive(comment: &str) -> Directive {
+    let Some(pos) = comment.find("pallas-lint:") else {
+        return Directive::None;
+    };
+    let rest = comment[pos + "pallas-lint:".len()..].trim_start();
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Directive::Malformed(
+            "expected `pallas-lint: allow(<rule>, <reason>)`".to_string(),
+        );
+    };
+    let Some(close) = body.rfind(')') else {
+        return Directive::Malformed("unclosed `pallas-lint: allow(` directive".to_string());
+    };
+    let Some((rule, reason)) = body[..close].split_once(',') else {
+        return Directive::Malformed(
+            "allow directive needs a non-empty reason: allow(<rule>, <reason>)".to_string(),
+        );
+    };
+    let rule = rule.trim();
+    let Some(rule) = RULE_NAMES.iter().copied().find(|r| *r == rule) else {
+        return Directive::Malformed(format!("unknown rule `{rule}` in allow directive"));
+    };
+    if reason.trim().is_empty() {
+        return Directive::Malformed(
+            "allow directive needs a non-empty reason: allow(<rule>, <reason>)".to_string(),
+        );
+    }
+    Directive::Allow(rule)
+}
+
+// ---------------------------------------------------------------------------
+// Token matching.
+// ---------------------------------------------------------------------------
+
+/// Substring search honoring identifier boundaries on whichever ends of
+/// the token are identifier characters ("Instant" does not match
+/// "InstantLike"; ".row(" matches only an actual method call).
+fn has_token(code: &str, tok: &str) -> bool {
+    let first_ident = tok.chars().next().is_some_and(is_ident_char);
+    let last_ident = tok.chars().last().is_some_and(is_ident_char);
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let at = start + pos;
+        let before_ok =
+            !first_ident || !code[..at].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !last_ident
+            || !code[at + tok.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + tok.len();
+    }
+    false
+}
+
+/// `expr[0]`-style indexing with a bare integer literal (an out-of-range
+/// panic waiting on malformed input). Array literals (`[0u8; 4]`, `&[0]`)
+/// and ranges (`[lo..hi]`) do not match: the bracket must directly follow
+/// an expression and enclose only digits.
+fn has_literal_index(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    for i in 1..bytes.len() {
+        if bytes[i] == b'['
+            && (bytes[i - 1].is_ascii_alphanumeric() || matches!(bytes[i - 1], b'_' | b')' | b']'))
+        {
+            let mut j = i + 1;
+            while j < bytes.len() && bytes[j].is_ascii_digit() {
+                j += 1;
+            }
+            if j > i + 1 && j < bytes.len() && bytes[j] == b']' {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn in_dirs(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| path.starts_with(d))
+}
+
+fn is_use_line(code: &str) -> bool {
+    // Imports are not uses of the behavior; the call sites are flagged.
+    code.starts_with("use ")
+        || code.starts_with("pub use ")
+        || code.starts_with("pub(crate) use ")
+}
+
+/// All rule violations on one sanitized, non-test, non-import code line.
+fn check_rules(path: &str, code: &str, found: &mut Vec<(&'static str, String)>) {
+    let mut push = |rule: &'static str, what: &str| {
+        found.push((rule, format!("`{what}` — {}", rule_hint(rule))));
+    };
+    if in_dirs(path, &HASH_FREE_DIRS) {
+        for tok in HASH_TOKENS {
+            if has_token(code, tok) {
+                push("hash-order", tok);
+            }
+        }
+    }
+    if in_dirs(path, &CLOCK_FREE_DIRS) {
+        for tok in CLOCK_TOKENS {
+            if has_token(code, tok) {
+                push("wall-clock", tok);
+            }
+        }
+    }
+    if in_dirs(path, &COUNTED_DIRS) {
+        for tok in UNCOUNTED_TOKENS {
+            if has_token(code, tok) {
+                push("uncounted-dist", tok);
+            }
+        }
+    }
+    if path.starts_with("rust/src/") && !in_dirs(path, &THREAD_EXEMPT_DIRS) {
+        for tok in THREAD_TOKENS {
+            if has_token(code, tok) {
+                push("threads", tok);
+            }
+        }
+    }
+    if WIRE_FILES.contains(&path) {
+        for tok in PANIC_TOKENS {
+            if has_token(code, tok) {
+                push("panic-wire", tok);
+            }
+        }
+        if has_literal_index(code) {
+            push("panic-wire", "[<int>] indexing");
+        }
+    }
+    if CAST_FILES.contains(&path) {
+        for tok in CAST_TOKENS {
+            if has_token(code, tok) {
+                push("lossy-cast", tok.trim_start());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-file driver.
+// ---------------------------------------------------------------------------
+
+/// Lint one file's source. `path` must be repo-root-relative with `/`
+/// separators — rule scopes are path-based.
+pub fn lint_source(path: &str, src: &str) -> Report {
+    let path = path.replace('\\', "/");
+    let lines = sanitize(src);
+    let in_test = test_mod_lines(&lines);
+    let mut diagnostics = Vec::new();
+    let mut suppressed = 0usize;
+    // Allow directives on a run of comment-only lines directly above the
+    // line they suppress.
+    let mut pending_allows: Vec<&'static str> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let directive = parse_directive(&line.comment);
+        if let Directive::Malformed(why) = &directive {
+            diagnostics.push(Diagnostic {
+                file: path.clone(),
+                line: lineno,
+                rule: "bad-allow",
+                msg: why.clone(),
+            });
+        }
+        let code = line.code.trim();
+        let mut found = Vec::new();
+        if !in_test[idx] && !code.is_empty() && !is_use_line(code) {
+            check_rules(&path, code, &mut found);
+        }
+        let mut active = pending_allows.clone();
+        if let Directive::Allow(rule) = &directive {
+            active.push(rule);
+        }
+        for (rule, msg) in found {
+            if active.contains(&rule) {
+                suppressed += 1;
+            } else {
+                diagnostics.push(Diagnostic {
+                    file: path.clone(),
+                    line: lineno,
+                    rule,
+                    msg,
+                });
+            }
+        }
+        let comment_only = code.is_empty() && !line.comment.trim().is_empty();
+        if comment_only {
+            if let Directive::Allow(rule) = &directive {
+                pending_allows.push(rule);
+            }
+        } else {
+            pending_allows.clear();
+        }
+    }
+    Report {
+        diagnostics,
+        suppressed,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Repo driver.
+// ---------------------------------------------------------------------------
+
+/// Directories scanned, relative to the repo root (missing ones skipped).
+const SCAN_DIRS: [&str; 5] = [
+    "rust/src",
+    "rust/tests",
+    "rust/benches",
+    "rust/examples",
+    "examples",
+];
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Run the linter over the repo rooted at `root`, printing `file:line`
+/// diagnostics and a summary. Returns the number of violations.
+pub fn run(root: &Path) -> usize {
+    let mut files = Vec::new();
+    for dir in SCAN_DIRS {
+        collect_rs(&root.join(dir), &mut files);
+    }
+    files.sort();
+    let mut all = Vec::new();
+    let mut suppressed = 0usize;
+    let mut scanned = 0usize;
+    for file in &files {
+        let Ok(src) = std::fs::read_to_string(file) else {
+            eprintln!("pallas-lint: cannot read {}", file.display());
+            continue;
+        };
+        scanned += 1;
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        let report = lint_source(&rel, &src);
+        suppressed += report.suppressed;
+        all.extend(report.diagnostics);
+    }
+    for d in &all {
+        println!("{d}");
+    }
+    println!(
+        "pallas-lint: {scanned} file(s) scanned, {} violation(s), {suppressed} suppressed by allow",
+        all.len()
+    );
+    all.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_strips_comments_and_strings() {
+        let src = "let x = \"HashMap\"; // HashMap here\nlet y = 1;\n";
+        let lines = sanitize(src);
+        assert_eq!(lines.len(), 2);
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[0].comment.contains("HashMap"));
+        assert_eq!(lines[1].code.trim(), "let y = 1;");
+    }
+
+    #[test]
+    fn sanitize_handles_raw_strings_and_chars() {
+        let src = "let s = r#\"dense_dot ) \"#;\nlet c = '\\'';\nlet lt: &'static str = e;\n";
+        let lines = sanitize(src);
+        assert!(!lines[0].code.contains("dense_dot"));
+        assert!(lines[1].code.contains("let c ="));
+        assert!(lines[2].code.contains("'static"));
+    }
+
+    #[test]
+    fn sanitize_handles_block_comments() {
+        let src = "let a = 1; /* dense_dot\nstill comment */ let b = 2;\n";
+        let lines = sanitize(src);
+        assert!(!lines[0].code.contains("dense_dot"));
+        assert!(lines[1].code.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("let m: HashMap<u32, u32> = x;", "HashMap"));
+        assert!(!has_token("let m = MyHashMapLike::new();", "HashMap"));
+        assert!(has_token("let d = dense_dot(a, b);", "dense_dot"));
+        assert!(has_token("let r = m.row(3);", ".row("));
+        assert!(!has_token("space.fill_row(3, buf);", ".row("));
+        assert!(!has_token("x.borrow()", ".row("));
+        assert!(has_token("let k = v as usize;", " as usize"));
+        assert!(!has_token("let k = v as usize_wrapper;", " as usize"));
+    }
+
+    #[test]
+    fn literal_index_detection() {
+        assert!(has_literal_index("let a = p[0];"));
+        assert!(has_literal_index("q[17].clone()"));
+        assert!(!has_literal_index("let a = &[0u8];"));
+        assert!(!has_literal_index("let a = [0];"));
+        assert!(!has_literal_index("let a = p[i];"));
+        assert!(!has_literal_index("let a = p[0..2];"));
+    }
+
+    #[test]
+    fn directive_parsing() {
+        assert_eq!(parse_directive("no directive here"), Directive::None);
+        assert_eq!(
+            parse_directive(" pallas-lint: allow(hash-order, keys sorted first)"),
+            Directive::Allow("hash-order")
+        );
+        assert!(matches!(
+            parse_directive(" pallas-lint: allow(hash-order)"),
+            Directive::Malformed(_)
+        ));
+        assert!(matches!(
+            parse_directive(" pallas-lint: allow(hash-order, )"),
+            Directive::Malformed(_)
+        ));
+        assert!(matches!(
+            parse_directive(" pallas-lint: allow(no-such-rule, reason)"),
+            Directive::Malformed(_)
+        ));
+        assert!(matches!(
+            parse_directive(" pallas-lint: deny(hash-order)"),
+            Directive::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_skipped() {
+        let src = "fn a() {}\n\n#[cfg(test)]\nmod tests {\n    use std::time::Instant;\n    \
+                   fn t() { let _ = Instant::now(); }\n}\n";
+        let report = lint_source("rust/src/algorithms/x.rs", src);
+        assert!(report.diagnostics.is_empty(), "{:?}", report.diagnostics);
+    }
+
+    #[test]
+    fn allow_suppresses_same_line_and_above() {
+        let src = "// pallas-lint: allow(uncounted-dist, counted via count_bulk below)\n\
+                   let d = dense_dot(a, b);\n\
+                   let e = dense_dot(a, b); // pallas-lint: allow(uncounted-dist, staging)\n";
+        let report = lint_source("rust/src/algorithms/x.rs", src);
+        assert!(report.diagnostics.is_empty(), "{:?}", report.diagnostics);
+        assert_eq!(report.suppressed, 2);
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_code_lines() {
+        let src = "// pallas-lint: allow(uncounted-dist, first line only)\n\
+                   let d = dense_dot(a, b);\n\
+                   let e = dense_dot(a, b);\n";
+        let report = lint_source("rust/src/algorithms/x.rs", src);
+        assert_eq!(report.diagnostics.len(), 1);
+        assert_eq!(report.diagnostics[0].line, 3);
+    }
+
+    #[test]
+    fn use_lines_are_not_flagged() {
+        let src = "use crate::metrics::{dense_dot, Space};\n";
+        let report = lint_source("rust/src/algorithms/x.rs", src);
+        assert!(report.diagnostics.is_empty(), "{:?}", report.diagnostics);
+    }
+
+    #[test]
+    fn scopes_gate_rules() {
+        // dense_dot inside metrics/ (kernel home) is fine…
+        let src = "let d = dense_dot(a, b);\n";
+        assert!(lint_source("rust/src/metrics/block.rs", src)
+            .diagnostics
+            .is_empty());
+        // …but not in algorithms/.
+        assert_eq!(
+            lint_source("rust/src/algorithms/x.rs", src).diagnostics.len(),
+            1
+        );
+        // Threads are fine in parallel/, not in algorithms/.
+        let spawn = "let h = std::thread::spawn(f);\n";
+        assert!(lint_source("rust/src/parallel/pool.rs", spawn)
+            .diagnostics
+            .is_empty());
+        let flagged = lint_source("rust/src/algorithms/x.rs", spawn);
+        assert!(!flagged.diagnostics.is_empty());
+        assert!(flagged.diagnostics.iter().all(|d| d.rule == "threads"));
+    }
+}

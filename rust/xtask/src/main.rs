@@ -1,0 +1,50 @@
+//! `cargo run -p xtask -- lint [--root <repo-root>]`
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = match root_arg(&args) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("xtask: {e}");
+                    return ExitCode::from(2);
+                }
+            };
+            if xtask::lint::run(&root) == 0 {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [--root <repo-root>]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// `--root DIR` if given, else the first ancestor of the current directory
+/// containing `rust/src`.
+fn root_arg(args: &[String]) -> Result<PathBuf, String> {
+    if let Some(pos) = args.iter().position(|a| a == "--root") {
+        let dir = args
+            .get(pos + 1)
+            .ok_or_else(|| "--root needs a directory argument".to_string())?;
+        return Ok(PathBuf::from(dir));
+    }
+    let mut dir = std::env::current_dir().map_err(|e| e.to_string())?;
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            return Err("no repo root found (no `rust/src` in any ancestor)".to_string());
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: an allow directive without a reason is itself an error.
+
+pub fn sim(a: &[f32], b: &[f32]) -> f64 {
+    // pallas-lint: allow(uncounted-dist)
+    dense_dot(a, b)
+}

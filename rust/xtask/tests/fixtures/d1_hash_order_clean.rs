@@ -1,0 +1,10 @@
+//! D1 fixture (clean): BTreeMap iterates in key order on every run.
+use std::collections::BTreeMap;
+
+pub fn merge(xs: &[(u32, f64)]) -> Vec<(u32, f64)> {
+    let mut m = BTreeMap::new();
+    for &(k, v) in xs {
+        m.insert(k, v);
+    }
+    m.into_iter().collect()
+}

@@ -1,0 +1,10 @@
+//! D1 fixture: HashMap iteration in a result-producing path.
+use std::collections::HashMap;
+
+pub fn merge(xs: &[(u32, f64)]) -> Vec<(u32, f64)> {
+    let mut m = HashMap::new();
+    for &(k, v) in xs {
+        m.insert(k, v);
+    }
+    m.into_iter().collect()
+}

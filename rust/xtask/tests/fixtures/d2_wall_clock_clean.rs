@@ -1,0 +1,9 @@
+//! D2 fixture (clean): progress measured by work counters, not clocks.
+
+pub fn counted_work(budget: u64) -> u64 {
+    let mut done = 0u64;
+    while done < budget {
+        done += 1;
+    }
+    done
+}

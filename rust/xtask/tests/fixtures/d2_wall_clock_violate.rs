@@ -1,0 +1,10 @@
+//! D2 fixture: wall-clock reads in algorithm code.
+use std::time::Instant;
+
+pub fn timed_work() -> f64 {
+    let start = Instant::now();
+    expensive();
+    start.elapsed().as_secs_f64()
+}
+
+fn expensive() {}

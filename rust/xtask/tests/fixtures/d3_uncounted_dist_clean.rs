@@ -1,0 +1,9 @@
+//! D3 fixture (clean): the same primitive, explicitly counted and
+//! suppressed with a reasoned allow.
+use crate::metrics::{dense_dot, Space};
+
+pub fn sim(space: &Space, a: &[f32], b: &[f32]) -> f64 {
+    space.count_bulk(1);
+    // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
+    dense_dot(a, b)
+}

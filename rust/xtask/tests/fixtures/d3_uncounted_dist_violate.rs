@@ -1,0 +1,6 @@
+//! D3 fixture: raw distance math outside the counted kernels.
+use crate::metrics::dense_dot;
+
+pub fn sim(a: &[f32], b: &[f32]) -> f64 {
+    dense_dot(a, b)
+}

@@ -1,0 +1,8 @@
+//! D4 fixture (clean): parallelism goes through the shared executor.
+use crate::parallel::Executor;
+
+pub fn fan_out(exec: &Executor, jobs: usize) -> Vec<u64> {
+    exec.map_chunks(jobs, 1, |range| range.map(|j| j as u64).collect())
+        .flatten()
+        .collect()
+}

@@ -1,0 +1,7 @@
+//! D4 fixture: ad-hoc thread spawn outside parallel/ and coordinator/.
+
+pub fn fan_out(jobs: usize) {
+    for _ in 0..jobs {
+        std::thread::spawn(|| {});
+    }
+}

@@ -1,0 +1,8 @@
+//! D5 fixture (clean): slice patterns and errors instead of panics.
+
+pub fn first_field(p: &[Value]) -> Result<f64, String> {
+    match p {
+        [head, ..] => head.as_f64().ok_or_else(|| "not a number".to_string()),
+        [] => Err("empty".to_string()),
+    }
+}

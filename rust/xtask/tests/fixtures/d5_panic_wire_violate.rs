@@ -1,0 +1,6 @@
+//! D5 fixture: panics reachable from the wire path.
+
+pub fn first_field(p: &[Value]) -> f64 {
+    let head = p[0].as_f64();
+    head.unwrap()
+}

@@ -1,0 +1,5 @@
+//! D6 fixture (clean): checked conversion through the ids helpers.
+
+pub fn decode_id(raw: f64) -> Result<u64, String> {
+    crate::ids::wire_u64(raw, "id")
+}

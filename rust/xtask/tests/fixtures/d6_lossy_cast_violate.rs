@@ -1,0 +1,5 @@
+//! D6 fixture: a raw `as` cast saturates garbage ids silently.
+
+pub fn decode_id(raw: f64) -> u64 {
+    raw as u64
+}

@@ -1,0 +1,156 @@
+//! Fixture-driven self-tests for pallas-lint: one violating and one
+//! clean fixture per rule D1–D6, exact `(line, rule)` diagnostics, the
+//! allow-without-reason error, and the "final tree is clean" gate.
+//!
+//! Fixtures live in `tests/fixtures/` and are linted under a *virtual*
+//! path chosen to land in the right rule scope (rule scopes are
+//! path-based), so they never trip the real repo scan.
+
+use std::path::Path;
+use xtask::lint::{lint_source, Report};
+
+/// Virtual path inside the D1–D4 scopes (algorithms/).
+const ALGO: &str = "rust/src/algorithms/fixture.rs";
+/// Virtual path inside the D5/D6 scopes (wire files).
+const WIRE: &str = "rust/src/engine/wire.rs";
+
+fn lint_fixture(name: &str, virtual_path: &str) -> Report {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    lint_source(virtual_path, &src)
+}
+
+/// Assert the exact `(line, rule)` multiset of a report, in order, and
+/// that each message names the offending token.
+fn assert_diags(report: &Report, expected: &[(usize, &str, &str)]) {
+    let got: Vec<(usize, &str)> = report
+        .diagnostics
+        .iter()
+        .map(|d| (d.line, d.rule))
+        .collect();
+    let want: Vec<(usize, &str)> = expected.iter().map(|&(l, r, _)| (l, r)).collect();
+    assert_eq!(got, want, "diagnostics: {:#?}", report.diagnostics);
+    for (d, &(_, _, token)) in report.diagnostics.iter().zip(expected) {
+        assert!(
+            d.msg.contains(token),
+            "message {:?} does not name the token {token:?}",
+            d.msg
+        );
+    }
+}
+
+#[test]
+fn d1_hash_order() {
+    let v = lint_fixture("d1_hash_order_violate.rs", ALGO);
+    assert_diags(&v, &[(5, "hash-order", "HashMap")]);
+    let c = lint_fixture("d1_hash_order_clean.rs", ALGO);
+    assert_diags(&c, &[]);
+}
+
+#[test]
+fn d2_wall_clock() {
+    let v = lint_fixture("d2_wall_clock_violate.rs", ALGO);
+    assert_diags(
+        &v,
+        &[(5, "wall-clock", "Instant"), (7, "wall-clock", "elapsed")],
+    );
+    let c = lint_fixture("d2_wall_clock_clean.rs", ALGO);
+    assert_diags(&c, &[]);
+}
+
+#[test]
+fn d3_uncounted_dist() {
+    let v = lint_fixture("d3_uncounted_dist_violate.rs", ALGO);
+    assert_diags(&v, &[(5, "uncounted-dist", "dense_dot")]);
+    // The clean fixture makes the same call but counts it and carries a
+    // reasoned allow: zero diagnostics, exactly one suppression.
+    let c = lint_fixture("d3_uncounted_dist_clean.rs", ALGO);
+    assert_diags(&c, &[]);
+    assert_eq!(c.suppressed, 1);
+}
+
+#[test]
+fn d4_threads() {
+    let v = lint_fixture("d4_threads_violate.rs", ALGO);
+    // `std::thread::spawn` trips both thread tokens on the same line.
+    assert_diags(
+        &v,
+        &[(5, "threads", "std::thread"), (5, "threads", "thread::spawn")],
+    );
+    let c = lint_fixture("d4_threads_clean.rs", ALGO);
+    assert_diags(&c, &[]);
+}
+
+#[test]
+fn d5_panic_wire() {
+    let v = lint_fixture("d5_panic_wire_violate.rs", WIRE);
+    assert_diags(
+        &v,
+        &[
+            (4, "panic-wire", "[<int>] indexing"),
+            (5, "panic-wire", ".unwrap()"),
+        ],
+    );
+    let c = lint_fixture("d5_panic_wire_clean.rs", WIRE);
+    assert_diags(&c, &[]);
+}
+
+#[test]
+fn d6_lossy_cast() {
+    let v = lint_fixture("d6_lossy_cast_violate.rs", WIRE);
+    assert_diags(&v, &[(4, "lossy-cast", "as u64")]);
+    let c = lint_fixture("d6_lossy_cast_clean.rs", WIRE);
+    assert_diags(&c, &[]);
+}
+
+#[test]
+fn allow_without_reason_is_an_error() {
+    let r = lint_fixture("bad_allow_no_reason.rs", ALGO);
+    // The malformed directive is reported AND the violation it failed
+    // to suppress still fires.
+    assert_eq!(r.diagnostics.len(), 2, "{:#?}", r.diagnostics);
+    assert_eq!(
+        (r.diagnostics[0].line, r.diagnostics[0].rule),
+        (4, "bad-allow")
+    );
+    assert_eq!(
+        (r.diagnostics[1].line, r.diagnostics[1].rule),
+        (5, "uncounted-dist")
+    );
+    assert_eq!(r.suppressed, 0);
+}
+
+#[test]
+fn diagnostics_render_file_line_rule() {
+    let v = lint_fixture("d6_lossy_cast_violate.rs", WIRE);
+    let rendered = v.diagnostics[0].to_string();
+    assert!(
+        rendered.starts_with("rust/src/engine/wire.rs:4: [lossy-cast] "),
+        "unexpected rendering: {rendered}"
+    );
+}
+
+#[test]
+fn fixtures_never_leak_into_scope() {
+    // A fixture linted under the xtask tree itself is out of every
+    // scope: the path gate, not luck, keeps self-tests out of the scan.
+    let r = lint_fixture(
+        "d1_hash_order_violate.rs",
+        "rust/xtask/tests/fixtures/d1_hash_order_violate.rs",
+    );
+    assert_diags(&r, &[]);
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    // The acceptance gate: the shipped tree has zero violations. This
+    // is the same walk `cargo run -p xtask -- lint` performs in CI.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../..")
+        .canonicalize()
+        .expect("repo root");
+    assert_eq!(xtask::lint::run(&root), 0, "repo tree has lint violations");
+}
