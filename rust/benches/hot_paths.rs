@@ -6,6 +6,7 @@
 //! and pool sections overwrite the repo-root `BENCH_hot_paths.json`
 //! baseline.
 
+use anchors_hierarchy::algorithms::kde::{self, ErrorBudget, Kernel};
 use anchors_hierarchy::algorithms::{kmeans, knn};
 use anchors_hierarchy::bench::harness::Bencher;
 use anchors_hierarchy::data::{Data, DenseMatrix};
@@ -201,6 +202,47 @@ fn main() {
         ));
     }
 
+    // --- pruned KDE vs the naive scan (cached sufficient statistics) ----
+    // The PR 7 payoff measurement: tree_kde consumes the per-node count
+    // to replace whole-subtree scans with one pivot distance whenever the
+    // kernel-value interval fits the budget share. Compact-support
+    // Epanechnikov prunes far nodes exactly even at zero budget; Gaussian
+    // needs a non-zero relative budget to win. Both regimes from the
+    // layout section reappear here: 50k×64 (cache-resident rows) and
+    // 5k×2000 (8 KB rows — the naive scan is bandwidth-bound).
+    let mut kde_results: Vec<(String, f64, f64)> = Vec::new();
+    for (label, space) in [("50kx64", &big), ("5kx2000", &hi_dim)] {
+        let tree = middle_out::build(
+            space,
+            &MiddleOutConfig { rmin: 64, ..Default::default() },
+        );
+        let kq: Vec<f32> = {
+            let mut rng = Rng::new(41);
+            (0..space.dim()).map(|_| rng.normal() as f32).collect()
+        };
+        // Data-scale bandwidth (quarter of the root radius): wide enough
+        // that the density is non-trivial, narrow enough that distant
+        // subtrees are prunable.
+        let h = tree.node(tree.root).radius / 4.0;
+        let budget = ErrorBudget { eps_abs: 0.0, eps_rel: 0.01 };
+        for kernel in [Kernel::Gaussian, Kernel::Epanechnikov] {
+            let kname = kernel.name();
+            let (naive, _) = kb.run(&format!("kde/naive-{kname}-{label}"), |_| {
+                kde::naive_kde(space, &kq, kernel, h).sum
+            });
+            println!("{}", naive.report());
+            let (pruned, _) = kb.run(&format!("kde/pruned-{kname}-{label}"), |_| {
+                kde::tree_kde(space, &tree, &kq, kernel, h, budget).sum
+            });
+            println!("{}", pruned.report());
+            kde_results.push((
+                format!("kde_pruned_vs_naive_{kname}_{label}"),
+                naive.mean,
+                pruned.mean,
+            ));
+        }
+    }
+
     // --- persistent pool vs spawn-per-pass fan-out ----------------------
     // 64 small parallel passes at 4 workers — the per-iteration frontier
     // shape. "Spawn" builds a fresh executor (and pool) per pass, which
@@ -250,6 +292,7 @@ fn main() {
         ("pool_fanout_x64_4t".into(), pool_spawn.mean, pool_persistent.mean),
     ];
     rows.extend(layout_results);
+    rows.extend(kde_results);
     for (name, before, after) in &rows {
         let _ = writeln!(
             json,
@@ -259,7 +302,7 @@ fn main() {
             before / after
         );
     }
-    let _ = writeln!(json, "  \"note\": \"before = pointwise scan / spawn-per-pass / gather leaf scan; after = blocked kernel / persistent pool / contiguous arena scan (leaf_scan_* rows: 50k×64 and 5k×2000 trees, rmin 64)\"");
+    let _ = writeln!(json, "  \"note\": \"before = pointwise scan / spawn-per-pass / gather leaf scan / naive KDE; after = blocked kernel / persistent pool / contiguous arena scan / tree-pruned KDE at eps_rel 0.01 (leaf_scan_* and kde_* rows: 50k×64 and 5k×2000 trees, rmin 64)\"");
     let _ = writeln!(json, "}}");
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_paths.json");
     std::fs::write(path, &json).expect("write BENCH_hot_paths.json");

@@ -11,10 +11,14 @@
 //! statistics whenever the node ball lies entirely inside (or outside)
 //! the query ball. Only boundary leaves touch raw points.
 //!
-//! The second-moment statistic cached per node is Σ‖x‖² (a scalar), which
-//! yields the *total* variance exactly. For per-dimension variance the
-//! tree would need Σx² per dimension; we expose total variance (trace of
-//! the covariance), which is what the distortion-style consumers need.
+//! Two flavors are exposed. [`tree_ball_stats`] consumes the scalar
+//! second moment Σ‖x‖² cached per node and reports the *total* variance
+//! (trace of the covariance) — what the distortion-style consumers
+//! need. [`tree_ball_moments`] additionally consumes the per-dimension
+//! second moments Σxᵢ² ([`crate::tree::Node::sum2`], snapshot format
+//! `AHTREE03`) and reports the full per-dimension variance vector,
+//! still exactly and still from cached statistics for every node wholly
+//! inside the ball.
 
 use crate::metrics::{block, dense_dot, Space};
 use crate::tree::{MetricTree, NodeId};
@@ -149,6 +153,154 @@ fn recurse(
     }
 }
 
+/// Exact per-dimension statistics of the points inside a query ball —
+/// the [`BallStats`] report extended with the full variance diagonal,
+/// powered by the per-dimension second moments cached on every node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BallMoments {
+    pub count: u64,
+    /// Mean of the in-ball points (empty ball ⇒ zeros).
+    pub mean: Vec<f32>,
+    /// Per-dimension (biased, /n) variance of the in-ball points.
+    pub variance: Vec<f64>,
+    /// Total variance: trace of the covariance (= Σ variance\[i\]).
+    pub total_variance: f64,
+    /// Distance computations used.
+    pub dists: u64,
+}
+
+/// Accumulator for the moments recursion.
+struct MomentsAcc {
+    count: u64,
+    sum: Vec<f64>,
+    sum2: Vec<f64>,
+    sumsq: f64,
+    whole_nodes: usize,
+}
+
+/// Naive baseline for [`tree_ball_moments`]: scan all points.
+pub fn naive_ball_moments(space: &Space, center: &[f32], radius: f64) -> BallMoments {
+    let before = space.dist_count();
+    // pallas-lint: allow(uncounted-dist, query norm staging; the scan distances are counted by the blocked kernel)
+    let c_sq = dense_dot(center, center);
+    let mut acc = MomentsAcc {
+        count: 0,
+        sum: vec![0.0; space.dim()],
+        sum2: vec![0.0; space.dim()],
+        sumsq: 0.0,
+        whole_nodes: 0,
+    };
+    let mut dists: Vec<f64> = Vec::new();
+    let mut lo = 0usize;
+    while lo < space.n() {
+        let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
+        for (off, &d) in dists.iter().enumerate() {
+            if d <= radius {
+                let p = lo + off;
+                acc.count += 1;
+                space.accumulate(p, &mut acc.sum);
+                space.accumulate_sq(p, &mut acc.sum2);
+                acc.sumsq += space.data.sqnorm(p);
+            }
+        }
+        lo = hi;
+    }
+    finish_moments(acc, space.dist_count() - before)
+}
+
+/// Tree-accelerated exact per-dimension ball statistics: whole-inside
+/// nodes contribute their cached `sum`/`sum2`/`sumsq`, boundary leaves
+/// run the contiguous-arena kernel.
+pub fn tree_ball_moments(
+    space: &Space,
+    tree: &MetricTree,
+    center: &[f32],
+    radius: f64,
+) -> BallMoments {
+    let before = space.dist_count();
+    // pallas-lint: allow(uncounted-dist, query norm staging; node distances counted in recurse)
+    let c_sq = dense_dot(center, center);
+    let mut acc = MomentsAcc {
+        count: 0,
+        sum: vec![0.0; space.dim()],
+        sum2: vec![0.0; space.dim()],
+        sumsq: 0.0,
+        whole_nodes: 0,
+    };
+    let mut dists: Vec<f64> = Vec::new();
+    moments_recurse(space, tree, tree.root, center, c_sq, radius, &mut acc, &mut dists);
+    finish_moments(acc, space.dist_count() - before)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn moments_recurse(
+    space: &Space,
+    tree: &MetricTree,
+    id: NodeId,
+    center: &[f32],
+    c_sq: f64,
+    radius: f64,
+    acc: &mut MomentsAcc,
+    dists: &mut Vec<f64>,
+) {
+    let node = tree.node(id);
+    space.count_bulk(1);
+    // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
+    let d2 = (c_sq + node.pivot_sq - 2.0 * dense_dot(center, &node.pivot)).max(0.0);
+    let d = d2.sqrt();
+    if d + node.radius <= radius {
+        acc.count += node.count as u64;
+        for (a, s) in acc.sum.iter_mut().zip(&node.sum) {
+            *a += s;
+        }
+        for (a, s) in acc.sum2.iter_mut().zip(&node.sum2) {
+            *a += s;
+        }
+        acc.sumsq += node.sumsq;
+        acc.whole_nodes += 1;
+        return;
+    }
+    if d - node.radius > radius {
+        return;
+    }
+    match node.children {
+        Some((a, b)) => {
+            moments_recurse(space, tree, a, center, c_sq, radius, acc, dists);
+            moments_recurse(space, tree, b, center, c_sq, radius, acc, dists);
+        }
+        None => {
+            let arena = tree.arena();
+            let rows = tree.node_rows(id);
+            block::dists_contig_to_vec(arena, rows.clone(), center, c_sq, dists);
+            for (r, &d) in rows.zip(dists.iter()) {
+                if d <= radius {
+                    acc.count += 1;
+                    arena.accumulate(r, &mut acc.sum);
+                    arena.accumulate_sq(r, &mut acc.sum2);
+                    acc.sumsq += arena.data.sqnorm(r);
+                }
+            }
+        }
+    }
+}
+
+fn finish_moments(acc: MomentsAcc, dists: u64) -> BallMoments {
+    let n = acc.count;
+    let inv = if n == 0 { 0.0 } else { 1.0 / n as f64 };
+    let mean: Vec<f32> = acc.sum.iter().map(|&s| (s * inv) as f32).collect();
+    // Per-dimension variance identity: (1/n)Σxᵢ² − meanᵢ².
+    let variance: Vec<f64> = acc
+        .sum2
+        .iter()
+        .zip(&mean)
+        .map(|(&s2, &m)| if n == 0 { 0.0 } else { (s2 * inv - (m as f64) * (m as f64)).max(0.0) })
+        .collect();
+    let mean_sq: f64 = mean.iter().map(|&m| (m as f64) * (m as f64)).sum();
+    let total_variance = if n == 0 { 0.0 } else { (acc.sumsq * inv - mean_sq).max(0.0) };
+    BallMoments { count: n, mean, variance, total_variance, dists }
+}
+
 fn finish(acc: Acc, dists: u64) -> BallStats {
     let n = acc.count;
     let inv = if n == 0 { 0.0 } else { 1.0 / n as f64 };
@@ -242,6 +394,69 @@ mod tests {
         }
         // Root fully inside → O(1) node visits.
         assert!(b.dists <= 3, "used {} dists", b.dists);
+    }
+
+    #[test]
+    fn moments_match_naive_and_direct_per_dim_variance() {
+        let space = clustered(6);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        for (cx, cy, r) in [(0.0, 0.0, 6.0), (40.0, 40.0, 9.0), (20.0, 20.0, 80.0)] {
+            let center = vec![cx as f32, cy as f32];
+            let a = naive_ball_moments(&space, &center, r);
+            let b = tree_ball_moments(&space, &tree, &center, r);
+            assert_eq!(a.count, b.count, "count at ({cx},{cy},{r})");
+            for (x, y) in a.mean.iter().zip(&b.mean) {
+                assert!((x - y).abs() < 1e-4, "mean {x} vs {y}");
+            }
+            for (x, y) in a.variance.iter().zip(&b.variance) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + x), "variance {x} vs {y}");
+            }
+            // The variance diagonal sums to the total variance.
+            let trace: f64 = b.variance.iter().sum();
+            assert!(
+                (trace - b.total_variance).abs() < 1e-6 * (1.0 + b.total_variance),
+                "trace {trace} vs total {}",
+                b.total_variance
+            );
+            // And matches a direct two-pass per-dimension computation.
+            if a.count > 0 {
+                let c_sq = dense_dot(&center, &center);
+                let mut row = vec![0f32; 2];
+                let mut direct = vec![0f64; 2];
+                let mut m = 0u64;
+                for p in 0..space.n() {
+                    if space.dist_to_vec_uncounted(p, &center, c_sq) <= r {
+                        m += 1;
+                        space.fill_row(p, &mut row);
+                        for (dv, (&v, &mu)) in
+                            direct.iter_mut().zip(row.iter().zip(&a.mean))
+                        {
+                            let dx = v as f64 - mu as f64;
+                            *dv += dx * dx;
+                        }
+                    }
+                }
+                assert_eq!(m, a.count);
+                for (dv, &v) in direct.iter().zip(&b.variance) {
+                    let dv = dv / m as f64;
+                    assert!((dv - v).abs() < 1e-3 * (1.0 + dv), "direct {dv} vs cached {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn whole_cluster_moments_use_cached_sum2() {
+        let space = clustered(7);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        // A ball swallowing one blob answers from node stats: far fewer
+        // distances than points, and per-dim variance ≈ 1 in both axes.
+        let b = tree_ball_moments(&space, &tree, &[0.0, 0.0], 8.0);
+        assert_eq!(b.count, 120);
+        assert!(b.dists < space.n() as u64 / 3, "used {} dists", b.dists);
+        for v in &b.variance {
+            assert!((v - 1.0).abs() < 0.5, "per-dim variance {v}");
+        }
     }
 
     #[test]

@@ -1,0 +1,587 @@
+//! Bounded-error kernel density estimation and Nadaraya-Watson kernel
+//! regression — the "statistical learning algorithms" half of the
+//! paper's thesis, answered from cached sufficient statistics.
+//!
+//! For a query q and a monotone non-increasing kernel K, every tree node
+//! at pivot distance d with radius r bounds its own kernel-sum
+//! contribution by the triangle inequality:
+//!
+//! ```text
+//!   count·K(d + r)  ≤  Σ_{x ∈ node} K(‖q − x‖)  ≤  count·K(max(0, d − r))
+//! ```
+//!
+//! The traversal approximates a whole node by the interval midpoint
+//! whenever the interval half-width fits the node's share of the error
+//! budget, and recurses otherwise; only unresolved leaves touch raw
+//! points (contiguous-arena blocked kernels, exact counts). The budget
+//! is split *per point*: a node holding `count` of the `n` points may
+//! spend `count/n` of the total allowance, so the pruned errors sum to
+//! at most `eps_abs + eps_rel·S` (the relative term is charged against a
+//! running **lower bound** `L ≤ S` of the true kernel sum, which only
+//! ever grows — Gray & Moore's finite-difference pruning rule).
+//!
+//! Kernel regression rides the same traversal: the weight-sum
+//! (denominator) error is bounded exactly as in KDE, and the
+//! weighted-sum (numerator) error uses the per-dimension second moments
+//! cached on every node ([`crate::tree::Node::sum2`]) via
+//! Cauchy–Schwarz:
+//!
+//! ```text
+//!   |Σ (K_i − K̄)·y_i|  ≤  (ΔK/2)·Σ|y_i|  ≤  (ΔK/2)·√(count·Σy_i²)
+//! ```
+//!
+//! so approximating a node by `K̄·Σy` (cached `sum[t]`) is safe whenever
+//! the same ΔK test that admits the KDE prune passes. The response `y`
+//! is a designated coordinate of the dataset (`target_dim`); smoothing
+//! weights use the full metric.
+//!
+//! Everything is deterministic: fixed DFS order (first child, then
+//! second), ordered accumulation, and exact distance accounting
+//! (`count_bulk(1)` per node bound, blocked kernels per leaf row).
+
+use crate::metrics::{block, dense_dot, Space};
+use crate::tree::{MetricTree, NodeId};
+
+/// Smoothing kernels. All are non-increasing in the distance, `K(0) = 1`
+/// — the only properties the pruning bounds rely on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// `K(d) = exp(−d² / 2h²)` — infinite support.
+    Gaussian,
+    /// `K(d) = max(0, 1 − (d/h)²)` — compact support: nodes entirely
+    /// farther than `h` prune exactly, budget untouched.
+    Epanechnikov,
+}
+
+impl Kernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Gaussian => "gaussian",
+            Kernel::Epanechnikov => "epanechnikov",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "gaussian" => Some(Kernel::Gaussian),
+            "epanechnikov" => Some(Kernel::Epanechnikov),
+            _ => None,
+        }
+    }
+
+    /// Evaluate `K(d)` at bandwidth `h` (`d ≥ 0`, `h > 0`).
+    #[inline]
+    pub fn eval(&self, d: f64, h: f64) -> f64 {
+        let u = d / h;
+        match self {
+            Kernel::Gaussian => (-0.5 * u * u).exp(),
+            Kernel::Epanechnikov => {
+                if u >= 1.0 {
+                    0.0
+                } else {
+                    1.0 - u * u
+                }
+            }
+        }
+    }
+}
+
+/// The user-supplied error budget on the kernel sum: the traversal
+/// guarantees `|Ŝ − S| ≤ eps_abs + eps_rel·S`. `(0, 0)` forces an exact
+/// evaluation (only zero-width node intervals prune).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorBudget {
+    pub eps_abs: f64,
+    pub eps_rel: f64,
+}
+
+/// Result of a (naive or tree-pruned) KDE evaluation at one query point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KdeResult {
+    /// Estimated kernel sum `Ŝ = Σ K(‖q − x_i‖)` (un-normalized).
+    pub sum: f64,
+    /// `Ŝ / n` — the density estimate up to the kernel's normalizing
+    /// constant (which depends only on `h` and `d`, not the data).
+    pub density: f64,
+    /// Accumulated worst-case `|Ŝ − S|`; 0 for the naive path.
+    pub error_bound: f64,
+    /// Nodes approximated wholesale (telemetry for tests/benches).
+    pub whole_nodes: usize,
+    /// Distance computations used.
+    pub dists: u64,
+}
+
+/// Result of a (naive or tree-pruned) Nadaraya-Watson evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelRegressionResult {
+    /// `ŷ(q) = N̂ / Ŵ` (0 when the weight sum vanishes).
+    pub prediction: f64,
+    /// Estimated weight sum `Ŵ = Σ K_i` (the KDE sum).
+    pub weight_sum: f64,
+    /// Estimated weighted response sum `N̂ = Σ K_i·y_i`.
+    pub weighted_sum: f64,
+    /// Accumulated worst-case `|Ŵ − W|`.
+    pub weight_error_bound: f64,
+    /// Worst-case `|ŷ − y|` implied by the numerator/denominator
+    /// intervals (saturates at `f64::MAX` when the weight lower bound
+    /// hits zero; never NaN/∞, per the wire contract).
+    pub value_error_bound: f64,
+    /// Nodes approximated wholesale.
+    pub whole_nodes: usize,
+    /// Distance computations used.
+    pub dists: u64,
+}
+
+/// Naive O(n) KDE reference: exact kernel sum via the streamed blocked
+/// scan (identical distances and counts to a pointwise loop).
+pub fn naive_kde(space: &Space, center: &[f32], kernel: Kernel, h: f64) -> KdeResult {
+    let before = space.dist_count();
+    // pallas-lint: allow(uncounted-dist, query norm staging; the scan distances are counted by the blocked kernel)
+    let c_sq = dense_dot(center, center);
+    let mut sum = 0.0f64;
+    let mut dists: Vec<f64> = Vec::new();
+    let mut lo = 0usize;
+    while lo < space.n() {
+        let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
+        for &d in &dists {
+            sum += kernel.eval(d, h);
+        }
+        lo = hi;
+    }
+    let n = space.n();
+    KdeResult {
+        sum,
+        density: if n == 0 { 0.0 } else { sum / n as f64 },
+        error_bound: 0.0,
+        whole_nodes: 0,
+        dists: space.dist_count() - before,
+    }
+}
+
+struct KdeAcc {
+    sum: f64,
+    err: f64,
+    /// Running lower bound on the true kernel sum (exact leaf mass plus
+    /// pruned nodes' `count·kmin`) — the base of the relative budget.
+    lower: f64,
+    whole_nodes: usize,
+}
+
+/// Tree-pruned KDE under the given error budget.
+pub fn tree_kde(
+    space: &Space,
+    tree: &MetricTree,
+    center: &[f32],
+    kernel: Kernel,
+    h: f64,
+    budget: ErrorBudget,
+) -> KdeResult {
+    let before = space.dist_count();
+    // pallas-lint: allow(uncounted-dist, query norm staging; node distances counted in the recursion)
+    let c_sq = dense_dot(center, center);
+    let mut acc = KdeAcc { sum: 0.0, err: 0.0, lower: 0.0, whole_nodes: 0 };
+    let n = tree.n_points();
+    let mut dists: Vec<f64> = Vec::new();
+    kde_recurse(
+        space, tree, tree.root, center, c_sq, kernel, h, budget, n, &mut acc, &mut dists,
+    );
+    KdeResult {
+        sum: acc.sum,
+        density: if n == 0 { 0.0 } else { acc.sum / n as f64 },
+        error_bound: acc.err,
+        whole_nodes: acc.whole_nodes,
+        dists: space.dist_count() - before,
+    }
+}
+
+/// Kernel bounds for one node: `(kmin, kmax)` of `K` over the node ball.
+#[inline]
+fn node_kernel_bounds(d: f64, radius: f64, kernel: Kernel, h: f64) -> (f64, f64) {
+    let kmin = kernel.eval(d + radius, h);
+    let kmax = kernel.eval((d - radius).max(0.0), h);
+    (kmin, kmax)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn kde_recurse(
+    space: &Space,
+    tree: &MetricTree,
+    id: NodeId,
+    center: &[f32],
+    c_sq: f64,
+    kernel: Kernel,
+    h: f64,
+    budget: ErrorBudget,
+    n: usize,
+    acc: &mut KdeAcc,
+    dists: &mut Vec<f64>,
+) {
+    let node = tree.node(id);
+    space.count_bulk(1);
+    // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
+    let d2 = (c_sq + node.pivot_sq - 2.0 * dense_dot(center, &node.pivot)).max(0.0);
+    let d = d2.sqrt();
+    let (kmin, kmax) = node_kernel_bounds(d, node.radius, kernel, h);
+    let count = node.count as f64;
+    // Per-point allowance, relative term charged against the running
+    // lower bound (including this node's own guaranteed mass).
+    let tol = (budget.eps_abs + budget.eps_rel * (acc.lower + count * kmin)) / n as f64;
+    let half_width = (kmax - kmin) / 2.0;
+    if half_width <= tol {
+        acc.sum += count * (kmin + kmax) / 2.0;
+        acc.err += count * half_width;
+        acc.lower += count * kmin;
+        acc.whole_nodes += 1;
+        return;
+    }
+    match node.children {
+        Some((a, b)) => {
+            kde_recurse(space, tree, a, center, c_sq, kernel, h, budget, n, acc, dists);
+            kde_recurse(space, tree, b, center, c_sq, kernel, h, budget, n, acc, dists);
+        }
+        None => {
+            // Unresolved leaf: exact kernel sum over its contiguous
+            // arena rows — one sequential slab, counted per tile.
+            let arena = tree.arena();
+            block::dists_contig_to_vec(arena, tree.node_rows(id), center, c_sq, dists);
+            let mut exact = 0.0f64;
+            for &d in dists.iter() {
+                exact += kernel.eval(d, h);
+            }
+            acc.sum += exact;
+            acc.lower += exact;
+        }
+    }
+}
+
+/// Naive O(n) Nadaraya-Watson reference: exact numerator and denominator
+/// via the streamed blocked scan. The response is coordinate
+/// `target_dim` of each datapoint.
+pub fn naive_kernel_regression(
+    space: &Space,
+    center: &[f32],
+    target_dim: usize,
+    kernel: Kernel,
+    h: f64,
+) -> KernelRegressionResult {
+    let before = space.dist_count();
+    // pallas-lint: allow(uncounted-dist, query norm staging; the scan distances are counted by the blocked kernel)
+    let c_sq = dense_dot(center, center);
+    let mut wsum = 0.0f64;
+    let mut nsum = 0.0f64;
+    let mut dists: Vec<f64> = Vec::new();
+    let mut lo = 0usize;
+    while lo < space.n() {
+        let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
+        for (off, &d) in dists.iter().enumerate() {
+            let k = kernel.eval(d, h);
+            wsum += k;
+            nsum += k * space.coord(lo + off, target_dim) as f64;
+        }
+        lo = hi;
+    }
+    KernelRegressionResult {
+        prediction: if wsum > 0.0 { nsum / wsum } else { 0.0 },
+        weight_sum: wsum,
+        weighted_sum: nsum,
+        weight_error_bound: 0.0,
+        value_error_bound: 0.0,
+        whole_nodes: 0,
+        dists: space.dist_count() - before,
+    }
+}
+
+struct KregAcc {
+    wsum: f64,
+    nsum: f64,
+    werr: f64,
+    nerr: f64,
+    lower: f64,
+    whole_nodes: usize,
+}
+
+/// Tree-pruned Nadaraya-Watson under the given weight-sum error budget.
+pub fn tree_kernel_regression(
+    space: &Space,
+    tree: &MetricTree,
+    center: &[f32],
+    target_dim: usize,
+    kernel: Kernel,
+    h: f64,
+    budget: ErrorBudget,
+) -> KernelRegressionResult {
+    let before = space.dist_count();
+    // pallas-lint: allow(uncounted-dist, query norm staging; node distances counted in the recursion)
+    let c_sq = dense_dot(center, center);
+    let mut acc = KregAcc {
+        wsum: 0.0,
+        nsum: 0.0,
+        werr: 0.0,
+        nerr: 0.0,
+        lower: 0.0,
+        whole_nodes: 0,
+    };
+    let n = tree.n_points();
+    let mut dists: Vec<f64> = Vec::new();
+    kreg_recurse(
+        space, tree, tree.root, center, c_sq, target_dim, kernel, h, budget, n, &mut acc,
+        &mut dists,
+    );
+    let prediction = if acc.wsum > 0.0 { acc.nsum / acc.wsum } else { 0.0 };
+    // |N/W − N̂/Ŵ| ≤ (nerr + |ŷ|·werr) / (W ≥ Ŵ − werr), when that lower
+    // bound is positive; otherwise the interval is unbounded — saturate
+    // to a finite sentinel so the wire layer stays NaN/∞-free.
+    let w_lo = acc.wsum - acc.werr;
+    let value_error_bound = if acc.werr == 0.0 && acc.nerr == 0.0 {
+        0.0
+    } else if w_lo > 0.0 {
+        ((acc.nerr + prediction.abs() * acc.werr) / w_lo).min(f64::MAX)
+    } else {
+        f64::MAX
+    };
+    KernelRegressionResult {
+        prediction,
+        weight_sum: acc.wsum,
+        weighted_sum: acc.nsum,
+        weight_error_bound: acc.werr,
+        value_error_bound,
+        whole_nodes: acc.whole_nodes,
+        dists: space.dist_count() - before,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn kreg_recurse(
+    space: &Space,
+    tree: &MetricTree,
+    id: NodeId,
+    center: &[f32],
+    c_sq: f64,
+    target_dim: usize,
+    kernel: Kernel,
+    h: f64,
+    budget: ErrorBudget,
+    n: usize,
+    acc: &mut KregAcc,
+    dists: &mut Vec<f64>,
+) {
+    let node = tree.node(id);
+    space.count_bulk(1);
+    // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
+    let d2 = (c_sq + node.pivot_sq - 2.0 * dense_dot(center, &node.pivot)).max(0.0);
+    let d = d2.sqrt();
+    let (kmin, kmax) = node_kernel_bounds(d, node.radius, kernel, h);
+    let count = node.count as f64;
+    let tol = (budget.eps_abs + budget.eps_rel * (acc.lower + count * kmin)) / n as f64;
+    let half_width = (kmax - kmin) / 2.0;
+    if half_width <= tol {
+        let mid = (kmin + kmax) / 2.0;
+        acc.wsum += count * mid;
+        acc.werr += count * half_width;
+        // Numerator midpoint K̄·Σy from the cached first moment; its
+        // error ≤ (ΔK/2)·√(count·Σy²) by Cauchy–Schwarz, from the
+        // cached per-dimension second moment.
+        acc.nsum += mid * node.sum[target_dim];
+        acc.nerr += half_width * (count * node.sum2[target_dim]).sqrt();
+        acc.lower += count * kmin;
+        acc.whole_nodes += 1;
+        return;
+    }
+    match node.children {
+        Some((a, b)) => {
+            kreg_recurse(
+                space, tree, a, center, c_sq, target_dim, kernel, h, budget, n, acc, dists,
+            );
+            kreg_recurse(
+                space, tree, b, center, c_sq, target_dim, kernel, h, budget, n, acc, dists,
+            );
+        }
+        None => {
+            let arena = tree.arena();
+            let rows = tree.node_rows(id);
+            block::dists_contig_to_vec(arena, rows.clone(), center, c_sq, dists);
+            let mut w_exact = 0.0f64;
+            for (r, &d) in rows.zip(dists.iter()) {
+                let k = kernel.eval(d, h);
+                w_exact += k;
+                acc.nsum += k * arena.coord(r, target_dim) as f64;
+            }
+            acc.wsum += w_exact;
+            acc.lower += w_exact;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Data, DenseMatrix};
+    use crate::rng::Rng;
+    use crate::tree::middle_out::{self, MiddleOutConfig};
+
+    fn clustered(seed: u64) -> Space {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for c in 0..5 {
+            for _ in 0..100 {
+                rows.push(vec![
+                    (c as f64 * 25.0 + rng.normal() * 2.0) as f32,
+                    (rng.normal() * 2.0) as f32,
+                    ((c % 2) as f64 * 10.0 + rng.normal()) as f32,
+                ]);
+            }
+        }
+        Space::euclidean(Data::Dense(DenseMatrix::from_rows(&rows)))
+    }
+
+    #[test]
+    fn kernel_shapes() {
+        for k in [Kernel::Gaussian, Kernel::Epanechnikov] {
+            assert_eq!(k.eval(0.0, 2.0), 1.0);
+            // Non-increasing in d.
+            let mut prev = 1.0;
+            for i in 1..40 {
+                let v = k.eval(i as f64 * 0.25, 2.0);
+                assert!(v <= prev + 1e-15, "{:?} not monotone at {i}", k);
+                assert!(v >= 0.0);
+                prev = v;
+            }
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::Epanechnikov.eval(2.0, 2.0), 0.0);
+        assert_eq!(Kernel::parse("triweight"), None);
+    }
+
+    #[test]
+    fn tree_kde_within_budget_of_naive() {
+        let space = clustered(1);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        for kernel in [Kernel::Gaussian, Kernel::Epanechnikov] {
+            for h in [1.0, 5.0, 30.0] {
+                for (eps_abs, eps_rel) in [(0.5, 0.0), (0.0, 0.01), (1.0, 0.05)] {
+                    let budget = ErrorBudget { eps_abs, eps_rel };
+                    let center = vec![25.0f32, 0.0, 5.0];
+                    let naive = naive_kde(&space, &center, kernel, h);
+                    let fast = tree_kde(&space, &tree, &center, kernel, h, budget);
+                    let allowed = eps_abs + eps_rel * naive.sum + 1e-9;
+                    assert!(
+                        (fast.sum - naive.sum).abs() <= allowed,
+                        "{kernel:?} h={h} budget=({eps_abs},{eps_rel}): {} vs {} (allowed {allowed})",
+                        fast.sum,
+                        naive.sum
+                    );
+                    // The reported bound is itself honest.
+                    assert!((fast.sum - naive.sum).abs() <= fast.error_bound + 1e-9);
+                    assert!(fast.error_bound <= allowed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_budget_is_exact() {
+        let space = clustered(2);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let center = vec![0.0f32, 0.0, 0.0];
+        let budget = ErrorBudget { eps_abs: 0.0, eps_rel: 0.0 };
+        let naive = naive_kde(&space, &center, Kernel::Gaussian, 3.0);
+        let fast = tree_kde(&space, &tree, &center, Kernel::Gaussian, 3.0, budget);
+        // With no budget every Gaussian node descends to leaves; leaf
+        // kernels are the same blocked scan in the same row order.
+        assert!((fast.sum - naive.sum).abs() < 1e-9 * (1.0 + naive.sum));
+        assert_eq!(fast.error_bound, 0.0);
+        // Compactly supported kernels still prune exactly at zero budget.
+        let e = tree_kde(&space, &tree, &center, Kernel::Epanechnikov, 3.0, budget);
+        let en = naive_kde(&space, &center, Kernel::Epanechnikov, 3.0);
+        assert!((e.sum - en.sum).abs() < 1e-9 * (1.0 + en.sum));
+        assert!(e.dists < space.n() as u64, "compact support never pruned");
+    }
+
+    #[test]
+    fn budget_buys_pruning() {
+        let space = clustered(3);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let center = vec![25.0f32, 0.0, 5.0];
+        let tight = tree_kde(
+            &space, &tree, &center, Kernel::Gaussian, 2.0,
+            ErrorBudget { eps_abs: 0.0, eps_rel: 0.0 },
+        );
+        let loose = tree_kde(
+            &space, &tree, &center, Kernel::Gaussian, 2.0,
+            ErrorBudget { eps_abs: 1.0, eps_rel: 0.05 },
+        );
+        assert!(
+            loose.dists < tight.dists,
+            "budget did not reduce work: {} vs {}",
+            loose.dists,
+            tight.dists
+        );
+        assert!(loose.whole_nodes > 0);
+    }
+
+    #[test]
+    fn tree_kreg_within_bounds_of_naive() {
+        let space = clustered(4);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let center = vec![50.0f32, 0.0, 0.0];
+        for (eps_abs, eps_rel) in [(0.0, 0.0), (0.5, 0.0), (0.2, 0.02)] {
+            let budget = ErrorBudget { eps_abs, eps_rel };
+            let naive = naive_kernel_regression(&space, &center, 2, Kernel::Gaussian, 8.0);
+            let fast =
+                tree_kernel_regression(&space, &tree, &center, 2, Kernel::Gaussian, 8.0, budget);
+            assert!(
+                (fast.weight_sum - naive.weight_sum).abs() <= fast.weight_error_bound + 1e-9,
+                "weight sum {} vs {} exceeds bound {}",
+                fast.weight_sum,
+                naive.weight_sum,
+                fast.weight_error_bound
+            );
+            assert!(
+                (fast.prediction - naive.prediction).abs() <= fast.value_error_bound + 1e-9,
+                "prediction {} vs {} exceeds bound {}",
+                fast.prediction,
+                naive.prediction,
+                fast.value_error_bound
+            );
+            assert!(fast.value_error_bound.is_finite());
+        }
+    }
+
+    #[test]
+    fn empty_weight_sum_predicts_zero() {
+        let space = clustered(5);
+        let tree = middle_out::build(&space, &MiddleOutConfig::default());
+        // Epanechnikov far from all mass: every kernel value is exactly 0.
+        let center = vec![5000.0f32, 5000.0, 5000.0];
+        let r = tree_kernel_regression(
+            &space, &tree, &center, 0, Kernel::Epanechnikov, 1.0,
+            ErrorBudget { eps_abs: 0.0, eps_rel: 0.0 },
+        );
+        assert_eq!(r.prediction, 0.0);
+        assert_eq!(r.weight_sum, 0.0);
+        assert!(r.value_error_bound.is_finite());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let space = clustered(6);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, ..Default::default() });
+        let center = vec![12.0f32, 1.0, 3.0];
+        let budget = ErrorBudget { eps_abs: 0.3, eps_rel: 0.01 };
+        let run = || {
+            let before = space.dist_count();
+            let k = tree_kde(&space, &tree, &center, Kernel::Gaussian, 4.0, budget);
+            let r = tree_kernel_regression(
+                &space, &tree, &center, 1, Kernel::Gaussian, 4.0, budget,
+            );
+            (k, r, space.dist_count() - before)
+        };
+        let (k1, r1, d1) = run();
+        let (k2, r2, d2) = run();
+        assert_eq!(k1, k2);
+        assert_eq!(r1, r2);
+        assert_eq!(d1, d2);
+    }
+}

@@ -5,10 +5,11 @@
 //! server all route through here.
 
 use super::{
-    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, Index, InitKind, KmeansQuery,
-    KnnQuery, KnnTarget, MstQuery, Query, QueryResult, XmeansQuery,
+    AllPairsQuery, AnomalyQuery, BallQuery, BallStatsQuery, GaussianEmQuery, Index, InitKind,
+    KdeQuery, KernelRegressionQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
+    QueryResult, XmeansQuery,
 };
-use crate::algorithms::{allpairs, anomaly, ballquery, gaussian, kmeans, knn, mst, xmeans};
+use crate::algorithms::{allpairs, anomaly, ballquery, gaussian, kde, kmeans, knn, mst, xmeans};
 use crate::metrics::dense_dot;
 use crate::parallel::{Executor, Parallelism};
 
@@ -33,6 +34,9 @@ impl Index {
             Query::Anomaly(q) => self.run_anomaly(q),
             Query::AllPairs(q) => self.run_allpairs(q),
             Query::Ball(q) => self.run_ball(q),
+            Query::BallStats(q) => self.run_ball_stats(q),
+            Query::Kde(q) => self.run_kde(q),
+            Query::KernelRegression(q) => self.run_kernel_regression(q),
             Query::GaussianEm(q) => self.run_em(q),
             Query::Knn(q) => self.run_knn(q),
             Query::Mst(q) => self.run_mst(q),
@@ -180,6 +184,94 @@ impl Index {
             count: stats.count,
             mean: stats.mean,
             total_variance: stats.total_variance,
+        }
+    }
+
+    fn run_ball_stats(&self, q: &BallStatsQuery) -> QueryResult {
+        assert_eq!(
+            q.center.len(),
+            self.space().dim(),
+            "ballstats query center has dimension {} but the space has {}",
+            q.center.len(),
+            self.space().dim()
+        );
+        let m = if q.use_tree {
+            ballquery::tree_ball_moments(self.space(), &self.tree(), &q.center, q.radius)
+        } else {
+            ballquery::naive_ball_moments(self.space(), &q.center, q.radius)
+        };
+        QueryResult::BallStats {
+            count: m.count,
+            mean: m.mean,
+            variance: m.variance,
+            total_variance: m.total_variance,
+        }
+    }
+
+    /// Common validation for the kernel-family queries.
+    fn check_kernel_query(&self, center: &[f32], bandwidth: f64, eps_abs: f64, eps_rel: f64) {
+        assert_eq!(
+            center.len(),
+            self.space().dim(),
+            "kernel query center has dimension {} but the space has {}",
+            center.len(),
+            self.space().dim()
+        );
+        assert!(
+            bandwidth.is_finite() && bandwidth > 0.0,
+            "kernel bandwidth must be a positive finite number, got {bandwidth}"
+        );
+        assert!(
+            eps_abs.is_finite() && eps_abs >= 0.0 && eps_rel.is_finite() && eps_rel >= 0.0,
+            "error budget must be non-negative and finite, got abs={eps_abs} rel={eps_rel}"
+        );
+    }
+
+    fn run_kde(&self, q: &KdeQuery) -> QueryResult {
+        self.check_kernel_query(&q.center, q.bandwidth, q.eps_abs, q.eps_rel);
+        let budget = kde::ErrorBudget { eps_abs: q.eps_abs, eps_rel: q.eps_rel };
+        let r = if q.use_tree {
+            kde::tree_kde(self.space(), &self.tree(), &q.center, q.kernel, q.bandwidth, budget)
+        } else {
+            kde::naive_kde(self.space(), &q.center, q.kernel, q.bandwidth)
+        };
+        QueryResult::Kde { sum: r.sum, density: r.density, error_bound: r.error_bound }
+    }
+
+    fn run_kernel_regression(&self, q: &KernelRegressionQuery) -> QueryResult {
+        self.check_kernel_query(&q.center, q.bandwidth, q.eps_abs, q.eps_rel);
+        assert!(
+            q.target_dim < self.space().dim(),
+            "regression target dimension {} out of range (space has {} dims)",
+            q.target_dim,
+            self.space().dim()
+        );
+        let budget = kde::ErrorBudget { eps_abs: q.eps_abs, eps_rel: q.eps_rel };
+        let r = if q.use_tree {
+            kde::tree_kernel_regression(
+                self.space(),
+                &self.tree(),
+                &q.center,
+                q.target_dim,
+                q.kernel,
+                q.bandwidth,
+                budget,
+            )
+        } else {
+            kde::naive_kernel_regression(
+                self.space(),
+                &q.center,
+                q.target_dim,
+                q.kernel,
+                q.bandwidth,
+            )
+        };
+        QueryResult::KernelRegression {
+            prediction: r.prediction,
+            weight_sum: r.weight_sum,
+            weighted_sum: r.weighted_sum,
+            weight_error_bound: r.weight_error_bound,
+            value_error_bound: r.value_error_bound,
         }
     }
 

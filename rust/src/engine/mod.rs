@@ -56,8 +56,9 @@ pub mod query;
 pub mod wire;
 
 pub use query::{
-    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, InitKind, KmeansQuery, KnnQuery,
-    KnnTarget, MstQuery, Query, QueryResult, XmeansQuery,
+    AllPairsQuery, AnomalyQuery, BallQuery, BallStatsQuery, GaussianEmQuery, InitKind, KdeQuery,
+    KernelRegressionQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, QueryResult,
+    XmeansQuery,
 };
 
 use crate::dataset::DatasetSpec;

@@ -8,6 +8,7 @@
 //! paper compares against — except X-means, which is defined in terms of
 //! the tree and always uses it.
 
+use crate::algorithms::kde::Kernel;
 use crate::algorithms::knn::Neighbor;
 use crate::algorithms::mst::Edge;
 
@@ -116,6 +117,80 @@ impl Default for BallQuery {
     }
 }
 
+/// Kernel density estimate at a query point, tree-pruned under a
+/// user-supplied absolute/relative error budget: the result's kernel sum
+/// is within `eps_abs + eps_rel·S` of the exact sum `S`
+/// ([`crate::algorithms::kde`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KdeQuery {
+    pub center: Vec<f32>,
+    pub kernel: Kernel,
+    pub bandwidth: f64,
+    pub eps_abs: f64,
+    pub eps_rel: f64,
+    pub use_tree: bool,
+}
+
+impl Default for KdeQuery {
+    fn default() -> Self {
+        KdeQuery {
+            center: Vec::new(),
+            kernel: Kernel::Gaussian,
+            bandwidth: 1.0,
+            eps_abs: 0.0,
+            eps_rel: 0.01,
+            use_tree: true,
+        }
+    }
+}
+
+/// Nadaraya-Watson kernel regression at a query point: the response is
+/// dataset coordinate `target_dim`, the smoothing weights use the full
+/// metric, and the same budget-split traversal as [`KdeQuery`] bounds
+/// both the weight sum and (via the per-dimension second moments) the
+/// weighted response sum.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelRegressionQuery {
+    pub center: Vec<f32>,
+    /// Which dataset coordinate is the regression response.
+    pub target_dim: usize,
+    pub kernel: Kernel,
+    pub bandwidth: f64,
+    pub eps_abs: f64,
+    pub eps_rel: f64,
+    pub use_tree: bool,
+}
+
+impl Default for KernelRegressionQuery {
+    fn default() -> Self {
+        KernelRegressionQuery {
+            center: Vec::new(),
+            target_dim: 0,
+            kernel: Kernel::Gaussian,
+            bandwidth: 1.0,
+            eps_abs: 0.0,
+            eps_rel: 0.01,
+            use_tree: true,
+        }
+    }
+}
+
+/// Exact count / mean / **per-dimension variance** of the points inside
+/// a ball — [`BallQuery`] extended with the full variance diagonal from
+/// the per-dimension second moments cached on every node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BallStatsQuery {
+    pub center: Vec<f32>,
+    pub radius: f64,
+    pub use_tree: bool,
+}
+
+impl Default for BallStatsQuery {
+    fn default() -> Self {
+        BallStatsQuery { center: Vec::new(), radius: 1.0, use_tree: true }
+    }
+}
+
 /// Spherical-Gaussian mixture EM (paper §6).
 #[derive(Clone, Debug, PartialEq)]
 pub struct GaussianEmQuery {
@@ -179,6 +254,9 @@ pub enum Query {
     Anomaly(AnomalyQuery),
     AllPairs(AllPairsQuery),
     Ball(BallQuery),
+    BallStats(BallStatsQuery),
+    Kde(KdeQuery),
+    KernelRegression(KernelRegressionQuery),
     GaussianEm(GaussianEmQuery),
     Knn(KnnQuery),
     Mst(MstQuery),
@@ -193,6 +271,9 @@ impl Query {
             Query::Anomaly(_) => "anomaly",
             Query::AllPairs(_) => "allpairs",
             Query::Ball(_) => "ball",
+            Query::BallStats(_) => "ballstats",
+            Query::Kde(_) => "kde",
+            Query::KernelRegression(_) => "kreg",
             Query::GaussianEm(_) => "em",
             Query::Knn(_) => "knn",
             Query::Mst(_) => "mst",
@@ -209,6 +290,9 @@ impl Query {
             Query::Anomaly(q) => q.use_tree,
             Query::AllPairs(q) => q.use_tree,
             Query::Ball(q) => q.use_tree,
+            Query::BallStats(q) => q.use_tree,
+            Query::Kde(q) => q.use_tree,
+            Query::KernelRegression(q) => q.use_tree,
             Query::GaussianEm(q) => q.use_tree,
             Query::Knn(q) => q.use_tree,
             Query::Mst(q) => q.use_tree,
@@ -247,6 +331,32 @@ pub enum QueryResult {
         mean: Vec<f32>,
         total_variance: f64,
     },
+    BallStats {
+        count: u64,
+        mean: Vec<f32>,
+        /// Per-dimension (biased) variance of the in-ball points.
+        variance: Vec<f64>,
+        total_variance: f64,
+    },
+    Kde {
+        /// Estimated kernel sum Σ K(‖q − xᵢ‖).
+        sum: f64,
+        /// `sum / n` — density up to the kernel's normalizing constant.
+        density: f64,
+        /// Worst-case |sum − exact|; finite, 0 for naive evaluation.
+        error_bound: f64,
+    },
+    KernelRegression {
+        /// Nadaraya-Watson estimate ŷ(q) (0 when no weight).
+        prediction: f64,
+        weight_sum: f64,
+        weighted_sum: f64,
+        /// Worst-case |weight_sum − exact|; finite.
+        weight_error_bound: f64,
+        /// Worst-case |prediction − exact|; finite (saturated, never
+        /// NaN/∞ — the wire layer requires representable numbers).
+        value_error_bound: f64,
+    },
     GaussianEm {
         weights: Vec<f64>,
         means: Vec<Vec<f32>>,
@@ -275,6 +385,9 @@ impl QueryResult {
             QueryResult::Anomaly { .. } => "anomaly",
             QueryResult::AllPairs { .. } => "allpairs",
             QueryResult::Ball { .. } => "ball",
+            QueryResult::BallStats { .. } => "ballstats",
+            QueryResult::Kde { .. } => "kde",
+            QueryResult::KernelRegression { .. } => "kreg",
             QueryResult::GaussianEm { .. } => "em",
             QueryResult::Knn { .. } => "knn",
             QueryResult::Mst { .. } => "mst",
@@ -297,6 +410,18 @@ impl QueryResult {
             QueryResult::AllPairs { pairs } => format!("allpairs: {} close pairs", pairs.len()),
             QueryResult::Ball { count, total_variance, .. } => {
                 format!("ball: {count} points, total variance {total_variance:.4}")
+            }
+            QueryResult::BallStats { count, variance, total_variance, .. } => format!(
+                "ballstats: {count} points, total variance {total_variance:.4} over {} dims",
+                variance.len()
+            ),
+            QueryResult::Kde { sum, density, error_bound } => {
+                format!("kde: kernel sum {sum:.6e} (density {density:.6e} ± {error_bound:.2e})")
+            }
+            QueryResult::KernelRegression { prediction, weight_sum, value_error_bound, .. } => {
+                format!(
+                    "kreg: prediction {prediction:.6} (weight {weight_sum:.4}, ± {value_error_bound:.2e})"
+                )
             }
             QueryResult::GaussianEm { loglik, steps, weights, .. } => format!(
                 "em: k={} loglik {loglik:.6e} after {steps} steps",

@@ -11,9 +11,11 @@
 //! ignored on read, so `parse(write(x)) == x` for every variant.
 
 use super::{
-    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, InitKind, KmeansQuery, KnnQuery,
-    KnnTarget, MstQuery, Query, QueryResult, XmeansQuery,
+    AllPairsQuery, AnomalyQuery, BallQuery, BallStatsQuery, GaussianEmQuery, InitKind, KdeQuery,
+    KernelRegressionQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, QueryResult,
+    XmeansQuery,
 };
+use crate::algorithms::kde::Kernel;
 use crate::algorithms::knn::Neighbor;
 use crate::algorithms::mst::Edge;
 use crate::ids;
@@ -132,6 +134,18 @@ fn init_kind(v: &Value) -> Result<InitKind, String> {
     }
 }
 
+/// `"kernel"` defaults to Gaussian; unknown names are an error, not a
+/// silent fallback.
+fn kernel_field(v: &Value) -> Result<Kernel, String> {
+    match v.get("kernel") {
+        None => Ok(Kernel::Gaussian),
+        Some(Value::Str(s)) => {
+            Kernel::parse(s).ok_or_else(|| format!("unknown kernel {s:?}"))
+        }
+        Some(other) => Err(format!("bad kernel field {other:?}")),
+    }
+}
+
 // ---------------------------------------------------------------------
 // Queries
 // ---------------------------------------------------------------------
@@ -165,6 +179,28 @@ pub fn query_to_json(q: &Query) -> Value {
         Query::Ball(q) => {
             fields.push(("center", f32_row(&q.center)));
             fields.push(("radius", num(q.radius)));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::BallStats(q) => {
+            fields.push(("center", f32_row(&q.center)));
+            fields.push(("radius", num(q.radius)));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::Kde(q) => {
+            fields.push(("center", f32_row(&q.center)));
+            fields.push(("kernel", Value::Str(q.kernel.name().into())));
+            fields.push(("bandwidth", num(q.bandwidth)));
+            fields.push(("eps_abs", num(q.eps_abs)));
+            fields.push(("eps_rel", num(q.eps_rel)));
+            fields.push((key_tree(), Value::Bool(q.use_tree)));
+        }
+        Query::KernelRegression(q) => {
+            fields.push(("center", f32_row(&q.center)));
+            fields.push(("target", num(ids::wire_from_usize(q.target_dim))));
+            fields.push(("kernel", Value::Str(q.kernel.name().into())));
+            fields.push(("bandwidth", num(q.bandwidth)));
+            fields.push(("eps_abs", num(q.eps_abs)));
+            fields.push(("eps_rel", num(q.eps_rel)));
             fields.push((key_tree(), Value::Bool(q.use_tree)));
         }
         Query::GaussianEm(q) => {
@@ -234,6 +270,40 @@ pub fn query_from_json(v: &Value) -> Result<Query, String> {
             Ok(Query::Ball(BallQuery {
                 center,
                 radius: get_or(v, "radius", d.radius),
+                use_tree,
+            }))
+        }
+        "ballstats" => {
+            let center = parse_f32_row(field(v, "center")?, "center")?;
+            let d = BallStatsQuery::default();
+            Ok(Query::BallStats(BallStatsQuery {
+                center,
+                radius: get_or(v, "radius", d.radius),
+                use_tree,
+            }))
+        }
+        "kde" => {
+            let center = parse_f32_row(field(v, "center")?, "center")?;
+            let d = KdeQuery::default();
+            Ok(Query::Kde(KdeQuery {
+                center,
+                kernel: kernel_field(v)?,
+                bandwidth: get_or(v, "bandwidth", d.bandwidth),
+                eps_abs: get_or(v, "eps_abs", d.eps_abs),
+                eps_rel: get_or(v, "eps_rel", d.eps_rel),
+                use_tree,
+            }))
+        }
+        "kreg" => {
+            let center = parse_f32_row(field(v, "center")?, "center")?;
+            let d = KernelRegressionQuery::default();
+            Ok(Query::KernelRegression(KernelRegressionQuery {
+                center,
+                target_dim: get_usize(v, "target", d.target_dim)?,
+                kernel: kernel_field(v)?,
+                bandwidth: get_or(v, "bandwidth", d.bandwidth),
+                eps_abs: get_or(v, "eps_abs", d.eps_abs),
+                eps_rel: get_or(v, "eps_rel", d.eps_rel),
                 use_tree,
             }))
         }
@@ -315,6 +385,30 @@ pub fn result_to_json(r: &QueryResult) -> Value {
             fields.push(("count", num(ids::wire_from_u64(*count))));
             fields.push(("total_variance", num(*total_variance)));
             fields.push(("mean", f32_row(mean)));
+        }
+        QueryResult::BallStats { count, mean, variance, total_variance } => {
+            fields.push(("count", num(ids::wire_from_u64(*count))));
+            fields.push(("total_variance", num(*total_variance)));
+            fields.push(("mean", f32_row(mean)));
+            fields.push(("variance", f64_row(variance)));
+        }
+        QueryResult::Kde { sum, density, error_bound } => {
+            fields.push(("sum", num(*sum)));
+            fields.push(("density", num(*density)));
+            fields.push(("error_bound", num(*error_bound)));
+        }
+        QueryResult::KernelRegression {
+            prediction,
+            weight_sum,
+            weighted_sum,
+            weight_error_bound,
+            value_error_bound,
+        } => {
+            fields.push(("prediction", num(*prediction)));
+            fields.push(("weight_sum", num(*weight_sum)));
+            fields.push(("weighted_sum", num(*weighted_sum)));
+            fields.push(("weight_error_bound", num(*weight_error_bound)));
+            fields.push(("value_error_bound", num(*value_error_bound)));
         }
         QueryResult::GaussianEm { weights, means, variances, loglik, steps } => {
             fields.push(("loglik", num(*loglik)));
@@ -412,6 +506,26 @@ pub fn result_from_json(v: &Value) -> Result<QueryResult, String> {
             mean: parse_f32_row(field(v, "mean")?, "mean")?,
             total_variance: get_f64(v, "total_variance").ok_or("missing \"total_variance\"")?,
         }),
+        "ballstats" => Ok(QueryResult::BallStats {
+            count: req_u64(v, "count")?,
+            mean: parse_f32_row(field(v, "mean")?, "mean")?,
+            variance: parse_f64_row(field(v, "variance")?, "variance")?,
+            total_variance: get_f64(v, "total_variance").ok_or("missing \"total_variance\"")?,
+        }),
+        "kde" => Ok(QueryResult::Kde {
+            sum: get_f64(v, "sum").ok_or("missing \"sum\"")?,
+            density: get_f64(v, "density").ok_or("missing \"density\"")?,
+            error_bound: get_f64(v, "error_bound").ok_or("missing \"error_bound\"")?,
+        }),
+        "kreg" => Ok(QueryResult::KernelRegression {
+            prediction: get_f64(v, "prediction").ok_or("missing \"prediction\"")?,
+            weight_sum: get_f64(v, "weight_sum").ok_or("missing \"weight_sum\"")?,
+            weighted_sum: get_f64(v, "weighted_sum").ok_or("missing \"weighted_sum\"")?,
+            weight_error_bound: get_f64(v, "weight_error_bound")
+                .ok_or("missing \"weight_error_bound\"")?,
+            value_error_bound: get_f64(v, "value_error_bound")
+                .ok_or("missing \"value_error_bound\"")?,
+        }),
         "em" => Ok(QueryResult::GaussianEm {
             weights: parse_f64_row(field(v, "weights")?, "weights")?,
             means: parse_f32_rows(field(v, "means")?, "means")?,
@@ -494,6 +608,28 @@ mod tests {
             radius: 2.0,
             use_tree: true,
         }));
+        roundtrip_query(Query::BallStats(BallStatsQuery {
+            center: vec![1.25, 0.0],
+            radius: 4.5,
+            use_tree: false,
+        }));
+        roundtrip_query(Query::Kde(KdeQuery {
+            center: vec![0.5, 2.5],
+            kernel: Kernel::Epanechnikov,
+            bandwidth: 3.5,
+            eps_abs: 0.25,
+            eps_rel: 0.0,
+            use_tree: true,
+        }));
+        roundtrip_query(Query::KernelRegression(KernelRegressionQuery {
+            center: vec![-1.0, 0.0, 2.0],
+            target_dim: 2,
+            kernel: Kernel::Gaussian,
+            bandwidth: 0.5,
+            eps_abs: 0.0,
+            eps_rel: 0.05,
+            use_tree: false,
+        }));
         roundtrip_query(Query::GaussianEm(GaussianEmQuery {
             k: 4,
             steps: 6,
@@ -528,6 +664,19 @@ mod tests {
         assert!(query_from_json(&v).is_err());
     }
 
+    #[test]
+    fn kernel_defaults_fill_in_and_unknown_kernel_rejected() {
+        let v = json::parse(r#"{"op":"kde","center":[0.0,1.0]}"#).unwrap();
+        assert_eq!(
+            query_from_json(&v).unwrap(),
+            Query::Kde(KdeQuery { center: vec![0.0, 1.0], ..Default::default() })
+        );
+        let v = json::parse(r#"{"op":"kreg","center":[1.0],"kernel":"box"}"#).unwrap();
+        assert!(query_from_json(&v).is_err());
+        let v = json::parse(r#"{"op":"ballstats"}"#).unwrap();
+        assert!(query_from_json(&v).is_err(), "ballstats requires a center");
+    }
+
     fn roundtrip_result(r: QueryResult) {
         let text = json::write(&result_to_json(&r));
         let back = result_from_json(&json::parse(&text).unwrap()).unwrap();
@@ -553,6 +702,24 @@ mod tests {
             count: 42,
             mean: vec![1.0, 2.0],
             total_variance: 0.25,
+        });
+        roundtrip_result(QueryResult::BallStats {
+            count: 17,
+            mean: vec![0.5, -3.0],
+            variance: vec![0.125, 2.5],
+            total_variance: 2.625,
+        });
+        roundtrip_result(QueryResult::Kde {
+            sum: 12.5,
+            density: 0.125,
+            error_bound: 0.0625,
+        });
+        roundtrip_result(QueryResult::KernelRegression {
+            prediction: 3.75,
+            weight_sum: 8.5,
+            weighted_sum: 31.875,
+            weight_error_bound: 0.25,
+            value_error_bound: 0.5,
         });
         roundtrip_result(QueryResult::GaussianEm {
             weights: vec![0.5, 0.5],

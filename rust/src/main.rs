@@ -3,7 +3,8 @@
 //! Commands:
 //!   table2 | table3 | table4 | figure1   regenerate the paper's tables/figures
 //!   kmeans | xmeans | anomaly | allpairs |
-//!   ball | em | knn | mst                run one engine query on one dataset
+//!   ball | ballstats | kde | kreg |
+//!   em | knn | mst                       run one engine query on one dataset
 //!   tree                                 build a tree and print its shape
 //!   serve-demo                           drive the batch coordinator
 //!   serve                                TCP JSON-line job server
@@ -18,9 +19,11 @@ use anchors_hierarchy::bench::tables;
 use anchors_hierarchy::cli::Args;
 use anchors_hierarchy::coordinator::{shard, JobSpec, JobState, ShardedCoordinator};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::algorithms::kde::Kernel;
 use anchors_hierarchy::engine::{
-    AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, Index, IndexBuilder, InitKind,
-    KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, TreeStrategy, XmeansQuery,
+    AllPairsQuery, AnomalyQuery, BallQuery, BallStatsQuery, GaussianEmQuery, Index, IndexBuilder,
+    InitKind, KdeQuery, KernelRegressionQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
+    TreeStrategy, XmeansQuery,
 };
 use anchors_hierarchy::parallel::Parallelism;
 use anchors_hierarchy::runtime::BatchDistanceEngine;
@@ -46,6 +49,11 @@ engine queries (common flags: --dataset NAME --scale F --seed N --rmin N
   anomaly  [--threshold N] [--frac F] [--radius F]
   allpairs [--tau F]            (default: auto-calibrated)
   ball     [--radius F]         (ball at the dataset mean)
+  ballstats [--radius F]        (exact count/mean/per-dim variance in a ball)
+  kde      [--bandwidth F] [--kernel gaussian|epanechnikov]
+           [--epsabs F] [--epsrel F]       bounded-error kernel density
+  kreg     [--target N] [--bandwidth F] [--kernel gaussian|epanechnikov]
+           [--epsabs F] [--epsrel F]       bounded-error kernel regression
   em       [--k N] [--steps N] [--tau F] [--init random|anchors]
   knn      [--point N] [--k N]
   mst
@@ -259,6 +267,52 @@ fn run(args: &Args) -> Result<(), String> {
             let query = Query::Ball(BallQuery {
                 center,
                 radius: args.flag("radius", 1.0f64)?,
+                use_tree: args.bool_flag("tree", true)?,
+            });
+            run_query(args, &index, query)
+        }
+        "ballstats" => {
+            let (_, index) = build_index(args)?;
+            let all: Vec<u32> = (0..index.space().n() as u32).collect();
+            let center = index.space().centroid(&all);
+            let query = Query::BallStats(BallStatsQuery {
+                center,
+                radius: args.flag("radius", 1.0f64)?,
+                use_tree: args.bool_flag("tree", true)?,
+            });
+            run_query(args, &index, query)
+        }
+        "kde" => {
+            let (_, index) = build_index(args)?;
+            let all: Vec<u32> = (0..index.space().n() as u32).collect();
+            let center = index.space().centroid(&all);
+            let kernel_name = args.str_flag("kernel", "gaussian");
+            let kernel = Kernel::parse(&kernel_name)
+                .ok_or_else(|| format!("unknown kernel {kernel_name:?}"))?;
+            let query = Query::Kde(KdeQuery {
+                center,
+                kernel,
+                bandwidth: args.flag("bandwidth", 1.0f64)?,
+                eps_abs: args.flag("epsabs", 0.0f64)?,
+                eps_rel: args.flag("epsrel", 0.01f64)?,
+                use_tree: args.bool_flag("tree", true)?,
+            });
+            run_query(args, &index, query)
+        }
+        "kreg" => {
+            let (_, index) = build_index(args)?;
+            let all: Vec<u32> = (0..index.space().n() as u32).collect();
+            let center = index.space().centroid(&all);
+            let kernel_name = args.str_flag("kernel", "gaussian");
+            let kernel = Kernel::parse(&kernel_name)
+                .ok_or_else(|| format!("unknown kernel {kernel_name:?}"))?;
+            let query = Query::KernelRegression(KernelRegressionQuery {
+                center,
+                target_dim: args.flag("target", 0usize)?,
+                kernel,
+                bandwidth: args.flag("bandwidth", 1.0f64)?,
+                eps_abs: args.flag("epsabs", 0.0f64)?,
+                eps_rel: args.flag("epsrel", 0.01f64)?,
                 use_tree: args.bool_flag("tree", true)?,
             });
             run_query(args, &index, query)

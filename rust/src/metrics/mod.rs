@@ -188,6 +188,43 @@ impl Space {
         }
     }
 
+    /// Accumulate the elementwise *square* of datapoint `i` into a dense
+    /// f64 accumulator — the per-dimension second moment Σxᵢ² cached on
+    /// tree nodes ([`crate::tree::Node::sum2`]). For sparse rows only the
+    /// stored entries contribute, exactly as in [`Space::accumulate`].
+    #[inline]
+    pub fn accumulate_sq(&self, i: usize, acc: &mut [f64]) {
+        match &self.data {
+            Data::Dense(m) => {
+                for (a, &v) in acc.iter_mut().zip(m.row(i)) {
+                    *a += v as f64 * v as f64;
+                }
+            }
+            Data::Sparse(m) => {
+                let (idx, val) = m.row(i);
+                for (&j, &v) in idx.iter().zip(val) {
+                    acc[j as usize] += v as f64 * v as f64;
+                }
+            }
+        }
+    }
+
+    /// Single coordinate `j` of datapoint `i` (0.0 for absent sparse
+    /// entries) — the response lookup of the kernel-regression path.
+    #[inline]
+    pub fn coord(&self, i: usize, j: usize) -> f32 {
+        match &self.data {
+            Data::Dense(m) => m.row(i)[j],
+            Data::Sparse(m) => {
+                let (idx, val) = m.row(i);
+                match idx.iter().position(|&x| x as usize == j) {
+                    Some(k) => val[k],
+                    None => 0.0,
+                }
+            }
+        }
+    }
+
     /// Centroid of a set of datapoints.
     pub fn centroid(&self, points: &[u32]) -> Vec<f32> {
         let d = self.dim();
@@ -393,6 +430,28 @@ mod tests {
         let c = s.centroid(&[0, 1, 2]);
         assert_eq!(c, vec![3.0, 4.0]);
         assert_eq!(s.sumsq(&[1, 2]), 25.0 + 100.0);
+    }
+
+    #[test]
+    fn accumulate_sq_matches_dense_and_sparse() {
+        let s = small_dense();
+        let mut acc = vec![0f64; 2];
+        s.accumulate_sq(1, &mut acc);
+        s.accumulate_sq(2, &mut acc);
+        assert_eq!(acc, vec![9.0 + 36.0, 16.0 + 64.0]);
+        // Trace of the per-dim second moments equals the cached sumsq.
+        assert_eq!(acc.iter().sum::<f64>(), s.sumsq(&[1, 2]));
+
+        let rows = vec![vec![(0u32, 2.0f32), (2, -3.0)], vec![(1u32, 4.0f32)]];
+        let sp = Space::euclidean(Data::Sparse(SparseMatrix::from_rows(3, &rows)));
+        let mut acc = vec![0f64; 3];
+        sp.accumulate_sq(0, &mut acc);
+        sp.accumulate_sq(1, &mut acc);
+        assert_eq!(acc, vec![4.0, 16.0, 9.0]);
+        // Single-coordinate lookup, absent sparse entries read as 0.
+        assert_eq!(s.coord(1, 0), 3.0);
+        assert_eq!(sp.coord(0, 2), -3.0);
+        assert_eq!(sp.coord(0, 1), 0.0);
     }
 
     #[test]

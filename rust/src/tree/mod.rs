@@ -7,7 +7,11 @@
 //! * `count`  — number of owned points,
 //! * `sum`    — Σ x (so the centroid is `sum / count`),
 //! * `sumsq`  — Σ ||x||² (so within-node distortion against any center c
-//!              is exactly `sumsq − 2·c·sum + count·||c||²`, in O(d)).
+//!              is exactly `sumsq − 2·c·sum + count·||c||²`, in O(d)),
+//! * `sum2`   — Σ xᵢ² per dimension (the diagonal of the raw scatter;
+//!              its trace equals `sumsq`, and it turns whole-node ball
+//!              queries into exact per-dimension variance reports and
+//!              bounds Nadaraya-Watson numerators via Cauchy–Schwarz).
 //!
 //! Two builders are provided: the classic top-down splitter
 //! ([`top_down::build`]) and the paper's middle-out construction via the
@@ -41,6 +45,12 @@ pub struct Node {
     pub sum: Vec<f64>,
     /// Cached Σ||x||² over owned points.
     pub sumsq: f64,
+    /// Cached per-dimension second moments Σxᵢ² over owned points — the
+    /// diagonal of the raw scatter matrix; its trace equals
+    /// [`Node::sumsq`]. Persisted since snapshot format `AHTREE03`;
+    /// empty right after loading a legacy `AHTREE02` snapshot until
+    /// [`MetricTree::attach_arena`] recomputes it bottom-up.
+    pub sum2: Vec<f64>,
     /// Child node ids; `None` for leaves.
     pub children: Option<(NodeId, NodeId)>,
     /// Owned point ids — a **builder-phase** container only. The
@@ -201,6 +211,52 @@ impl MetricTree {
             space.n()
         );
         self.arena = Some(space.select_rows(&self.layout.inv));
+        // Legacy `AHTREE02` snapshots don't persist per-dimension second
+        // moments; rebuild them from the freshly attached arena.
+        if space.dim() > 0 && self.nodes.iter().any(|n| n.sum2.is_empty()) {
+            self.recompute_sum2();
+        }
+    }
+
+    /// Recompute every node's per-dimension second moments
+    /// ([`Node::sum2`]) from the attached arena. Leaves accumulate their
+    /// arena rows in row order — the identical value sequence
+    /// [`make_leaf`] visited (the arena is a bit-exact copy of the
+    /// builder's point list, in order) — and interiors add their
+    /// children elementwise in `(a, b)` order exactly as
+    /// [`make_parent`] did, so the recomputed statistics are
+    /// bit-identical to what the original build produced. Walks
+    /// post-order (children before parents) so it is independent of the
+    /// node arena's storage order. Counts no distances.
+    fn recompute_sum2(&mut self) {
+        let d = self.arena().dim();
+        let mut order: Vec<NodeId> = Vec::with_capacity(self.nodes.len());
+        let mut stack = vec![self.root];
+        while let Some(id) = stack.pop() {
+            order.push(id);
+            if let Some((a, b)) = self.node(id).children {
+                stack.push(a);
+                stack.push(b);
+            }
+        }
+        for &id in order.iter().rev() {
+            let mut sum2 = vec![0f64; d];
+            match self.node(id).children {
+                None => {
+                    let arena = self.arena();
+                    for r in self.node_rows(id) {
+                        arena.accumulate_sq(r, &mut sum2);
+                    }
+                }
+                Some((a, b)) => {
+                    for i in 0..d {
+                        sum2[i] =
+                            self.nodes[a as usize].sum2[i] + self.nodes[b as usize].sum2[i];
+                    }
+                }
+            }
+            self.nodes[id as usize].sum2 = sum2;
+        }
     }
 
     pub fn shape(&self) -> TreeShape {
@@ -376,6 +432,34 @@ impl MetricTree {
                     node.sumsq
                 ));
             }
+            if node.sum2.len() != space.dim() {
+                return Err(format!(
+                    "node {id}: sum2 holds {} dims but the space has {} \
+                     — legacy snapshot loaded without attach_arena?",
+                    node.sum2.len(),
+                    space.dim()
+                ));
+            }
+            let sum2_err: f64 = {
+                let mut acc = vec![0f64; space.dim()];
+                for &p in pts {
+                    space.accumulate_sq(p as usize, &mut acc);
+                }
+                acc.iter()
+                    .zip(&node.sum2)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max)
+            };
+            if sum2_err > 1e-5 * (1.0 + node.sumsq.abs()) {
+                return Err(format!("node {id}: cached sum2 off by {sum2_err}"));
+            }
+            let trace: f64 = node.sum2.iter().sum();
+            if (trace - node.sumsq).abs() > 1e-6 * (1.0 + node.sumsq.abs()) {
+                return Err(format!(
+                    "node {id}: sum2 trace {trace} disagrees with sumsq {}",
+                    node.sumsq
+                ));
+            }
             if let Some((a, b)) = node.children {
                 let (ca, cb) = (self.node(a), self.node(b));
                 if ca.count + cb.count != node.count {
@@ -424,6 +508,10 @@ pub(crate) fn make_leaf(space: &Space, points: Vec<u32>) -> Node {
     // pallas-lint: allow(uncounted-dist, pivot norm staging in make_leaf; the radius distances below are counted)
     let pivot_sq = dense_dot(&pivot, &pivot);
     let sumsq = space.sumsq(&points);
+    let mut sum2 = vec![0f64; d];
+    for &p in &points {
+        space.accumulate_sq(p as usize, &mut sum2);
+    }
     let mut radius = 0.0f64;
     for &p in &points {
         let dist = space.dist_to_vec(p as usize, &pivot, pivot_sq);
@@ -438,6 +526,7 @@ pub(crate) fn make_leaf(space: &Space, points: Vec<u32>) -> Node {
         count,
         sum,
         sumsq,
+        sum2,
         children: None,
         points,
         row_start: 0,
@@ -460,6 +549,10 @@ pub(crate) fn make_parent(space: &Space, a: &Node, b: &Node) -> Node {
     let pivot_sq = dense_dot(&pivot, &pivot);
     let ra = space.dist_vv(&pivot, &a.pivot) + a.radius;
     let rb = space.dist_vv(&pivot, &b.pivot) + b.radius;
+    let mut sum2 = vec![0f64; d];
+    for i in 0..d {
+        sum2[i] = a.sum2[i] + b.sum2[i];
+    }
     Node {
         pivot,
         pivot_sq,
@@ -467,6 +560,7 @@ pub(crate) fn make_parent(space: &Space, a: &Node, b: &Node) -> Node {
         count,
         sum,
         sumsq: a.sumsq + b.sumsq,
+        sum2,
         children: None, // caller fills in ids
         points: Vec::new(),
         row_start: 0,
@@ -616,6 +710,28 @@ mod tests {
             .map(|&p| space.dist_to_vec_uncounted(p as usize, &c, c_sq).powi(2))
             .sum();
         assert!((fast - slow).abs() < 1e-5 * (1.0 + slow), "{fast} vs {slow}");
+    }
+
+    #[test]
+    fn sum2_trace_matches_sumsq_and_direct_accumulation() {
+        let space = random_space(40, 3, 7);
+        let a = make_leaf(&space, (0..25).collect());
+        let b = make_leaf(&space, (25..40).collect());
+        let mut p = make_parent(&space, &a, &b);
+        p.children = Some((0, 1));
+        let mut direct = vec![0f64; 3];
+        for i in 0..40 {
+            space.accumulate_sq(i, &mut direct);
+        }
+        for (x, y) in p.sum2.iter().zip(&direct) {
+            assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+        let trace: f64 = p.sum2.iter().sum();
+        assert!(
+            (trace - p.sumsq).abs() < 1e-9 * (1.0 + p.sumsq.abs()),
+            "trace {trace} vs sumsq {}",
+            p.sumsq
+        );
     }
 
     #[test]

@@ -3,31 +3,38 @@
 //! Binary format (little-endian), versioned:
 //!
 //! ```text
-//! magic "AHTREE02" | u32 rmin | u64 build_dists | u32 root | u32 n_nodes
+//! magic "AHTREE03" | u32 rmin | u64 build_dists | u32 root | u32 n_nodes
 //! per node:
 //!   u32 dim | f32×dim pivot | f64 pivot_sq | f64 radius | u32 count |
-//!   f64×dim sum | f64 sumsq |
+//!   f64×dim sum | f64 sumsq | f64×dim sum2 |
 //!   u8 has_children | (u32,u32 children)? | u32 row_start
 //! then the tree-order layout:
 //!   u32 perm_len (= dataset rows) | u32 n_rows | u32×n_rows inv
 //! ```
 //!
-//! Version 2 stores leaf point lists as `(row_start, count)` ranges into
-//! the tree-order arena plus one `inv` array (arena row → original id),
-//! instead of v1's per-leaf id vectors — the on-disk mirror of the
-//! in-memory [`super::Layout`]. `perm` is reconstructed from `inv` on
-//! load. The cached sufficient statistics are stored verbatim, so a
-//! deserialized tree answers queries identically (bit-for-bit) without
-//! touching the dataset — **after** the caller re-attaches the permuted
-//! arena with [`MetricTree::attach_arena`] (the snapshot persists the
-//! permutation, not the data; leaf scans need the rows).
+//! Version 3 adds the per-dimension second moments (`sum2`, the diagonal
+//! of the raw scatter — see [`Node::sum2`]) right after `sumsq` in each
+//! node record. Version 2 files (identical layout minus the `sum2` run)
+//! are still read — [`read_tree`] leaves `sum2` empty and
+//! [`MetricTree::attach_arena`] recomputes it bit-exactly from the
+//! arena. Version 2 stores leaf point lists as `(row_start, count)`
+//! ranges into the tree-order arena plus one `inv` array (arena row →
+//! original id), instead of v1's per-leaf id vectors — the on-disk
+//! mirror of the in-memory [`super::Layout`]. `perm` is reconstructed
+//! from `inv` on load. The cached sufficient statistics are stored
+//! verbatim, so a deserialized tree answers queries identically
+//! (bit-for-bit) without touching the dataset — **after** the caller
+//! re-attaches the permuted arena with [`MetricTree::attach_arena`]
+//! (the snapshot persists the permutation, not the data; leaf scans
+//! need the rows).
 
 use super::{Layout, MetricTree, Node};
 use crate::ids::{self, usize_from_u32};
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 
-const MAGIC: &[u8; 8] = b"AHTREE02";
+const MAGIC: &[u8; 8] = b"AHTREE03";
+const MAGIC_V2: &[u8; 8] = b"AHTREE02";
 
 /// Checked length → u32 for the on-disk header fields: a tree too big
 /// for the format is a loud error, never a truncated snapshot.
@@ -35,9 +42,20 @@ fn len_u32(n: usize, what: &str) -> Result<u32> {
     ids::u32_from_usize(n, what).map_err(|e| anyhow!(e))
 }
 
-/// Serialize into any writer.
+/// Serialize into any writer (current format, `AHTREE03`).
 pub fn write_tree(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
-    w.write_all(MAGIC)?;
+    write_tree_impl(tree, w, true)
+}
+
+/// Serialize in the legacy `AHTREE02` layout (no per-dimension second
+/// moments). Kept for backward/forward-compat tests and for feeding
+/// older readers; new snapshots should use [`write_tree`].
+pub fn write_tree_v2(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
+    write_tree_impl(tree, w, false)
+}
+
+fn write_tree_impl(tree: &MetricTree, w: &mut impl Write, with_sum2: bool) -> Result<()> {
+    w.write_all(if with_sum2 { MAGIC } else { MAGIC_V2 })?;
     w.write_all(&len_u32(tree.rmin, "rmin")?.to_le_bytes())?;
     w.write_all(&tree.build_dists.to_le_bytes())?;
     w.write_all(&tree.root.to_le_bytes())?;
@@ -54,6 +72,19 @@ pub fn write_tree(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
             w.write_all(&v.to_le_bytes())?;
         }
         w.write_all(&node.sumsq.to_le_bytes())?;
+        if with_sum2 {
+            if node.sum2.len() != node.pivot.len() {
+                bail!(
+                    "node has {} sum2 entries for {} dims — legacy tree never re-attached? \
+                     (attach_arena recomputes the stats, or use write_tree_v2)",
+                    node.sum2.len(),
+                    node.pivot.len()
+                );
+            }
+            for &v in &node.sum2 {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
         match node.children {
             Some((a, b)) => {
                 w.write_all(&[1u8])?;
@@ -79,9 +110,11 @@ pub fn write_tree(tree: &MetricTree, w: &mut impl Write) -> Result<()> {
 pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not an AHTREE02 file");
-    }
+    let has_sum2 = match &magic {
+        m if m == MAGIC => true,
+        m if m == MAGIC_V2 => false,
+        _ => bail!("not an AHTREE03 (or legacy AHTREE02) file"),
+    };
     let rmin = usize_from_u32(read_u32(r)?);
     let build_dists = read_u64(r)?;
     let root = read_u32(r)?;
@@ -107,6 +140,25 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
             *v = read_f64(r)?;
         }
         let sumsq = read_f64(r)?;
+        let sum2 = if has_sum2 {
+            // Corrupt stat trailers must be refused here, not surface as
+            // silently wrong pruning bounds: every entry finite, and the
+            // trace consistent with the scalar second moment.
+            let mut sum2 = vec![0f64; dim];
+            for (i, v) in sum2.iter_mut().enumerate() {
+                *v = read_f64(r)?;
+                if !v.is_finite() {
+                    bail!("non-finite sum2[{i}] = {v} in node stat trailer");
+                }
+            }
+            let trace: f64 = sum2.iter().sum();
+            if (trace - sumsq).abs() > 1e-6 * (1.0 + sumsq.abs()) {
+                bail!("corrupt stat trailer: sum2 trace {trace} disagrees with sumsq {sumsq}");
+            }
+            sum2
+        } else {
+            Vec::new()
+        };
         let mut flag = [0u8];
         r.read_exact(&mut flag)?;
         let children = match flag[0] {
@@ -122,6 +174,7 @@ pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
             count,
             sum,
             sumsq,
+            sum2,
             children,
             points: Vec::new(),
             row_start,
@@ -308,6 +361,7 @@ mod tests {
             assert_eq!(a.count, b.count);
             assert_eq!(a.sum, b.sum);
             assert_eq!(a.sumsq, b.sumsq);
+            assert_eq!(a.sum2, b.sum2);
             assert_eq!(a.children, b.children);
             assert_eq!(a.row_start, b.row_start);
         }
@@ -397,6 +451,73 @@ mod tests {
             write_tree(&t, &mut buf2).unwrap();
             assert!(read_tree(&mut buf2.as_slice()).is_err());
         }
+    }
+
+    #[test]
+    fn legacy_v2_loads_and_recomputes_stats_bit_exactly() {
+        let space = space(200, 9);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 12, ..Default::default() });
+        let mut buf = Vec::new();
+        write_tree_v2(&tree, &mut buf).unwrap();
+        assert_eq!(&buf[..8], b"AHTREE02");
+        let mut back = read_tree(&mut buf.as_slice()).unwrap();
+        assert!(
+            back.nodes.iter().all(|n| n.sum2.is_empty()),
+            "v2 snapshots carry no per-dim second moments"
+        );
+        // attach_arena recomputes sum2 in the same accumulation order the
+        // builder used, so the bits must match the original tree exactly.
+        back.attach_arena(&space);
+        for (a, b) in tree.nodes.iter().zip(&back.nodes) {
+            assert_eq!(a.sum2, b.sum2);
+        }
+        back.validate(&space).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated_stat_trailer() {
+        let space = space(60, 10);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
+        let mut buf = Vec::new();
+        write_tree(&tree, &mut buf).unwrap();
+        // Header is 28 bytes; the first node's sum2 run starts at
+        // 28 + 4 + 3·4 + 8 + 8 + 4 + 3·8 + 8 = 96 for this 3-dim space.
+        // Cut mid-trailer and at a few other places: every truncation is
+        // an error, never a panic.
+        for cut in [96 + 4, buf.len() / 2, buf.len() - 1] {
+            assert!(read_tree(&mut &buf[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_stat_trailer() {
+        let space = space(90, 11);
+        let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 10, ..Default::default() });
+
+        // Zeroed sum2 (trace no longer matches sumsq) must be refused.
+        let mut t = {
+            let mut buf = Vec::new();
+            write_tree(&tree, &mut buf).unwrap();
+            read_tree(&mut buf.as_slice()).unwrap()
+        };
+        let root = t.root as usize;
+        for v in &mut t.nodes[root].sum2 {
+            *v = 0.0;
+        }
+        let mut buf2 = Vec::new();
+        write_tree(&t, &mut buf2).unwrap();
+        assert!(read_tree(&mut buf2.as_slice()).is_err());
+
+        // Non-finite entries must be refused too.
+        let mut t = {
+            let mut buf = Vec::new();
+            write_tree(&tree, &mut buf).unwrap();
+            read_tree(&mut buf.as_slice()).unwrap()
+        };
+        t.nodes[root].sum2[0] = f64::NAN;
+        let mut buf3 = Vec::new();
+        write_tree(&t, &mut buf3).unwrap();
+        assert!(read_tree(&mut buf3.as_slice()).is_err());
     }
 
     #[test]

@@ -12,9 +12,10 @@ use anchors_hierarchy::coordinator::{
     Coordinator, JobSpec, JobState, ShardedCoordinator, SubmitError,
 };
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::algorithms::kde::Kernel;
 use anchors_hierarchy::engine::{
-    AllPairsQuery, AnomalyQuery, InitKind, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
-    QueryResult,
+    AllPairsQuery, AnomalyQuery, BallStatsQuery, InitKind, KdeQuery, KernelRegressionQuery,
+    KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, QueryResult,
 };
 use anchors_hierarchy::prop_assert;
 use anchors_hierarchy::proptest::check;
@@ -199,6 +200,95 @@ fn prop_shard_count_is_a_pure_throughput_knob() {
                 prop_assert!(
                     a.0 == b.0,
                     "job {i}: dists {} at 1 shard vs {} at {n_shards}",
+                    a.0,
+                    b.0
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The same bar for the cached-statistics queries: a mixed KDE /
+/// kernel-regression / ball-stats stream over multiple datasets
+/// produces identical results (estimates, error bounds, moments — f64
+/// `==`, so bit-equal) and identical per-job distance counts at shard
+/// counts 1, 2 and 4. Query centers are sized per dataset via
+/// [`DatasetKind::dims`] so every job is well-formed.
+#[test]
+fn prop_stats_stream_identical_across_shard_counts() {
+    check("sharded: kde/kreg/ballstats identical at 1/2/4 shards", 4, |rng| {
+        let kinds = [DatasetKind::Squiggles, DatasetKind::Voronoi, DatasetKind::Cell];
+        let n_jobs = 6 + rng.below(6);
+        let specs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| {
+                let kind = kinds[rng.below(kinds.len())].clone();
+                let dim = kind.dims();
+                let center: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 2.0).collect();
+                let use_tree = rng.bool(0.8);
+                let kernel =
+                    if rng.bool(0.5) { Kernel::Gaussian } else { Kernel::Epanechnikov };
+                let query = match rng.below(3) {
+                    0 => Query::Kde(KdeQuery {
+                        center,
+                        kernel,
+                        bandwidth: rng.uniform(0.5, 4.0),
+                        eps_abs: 0.0,
+                        eps_rel: rng.uniform(0.0, 0.05),
+                        use_tree,
+                    }),
+                    1 => Query::KernelRegression(KernelRegressionQuery {
+                        center,
+                        target_dim: rng.below(dim),
+                        kernel,
+                        bandwidth: rng.uniform(0.5, 4.0),
+                        eps_abs: rng.uniform(0.0, 0.5),
+                        eps_rel: 0.0,
+                        use_tree,
+                    }),
+                    _ => Query::BallStats(BallStatsQuery {
+                        center,
+                        radius: rng.uniform(0.5, 5.0),
+                        use_tree,
+                    }),
+                };
+                JobSpec {
+                    // Quantized scale/rmin, like the generic shard test:
+                    // the stream must share (dataset, rmin) pairs so the
+                    // one-time build lands on the same job at every
+                    // shard count.
+                    dataset: DatasetSpec { kind, scale: [0.002, 0.003][i % 2], seed: 1 },
+                    query,
+                    rmin: [12, 24][(i / 2) % 2],
+                }
+            })
+            .collect();
+        let run = |n_shards: usize| -> Result<Vec<(u64, QueryResult)>, String> {
+            let coord = ShardedCoordinator::new(n_shards, 1, 64);
+            let ids: Vec<_> = specs
+                .iter()
+                .map(|s| coord.submit(s.clone()))
+                .collect::<Result<_, _>>()
+                .map_err(|e| format!("submit failed below capacity: {e:?}"))?;
+            let outcomes = ids
+                .iter()
+                .map(|id| match coord.wait(*id) {
+                    JobState::Done(r) => Ok((r.dists, r.output)),
+                    JobState::Failed(e) => Err(format!("job failed: {e}")),
+                    _ => unreachable!("wait returned non-terminal"),
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            coord.shutdown();
+            Ok(outcomes)
+        };
+        let base = run(1)?;
+        for n_shards in [2usize, 4] {
+            let got = run(n_shards)?;
+            for (i, (a, b)) in base.iter().zip(&got).enumerate() {
+                prop_assert!(a.1 == b.1, "stats job {i}: result diverged at {n_shards} shards");
+                prop_assert!(
+                    a.0 == b.0,
+                    "stats job {i}: dists {} at 1 shard vs {} at {n_shards}",
                     a.0,
                     b.0
                 );

@@ -7,9 +7,11 @@
 use anchors_hierarchy::coordinator::server::{Client, Server};
 use anchors_hierarchy::coordinator::{shard, ShardedCoordinator};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::algorithms::kde::Kernel;
 use anchors_hierarchy::engine::{
-    wire, AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, IndexBuilder, InitKind,
-    KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, XmeansQuery,
+    wire, AllPairsQuery, AnomalyQuery, BallQuery, BallStatsQuery, GaussianEmQuery, IndexBuilder,
+    InitKind, KdeQuery, KernelRegressionQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
+    QueryResult, XmeansQuery,
 };
 use anchors_hierarchy::json::{self, Value};
 use std::sync::Arc;
@@ -35,6 +37,24 @@ fn every_query() -> Vec<Query> {
         }),
         Query::Knn(KnnQuery { target: KnnTarget::Point(1), k: 3, use_tree: true }),
         Query::Mst(MstQuery { use_tree: true }),
+        Query::BallStats(BallStatsQuery { center: vec![0.5, -0.25], radius: 2.0, use_tree: true }),
+        Query::Kde(KdeQuery {
+            center: vec![0.0, 0.5],
+            kernel: Kernel::Gaussian,
+            bandwidth: 1.5,
+            eps_abs: 0.0,
+            eps_rel: 0.02,
+            use_tree: true,
+        }),
+        Query::KernelRegression(KernelRegressionQuery {
+            center: vec![0.25, 0.0],
+            target_dim: 1,
+            kernel: Kernel::Epanechnikov,
+            bandwidth: 2.0,
+            eps_abs: 0.5,
+            eps_rel: 0.0,
+            use_tree: true,
+        }),
     ]
 }
 
@@ -56,6 +76,34 @@ fn every_real_result_roundtrips_through_json_text() {
         .build();
     for q in every_query() {
         let result = index.run(&q);
+        // The stats queries promise finite, NaN-free bound fields — the
+        // wire format has no encoding for NaN, so this is load-bearing.
+        match &result {
+            QueryResult::Kde { sum, density, error_bound } => {
+                assert!(sum.is_finite() && density.is_finite() && error_bound.is_finite());
+            }
+            QueryResult::KernelRegression {
+                prediction,
+                weight_sum,
+                weighted_sum,
+                weight_error_bound,
+                value_error_bound,
+            } => {
+                assert!(
+                    prediction.is_finite()
+                        && weight_sum.is_finite()
+                        && weighted_sum.is_finite()
+                        && weight_error_bound.is_finite()
+                        && value_error_bound.is_finite(),
+                    "NaN/∞ leaked into a kreg result: {result:?}"
+                );
+            }
+            QueryResult::BallStats { variance, total_variance, .. } => {
+                assert!(total_variance.is_finite());
+                assert!(variance.iter().all(|v| v.is_finite()));
+            }
+            _ => {}
+        }
         let text = json::write(&wire::result_to_json(&result));
         let back = wire::result_from_json(&json::parse(&text).unwrap()).unwrap();
         assert_eq!(result, back, "result mangled by the wire for {q:?}: {text}");
@@ -123,6 +171,9 @@ fn server_rejects_malformed_queries_without_dropping_connection() {
         r#"{"cmd":"submit","dataset":"squiggles","op":"ball"}"#, // no center
         r#"{"cmd":"submit","dataset":"squiggles","op":"warp"}"#, // unknown op
         r#"{"cmd":"submit","dataset":"squiggles","op":"kmeans","init":"best"}"#,
+        r#"{"cmd":"submit","dataset":"squiggles","op":"kde"}"#, // no center
+        r#"{"cmd":"submit","dataset":"squiggles","op":"kde","center":[0,0],"kernel":"box"}"#,
+        r#"{"cmd":"submit","dataset":"squiggles","op":"ballstats"}"#, // no center
     ] {
         let resp = client.call(&json::parse(bad).unwrap()).unwrap();
         assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "{bad} → {resp:?}");

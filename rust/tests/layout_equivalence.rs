@@ -18,15 +18,21 @@
 //!    a leaf scan: knn, ball, anomaly, allpairs, kmeans, EM.
 //! 3. **Snapshot level** — serialize → deserialize → re-attach arena
 //!    replays knn/kmeans/allpairs bit-identically against a fresh
-//!    build, dense + sparse, threads {1, 8}.
+//!    build, dense + sparse, threads {1, 8} — and the cached-statistics
+//!    queries (KDE / kernel regression / ball moments) replay
+//!    bit-identically through both the current `AHTREE03` format and a
+//!    legacy `AHTREE02` snapshot whose `sum2` is recomputed at
+//!    `attach_arena` time.
 //!
-//! (MST is deliberately absent from level 2: its Borůvka rounds seed
-//! each component's pruning bound from the scan-order-dependent running
-//! best, so per-round distance *counts* legitimately depend on point
-//! order — the layout path itself preserves the original order, which
-//! the cross-thread and naive-vs-tree tests already pin down.)
+//! (MST joins level 2 at the *edge set* level only: its Borůvka rounds
+//! seed each component's pruning bound from the scan-order-dependent
+//! running best, so per-round distance *counts* legitimately depend on
+//! point order and are pinned per path — each path must reproduce its
+//! own count exactly on a re-run — while the canonical undirected edge
+//! set mapped through the layout must agree bit-for-bit.)
 
-use anchors_hierarchy::algorithms::{allpairs, anomaly, ballquery, gaussian, kmeans, knn};
+use anchors_hierarchy::algorithms::kde::{self, ErrorBudget, Kernel};
+use anchors_hierarchy::algorithms::{allpairs, anomaly, ballquery, gaussian, kmeans, knn, mst};
 use anchors_hierarchy::data::Data;
 use anchors_hierarchy::dataset::{gaussian_mixture, gen_mixture};
 use anchors_hierarchy::metrics::{block, dense_dot, Space};
@@ -317,6 +323,45 @@ fn gaussian_em_matches_pre_permutation_reference() {
     }
 }
 
+/// MST arena consistency: the canonical undirected edge set of the
+/// layout path equals the pre-permutation reference's mapped through the
+/// layout, with bit-identical weights — and each path's distance count
+/// reproduces exactly on a re-run (the counts themselves legitimately
+/// differ *between* paths; see the module doc).
+#[test]
+fn mst_edge_set_matches_pre_permutation_reference() {
+    fn canonical(edges: &[mst::Edge]) -> Vec<(u32, u32, u64)> {
+        let mut out: Vec<(u32, u32, u64)> = edges
+            .iter()
+            .map(|e| (e.a.min(e.b), e.a.max(e.b), e.dist.to_bits()))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let (space2, tree2) = reference_pair(&space, &tree);
+        let inv = &tree.layout.inv;
+
+        let before = space.dist_count();
+        let got = mst::tree_mst(&space, &tree);
+        let got_dists = space.dist_count() - before;
+        let reference = mst::tree_mst(&space2, &tree2);
+
+        let mapped: Vec<mst::Edge> = reference
+            .iter()
+            .map(|e| mst::Edge { a: inv[e.a as usize], b: inv[e.b as usize], dist: e.dist })
+            .collect();
+        assert_eq!(canonical(&got), canonical(&mapped), "{label}: MST edge set");
+
+        // Each path pins its own distance count exactly.
+        let before = space.dist_count();
+        let again = mst::tree_mst(&space, &tree);
+        assert_eq!(canonical(&got), canonical(&again), "{label}: MST re-run edges");
+        assert_eq!(space.dist_count() - before, got_dists, "{label}: MST re-run count");
+    }
+}
+
 // ---------------------------------------------------------------------
 // Level 3: snapshot roundtrip replays queries bit-identically.
 // ---------------------------------------------------------------------
@@ -379,6 +424,83 @@ fn snapshot_roundtrip_replays_queries_identically() {
             assert_eq!(a.pairs, b.pairs, "{label} {threads}t: allpairs pairs");
             assert_eq!(a.dists, b.dists, "{label} {threads}t: allpairs count");
         }
+    }
+}
+
+/// The cached-statistics queries replay bit-identically (results AND
+/// distance counts) through an `AHTREE03` roundtrip, and through a
+/// legacy `AHTREE02` snapshot whose `sum2` decoration is recomputed by
+/// `attach_arena` — the recompute is bit-exact, so the replays are too.
+#[test]
+fn snapshot_roundtrip_replays_stats_queries_identically() {
+    for (space, label) in [(dense_space(), "dense"), (sparse_space(), "sparse")] {
+        let tree = build(&space, 16);
+        let (center, _) = query_vec(space.dim(), 600);
+        let budget = ErrorBudget { eps_abs: 0.0, eps_rel: 0.02 };
+        let run = |t: &MetricTree| {
+            (
+                kde::tree_kde(&space, t, &center, Kernel::Gaussian, 8.0, budget),
+                kde::tree_kernel_regression(
+                    &space,
+                    t,
+                    &center,
+                    0,
+                    Kernel::Epanechnikov,
+                    12.0,
+                    budget,
+                ),
+                ballquery::tree_ball_moments(&space, t, &center, 10.0),
+            )
+        };
+        let want = run(&tree);
+
+        // Current format: sum2 persisted, bit-equal after the roundtrip.
+        let mut buf = Vec::new();
+        serialize::write_tree(&tree, &mut buf).unwrap();
+        assert_eq!(&buf[..8], b"AHTREE03", "{label}: snapshot magic");
+        let mut back = serialize::read_tree(&mut buf.as_slice()).unwrap();
+        back.attach_arena(&space);
+        back.validate(&space).unwrap();
+        for (i, (a, b)) in tree.nodes.iter().zip(&back.nodes).enumerate() {
+            assert_eq!(a.sum2, b.sum2, "{label}: node {i} sum2 after roundtrip");
+        }
+        assert_eq!(want, run(&back), "{label}: AHTREE03 replay");
+
+        // Legacy format: no sum2 on disk, recomputed at attach time.
+        let mut v2 = Vec::new();
+        serialize::write_tree_v2(&tree, &mut v2).unwrap();
+        assert_eq!(&v2[..8], b"AHTREE02", "{label}: legacy magic");
+        let mut legacy = serialize::read_tree(&mut v2.as_slice()).unwrap();
+        assert!(
+            legacy.nodes.iter().all(|n| n.sum2.is_empty()),
+            "{label}: legacy load must not invent sum2"
+        );
+        legacy.attach_arena(&space);
+        legacy.validate(&space).unwrap();
+        for (i, (a, b)) in tree.nodes.iter().zip(&legacy.nodes).enumerate() {
+            assert_eq!(a.sum2, b.sum2, "{label}: node {i} sum2 recompute");
+        }
+        assert_eq!(want, run(&legacy), "{label}: AHTREE02 replay");
+
+        // Damaged snapshots are rejected with errors, not panics:
+        // truncation anywhere, and a bit flip inside the first node's
+        // sum2 run (header is 28 bytes; the record leads with
+        // u32 dim, f32×dim pivot, f64 pivot_sq, f64 radius, u32 count,
+        // f64×dim sum, f64 sumsq before the sum2 trailer).
+        for cut in [buf.len() - 5, buf.len() / 3] {
+            assert!(
+                serialize::read_tree(&mut &buf[..cut]).is_err(),
+                "{label}: truncation at {cut} accepted"
+            );
+        }
+        let d = space.dim();
+        let sum2_at = 28 + 4 + 4 * d + 8 + 8 + 4 + 8 * d + 8;
+        let mut corrupt = buf.clone();
+        corrupt[sum2_at + 7] ^= 0x40; // exponent bit of sum2[0]
+        assert!(
+            serialize::read_tree(&mut corrupt.as_slice()).is_err(),
+            "{label}: corrupt stat trailer accepted"
+        );
     }
 }
 

@@ -10,7 +10,8 @@ use anchors_hierarchy::algorithms::{kmeans, xmeans};
 use anchors_hierarchy::data::Data;
 use anchors_hierarchy::dataset::{gaussian_mixture, gen_mixture, DatasetKind, DatasetSpec};
 use anchors_hierarchy::engine::{
-    BallQuery, IndexBuilder, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
+    BallQuery, BallStatsQuery, IndexBuilder, KdeQuery, KernelRegressionQuery, KmeansQuery,
+    KnnQuery, KnnTarget, MstQuery, Query,
 };
 use anchors_hierarchy::metrics::Space;
 use anchors_hierarchy::parallel::Parallelism;
@@ -48,6 +49,7 @@ fn assert_trees_identical(a: &MetricTree, b: &MetricTree, what: &str) {
             nb.sumsq.to_bits(),
             "{what}: node {i} cached sumsq"
         );
+        assert_eq!(na.sum2, nb.sum2, "{what}: node {i} cached sum2");
         assert_eq!(na.children, nb.children, "{what}: node {i} children");
         assert_eq!(na.row_start, nb.row_start, "{what}: node {i} row range");
     }
@@ -193,6 +195,14 @@ fn run_batch_identical_across_thread_counts() {
         Query::Ball(BallQuery { center: vec![0.0; 2], radius: 2.0, use_tree: true }),
         Query::Mst(MstQuery { use_tree: true }),
         Query::Kmeans(KmeansQuery { k: 7, iters: 2, use_tree: false, ..Default::default() }),
+        Query::Kde(KdeQuery { center: vec![0.5, -0.5], bandwidth: 1.5, ..Default::default() }),
+        Query::KernelRegression(KernelRegressionQuery {
+            center: vec![0.0; 2],
+            target_dim: 1,
+            bandwidth: 2.0,
+            ..Default::default()
+        }),
+        Query::BallStats(BallStatsQuery { center: vec![0.0; 2], radius: 2.0, use_tree: true }),
     ];
     let run = |threads: usize| {
         let index = IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.004))

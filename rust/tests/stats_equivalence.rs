@@ -1,0 +1,309 @@
+//! Cached-statistics oracle suite: the second-moment decorations
+//! (`Node::sum2`) and every query built on them — bounded-error KDE,
+//! bounded-error kernel regression, exact ball moments — are checked
+//! against naive O(n) oracles over (dense | sparse) × rmin {16, 64} ×
+//! threads {1, 8}:
+//!
+//! - the decoration itself is bit-identical across thread counts;
+//! - tree-pruned KDE / regression estimates land within the requested
+//!   budget of the naive oracle AND within their own reported bounds;
+//! - ball-moment counts equal brute force exactly (integer), moments
+//!   match to float-association tolerance, and entire results —
+//!   including exact distance counts — are bit-reproducible across
+//!   repeated runs and across thread counts.
+
+use anchors_hierarchy::algorithms::ballquery::{self, BallMoments};
+use anchors_hierarchy::algorithms::kde::{self, ErrorBudget, Kernel};
+use anchors_hierarchy::data::Data;
+use anchors_hierarchy::dataset::{gaussian_mixture, gen_mixture};
+use anchors_hierarchy::metrics::Space;
+use anchors_hierarchy::parallel::Parallelism;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::tree::MetricTree;
+
+const RMINS: [usize; 2] = [16, 64];
+const THREADS: [usize; 2] = [1, 8];
+
+fn spaces() -> Vec<(Space, &'static str)> {
+    vec![
+        (
+            Space::euclidean(Data::Dense(gaussian_mixture(1500, 12, 5, 20.0, 99))),
+            "dense",
+        ),
+        (Space::euclidean(Data::Sparse(gen_mixture(600, 100, 4, 99))), "sparse"),
+    ]
+}
+
+fn build(space: &Space, rmin: usize, threads: usize) -> MetricTree {
+    middle_out::build(
+        space,
+        &MiddleOutConfig {
+            rmin,
+            seed: 9,
+            parallelism: Parallelism::Fixed(threads),
+            ..Default::default()
+        },
+    )
+}
+
+/// Query points spanning the pruning regimes: dataset centroid (dense
+/// neighborhood), a mild off-center shift, and a point outside the root
+/// ball (everything prunes for compact kernels).
+fn query_centers(space: &Space, tree: &MetricTree) -> Vec<Vec<f32>> {
+    let all: Vec<u32> = (0..space.n() as u32).collect();
+    let centroid = space.centroid(&all);
+    let r = tree.node(tree.root).radius as f32;
+    let mut shifted = centroid.clone();
+    for v in shifted.iter_mut() {
+        *v += 0.15 * r;
+    }
+    let mut outside = centroid.clone();
+    outside[0] += 1.5 * r;
+    vec![centroid, shifted, outside]
+}
+
+/// Bandwidths derived from the data scale (root radius), so the same
+/// code exercises dense low-dim and sparse high-dim geometry.
+fn bandwidths(tree: &MetricTree) -> [f64; 2] {
+    let r = tree.node(tree.root).radius.max(1e-6);
+    [r / 4.0, r]
+}
+
+const BUDGETS: [ErrorBudget; 4] = [
+    ErrorBudget { eps_abs: 0.0, eps_rel: 0.0 },
+    ErrorBudget { eps_abs: 0.5, eps_rel: 0.0 },
+    ErrorBudget { eps_abs: 0.0, eps_rel: 0.02 },
+    ErrorBudget { eps_abs: 2.0, eps_rel: 0.05 },
+];
+
+/// The decoration itself: per-node `sum2` is present, dimensioned, and
+/// bit-identical across thread counts at every rmin, on dense and
+/// sparse data (the tree-level determinism contract extends to the new
+/// cached statistic).
+#[test]
+fn sum2_decoration_bit_identical_across_threads_and_rmin() {
+    for (space, label) in spaces() {
+        for &rmin in &RMINS {
+            let reference = build(&space, rmin, THREADS[0]);
+            reference.validate(&space).unwrap();
+            for &threads in &THREADS[1..] {
+                let tree = build(&space, rmin, threads);
+                assert_eq!(
+                    reference.nodes.len(),
+                    tree.nodes.len(),
+                    "{label} rmin {rmin}: node count, {threads} threads"
+                );
+                for (i, (na, nb)) in reference.nodes.iter().zip(&tree.nodes).enumerate() {
+                    assert_eq!(
+                        na.sum2.len(),
+                        space.dim(),
+                        "{label} rmin {rmin}: node {i} sum2 dimension"
+                    );
+                    assert_eq!(
+                        na.sum2, nb.sum2,
+                        "{label} rmin {rmin}: node {i} sum2, {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Tree-pruned KDE vs the naive oracle: for every (kernel, bandwidth,
+/// budget) configuration the estimate is within the requested budget of
+/// the exact sum, within its own reported error bound, and the bound
+/// itself respects the budget.
+#[test]
+fn tree_kde_within_budget_of_naive_oracle() {
+    for (space, label) in spaces() {
+        for &rmin in &RMINS {
+            let tree = build(&space, rmin, 1);
+            for center in query_centers(&space, &tree) {
+                for kernel in [Kernel::Gaussian, Kernel::Epanechnikov] {
+                    for h in bandwidths(&tree) {
+                        let exact = kde::naive_kde(&space, &center, kernel, h);
+                        for budget in BUDGETS {
+                            let fast = kde::tree_kde(&space, &tree, &center, kernel, h, budget);
+                            let allowed =
+                                budget.eps_abs + budget.eps_rel * exact.sum + 1e-9;
+                            let err = (fast.sum - exact.sum).abs();
+                            let what = format!(
+                                "{label} rmin {rmin} {kernel:?} h {h:.3} \
+                                 budget ({}, {})",
+                                budget.eps_abs, budget.eps_rel
+                            );
+                            assert!(
+                                err <= allowed,
+                                "{what}: |{} - {}| = {err} > {allowed}",
+                                fast.sum,
+                                exact.sum
+                            );
+                            assert!(
+                                err <= fast.error_bound + 1e-9 * (1.0 + exact.sum),
+                                "{what}: error {err} exceeds reported bound {}",
+                                fast.error_bound
+                            );
+                            assert!(
+                                fast.error_bound <= allowed,
+                                "{what}: reported bound {} exceeds budget {allowed}",
+                                fast.error_bound
+                            );
+                            assert!(fast.error_bound.is_finite() && fast.density.is_finite());
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Tree-pruned Nadaraya-Watson vs the naive oracle: the weight sum is
+/// within the reported weight bound, and the prediction is within the
+/// reported value bound whenever that bound is informative (it
+/// saturates at `f64::MAX` when the weight interval touches zero).
+#[test]
+fn tree_kernel_regression_within_reported_bounds_of_naive_oracle() {
+    for (space, label) in spaces() {
+        for &rmin in &RMINS {
+            let tree = build(&space, rmin, 1);
+            let targets = [0usize, space.dim() - 1];
+            for center in query_centers(&space, &tree) {
+                for kernel in [Kernel::Gaussian, Kernel::Epanechnikov] {
+                    for h in bandwidths(&tree) {
+                        for &t in &targets {
+                            let exact =
+                                kde::naive_kernel_regression(&space, &center, t, kernel, h);
+                            for budget in BUDGETS {
+                                let fast = kde::tree_kernel_regression(
+                                    &space, &tree, &center, t, kernel, h, budget,
+                                );
+                                let what = format!(
+                                    "{label} rmin {rmin} {kernel:?} h {h:.3} target {t} \
+                                     budget ({}, {})",
+                                    budget.eps_abs, budget.eps_rel
+                                );
+                                let werr = (fast.weight_sum - exact.weight_sum).abs();
+                                assert!(
+                                    werr <= fast.weight_error_bound
+                                        + 1e-9 * (1.0 + exact.weight_sum),
+                                    "{what}: weight error {werr} exceeds bound {}",
+                                    fast.weight_error_bound
+                                );
+                                assert!(
+                                    !fast.prediction.is_nan()
+                                        && !fast.value_error_bound.is_nan(),
+                                    "{what}: NaN leaked into the result"
+                                );
+                                if fast.value_error_bound < f64::MAX {
+                                    let verr = (fast.prediction - exact.prediction).abs();
+                                    assert!(
+                                        verr <= fast.value_error_bound
+                                            + 1e-9 * (1.0 + exact.prediction.abs()),
+                                        "{what}: value error {verr} exceeds bound {}",
+                                        fast.value_error_bound
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Ball moments vs brute force: the count is *exactly* equal (it is an
+/// integer — no float slack allowed), the mean and per-dimension
+/// variance agree to float-association tolerance (the tree consumes
+/// cached whole-node sums, so it sums in a different order than the
+/// naive dataset-order scan — bit equality of the moments is
+/// structurally impossible, and the count is the bit-exact part of the
+/// contract), and the total variance equals the trace of the per-dim
+/// variances.
+#[test]
+fn ball_moments_match_brute_force() {
+    for (space, label) in spaces() {
+        for &rmin in &RMINS {
+            let tree = build(&space, rmin, 1);
+            let root_r = tree.node(tree.root).radius;
+            for center in query_centers(&space, &tree) {
+                for frac in [0.1, 0.35, 1.1] {
+                    let radius = root_r * frac;
+                    let exact = ballquery::naive_ball_moments(&space, &center, radius);
+                    let fast = ballquery::tree_ball_moments(&space, &tree, &center, radius);
+                    let what = format!("{label} rmin {rmin} radius {radius:.3}");
+                    assert_eq!(fast.count, exact.count, "{what}: count");
+                    for j in 0..space.dim() {
+                        let m = f64::from(exact.mean[j]);
+                        assert!(
+                            (f64::from(fast.mean[j]) - m).abs() <= 1e-4 * (1.0 + m.abs()),
+                            "{what}: mean[{j}] {} vs {}",
+                            fast.mean[j],
+                            exact.mean[j]
+                        );
+                        assert!(
+                            (fast.variance[j] - exact.variance[j]).abs()
+                                <= 1e-3 * (1.0 + exact.variance[j]),
+                            "{what}: variance[{j}] {} vs {}",
+                            fast.variance[j],
+                            exact.variance[j]
+                        );
+                    }
+                    let trace: f64 = fast.variance.iter().sum();
+                    assert!(
+                        (fast.total_variance - trace).abs()
+                            <= 1e-6 * (1.0 + trace.abs()),
+                        "{what}: total variance {} vs trace {trace}",
+                        fast.total_variance
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Reproducibility: the full result structs — estimates, bounds, node
+/// telemetry, AND exact distance counts — are `==` across repeated runs
+/// and across trees built at different thread counts. Distance
+/// accounting is part of the contract, not a diagnostic.
+#[test]
+fn stats_queries_bit_reproducible_across_runs_and_thread_counts() {
+    for (space, label) in spaces() {
+        for &rmin in &RMINS {
+            let trees: Vec<MetricTree> =
+                THREADS.iter().map(|&t| build(&space, rmin, t)).collect();
+            let center = &query_centers(&space, &trees[0])[1];
+            let h = bandwidths(&trees[0])[0];
+            let budget = ErrorBudget { eps_abs: 0.0, eps_rel: 0.02 };
+            let radius = trees[0].node(trees[0].root).radius * 0.35;
+
+            let run = |tree: &MetricTree| {
+                let kde_r = kde::tree_kde(&space, tree, center, Kernel::Gaussian, h, budget);
+                let kreg_r = kde::tree_kernel_regression(
+                    &space,
+                    tree,
+                    center,
+                    0,
+                    Kernel::Epanechnikov,
+                    h,
+                    budget,
+                );
+                let ball_r: BallMoments =
+                    ballquery::tree_ball_moments(&space, tree, center, radius);
+                (kde_r, kreg_r, ball_r)
+            };
+
+            let reference = run(&trees[0]);
+            let again = run(&trees[0]);
+            assert_eq!(reference, again, "{label} rmin {rmin}: repeated run drifted");
+            for (tree, &threads) in trees.iter().zip(&THREADS).skip(1) {
+                let other = run(tree);
+                assert_eq!(
+                    reference, other,
+                    "{label} rmin {rmin}: results (incl. dist counts) differ on the \
+                     {threads}-thread tree"
+                );
+            }
+        }
+    }
+}
