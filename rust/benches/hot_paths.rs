@@ -7,11 +7,11 @@
 //! baseline.
 
 use anchors_hierarchy::algorithms::kde::{self, ErrorBudget, Kernel};
-use anchors_hierarchy::algorithms::{kmeans, knn};
+use anchors_hierarchy::algorithms::{ballquery, kmeans, knn};
 use anchors_hierarchy::bench::harness::Bencher;
 use anchors_hierarchy::data::{Data, DenseMatrix};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
-use anchors_hierarchy::metrics::{block, dense_dot, dense_sqdist, Space};
+use anchors_hierarchy::metrics::{block, dense_dot, dense_dot_f32, dense_sqdist, Space};
 use anchors_hierarchy::parallel::{Executor, Parallelism};
 use anchors_hierarchy::rng::Rng;
 use anchors_hierarchy::runtime::BatchDistanceEngine;
@@ -102,6 +102,61 @@ fn main() {
         out.iter().sum::<f64>()
     });
     println!("{}", cent_blocked.report());
+
+    // --- lane structure: memcpy roof and GB/s ---------------------------
+    // The laned kernels claim to be bandwidth-bound. One full 50k×64
+    // scan reads rows·d·4 bytes of row data; the roof is an in-bench
+    // memcpy of the exact same slab (same bytes, zero arithmetic), so
+    // each kernel's GB/s reads directly as a fraction of what this
+    // machine's memory system gives this loop shape. The 1-accumulator
+    // fold is the pre-lane kernel shape — the laned-vs-scalar delta is
+    // the point of the restructure (4 independent f64 chains instead of
+    // one serial dependence; 8 f32 chains for the filter kernel).
+    fn sqdist_1acc(a: &[f32], b: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for (&x, &y) in a.iter().zip(b) {
+            let d = x as f64 - y as f64;
+            acc += d * d;
+        }
+        acc
+    }
+    let m64 = match &big.data {
+        Data::Dense(m) => m,
+        _ => unreachable!(),
+    };
+    let slab_bytes = (ROWS * DIMS * 4) as f64;
+    let gbs = |mean: f64| slab_bytes / mean / 1e9;
+    let mut roof_buf = vec![0f32; ROWS * DIMS];
+    let (roof, _) = kb.run("lanes/memcpy-roof-50kx64", |_| {
+        let (src, _) = m64.rows_slab(0..ROWS);
+        roof_buf.copy_from_slice(std::hint::black_box(src));
+        roof_buf[ROWS]
+    });
+    println!("{}  [{:.2} GB/s roof]", roof.report(), gbs(roof.mean));
+    let (lane_1acc, _) = kb.run("lanes/sqdist-1acc-50kx64", |_| {
+        let mut acc = 0.0f64;
+        for p in 0..ROWS {
+            acc += sqdist_1acc(std::hint::black_box(m64.row(p)), &q);
+        }
+        acc
+    });
+    println!("{}  [{:.2} GB/s]", lane_1acc.report(), gbs(lane_1acc.mean));
+    let (lane_4, _) = kb.run("lanes/sqdist-4lane-50kx64", |_| {
+        let mut acc = 0.0f64;
+        for p in 0..ROWS {
+            acc += dense_sqdist(std::hint::black_box(m64.row(p)), &q);
+        }
+        acc
+    });
+    println!("{}  [{:.2} GB/s]", lane_4.report(), gbs(lane_4.mean));
+    let (lane_f32, _) = kb.run("lanes/dot-f32-8lane-50kx64", |_| {
+        let mut acc = 0.0f32;
+        for p in 0..ROWS {
+            acc += dense_dot_f32(std::hint::black_box(m64.row(p)), &q);
+        }
+        acc
+    });
+    println!("{}  [{:.2} GB/s]", lane_f32.report(), gbs(lane_f32.mean));
 
     // --- gather vs contiguous leaf scans (tree-order layout) ------------
     // Build real trees and sweep every leaf in the two leaf-scan shapes:
@@ -202,6 +257,41 @@ fn main() {
         ));
     }
 
+    // --- f32 filter tier: full-scan ball stats, tier on vs off ----------
+    // Same answers bit-for-bit (tests/kernel_lanes.rs proves it); this
+    // measures what the tier buys. A pruned row costs one 8-wide f32
+    // dot against a 4-byte/dim slab instead of an f64 kernel eval —
+    // half the bytes, twice the lanes. Radius at the ~1/3 distance
+    // quantile so both sides of the decision boundary carry real work.
+    let mut tier_results: Vec<(String, f64, f64)> = Vec::new();
+    for (label, space) in [("50kx64", &big), ("5kx2000", &hi_dim)] {
+        let mut tier_on = Space::euclidean(space.data.clone());
+        tier_on.set_f32_tier(true);
+        let tq: Vec<f32> = {
+            let mut rng = Rng::new(61);
+            (0..space.dim()).map(|_| rng.normal() as f32).collect()
+        };
+        let tq_sq = dense_dot(&tq, &tq);
+        let mut ds: Vec<f64> = (0..space.n())
+            .map(|p| space.dist_to_vec_uncounted(p, &tq, tq_sq))
+            .collect();
+        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let radius = ds[space.n() / 3];
+        let (scan_off, _) = kb.run(&format!("f32tier/ballstats-off-{label}"), |_| {
+            ballquery::naive_ball_stats(space, &tq, radius).count
+        });
+        println!("{}", scan_off.report());
+        let (scan_on, _) = kb.run(&format!("f32tier/ballstats-on-{label}"), |_| {
+            ballquery::naive_ball_stats(&tier_on, &tq, radius).count
+        });
+        println!("{}", scan_on.report());
+        tier_results.push((
+            format!("f32_tier_ballstats_{label}"),
+            scan_off.mean,
+            scan_on.mean,
+        ));
+    }
+
     // --- pruned KDE vs the naive scan (cached sufficient statistics) ----
     // The PR 7 payoff measurement: tree_kde consumes the per-node count
     // to replace whole-subtree scans with one pivot distance whenever the
@@ -290,9 +380,12 @@ fn main() {
         ("leaf_to_vec".into(), vec_pointwise.mean, vec_blocked.mean),
         ("leaf_to_centers_k16".into(), cent_pointwise.mean, cent_blocked.mean),
         ("pool_fanout_x64_4t".into(), pool_spawn.mean, pool_persistent.mean),
+        ("kernel_sqdist_4lane_50kx64".into(), lane_1acc.mean, lane_4.mean),
+        ("kernel_dot_f32_8lane_vs_memcpy_roof".into(), lane_f32.mean, roof.mean),
     ];
     rows.extend(layout_results);
     rows.extend(kde_results);
+    rows.extend(tier_results);
     for (name, before, after) in &rows {
         let _ = writeln!(
             json,
@@ -302,7 +395,7 @@ fn main() {
             before / after
         );
     }
-    let _ = writeln!(json, "  \"note\": \"before = pointwise scan / spawn-per-pass / gather leaf scan / naive KDE; after = blocked kernel / persistent pool / contiguous arena scan / tree-pruned KDE at eps_rel 0.01 (leaf_scan_* and kde_* rows: 50k×64 and 5k×2000 trees, rmin 64)\"");
+    let _ = writeln!(json, "  \"note\": \"before = pointwise scan / spawn-per-pass / gather leaf scan / naive KDE / 1-acc kernel / tier-off scan; after = blocked kernel / persistent pool / contiguous arena scan / tree-pruned KDE at eps_rel 0.01 / 4-lane kernel / f32-filter-tier scan (leaf_scan_*, kde_*, f32_tier_* rows: 50k×64 and 5k×2000; kernel_dot_f32 row compares against the in-bench memcpy roof, so 'speedup' there = fraction of roof as before/after)\"");
     let _ = writeln!(json, "}}");
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_paths.json");
     std::fs::write(path, &json).expect("write BENCH_hot_paths.json");

@@ -64,7 +64,13 @@ pub fn tree_is_anomaly_vec(
 ) -> bool {
     let mut found = 0u64;
     let mut possible = tree.root_node().count as u64;
+    // The f32 filter (if the tier is on) accelerates only the blocked
+    // leaf branch below, where no early exit can fire: a pruned row
+    // provably has d > radius, exactly the rows whose `possible -= 1`
+    // outcome is already known — so verdicts and counts match tier-off.
+    let filter = block::F32Filter::new(tree.arena(), qrow);
     let mut dists: Vec<f64> = Vec::new();
+    let mut frows: Vec<u32> = Vec::new();
     // The root's pivot distance is computed here and *counted* by
     // `recurse` on entry — every visited node pays for its pivot
     // distance exactly once (the same evaluation also serves as the
@@ -81,7 +87,9 @@ pub fn tree_is_anomaly_vec(
         params,
         &mut found,
         &mut possible,
+        &filter,
         &mut dists,
+        &mut frows,
     );
     match verdict {
         Some(v) => v,
@@ -109,7 +117,9 @@ fn recurse(
     params: &AnomalyParams,
     found: &mut u64,
     possible: &mut u64,
+    filter: &Option<block::F32Filter>,
     dists: &mut Vec<f64>,
+    frows: &mut Vec<u32>,
 ) -> Option<bool> {
     let node = tree.node(node_id);
     space.count_bulk(1);
@@ -145,12 +155,32 @@ fn recurse(
                 // visit every point — the contiguous kernel over the
                 // leaf's arena slab is safe and its bulk accounting
                 // matches the pointwise count exactly.
-                block::dists_contig_to_vec(arena, rows, qrow, q_sq, dists);
-                for &d in dists.iter() {
-                    if d <= params.radius {
-                        *found += 1;
-                    } else {
-                        *possible -= 1;
+                match filter {
+                    Some(f) => {
+                        block::dists_contig_to_vec_f32(
+                            arena, rows, qrow, q_sq, f, params.radius, frows, dists,
+                        );
+                        // Every pruned row provably has d > radius: the
+                        // tier-off scan would take its `possible -= 1`
+                        // branch, so settle them in one subtraction.
+                        *possible -= leaf - frows.len() as u64;
+                        for &d in dists.iter() {
+                            if d <= params.radius {
+                                *found += 1;
+                            } else {
+                                *possible -= 1;
+                            }
+                        }
+                    }
+                    None => {
+                        block::dists_contig_to_vec(arena, rows, qrow, q_sq, dists);
+                        for &d in dists.iter() {
+                            if d <= params.radius {
+                                *found += 1;
+                            } else {
+                                *possible -= 1;
+                            }
+                        }
                     }
                 }
                 return None;
@@ -185,12 +215,14 @@ fn recurse(
             let ((first, d_first), (second, d_second)) =
                 if da <= db { ((a, da), (b, db)) } else { ((b, db), (a, da)) };
             if let Some(v) = recurse(
-                space, tree, first, d_first, qrow, q_sq, params, found, possible, dists,
+                space, tree, first, d_first, qrow, q_sq, params, found, possible, filter, dists,
+                frows,
             ) {
                 return Some(v);
             }
             recurse(
-                space, tree, second, d_second, qrow, q_sq, params, found, possible, dists,
+                space, tree, second, d_second, qrow, q_sq, params, found, possible, filter,
+                dists, frows,
             )
         }
     }

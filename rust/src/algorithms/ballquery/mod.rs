@@ -45,6 +45,12 @@ struct Acc {
 }
 
 /// Naive baseline: scan all points (R counted distances).
+///
+/// With the f32 filter tier on, the threshold is the fixed query
+/// radius: rows pruned by the f32 pre-pass provably satisfy
+/// `d > radius`, which the tier-off membership test would also reject,
+/// and survivors carry the exact f64 distance — so the accumulated
+/// membership set, order and sums are bit-identical either way.
 pub fn naive_ball_stats(space: &Space, center: &[f32], radius: f64) -> BallStats {
     let before = space.dist_count();
     // pallas-lint: allow(uncounted-dist, query norm staging; the scan distances are counted by the blocked kernel)
@@ -57,17 +63,36 @@ pub fn naive_ball_stats(space: &Space, center: &[f32], radius: f64) -> BallStats
     };
     // Streamed through the blocked kernel in fixed chunks (O(chunk)
     // extra memory, identical distances and counts to the pointwise scan).
+    let filter = block::F32Filter::new(space, center);
     let mut dists: Vec<f64> = Vec::new();
+    let mut frows: Vec<u32> = Vec::new();
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
-        block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
-        for (off, &d) in dists.iter().enumerate() {
-            if d <= radius {
-                let p = lo + off;
-                acc.count += 1;
-                space.accumulate(p, &mut acc.sum);
-                acc.sumsq += space.data.sqnorm(p);
+        match &filter {
+            Some(f) => {
+                block::dists_contig_to_vec_f32(
+                    space, lo..hi, center, c_sq, f, radius, &mut frows, &mut dists,
+                );
+                for (&row, &d) in frows.iter().zip(&dists) {
+                    if d <= radius {
+                        let p = row as usize;
+                        acc.count += 1;
+                        space.accumulate(p, &mut acc.sum);
+                        acc.sumsq += space.data.sqnorm(p);
+                    }
+                }
+            }
+            None => {
+                block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
+                for (off, &d) in dists.iter().enumerate() {
+                    if d <= radius {
+                        let p = lo + off;
+                        acc.count += 1;
+                        space.accumulate(p, &mut acc.sum);
+                        acc.sumsq += space.data.sqnorm(p);
+                    }
+                }
             }
         }
         lo = hi;
@@ -92,8 +117,14 @@ pub fn tree_ball_stats(
         whole_nodes: 0,
     };
     // Leaf-scan scratch, reused across every boundary leaf of the query.
+    // The f32 filter (if the tier is on) is built on the arena the leaf
+    // scans read; see `naive_ball_stats` for the exactness argument.
+    let filter = block::F32Filter::new(tree.arena(), center);
     let mut dists: Vec<f64> = Vec::new();
-    recurse(space, tree, tree.root, center, c_sq, radius, &mut acc, &mut dists);
+    let mut frows: Vec<u32> = Vec::new();
+    recurse(
+        space, tree, tree.root, center, c_sq, radius, &mut acc, &filter, &mut dists, &mut frows,
+    );
     finish(acc, space.dist_count() - before)
 }
 
@@ -106,7 +137,9 @@ fn recurse(
     c_sq: f64,
     radius: f64,
     acc: &mut Acc,
+    filter: &Option<block::F32Filter>,
     dists: &mut Vec<f64>,
+    frows: &mut Vec<u32>,
 ) {
     let node = tree.node(id);
     space.count_bulk(1);
@@ -129,8 +162,8 @@ fn recurse(
     }
     match node.children {
         Some((a, b)) => {
-            recurse(space, tree, a, center, c_sq, radius, acc, dists);
-            recurse(space, tree, b, center, c_sq, radius, acc, dists);
+            recurse(space, tree, a, center, c_sq, radius, acc, filter, dists, frows);
+            recurse(space, tree, b, center, c_sq, radius, acc, filter, dists, frows);
         }
         None => {
             // Boundary leaf: contiguous kernel over the leaf's arena
@@ -141,12 +174,29 @@ fn recurse(
             // the gather path add for add).
             let arena = tree.arena();
             let rows = tree.node_rows(id);
-            block::dists_contig_to_vec(arena, rows.clone(), center, c_sq, dists);
-            for (r, &d) in rows.zip(dists.iter()) {
-                if d <= radius {
-                    acc.count += 1;
-                    arena.accumulate(r, &mut acc.sum);
-                    acc.sumsq += arena.data.sqnorm(r);
+            match filter {
+                Some(f) => {
+                    block::dists_contig_to_vec_f32(
+                        arena, rows, center, c_sq, f, radius, frows, dists,
+                    );
+                    for (&row, &d) in frows.iter().zip(dists.iter()) {
+                        if d <= radius {
+                            let r = row as usize;
+                            acc.count += 1;
+                            arena.accumulate(r, &mut acc.sum);
+                            acc.sumsq += arena.data.sqnorm(r);
+                        }
+                    }
+                }
+                None => {
+                    block::dists_contig_to_vec(arena, rows.clone(), center, c_sq, dists);
+                    for (r, &d) in rows.zip(dists.iter()) {
+                        if d <= radius {
+                            acc.count += 1;
+                            arena.accumulate(r, &mut acc.sum);
+                            acc.sumsq += arena.data.sqnorm(r);
+                        }
+                    }
                 }
             }
         }
@@ -190,18 +240,38 @@ pub fn naive_ball_moments(space: &Space, center: &[f32], radius: f64) -> BallMom
         sumsq: 0.0,
         whole_nodes: 0,
     };
+    let filter = block::F32Filter::new(space, center);
     let mut dists: Vec<f64> = Vec::new();
+    let mut frows: Vec<u32> = Vec::new();
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
-        block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
-        for (off, &d) in dists.iter().enumerate() {
-            if d <= radius {
-                let p = lo + off;
-                acc.count += 1;
-                space.accumulate(p, &mut acc.sum);
-                space.accumulate_sq(p, &mut acc.sum2);
-                acc.sumsq += space.data.sqnorm(p);
+        match &filter {
+            Some(f) => {
+                block::dists_contig_to_vec_f32(
+                    space, lo..hi, center, c_sq, f, radius, &mut frows, &mut dists,
+                );
+                for (&row, &d) in frows.iter().zip(&dists) {
+                    if d <= radius {
+                        let p = row as usize;
+                        acc.count += 1;
+                        space.accumulate(p, &mut acc.sum);
+                        space.accumulate_sq(p, &mut acc.sum2);
+                        acc.sumsq += space.data.sqnorm(p);
+                    }
+                }
+            }
+            None => {
+                block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
+                for (off, &d) in dists.iter().enumerate() {
+                    if d <= radius {
+                        let p = lo + off;
+                        acc.count += 1;
+                        space.accumulate(p, &mut acc.sum);
+                        space.accumulate_sq(p, &mut acc.sum2);
+                        acc.sumsq += space.data.sqnorm(p);
+                    }
+                }
             }
         }
         lo = hi;
@@ -228,8 +298,12 @@ pub fn tree_ball_moments(
         sumsq: 0.0,
         whole_nodes: 0,
     };
+    let filter = block::F32Filter::new(tree.arena(), center);
     let mut dists: Vec<f64> = Vec::new();
-    moments_recurse(space, tree, tree.root, center, c_sq, radius, &mut acc, &mut dists);
+    let mut frows: Vec<u32> = Vec::new();
+    moments_recurse(
+        space, tree, tree.root, center, c_sq, radius, &mut acc, &filter, &mut dists, &mut frows,
+    );
     finish_moments(acc, space.dist_count() - before)
 }
 
@@ -242,7 +316,9 @@ fn moments_recurse(
     c_sq: f64,
     radius: f64,
     acc: &mut MomentsAcc,
+    filter: &Option<block::F32Filter>,
     dists: &mut Vec<f64>,
+    frows: &mut Vec<u32>,
 ) {
     let node = tree.node(id);
     space.count_bulk(1);
@@ -266,19 +342,37 @@ fn moments_recurse(
     }
     match node.children {
         Some((a, b)) => {
-            moments_recurse(space, tree, a, center, c_sq, radius, acc, dists);
-            moments_recurse(space, tree, b, center, c_sq, radius, acc, dists);
+            moments_recurse(space, tree, a, center, c_sq, radius, acc, filter, dists, frows);
+            moments_recurse(space, tree, b, center, c_sq, radius, acc, filter, dists, frows);
         }
         None => {
             let arena = tree.arena();
             let rows = tree.node_rows(id);
-            block::dists_contig_to_vec(arena, rows.clone(), center, c_sq, dists);
-            for (r, &d) in rows.zip(dists.iter()) {
-                if d <= radius {
-                    acc.count += 1;
-                    arena.accumulate(r, &mut acc.sum);
-                    arena.accumulate_sq(r, &mut acc.sum2);
-                    acc.sumsq += arena.data.sqnorm(r);
+            match filter {
+                Some(f) => {
+                    block::dists_contig_to_vec_f32(
+                        arena, rows, center, c_sq, f, radius, frows, dists,
+                    );
+                    for (&row, &d) in frows.iter().zip(dists.iter()) {
+                        if d <= radius {
+                            let r = row as usize;
+                            acc.count += 1;
+                            arena.accumulate(r, &mut acc.sum);
+                            arena.accumulate_sq(r, &mut acc.sum2);
+                            acc.sumsq += arena.data.sqnorm(r);
+                        }
+                    }
+                }
+                None => {
+                    block::dists_contig_to_vec(arena, rows.clone(), center, c_sq, dists);
+                    for (r, &d) in rows.zip(dists.iter()) {
+                        if d <= radius {
+                            acc.count += 1;
+                            arena.accumulate(r, &mut acc.sum);
+                            arena.accumulate_sq(r, &mut acc.sum2);
+                            acc.sumsq += arena.data.sqnorm(r);
+                        }
+                    }
                 }
             }
         }

@@ -19,6 +19,13 @@ pub struct Neighbor {
 /// leaf-scan kernel, streamed in fixed chunks (O(chunk) extra memory).
 /// The skipped point splits the scan into two ranges, so its distance is
 /// neither computed nor counted — exactly the pointwise behavior.
+///
+/// With the f32 filter tier on, chunks scanned after the heap is full
+/// run the filtered kernel against the kth-best-so-far: pruned rows
+/// provably satisfy `d > worst` at chunk start, and `worst` only
+/// shrinks within a chunk, so the heap evolves through the identical
+/// state sequence either way — results are bit-identical, only the
+/// (f64, f32) evaluation split changes.
 pub fn naive_knn(space: &Space, qrow: &[f32], q_sq: f64, k: usize, skip: Option<u32>) -> Vec<Neighbor> {
     let mut heap: BinaryHeap<HeapItem> = BinaryHeap::new(); // max-heap by dist
     let n = space.n();
@@ -31,14 +38,31 @@ pub fn naive_knn(space: &Space, qrow: &[f32], q_sq: f64, k: usize, skip: Option<
         }
         None => [0..n, n..n],
     };
+    let filter = block::F32Filter::new(space, qrow);
     let mut dists: Vec<f64> = Vec::new();
+    let mut frows: Vec<u32> = Vec::new();
     for seg in segments {
         let mut lo = seg.start;
         while lo < seg.end {
             let hi = (lo + block::SCAN_CHUNK).min(seg.end);
-            block::dists_contig_to_vec(space, lo..hi, qrow, q_sq, &mut dists);
-            for (off, &d) in dists.iter().enumerate() {
-                push_bounded(&mut heap, k, (lo + off) as u32, d);
+            // Threshold at chunk start: the kth best so far, only once
+            // the heap is full (before that every row must be seen).
+            let thr = if heap.len() == k { heap.peek().map(|w| w.dist) } else { None };
+            match (&filter, thr) {
+                (Some(f), Some(thr)) => {
+                    block::dists_contig_to_vec_f32(
+                        space, lo..hi, qrow, q_sq, f, thr, &mut frows, &mut dists,
+                    );
+                    for (&row, &d) in frows.iter().zip(&dists) {
+                        push_bounded(&mut heap, k, row, d);
+                    }
+                }
+                _ => {
+                    block::dists_contig_to_vec(space, lo..hi, qrow, q_sq, &mut dists);
+                    for (off, &d) in dists.iter().enumerate() {
+                        push_bounded(&mut heap, k, (lo + off) as u32, d);
+                    }
+                }
             }
             lo = hi;
         }
@@ -69,8 +93,13 @@ pub fn tree_knn(
         .and_then(|p| tree.layout.perm.get(p as usize).copied())
         .filter(|&r| r != u32::MAX)
         .map(|r| r as usize);
+    // The filter is built on the arena (which inherits the tier flag and
+    // the cached max|x| from the original space) and applied per leaf —
+    // see `naive_knn` for why pruning keeps the heap bit-identical.
+    let filter = block::F32Filter::new(arena, qrow);
     // Scratch reused across leaf scans.
     let mut dists: Vec<f64> = Vec::new();
+    let mut frows: Vec<u32> = Vec::new();
     frontier.push(Reverse((OrdF64(node_lower_bound(space, tree, tree.root, qrow, q_sq)), tree.root)));
     while let Some(Reverse((OrdF64(lb), node_id))) = frontier.pop() {
         if result.len() == k {
@@ -92,10 +121,24 @@ pub fn tree_knn(
                     if seg.is_empty() {
                         continue;
                     }
-                    let ids = &tree.layout.inv[seg.clone()];
-                    block::dists_contig_to_vec(arena, seg, qrow, q_sq, &mut dists);
-                    for (&p, &d) in ids.iter().zip(&dists) {
-                        push_bounded(&mut result, k, p, d);
+                    let thr =
+                        if result.len() == k { result.peek().map(|w| w.dist) } else { None };
+                    match (&filter, thr) {
+                        (Some(f), Some(thr)) => {
+                            block::dists_contig_to_vec_f32(
+                                arena, seg, qrow, q_sq, f, thr, &mut frows, &mut dists,
+                            );
+                            for (&row, &d) in frows.iter().zip(&dists) {
+                                push_bounded(&mut result, k, tree.layout.inv[row as usize], d);
+                            }
+                        }
+                        _ => {
+                            let ids = &tree.layout.inv[seg.clone()];
+                            block::dists_contig_to_vec(arena, seg, qrow, q_sq, &mut dists);
+                            for (&p, &d) in ids.iter().zip(&dists) {
+                                push_bounded(&mut result, k, p, d);
+                            }
+                        }
                     }
                 }
             }

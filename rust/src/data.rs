@@ -6,6 +6,23 @@
 //! what makes the scalar path and the XLA path bit-compatible up to f32
 //! rounding.
 
+/// Largest |value| in a slice, for the f32 filter tier's error bound.
+/// Any non-finite entry (±inf or NaN) maps to +inf, which makes
+/// [`crate::metrics::block::F32Filter::new`] decline deterministically.
+pub(crate) fn max_abs_of(values: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &v in values {
+        let a = v.abs();
+        if a > m {
+            m = a;
+        }
+        if !a.is_finite() {
+            m = f32::INFINITY;
+        }
+    }
+    m
+}
+
 /// Dense row-major f32 matrix.
 #[derive(Clone, Debug)]
 pub struct DenseMatrix {
@@ -14,12 +31,20 @@ pub struct DenseMatrix {
     pub values: Vec<f32>,
     /// Cached ||row_i||² in f64.
     sqnorms: Vec<f64>,
+    /// Cached ||row_i||² rounded to f32 (`sqnorms[i] as f32`) — the
+    /// sidecar the f32 filter tier reads. Derived, never recomputed, so
+    /// it is a pure function of `sqnorms` and stays bit-consistent
+    /// across `select_rows` copies.
+    sqnorms32: Vec<f32>,
+    /// Cached max|value| over the whole matrix (the `M` of the filter
+    /// tier's ε bound). +inf if any entry is non-finite.
+    max_abs: f32,
 }
 
 impl DenseMatrix {
     pub fn new(n: usize, d: usize, values: Vec<f32>) -> Self {
         assert_eq!(values.len(), n * d, "shape mismatch");
-        let sqnorms = (0..n)
+        let sqnorms: Vec<f64> = (0..n)
             .map(|i| {
                 values[i * d..(i + 1) * d]
                     .iter()
@@ -27,7 +52,9 @@ impl DenseMatrix {
                     .sum()
             })
             .collect();
-        DenseMatrix { n, d, values, sqnorms }
+        let sqnorms32 = sqnorms.iter().map(|&s| s as f32).collect();
+        let max_abs = max_abs_of(&values);
+        DenseMatrix { n, d, values, sqnorms, sqnorms32, max_abs }
     }
 
     pub fn from_rows(rows: &[Vec<f32>]) -> Self {
@@ -51,6 +78,18 @@ impl DenseMatrix {
         self.sqnorms[i]
     }
 
+    /// The f32-rounded cached squared norm (filter-tier sidecar).
+    #[inline]
+    pub fn sqnorm32(&self, i: usize) -> f32 {
+        self.sqnorms32[i]
+    }
+
+    /// Cached max|value| over the matrix (+inf if any non-finite entry).
+    #[inline]
+    pub fn max_abs(&self) -> f32 {
+        self.max_abs
+    }
+
     /// One contiguous slab of rows plus the matching cached squared
     /// norms — the zero-gather view the contiguous leaf-scan kernels
     /// read ([`crate::metrics::block`]). Values are `(hi−lo)·d` floats
@@ -63,17 +102,40 @@ impl DenseMatrix {
         )
     }
 
+    /// [`Self::rows_slab`] with the f32 norm sidecar instead of the f64
+    /// norms — what the f32 filter-tier kernel streams.
+    #[inline]
+    pub fn rows_slab_f32(&self, rows: std::ops::Range<usize>) -> (&[f32], &[f32]) {
+        (
+            &self.values[rows.start * self.d..rows.end * self.d],
+            &self.sqnorms32[rows],
+        )
+    }
+
     /// Copy the listed rows (in order, repeats allowed) into a new
-    /// matrix. Cached norms are copied, not recomputed, so the selected
-    /// rows are bit-identical to the originals in every cached quantity.
+    /// matrix. Cached norms (f64 and f32 sidecar) are copied, not
+    /// recomputed, so the selected rows are bit-identical to the
+    /// originals in every cached quantity. `max_abs` is copied from the
+    /// parent too: an upper bound over a row subset is still an upper
+    /// bound, and copying keeps the arena's filter ε bit-equal to the
+    /// original space's.
     pub fn select_rows(&self, ids: &[u32]) -> DenseMatrix {
         let mut values = Vec::with_capacity(ids.len() * self.d);
         let mut sqnorms = Vec::with_capacity(ids.len());
+        let mut sqnorms32 = Vec::with_capacity(ids.len());
         for &i in ids {
             values.extend_from_slice(self.row(i as usize));
             sqnorms.push(self.sqnorms[i as usize]);
+            sqnorms32.push(self.sqnorms32[i as usize]);
         }
-        DenseMatrix { n: ids.len(), d: self.d, values, sqnorms }
+        DenseMatrix {
+            n: ids.len(),
+            d: self.d,
+            values,
+            sqnorms,
+            sqnorms32,
+            max_abs: self.max_abs,
+        }
     }
 
     /// L2-normalize every row in place (zero rows are left untouched).
@@ -90,8 +152,10 @@ impl DenseMatrix {
                     .iter()
                     .map(|&v| (v as f64) * (v as f64))
                     .sum();
+                self.sqnorms32[i] = self.sqnorms[i] as f32;
             }
         }
+        self.max_abs = max_abs_of(&self.values);
     }
 
     /// Transpose (attributes become points — §4.3 of the paper).
@@ -139,6 +203,12 @@ pub struct SparseMatrix {
     pub indices: Vec<u32>,
     pub values: Vec<f32>,
     sqnorms: Vec<f64>,
+    /// f32-rounded cached norms — the filter-tier sidecar (see
+    /// [`DenseMatrix::sqnorm32`]).
+    sqnorms32: Vec<f32>,
+    /// Cached max|stored value| (+inf if any non-finite entry). Absent
+    /// entries are 0, so this bounds every coordinate.
+    max_abs: f32,
 }
 
 impl SparseMatrix {
@@ -166,7 +236,9 @@ impl SparseMatrix {
             indptr.push(indices.len());
             sqnorms.push(sq);
         }
-        SparseMatrix { n, d, indptr, indices, values, sqnorms }
+        let sqnorms32 = sqnorms.iter().map(|&s| s as f32).collect();
+        let max_abs = max_abs_of(&values);
+        SparseMatrix { n, d, indptr, indices, values, sqnorms, sqnorms32, max_abs }
     }
 
     #[inline]
@@ -178,6 +250,18 @@ impl SparseMatrix {
     #[inline]
     pub fn sqnorm(&self, i: usize) -> f64 {
         self.sqnorms[i]
+    }
+
+    /// The f32-rounded cached squared norm (filter-tier sidecar).
+    #[inline]
+    pub fn sqnorm32(&self, i: usize) -> f32 {
+        self.sqnorms32[i]
+    }
+
+    /// Cached max|stored value| (+inf if any non-finite entry).
+    #[inline]
+    pub fn max_abs(&self) -> f32 {
+        self.max_abs
     }
 
     pub fn nnz(&self) -> usize {
@@ -197,6 +281,7 @@ impl SparseMatrix {
         let mut indices = Vec::with_capacity(nnz);
         let mut values = Vec::with_capacity(nnz);
         let mut sqnorms = Vec::with_capacity(ids.len());
+        let mut sqnorms32 = Vec::with_capacity(ids.len());
         indptr.push(0);
         for &i in ids {
             let (idx, val) = self.row(i as usize);
@@ -204,8 +289,18 @@ impl SparseMatrix {
             values.extend_from_slice(val);
             indptr.push(indices.len());
             sqnorms.push(self.sqnorms[i as usize]);
+            sqnorms32.push(self.sqnorms32[i as usize]);
         }
-        SparseMatrix { n: ids.len(), d: self.d, indptr, indices, values, sqnorms }
+        SparseMatrix {
+            n: ids.len(),
+            d: self.d,
+            indptr,
+            indices,
+            values,
+            sqnorms,
+            sqnorms32,
+            max_abs: self.max_abs,
+        }
     }
 
     /// Sparse·sparse dot product (merge join on sorted indices).
@@ -235,6 +330,20 @@ impl SparseMatrix {
         let mut acc = 0.0f64;
         for (&j, &v) in idx.iter().zip(val) {
             acc += v as f64 * q[j as usize] as f64;
+        }
+        acc
+    }
+
+    /// [`Self::dot_vec`] entirely in f32 — the filter-tier form. A
+    /// single-accumulator chain of ≤ nnz(i) ≤ d adds, which the filter's
+    /// error bound ([`crate::metrics::block::f32_eps`]) covers with the
+    /// same `N = d + 16` term it uses for the 8-lane dense kernel.
+    #[inline]
+    pub fn dot_vec_f32(&self, i: usize, q: &[f32]) -> f32 {
+        let (idx, val) = self.row(i);
+        let mut acc = 0.0f32;
+        for (&j, &v) in idx.iter().zip(val) {
+            acc += v * q[j as usize];
         }
         acc
     }
@@ -299,6 +408,20 @@ impl Data {
             Data::Sparse(m) => m.sqnorm(i),
         }
     }
+    /// f32-rounded cached squared norm (filter-tier sidecar).
+    pub fn sqnorm32(&self, i: usize) -> f32 {
+        match self {
+            Data::Dense(m) => m.sqnorm32(i),
+            Data::Sparse(m) => m.sqnorm32(i),
+        }
+    }
+    /// Cached max|value| (+inf if any entry is non-finite).
+    pub fn max_abs(&self) -> f32 {
+        match self {
+            Data::Dense(m) => m.max_abs(),
+            Data::Sparse(m) => m.max_abs(),
+        }
+    }
     pub fn is_sparse(&self) -> bool {
         matches!(self, Data::Sparse(_))
     }
@@ -324,6 +447,45 @@ mod tests {
         assert_eq!(m.row(0), &[1.0, 2.0, 2.0]);
         assert_eq!(m.sqnorm(0), 9.0);
         assert_eq!(m.sqnorm(1), 25.0);
+        assert_eq!(m.sqnorm32(0), 9.0f32);
+        assert_eq!(m.max_abs(), 4.0);
+        let (slab, norms32) = m.rows_slab_f32(0..2);
+        assert_eq!(slab.len(), 6);
+        assert_eq!(norms32, &[9.0f32, 25.0]);
+    }
+
+    #[test]
+    fn max_abs_flags_non_finite() {
+        assert_eq!(max_abs_of(&[1.0, -3.5, 2.0]), 3.5);
+        assert_eq!(max_abs_of(&[]), 0.0);
+        assert_eq!(max_abs_of(&[1.0, f32::NAN, 99.0]), f32::INFINITY);
+        assert_eq!(max_abs_of(&[f32::NEG_INFINITY, 1.0]), f32::INFINITY);
+    }
+
+    #[test]
+    fn f32_sidecars_survive_select_and_normalize() {
+        let m = DenseMatrix::new(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.sqnorm32(0).to_bits(), m.sqnorm32(2).to_bits());
+        assert_eq!(s.max_abs(), m.max_abs(), "subset copies the parent bound");
+        let mut nm = m.clone();
+        nm.normalize_rows();
+        assert_eq!(nm.sqnorm32(1), nm.sqnorm(1) as f32);
+        assert!(nm.max_abs() <= 1.0 + f32::EPSILON);
+    }
+
+    #[test]
+    fn sparse_dot_vec_f32_matches_f64() {
+        let rows = vec![vec![(0u32, 1.5f32), (2, -2.0)], vec![(1u32, 3.0f32)]];
+        let m = SparseMatrix::from_rows(4, &rows);
+        let q = [2.0f32, -1.0, 0.5, 9.0];
+        assert_eq!(m.dot_vec_f32(0, &q) as f64, m.dot_vec(0, &q));
+        assert_eq!(m.dot_vec_f32(1, &q) as f64, m.dot_vec(1, &q));
+        assert_eq!(m.sqnorm32(0), m.sqnorm(0) as f32);
+        assert_eq!(m.max_abs(), 3.0);
+        let s = m.select_rows(&[1]);
+        assert_eq!(s.max_abs(), 3.0);
+        assert_eq!(s.sqnorm32(0).to_bits(), m.sqnorm32(1).to_bits());
     }
 
     #[test]

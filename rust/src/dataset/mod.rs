@@ -121,7 +121,13 @@ impl DatasetSpec {
         ((self.kind.paper_rows() as f64 * self.scale).round() as usize).max(16)
     }
 
-    /// Generate the dataset as a [`Space`] (Euclidean).
+    /// Generate the dataset as a [`Space`] (Euclidean). The
+    /// `PALLAS_F32_TIER` environment default is applied here — the one
+    /// chokepoint every materialization path (CLI, coordinator, server,
+    /// [`crate::engine::IndexBuilder::build`]) flows through — so the
+    /// CI `PALLAS_F32_TIER=1` pass drives the whole suite through the
+    /// filter tier. An explicit
+    /// [`crate::engine::IndexBuilder::with_f32_tier`] overrides it.
     pub fn build(&self) -> Space {
         let r = self.rows();
         let seed = self.seed;
@@ -138,7 +144,32 @@ impl DatasetSpec {
             }
             DatasetKind::Figure1 => Data::Dense(figure1(r, seed).0),
         };
-        Space::euclidean(data)
+        let mut space = Space::euclidean(data);
+        space.set_f32_tier(default_f32_tier().unwrap_or_else(|e| panic!("{e}")));
+        space
+    }
+}
+
+/// `PALLAS_F32_TIER` environment default: unset ⇒ off; `1`/`true` ⇒ on;
+/// `0`/`false` ⇒ off. A variable that is *set but unrecognized* is a
+/// loud `Err`, never a silent fallback — the CI `PALLAS_F32_TIER=1`
+/// pass exists to exercise the filter tier, and quietly degrading to
+/// off would turn that coverage green while testing nothing (same
+/// contract as [`crate::coordinator::shard::default_shards`]).
+pub fn default_f32_tier() -> Result<bool, String> {
+    parse_f32_tier(std::env::var("PALLAS_F32_TIER").ok().as_deref())
+}
+
+fn parse_f32_tier(raw: Option<&str>) -> Result<bool, String> {
+    match raw {
+        None => Ok(false),
+        Some(raw) => match raw.trim() {
+            "1" | "true" => Ok(true),
+            "0" | "false" => Ok(false),
+            other => Err(format!(
+                "$PALLAS_F32_TIER: expected 1/0/true/false, got {other:?}"
+            )),
+        },
     }
 }
 
@@ -202,6 +233,19 @@ mod tests {
             assert_eq!(space.n(), spec.rows(), "{}", kind.name());
             assert_eq!(space.dim(), kind.dims(), "{}", kind.name());
         }
+    }
+
+    #[test]
+    fn f32_tier_env_values_parse_loudly() {
+        // Pure-parse test: mutating the real env would race with the
+        // parallel test harness.
+        assert_eq!(parse_f32_tier(None), Ok(false));
+        assert_eq!(parse_f32_tier(Some("1")), Ok(true));
+        assert_eq!(parse_f32_tier(Some(" true ")), Ok(true));
+        assert_eq!(parse_f32_tier(Some("0")), Ok(false));
+        assert_eq!(parse_f32_tier(Some("false")), Ok(false));
+        assert!(parse_f32_tier(Some("yes")).is_err());
+        assert!(parse_f32_tier(Some("")).is_err());
     }
 
     #[test]

@@ -107,6 +107,7 @@ pub struct IndexBuilder {
     exact_radii: bool,
     batch_engine: Option<Arc<BatchDistanceEngine>>,
     parallelism: Parallelism,
+    f32_tier: Option<bool>,
 }
 
 impl IndexBuilder {
@@ -119,6 +120,7 @@ impl IndexBuilder {
             exact_radii: false,
             batch_engine: None,
             parallelism: Parallelism::default(),
+            f32_tier: None,
         }
     }
 
@@ -163,15 +165,32 @@ impl IndexBuilder {
         self
     }
 
+    /// Explicitly enable/disable the f32 filter tier
+    /// ([`Space::set_f32_tier`]) on the space this builder materializes,
+    /// overriding the `PALLAS_F32_TIER` environment default applied by
+    /// [`DatasetSpec::build`]. Results are bit-identical either way —
+    /// the tier only changes how many evaluations run in f64 vs f32
+    /// ([`Index::f32_dist_count`]).
+    pub fn with_f32_tier(mut self, on: bool) -> Self {
+        self.f32_tier = Some(on);
+        self
+    }
+
     /// Materialize the dataset and wrap it in an [`Index`]. The tree is
     /// built lazily, on the first query that needs it.
     pub fn build(self) -> Index {
-        let space = Arc::new(self.dataset.build());
+        let mut space = self.dataset.build();
+        if let Some(on) = self.f32_tier {
+            space.set_f32_tier(on);
+        }
+        let space = Arc::new(space);
         self.build_on(space)
     }
 
     /// Wrap an already-materialized space (e.g. the coordinator's
-    /// dataset cache) without rebuilding it.
+    /// dataset cache) without rebuilding it. The space's existing
+    /// f32-tier flag governs; a [`Self::with_f32_tier`] override is not
+    /// applied here (the space may be shared with other indexes).
     pub fn build_on(self, space: Arc<Space>) -> Index {
         let seed = self.seed.unwrap_or(self.dataset.seed);
         Index {
@@ -345,6 +364,19 @@ impl Index {
     pub fn dist_count(&self) -> u64 {
         self.space.dist_count()
     }
+
+    /// f32 filter-tier evaluations charged to this index's space —
+    /// reported separately from [`Index::dist_count`] so the Table-2
+    /// f64 budget stays comparable across tiers (0 when the tier is
+    /// off).
+    pub fn f32_dist_count(&self) -> u64 {
+        self.space.f32_dist_count()
+    }
+
+    /// Whether the index's space has the f32 filter tier enabled.
+    pub fn f32_tier(&self) -> bool {
+        self.space.f32_tier()
+    }
 }
 
 #[cfg(test)]
@@ -385,6 +417,17 @@ mod tests {
             let r = index.run(&Query::Kmeans(KmeansQuery { k: 4, iters: 3, ..Default::default() }));
             assert_eq!(r.kind(), "kmeans");
         }
+    }
+
+    #[test]
+    fn f32_tier_knob_flows_to_the_space() {
+        let index = tiny_builder().with_f32_tier(true).build();
+        assert!(index.f32_tier());
+        assert_eq!(index.f32_dist_count(), 0, "no f32 work before any query");
+        // Explicit off must win even under a PALLAS_F32_TIER=1 env (the
+        // CI tier pass runs this very test with the env set).
+        let off = tiny_builder().with_f32_tier(false).build();
+        assert!(!off.f32_tier(), "explicit off lost to the env default");
     }
 
     #[test]

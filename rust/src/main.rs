@@ -43,7 +43,9 @@ paper experiments
 
 engine queries (common flags: --dataset NAME --scale F --seed N --rmin N
                               --tree BOOL --builder middle-out|top-down
-                              --xla BOOL --threads auto|serial|N)
+                              --xla BOOL --threads auto|serial|N
+                              --f32 BOOL   exact f32 filter tier; default
+                                           $PALLAS_F32_TIER, else off)
   kmeans   [--k N] [--iters N] [--init random|anchors]
   xmeans   [--kmin N] [--kmax N]
   anomaly  [--threshold N] [--frac F] [--radius F]
@@ -123,12 +125,17 @@ fn build_index(args: &Args) -> Result<(DatasetSpec, Index), String> {
         Some(raw) => Parallelism::parse(&raw)
             .ok_or_else(|| format!("--threads: expected auto|serial|N, found {raw:?}"))?,
     };
-    let index = IndexBuilder::new(spec.clone())
+    let mut builder = IndexBuilder::new(spec.clone())
         .rmin(rmin)
         .strategy(strategy)
         .batch_engine(engine)
-        .parallelism(parallelism)
-        .build();
+        .parallelism(parallelism);
+    // --f32 wins over the $PALLAS_F32_TIER default; absent, the env
+    // default applied inside DatasetSpec::build governs.
+    if args.opt_str("f32").is_some() {
+        builder = builder.with_f32_tier(args.bool_flag("f32", false)?);
+    }
+    let index = builder.build();
     println!(
         "dataset {} ({} rows × {} dims)",
         spec.kind.name(),
@@ -143,12 +150,14 @@ fn build_index(args: &Args) -> Result<(DatasetSpec, Index), String> {
 fn run_query(args: &Args, index: &Index, query: Query) -> Result<(), String> {
     args.finish()?;
     let before = index.dist_count();
+    let before_f32 = index.f32_dist_count();
     let t0 = std::time::Instant::now();
     let result = index.run(&query);
     println!("{}", result.summary());
     println!(
-        "distance computations {}  wall {:.2}s",
+        "distance computations {}  f32-filter evals {}  wall {:.2}s",
         index.dist_count() - before,
+        index.f32_dist_count() - before_f32,
         t0.elapsed().as_secs_f64()
     );
     Ok(())

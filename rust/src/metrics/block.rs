@@ -40,8 +40,25 @@
 //! count — `tests/parallel_equivalence.rs` asserts both on dense and
 //! sparse data. That is what lets the tree algorithms adopt the kernels
 //! without perturbing the paper's Table-2 accounting.
+//!
+//! ## The f32 filter tier
+//!
+//! [`F32Filter`] + [`dists_contig_to_vec_f32`] implement the opt-in
+//! reduced-precision tier ([`Space::set_f32_tier`]): leaf scans that
+//! prune against a threshold (knn kth-best, ball radius, the anomaly
+//! rules) first compute d² in 8-wide f32 lanes, discard rows whose f32
+//! value puts them **conclusively** outside the threshold — further out
+//! than a rigorous error bound ε could explain — and recompute only the
+//! remaining candidates with the exact f64 expression above. Because a
+//! pruned row provably satisfies `d₆₄ > thr`, the tier-off scan would
+//! have rejected it too, so tier-on results (values, orders, heap
+//! states, tie-breaks, distance counts) are **bit-identical** to
+//! tier-off; only the work split changes. f32 pre-pass evaluations are
+//! accounted in a separate counter cell ([`Space::count_bulk_f32`]),
+//! never in the Table-2 f64 budget. Derivation of ε is on [`f32_eps`];
+//! `tests/kernel_lanes.rs` proves the end-to-end bit-identity.
 
-use super::{dense_dot, dense_l1, Metric, Space};
+use super::{dense_dot, dense_dot_f32, dense_l1, Metric, Space};
 use crate::data::Data;
 use std::ops::Range;
 
@@ -364,6 +381,155 @@ pub fn dists_contig_rows(space: &Space, a: Range<usize>, b: Range<usize>, out: &
     }
 }
 
+/// Rigorous bound on `|d²₆₄ − d²₃₂|` for the f32 filter tier, as a
+/// function of the dimension count `d` and `m2 = M²` where
+/// `M = max(max|xᵢⱼ| over the data, max|qⱼ|)`.
+///
+/// Derivation (u = 2⁻²⁴ = f32 unit roundoff, every addend of every sum
+/// below has magnitude ≤ M²):
+///
+/// * the 8-lane f32 dot ([`dense_dot_f32`]) is, per scalar product, a
+///   chain of ≤ ⌈d/8⌉ lane adds + 7 tail adds + 7 combine adds + 1
+///   product rounding ≤ `N = d + 16` roundings; the sparse
+///   single-accumulator chain (`dot_vec_f32`) is ≤ d + 1 ≤ N. The
+///   standard forward bound (Higham, *Accuracy and Stability of
+///   Numerical Algorithms*, §3.1) gives
+///   `|fl(x·q) − x·q| ≤ γ_N · d·M²` with `γ_N = N·u/(1 − N·u)`;
+/// * the cached norms `r²₃₂`, `q²₃₂` are f32 roundings of sums of d
+///   squares: same bound each, plus one as-cast rounding ≤ u·d·M²;
+/// * combining `r²₃₂ + q²₃₂ − 2·dot₃₂` takes 3 more f32 ops on values
+///   of magnitude ≤ 4·d·M².
+///
+/// Summing: `|d²₆₄ − d²₃₂| ≤ u·d·M²·(3γ_N/u + 2 + 12) + subnormals`.
+/// With the [`F32Filter::new`] guard `N·u ≤ 0.01` we have
+/// `γ_N ≤ 1.011·N·u`, so the total is `< u·d·M²·(3.04·(d+16) + 14)`,
+/// and `2·d·(d+32) = 2d² + 64d` dominates `3.04·d + 62.6` for every
+/// d ≥ 1 — the factor-2 leading term plus the enlarged constant leave
+/// ≥ 25% slack at every dimension. Products that underflow to
+/// subnormals break the relative-error model; the additive floor
+/// `16·(d+1)·MIN_POSITIVE` covers one absolute underflow error per
+/// rounding with room to spare.
+pub fn f32_eps(d: usize, m2: f64) -> f64 {
+    const U: f64 = 1.0 / (1u64 << 24) as f64;
+    let df = d as f64;
+    2.0 * U * df * (df + 32.0) * m2 + 16.0 * (df + 1.0) * (f32::MIN_POSITIVE as f64)
+}
+
+/// Per-query state of the f32 filter tier: the error margin ε and the
+/// query's f32 squared norm. Built once per query by [`F32Filter::new`],
+/// which returns `None` whenever the filter cannot be applied *safely*
+/// — callers then take the plain f64 kernel, so a `None` is always
+/// correct, just unaccelerated. The decision is a pure function of
+/// (space flag, metric, d, cached max|x|, q), hence deterministic.
+pub struct F32Filter {
+    /// Rigorous upper bound on |d²₆₄ − d²₃₂| ([`f32_eps`]).
+    pub eps: f64,
+    /// ‖q‖² accumulated by the f32 kernel itself.
+    q_sq32: f32,
+}
+
+impl F32Filter {
+    /// Build the filter for one query, or decline. Declines when:
+    /// the space's tier flag is off; the metric is not Euclidean;
+    /// `d == 0` (nothing to accelerate) or `d > 100_000` (keeps
+    /// `N·u ≤ 0.01` so the γ_N linearization in [`f32_eps`] holds);
+    /// `4·d·M²` is not comfortably below `f32::MAX` (the 8-lane partial
+    /// sums could overflow to ±inf, and an inf d²₃₂ from two
+    /// overflowing norms could wrongly prune a genuinely close pair);
+    /// or M is non-finite (data or query contains ±inf/NaN — the
+    /// comparison below fails on NaN, falling through to `None`).
+    pub fn new(space: &Space, q: &[f32]) -> Option<F32Filter> {
+        if !space.f32_tier() || space.metric != Metric::Euclidean {
+            return None;
+        }
+        let d = space.dim();
+        if d == 0 || d > 100_000 {
+            return None;
+        }
+        let mut m = space.data.max_abs();
+        for &v in q {
+            let a = v.abs();
+            if a > m {
+                m = a;
+            }
+            if !a.is_finite() {
+                m = f32::INFINITY;
+            }
+        }
+        let m2 = m as f64 * m as f64;
+        if !(4.0 * d as f64 * m2 < f32::MAX as f64 / 2.0) {
+            return None;
+        }
+        Some(F32Filter { eps: f32_eps(d, m2), q_sq32: dense_dot_f32(q, q) })
+    }
+}
+
+/// [`dists_contig_to_vec`] behind the f32 filter tier: every row in the
+/// range gets an 8-wide f32 d² evaluation; rows conclusively beyond the
+/// threshold (`d²₃₂ − ε > thr²`) are pruned, the rest are recomputed
+/// with the **exact** tier-off f64 expression, in range order, and
+/// emitted as `(absolute row index, f64 distance)` pairs. A NaN d²₃₂
+/// compares false and therefore survives to the exact path — the filter
+/// never trusts a garbage f32 value to prune.
+///
+/// Soundness of the prune: `d²₆₄ ≥ d²₃₂ − ε > thr²`, and since `thr` is
+/// representable and sqrt is correctly rounded and monotone,
+/// `d₆₄ = √d²₆₄ > thr` — the tier-off scan would reject this row too.
+///
+/// Counted: `rows.len()` f32 evaluations ([`Space::count_bulk_f32`])
+/// plus one f64 evaluation per survivor (the Table-2 budget), both
+/// accounted per tile. `out_rows`/`out_d` are cleared and refilled.
+pub fn dists_contig_to_vec_f32(
+    space: &Space,
+    rows: Range<usize>,
+    q: &[f32],
+    q_sq: f64,
+    filter: &F32Filter,
+    thr: f64,
+    out_rows: &mut Vec<u32>,
+    out_d: &mut Vec<f64>,
+) {
+    out_rows.clear();
+    out_d.clear();
+    let thr2 = thr * thr;
+    let q_sq32 = filter.q_sq32;
+    let eps = filter.eps;
+    let mut lo = rows.start;
+    while lo < rows.end {
+        let hi = (lo + TILE).min(rows.end);
+        let survivors_before = out_rows.len();
+        match &space.data {
+            Data::Dense(m) => {
+                let (slab, norms32) = m.rows_slab_f32(lo..hi);
+                for (t, (row, &r_sq32)) in slab.chunks_exact(m.d).zip(norms32).enumerate() {
+                    let d2_32 = r_sq32 + q_sq32 - 2.0f32 * dense_dot_f32(row, q);
+                    if d2_32 as f64 - eps > thr2 {
+                        continue;
+                    }
+                    let i = lo + t;
+                    let d2 = m.sqnorm(i) + q_sq - 2.0 * dense_dot(row, q);
+                    out_rows.push(i as u32);
+                    out_d.push(d2.max(0.0).sqrt());
+                }
+            }
+            Data::Sparse(m) => {
+                for i in lo..hi {
+                    let d2_32 = m.sqnorm32(i) + q_sq32 - 2.0f32 * m.dot_vec_f32(i, q);
+                    if d2_32 as f64 - eps > thr2 {
+                        continue;
+                    }
+                    let d2 = m.sqnorm(i) + q_sq - 2.0 * m.dot_vec(i, q);
+                    out_rows.push(i as u32);
+                    out_d.push(d2.max(0.0).sqrt());
+                }
+            }
+        }
+        space.count_bulk_f32((hi - lo) as u64);
+        space.count_bulk((out_rows.len() - survivors_before) as u64);
+        lo = hi;
+    }
+}
+
 /// Squared distances between dataset rows and dense centers, row-major
 /// `rows.len() × centers.len()` as `f32` — the tile layout the XLA batch
 /// engine produces. This is the scalar kernel promoted out of
@@ -537,6 +703,86 @@ mod tests {
         assert_eq!(out.len(), 6);
         let expect = space.dist_to_vec_uncounted(7, &centers[1], 5.0).powi(2);
         assert!((out[3] as f64 - expect).abs() < 1e-4);
+    }
+
+    #[test]
+    fn f32_filter_survivors_are_exact_and_pruning_is_sound() {
+        for mut space in [dense_space(500, 9, 11), sparse_space(500, 40, 12)] {
+            space.set_f32_tier(true);
+            let q: Vec<f32> = (0..space.dim()).map(|j| (j as f32 * 0.3).cos()).collect();
+            let q_sq: f64 = q.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let filter = F32Filter::new(&space, &q).expect("filter should build");
+            let mut reference = Vec::new();
+            dists_contig_to_vec(&space, 0..space.n(), &q, q_sq, &mut reference);
+            // Pick a threshold that splits the data roughly in half.
+            let mut sorted = reference.clone();
+            sorted.sort_by(f64::total_cmp);
+            let thr = sorted[space.n() / 2];
+            space.reset_count();
+            let (mut out_rows, mut out_d) = (Vec::new(), Vec::new());
+            dists_contig_to_vec_f32(
+                &space, 0..space.n(), &q, q_sq, &filter, thr, &mut out_rows, &mut out_d,
+            );
+            assert_eq!(space.f32_dist_count(), space.n() as u64);
+            assert_eq!(space.dist_count(), out_rows.len() as u64);
+            // Every non-pruned row carries the exact tier-off bits; every
+            // pruned row is truly beyond the threshold.
+            let survivors: std::collections::HashSet<u32> = out_rows.iter().copied().collect();
+            for (row, &d_ref) in reference.iter().enumerate() {
+                if d_ref <= thr {
+                    assert!(survivors.contains(&(row as u32)), "row {row} wrongly pruned");
+                }
+            }
+            for (&row, &d) in out_rows.iter().zip(&out_d) {
+                assert_eq!(
+                    d.to_bits(),
+                    reference[row as usize].to_bits(),
+                    "survivor {row} not bit-exact"
+                );
+            }
+            // And some pruning actually happened at this threshold.
+            assert!(out_rows.len() < space.n(), "filter pruned nothing");
+        }
+    }
+
+    #[test]
+    fn f32_filter_declines_when_unsafe() {
+        // Tier off.
+        let space = dense_space(10, 4, 13);
+        assert!(F32Filter::new(&space, &[0.0; 4]).is_none());
+        // L1 metric.
+        let mut l1 = Space::new(
+            Data::Dense(DenseMatrix::new(2, 2, vec![0., 0., 1., 1.])),
+            Metric::L1,
+        );
+        l1.set_f32_tier(true);
+        assert!(F32Filter::new(&l1, &[0.0; 2]).is_none());
+        // d == 0.
+        let mut empty = Space::euclidean(Data::Dense(DenseMatrix::new(3, 0, vec![])));
+        empty.set_f32_tier(true);
+        assert!(F32Filter::new(&empty, &[]).is_none());
+        // Magnitudes near f32 overflow.
+        let mut huge = Space::euclidean(Data::Dense(DenseMatrix::new(
+            2,
+            2,
+            vec![1e19, 0., 0., 1e19],
+        )));
+        huge.set_f32_tier(true);
+        assert!(F32Filter::new(&huge, &[0.0; 2]).is_none());
+        // Non-finite query.
+        let mut ok = dense_space(10, 4, 14);
+        ok.set_f32_tier(true);
+        assert!(F32Filter::new(&ok, &[0.0, f32::NAN, 0.0, 0.0]).is_none());
+        assert!(F32Filter::new(&ok, &[0.0; 4]).is_some());
+    }
+
+    #[test]
+    fn f32_eps_grows_with_dim_and_magnitude() {
+        assert!(f32_eps(64, 1.0) < f32_eps(2000, 1.0));
+        assert!(f32_eps(64, 1.0) < f32_eps(64, 100.0));
+        // Sanity of scale: at d=64, M=1 the bound is ~2·2⁻²⁴·64·96 ≈ 7e-4.
+        assert!(f32_eps(64, 1.0) < 1e-3);
+        assert!(f32_eps(64, 1.0) > 1e-5);
     }
 
     #[test]

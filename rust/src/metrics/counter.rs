@@ -18,10 +18,14 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 const SHARDS: usize = 16;
 
 /// One cache line worth of counter, so two shards never false-share.
+/// The f32 filter-tier cell rides in the same line: both counters are
+/// bumped by the same thread in the same kernel tile, so sharing the
+/// line is the cheap layout, not false sharing.
 #[repr(align(64))]
 #[derive(Debug, Default)]
 struct Shard {
     count: AtomicU64,
+    f32_count: AtomicU64,
 }
 
 /// Monotonically increasing round-robin source of shard assignments.
@@ -60,9 +64,29 @@ impl DistCounter {
             .sum()
     }
 
+    /// Record `n` reduced-precision (f32 filter-tier) evaluations. Kept
+    /// in a separate cell so the paper's Table-2 f64 budget is never
+    /// polluted by filter passes: an f32 scan over a tile counts here,
+    /// and only the survivors recomputed exactly count in [`Self::add`].
+    #[inline]
+    pub fn add_f32(&self, n: u64) {
+        let shard = SHARD_INDEX.with(|i| *i);
+        self.shards[shard].f32_count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// f32 filter-tier evaluations recorded so far.
+    #[inline]
+    pub fn get_f32(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.f32_count.load(Ordering::Relaxed))
+            .sum()
+    }
+
     pub fn reset(&self) {
         for s in &self.shards {
             s.count.store(0, Ordering::Relaxed);
+            s.f32_count.store(0, Ordering::Relaxed);
         }
     }
 
@@ -90,6 +114,19 @@ mod tests {
         assert_eq!(c.get(), 7);
         c.reset();
         assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn f32_cell_is_independent_and_reset_clears_both() {
+        let c = DistCounter::new();
+        c.add(5);
+        c.add_f32(100);
+        c.add_f32(23);
+        assert_eq!(c.get(), 5, "f32 adds must not leak into the f64 total");
+        assert_eq!(c.get_f32(), 123);
+        c.reset();
+        assert_eq!(c.get(), 0);
+        assert_eq!(c.get_f32(), 0);
     }
 
     #[test]

@@ -33,6 +33,12 @@ pub struct Space {
     pub data: Data,
     pub metric: Metric,
     counter: Arc<DistCounter>,
+    /// Opt-in f32 filter tier ([`block::F32Filter`]): when set, the
+    /// threshold-pruning leaf scans (knn / ball / anomaly) may run an
+    /// 8-wide f32 pre-pass and only recompute ε-margin candidates in
+    /// f64. Default **off**; results are bit-identical either way — the
+    /// flag only trades f64 evaluations for cheaper f32 ones.
+    f32_tier: bool,
 }
 
 impl Space {
@@ -43,7 +49,7 @@ impl Space {
                 "L1 metric is only implemented for dense data"
             );
         }
-        Space { data, metric, counter: Arc::new(DistCounter::new()) }
+        Space { data, metric, counter: Arc::new(DistCounter::new()), f32_tier: false }
     }
 
     pub fn euclidean(data: Data) -> Self {
@@ -63,6 +69,17 @@ impl Space {
         Arc::clone(&self.counter)
     }
 
+    /// Whether the opt-in f32 filter tier is enabled for this space.
+    pub fn f32_tier(&self) -> bool {
+        self.f32_tier
+    }
+
+    /// Enable/disable the f32 filter tier. Answers are bit-identical
+    /// either way; only the (f64, f32) evaluation split changes.
+    pub fn set_f32_tier(&mut self, on: bool) {
+        self.f32_tier = on;
+    }
+
     /// A new space holding the listed rows (in order), **sharing this
     /// space's distance counter** — so distances evaluated on the view
     /// are charged to the same Table-2 budget as distances on the
@@ -75,12 +92,21 @@ impl Space {
             data: self.data.select_rows(ids),
             metric: self.metric,
             counter: Arc::clone(&self.counter),
+            // The arena inherits the tier flag (and, via Data::select_rows,
+            // the parent's cached max|x|), so arena scans behave exactly
+            // like original-order scans: same filter decision, same ε.
+            f32_tier: self.f32_tier,
         }
     }
 
     /// Distances computed so far.
     pub fn dist_count(&self) -> u64 {
         self.counter.get()
+    }
+
+    /// f32 filter-tier evaluations so far (0 unless the tier is on).
+    pub fn f32_dist_count(&self) -> u64 {
+        self.counter.get_f32()
     }
 
     pub fn reset_count(&self) {
@@ -163,6 +189,14 @@ impl Space {
     #[inline]
     pub fn count_bulk(&self, n: u64) {
         self.counter.add(n);
+    }
+
+    /// Record `n` f32 filter-tier evaluations (the f32 pre-pass of
+    /// [`block::dists_contig_to_vec_f32`]). Kept out of the f64 Table-2
+    /// budget by construction.
+    #[inline]
+    pub fn count_bulk_f32(&self, n: u64) {
+        self.counter.add_f32(n);
     }
 
     // ---------------------------------------------------------------
@@ -257,25 +291,40 @@ impl Space {
     }
 }
 
+// ---------------------------------------------------------------------
+// Lane-structured dense kernels.
+//
+// Every dense kernel below is written as a fixed-width multi-accumulator
+// loop: independent accumulators per lane, lane bodies free of bounds
+// checks (`chunks_exact`), a deterministic scalar tail that folds the
+// remainder into lane 0, and a *fixed* final combine order. No FMA, no
+// reassociation left to the compiler's discretion: the laned order IS
+// the canonical summation order of the repo, the same bits on every
+// target, thread count and run. naive/tree and gather/contig paths all
+// call these same functions (pallas-lint D3 pins that), so their
+// bit-equivalences hold by construction. `tests/kernel_lanes.rs` pins
+// lane-remainder dims (d mod 4 ∈ {0,1,2,3}) explicitly.
+// ---------------------------------------------------------------------
+
 #[inline]
 pub fn dense_dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: keeps the f64 adds flowing on the
-    // scalar path (the hot loop of every distance in the repo).
+    // 4 independent f64 lanes: breaks the serial dependence on a single
+    // accumulator (the hot loop of every distance in the repo).
     let mut acc0 = 0.0f64;
     let mut acc1 = 0.0f64;
     let mut acc2 = 0.0f64;
     let mut acc3 = 0.0f64;
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc0 += a[i] as f64 * b[i] as f64;
-        acc1 += a[i + 1] as f64 * b[i + 1] as f64;
-        acc2 += a[i + 2] as f64 * b[i + 2] as f64;
-        acc3 += a[i + 3] as f64 * b[i + 3] as f64;
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc0 += xa[0] as f64 * xb[0] as f64;
+        acc1 += xa[1] as f64 * xb[1] as f64;
+        acc2 += xa[2] as f64 * xb[2] as f64;
+        acc3 += xa[3] as f64 * xb[3] as f64;
     }
-    for i in chunks * 4..a.len() {
-        acc0 += a[i] as f64 * b[i] as f64;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc0 += x as f64 * y as f64;
     }
     acc0 + acc1 + acc2 + acc3
 }
@@ -283,26 +332,25 @@ pub fn dense_dot(a: &[f32], b: &[f32]) -> f64 {
 #[inline]
 pub fn dense_sqdist(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // Same 4-lane unroll as dense_dot: breaks the serial dependence on a
-    // single f64 accumulator.
+    // Same 4-lane structure as dense_dot, same combine order.
     let mut acc0 = 0.0f64;
     let mut acc1 = 0.0f64;
     let mut acc2 = 0.0f64;
     let mut acc3 = 0.0f64;
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        let d0 = a[i] as f64 - b[i] as f64;
-        let d1 = a[i + 1] as f64 - b[i + 1] as f64;
-        let d2 = a[i + 2] as f64 - b[i + 2] as f64;
-        let d3 = a[i + 3] as f64 - b[i + 3] as f64;
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        let d0 = xa[0] as f64 - xb[0] as f64;
+        let d1 = xa[1] as f64 - xb[1] as f64;
+        let d2 = xa[2] as f64 - xb[2] as f64;
+        let d3 = xa[3] as f64 - xb[3] as f64;
         acc0 += d0 * d0;
         acc1 += d1 * d1;
         acc2 += d2 * d2;
         acc3 += d3 * d3;
     }
-    for i in chunks * 4..a.len() {
-        let d = a[i] as f64 - b[i] as f64;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x as f64 - y as f64;
         acc0 += d * d;
     }
     acc0 + acc1 + acc2 + acc3
@@ -315,10 +363,62 @@ pub fn dense_euclidean(a: &[f32], b: &[f32]) -> f64 {
 
 #[inline]
 pub fn dense_l1(a: &[f32], b: &[f32]) -> f64 {
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| (x as f64 - y as f64).abs())
-        .sum()
+    debug_assert_eq!(a.len(), b.len());
+    // Laned like dense_dot. This changed the L1 summation order (the old
+    // kernel was a single-accumulator fold); the 4-lane order is now the
+    // canonical L1 order everywhere, so naive≡tree still holds bit-wise.
+    let mut acc0 = 0.0f64;
+    let mut acc1 = 0.0f64;
+    let mut acc2 = 0.0f64;
+    let mut acc3 = 0.0f64;
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc0 += (xa[0] as f64 - xb[0] as f64).abs();
+        acc1 += (xa[1] as f64 - xb[1] as f64).abs();
+        acc2 += (xa[2] as f64 - xb[2] as f64).abs();
+        acc3 += (xa[3] as f64 - xb[3] as f64).abs();
+    }
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc0 += (x as f64 - y as f64).abs();
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+/// 8-wide f32 dot product — the filter-tier kernel. Twice the lane
+/// width of [`dense_dot`] because the lanes are half as wide; all
+/// arithmetic stays in f32 (the point of the tier is to never touch
+/// f64 until a candidate survives). Deterministic for the same reasons
+/// as the f64 kernels: fixed lanes, tail into lane 0, fixed pairwise
+/// combine. The error-bound derivation in [`block::f32_eps`] counts
+/// this exact chain: ≤ ⌈d/8⌉ lane adds + 7 tail adds + 7 combine adds.
+#[inline]
+pub fn dense_dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let mut acc4 = 0.0f32;
+    let mut acc5 = 0.0f32;
+    let mut acc6 = 0.0f32;
+    let mut acc7 = 0.0f32;
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc0 += xa[0] * xb[0];
+        acc1 += xa[1] * xb[1];
+        acc2 += xa[2] * xb[2];
+        acc3 += xa[3] * xb[3];
+        acc4 += xa[4] * xb[4];
+        acc5 += xa[5] * xb[5];
+        acc6 += xa[6] * xb[6];
+        acc7 += xa[7] * xb[7];
+    }
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc0 += x * y;
+    }
+    ((acc0 + acc1) + (acc2 + acc3)) + ((acc4 + acc5) + (acc6 + acc7))
 }
 
 #[cfg(test)]
@@ -460,5 +560,48 @@ mod tests {
         let mut out = vec![7f32; 4];
         s.fill_row(1, &mut out);
         assert_eq!(out, vec![3.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn laned_kernels_handle_all_tail_lengths() {
+        // Every lane remainder (d mod 4, and d mod 8 for the f32 kernel)
+        // plus empty input; laned result must match a reference fold to
+        // floating tolerance and be bit-stable across calls.
+        for d in 0..=17usize {
+            let a: Vec<f32> = (0..d).map(|i| (i as f32 * 0.7).sin()).collect();
+            let b: Vec<f32> = (0..d).map(|i| (i as f32 * 1.3).cos()).collect();
+            let dot_ref: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let l1_ref: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| (x as f64 - y as f64).abs())
+                .sum();
+            assert!((dense_dot(&a, &b) - dot_ref).abs() < 1e-12, "d={d}");
+            assert!((dense_l1(&a, &b) - l1_ref).abs() < 1e-12, "d={d}");
+            assert!((dense_dot_f32(&a, &b) as f64 - dot_ref).abs() < 1e-5, "d={d}");
+            assert_eq!(dense_dot(&a, &b).to_bits(), dense_dot(&a, &b).to_bits());
+            assert_eq!(dense_l1(&a, &b).to_bits(), dense_l1(&a, &b).to_bits());
+            assert_eq!(
+                dense_dot_f32(&a, &b).to_bits(),
+                dense_dot_f32(&a, &b).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn f32_tier_flag_defaults_off_and_propagates_to_views() {
+        let mut s = small_dense();
+        assert!(!s.f32_tier());
+        s.set_f32_tier(true);
+        assert!(s.f32_tier());
+        let view = s.select_rows(&[2, 0]);
+        assert!(view.f32_tier(), "select_rows must inherit the tier flag");
+        assert_eq!(s.f32_dist_count(), 0);
+        s.count_bulk_f32(7);
+        assert_eq!(s.f32_dist_count(), 7);
+        assert_eq!(view.f32_dist_count(), 7, "views share the counter");
+        assert_eq!(s.dist_count(), 0, "f32 evals stay out of the f64 budget");
+        s.reset_count();
+        assert_eq!(s.f32_dist_count(), 0);
     }
 }

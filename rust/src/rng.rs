@@ -69,9 +69,15 @@ impl Rng {
     }
 
     /// Uniform f32 in [0, 1).
+    ///
+    /// A plain `f64 as f32` would violate the half-open contract: any
+    /// draw above `1 − 2⁻²⁵` (e.g. the largest `f64()` output,
+    /// `1 − 2⁻⁵³`) rounds to exactly `1.0f32`. Clamp those draws to the
+    /// largest f32 below 1.
     #[inline]
     pub fn f32(&mut self) -> f32 {
-        self.f64() as f32
+        const BELOW_ONE: f32 = 1.0 - f32::EPSILON / 2.0; // 0x3F7FFFFF
+        (self.f64() as f32).min(BELOW_ONE)
     }
 
     /// Uniform integer in [0, n) (n > 0), bias-free via rejection.
@@ -245,6 +251,24 @@ mod tests {
         for _ in 0..10_000 {
             let x = r.f64();
             assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f32_never_reaches_one_even_at_the_rounding_boundary() {
+        // Any f64 in (1 − 2⁻²⁵, 1) rounds to 1.0f32 under `as f32`, so
+        // the clamp is what upholds the documented [0, 1) contract.
+        // Check the exact worst case the raw u64 stream can produce
+        // (all-ones → f64() = 1 − 2⁻⁵³) plus the nearest-even boundary.
+        let worst = (u64::MAX >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        assert!(worst < 1.0 && worst as f32 == 1.0, "premise of the clamp");
+        let clamped = (worst as f32).min(1.0 - f32::EPSILON / 2.0);
+        assert_eq!(clamped.to_bits(), 0x3F7F_FFFF, "largest f32 below 1");
+        // And the generator itself stays in range over a long stream.
+        let mut r = Rng::new(41);
+        for _ in 0..100_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x), "f32() produced {x}");
         }
     }
 

@@ -1,0 +1,331 @@
+//! Lane/tail oracle for the lane-structured kernels and the f32 filter
+//! tier.
+//!
+//! The kernel refactor claims a single canonical summation order — 4
+//! independent f64 lanes (8 f32 lanes for the filter kernel), tail into
+//! lane 0, fixed combine — shared by every path. These tests prove the
+//! claims the rest of the repo leans on, at every awkward lane
+//! remainder (d mod 4 ∈ {0,1,2,3}, d mod 8 likewise, d = 0, and a
+//! high-dimensional d = 2000):
+//!
+//! 1. **Kernel level** — each kernel bit-matches an independently
+//!    written reference fold of the canonical order, and repeat calls
+//!    are bit-stable.
+//! 2. **Path level** — gather ≡ contig per leaf and naive ≡ tree for
+//!    knn, on dense and sparse data, stay bit-identical (the laned
+//!    order is one order, used everywhere).
+//! 3. **Tier level** — with `set_f32_tier(true)` on an identical copy
+//!    of the data, knn / ball stats / ball moments / anomaly answers
+//!    are **bit-identical** to tier-off, on trees built at threads
+//!    {1, 8}, while the (f64_evals, f32_evals) split is deterministic:
+//!    exact same pair on every re-run and at every thread count.
+//!    Tier-off, `f32_evals` stays 0.
+//! 4. **Engine level** — `IndexBuilder::with_f32_tier` flows to the
+//!    space, `QueryResult`s match tier-off bit-for-bit, and the index
+//!    reports the f32 eval counter separately.
+
+use anchors_hierarchy::algorithms::{anomaly, ballquery, knn};
+use anchors_hierarchy::data::Data;
+use anchors_hierarchy::dataset::{gaussian_mixture, gen_mixture, DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{BallStatsQuery, IndexBuilder, KnnQuery, KnnTarget, Query};
+use anchors_hierarchy::metrics::{block, dense_dot, dense_dot_f32, dense_l1, dense_sqdist, Space};
+use anchors_hierarchy::parallel::Parallelism;
+use anchors_hierarchy::rng::Rng;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::tree::MetricTree;
+
+/// Every lane-remainder class for both lane widths, plus degenerate and
+/// high-dimensional extremes.
+const DIMS: [usize; 10] = [0, 1, 3, 7, 8, 9, 63, 64, 65, 2000];
+
+fn vec_pair(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let a = (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
+    let b = (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
+    (a, b)
+}
+
+// ---------------------------------------------------------------------
+// Level 1: reference folds of the canonical order, written from the
+// spec (not the kernel source): 4 f64 lanes / 8 f32 lanes, lane i takes
+// element i of each chunk, tail folds into lane 0, fixed combine.
+// ---------------------------------------------------------------------
+
+fn ref_fold4(a: &[f32], b: &[f32], term: impl Fn(f32, f32) -> f64) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let main = a.len() / 4 * 4;
+    for c in 0..main / 4 {
+        for l in 0..4 {
+            acc[l] += term(a[c * 4 + l], b[c * 4 + l]);
+        }
+    }
+    for j in main..a.len() {
+        acc[0] += term(a[j], b[j]);
+    }
+    ((acc[0] + acc[1]) + acc[2]) + acc[3]
+}
+
+fn ref_dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let main = a.len() / 8 * 8;
+    for c in 0..main / 8 {
+        for l in 0..8 {
+            acc[l] += a[c * 8 + l] * b[c * 8 + l];
+        }
+    }
+    for j in main..a.len() {
+        acc[0] += a[j] * b[j];
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+#[test]
+fn kernels_match_reference_fold_and_are_bit_stable_at_every_tail() {
+    for d in DIMS {
+        let (a, b) = vec_pair(d, 11 + d as u64);
+        let want_dot = ref_fold4(&a, &b, |x, y| x as f64 * y as f64);
+        let want_sq = ref_fold4(&a, &b, |x, y| {
+            let dd = x as f64 - y as f64;
+            dd * dd
+        });
+        let want_l1 = ref_fold4(&a, &b, |x, y| (x as f64 - y as f64).abs());
+        let want_32 = ref_dot_f32(&a, &b);
+        for run in 0..3 {
+            assert_eq!(dense_dot(&a, &b).to_bits(), want_dot.to_bits(), "d={d} dot run {run}");
+            assert_eq!(dense_sqdist(&a, &b).to_bits(), want_sq.to_bits(), "d={d} sqdist run {run}");
+            assert_eq!(dense_l1(&a, &b).to_bits(), want_l1.to_bits(), "d={d} l1 run {run}");
+            assert_eq!(dense_dot_f32(&a, &b).to_bits(), want_32.to_bits(), "d={d} f32 run {run}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Level 2: one order everywhere — gather ≡ contig per leaf, naive ≡
+// tree for knn, across lane remainders, dense and sparse.
+// ---------------------------------------------------------------------
+
+fn dense_space(n: usize, d: usize, seed: u64) -> Space {
+    Space::euclidean(Data::Dense(gaussian_mixture(n, d, 3, 12.0, seed)))
+}
+
+fn sparse_space(n: usize, d: usize, seed: u64) -> Space {
+    Space::euclidean(Data::Sparse(gen_mixture(n, d, 3, seed)))
+}
+
+fn build(space: &Space, rmin: usize, threads: usize) -> MetricTree {
+    middle_out::build(
+        space,
+        &MiddleOutConfig {
+            rmin,
+            seed: 9,
+            parallelism: Parallelism::Fixed(threads),
+            ..Default::default()
+        },
+    )
+}
+
+fn query(space: &Space, seed: u64) -> (Vec<f32>, f64) {
+    let mut rng = Rng::new(seed);
+    let q: Vec<f32> = (0..space.dim()).map(|_| rng.normal() as f32 * 3.0).collect();
+    let q_sq = dense_dot(&q, &q);
+    (q, q_sq)
+}
+
+fn spaces() -> Vec<(Space, String)> {
+    let mut out = Vec::new();
+    for d in [1usize, 3, 7, 8, 9, 63, 64, 65] {
+        out.push((dense_space(300, d, 40 + d as u64), format!("dense d={d}")));
+    }
+    out.push((dense_space(60, 2000, 99), "dense d=2000".into()));
+    for d in [9usize, 63] {
+        out.push((sparse_space(250, d, 50 + d as u64), format!("sparse d={d}")));
+    }
+    out
+}
+
+#[test]
+fn gather_equals_contig_and_naive_equals_tree_across_dims() {
+    for (space, label) in spaces() {
+        let tree = build(&space, 12, 1);
+        let arena = tree.arena();
+        let (q, q_sq) = query(&space, 7);
+        let (mut gather, mut contig) = (Vec::new(), Vec::new());
+        for &leaf in &tree.leaf_ids() {
+            let ids = tree.points_under(leaf);
+            space.reset_count();
+            block::dists_to_vec(&space, ids, &q, q_sq, &mut gather);
+            let gather_count = space.dist_count();
+            space.reset_count();
+            block::dists_contig_to_vec(arena, tree.node_rows(leaf), &q, q_sq, &mut contig);
+            assert_eq!(space.dist_count(), gather_count, "{label} leaf {leaf} count");
+            assert_eq!(gather.len(), contig.len(), "{label} leaf {leaf} len");
+            for (g, c) in gather.iter().zip(&contig) {
+                assert_eq!(g.to_bits(), c.to_bits(), "{label} leaf {leaf}");
+            }
+        }
+
+        // naive ≡ tree: same neighbor set, bit-identical distances.
+        let k = 6.min(space.n());
+        let naive = knn::naive_knn(&space, &q, q_sq, k, None);
+        let tr = knn::tree_knn(&space, &tree, &q, q_sq, k, None);
+        assert_eq!(naive.len(), tr.len(), "{label} knn len");
+        for (a, b) in naive.iter().zip(&tr) {
+            assert_eq!(a.id, b.id, "{label} knn id");
+            assert_eq!(a.dist.to_bits(), b.dist.to_bits(), "{label} knn dist");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Level 3: the f32 tier is a pure evaluation-strategy knob.
+// ---------------------------------------------------------------------
+
+struct SuiteOut {
+    knn_vec: Vec<knn::Neighbor>,
+    knn_point: Vec<knn::Neighbor>,
+    stats: ballquery::BallStats,
+    moments: ballquery::BallMoments,
+    anomaly_flags: Vec<bool>,
+    f64_evals: u64,
+    f32_evals: u64,
+}
+
+/// A radius that puts real points on both sides of the decision
+/// boundary (so the filter both prunes and passes).
+fn mid_radius(space: &Space, q: &[f32], q_sq: f64) -> f64 {
+    let mut ds: Vec<f64> =
+        (0..space.n()).map(|p| space.dist_to_vec_uncounted(p, q, q_sq)).collect();
+    ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ds[space.n() / 3].max(1e-6)
+}
+
+fn run_suite(space: &Space, tree: &MetricTree, q: &[f32], q_sq: f64, radius: f64) -> SuiteOut {
+    space.reset_count();
+    let k = 6.min(space.n());
+    let knn_vec = knn::tree_knn(space, tree, q, q_sq, k, None);
+    let knn_point = knn::tree_knn_point(space, tree, 2.min(space.n() - 1), k);
+    let stats = ballquery::tree_ball_stats(space, tree, q, radius);
+    let moments = ballquery::tree_ball_moments(space, tree, q, radius);
+    let params = anomaly::AnomalyParams { radius, threshold: 8 };
+    let sweep = anomaly::tree_sweep(space, tree, &params);
+    SuiteOut {
+        knn_vec,
+        knn_point,
+        stats,
+        moments,
+        anomaly_flags: sweep.flags,
+        f64_evals: space.dist_count(),
+        f32_evals: space.f32_dist_count(),
+    }
+}
+
+fn assert_answers_bit_identical(on: &SuiteOut, off: &SuiteOut, what: &str) {
+    // Results must be bit-identical; the `dists` telemetry fields are
+    // *expected* to differ (tier-on does fewer f64 evals), so answers
+    // are compared field by field.
+    assert_eq!(on.knn_vec.len(), off.knn_vec.len(), "{what}: knn len");
+    for (a, b) in on.knn_vec.iter().zip(&off.knn_vec) {
+        assert_eq!(a.id, b.id, "{what}: knn id");
+        assert_eq!(a.dist.to_bits(), b.dist.to_bits(), "{what}: knn dist");
+    }
+    for (a, b) in on.knn_point.iter().zip(&off.knn_point) {
+        assert_eq!(a.id, b.id, "{what}: knn-point id");
+        assert_eq!(a.dist.to_bits(), b.dist.to_bits(), "{what}: knn-point dist");
+    }
+    assert_eq!(on.stats.count, off.stats.count, "{what}: ball count");
+    assert_eq!(on.stats.mean, off.stats.mean, "{what}: ball mean");
+    assert_eq!(
+        on.stats.total_variance.to_bits(),
+        off.stats.total_variance.to_bits(),
+        "{what}: ball variance"
+    );
+    assert_eq!(on.moments.count, off.moments.count, "{what}: moments count");
+    assert_eq!(on.moments.mean, off.moments.mean, "{what}: moments mean");
+    assert_eq!(on.moments.variance, off.moments.variance, "{what}: moments variance");
+    assert_eq!(on.anomaly_flags, off.anomaly_flags, "{what}: anomaly flags");
+}
+
+#[test]
+fn f32_tier_answers_bit_identical_with_deterministic_eval_split() {
+    for (space_off, label) in spaces() {
+        // Identical bits, opposite tier flags.
+        let mut space_on = Space::euclidean(space_off.data.clone());
+        space_on.set_f32_tier(true);
+        assert!(!space_off.f32_tier() && space_on.f32_tier());
+
+        let (q, q_sq) = query(&space_off, 17);
+        let radius = mid_radius(&space_off, &q, q_sq);
+
+        let mut on_split_at: Option<(u64, u64)> = None;
+        for threads in [1usize, 8] {
+            // The tier never touches tree building: identical trees.
+            let t_off = build(&space_off, 12, threads);
+            let t_on = build(&space_on, 12, threads);
+            assert_eq!(t_off.build_dists, t_on.build_dists, "{label} {threads}t: build dists");
+
+            let off = run_suite(&space_off, &t_off, &q, q_sq, radius);
+            assert_eq!(off.f32_evals, 0, "{label} {threads}t: tier-off f32 evals");
+
+            let on = run_suite(&space_on, &t_on, &q, q_sq, radius);
+            assert_answers_bit_identical(&on, &off, &format!("{label} {threads}t"));
+            assert!(on.f32_evals > 0, "{label} {threads}t: filter never engaged");
+            assert!(
+                on.f64_evals < off.f64_evals,
+                "{label} {threads}t: tier-on pruned nothing ({} vs {})",
+                on.f64_evals,
+                off.f64_evals
+            );
+
+            // The (f64, f32) split is deterministic: exact same pair on
+            // a re-run, and at every thread count (the trees are
+            // identical and the queries serial).
+            let again = run_suite(&space_on, &t_on, &q, q_sq, radius);
+            assert_answers_bit_identical(&again, &off, &format!("{label} {threads}t rerun"));
+            assert_eq!(
+                (again.f64_evals, again.f32_evals),
+                (on.f64_evals, on.f32_evals),
+                "{label} {threads}t: eval split drifted on re-run"
+            );
+            match on_split_at {
+                None => on_split_at = Some((on.f64_evals, on.f32_evals)),
+                Some(first) => assert_eq!(
+                    first,
+                    (on.f64_evals, on.f32_evals),
+                    "{label}: eval split differs across thread counts"
+                ),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Level 4: the engine knob.
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_f32_tier_knob_is_exact_and_separately_accounted() {
+    let spec = DatasetSpec::scaled(DatasetKind::Cell, 0.01);
+    let workload = [
+        Query::Knn(KnnQuery { target: KnnTarget::Point(3), k: 5, use_tree: true }),
+        Query::Knn(KnnQuery { target: KnnTarget::Point(7), k: 4, use_tree: false }),
+        Query::BallStats(BallStatsQuery {
+            center: vec![0.25; DatasetKind::Cell.dims()],
+            radius: 2.0,
+            use_tree: true,
+        }),
+    ];
+    let run = |tier: bool| {
+        let index = IndexBuilder::new(spec.clone())
+            .rmin(16)
+            .with_f32_tier(tier)
+            .build();
+        assert_eq!(index.f32_tier(), tier, "builder knob did not reach the space");
+        let results: Vec<_> = workload.iter().map(|query| index.run(query)).collect();
+        (results, index.f32_dist_count())
+    };
+    let (off_results, off_f32) = run(false);
+    let (on_results, on_f32) = run(true);
+    assert_eq!(off_f32, 0, "tier-off index did f32 evals");
+    assert!(on_f32 > 0, "tier-on index never used the filter");
+    assert_eq!(off_results, on_results, "tier changed an engine answer");
+}

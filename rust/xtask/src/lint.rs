@@ -135,7 +135,7 @@ const CLOCK_TOKENS: [&str; 6] = [
     "elapsed",
 ];
 
-const UNCOUNTED_TOKENS: [&str; 10] = [
+const UNCOUNTED_TOKENS: [&str; 13] = [
     "dist_uncounted",
     "dist_to_vec_uncounted",
     "dense_dot",
@@ -146,6 +146,15 @@ const UNCOUNTED_TOKENS: [&str; 10] = [
     "dot_vec",
     "rows_slab",
     ".row(",
+    // f32 filter-tier entry points. Token matching is identifier-exact,
+    // so `dense_dot` above does NOT cover `dense_dot_f32` — each raw f32
+    // kernel needs its own token. `block::dists_contig_to_vec_f32` is
+    // fine to call (it bumps both counter cells itself), but algorithm
+    // code reaching for the raw kernels or the f32 slab bypasses the
+    // f32_evals accounting exactly like the f64 tokens above.
+    "dense_dot_f32",
+    "dot_vec_f32",
+    "rows_slab_f32",
 ];
 
 const THREAD_TOKENS: [&str; 5] = [

@@ -1,0 +1,10 @@
+//! D3 fixture (clean): f32 filter-tier work routed through the counted
+//! block helper — it bumps both counter cells itself, so no token fires.
+use crate::metrics::{block, Space};
+
+pub fn prune(space: &Space, q: &[f32], out_r: &mut Vec<u32>, out_d: &mut Vec<f64>) {
+    if let Some(f) = block::F32Filter::new(space, q) {
+        let q_sq = q.iter().map(|&x| x as f64 * x as f64).sum();
+        block::dists_contig_to_vec_f32(space, 0..space.n(), q, q_sq, &f, 1.0, out_r, out_d);
+    }
+}

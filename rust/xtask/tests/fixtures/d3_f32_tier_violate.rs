@@ -1,0 +1,9 @@
+//! D3 fixture: raw f32 filter-tier kernels outside the counted block
+//! helper. Each body line trips one widened `uncounted-dist` token.
+use crate::metrics::dense_dot_f32;
+
+pub fn prune(d: &crate::data::Data, q: &[f32]) -> f32 {
+    let (slab, _norms) = d.rows_slab_f32(0..4);
+    let sparse = d.dot_vec_f32(0, q);
+    sparse + dense_dot_f32(&slab[..q.len()], q)
+}

@@ -73,6 +73,26 @@ fn d3_uncounted_dist() {
 }
 
 #[test]
+fn d3_f32_tier_tokens() {
+    // The f32 tier's raw kernels get their own tokens: token matching is
+    // identifier-exact, so `dense_dot` does NOT cover `dense_dot_f32`.
+    let v = lint_fixture("d3_f32_tier_violate.rs", ALGO);
+    assert_diags(
+        &v,
+        &[
+            (6, "uncounted-dist", "rows_slab_f32"),
+            (7, "uncounted-dist", "dot_vec_f32"),
+            (8, "uncounted-dist", "dense_dot_f32"),
+        ],
+    );
+    // Routing through block::dists_contig_to_vec_f32 (which counts both
+    // cells itself) is clean with no allow needed.
+    let c = lint_fixture("d3_f32_tier_clean.rs", ALGO);
+    assert_diags(&c, &[]);
+    assert_eq!(c.suppressed, 0);
+}
+
+#[test]
 fn d4_threads() {
     let v = lint_fixture("d4_threads_violate.rs", ALGO);
     // `std::thread::spawn` trips both thread tokens on the same line.
