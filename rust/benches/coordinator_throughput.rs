@@ -13,13 +13,19 @@
 //! Prints one report line per shard count and overwrites the repo-root
 //! `BENCH_shards.json` baseline (committed as `status:"pending"` until
 //! run on a machine with a toolchain, per the BENCH_* convention).
+//! Since PR 9 the baseline also records the serving-edge latency
+//! histograms (queue-wait / build / end-to-end merged across shards and
+//! families) from the final timed iteration at each shard count —
+//! p50/p99 under contention is the tail-latency view jobs/sec hides.
 
 use anchors_hierarchy::bench::harness::Bencher;
-use anchors_hierarchy::coordinator::{JobSpec, JobState, ShardedCoordinator};
+use anchors_hierarchy::coordinator::{JobSpec, JobState, ObsSnapshot, ShardedCoordinator};
 use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
 use anchors_hierarchy::engine::{
     AllPairsQuery, AnomalyQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
 };
+use anchors_hierarchy::obs::HistogramSnapshot;
+use std::cell::RefCell;
 use std::fmt::Write as _;
 
 const SHARDS: [usize; 4] = [1, 2, 4, 8];
@@ -73,6 +79,23 @@ fn stream() -> Vec<JobSpec> {
     jobs
 }
 
+/// Histogram summary for the baseline JSON: count/mean plus p50/p99
+/// bucket upper bounds (`null` when the histogram is empty or the
+/// quantile lands in the overflow bucket).
+fn hist_json(h: &HistogramSnapshot) -> String {
+    let q = |q: f64| {
+        h.quantile_upper_bound(q)
+            .map_or("null".to_string(), |v| v.to_string())
+    };
+    format!(
+        "{{ \"count\": {}, \"mean_us\": {:.1}, \"p50_us\": {}, \"p99_us\": {} }}",
+        h.count,
+        h.mean_micros(),
+        q(0.5),
+        q(0.99)
+    )
+}
+
 fn main() {
     let jobs = stream();
     println!(
@@ -82,8 +105,12 @@ fn main() {
     );
 
     let mut rates = Vec::new();
+    let mut latencies: Vec<(usize, ObsSnapshot)> = Vec::new();
     for &n_shards in &SHARDS {
         let bencher = Bencher::new(1, 3);
+        // Each iteration overwrites this with its edge-latency snapshot;
+        // what survives the bench run is the final (steadiest) iteration.
+        let last_obs: RefCell<Option<ObsSnapshot>> = RefCell::new(None);
         let (stats, completed) = bencher.run(&format!("coordinator/{n_shards}-shards"), |_| {
             let coord = ShardedCoordinator::new(n_shards, WORKERS_PER_SHARD, jobs.len() + 1);
             let ids: Vec<_> = jobs
@@ -98,6 +125,7 @@ fn main() {
                     _ => unreachable!(),
                 }
             }
+            *last_obs.borrow_mut() = Some(coord.obs());
             let m = coord.shutdown();
             assert_eq!(m.completed as usize, done);
             done
@@ -105,6 +133,20 @@ fn main() {
         println!("{}", stats.report());
         assert_eq!(completed, jobs.len());
         rates.push(jobs.len() as f64 / stats.mean);
+        let snap = last_obs.into_inner().expect("at least one timed iteration");
+        let e2e_all = snap
+            .e2e
+            .iter()
+            .fold(HistogramSnapshot::default(), |acc, h| acc.merge(h));
+        println!(
+            "  edge latency ({n_shards} shards): queue-wait p50 {:?}us p99 {:?}us  \
+             e2e p50 {:?}us p99 {:?}us",
+            snap.queue_wait.quantile_upper_bound(0.5),
+            snap.queue_wait.quantile_upper_bound(0.99),
+            e2e_all.quantile_upper_bound(0.5),
+            e2e_all.quantile_upper_bound(0.99),
+        );
+        latencies.push((n_shards, snap));
     }
 
     // --- record the baseline ----------------------------------------------
@@ -123,6 +165,23 @@ fn main() {
         .map(|(s, r)| format!("    {{ \"shards\": {s}, \"jobs_per_sec\": {r:.3} }}"))
         .collect();
     let _ = writeln!(json, "  \"throughput\": [\n{}\n  ],", vals.join(",\n"));
+    let lat_rows: Vec<String> = latencies
+        .iter()
+        .map(|(s, snap)| {
+            let e2e_all = snap
+                .e2e
+                .iter()
+                .fold(HistogramSnapshot::default(), |acc, h| acc.merge(h));
+            format!(
+                "    {{ \"shards\": {s}, \"queue_wait_us\": {}, \"build_us\": {}, \
+                 \"e2e_us\": {} }}",
+                hist_json(&snap.queue_wait),
+                hist_json(&snap.build),
+                hist_json(&e2e_all)
+            )
+        })
+        .collect();
+    let _ = writeln!(json, "  \"latency\": [\n{}\n  ],", lat_rows.join(",\n"));
     let _ = writeln!(json, "  \"speedup_4_shards\": {:.3}", rates[2] / rates[0]);
     let _ = writeln!(json, "}}");
     // Anchor on the manifest dir: cargo runs benches with cwd = rust/,

@@ -32,6 +32,7 @@ pub fn naive_close_pairs(space: &Space, tau: f64) -> PairsResult {
         if i + 1 >= n {
             break;
         }
+        space.obs().leaf_rows(crate::ids::u64_from_usize(n - i - 1));
         block::dists_contig_rows(space, i..i + 1, i + 1..n, &mut dists);
         for (off, &d) in dists.iter().enumerate() {
             if d <= tau {
@@ -49,28 +50,34 @@ pub fn tree_close_pairs(space: &Space, tree: &MetricTree, tau: f64) -> PairsResu
     let mut pairs = Vec::new();
     // Leaf-scan scratch reused by every surviving leaf pair.
     let mut dists: Vec<f64> = Vec::new();
-    dual(space, tree, tree.root, tree.root, tau, &mut pairs, &mut dists);
+    dual(space, tree, tree.root, tree.root, tau, 0, &mut pairs, &mut dists);
     // Canonical order for comparability with the naive path.
     pairs.sort_unstable();
     pairs.dedup();
     PairsResult { pairs, dists: space.dist_count() - before }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dual(
     space: &Space,
     tree: &MetricTree,
     a: NodeId,
     b: NodeId,
     tau: f64,
+    depth: usize,
     out: &mut Vec<(u32, u32)>,
     dists: &mut Vec<f64>,
 ) {
+    // Dual-tree telemetry: each call is one node-*pair* visit, and
+    // `leaf_rows` counts pair evaluations in the leaf blocks.
+    space.obs().visit(depth);
     let (na, nb) = (tree.node(a), tree.node(b));
     if a != b {
         // Lower bound on any cross distance; one counted pivot-pivot
         // distance buys the possibility of pruning |a|·|b| pairs.
         let d = space.dist_vv(&na.pivot, &nb.pivot);
         if d - na.radius - nb.radius > tau {
+            space.obs().prune(crate::obs::PruneRule::Triangle);
             return;
         }
     }
@@ -84,6 +91,10 @@ fn dual(
             let ra = tree.node_rows(a);
             let ids_a = tree.points_under(a);
             if a == b {
+                let len = ra.len();
+                space
+                    .obs()
+                    .leaf_rows(crate::ids::u64_from_usize(len * len.saturating_sub(1) / 2));
                 // Upper triangle, one contiguous row-tail per point:
                 // the same |L|·(|L|−1)/2 counted distances as the
                 // pointwise double loop.
@@ -105,6 +116,9 @@ fn dual(
                 // the full |A|·|B| block matches the scalar accounting.
                 let rb = tree.node_rows(b);
                 let ids_b = tree.points_under(b);
+                space
+                    .obs()
+                    .leaf_rows(crate::ids::u64_from_usize(ra.len() * rb.len()));
                 block::dists_contig_rows(arena, ra, rb, dists);
                 for (pi, &p) in ids_a.iter().enumerate() {
                     let row = &dists[pi * ids_b.len()..(pi + 1) * ids_b.len()];
@@ -117,25 +131,25 @@ fn dual(
             }
         }
         (Some((a1, a2)), None) => {
-            dual(space, tree, a1, b, tau, out, dists);
-            dual(space, tree, a2, b, tau, out, dists);
+            dual(space, tree, a1, b, tau, depth + 1, out, dists);
+            dual(space, tree, a2, b, tau, depth + 1, out, dists);
         }
         (None, Some((b1, b2))) => {
-            dual(space, tree, a, b1, tau, out, dists);
-            dual(space, tree, a, b2, tau, out, dists);
+            dual(space, tree, a, b1, tau, depth + 1, out, dists);
+            dual(space, tree, a, b2, tau, depth + 1, out, dists);
         }
         (Some((a1, a2)), Some((b1, b2))) => {
             if a == b {
                 // Self pair: three sub-problems, not four.
-                dual(space, tree, a1, a1, tau, out, dists);
-                dual(space, tree, a2, a2, tau, out, dists);
-                dual(space, tree, a1, a2, tau, out, dists);
+                dual(space, tree, a1, a1, tau, depth + 1, out, dists);
+                dual(space, tree, a2, a2, tau, depth + 1, out, dists);
+                dual(space, tree, a1, a2, tau, depth + 1, out, dists);
             } else if na.radius >= nb.radius {
-                dual(space, tree, a1, b, tau, out, dists);
-                dual(space, tree, a2, b, tau, out, dists);
+                dual(space, tree, a1, b, tau, depth + 1, out, dists);
+                dual(space, tree, a2, b, tau, depth + 1, out, dists);
             } else {
-                dual(space, tree, a, b1, tau, out, dists);
-                dual(space, tree, a, b2, tau, out, dists);
+                dual(space, tree, a, b1, tau, depth + 1, out, dists);
+                dual(space, tree, a, b2, tau, depth + 1, out, dists);
             }
         }
     }

@@ -34,10 +34,12 @@ pub fn naive_is_anomaly(space: &Space, q: usize, params: &AnomalyParams) -> bool
         if space.dist(p, q) <= params.radius {
             found += 1;
             if found >= params.threshold {
+                space.obs().leaf_rows(crate::ids::u64_from_usize(p + 1));
                 return false;
             }
         }
     }
+    space.obs().leaf_rows(crate::ids::u64_from_usize(space.n()));
     true
 }
 
@@ -85,6 +87,7 @@ pub fn tree_is_anomaly_vec(
         qrow,
         q_sq,
         params,
+        0,
         &mut found,
         &mut possible,
         &filter,
@@ -115,6 +118,7 @@ fn recurse(
     qrow: &[f32],
     q_sq: f64,
     params: &AnomalyParams,
+    depth: usize,
     found: &mut u64,
     possible: &mut u64,
     filter: &Option<block::F32Filter>,
@@ -123,11 +127,15 @@ fn recurse(
 ) -> Option<bool> {
     let node = tree.node(node_id);
     space.count_bulk(1);
+    let obs = space.obs();
+    obs.visit(depth);
 
     // Rule 1: whole node within range.
     if d_pivot + node.radius <= params.radius {
         *found += node.count as u64;
+        obs.prune(crate::obs::PruneRule::Triangle);
         if *found >= params.threshold {
+            obs.prune(crate::obs::PruneRule::Rule3);
             return Some(false); // rule 3
         }
         return None;
@@ -135,7 +143,9 @@ fn recurse(
     // Rule 2: whole node out of range.
     if d_pivot - node.radius > params.radius {
         *possible -= node.count as u64;
+        obs.prune(crate::obs::PruneRule::Triangle);
         if *possible < params.threshold {
+            obs.prune(crate::obs::PruneRule::Rule4);
             return Some(true); // rule 4
         }
         return None;
@@ -155,6 +165,7 @@ fn recurse(
                 // visit every point — the contiguous kernel over the
                 // leaf's arena slab is safe and its bulk accounting
                 // matches the pointwise count exactly.
+                obs.leaf_rows(leaf);
                 match filter {
                     Some(f) => {
                         block::dists_contig_to_vec_f32(
@@ -164,6 +175,10 @@ fn recurse(
                         // tier-off scan would take its `possible -= 1`
                         // branch, so settle them in one subtraction.
                         *possible -= leaf - frows.len() as u64;
+                        obs.prune_n(
+                            crate::obs::PruneRule::F32Reject,
+                            leaf - crate::ids::u64_from_usize(frows.len()),
+                        );
                         for &d in dists.iter() {
                             if d <= params.radius {
                                 *found += 1;
@@ -188,20 +203,27 @@ fn recurse(
             // Early-exit-eligible leaf: pointwise over the same arena
             // rows (sequential reads; same values, same per-point
             // counting, same exit points as the gather scan).
+            let mut scanned = 0u64;
             for r in rows {
+                scanned += 1;
                 let d = arena.dist_to_vec(r, qrow, q_sq);
                 if d <= params.radius {
                     *found += 1;
                     if *found >= params.threshold {
+                        obs.leaf_rows(scanned);
+                        obs.prune(crate::obs::PruneRule::Rule3);
                         return Some(false); // rule 3
                     }
                 } else {
                     *possible -= 1;
                     if *possible < params.threshold {
+                        obs.leaf_rows(scanned);
+                        obs.prune(crate::obs::PruneRule::Rule4);
                         return Some(true); // rule 4
                     }
                 }
             }
+            obs.leaf_rows(scanned);
             None
         }
         Some((a, b)) => {
@@ -215,14 +237,14 @@ fn recurse(
             let ((first, d_first), (second, d_second)) =
                 if da <= db { ((a, da), (b, db)) } else { ((b, db), (a, da)) };
             if let Some(v) = recurse(
-                space, tree, first, d_first, qrow, q_sq, params, found, possible, filter, dists,
-                frows,
+                space, tree, first, d_first, qrow, q_sq, params, depth + 1, found, possible,
+                filter, dists, frows,
             ) {
                 return Some(v);
             }
             recurse(
-                space, tree, second, d_second, qrow, q_sq, params, found, possible, filter,
-                dists, frows,
+                space, tree, second, d_second, qrow, q_sq, params, depth + 1, found, possible,
+                filter, dists, frows,
             )
         }
     }

@@ -69,10 +69,15 @@ pub fn naive_ball_stats(space: &Space, center: &[f32], radius: f64) -> BallStats
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
         match &filter {
             Some(f) => {
                 block::dists_contig_to_vec_f32(
                     space, lo..hi, center, c_sq, f, radius, &mut frows, &mut dists,
+                );
+                space.obs().prune_n(
+                    crate::obs::PruneRule::F32Reject,
+                    crate::ids::u64_from_usize(hi - lo - frows.len()),
                 );
                 for (&row, &d) in frows.iter().zip(&dists) {
                     if d <= radius {
@@ -123,7 +128,8 @@ pub fn tree_ball_stats(
     let mut dists: Vec<f64> = Vec::new();
     let mut frows: Vec<u32> = Vec::new();
     recurse(
-        space, tree, tree.root, center, c_sq, radius, &mut acc, &filter, &mut dists, &mut frows,
+        space, tree, tree.root, center, c_sq, radius, 0, &mut acc, &filter, &mut dists,
+        &mut frows,
     );
     finish(acc, space.dist_count() - before)
 }
@@ -136,6 +142,7 @@ fn recurse(
     center: &[f32],
     c_sq: f64,
     radius: f64,
+    depth: usize,
     acc: &mut Acc,
     filter: &Option<block::F32Filter>,
     dists: &mut Vec<f64>,
@@ -143,10 +150,13 @@ fn recurse(
 ) {
     let node = tree.node(id);
     space.count_bulk(1);
+    space.obs().visit(depth);
     // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
     let d2 = (c_sq + node.pivot_sq - 2.0 * dense_dot(center, &node.pivot)).max(0.0);
     let d = d2.sqrt();
     // Node entirely inside the query ball: consume cached statistics.
+    // Both whole-in and whole-out settle the node from one pivot
+    // distance — each is a triangle-inequality prune of the subtree.
     if d + node.radius <= radius {
         acc.count += node.count as u64;
         for (a, s) in acc.sum.iter_mut().zip(&node.sum) {
@@ -154,16 +164,18 @@ fn recurse(
         }
         acc.sumsq += node.sumsq;
         acc.whole_nodes += 1;
+        space.obs().prune(crate::obs::PruneRule::Triangle);
         return;
     }
     // Node entirely outside: nothing.
     if d - node.radius > radius {
+        space.obs().prune(crate::obs::PruneRule::Triangle);
         return;
     }
     match node.children {
         Some((a, b)) => {
-            recurse(space, tree, a, center, c_sq, radius, acc, filter, dists, frows);
-            recurse(space, tree, b, center, c_sq, radius, acc, filter, dists, frows);
+            recurse(space, tree, a, center, c_sq, radius, depth + 1, acc, filter, dists, frows);
+            recurse(space, tree, b, center, c_sq, radius, depth + 1, acc, filter, dists, frows);
         }
         None => {
             // Boundary leaf: contiguous kernel over the leaf's arena
@@ -174,10 +186,16 @@ fn recurse(
             // the gather path add for add).
             let arena = tree.arena();
             let rows = tree.node_rows(id);
+            space.obs().leaf_rows(crate::ids::u64_from_usize(rows.len()));
             match filter {
                 Some(f) => {
+                    let n_rows = rows.len();
                     block::dists_contig_to_vec_f32(
                         arena, rows, center, c_sq, f, radius, frows, dists,
+                    );
+                    space.obs().prune_n(
+                        crate::obs::PruneRule::F32Reject,
+                        crate::ids::u64_from_usize(n_rows - frows.len()),
                     );
                     for (&row, &d) in frows.iter().zip(dists.iter()) {
                         if d <= radius {
@@ -246,10 +264,15 @@ pub fn naive_ball_moments(space: &Space, center: &[f32], radius: f64) -> BallMom
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
         match &filter {
             Some(f) => {
                 block::dists_contig_to_vec_f32(
                     space, lo..hi, center, c_sq, f, radius, &mut frows, &mut dists,
+                );
+                space.obs().prune_n(
+                    crate::obs::PruneRule::F32Reject,
+                    crate::ids::u64_from_usize(hi - lo - frows.len()),
                 );
                 for (&row, &d) in frows.iter().zip(&dists) {
                     if d <= radius {
@@ -302,7 +325,8 @@ pub fn tree_ball_moments(
     let mut dists: Vec<f64> = Vec::new();
     let mut frows: Vec<u32> = Vec::new();
     moments_recurse(
-        space, tree, tree.root, center, c_sq, radius, &mut acc, &filter, &mut dists, &mut frows,
+        space, tree, tree.root, center, c_sq, radius, 0, &mut acc, &filter, &mut dists,
+        &mut frows,
     );
     finish_moments(acc, space.dist_count() - before)
 }
@@ -315,6 +339,7 @@ fn moments_recurse(
     center: &[f32],
     c_sq: f64,
     radius: f64,
+    depth: usize,
     acc: &mut MomentsAcc,
     filter: &Option<block::F32Filter>,
     dists: &mut Vec<f64>,
@@ -322,6 +347,7 @@ fn moments_recurse(
 ) {
     let node = tree.node(id);
     space.count_bulk(1);
+    space.obs().visit(depth);
     // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
     let d2 = (c_sq + node.pivot_sq - 2.0 * dense_dot(center, &node.pivot)).max(0.0);
     let d = d2.sqrt();
@@ -335,23 +361,35 @@ fn moments_recurse(
         }
         acc.sumsq += node.sumsq;
         acc.whole_nodes += 1;
+        space.obs().prune(crate::obs::PruneRule::Triangle);
         return;
     }
     if d - node.radius > radius {
+        space.obs().prune(crate::obs::PruneRule::Triangle);
         return;
     }
     match node.children {
         Some((a, b)) => {
-            moments_recurse(space, tree, a, center, c_sq, radius, acc, filter, dists, frows);
-            moments_recurse(space, tree, b, center, c_sq, radius, acc, filter, dists, frows);
+            moments_recurse(
+                space, tree, a, center, c_sq, radius, depth + 1, acc, filter, dists, frows,
+            );
+            moments_recurse(
+                space, tree, b, center, c_sq, radius, depth + 1, acc, filter, dists, frows,
+            );
         }
         None => {
             let arena = tree.arena();
             let rows = tree.node_rows(id);
+            space.obs().leaf_rows(crate::ids::u64_from_usize(rows.len()));
             match filter {
                 Some(f) => {
+                    let n_rows = rows.len();
                     block::dists_contig_to_vec_f32(
                         arena, rows, center, c_sq, f, radius, frows, dists,
+                    );
+                    space.obs().prune_n(
+                        crate::obs::PruneRule::F32Reject,
+                        crate::ids::u64_from_usize(n_rows - frows.len()),
                     );
                     for (&row, &d) in frows.iter().zip(dists.iter()) {
                         if d <= radius {

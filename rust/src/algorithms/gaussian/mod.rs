@@ -73,6 +73,7 @@ pub fn naive_em_step(space: &Space, mix: &mut Mixture) -> f64 {
     let m_sq: Vec<f64> = mix.means.iter().map(|m| dense_dot(m, m)).collect();
     let mut acc = EmAccum::new(k, d);
     let mut logw = vec![0f64; k];
+    space.obs().leaf_rows(crate::ids::u64_from_usize(space.n()));
     for p in 0..space.n() {
         for c in 0..k {
             let dist = space.dist_to_vec(p, &mix.means[c], m_sq[c]);
@@ -106,7 +107,7 @@ pub fn tree_em_step(space: &Space, tree: &MetricTree, mix: &mut Mixture, tau: f6
         dists: Vec::new(),
         logw: vec![0f64; k],
     };
-    recurse(space, tree, tree.root, mix, &m_sq, tau, &mut acc, &mut scratch);
+    recurse(space, tree, tree.root, mix, &m_sq, tau, 0, &mut acc, &mut scratch);
     m_step(space, mix, &acc);
     acc.loglik
 }
@@ -119,12 +120,14 @@ fn recurse(
     mix: &Mixture,
     m_sq: &[f64],
     tau: f64,
+    depth: usize,
     acc: &mut EmAccum,
     scratch: &mut EmScratch,
 ) {
     let node = tree.node(id);
     let k = mix.k();
     let dim = space.dim();
+    space.obs().visit(depth);
     // Bracket log-weights over the node's ball (k counted distances).
     let mut lo = vec![0f64; k];
     let mut hi = vec![0f64; k];
@@ -167,13 +170,16 @@ fn recurse(
     // pivot-centered responsibilities, which is an approximation even when
     // the bracket is numerically degenerate-tight).
     if tight && tau > 0.0 && !node.is_leaf() {
+        // Responsibility bracket closed within tau: the bulk award is a
+        // budget-style prune (approximation budget, not a triangle cut).
+        space.obs().prune(crate::obs::PruneRule::Budget);
         award_node(space, node, &center, acc);
         return;
     }
     match node.children {
         Some((a, b)) => {
-            recurse(space, tree, a, mix, m_sq, tau, acc, scratch);
-            recurse(space, tree, b, mix, m_sq, tau, acc, scratch);
+            recurse(space, tree, a, mix, m_sq, tau, depth + 1, acc, scratch);
+            recurse(space, tree, b, mix, m_sq, tau, depth + 1, acc, scratch);
         }
         None => {
             // Leaf E-step on the tree-order arena: one contiguous
@@ -183,6 +189,7 @@ fn recurse(
             // row exactly as before.
             let arena = tree.arena();
             let rows = tree.node_rows(id);
+            space.obs().leaf_rows(crate::ids::u64_from_usize(rows.len()));
             block::dists_contig_to_centers(
                 arena,
                 rows.clone(),

@@ -143,6 +143,7 @@ pub fn naive_kde(space: &Space, center: &[f32], kernel: Kernel, h: f64) -> KdeRe
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
         block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
         for &d in &dists {
             sum += kernel.eval(d, h);
@@ -184,7 +185,7 @@ pub fn tree_kde(
     let n = tree.n_points();
     let mut dists: Vec<f64> = Vec::new();
     kde_recurse(
-        space, tree, tree.root, center, c_sq, kernel, h, budget, n, &mut acc, &mut dists,
+        space, tree, tree.root, center, c_sq, kernel, h, budget, n, 0, &mut acc, &mut dists,
     );
     KdeResult {
         sum: acc.sum,
@@ -214,11 +215,13 @@ fn kde_recurse(
     h: f64,
     budget: ErrorBudget,
     n: usize,
+    depth: usize,
     acc: &mut KdeAcc,
     dists: &mut Vec<f64>,
 ) {
     let node = tree.node(id);
     space.count_bulk(1);
+    space.obs().visit(depth);
     // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
     let d2 = (c_sq + node.pivot_sq - 2.0 * dense_dot(center, &node.pivot)).max(0.0);
     let d = d2.sqrt();
@@ -233,18 +236,21 @@ fn kde_recurse(
         acc.err += count * half_width;
         acc.lower += count * kmin;
         acc.whole_nodes += 1;
+        space.obs().prune(crate::obs::PruneRule::Budget);
         return;
     }
     match node.children {
         Some((a, b)) => {
-            kde_recurse(space, tree, a, center, c_sq, kernel, h, budget, n, acc, dists);
-            kde_recurse(space, tree, b, center, c_sq, kernel, h, budget, n, acc, dists);
+            kde_recurse(space, tree, a, center, c_sq, kernel, h, budget, n, depth + 1, acc, dists);
+            kde_recurse(space, tree, b, center, c_sq, kernel, h, budget, n, depth + 1, acc, dists);
         }
         None => {
             // Unresolved leaf: exact kernel sum over its contiguous
             // arena rows — one sequential slab, counted per tile.
             let arena = tree.arena();
-            block::dists_contig_to_vec(arena, tree.node_rows(id), center, c_sq, dists);
+            let rows = tree.node_rows(id);
+            space.obs().leaf_rows(crate::ids::u64_from_usize(rows.len()));
+            block::dists_contig_to_vec(arena, rows, center, c_sq, dists);
             let mut exact = 0.0f64;
             for &d in dists.iter() {
                 exact += kernel.eval(d, h);
@@ -274,6 +280,7 @@ pub fn naive_kernel_regression(
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
         block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
         for (off, &d) in dists.iter().enumerate() {
             let k = kernel.eval(d, h);
@@ -326,7 +333,7 @@ pub fn tree_kernel_regression(
     let n = tree.n_points();
     let mut dists: Vec<f64> = Vec::new();
     kreg_recurse(
-        space, tree, tree.root, center, c_sq, target_dim, kernel, h, budget, n, &mut acc,
+        space, tree, tree.root, center, c_sq, target_dim, kernel, h, budget, n, 0, &mut acc,
         &mut dists,
     );
     let prediction = if acc.wsum > 0.0 { acc.nsum / acc.wsum } else { 0.0 };
@@ -364,11 +371,13 @@ fn kreg_recurse(
     h: f64,
     budget: ErrorBudget,
     n: usize,
+    depth: usize,
     acc: &mut KregAcc,
     dists: &mut Vec<f64>,
 ) {
     let node = tree.node(id);
     space.count_bulk(1);
+    space.obs().visit(depth);
     // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
     let d2 = (c_sq + node.pivot_sq - 2.0 * dense_dot(center, &node.pivot)).max(0.0);
     let d = d2.sqrt();
@@ -387,20 +396,24 @@ fn kreg_recurse(
         acc.nerr += half_width * (count * node.sum2[target_dim]).sqrt();
         acc.lower += count * kmin;
         acc.whole_nodes += 1;
+        space.obs().prune(crate::obs::PruneRule::Budget);
         return;
     }
     match node.children {
         Some((a, b)) => {
             kreg_recurse(
-                space, tree, a, center, c_sq, target_dim, kernel, h, budget, n, acc, dists,
+                space, tree, a, center, c_sq, target_dim, kernel, h, budget, n, depth + 1, acc,
+                dists,
             );
             kreg_recurse(
-                space, tree, b, center, c_sq, target_dim, kernel, h, budget, n, acc, dists,
+                space, tree, b, center, c_sq, target_dim, kernel, h, budget, n, depth + 1, acc,
+                dists,
             );
         }
         None => {
             let arena = tree.arena();
             let rows = tree.node_rows(id);
+            space.obs().leaf_rows(crate::ids::u64_from_usize(rows.len()));
             block::dists_contig_to_vec(arena, rows.clone(), center, c_sq, dists);
             let mut w_exact = 0.0f64;
             for (r, &d) in rows.zip(dists.iter()) {

@@ -158,6 +158,7 @@ fn naive_pass(
         let mut lo = range.start;
         while lo < range.end {
             let hi = (lo + block::TILE).min(range.end);
+            space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
             block::dists_contig_to_centers(space, lo..hi, &ident, centroids, c_sq, &mut dists);
             for (ti, p) in (lo..hi).enumerate() {
                 let row = &dists[ti * k..(ti + 1) * k];
@@ -202,6 +203,7 @@ fn naive_pass_xla(
         block_rows.extend((row as u32)..(hi as u32));
         let d2 = engine.dist2_block(space, &block_rows, centroids);
         space.count_bulk((block_rows.len() * k) as u64);
+        space.obs().leaf_rows(crate::ids::u64_from_usize(block_rows.len()));
         for (bi, &p) in block_rows.iter().enumerate() {
             let drow = &d2[bi * k..(bi + 1) * k];
             let (mut best, mut best_c) = (f64::INFINITY, 0usize);
@@ -345,7 +347,10 @@ fn reduce_cands(
 
 /// Award a whole node to candidate `c`: cached sufficient statistics
 /// deliver count, Σx and the exact distortion contribution in O(d).
+/// Each award is one triangle-blacklisting prune — the subtree below is
+/// settled without touching a point.
 fn award_node(ctx: &StepCtx, node: &Node, c: usize, acc: &mut Accum) {
+    ctx.space.obs().prune(crate::obs::PruneRule::Triangle);
     acc.counts[c] += node.count as u64;
     for (j, s) in node.sum.iter().enumerate() {
         acc.sums[c][j] += s;
@@ -354,17 +359,21 @@ fn award_node(ctx: &StepCtx, node: &Node, c: usize, acc: &mut Accum) {
 }
 
 /// One tree pass. `lo..hi` indexes this node's candidate set inside
-/// `scratch.cands`.
+/// `scratch.cands`. `depth` is the node's tree depth (root = 0), used
+/// only for observability fan-out attribution.
+#[allow(clippy::too_many_arguments)]
 fn kmeans_step(
     ctx: &StepCtx,
     node_id: NodeId,
     lo: usize,
     hi: usize,
+    depth: usize,
     scratch: &mut StepScratch,
     acc: &mut Accum,
 ) {
     let node = ctx.tree.node(node_id);
     debug_assert!(hi > lo);
+    ctx.space.obs().visit(depth);
     let (new_lo, new_hi) = reduce_cands(ctx, node, lo, hi, scratch);
 
     // ---- Step 2: award mass ----------------------------------------
@@ -376,8 +385,8 @@ fn kmeans_step(
     }
     match node.children {
         Some((a, b)) => {
-            kmeans_step(ctx, a, new_lo, new_hi, scratch, acc);
-            kmeans_step(ctx, b, new_lo, new_hi, scratch, acc);
+            kmeans_step(ctx, a, new_lo, new_hi, depth + 1, scratch, acc);
+            kmeans_step(ctx, b, new_lo, new_hi, depth + 1, scratch, acc);
         }
         None => {
             let StepScratch { cands, block, row_ids, .. } = scratch;
@@ -405,6 +414,10 @@ fn kmeans_step(
 struct StepTask {
     children: (NodeId, NodeId),
     cands: Vec<u32>,
+    /// Tree depth of the two children (for fan-out attribution), so the
+    /// parallel recursion reports the same per-level counts the serial
+    /// pass would.
+    depth: usize,
 }
 
 /// Subtrees at or below this point count stay whole (one task).
@@ -429,6 +442,10 @@ fn collect_step_tasks(
 ) {
     let node = ctx.tree.node(node_id);
     debug_assert!(hi > lo);
+    // `depth` counts DOWN from STEP_FRONTIER_DEPTH (a frontier budget);
+    // the node's tree depth counts up from the root.
+    let tree_depth = STEP_FRONTIER_DEPTH - depth;
+    ctx.space.obs().visit(tree_depth);
     let (new_lo, new_hi) = reduce_cands(ctx, node, lo, hi, scratch);
     if new_hi - new_lo == 1 {
         award_node(ctx, node, scratch.cands[new_lo] as usize, acc);
@@ -441,6 +458,7 @@ fn collect_step_tasks(
                 tasks.push(StepTask {
                     children: (a, b),
                     cands: scratch.cands[new_lo..new_hi].to_vec(),
+                    depth: tree_depth + 1,
                 });
             } else {
                 collect_step_tasks(ctx, a, new_lo, new_hi, depth - 1, scratch, acc, tasks);
@@ -467,8 +485,8 @@ fn run_step_task(ctx: &StepCtx, task: &StepTask) -> Accum {
         row_ids: Vec::new(),
     };
     let (a, b) = task.children;
-    kmeans_step(ctx, a, 0, n0, &mut scratch, &mut acc);
-    kmeans_step(ctx, b, 0, n0, &mut scratch, &mut acc);
+    kmeans_step(ctx, a, 0, n0, task.depth, &mut scratch, &mut acc);
+    kmeans_step(ctx, b, 0, n0, task.depth, &mut scratch, &mut acc);
     debug_assert_eq!(scratch.cands.len(), n0, "task scratch stack leaked");
     acc
 }
@@ -483,6 +501,7 @@ fn leaf_assign(
     row_ids: &mut Vec<u32>,
 ) {
     let rows = ctx.tree.node_rows(node_id);
+    ctx.space.obs().leaf_rows(crate::ids::u64_from_usize(rows.len()));
     // Dense data + engine + big enough block → XLA tile; else the
     // contiguous scalar kernel (bit-identical to the pointwise scan).
     // Either way the rows come from the tree-order arena — one

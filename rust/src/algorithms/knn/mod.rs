@@ -48,10 +48,15 @@ pub fn naive_knn(space: &Space, qrow: &[f32], q_sq: f64, k: usize, skip: Option<
             // Threshold at chunk start: the kth best so far, only once
             // the heap is full (before that every row must be seen).
             let thr = if heap.len() == k { heap.peek().map(|w| w.dist) } else { None };
+            space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
             match (&filter, thr) {
                 (Some(f), Some(thr)) => {
                     block::dists_contig_to_vec_f32(
                         space, lo..hi, qrow, q_sq, f, thr, &mut frows, &mut dists,
+                    );
+                    space.obs().prune_n(
+                        crate::obs::PruneRule::F32Reject,
+                        crate::ids::u64_from_usize(hi - lo - frows.len()),
                     );
                     for (&row, &d) in frows.iter().zip(&dists) {
                         push_bounded(&mut heap, k, row, d);
@@ -80,8 +85,11 @@ pub fn tree_knn(
     skip: Option<u32>,
 ) -> Vec<Neighbor> {
     let mut result: BinaryHeap<HeapItem> = BinaryHeap::new();
-    // Min-heap on the lower bound of each node's distance to q.
-    let mut frontier: BinaryHeap<Reverse<(OrdF64, NodeId)>> = BinaryHeap::new();
+    // Min-heap on the lower bound of each node's distance to q; the
+    // trailing usize is the node's depth (root = 0), carried only for
+    // fan-out telemetry — it rides behind (lb, id) so it never affects
+    // the heap order.
+    let mut frontier: BinaryHeap<Reverse<(OrdF64, NodeId, usize)>> = BinaryHeap::new();
     // Leaf scans run on the tree-order arena: a leaf is one contiguous
     // row range, its original ids the matching `layout.inv` slice. The
     // skipped point (a dataset id) is translated to its arena row once;
@@ -100,15 +108,29 @@ pub fn tree_knn(
     // Scratch reused across leaf scans.
     let mut dists: Vec<f64> = Vec::new();
     let mut frows: Vec<u32> = Vec::new();
-    frontier.push(Reverse((OrdF64(node_lower_bound(space, tree, tree.root, qrow, q_sq)), tree.root)));
-    while let Some(Reverse((OrdF64(lb), node_id))) = frontier.pop() {
+    let obs = space.obs();
+    frontier.push(Reverse((
+        OrdF64(node_lower_bound(space, tree, tree.root, qrow, q_sq)),
+        tree.root,
+        0,
+    )));
+    obs.frontier(frontier.len());
+    while let Some(Reverse((OrdF64(lb), node_id, depth))) = frontier.pop() {
         if result.len() == k {
             if let Some(worst) = result.peek() {
                 if lb > worst.dist {
-                    break; // nothing left can improve the result set
+                    // Nothing left can improve the result set: the cut
+                    // discards this node and the entire remaining
+                    // frontier in one triangle-bound stroke.
+                    obs.prune_n(
+                        crate::obs::PruneRule::Triangle,
+                        crate::ids::u64_from_usize(frontier.len() + 1),
+                    );
+                    break;
                 }
             }
         }
+        obs.visit(depth);
         let node = tree.node(node_id);
         match node.children {
             None => {
@@ -121,12 +143,18 @@ pub fn tree_knn(
                     if seg.is_empty() {
                         continue;
                     }
+                    obs.leaf_rows(crate::ids::u64_from_usize(seg.len()));
                     let thr =
                         if result.len() == k { result.peek().map(|w| w.dist) } else { None };
                     match (&filter, thr) {
                         (Some(f), Some(thr)) => {
+                            let seg_len = seg.len();
                             block::dists_contig_to_vec_f32(
                                 arena, seg, qrow, q_sq, f, thr, &mut frows, &mut dists,
+                            );
+                            obs.prune_n(
+                                crate::obs::PruneRule::F32Reject,
+                                crate::ids::u64_from_usize(seg_len - frows.len()),
                             );
                             for (&row, &d) in frows.iter().zip(&dists) {
                                 push_bounded(&mut result, k, tree.layout.inv[row as usize], d);
@@ -148,9 +176,12 @@ pub fn tree_knn(
                     let prune = result.len() == k
                         && result.peek().map(|w| lb > w.dist).unwrap_or(false);
                     if !prune {
-                        frontier.push(Reverse((OrdF64(lb), child)));
+                        frontier.push(Reverse((OrdF64(lb), child, depth + 1)));
+                    } else {
+                        obs.prune(crate::obs::PruneRule::Triangle);
                     }
                 }
+                obs.frontier(frontier.len());
             }
         }
     }

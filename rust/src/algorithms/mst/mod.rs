@@ -57,6 +57,7 @@ pub fn naive_mst(space: &Space) -> Vec<Edge> {
     let mut best_from = vec![0u32; n];
     let mut edges = Vec::with_capacity(n - 1);
     in_tree[0] = true;
+    space.obs().leaf_rows(crate::ids::u64_from_usize(n - 1));
     for j in 1..n {
         best_d[j] = space.dist(0, j);
         best_from[j] = 0;
@@ -72,8 +73,10 @@ pub fn naive_mst(space: &Space) -> Vec<Edge> {
         }
         in_tree[pick] = true;
         edges.push(Edge { a: best_from[pick], b: pick as u32, dist: pick_d });
+        let mut scanned = 0u64;
         for j in 0..n {
             if !in_tree[j] {
+                scanned += 1;
                 let d = space.dist(pick, j);
                 if d < best_d[j] {
                     best_d[j] = d;
@@ -81,6 +84,7 @@ pub fn naive_mst(space: &Space) -> Vec<Edge> {
                 }
             }
         }
+        space.obs().leaf_rows(scanned);
     }
     edges
 }
@@ -203,7 +207,7 @@ fn nearest_foreign(
     let mut best: Option<(u32, f64)> = None;
     let mut best_d = bound;
     descend(
-        space, tree, tree.root, node_comp, uf, comp, qrow, q_sq, skip, &mut best, &mut best_d,
+        space, tree, tree.root, node_comp, uf, comp, qrow, q_sq, skip, 0, &mut best, &mut best_d,
     );
     best
 }
@@ -219,14 +223,17 @@ fn descend(
     qrow: &[f32],
     q_sq: f64,
     skip: u32,
+    depth: usize,
     best: &mut Option<(u32, f64)>,
     best_d: &mut f64,
 ) {
-    // Prune: subtree entirely within our own component.
+    // Prune: subtree entirely within our own component. (An identity
+    // cut, not a geometric bound — deliberately not counted as a prune.)
     if node_comp[id as usize] == comp {
         return;
     }
     let node = tree.node(id);
+    space.obs().visit(depth);
     // Prune: ball lower bound beats current best.
     space.count_bulk(1);
     let d_pivot = {
@@ -242,6 +249,7 @@ fn descend(
         }
     };
     if d_pivot - node.radius >= *best_d {
+        space.obs().prune(crate::obs::PruneRule::Triangle);
         return;
     }
     match node.children {
@@ -253,6 +261,7 @@ fn descend(
             // would inflate the count the paper measures.
             let arena = tree.arena();
             let ids = tree.points_under(id);
+            space.obs().leaf_rows(crate::ids::u64_from_usize(ids.len()));
             for (r, &p) in tree.node_rows(id).zip(ids.iter()) {
                 if p == skip || uf.find(p) == comp {
                     continue;
@@ -274,8 +283,8 @@ fn descend(
             // pallas-lint: allow(uncounted-dist, prune-order heuristic; children count on entry)
             let db = crate::metrics::dense_sqdist(qrow, &nb.pivot);
             let (first, second) = if da <= db { (a, b) } else { (b, a) };
-            descend(space, tree, first, node_comp, uf, comp, qrow, q_sq, skip, best, best_d);
-            descend(space, tree, second, node_comp, uf, comp, qrow, q_sq, skip, best, best_d);
+            descend(space, tree, first, node_comp, uf, comp, qrow, q_sq, skip, depth + 1, best, best_d);
+            descend(space, tree, second, node_comp, uf, comp, qrow, q_sq, skip, depth + 1, best, best_d);
         }
     }
 }

@@ -41,6 +41,7 @@ pub use shard::ShardedCoordinator;
 use crate::dataset::DatasetSpec;
 use crate::engine::{self, IndexBuilder, Query, QueryResult};
 use crate::metrics::Space;
+use crate::obs::{self, Histogram, HistogramSnapshot, QueryStats};
 use crate::parallel::{Executor, Parallelism};
 use crate::runtime::BatchDistanceEngine;
 use crate::tree::middle_out::{self, MiddleOutConfig};
@@ -48,7 +49,7 @@ use crate::tree::MetricTree;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A complete job description: which dataset, which query, which leaf
 /// threshold for the cached tree. What to run — including the
@@ -95,6 +96,10 @@ pub struct JobResult {
     /// Distance computations attributed to this job (tree build included
     /// on first use of a dataset/rmin pair).
     pub dists: u64,
+    /// Deterministic traversal counters for exactly this job's query
+    /// (nodes visited, prunes by rule, leaf rows, ...). Bit-identical
+    /// across thread and shard counts — see `tests/obs_equivalence.rs`.
+    pub stats: QueryStats,
     pub wall_ms: f64,
 }
 
@@ -160,6 +165,100 @@ impl MetricsSnapshot {
     }
 }
 
+/// Serving-edge observability owned by one coordinator shard: latency
+/// histograms (µs, √2 buckets) plus per-family lifetime [`QueryStats`]
+/// aggregates. The coordinator and server are the only layers allowed
+/// to read the clock (pallas-lint D2 keeps `std::time` out of the
+/// algorithm/tree/metrics/engine dirs), so wall-time lives here while
+/// the in-algorithm counters stay deterministic.
+struct EdgeObs {
+    /// Submit → claimed by a worker.
+    queue_wait: Histogram,
+    /// Index assembly (includes the cached tree's first build).
+    build: Histogram,
+    /// `Index::run_traced` alone, per query family.
+    run: [Histogram; obs::FAMILIES.len()],
+    /// Submit → terminal state, per query family.
+    e2e: [Histogram; obs::FAMILIES.len()],
+    /// Lifetime sum of per-job [`QueryStats`], per query family.
+    stats: Mutex<Vec<QueryStats>>,
+}
+
+impl EdgeObs {
+    fn new() -> EdgeObs {
+        EdgeObs {
+            queue_wait: Histogram::new(),
+            build: Histogram::new(),
+            run: std::array::from_fn(|_| Histogram::new()),
+            e2e: std::array::from_fn(|_| Histogram::new()),
+            stats: Mutex::new(vec![QueryStats::default(); obs::FAMILIES.len()]),
+        }
+    }
+
+    fn snapshot(&self) -> ObsSnapshot {
+        ObsSnapshot {
+            queue_wait: self.queue_wait.snapshot(),
+            build: self.build.snapshot(),
+            run: self.run.iter().map(Histogram::snapshot).collect(),
+            e2e: self.e2e.iter().map(Histogram::snapshot).collect(),
+            stats: self.stats.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// Point-in-time serving-edge observability values. Like
+/// [`MetricsSnapshot`], snapshots merge field-wise across shards; the
+/// merge is order-invariant (histogram buckets and counter sums are
+/// commutative), so any fold order over shards yields the same
+/// aggregate.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ObsSnapshot {
+    pub queue_wait: HistogramSnapshot,
+    pub build: HistogramSnapshot,
+    /// Indexed by [`obs::FAMILIES`].
+    pub run: Vec<HistogramSnapshot>,
+    /// Indexed by [`obs::FAMILIES`].
+    pub e2e: Vec<HistogramSnapshot>,
+    /// Indexed by [`obs::FAMILIES`].
+    pub stats: Vec<QueryStats>,
+}
+
+fn merge_hist_vec(a: &[HistogramSnapshot], b: &[HistogramSnapshot]) -> Vec<HistogramSnapshot> {
+    let n = a.len().max(b.len());
+    let zero = HistogramSnapshot::default();
+    (0..n)
+        .map(|i| a.get(i).unwrap_or(&zero).merge(b.get(i).unwrap_or(&zero)))
+        .collect()
+}
+
+impl ObsSnapshot {
+    /// Field-wise sum — the aggregate view over coordinator shards.
+    pub fn merge(&self, other: &ObsSnapshot) -> ObsSnapshot {
+        let n = self.stats.len().max(other.stats.len());
+        let mut stats = vec![QueryStats::default(); n];
+        for (i, s) in stats.iter_mut().enumerate() {
+            if let Some(a) = self.stats.get(i) {
+                s.accumulate(a);
+            }
+            if let Some(b) = other.stats.get(i) {
+                s.accumulate(b);
+            }
+        }
+        ObsSnapshot {
+            queue_wait: self.queue_wait.merge(&other.queue_wait),
+            build: self.build.merge(&other.build),
+            run: merge_hist_vec(&self.run, &other.run),
+            e2e: merge_hist_vec(&self.e2e, &other.e2e),
+            stats,
+        }
+    }
+}
+
+/// Saturating `Duration` → whole microseconds for histogram recording.
+fn micros(d: Duration) -> u64 {
+    u64::try_from(d.as_micros()).unwrap_or(u64::MAX)
+}
+
 struct CachedDataset {
     space: Arc<Space>,
     /// Trees per rmin (built lazily under the dataset lock).
@@ -169,13 +268,16 @@ struct CachedDataset {
 }
 
 struct Inner {
-    queue: Mutex<VecDeque<(JobId, JobSpec)>>,
+    /// Each entry carries its submit instant so the claiming worker can
+    /// record queue-wait and end-to-end latency.
+    queue: Mutex<VecDeque<(JobId, JobSpec, Instant)>>,
     queue_cv: Condvar,
     capacity: usize,
     states: Mutex<HashMap<JobId, JobState>>,
     state_cv: Condvar,
     datasets: Mutex<HashMap<String, Arc<CachedDataset>>>,
     metrics: Metrics,
+    obs: EdgeObs,
     shutdown: AtomicBool,
     engine: Option<Arc<BatchDistanceEngine>>,
     /// Intra-job worker budget. The pool's own workers are the primary
@@ -214,6 +316,7 @@ impl Coordinator {
             state_cv: Condvar::new(),
             datasets: Mutex::new(HashMap::new()),
             metrics: Metrics::default(),
+            obs: EdgeObs::new(),
             shutdown: AtomicBool::new(false),
             engine,
             parallelism,
@@ -242,7 +345,7 @@ impl Coordinator {
             return Err(SubmitError::QueueFull);
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        queue.push_back((id, spec));
+        queue.push_back((id, spec, Instant::now()));
         self.inner
             .states
             .lock()
@@ -302,6 +405,12 @@ impl Coordinator {
         }
     }
 
+    /// Snapshot the serving-edge observability state: latency histograms
+    /// and per-family lifetime query stats.
+    pub fn obs(&self) -> ObsSnapshot {
+        self.inner.obs.snapshot()
+    }
+
     /// Cancel a job that is still queued: it is removed from the queue
     /// and moves to [`JobState::Failed`] with message `"cancelled"`
     /// (waiters are woken). Returns `false` — and changes nothing — if
@@ -312,7 +421,7 @@ impl Coordinator {
         // Holding the queue lock pins the race with worker pop: a job
         // found in the queue here cannot simultaneously be claimed.
         let mut queue = self.inner.queue.lock().unwrap();
-        let Some(pos) = queue.iter().position(|(jid, _)| *jid == id) else {
+        let Some(pos) = queue.iter().position(|(jid, _, _)| *jid == id) else {
             return false;
         };
         queue.remove(pos);
@@ -365,7 +474,8 @@ fn worker_loop(inner: Arc<Inner>) {
                 queue = inner.queue_cv.wait(queue).unwrap();
             }
         };
-        let Some((id, spec)) = job else { return };
+        let Some((id, spec, submitted_at)) = job else { return };
+        inner.obs.queue_wait.record(micros(submitted_at.elapsed()));
         set_state(&inner, id, JobState::Running);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_job(&inner, id, &spec, &exec)
@@ -392,6 +502,10 @@ fn worker_loop(inner: Arc<Inner>) {
                     .unwrap_or_else(|| "job panicked".into());
                 set_state(&inner, id, JobState::Failed(msg));
             }
+        }
+        // Submit → terminal, recorded for successes and failures alike.
+        if let Some(fi) = obs::family_index(spec.query.kind()) {
+            inner.obs.e2e[fi].record(micros(submitted_at.elapsed()));
         }
     }
 }
@@ -476,13 +590,39 @@ fn run_job(inner: &Inner, id: JobId, spec: &JobSpec, exec: &Executor) -> Result<
     let start = Instant::now();
     let before = ds.space.dist_count();
     let index = get_index(inner, &ds, spec, exec);
-    let output = index.run(&spec.query);
-    Ok(JobResult {
-        id,
-        output,
-        dists: ds.space.dist_count() - before,
-        wall_ms: start.elapsed().as_secs_f64() * 1e3,
-    })
+    inner.obs.build.record(micros(start.elapsed()));
+    let run_start = Instant::now();
+    let (output, stats) = index.run_traced(&spec.query);
+    let run_us = micros(run_start.elapsed());
+    if let Some(fi) = obs::family_index(spec.query.kind()) {
+        inner.obs.run[fi].record(run_us);
+        inner.obs.stats.lock().unwrap()[fi].accumulate(&stats);
+    }
+    let dists = ds.space.dist_count() - before;
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    if obs::trace::enabled() {
+        use crate::json::Value;
+        obs::trace::span(
+            "job",
+            &[
+                ("id", Value::Num(crate::ids::wire_from_u64(id))),
+                ("op", Value::Str(spec.query.kind().into())),
+                ("dataset", Value::Str(dataset_key(&spec.dataset))),
+                ("dists", Value::Num(crate::ids::wire_from_u64(dists))),
+                (
+                    "nodes_visited",
+                    Value::Num(crate::ids::wire_from_u64(stats.nodes_visited)),
+                ),
+                (
+                    "pruned",
+                    Value::Num(crate::ids::wire_from_u64(stats.total_pruned())),
+                ),
+                ("run_us", Value::Num(crate::ids::wire_from_u64(run_us))),
+                ("wall_ms", Value::Num(wall_ms)),
+            ],
+        );
+    }
+    Ok(JobResult { id, output, stats, dists, wall_ms })
 }
 
 #[cfg(test)]
@@ -661,6 +801,25 @@ mod tests {
         assert_eq!(m.submitted, 1);
         assert_eq!(m.completed, 1);
         assert!(m.total_dists > 0);
+    }
+
+    #[test]
+    fn obs_snapshot_populates_after_jobs() {
+        let coord = Coordinator::new(2, 16);
+        let id = coord.submit(km(3, true)).unwrap();
+        let JobState::Done(r) = coord.wait(id) else { panic!("job failed") };
+        assert!(r.stats.nodes_visited > 0, "tree kmeans visited no nodes");
+        let snap = coord.obs();
+        assert_eq!(snap.run.len(), obs::FAMILIES.len());
+        assert_eq!(snap.stats.len(), obs::FAMILIES.len());
+        assert_eq!(snap.queue_wait.count, 1);
+        assert_eq!(snap.build.count, 1);
+        let fi = obs::family_index("kmeans").unwrap();
+        assert_eq!(snap.run[fi].count, 1);
+        assert_eq!(snap.e2e[fi].count, 1);
+        assert_eq!(snap.stats[fi].nodes_visited, r.stats.nodes_visited);
+        // Merging with an empty snapshot is the identity.
+        assert_eq!(snap.merge(&ObsSnapshot::default()), snap);
     }
 
     #[test]

@@ -35,6 +35,13 @@
 //! * **`shards`** — introspection: `{"ok":true,"shards":N,"per_shard":
 //!   [{"shard":0,"queue_len":..,"submitted":..,"completed":..,
 //!   "failed":..,"rejected":..,"cancelled":..,"total_dists":..},...]}`.
+//! * **`stats`** — the serving-edge observability snapshot, merged
+//!   across shards: queue-wait/build latency histogram summaries, and
+//!   per-family run/e2e latency plus lifetime traversal counters
+//!   (`{"families":{"kmeans":{"run":...,"e2e":...,"stats":...},...}}`).
+//!   The `"text"` field carries the same data as a Prometheus text
+//!   exposition (`pallas_queue_wait_us_bucket{le=...}` ...), ready to
+//!   proxy to a scraper.
 //!
 //! One thread per connection (std-only environment; connections are few
 //! and long-lived — the heavy concurrency lives in the coordinator's
@@ -47,11 +54,16 @@
 //! summaries only should read the derived `n_*` fields and ignore the
 //! payload arrays.
 
-use super::{JobSpec, JobState, MetricsSnapshot, ShardedCoordinator};
+use super::{JobSpec, JobState, MetricsSnapshot, ObsSnapshot, ShardedCoordinator};
 use crate::dataset::{DatasetKind, DatasetSpec};
 use crate::engine::wire;
 use crate::ids;
 use crate::json::{self, Value};
+use crate::obs::{
+    self,
+    hist::{prometheus_counter, prometheus_histogram},
+    HistogramSnapshot,
+};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -194,6 +206,24 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
                 ("per_shard", Value::Arr(per_shard)),
             ]))
         }
+        "stats" => {
+            let o = coord.obs();
+            let m = coord.metrics();
+            let mut families = BTreeMap::new();
+            for (i, name) in obs::FAMILIES.iter().enumerate() {
+                let mut fm = BTreeMap::new();
+                fm.insert("run".into(), hist_obj(&o.run[i]));
+                fm.insert("e2e".into(), hist_obj(&o.e2e[i]));
+                fm.insert("stats".into(), wire::stats_to_json(&o.stats[i]));
+                families.insert((*name).to_string(), Value::Obj(fm));
+            }
+            Ok(ok_obj(vec![
+                ("queue_wait", hist_obj(&o.queue_wait)),
+                ("build", hist_obj(&o.build)),
+                ("families", Value::Obj(families)),
+                ("text", Value::Str(prometheus_text(&m, &o))),
+            ]))
+        }
         "submit" => {
             let spec = parse_spec(&req)?;
             match coord.submit(spec) {
@@ -236,6 +266,57 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
         }
         other => Err(format!("unknown cmd {other:?}")),
     }
+}
+
+/// Summary view of a latency histogram for the JSON side of `stats`
+/// (count/sum/mean plus p50/p99 upper bounds); the full bucket series
+/// lives in the Prometheus text exposition.
+fn hist_obj(h: &HistogramSnapshot) -> Value {
+    let quantile = |q: f64| match h.quantile_upper_bound(q) {
+        Some(b) => Value::Num(ids::wire_from_u64(b)),
+        None => Value::Null,
+    };
+    let mut m = BTreeMap::new();
+    m.insert("count".into(), Value::Num(ids::wire_from_u64(h.count)));
+    m.insert("sum_micros".into(), Value::Num(ids::wire_from_u64(h.sum_micros)));
+    m.insert("mean_us".into(), Value::Num(h.mean_micros()));
+    m.insert("p50_us".into(), quantile(0.5));
+    m.insert("p99_us".into(), quantile(0.99));
+    Value::Obj(m)
+}
+
+/// Prometheus text exposition of the merged snapshot: job counters,
+/// edge latency histograms, and per-family traversal counters.
+/// Families with no recorded jobs are omitted to keep the page small.
+fn prometheus_text(m: &MetricsSnapshot, o: &ObsSnapshot) -> String {
+    let mut out = String::new();
+    prometheus_counter(&mut out, "pallas_jobs_submitted_total", "", m.submitted);
+    prometheus_counter(&mut out, "pallas_jobs_completed_total", "", m.completed);
+    prometheus_counter(&mut out, "pallas_jobs_failed_total", "", m.failed);
+    prometheus_counter(&mut out, "pallas_jobs_rejected_total", "", m.rejected);
+    prometheus_counter(&mut out, "pallas_jobs_cancelled_total", "", m.cancelled);
+    prometheus_counter(&mut out, "pallas_dists_total", "", m.total_dists);
+    prometheus_histogram(&mut out, "pallas_queue_wait_us", "", &o.queue_wait);
+    prometheus_histogram(&mut out, "pallas_build_us", "", &o.build);
+    for (i, name) in obs::FAMILIES.iter().enumerate() {
+        if o.run[i].count == 0 && o.e2e[i].count == 0 {
+            continue;
+        }
+        let label = format!("family=\"{name}\"");
+        prometheus_histogram(&mut out, "pallas_run_us", &label, &o.run[i]);
+        prometheus_histogram(&mut out, "pallas_e2e_us", &label, &o.e2e[i]);
+        let s = &o.stats[i];
+        prometheus_counter(&mut out, "pallas_nodes_visited_total", &label, s.nodes_visited);
+        prometheus_counter(&mut out, "pallas_leaf_rows_total", &label, s.leaf_rows);
+        for rule in obs::PruneRule::ALL {
+            let pruned = s.pruned_by(rule);
+            if pruned > 0 {
+                let rule_label = format!("family=\"{name}\",rule=\"{}\"", rule.name());
+                prometheus_counter(&mut out, "pallas_pruned_total", &rule_label, pruned);
+            }
+        }
+    }
+    out
 }
 
 fn shard_obj(shard: usize, m: &MetricsSnapshot, queue_len: usize) -> Value {
@@ -286,6 +367,7 @@ fn state_obj(id: u64, state: &JobState) -> Value {
             fields.push(("state", Value::Str("done".into())));
             fields.push(("dists", Value::Num(ids::wire_from_u64(r.dists))));
             fields.push(("wall_ms", Value::Num(r.wall_ms)));
+            fields.push(("stats", wire::stats_to_json(&r.stats)));
             fields.push(("output", wire::result_to_json(&r.output)));
         }
     }
@@ -404,6 +486,48 @@ mod tests {
             .call(&Client::request(vec![("cmd", Value::Str("metrics".into()))]))
             .unwrap();
         assert_eq!(m.get("completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn stats_op_reports_traversal_and_latency() {
+        let (server, _coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let submit = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("submit".into())),
+                ("dataset", Value::Str("squiggles".into())),
+                ("scale", Value::Num(0.003)),
+                ("op", Value::Str("kmeans".into())),
+                ("k", Value::Num(3.0)),
+                ("iters", Value::Num(2.0)),
+            ]))
+            .unwrap();
+        let id = submit.get("id").unwrap().as_f64().unwrap();
+        let done = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(id)),
+            ]))
+            .unwrap();
+        // Done responses carry the per-job traversal counters.
+        let job_stats = done.get("stats").expect("done response has stats");
+        assert!(job_stats.get("nodes_visited").unwrap().as_f64().unwrap() > 0.0);
+
+        let stats = client
+            .call(&Client::request(vec![("cmd", Value::Str("stats".into()))]))
+            .unwrap();
+        assert_eq!(stats.get("ok"), Some(&Value::Bool(true)), "{stats:?}");
+        assert!(stats.get("queue_wait").unwrap().get("count").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(stats.get("build").unwrap().get("count").unwrap().as_f64().unwrap() >= 1.0);
+        let km = stats.get("families").unwrap().get("kmeans").unwrap();
+        assert_eq!(km.get("run").unwrap().get("count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(km.get("e2e").unwrap().get("count").unwrap().as_f64(), Some(1.0));
+        assert!(km.get("stats").unwrap().get("nodes_visited").unwrap().as_f64().unwrap() > 0.0);
+        // Prometheus exposition names the edge histograms and the family.
+        let text = stats.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("pallas_queue_wait_us_bucket"), "{text}");
+        assert!(text.contains("pallas_run_us_count{family=\"kmeans\"}"), "{text}");
+        assert!(text.contains("pallas_nodes_visited_total{family=\"kmeans\"}"), "{text}");
     }
 
     #[test]

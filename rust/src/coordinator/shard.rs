@@ -49,7 +49,7 @@
 //! multi-host serving where shards and their warm caches move between
 //! processes.
 
-use super::{Coordinator, JobId, JobSpec, JobState, MetricsSnapshot, SubmitError};
+use super::{Coordinator, JobId, JobSpec, JobState, MetricsSnapshot, ObsSnapshot, SubmitError};
 use crate::ids;
 use crate::runtime::BatchDistanceEngine;
 use std::sync::Arc;
@@ -263,6 +263,20 @@ impl ShardedCoordinator {
     /// Per-shard metric snapshots, indexed by shard.
     pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
         self.shards.iter().map(Coordinator::metrics).collect()
+    }
+
+    /// Aggregate serving-edge observability across shards (field-wise
+    /// histogram and counter sums; the merge is order-invariant).
+    pub fn obs(&self) -> ObsSnapshot {
+        self.shards
+            .iter()
+            .map(Coordinator::obs)
+            .fold(ObsSnapshot::default(), |acc, o| acc.merge(&o))
+    }
+
+    /// Per-shard serving-edge observability, indexed by shard.
+    pub fn shard_obs(&self) -> Vec<ObsSnapshot> {
+        self.shards.iter().map(Coordinator::obs).collect()
     }
 
     /// Drain and join every shard, in shard order (deterministic:

@@ -22,6 +22,27 @@ impl Index {
         self.run_with(query, self.executor())
     }
 
+    /// [`Index::run`] plus the per-query [`QueryStats`] delta: the
+    /// observability counters accumulated by exactly this query. The
+    /// sink is shared across the index (like the distance counter), so
+    /// the delta is taken by snapshotting before and after; concurrent
+    /// queries on the *same* index would bleed into each other's deltas
+    /// — the coordinator runs one job at a time per shard, which is the
+    /// serving path this feeds. Counters are deterministic: the same
+    /// query on the same index yields a bit-identical [`QueryStats`] at
+    /// every thread count (see `tests/obs_equivalence.rs`).
+    ///
+    /// `frontier_peak` is a high-water mark, not a sum, so it is reset
+    /// before the run rather than differenced.
+    pub fn run_traced(&self, query: &Query) -> (QueryResult, crate::obs::QueryStats) {
+        let obs = self.space().obs();
+        let before = obs.snapshot();
+        obs.reset_frontier_peak();
+        let result = self.run(query);
+        let stats = obs.snapshot().delta_from(&before);
+        (result, stats)
+    }
+
     /// [`Index::run`] with an explicit executor for the query's internal
     /// passes. Results are identical for every budget (the determinism
     /// contract of [`crate::parallel`]); `run_batch` uses this to keep

@@ -377,6 +377,14 @@ impl Index {
     pub fn f32_tier(&self) -> bool {
         self.space.f32_tier()
     }
+
+    /// Lifetime observability counters charged to this index's space
+    /// (monotonic sums across every query run so far, like
+    /// [`Index::dist_count`]). For per-query deltas use
+    /// [`Index::run_traced`].
+    pub fn obs_stats(&self) -> crate::obs::QueryStats {
+        self.space.obs().snapshot()
+    }
 }
 
 #[cfg(test)]

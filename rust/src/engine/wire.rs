@@ -338,6 +338,64 @@ pub fn query_from_json(v: &Value) -> Result<Query, String> {
 }
 
 // ---------------------------------------------------------------------
+// Query stats (observability counters)
+// ---------------------------------------------------------------------
+
+/// Serialize a [`QueryStats`](crate::obs::QueryStats) block. The prune
+/// counters go out as a named object (one key per
+/// [`crate::obs::PruneRule`]) and the fan-out as the full
+/// [`crate::obs::LEVEL_SLOTS`]-length array, so the round trip is exact
+/// rather than lossy-trimmed.
+pub fn stats_to_json(s: &crate::obs::QueryStats) -> Value {
+    let mut pruned: Vec<(&str, Value)> = Vec::with_capacity(crate::obs::PruneRule::ALL.len());
+    for rule in crate::obs::PruneRule::ALL {
+        pruned.push((rule.name(), num(ids::wire_from_u64(s.pruned_by(rule)))));
+    }
+    obj(vec![
+        ("nodes_visited", num(ids::wire_from_u64(s.nodes_visited))),
+        ("pruned", obj(pruned)),
+        ("leaf_rows", num(ids::wire_from_u64(s.leaf_rows))),
+        ("frontier_peak", num(ids::wire_from_u64(s.frontier_peak))),
+        (
+            "level_fanout",
+            Value::Arr(s.level_fanout.iter().map(|&c| num(ids::wire_from_u64(c))).collect()),
+        ),
+    ])
+}
+
+/// Parse a [`QueryStats`](crate::obs::QueryStats) block written by
+/// [`stats_to_json`]. Missing prune keys and missing trailing fan-out
+/// slots read as zero (forward compatibility for new rules/levels);
+/// malformed numbers are an error.
+pub fn stats_from_json(v: &Value) -> Result<crate::obs::QueryStats, String> {
+    let mut s = crate::obs::QueryStats {
+        nodes_visited: req_u64(v, "nodes_visited")?,
+        leaf_rows: req_u64(v, "leaf_rows")?,
+        frontier_peak: req_u64(v, "frontier_peak")?,
+        ..Default::default()
+    };
+    let pruned = field(v, "pruned")?;
+    for (slot, rule) in s.pruned.iter_mut().zip(crate::obs::PruneRule::ALL) {
+        *slot = get_u64(pruned, rule.name(), 0)?;
+    }
+    let fanout = field(v, "level_fanout")?
+        .as_arr()
+        .ok_or("bad \"level_fanout\"")?;
+    if fanout.len() > s.level_fanout.len() {
+        return Err(format!(
+            "level_fanout has {} slots but the build supports {}",
+            fanout.len(),
+            s.level_fanout.len()
+        ));
+    }
+    for (slot, raw) in s.level_fanout.iter_mut().zip(fanout) {
+        let f = raw.as_f64().ok_or("bad \"level_fanout\" entry")?;
+        *slot = ids::wire_u64(f, "level_fanout entry")?;
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------
 // Results
 // ---------------------------------------------------------------------
 
@@ -735,5 +793,34 @@ mod tests {
             edges: vec![Edge { a: 0, b: 1, dist: 0.5 }],
             total_weight: 0.5,
         });
+    }
+
+    #[test]
+    fn query_stats_roundtrip_is_exact() {
+        let s = crate::obs::QueryStats {
+            nodes_visited: 123,
+            leaf_rows: 4567,
+            frontier_peak: 89,
+            pruned: std::array::from_fn(|i| (i as u64 + 1) * 7),
+            level_fanout: std::array::from_fn(|i| i as u64 * 3),
+        };
+        let text = json::write(&stats_to_json(&s));
+        let back = stats_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s, back, "wire-mangled stats: {text}");
+    }
+
+    #[test]
+    fn query_stats_missing_prune_keys_read_as_zero() {
+        let v = json::parse(
+            r#"{"nodes_visited":5,"pruned":{"triangle":2},"leaf_rows":9,
+                "frontier_peak":1,"level_fanout":[5]}"#,
+        )
+        .unwrap();
+        let s = stats_from_json(&v).unwrap();
+        assert_eq!(s.nodes_visited, 5);
+        assert_eq!(s.pruned_by(crate::obs::PruneRule::Triangle), 2);
+        assert_eq!(s.pruned_by(crate::obs::PruneRule::Budget), 0);
+        assert_eq!(s.level_fanout[0], 5);
+        assert_eq!(s.level_fanout[1], 0);
     }
 }

@@ -75,6 +75,7 @@ pub mod engine;
 pub mod ids;
 pub mod json;
 pub mod metrics;
+pub mod obs;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;

@@ -8,12 +8,15 @@
 //!   tree                                 build a tree and print its shape
 //!   serve-demo                           drive the batch coordinator
 //!   serve                                TCP JSON-line job server
+//!   stats                                query a running server's obs snapshot
 //!   artifacts                            inspect the AOT artifact manifest
 //!
 //! Every single-run command is a thin wrapper over the engine facade:
 //! flags build an [`engine::Query`], an [`engine::IndexBuilder`] stands
-//! up the index, and [`engine::Index::run`] executes it. Run with no
-//! command for usage.
+//! up the index, and `Index::run_traced` executes it; the shared
+//! [`obs::format_run_report`] formatter prints distance accounting plus
+//! the traversal counters (nodes visited, prunes by rule, leaf rows,
+//! frontier peak, per-level fan-out). Run with no command for usage.
 
 use anchors_hierarchy::bench::tables;
 use anchors_hierarchy::cli::Args;
@@ -25,6 +28,8 @@ use anchors_hierarchy::engine::{
     InitKind, KdeQuery, KernelRegressionQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
     TreeStrategy, XmeansQuery,
 };
+use anchors_hierarchy::json::Value;
+use anchors_hierarchy::obs;
 use anchors_hierarchy::parallel::Parallelism;
 use anchors_hierarchy::runtime::BatchDistanceEngine;
 use std::sync::Arc;
@@ -67,6 +72,10 @@ system
              TCP JSON-line job server; --shards N = independent
              coordinator shards (consistent-hash dataset routing),
              --workers per shard. Default shards: $PALLAS_SHARDS, else 1
+  stats      [--addr HOST:PORT] [--format prom|json]
+             fetch a running server's observability snapshot (latency
+             histograms + per-family traversal counters); prom prints
+             the Prometheus text exposition, json the raw response
   artifacts                                  show the AOT manifest
 
 datasets: squiggles voronoi cell covtype reuters50 reuters100
@@ -145,20 +154,25 @@ fn build_index(args: &Args) -> Result<(DatasetSpec, Index), String> {
     Ok((spec, index))
 }
 
-/// Execute one query against a fresh index and report the result plus
-/// the engine's exact distance accounting.
+/// Execute one query against a fresh index and report the result, the
+/// engine's exact distance accounting, and the traversal counters —
+/// all through the one shared [`obs::format_run_report`] formatter.
 fn run_query(args: &Args, index: &Index, query: Query) -> Result<(), String> {
     args.finish()?;
     let before = index.dist_count();
     let before_f32 = index.f32_dist_count();
     let t0 = std::time::Instant::now();
-    let result = index.run(&query);
+    let (result, stats) = index.run_traced(&query);
+    let wall = t0.elapsed().as_secs_f64();
     println!("{}", result.summary());
-    println!(
-        "distance computations {}  f32-filter evals {}  wall {:.2}s",
-        index.dist_count() - before,
-        index.f32_dist_count() - before_f32,
-        t0.elapsed().as_secs_f64()
+    print!(
+        "{}",
+        obs::format_run_report(
+            index.dist_count() - before,
+            index.f32_dist_count() - before_f32,
+            &stats,
+            Some(wall),
+        )
     );
     Ok(())
 }
@@ -404,6 +418,33 @@ fn run(args: &Args) -> Result<(), String> {
                 // pallas-lint: allow(threads, CLI serve loop parks the foreground thread; not a result-producing path)
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
+        }
+        "stats" => {
+            let addr = args.str_flag("addr", "127.0.0.1:7407");
+            let format = args.str_flag("format", "prom");
+            args.finish()?;
+            let mut client = anchors_hierarchy::coordinator::server::Client::connect(&*addr)
+                .map_err(|e| format!("connect {addr}: {e}"))?;
+            let req = anchors_hierarchy::coordinator::server::Client::request(vec![(
+                "cmd",
+                Value::Str("stats".into()),
+            )]);
+            let resp = client.call(&req)?;
+            if resp.get("ok") != Some(&Value::Bool(true)) {
+                return Err(format!("server error: {}", anchors_hierarchy::json::write(&resp)));
+            }
+            match format.as_str() {
+                "prom" => {
+                    let text = resp
+                        .get("text")
+                        .and_then(Value::as_str)
+                        .ok_or("response missing text exposition")?;
+                    print!("{text}");
+                }
+                "json" => println!("{}", anchors_hierarchy::json::write(&resp)),
+                other => return Err(format!("--format: expected prom|json, found {other:?}")),
+            }
+            Ok(())
         }
         "serve-demo" => {
             let workers = args.flag("workers", 4usize)?;

@@ -33,6 +33,12 @@ pub struct Space {
     pub data: Data,
     pub metric: Metric,
     counter: Arc<DistCounter>,
+    /// Traversal/pruning statistics sink ([`crate::obs::ObsSink`]),
+    /// shared exactly like the distance counter: every algorithm
+    /// records nodes visited / pruned / leaf rows into the space it
+    /// was handed, and views made by [`Space::select_rows`] charge the
+    /// same sink. Pure counting — deterministic at every thread count.
+    obs: Arc<crate::obs::ObsSink>,
     /// Opt-in f32 filter tier ([`block::F32Filter`]): when set, the
     /// threshold-pruning leaf scans (knn / ball / anomaly) may run an
     /// 8-wide f32 pre-pass and only recompute ε-margin candidates in
@@ -49,7 +55,13 @@ impl Space {
                 "L1 metric is only implemented for dense data"
             );
         }
-        Space { data, metric, counter: Arc::new(DistCounter::new()), f32_tier: false }
+        Space {
+            data,
+            metric,
+            counter: Arc::new(DistCounter::new()),
+            obs: Arc::new(crate::obs::ObsSink::new()),
+            f32_tier: false,
+        }
     }
 
     pub fn euclidean(data: Data) -> Self {
@@ -67,6 +79,20 @@ impl Space {
     /// Shared handle to the distance counter.
     pub fn counter(&self) -> Arc<DistCounter> {
         Arc::clone(&self.counter)
+    }
+
+    /// The traversal/pruning statistics sink. Algorithms record into
+    /// it (`space.obs().visit(depth)` etc.); the engine snapshots it
+    /// around a query to attribute [`crate::obs::QueryStats`].
+    #[inline]
+    pub fn obs(&self) -> &crate::obs::ObsSink {
+        &self.obs
+    }
+
+    /// Shared handle to the statistics sink (for callers that need to
+    /// hold it across a space's lifetime, mirroring [`Space::counter`]).
+    pub fn obs_shared(&self) -> Arc<crate::obs::ObsSink> {
+        Arc::clone(&self.obs)
     }
 
     /// Whether the opt-in f32 filter tier is enabled for this space.
@@ -92,6 +118,7 @@ impl Space {
             data: self.data.select_rows(ids),
             metric: self.metric,
             counter: Arc::clone(&self.counter),
+            obs: Arc::clone(&self.obs),
             // The arena inherits the tier flag (and, via Data::select_rows,
             // the parent's cached max|x|), so arena scans behave exactly
             // like original-order scans: same filter decision, same ε.

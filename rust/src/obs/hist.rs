@@ -1,0 +1,322 @@
+//! Observability layer 2 support: **log-bucketed latency histograms**
+//! (std-only, HDR-style powers-of-√2 buckets over microseconds).
+//!
+//! A [`Histogram`] is a fixed array of atomic buckets whose bounds grow
+//! by a factor of √2 — two buckets per doubling, so quantile estimates
+//! carry at most ~41% relative error while 63 finite bounds span 1 µs
+//! to ~36 minutes. Recording is lock-free (`fetch_add`); snapshots are
+//! plain vectors that merge by field-wise addition, which makes the
+//! merge **order-invariant** — aggregating N coordinator shards gives
+//! the same snapshot in any order, exactly like
+//! [`crate::coordinator::MetricsSnapshot`].
+//!
+//! This module never reads a clock: callers at the serving edge
+//! (`coordinator/`, `server.rs`, `main.rs` — the only homes pallas-lint
+//! D2 permits timing in) measure durations and pass microseconds in.
+
+use crate::ids;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Total buckets. The last bucket is the overflow (`+Inf`) bucket.
+pub const N_BUCKETS: usize = 64;
+
+/// √2 as a u64 ratio (numerator over [`SQRT2_DEN`]): integer bucket
+/// bounds make the layout identical on every platform, with no float
+/// rounding in sight.
+const SQRT2_NUM: u128 = 1_414_213_562;
+const SQRT2_DEN: u128 = 1_000_000_000;
+
+/// Upper bound (exclusive), in microseconds, of bucket `i` for
+/// `i < N_BUCKETS - 1`; bucket `N_BUCKETS - 1` is unbounded. Bounds:
+/// 1, 1, 2, 2, 4, 5, 8, 11, 16, 22, 32, ... — even buckets are exact
+/// powers of two, odd buckets the √2 midpoints.
+pub fn bucket_bound(i: usize) -> u64 {
+    debug_assert!(i < N_BUCKETS - 1, "the last bucket has no finite bound");
+    let half = i / 2;
+    if i % 2 == 0 {
+        1u64 << half
+    } else {
+        // Exact in u128: (1 << 31) * SQRT2_NUM stays far below 2^128.
+        let wide = ((1u128 << half) * SQRT2_NUM) / SQRT2_DEN;
+        // pallas-lint scope note: hist.rs is not a wire file, and the
+        // value provably fits (half ≤ 31 ⇒ wide < 2^32).
+        wide as u64
+    }
+}
+
+/// The bucket a microsecond value lands in.
+pub fn bucket_index(micros: u64) -> usize {
+    // Even bucket bounds are powers of two, so locate the doubling via
+    // the bit width, then resolve the √2 midpoint — O(1), no scan.
+    if micros == 0 {
+        return 0;
+    }
+    let log2 = ids::usize_from_u64(u64::from(63 - micros.leading_zeros()));
+    let candidate = 2 * log2 + 1; // first bound that can exceed `micros`
+    for i in candidate..N_BUCKETS - 1 {
+        if micros < bucket_bound(i) {
+            return i;
+        }
+    }
+    N_BUCKETS - 1
+}
+
+/// Lock-free latency histogram. Record with [`Histogram::record`];
+/// read with [`Histogram::snapshot`]. Relaxed ordering throughout —
+/// the cells are monitoring data, never synchronization.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation of `micros`.
+    pub fn record(&self, micros: u64) {
+        self.buckets[bucket_index(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every cell.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_micros: self.sum_micros.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data histogram state. Merging is field-wise addition, hence
+/// commutative and associative: any merge order over any shard
+/// grouping yields the identical snapshot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket observation counts, length [`N_BUCKETS`].
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_micros: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum_micros: 0,
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Field-wise sum — the aggregate view over coordinator shards.
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut buckets = vec![0u64; N_BUCKETS];
+        for (i, cell) in buckets.iter_mut().enumerate() {
+            *cell = self.buckets.get(i).copied().unwrap_or(0)
+                + other.buckets.get(i).copied().unwrap_or(0);
+        }
+        HistogramSnapshot {
+            buckets,
+            count: self.count + other.count,
+            sum_micros: self.sum_micros + other.sum_micros,
+        }
+    }
+
+    /// Mean observation in microseconds (0 when empty).
+    pub fn mean_micros(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            ids::wire_from_u64(self.sum_micros) / ids::wire_from_u64(self.count)
+        }
+    }
+
+    /// Upper bound (µs) of the bucket containing the `q`-quantile
+    /// observation (`0.0 < q ≤ 1.0`), or `None` when the histogram is
+    /// empty or the quantile lands in the overflow bucket.
+    pub fn quantile_upper_bound(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = (q.clamp(0.0, 1.0) * ids::wire_from_u64(self.count)).ceil();
+        let mut seen = 0.0f64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += ids::wire_from_u64(c);
+            if seen >= target {
+                return if i < N_BUCKETS - 1 {
+                    Some(bucket_bound(i))
+                } else {
+                    None
+                };
+            }
+        }
+        None
+    }
+}
+
+/// Append one histogram in Prometheus text exposition format:
+/// cumulative `_bucket{le=...}` lines (trailing empty buckets elided —
+/// their cumulative count equals the `+Inf` line), then `_sum` and
+/// `_count`. `labels` is either empty or a pre-rendered
+/// `key="value"`-list without braces.
+pub fn prometheus_histogram(out: &mut String, name: &str, labels: &str, h: &HistogramSnapshot) {
+    use std::fmt::Write as _;
+    let sep = if labels.is_empty() { "" } else { "," };
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let last_nonzero = h.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        cum += c;
+        if i > last_nonzero {
+            break;
+        }
+        if i < N_BUCKETS - 1 {
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{{labels}{sep}le=\"{}\"}} {cum}",
+                bucket_bound(i)
+            );
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", h.count);
+    let brace = if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    };
+    let _ = writeln!(out, "{name}_sum{brace} {}", h.sum_micros);
+    let _ = writeln!(out, "{name}_count{brace} {}", h.count);
+}
+
+/// Append one plain counter in Prometheus text exposition format.
+pub fn prometheus_counter(out: &mut String, name: &str, labels: &str, value: u64) {
+    use std::fmt::Write as _;
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {value}");
+    } else {
+        let _ = writeln!(out, "{name}{{{labels}}} {value}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_grow_by_sqrt2_and_stay_sorted() {
+        let mut prev = 0u64;
+        for i in 0..N_BUCKETS - 1 {
+            let b = bucket_bound(i);
+            assert!(b >= prev, "bounds must be non-decreasing at {i}");
+            prev = b;
+        }
+        // Even buckets are exact powers of two.
+        assert_eq!(bucket_bound(0), 1);
+        assert_eq!(bucket_bound(2), 2);
+        assert_eq!(bucket_bound(20), 1024);
+        // Odd buckets are the √2 midpoints.
+        assert_eq!(bucket_bound(21), 1448);
+        // The top finite bound covers ~36 minutes of microseconds.
+        assert!(bucket_bound(N_BUCKETS - 2) > 2_000_000_000);
+    }
+
+    #[test]
+    fn bucket_index_matches_bounds() {
+        for v in [0u64, 1, 2, 3, 5, 8, 100, 1_000_000, u64::MAX] {
+            let i = bucket_index(v);
+            if i < N_BUCKETS - 1 {
+                assert!(v < bucket_bound(i), "{v} outside bucket {i}");
+            }
+            if i > 0 {
+                assert!(v >= bucket_bound(i - 1), "{v} below bucket {i}");
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn record_snapshot_quantiles() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum_micros, 1100);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 5);
+        let p50 = s.quantile_upper_bound(0.5).unwrap();
+        assert!((16..=45).contains(&p50), "p50 bound {p50}");
+        let p100 = s.quantile_upper_bound(1.0).unwrap();
+        assert!(p100 >= 1000);
+        assert!((s.mean_micros() - 220.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_order_invariant() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h.snapshot()
+        };
+        let a = mk(&[1, 5, 9]);
+        let b = mk(&[100, 200]);
+        let c = mk(&[1_000_000]);
+        let abc = a.merge(&b).merge(&c);
+        let cba = c.merge(&b).merge(&a);
+        let bca = b.merge(&c.merge(&a));
+        assert_eq!(abc, cba);
+        assert_eq!(abc, bca);
+        assert_eq!(abc.count, 6);
+        let empty = HistogramSnapshot::default();
+        assert_eq!(empty.merge(&a), a.merge(&empty));
+        assert_eq!(empty.quantile_upper_bound(0.5), None);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_cumulative_and_parseable() {
+        let h = Histogram::new();
+        h.record(3);
+        h.record(3);
+        h.record(50);
+        let mut text = String::new();
+        prometheus_histogram(&mut text, "pallas_test_us", "family=\"knn\"", &h.snapshot());
+        assert!(text.contains("# TYPE pallas_test_us histogram"));
+        assert!(text.contains("pallas_test_us_bucket{family=\"knn\",le=\"+Inf\"} 3"));
+        assert!(text.contains("pallas_test_us_sum{family=\"knn\"} 56"));
+        assert!(text.contains("pallas_test_us_count{family=\"knn\"} 3"));
+        // Cumulative counts never decrease down the bucket list.
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-cumulative line: {line}");
+            prev = v;
+        }
+        let mut plain = String::new();
+        prometheus_counter(&mut plain, "pallas_jobs_total", "", 7);
+        assert_eq!(plain, "pallas_jobs_total 7\n");
+    }
+}

@@ -1,0 +1,530 @@
+//! Observability layer 1: **deterministic in-algorithm query telemetry**.
+//!
+//! The paper's case is that triangle-inequality pruning makes queries
+//! cheap — and Pestov (arXiv 0812.0146) proves that pruning provably
+//! degrades in high dimension. Until now the engine could only report
+//! one scalar (`dists`) per run, so nobody could see *where* a query
+//! spent its work or whether the tree was still winning. This module is
+//! the counter block that answers that: nodes visited, nodes/rows
+//! pruned split by *which* rule fired, leaf rows scanned, the frontier
+//! high-water mark and per-level fan-out — everything the ROADMAP's
+//! adaptive planner needs to decide per (dataset, family) whether the
+//! tree beats the blocked naive scan.
+//!
+//! ## Determinism contract
+//!
+//! Everything in this module is **pure counting**: u64 sums (and one
+//! `fetch_max`) over events the algorithms emit. Sums and max are
+//! commutative, so totals are bit-identical at every thread count,
+//! shard count, and across repeated runs — the same contract
+//! [`crate::metrics::DistCounter`] already keeps, proven by
+//! `tests/obs_equivalence.rs`. The sink is sharded per worker exactly
+//! like the distance counter (round-robin cache-line-aligned cells) so
+//! concurrent bumps never contend on one line.
+//!
+//! No clocks, no environment reads live here in [`ObsSink`] — pallas-lint
+//! D2 (wall-clock) quarantines timing at the serving edge. The *timed*
+//! half of observability (latency histograms, trace spans) lives in
+//! [`hist`] and [`trace`], which are only ever *recorded into* from
+//! `coordinator/`, `server.rs` and `main.rs`.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Histogram, HistogramSnapshot};
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Why a traversal skipped work. Units differ per rule — see the
+/// variant docs — but every cell is "work the naive path would have
+/// paid that the rule avoided".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneRule {
+    /// Triangle-inequality bound excluded a whole node (knn frontier,
+    /// ball whole-in/whole-out, allpairs/mst node rejection, anomaly
+    /// rules 1–2). Unit: nodes.
+    Triangle = 0,
+    /// A cached-statistics error budget settled a whole node at its
+    /// midpoint (KDE / kernel-regression half-width test, EM τ-bracket
+    /// award). Unit: nodes.
+    Budget = 1,
+    /// The f32 filter tier conclusively rejected rows, so the exact f64
+    /// kernel never saw them. Unit: rows.
+    F32Reject = 2,
+    /// Anomaly rule 3: enough in-radius neighbors found to settle
+    /// "not an anomaly" early. Unit: early exits.
+    Rule3 = 3,
+    /// Anomaly rule 4: remaining candidates cannot reach the threshold,
+    /// settling "anomaly" early. Unit: early exits.
+    Rule4 = 4,
+}
+
+/// Number of [`PruneRule`] cells.
+pub const N_RULES: usize = 5;
+
+impl PruneRule {
+    /// All rules, in cell order.
+    pub const ALL: [PruneRule; N_RULES] = [
+        PruneRule::Triangle,
+        PruneRule::Budget,
+        PruneRule::F32Reject,
+        PruneRule::Rule3,
+        PruneRule::Rule4,
+    ];
+
+    /// Stable wire/exposition name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PruneRule::Triangle => "triangle",
+            PruneRule::Budget => "budget",
+            PruneRule::F32Reject => "f32_reject",
+            PruneRule::Rule3 => "rule3",
+            PruneRule::Rule4 => "rule4",
+        }
+    }
+
+    fn cell(self) -> usize {
+        self as usize
+    }
+}
+
+/// Depth cells tracked for per-level fan-out. Deeper visits clamp into
+/// the last cell; with `rmin ≥ 8` no realistic tree exceeds this.
+pub const LEVEL_SLOTS: usize = 32;
+
+/// Number of sink cells; mirrors the distance counter's shard count so
+/// round-robin thread assignment rarely aliases two hot workers.
+const SHARDS: usize = 16;
+
+/// One cache line (and change) of counters for one worker shard. All
+/// cells for one thread ride together: the same traversal bumps them
+/// back to back, so sharing lines within a shard is the cheap layout.
+#[repr(align(64))]
+#[derive(Debug)]
+struct ObsShard {
+    nodes_visited: AtomicU64,
+    pruned: [AtomicU64; N_RULES],
+    leaf_rows: AtomicU64,
+    level_fanout: [AtomicU64; LEVEL_SLOTS],
+}
+
+impl ObsShard {
+    fn new() -> ObsShard {
+        ObsShard {
+            nodes_visited: AtomicU64::new(0),
+            pruned: std::array::from_fn(|_| AtomicU64::new(0)),
+            leaf_rows: AtomicU64::new(0),
+            level_fanout: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Monotonic round-robin source of shard assignments (separate from the
+/// distance counter's so neither perturbs the other's spread).
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's shard index, fixed at first use.
+    static SHARD_INDEX: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+}
+
+/// The traversal-statistics sink one [`crate::metrics::Space`] owns,
+/// shared (like the distance counter) by every view and arena derived
+/// from it. Algorithms bump it through the `Space::obs_*` helpers;
+/// [`crate::engine::Index::run_traced`] snapshots around a query to
+/// attribute a per-query [`QueryStats`] delta.
+///
+/// Relaxed ordering is sufficient everywhere: cells are only read after
+/// a query completes (the coordinator's per-dataset run lock, or the
+/// CLI's single-query lifetime, guarantees exclusivity), never used for
+/// synchronization.
+#[derive(Debug)]
+pub struct ObsSink {
+    shards: [ObsShard; SHARDS],
+    /// High-water mark of the best-first frontier, via `fetch_max`.
+    /// Reset per query (it is a peak, not a monotone sum).
+    frontier_peak: AtomicU64,
+}
+
+impl Default for ObsSink {
+    fn default() -> Self {
+        ObsSink::new()
+    }
+}
+
+impl ObsSink {
+    pub fn new() -> ObsSink {
+        ObsSink {
+            shards: std::array::from_fn(|_| ObsShard::new()),
+            frontier_peak: AtomicU64::new(0),
+        }
+    }
+
+    /// A traversal entered a node at `depth` (root = 0).
+    #[inline]
+    pub fn visit(&self, depth: usize) {
+        let shard = SHARD_INDEX.with(|i| *i);
+        let s = &self.shards[shard];
+        s.nodes_visited.fetch_add(1, Ordering::Relaxed);
+        s.level_fanout[depth.min(LEVEL_SLOTS - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One prune event under `rule`.
+    #[inline]
+    pub fn prune(&self, rule: PruneRule) {
+        self.prune_n(rule, 1);
+    }
+
+    /// `n` prune events under `rule` (e.g. rows a filter tier rejected,
+    /// or the frontier remainder a bound cut off at once).
+    #[inline]
+    pub fn prune_n(&self, rule: PruneRule, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let shard = SHARD_INDEX.with(|i| *i);
+        self.shards[shard].pruned[rule.cell()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` leaf rows scanned by a blocked kernel or pointwise loop.
+    #[inline]
+    pub fn leaf_rows(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let shard = SHARD_INDEX.with(|i| *i);
+        self.shards[shard].leaf_rows.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Observe the current frontier length; keeps the maximum.
+    #[inline]
+    pub fn frontier(&self, len: usize) {
+        self.frontier_peak
+            .fetch_max(crate::ids::u64_from_usize(len), Ordering::Relaxed);
+    }
+
+    /// Reset the per-query frontier peak (called at query start by
+    /// `run_traced`; the counters themselves are monotone and are read
+    /// as before/after deltas instead).
+    pub fn reset_frontier_peak(&self) {
+        self.frontier_peak.store(0, Ordering::Relaxed);
+    }
+
+    /// Sum every shard into a point-in-time [`QueryStats`].
+    pub fn snapshot(&self) -> QueryStats {
+        let mut out = QueryStats::default();
+        for s in &self.shards {
+            out.nodes_visited += s.nodes_visited.load(Ordering::Relaxed);
+            for (cell, p) in out.pruned.iter_mut().zip(&s.pruned) {
+                *cell += p.load(Ordering::Relaxed);
+            }
+            out.leaf_rows += s.leaf_rows.load(Ordering::Relaxed);
+            for (cell, l) in out.level_fanout.iter_mut().zip(&s.level_fanout) {
+                *cell += l.load(Ordering::Relaxed);
+            }
+        }
+        out.frontier_peak = self.frontier_peak.load(Ordering::Relaxed);
+        out
+    }
+
+    /// Zero every cell (tests / bench isolation; production paths use
+    /// before/after snapshots instead).
+    pub fn reset(&self) {
+        for s in &self.shards {
+            s.nodes_visited.store(0, Ordering::Relaxed);
+            for p in &s.pruned {
+                p.store(0, Ordering::Relaxed);
+            }
+            s.leaf_rows.store(0, Ordering::Relaxed);
+            for l in &s.level_fanout {
+                l.store(0, Ordering::Relaxed);
+            }
+        }
+        self.frontier_peak.store(0, Ordering::Relaxed);
+    }
+}
+
+/// One query's traversal statistics: the delta of an [`ObsSink`] over
+/// the query's execution. Plain data — every field a u64 sum (or the
+/// frontier peak), so snapshots merge by field-wise addition and
+/// compare bit-exactly across thread/shard counts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Tree nodes a traversal entered (all families; dual-tree walks
+    /// count node *pairs* visited).
+    pub nodes_visited: u64,
+    /// Prune events split by rule, indexed by [`PruneRule`] cell order.
+    pub pruned: [u64; N_RULES],
+    /// Leaf rows scanned (blocked kernels and pointwise loops alike;
+    /// the naive paths count every row here).
+    pub leaf_rows: u64,
+    /// High-water mark of the best-first frontier (0 for traversals
+    /// without one).
+    pub frontier_peak: u64,
+    /// Nodes visited per depth, root = slot 0 (deeper clamps into the
+    /// last slot). `sum(level_fanout) == nodes_visited`.
+    pub level_fanout: [u64; LEVEL_SLOTS],
+}
+
+impl Default for QueryStats {
+    fn default() -> Self {
+        QueryStats {
+            nodes_visited: 0,
+            pruned: [0; N_RULES],
+            leaf_rows: 0,
+            frontier_peak: 0,
+            level_fanout: [0; LEVEL_SLOTS],
+        }
+    }
+}
+
+impl QueryStats {
+    /// Count pruned under one rule.
+    pub fn pruned_by(&self, rule: PruneRule) -> u64 {
+        self.pruned[rule.cell()]
+    }
+
+    /// Total prune events across every rule.
+    pub fn total_pruned(&self) -> u64 {
+        self.pruned.iter().sum()
+    }
+
+    /// The per-query delta: `self` (the *after* snapshot) minus
+    /// `before`, field-wise. The frontier peak is taken raw from
+    /// `self` — `run_traced` resets it at query start, so it already
+    /// is this query's peak rather than a lifetime maximum.
+    pub fn delta_from(&self, before: &QueryStats) -> QueryStats {
+        let mut out = QueryStats {
+            nodes_visited: self.nodes_visited - before.nodes_visited,
+            pruned: [0; N_RULES],
+            leaf_rows: self.leaf_rows - before.leaf_rows,
+            frontier_peak: self.frontier_peak,
+            level_fanout: [0; LEVEL_SLOTS],
+        };
+        for i in 0..N_RULES {
+            out.pruned[i] = self.pruned[i] - before.pruned[i];
+        }
+        for i in 0..LEVEL_SLOTS {
+            out.level_fanout[i] = self.level_fanout[i] - before.level_fanout[i];
+        }
+        out
+    }
+
+    /// Field-wise accumulation (sums; peak keeps the max) — how the
+    /// coordinator aggregates per-family lifetime stats across jobs.
+    pub fn accumulate(&mut self, other: &QueryStats) {
+        self.nodes_visited += other.nodes_visited;
+        for (a, b) in self.pruned.iter_mut().zip(&other.pruned) {
+            *a += b;
+        }
+        self.leaf_rows += other.leaf_rows;
+        self.frontier_peak = self.frontier_peak.max(other.frontier_peak);
+        for (a, b) in self.level_fanout.iter_mut().zip(&other.level_fanout) {
+            *a += b;
+        }
+    }
+
+    /// Deepest level with any visits, or `None` when no node was
+    /// entered (naive scans).
+    pub fn max_depth(&self) -> Option<usize> {
+        self.level_fanout.iter().rposition(|&c| c > 0)
+    }
+}
+
+/// The engine's query-family names, in the order the serving edge
+/// indexes its per-family histograms and lifetime stats. Must match
+/// `engine::Query::kind()` exactly for every variant (pinned by
+/// `tests/obs_equivalence.rs`).
+pub const FAMILIES: [&str; 11] = [
+    "kmeans",
+    "xmeans",
+    "anomaly",
+    "allpairs",
+    "ball",
+    "ballstats",
+    "kde",
+    "kreg",
+    "em",
+    "knn",
+    "mst",
+];
+
+/// Index of a query family's cell in the serving-edge aggregates.
+pub fn family_index(kind: &str) -> Option<usize> {
+    FAMILIES.iter().position(|&f| f == kind)
+}
+
+/// The one end-of-run report formatter every CLI subcommand shares
+/// (satellite of ISSUE 9): distance accounting, the f32-tier eval
+/// split, and the traversal statistics, in a fixed human-readable
+/// shape. `wall_secs` is measured by the *caller* (main.rs / the
+/// coordinator — the timed edge); this function only formats it.
+pub fn format_run_report(
+    dists: u64,
+    f32_evals: u64,
+    stats: &QueryStats,
+    wall_secs: Option<f64>,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = write!(out, "distance computations {dists}  f32-filter evals {f32_evals}");
+    if let Some(w) = wall_secs {
+        let _ = write!(out, "  wall {w:.2}s");
+    }
+    let _ = writeln!(out);
+    let _ = write!(
+        out,
+        "nodes visited {}  leaf rows {}  frontier peak {}",
+        stats.nodes_visited, stats.leaf_rows, stats.frontier_peak
+    );
+    let _ = writeln!(out);
+    let _ = write!(out, "pruned:");
+    for rule in PruneRule::ALL {
+        let _ = write!(out, " {} {}", rule.name(), stats.pruned_by(rule));
+    }
+    let _ = writeln!(out);
+    if let Some(deepest) = stats.max_depth() {
+        let levels: Vec<String> = stats.level_fanout[..=deepest]
+            .iter()
+            .map(|c| c.to_string())
+            .collect();
+        let _ = write!(out, "level fan-out [{}]", levels.join(", "));
+        let _ = writeln!(out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn visit_prune_leaf_snapshot() {
+        let sink = ObsSink::new();
+        sink.visit(0);
+        sink.visit(1);
+        sink.visit(1);
+        sink.prune(PruneRule::Triangle);
+        sink.prune_n(PruneRule::F32Reject, 40);
+        sink.leaf_rows(123);
+        sink.frontier(7);
+        sink.frontier(3);
+        let s = sink.snapshot();
+        assert_eq!(s.nodes_visited, 3);
+        assert_eq!(s.pruned_by(PruneRule::Triangle), 1);
+        assert_eq!(s.pruned_by(PruneRule::F32Reject), 40);
+        assert_eq!(s.total_pruned(), 41);
+        assert_eq!(s.leaf_rows, 123);
+        assert_eq!(s.frontier_peak, 7);
+        assert_eq!(s.level_fanout[0], 1);
+        assert_eq!(s.level_fanout[1], 2);
+        assert_eq!(s.max_depth(), Some(1));
+        assert_eq!(
+            s.level_fanout.iter().sum::<u64>(),
+            s.nodes_visited,
+            "fan-out must partition the visits"
+        );
+    }
+
+    #[test]
+    fn deep_visits_clamp_into_last_slot() {
+        let sink = ObsSink::new();
+        sink.visit(LEVEL_SLOTS + 10);
+        let s = sink.snapshot();
+        assert_eq!(s.level_fanout[LEVEL_SLOTS - 1], 1);
+        assert_eq!(s.max_depth(), Some(LEVEL_SLOTS - 1));
+    }
+
+    #[test]
+    fn delta_subtracts_counters_and_keeps_raw_peak() {
+        let sink = ObsSink::new();
+        sink.visit(0);
+        sink.leaf_rows(10);
+        sink.frontier(99);
+        let before = sink.snapshot();
+        sink.reset_frontier_peak();
+        sink.visit(1);
+        sink.prune(PruneRule::Budget);
+        sink.leaf_rows(5);
+        sink.frontier(4);
+        let after = sink.snapshot();
+        let d = after.delta_from(&before);
+        assert_eq!(d.nodes_visited, 1);
+        assert_eq!(d.leaf_rows, 5);
+        assert_eq!(d.pruned_by(PruneRule::Budget), 1);
+        assert_eq!(d.frontier_peak, 4, "peak is per-query, not lifetime");
+        assert_eq!(d.level_fanout[1], 1);
+        assert_eq!(d.level_fanout[0], 0);
+    }
+
+    #[test]
+    fn accumulate_sums_and_maxes() {
+        let mut a = QueryStats::default();
+        a.nodes_visited = 2;
+        a.frontier_peak = 5;
+        a.pruned[0] = 1;
+        let mut b = QueryStats::default();
+        b.nodes_visited = 3;
+        b.frontier_peak = 4;
+        b.pruned[0] = 2;
+        b.leaf_rows = 7;
+        a.accumulate(&b);
+        assert_eq!(a.nodes_visited, 5);
+        assert_eq!(a.frontier_peak, 5);
+        assert_eq!(a.pruned[0], 3);
+        assert_eq!(a.leaf_rows, 7);
+    }
+
+    #[test]
+    fn concurrent_bumps_sum_exactly() {
+        let sink = Arc::new(ObsSink::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let sink = Arc::clone(&sink);
+            handles.push(std::thread::spawn(move || {
+                for d in 0..1000usize {
+                    sink.visit(d % 4);
+                    sink.prune_n(PruneRule::Triangle, 2);
+                    sink.leaf_rows(3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = sink.snapshot();
+        assert_eq!(s.nodes_visited, 8_000);
+        assert_eq!(s.pruned_by(PruneRule::Triangle), 16_000);
+        assert_eq!(s.leaf_rows, 24_000);
+        assert_eq!(s.level_fanout[0], 2_000);
+    }
+
+    #[test]
+    fn family_table_is_total_and_unique() {
+        for (i, f) in FAMILIES.iter().enumerate() {
+            assert_eq!(family_index(f), Some(i));
+        }
+        assert_eq!(family_index("nope"), None);
+    }
+
+    #[test]
+    fn report_formats_every_section() {
+        let mut s = QueryStats::default();
+        s.nodes_visited = 3;
+        s.level_fanout[0] = 1;
+        s.level_fanout[2] = 2;
+        s.pruned[0] = 9;
+        let text = format_run_report(100, 20, &s, Some(0.5));
+        assert!(text.contains("distance computations 100"));
+        assert!(text.contains("f32-filter evals 20"));
+        assert!(text.contains("wall 0.50s"));
+        assert!(text.contains("triangle 9"));
+        assert!(text.contains("level fan-out [1, 0, 2]"));
+        // Naive runs have no tree levels: the fan-out line disappears
+        // instead of printing an empty list.
+        let naive = format_run_report(5, 0, &QueryStats::default(), None);
+        assert!(!naive.contains("level fan-out"));
+        assert!(!naive.contains("wall"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Env-gated JSONL trace-event sink.
+//!
+//! When `PALLAS_TRACE=<path>` is set, the serving edge emits one JSON
+//! object per line for each job phase (queue-wait, build, run,
+//! end-to-end). When unset — the default — [`enabled`] is `false` and
+//! every [`span`] call is a no-op that never touches the filesystem.
+//!
+//! The sink is intentionally tiny: append-mode `File` behind a
+//! `Mutex`, one `writeln!` per span, a monotonically increasing `seq`
+//! so post-hoc tooling can order records without trusting timestamps.
+//! It lives in `obs/` because pallas-lint D2 quarantines `std::env`
+//! and wall-clock access to the observability/serving edge; algorithm
+//! code cannot emit spans directly.
+
+use crate::json::Value;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// The sink: `None` when `PALLAS_TRACE` is unset or the file cannot
+/// be opened (tracing silently disabled — observability must never
+/// take the serving path down).
+static SINK: OnceLock<Option<Mutex<File>>> = OnceLock::new();
+
+/// Monotone record counter across the whole process.
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn sink() -> &'static Option<Mutex<File>> {
+    SINK.get_or_init(|| {
+        let path = std::env::var("PALLAS_TRACE").ok()?;
+        if path.is_empty() {
+            return None;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path).ok()?;
+        Some(Mutex::new(file))
+    })
+}
+
+/// True when a trace sink is configured and open.
+pub fn enabled() -> bool {
+    sink().is_some()
+}
+
+/// Emit one span record: `{"seq":N,"span":name,...fields}`.
+///
+/// `fields` are appended in the order given; values use the crate's
+/// canonical JSON encoder, so output is deterministic given the same
+/// inputs. Duration fields should be pre-measured by the caller (in
+/// microseconds) — this module never reads a clock itself.
+pub fn span(name: &str, fields: &[(&str, Value)]) {
+    let Some(file) = sink() else { return };
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut line = String::new();
+    line.push_str("{\"seq\":");
+    line.push_str(&seq.to_string());
+    line.push_str(",\"span\":");
+    line.push_str(&crate::json::write(&Value::Str(name.to_string())));
+    for (k, v) in fields {
+        line.push(',');
+        line.push_str(&crate::json::write(&Value::Str((*k).to_string())));
+        line.push(':');
+        line.push_str(&crate::json::write(v));
+    }
+    line.push('}');
+    if let Ok(mut f) = file.lock() {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sink is process-global and env-gated; tests here only cover
+    // the record formatting path via the disabled default (CI sets
+    // PALLAS_TRACE for the socket smoke test, which validates the
+    // JSONL output end to end).
+    #[test]
+    fn disabled_by_default_and_span_is_safe() {
+        // Under `cargo test` PALLAS_TRACE is normally unset; either
+        // way, span() must not panic.
+        span("test", &[("micros", Value::Num(12.0))]);
+        let _ = enabled();
+    }
+}

@@ -1,0 +1,277 @@
+//! Observability acceptance suite: the [`QueryStats`] counters are part
+//! of the determinism contract — a pure function of (dataset, query),
+//! NOT of the execution schedule. Checked here:
+//!
+//! - every one of the eleven query families returns populated counters
+//!   through `Index::run_traced`;
+//! - the counters are bit-identical across thread counts {1, 8}, across
+//!   coordinator shard counts {1, 4}, and across repeated runs;
+//! - toggling the exact f32 filter tier changes *only* the
+//!   `f32_reject` prune cell — every other counter is tier-invariant;
+//! - the `obs::FAMILIES` table and `Query::kind` agree exactly;
+//! - serving-edge snapshot merging ([`ObsSnapshot::merge`]) is
+//!   order-invariant, on synthetic snapshots and on real shard output.
+
+use anchors_hierarchy::algorithms::kde::Kernel;
+use anchors_hierarchy::coordinator::{JobSpec, JobState, ObsSnapshot, ShardedCoordinator};
+use anchors_hierarchy::dataset::{DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{
+    AllPairsQuery, AnomalyQuery, BallQuery, BallStatsQuery, GaussianEmQuery, Index, IndexBuilder,
+    KdeQuery, KernelRegressionQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query,
+    XmeansQuery,
+};
+use anchors_hierarchy::obs::{self, Histogram, HistogramSnapshot, PruneRule, QueryStats};
+use anchors_hierarchy::parallel::Parallelism;
+
+fn index_with(threads: usize) -> Index {
+    IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.002))
+        .rmin(16)
+        .parallelism(Parallelism::Fixed(threads))
+        .build()
+}
+
+/// One query per family — all eleven `obs::FAMILIES` entries, tree
+/// paths on (the instrumented traversals), 2-dim centers to match the
+/// squiggles dataset.
+fn all_families() -> Vec<Query> {
+    let center = vec![0.0f32, 0.0];
+    vec![
+        Query::Kmeans(KmeansQuery { k: 3, iters: 3, use_tree: true, ..Default::default() }),
+        Query::Xmeans(XmeansQuery { k_min: 1, k_max: 4 }),
+        Query::Anomaly(AnomalyQuery { threshold: 5, use_tree: true, ..Default::default() }),
+        Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree: true }),
+        Query::Ball(BallQuery { center: center.clone(), radius: 1.0, use_tree: true }),
+        Query::BallStats(BallStatsQuery { center: center.clone(), radius: 1.0, use_tree: true }),
+        Query::Kde(KdeQuery {
+            center: center.clone(),
+            kernel: Kernel::Gaussian,
+            bandwidth: 1.0,
+            eps_abs: 0.0,
+            eps_rel: 0.01,
+            use_tree: true,
+        }),
+        Query::KernelRegression(KernelRegressionQuery {
+            center,
+            target_dim: 1,
+            kernel: Kernel::Gaussian,
+            bandwidth: 1.0,
+            eps_abs: 0.0,
+            eps_rel: 0.01,
+            use_tree: true,
+        }),
+        Query::GaussianEm(GaussianEmQuery { k: 2, steps: 2, use_tree: true, ..Default::default() }),
+        Query::Knn(KnnQuery { target: KnnTarget::Point(3), k: 4, use_tree: true }),
+        Query::Mst(MstQuery { use_tree: true }),
+    ]
+}
+
+#[test]
+fn families_table_matches_query_kinds() {
+    let queries = all_families();
+    assert_eq!(queries.len(), obs::FAMILIES.len(), "one query per family");
+    for (i, q) in queries.iter().enumerate() {
+        let fi = obs::family_index(q.kind())
+            .unwrap_or_else(|| panic!("{} missing from obs::FAMILIES", q.kind()));
+        assert_eq!(obs::FAMILIES[fi], q.kind());
+        assert_eq!(fi, i, "all_families() lists families in table order");
+    }
+}
+
+#[test]
+fn every_family_returns_populated_stats() {
+    let index = index_with(1);
+    for q in all_families() {
+        let (result, stats) = index.run_traced(&q);
+        assert_eq!(result.kind(), q.kind());
+        assert_ne!(stats, QueryStats::default(), "{}: empty QueryStats", q.kind());
+        assert!(
+            stats.nodes_visited > 0,
+            "{}: tree query visited no nodes: {stats:?}",
+            q.kind()
+        );
+        // Ball-type and budgeted queries may legitimately resolve every
+        // node wholesale (no leaf scan); these families cannot.
+        if matches!(q.kind(), "kmeans" | "xmeans" | "anomaly" | "em" | "knn" | "mst") {
+            assert!(stats.leaf_rows > 0, "{}: no leaf rows scanned: {stats:?}", q.kind());
+        }
+    }
+}
+
+#[test]
+fn stats_bit_identical_across_thread_counts() {
+    let serial = index_with(1);
+    let parallel = index_with(8);
+    for q in all_families() {
+        let (_, a) = serial.run_traced(&q);
+        let (_, b) = parallel.run_traced(&q);
+        assert_eq!(a, b, "{}: QueryStats diverged between 1 and 8 threads", q.kind());
+    }
+}
+
+#[test]
+fn stats_bit_identical_across_repeated_runs() {
+    let index = index_with(4);
+    for q in all_families() {
+        let (_, a) = index.run_traced(&q);
+        let (_, b) = index.run_traced(&q);
+        assert_eq!(a, b, "{}: QueryStats diverged between repeated runs", q.kind());
+    }
+}
+
+/// Zero the one cell the f32 tier is *allowed* to populate.
+fn without_f32_cell(stats: &QueryStats) -> QueryStats {
+    let mut s = stats.clone();
+    s.pruned[PruneRule::F32Reject as usize] = 0;
+    s
+}
+
+#[test]
+fn f32_tier_changes_only_the_f32_reject_cell() {
+    let build = |tier: bool| {
+        IndexBuilder::new(DatasetSpec::scaled(DatasetKind::Squiggles, 0.002))
+            .rmin(16)
+            .parallelism(Parallelism::Fixed(1))
+            .with_f32_tier(tier)
+            .build()
+    };
+    let off = build(false);
+    let on = build(true);
+    // The threshold-scan families wired to the tier in PR 8.
+    let center = vec![0.0f32, 0.0];
+    let queries = vec![
+        Query::Ball(BallQuery { center: center.clone(), radius: 1.0, use_tree: true }),
+        Query::BallStats(BallStatsQuery { center, radius: 1.0, use_tree: true }),
+        Query::Knn(KnnQuery { target: KnnTarget::Point(3), k: 4, use_tree: true }),
+        Query::Anomaly(AnomalyQuery { threshold: 5, use_tree: true, ..Default::default() }),
+    ];
+    let mut rejects = 0u64;
+    for q in &queries {
+        let (_, a) = off.run_traced(q);
+        let (_, b) = on.run_traced(q);
+        assert_eq!(
+            a.pruned_by(PruneRule::F32Reject),
+            0,
+            "{}: tier-off run recorded f32 rejects",
+            q.kind()
+        );
+        assert_eq!(
+            without_f32_cell(&a),
+            without_f32_cell(&b),
+            "{}: tier toggle changed a counter other than f32_reject",
+            q.kind()
+        );
+        rejects += b.pruned_by(PruneRule::F32Reject);
+    }
+    assert!(rejects > 0, "tier-on runs recorded no conclusive f32 rejects at all");
+}
+
+#[test]
+fn stats_bit_identical_across_shard_counts() {
+    let specs = || {
+        vec![
+            JobSpec {
+                dataset: DatasetSpec::scaled(DatasetKind::Squiggles, 0.003),
+                query: Query::Kmeans(KmeansQuery {
+                    k: 3,
+                    iters: 2,
+                    use_tree: true,
+                    ..Default::default()
+                }),
+                rmin: 16,
+            },
+            JobSpec {
+                dataset: DatasetSpec::scaled(DatasetKind::Voronoi, 0.002),
+                query: Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 5, use_tree: true }),
+                rmin: 16,
+            },
+            JobSpec {
+                dataset: DatasetSpec::scaled(DatasetKind::Cell, 0.005),
+                query: Query::Mst(MstQuery { use_tree: true }),
+                rmin: 16,
+            },
+        ]
+    };
+    let run = |shards: usize| -> Vec<QueryStats> {
+        let coord = ShardedCoordinator::new(shards, 2, 16);
+        let ids: Vec<_> = specs().into_iter().map(|s| coord.submit(s).unwrap()).collect();
+        ids.into_iter()
+            .map(|id| match coord.wait(id) {
+                JobState::Done(r) => r.stats,
+                other => panic!("job {id} did not complete: {other:?}"),
+            })
+            .collect()
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one, four, "per-job QueryStats diverged between 1 and 4 shards");
+}
+
+fn hist_of(vals: &[u64]) -> HistogramSnapshot {
+    let h = Histogram::new();
+    for &v in vals {
+        h.record(v);
+    }
+    h.snapshot()
+}
+
+#[test]
+fn obs_snapshot_merge_is_order_invariant() {
+    let mk = |latencies: &[u64], visited: u64| ObsSnapshot {
+        queue_wait: hist_of(latencies),
+        build: hist_of(latencies),
+        run: vec![hist_of(latencies)],
+        e2e: vec![hist_of(latencies); 2],
+        stats: vec![QueryStats { nodes_visited: visited, ..Default::default() }],
+    };
+    let a = mk(&[3, 50, 900], 7);
+    let b = mk(&[1], 11);
+    let c = mk(&[40_000, 40_001], 0);
+    let abc = a.merge(&b).merge(&c);
+    let cba = c.merge(&b).merge(&a);
+    let bca = b.merge(&c.merge(&a));
+    assert_eq!(abc, cba);
+    assert_eq!(abc, bca);
+    assert_eq!(abc.queue_wait.count, 6);
+    // Unequal vector lengths pad with empties instead of truncating.
+    assert_eq!(abc.e2e.len(), 2);
+    assert_eq!(abc.stats[0].nodes_visited, 18);
+    // Merging the identity changes nothing.
+    assert_eq!(abc.merge(&ObsSnapshot::default()), abc);
+}
+
+#[test]
+fn sharded_coordinator_obs_folds_order_invariantly() {
+    let coord = ShardedCoordinator::new(4, 2, 16);
+    let ids: Vec<_> = [
+        (DatasetKind::Squiggles, 0.003),
+        (DatasetKind::Voronoi, 0.002),
+        (DatasetKind::Cell, 0.005),
+    ]
+    .into_iter()
+    .map(|(kind, scale)| {
+        coord
+            .submit(JobSpec {
+                dataset: DatasetSpec::scaled(kind, scale),
+                query: Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 3, use_tree: true }),
+                rmin: 16,
+            })
+            .unwrap()
+    })
+    .collect();
+    for id in ids {
+        assert!(matches!(coord.wait(id), JobState::Done(_)));
+    }
+    let per_shard = coord.shard_obs();
+    let forward = per_shard
+        .iter()
+        .fold(ObsSnapshot::default(), |acc, o| acc.merge(o));
+    let reverse = per_shard
+        .iter()
+        .rev()
+        .fold(ObsSnapshot::default(), |acc, o| acc.merge(o));
+    assert_eq!(forward, reverse, "shard merge order changed the aggregate");
+    assert_eq!(forward, coord.obs(), "ShardedCoordinator::obs is the shard fold");
+    let knn = obs::family_index("knn").unwrap();
+    assert_eq!(forward.run[knn].count, 3, "three knn jobs recorded");
+    assert!(forward.stats[knn].nodes_visited > 0);
+}

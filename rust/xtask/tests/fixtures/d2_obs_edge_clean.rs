@@ -1,0 +1,14 @@
+//! D2 scope fixture: serving-edge timing. The *same source* is clean
+//! when linted under `obs/`, `coordinator/` or `main.rs` (the sanctioned
+//! homes for clocks) and a violation under `algorithms/` or `engine/` —
+//! the path gate, not the code, decides.
+use std::time::Instant;
+
+pub fn record_latency(hist: &mut Vec<u64>) {
+    let start = Instant::now();
+    serve_one();
+    let micros = u64::try_from(start.elapsed().as_micros()).unwrap_or(u64::MAX);
+    hist.push(micros);
+}
+
+fn serve_one() {}

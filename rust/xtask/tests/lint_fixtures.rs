@@ -62,6 +62,30 @@ fn d2_wall_clock() {
 }
 
 #[test]
+fn d2_scope_obs_and_serving_edge() {
+    // One fixture, five virtual paths: the D2 scope itself is under
+    // test. Timing code is legal in obs/ and at the serving edge…
+    for home in [
+        "rust/src/obs/fixture.rs",
+        "rust/src/coordinator/fixture.rs",
+        "rust/src/main.rs",
+    ] {
+        let r = lint_fixture("d2_obs_edge_clean.rs", home);
+        assert_diags(&r, &[]);
+        assert_eq!(r.suppressed, 0, "no allow needed at {home}");
+    }
+    // …and a violation in pure-algorithm code, engine/ included:
+    // `run_traced` returns deterministic counters, never timings.
+    for denied in [ALGO, "rust/src/engine/fixture.rs"] {
+        let r = lint_fixture("d2_obs_edge_clean.rs", denied);
+        assert_diags(
+            &r,
+            &[(8, "wall-clock", "Instant"), (10, "wall-clock", "elapsed")],
+        );
+    }
+}
+
+#[test]
 fn d3_uncounted_dist() {
     let v = lint_fixture("d3_uncounted_dist_violate.rs", ALGO);
     assert_diags(&v, &[(5, "uncounted-dist", "dense_dot")]);
