@@ -73,7 +73,7 @@ fn stream() -> Vec<JobSpec> {
                 }),
                 _ => Query::Mst(MstQuery { use_tree: true }),
             };
-            jobs.push(JobSpec { dataset: dataset.clone(), query, rmin: 30 });
+            jobs.push(JobSpec { dataset: dataset.clone(), query, rmin: 30, deadline_ms: None });
         }
     }
     jobs

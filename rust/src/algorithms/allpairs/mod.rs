@@ -32,6 +32,7 @@ pub fn naive_close_pairs(space: &Space, tau: f64) -> PairsResult {
         if i + 1 >= n {
             break;
         }
+        space.checkpoint();
         space.obs().leaf_rows(crate::ids::u64_from_usize(n - i - 1));
         block::dists_contig_rows(space, i..i + 1, i + 1..n, &mut dists);
         for (off, &d) in dists.iter().enumerate() {
@@ -70,6 +71,7 @@ fn dual(
 ) {
     // Dual-tree telemetry: each call is one node-*pair* visit, and
     // `leaf_rows` counts pair evaluations in the leaf blocks.
+    space.checkpoint();
     space.obs().visit(depth);
     let (na, nb) = (tree.node(a), tree.node(b));
     if a != b {

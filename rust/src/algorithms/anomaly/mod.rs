@@ -31,6 +31,9 @@ pub struct AnomalyParams {
 pub fn naive_is_anomaly(space: &Space, q: usize, params: &AnomalyParams) -> bool {
     let mut found = 0u64;
     for p in 0..space.n() {
+        if p % block::SCAN_CHUNK == 0 {
+            space.checkpoint();
+        }
         if space.dist(p, q) <= params.radius {
             found += 1;
             if found >= params.threshold {
@@ -126,6 +129,7 @@ fn recurse(
     frows: &mut Vec<u32>,
 ) -> Option<bool> {
     let node = tree.node(node_id);
+    space.checkpoint();
     space.count_bulk(1);
     let obs = space.obs();
     obs.visit(depth);

@@ -69,6 +69,7 @@ pub fn naive_ball_stats(space: &Space, center: &[f32], radius: f64) -> BallStats
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        space.checkpoint();
         space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
         match &filter {
             Some(f) => {
@@ -149,6 +150,7 @@ fn recurse(
     frows: &mut Vec<u32>,
 ) {
     let node = tree.node(id);
+    space.checkpoint();
     space.count_bulk(1);
     space.obs().visit(depth);
     // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
@@ -264,6 +266,7 @@ pub fn naive_ball_moments(space: &Space, center: &[f32], radius: f64) -> BallMom
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        space.checkpoint();
         space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
         match &filter {
             Some(f) => {
@@ -346,6 +349,7 @@ fn moments_recurse(
     frows: &mut Vec<u32>,
 ) {
     let node = tree.node(id);
+    space.checkpoint();
     space.count_bulk(1);
     space.obs().visit(depth);
     // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)

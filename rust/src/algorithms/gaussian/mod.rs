@@ -75,6 +75,9 @@ pub fn naive_em_step(space: &Space, mix: &mut Mixture) -> f64 {
     let mut logw = vec![0f64; k];
     space.obs().leaf_rows(crate::ids::u64_from_usize(space.n()));
     for p in 0..space.n() {
+        if p % block::SCAN_CHUNK == 0 {
+            space.checkpoint();
+        }
         for c in 0..k {
             let dist = space.dist_to_vec(p, &mix.means[c], m_sq[c]);
             logw[c] = log_weight(mix.weights[c], mix.variances[c], dist * dist, d);
@@ -127,6 +130,7 @@ fn recurse(
     let node = tree.node(id);
     let k = mix.k();
     let dim = space.dim();
+    space.checkpoint();
     space.obs().visit(depth);
     // Bracket log-weights over the node's ball (k counted distances).
     let mut lo = vec![0f64; k];

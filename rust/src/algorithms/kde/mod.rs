@@ -143,6 +143,7 @@ pub fn naive_kde(space: &Space, center: &[f32], kernel: Kernel, h: f64) -> KdeRe
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        space.checkpoint();
         space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
         block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
         for &d in &dists {
@@ -220,6 +221,7 @@ fn kde_recurse(
     dists: &mut Vec<f64>,
 ) {
     let node = tree.node(id);
+    space.checkpoint();
     space.count_bulk(1);
     space.obs().visit(depth);
     // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)
@@ -280,6 +282,7 @@ pub fn naive_kernel_regression(
     let mut lo = 0usize;
     while lo < space.n() {
         let hi = (lo + block::SCAN_CHUNK).min(space.n());
+        space.checkpoint();
         space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
         block::dists_contig_to_vec(space, lo..hi, center, c_sq, &mut dists);
         for (off, &d) in dists.iter().enumerate() {
@@ -376,6 +379,7 @@ fn kreg_recurse(
     dists: &mut Vec<f64>,
 ) {
     let node = tree.node(id);
+    space.checkpoint();
     space.count_bulk(1);
     space.obs().visit(depth);
     // pallas-lint: allow(uncounted-dist, counted via count_bulk on the previous line)

@@ -158,6 +158,7 @@ fn naive_pass(
         let mut lo = range.start;
         while lo < range.end {
             let hi = (lo + block::TILE).min(range.end);
+            space.checkpoint();
             space.obs().leaf_rows(crate::ids::u64_from_usize(hi - lo));
             block::dists_contig_to_centers(space, lo..hi, &ident, centroids, c_sq, &mut dists);
             for (ti, p) in (lo..hi).enumerate() {
@@ -202,6 +203,7 @@ fn naive_pass_xla(
         block_rows.clear();
         block_rows.extend((row as u32)..(hi as u32));
         let d2 = engine.dist2_block(space, &block_rows, centroids);
+        space.checkpoint();
         space.count_bulk((block_rows.len() * k) as u64);
         space.obs().leaf_rows(crate::ids::u64_from_usize(block_rows.len()));
         for (bi, &p) in block_rows.iter().enumerate() {
@@ -373,6 +375,7 @@ fn kmeans_step(
 ) {
     let node = ctx.tree.node(node_id);
     debug_assert!(hi > lo);
+    ctx.space.checkpoint();
     ctx.space.obs().visit(depth);
     let (new_lo, new_hi) = reduce_cands(ctx, node, lo, hi, scratch);
 
@@ -445,6 +448,7 @@ fn collect_step_tasks(
     // `depth` counts DOWN from STEP_FRONTIER_DEPTH (a frontier budget);
     // the node's tree depth counts up from the root.
     let tree_depth = STEP_FRONTIER_DEPTH - depth;
+    ctx.space.checkpoint();
     ctx.space.obs().visit(tree_depth);
     let (new_lo, new_hi) = reduce_cands(ctx, node, lo, hi, scratch);
     if new_hi - new_lo == 1 {

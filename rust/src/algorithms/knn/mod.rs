@@ -45,6 +45,7 @@ pub fn naive_knn(space: &Space, qrow: &[f32], q_sq: f64, k: usize, skip: Option<
         let mut lo = seg.start;
         while lo < seg.end {
             let hi = (lo + block::SCAN_CHUNK).min(seg.end);
+            space.checkpoint();
             // Threshold at chunk start: the kth best so far, only once
             // the heap is full (before that every row must be seen).
             let thr = if heap.len() == k { heap.peek().map(|w| w.dist) } else { None };
@@ -130,6 +131,7 @@ pub fn tree_knn(
                 }
             }
         }
+        space.checkpoint();
         obs.visit(depth);
         let node = tree.node(node_id);
         match node.children {

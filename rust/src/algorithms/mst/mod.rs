@@ -63,6 +63,7 @@ pub fn naive_mst(space: &Space) -> Vec<Edge> {
         best_from[j] = 0;
     }
     for _ in 1..n {
+        space.checkpoint();
         // Closest outside point.
         let (mut pick, mut pick_d) = (usize::MAX, f64::INFINITY);
         for j in 0..n {
@@ -233,6 +234,7 @@ fn descend(
         return;
     }
     let node = tree.node(id);
+    space.checkpoint();
     space.obs().visit(depth);
     // Prune: ball lower bound beats current best.
     space.count_bulk(1);

@@ -1,0 +1,142 @@
+//! Cooperative cancellation: the one-word flag a running query polls at
+//! its traversal checkpoints.
+//!
+//! A [`CancelSlot`] is a single atomic owned by a [`crate::metrics::Space`]
+//! and shared (like the distance counter and the obs sink) with every
+//! arena derived from it via `select_rows`. The coordinator *arms* the
+//! slot before a job's traversal starts and *sets* it from another
+//! thread — [`crate::coordinator::Coordinator::cancel`] for an explicit
+//! cancel, the deadline timer for an expired `deadline_ms`. The running
+//! query observes the flag only at explicit checkpoints
+//! ([`crate::metrics::Space::checkpoint`]): frontier pops and leaf-scan
+//! chunk boundaries, never inside a distance kernel — so on the
+//! non-cancelled path the checkpoint is observationally free (one
+//! relaxed load) and the determinism/accounting contract is untouched.
+//!
+//! A tripped checkpoint unwinds with [`std::panic::panic_any`] carrying
+//! a typed [`CancelUnwind`] payload. The coordinator's per-job
+//! `catch_unwind` downcasts it back and classifies the job as
+//! `Failed("cancelled")` / `Failed("deadline")` with the partial
+//! traversal counters attached — distinguishable from a real panic,
+//! which trips the per-dataset circuit breaker instead.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Why a running job was asked to stop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// Explicit `cancel` request for a running job.
+    Cancelled,
+    /// The job's `deadline_ms` expired.
+    Deadline,
+}
+
+impl CancelReason {
+    /// The wire/state error string for this reason (`"cancelled"` /
+    /// `"deadline"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CancelReason::Cancelled => "cancelled",
+            CancelReason::Deadline => "deadline",
+        }
+    }
+}
+
+const LIVE: u8 = 0;
+const CANCELLED: u8 = 1;
+const DEADLINE: u8 = 2;
+
+/// One job's cancellation flag: armed (cleared) by the worker at job
+/// start, set at most once by a canceller, polled at checkpoints.
+#[derive(Debug, Default)]
+pub struct CancelSlot {
+    state: AtomicU8,
+}
+
+impl CancelSlot {
+    pub fn new() -> CancelSlot {
+        CancelSlot { state: AtomicU8::new(LIVE) }
+    }
+
+    /// Clear the slot for a fresh job. Only the owning worker calls
+    /// this, under the dataset's run lock, before the job's traversal
+    /// starts — so a stale flag from a previous job on the same space
+    /// can never leak into the next one.
+    pub fn arm(&self) {
+        self.state.store(LIVE, Ordering::Release);
+    }
+
+    /// Request a stop. First reason wins; later calls are no-ops, so an
+    /// explicit cancel racing a deadline yields one stable reason.
+    pub fn set(&self, reason: CancelReason) {
+        let v = match reason {
+            CancelReason::Cancelled => CANCELLED,
+            CancelReason::Deadline => DEADLINE,
+        };
+        let _ = self
+            .state
+            .compare_exchange(LIVE, v, Ordering::AcqRel, Ordering::Acquire);
+    }
+
+    /// The reason set on this slot, if any.
+    pub fn get(&self) -> Option<CancelReason> {
+        match self.state.load(Ordering::Acquire) {
+            CANCELLED => Some(CancelReason::Cancelled),
+            DEADLINE => Some(CancelReason::Deadline),
+            _ => None,
+        }
+    }
+
+    /// Checkpoint: unwind with a typed [`CancelUnwind`] payload when the
+    /// slot has been set. The happy path is one relaxed load.
+    #[inline]
+    pub fn check(&self) {
+        if self.state.load(Ordering::Relaxed) != LIVE {
+            self.trip();
+        }
+    }
+
+    #[cold]
+    fn trip(&self) {
+        let reason = self.get().unwrap_or(CancelReason::Cancelled);
+        std::panic::panic_any(CancelUnwind { reason });
+    }
+}
+
+/// The typed unwind payload a tripped checkpoint carries. Caught (and
+/// downcast) by the coordinator's per-job `catch_unwind`; never printed
+/// by the default panic hook path because the coordinator always
+/// catches it before it reaches a thread boundary it doesn't own.
+#[derive(Clone, Copy, Debug)]
+pub struct CancelUnwind {
+    pub reason: CancelReason,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_reason_wins_and_arm_resets() {
+        let slot = CancelSlot::new();
+        assert_eq!(slot.get(), None);
+        slot.set(CancelReason::Deadline);
+        slot.set(CancelReason::Cancelled); // late, ignored
+        assert_eq!(slot.get(), Some(CancelReason::Deadline));
+        slot.arm();
+        assert_eq!(slot.get(), None);
+        slot.set(CancelReason::Cancelled);
+        assert_eq!(slot.get(), Some(CancelReason::Cancelled));
+    }
+
+    #[test]
+    fn check_unwinds_with_typed_payload() {
+        let slot = CancelSlot::new();
+        slot.check(); // live: no unwind
+        slot.set(CancelReason::Deadline);
+        let err = std::panic::catch_unwind(|| slot.check()).unwrap_err();
+        let cu = err.downcast_ref::<CancelUnwind>().expect("typed payload");
+        assert_eq!(cu.reason, CancelReason::Deadline);
+        assert_eq!(cu.reason.as_str(), "deadline");
+    }
+}

@@ -23,9 +23,27 @@
 //!   default (the pool is the parallelism); `PALLAS_THREADS` opts a
 //!   deployment into intra-job parallelism via [`crate::parallel`],
 //!   which changes wall-clock only, never results or distance counts.
-//! * **Cancellation** — [`Coordinator::cancel`] abandons a job that is
-//!   still queued (it moves to `Failed("cancelled")`); a job that has
-//!   started running is never interrupted, so results stay exact.
+//! * **Deadlines & cancellation** — [`JobSpec::deadline_ms`] arms a
+//!   per-job deadline; [`Coordinator::cancel`] stops queued *and*
+//!   running jobs. Both act through one mechanism: a
+//!   [`crate::cancel::CancelSlot`] shared with the job's [`Space`],
+//!   polled at traversal checkpoints (frontier pops and leaf-scan
+//!   boundaries — never inside a distance kernel), so the happy path is
+//!   observationally free and results stay bit-identical. An
+//!   interrupted job ends in `Failed("cancelled")`/`Failed("deadline")`
+//!   ([`JobFailure`]) with its *partial* [`QueryStats`] attached.
+//! * **Graceful degradation** — a per-dataset circuit breaker
+//!   quarantines a dataset after K consecutive job *panics*
+//!   ([`CoordinatorConfig::breaker_k`]): further jobs fail fast with
+//!   `"breaker_open"` instead of re-crashing workers, until a cooldown
+//!   and a successful half-open probe close it. Cancelled/deadline
+//!   failures neither trip nor reset the breaker.
+//! * **Drain** — [`Coordinator::drain`] stops intake and waits (bounded)
+//!   for in-flight work; [`Coordinator::shutdown`] and `Drop` use the
+//!   same path and *detach* rather than hang on a wedged worker.
+//! * **Fault drills** — every failure path above is exercised by the
+//!   deterministic [`crate::faults`] injector (`PALLAS_FAULTS`, default
+//!   off): forced job panics, queue-full storms, slow leaves.
 //!
 //! One `Coordinator` is one *shard*: a self-contained queue + worker
 //! pool + dataset/tree cache. [`shard::ShardedCoordinator`] composes N
@@ -38,6 +56,7 @@ pub mod shard;
 
 pub use shard::ShardedCoordinator;
 
+use crate::cancel::{CancelReason, CancelSlot, CancelUnwind};
 use crate::dataset::DatasetSpec;
 use crate::engine::{self, IndexBuilder, Query, QueryResult};
 use crate::metrics::Space;
@@ -46,7 +65,8 @@ use crate::parallel::{Executor, Parallelism};
 use crate::runtime::BatchDistanceEngine;
 use crate::tree::middle_out::{self, MiddleOutConfig};
 use crate::tree::MetricTree;
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -60,6 +80,11 @@ pub struct JobSpec {
     pub query: Query,
     /// Leaf threshold for the cached tree.
     pub rmin: usize,
+    /// Optional deadline, milliseconds from submit. When it expires the
+    /// job is abandoned: removed from the queue if still queued, or
+    /// cooperatively cancelled at its next traversal checkpoint if
+    /// running. Either way it ends in `Failed("deadline")`.
+    pub deadline_ms: Option<u64>,
 }
 
 impl JobSpec {
@@ -103,13 +128,82 @@ pub struct JobResult {
     pub wall_ms: f64,
 }
 
+/// Why a job failed, beyond the error string: the coordinator's metric
+/// and breaker decisions key on this, and the server maps it to wire
+/// fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Dispatch-level error (malformed query, ...).
+    Error,
+    /// The job's execution panicked (caught; trips the dataset breaker).
+    Panic,
+    /// Explicitly cancelled while running (or between claim and run).
+    Cancelled,
+    /// `deadline_ms` expired while the job was running.
+    Deadline,
+    /// Failed fast because the dataset's circuit breaker was open.
+    BreakerOpen,
+}
+
+/// Terminal failure of a job: the error string (what the wire reports),
+/// the [`FailureKind`], and — for jobs interrupted mid-traversal — the
+/// partial deterministic [`QueryStats`] up to the stop point.
+#[derive(Clone, Debug)]
+pub struct JobFailure {
+    pub error: String,
+    pub kind: FailureKind,
+    /// Partial traversal counters for jobs stopped mid-flight
+    /// (deadline, running-cancel, panic after the traversal started).
+    /// `None` for jobs that never started running.
+    pub stats: Option<QueryStats>,
+}
+
+impl JobFailure {
+    fn interrupted(reason: CancelReason, stats: Option<QueryStats>) -> JobFailure {
+        JobFailure {
+            error: reason.as_str().into(),
+            kind: match reason {
+                CancelReason::Cancelled => FailureKind::Cancelled,
+                CancelReason::Deadline => FailureKind::Deadline,
+            },
+            stats,
+        }
+    }
+}
+
+impl std::fmt::Display for JobFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.error)
+    }
+}
+
+impl From<String> for JobFailure {
+    fn from(error: String) -> JobFailure {
+        JobFailure { error, kind: FailureKind::Error, stats: None }
+    }
+}
+
+impl From<&str> for JobFailure {
+    fn from(error: &str) -> JobFailure {
+        JobFailure::from(error.to_string())
+    }
+}
+
+/// Compare against the bare error string (`"cancelled"`, `"deadline"`,
+/// ...) — what tests and wire assertions key on.
+impl PartialEq<&str> for JobFailure {
+    fn eq(&self, other: &&str) -> bool {
+        self.error == *other
+    }
+}
+
 /// Lifecycle of a job.
 #[derive(Clone, Debug)]
 pub enum JobState {
     Queued,
     Running,
     Done(JobResult),
-    Failed(String),
+    Failed(JobFailure),
 }
 
 impl JobState {
@@ -136,6 +230,15 @@ pub struct Metrics {
     /// `failed` (its terminal state is `Failed("cancelled")`), so
     /// `completed + failed == submitted` keeps holding.
     pub cancelled: AtomicU64,
+    /// Jobs cancelled after they started running (cooperative
+    /// checkpoint cancellation). Also a subset of `failed`.
+    pub cancelled_running: AtomicU64,
+    /// Jobs that ended `Failed("deadline")` (queued or running). Also a
+    /// subset of `failed`.
+    pub deadline_exceeded: AtomicU64,
+    /// Jobs failed fast because their dataset's breaker was open. Also
+    /// a subset of `failed`.
+    pub breaker_open: AtomicU64,
     pub total_dists: AtomicU64,
 }
 
@@ -148,6 +251,12 @@ pub struct MetricsSnapshot {
     pub failed: u64,
     /// Subset of `failed`: jobs cancelled while still queued.
     pub cancelled: u64,
+    /// Subset of `failed`: jobs cancelled after they started running.
+    pub cancelled_running: u64,
+    /// Subset of `failed`: jobs that hit their deadline.
+    pub deadline_exceeded: u64,
+    /// Subset of `failed`: jobs rejected by an open dataset breaker.
+    pub breaker_open: u64,
     pub total_dists: u64,
 }
 
@@ -160,8 +269,28 @@ impl MetricsSnapshot {
             completed: self.completed + other.completed,
             failed: self.failed + other.failed,
             cancelled: self.cancelled + other.cancelled,
+            cancelled_running: self.cancelled_running + other.cancelled_running,
+            deadline_exceeded: self.deadline_exceeded + other.deadline_exceeded,
+            breaker_open: self.breaker_open + other.breaker_open,
             total_dists: self.total_dists + other.total_dists,
         }
+    }
+}
+
+/// Robustness knobs, per coordinator shard.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Consecutive job *panics* on one dataset before its circuit
+    /// breaker opens (fail-fast `"breaker_open"` until a cooldown and a
+    /// successful half-open probe). `0` disables the breaker.
+    pub breaker_k: u32,
+    /// How long an open breaker rejects before allowing one probe job.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> CoordinatorConfig {
+        CoordinatorConfig { breaker_k: 3, breaker_cooldown: Duration::from_millis(1000) }
     }
 }
 
@@ -267,6 +396,31 @@ struct CachedDataset {
     run_lock: Mutex<()>,
 }
 
+/// Claimed-job bookkeeping for cancellation. `slots` maps a registered
+/// running job to the cancel slot its traversal polls; `pending` holds
+/// cancel/deadline verdicts that arrived while the job was claimed but
+/// not yet registered (e.g. mid dataset build) — applied at
+/// registration, or at [`finish_job`] for verdicts that land after the
+/// job unregistered. Every `cancel`/expiry that answers `true` goes
+/// through one of those two consumption points, so an affirmative
+/// cancel always ends in `Failed` — never a lie.
+#[derive(Default)]
+struct RunningMap {
+    slots: HashMap<JobId, Arc<CancelSlot>>,
+    pending: HashMap<JobId, CancelReason>,
+}
+
+/// Per-dataset circuit-breaker state.
+#[derive(Clone, Copy, Debug, Default)]
+struct BreakerState {
+    /// Consecutive panics (reset by any success).
+    consecutive: u32,
+    /// While `Some`, the breaker is open until this instant.
+    open_until: Option<Instant>,
+    /// Half-open: one probe job is in flight.
+    probing: bool,
+}
+
 struct Inner {
     /// Each entry carries its submit instant so the claiming worker can
     /// record queue-wait and end-to-end latency.
@@ -276,9 +430,23 @@ struct Inner {
     states: Mutex<HashMap<JobId, JobState>>,
     state_cv: Condvar,
     datasets: Mutex<HashMap<String, Arc<CachedDataset>>>,
+    /// Claimed-job cancellation bookkeeping. Lock order: `queue` →
+    /// `running` → `states` (→ `breakers` is leaf-only); `deadlines` is
+    /// only ever taken first.
+    running: Mutex<RunningMap>,
+    /// Pending job deadlines, earliest first, owned by the timer thread.
+    deadlines: Mutex<BinaryHeap<Reverse<(Instant, JobId)>>>,
+    deadline_cv: Condvar,
+    /// Per-dataset circuit breakers (keyed by [`dataset_key`]).
+    breakers: Mutex<HashMap<String, BreakerState>>,
+    /// Workers still running their loop; [`Coordinator::drain`] waits on
+    /// this instead of `join` so a wedged worker can't hang the caller.
+    live_workers: Mutex<usize>,
+    worker_cv: Condvar,
     metrics: Metrics,
     obs: EdgeObs,
     shutdown: AtomicBool,
+    config: CoordinatorConfig,
     engine: Option<Arc<BatchDistanceEngine>>,
     /// Intra-job worker budget. The pool's own workers are the primary
     /// source of concurrency, so jobs default to serial execution —
@@ -293,6 +461,7 @@ struct Inner {
 pub struct Coordinator {
     inner: Arc<Inner>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    timer: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -307,7 +476,18 @@ impl Coordinator {
         capacity: usize,
         engine: Option<Arc<BatchDistanceEngine>>,
     ) -> Coordinator {
+        Self::with_config(n_workers, capacity, engine, CoordinatorConfig::default())
+    }
+
+    /// Start with explicit robustness knobs (breaker threshold/cooldown).
+    pub fn with_config(
+        n_workers: usize,
+        capacity: usize,
+        engine: Option<Arc<BatchDistanceEngine>>,
+        config: CoordinatorConfig,
+    ) -> Coordinator {
         let parallelism = Parallelism::from_env().unwrap_or(Parallelism::Serial);
+        let n_workers = n_workers.max(1);
         let inner = Arc::new(Inner {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
@@ -315,14 +495,21 @@ impl Coordinator {
             states: Mutex::new(HashMap::new()),
             state_cv: Condvar::new(),
             datasets: Mutex::new(HashMap::new()),
+            running: Mutex::new(RunningMap::default()),
+            deadlines: Mutex::new(BinaryHeap::new()),
+            deadline_cv: Condvar::new(),
+            breakers: Mutex::new(HashMap::new()),
+            live_workers: Mutex::new(n_workers),
+            worker_cv: Condvar::new(),
             metrics: Metrics::default(),
             obs: EdgeObs::new(),
             shutdown: AtomicBool::new(false),
+            config,
             engine,
             parallelism,
             next_id: AtomicU64::new(1),
         });
-        let workers = (0..n_workers.max(1))
+        let workers = (0..n_workers)
             .map(|wid| {
                 let inner = Arc::clone(&inner);
                 std::thread::Builder::new()
@@ -331,7 +518,14 @@ impl Coordinator {
                     .expect("spawn worker")
             })
             .collect();
-        Coordinator { inner, workers }
+        let timer = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("coord-deadline".into())
+                .spawn(move || timer_loop(inner))
+                .expect("spawn deadline timer")
+        };
+        Coordinator { inner, workers, timer: Some(timer) }
     }
 
     /// Submit a job; fails fast when the queue is at capacity.
@@ -339,6 +533,14 @@ impl Coordinator {
         if self.inner.shutdown.load(Ordering::SeqCst) {
             return Err(SubmitError::ShuttingDown);
         }
+        // Injected queue-full storm (drills only; `active` is the
+        // always-off fast gate). Counted under `rejected` like a real
+        // full queue — the client-visible contract is identical.
+        if crate::faults::active() && crate::faults::should_reject_submit() {
+            self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::QueueFull);
+        }
+        let deadline_ms = spec.deadline_ms;
         let mut queue = self.inner.queue.lock().unwrap();
         if queue.len() >= self.inner.capacity {
             self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -353,10 +555,22 @@ impl Coordinator {
             .insert(id, JobState::Queued);
         self.inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.inner.queue_cv.notify_one();
+        drop(queue);
+        if let Some(ms) = deadline_ms {
+            let due = Instant::now() + Duration::from_millis(ms);
+            self.inner
+                .deadlines
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(Reverse((due, id)));
+            self.inner.deadline_cv.notify_all();
+        }
         Ok(id)
     }
 
-    /// Snapshot a job's state.
+    /// Snapshot a job's state (`None` for an id this coordinator never
+    /// issued — the non-panicking sibling of [`Coordinator::wait`],
+    /// safe for untrusted ids off the wire).
     pub fn state(&self, id: JobId) -> Option<JobState> {
         self.inner.states.lock().unwrap().get(&id).cloned()
     }
@@ -401,6 +615,9 @@ impl Coordinator {
             completed: m.completed.load(Ordering::Relaxed),
             failed: m.failed.load(Ordering::Relaxed),
             cancelled: m.cancelled.load(Ordering::Relaxed),
+            cancelled_running: m.cancelled_running.load(Ordering::Relaxed),
+            deadline_exceeded: m.deadline_exceeded.load(Ordering::Relaxed),
+            breaker_open: m.breaker_open.load(Ordering::Relaxed),
             total_dists: m.total_dists.load(Ordering::Relaxed),
         }
     }
@@ -411,49 +628,149 @@ impl Coordinator {
         self.inner.obs.snapshot()
     }
 
-    /// Cancel a job that is still queued: it is removed from the queue
-    /// and moves to [`JobState::Failed`] with message `"cancelled"`
-    /// (waiters are woken). Returns `false` — and changes nothing — if
-    /// the job has already started running, already finished, or is
-    /// unknown: a running job is never interrupted, so its distance
-    /// accounting and result stay exact.
+    /// Cancel a job. Queued: removed from the queue and moved straight
+    /// to `Failed("cancelled")`. Running (or claimed): its cancel slot
+    /// is flagged — the traversal unwinds at its next checkpoint and the
+    /// job ends `Failed("cancelled")` with partial stats. Returns
+    /// `false` — and changes nothing — only for unknown or already
+    /// terminal jobs. **An affirmative answer is a promise**: once
+    /// `cancel` returns `true` the job's terminal state is `Failed`,
+    /// even if its traversal happened to finish in the race window (the
+    /// completed result is discarded).
     pub fn cancel(&self, id: JobId) -> bool {
-        // Holding the queue lock pins the race with worker pop: a job
-        // found in the queue here cannot simultaneously be claimed.
-        let mut queue = self.inner.queue.lock().unwrap();
-        let Some(pos) = queue.iter().position(|(jid, _, _)| *jid == id) else {
-            return false;
-        };
-        queue.remove(pos);
-        drop(queue);
-        self.inner.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
-        self.inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
-        set_state(&self.inner, id, JobState::Failed("cancelled".into()));
+        // Queued: holding the queue lock pins the race with worker pop —
+        // a job found here cannot simultaneously be claimed.
+        {
+            let mut queue = self.inner.queue.lock().unwrap();
+            if let Some(pos) = queue.iter().position(|(jid, _, _)| *jid == id) {
+                queue.remove(pos);
+                drop(queue);
+                self.inner.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                self.inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                set_state(
+                    &self.inner,
+                    id,
+                    JobState::Failed(JobFailure::interrupted(CancelReason::Cancelled, None)),
+                );
+                return true;
+            }
+        }
+        // Running: flag the registered slot, or leave a pending marker
+        // for a claimed-but-unregistered job (consumed at registration
+        // or at finish — see [`RunningMap`]). All under the running
+        // lock, which [`finish_job`] also holds while publishing the
+        // terminal state: seeing a non-terminal state here guarantees
+        // the marker is consumed.
+        let mut running = self.inner.running.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(slot) = running.slots.get(&id) {
+            slot.set(CancelReason::Cancelled);
+            return true;
+        }
+        let live = matches!(
+            self.inner.states.lock().unwrap().get(&id),
+            Some(s) if !s.is_terminal()
+        );
+        if live {
+            running.pending.insert(id, CancelReason::Cancelled);
+            return true;
+        }
+        false
+    }
+
+    /// Stop accepting new jobs and wake every sleeper (workers drain the
+    /// queue, the deadline timer exits). Does not wait; pair with
+    /// [`Coordinator::drain`].
+    pub fn request_shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+        self.inner.deadline_cv.notify_all();
+    }
+
+    /// Stop intake and wait up to `timeout` for the workers to finish
+    /// everything queued or in flight. Returns `true` when the shard
+    /// fully drained, `false` if a straggler was still running at the
+    /// bound (it keeps draining in the background; a later `drain` call
+    /// can re-check).
+    pub fn drain(&self, timeout: Duration) -> bool {
+        self.request_shutdown();
+        let deadline = Instant::now() + timeout;
+        let mut live = self
+            .inner
+            .live_workers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        while *live > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self
+                .inner
+                .worker_cv
+                .wait_timeout(live, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            live = guard;
+        }
         true
     }
 
-    /// Drain the queue, stop accepting work, and join the workers.
+    /// Drain the queue, stop accepting work, and join the workers
+    /// (bounded — a wedged worker is detached, not waited on forever).
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.inner.shutdown.store(true, Ordering::SeqCst);
-        self.inner.queue_cv.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.finish(Duration::from_secs(60));
         self.metrics()
+    }
+
+    /// Bounded teardown: drain, then join (or detach, on timeout) the
+    /// worker threads and join the deadline timer. Idempotent.
+    fn finish(&mut self, timeout: Duration) {
+        if self.workers.is_empty() && self.timer.is_none() {
+            return;
+        }
+        let drained = self.drain(timeout);
+        if drained {
+            for w in self.workers.drain(..) {
+                let _ = w.join();
+            }
+        } else {
+            // Wedged worker: detach instead of hanging the caller. The
+            // thread keeps draining in the background and exits on its
+            // own once its job trips a checkpoint or completes.
+            self.workers.clear();
+        }
+        // The timer always exits promptly once the shutdown flag is up
+        // (its waits are bounded), so this join is safe.
+        if let Some(t) = self.timer.take() {
+            let _ = t.join();
+        }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.inner.shutdown.store(true, Ordering::SeqCst);
-        self.inner.queue_cv.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.finish(Duration::from_secs(60));
+    }
+}
+
+/// Decrements the live-worker count however the worker exits (normal
+/// return or an unexpected panic escaping the per-job catch), keeping
+/// [`Coordinator::drain`] accurate.
+struct WorkerExit<'a>(&'a Inner);
+
+impl Drop for WorkerExit<'_> {
+    fn drop(&mut self) {
+        let mut live = self
+            .0
+            .live_workers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        *live = live.saturating_sub(1);
+        self.0.worker_cv.notify_all();
     }
 }
 
 fn worker_loop(inner: Arc<Inner>) {
+    let _exit = WorkerExit(&inner);
     // One executor (and persistent worker pool) per coordinator worker:
     // repeated jobs on this worker reuse its parked threads, while
     // concurrent jobs on other workers keep fully independent pools (a
@@ -477,36 +794,229 @@ fn worker_loop(inner: Arc<Inner>) {
         let Some((id, spec, submitted_at)) = job else { return };
         inner.obs.queue_wait.record(micros(submitted_at.elapsed()));
         set_state(&inner, id, JobState::Running);
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_job(&inner, id, &spec, &exec)
-        }));
-        match outcome {
-            Ok(Ok(result)) => {
-                inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
-                inner
-                    .metrics
-                    .total_dists
-                    .fetch_add(result.dists, Ordering::Relaxed);
-                set_state(&inner, id, JobState::Done(result));
-            }
-            Ok(Err(msg)) => {
-                inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
-                set_state(&inner, id, JobState::Failed(msg));
-            }
-            Err(panic) => {
-                inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
-                let msg = panic
-                    .downcast_ref::<String>()
-                    .cloned()
-                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
-                    .unwrap_or_else(|| "job panicked".into());
-                set_state(&inner, id, JobState::Failed(msg));
-            }
+        let dataset = dataset_key(&spec.dataset);
+        let outcome = if breaker_admit(&inner, &dataset) {
+            // The outer catch covers the claim-to-register window
+            // (dataset generation); everything after registration is
+            // caught inside `run_job` so it can unregister first.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_job(&inner, id, &spec, &exec)
+            }))
+            .unwrap_or_else(|payload| Err(failure_from_unwind(payload.as_ref(), None)))
+        } else {
+            inner.metrics.breaker_open.fetch_add(1, Ordering::Relaxed);
+            Err(JobFailure {
+                error: "breaker_open".into(),
+                kind: FailureKind::BreakerOpen,
+                stats: None,
+            })
+        };
+        match finish_job(&inner, id, outcome) {
+            None => breaker_record(&inner, &dataset, false),
+            Some(FailureKind::Panic) => breaker_record(&inner, &dataset, true),
+            // Cancelled/deadline/fail-fast are not evidence about the
+            // dataset's health: they neither trip nor reset the breaker.
+            Some(_) => {}
         }
         // Submit → terminal, recorded for successes and failures alike.
         if let Some(fi) = obs::family_index(spec.query.kind()) {
             inner.obs.e2e[fi].record(micros(submitted_at.elapsed()));
         }
+    }
+}
+
+/// Publish a claimed job's terminal state, atomically (under the
+/// running lock) resolving any cancel/deadline verdict that landed
+/// after the job unregistered — the other half of the `cancel`-true
+/// promise. Returns `None` for `Done`, the [`FailureKind`] otherwise.
+fn finish_job(inner: &Inner, id: JobId, outcome: Result<JobResult, JobFailure>) -> Option<FailureKind> {
+    let mut running = inner.running.lock().unwrap_or_else(|e| e.into_inner());
+    let outcome = match (outcome, running.pending.remove(&id)) {
+        // A cancel answered `true` in the window where the job had
+        // finished but its state wasn't terminal yet: honor it, the
+        // completed result is discarded (deliberately — see `cancel`).
+        (Ok(r), Some(reason)) => Err(JobFailure::interrupted(reason, Some(r.stats))),
+        (outcome, _) => outcome,
+    };
+    let kind = match outcome {
+        Ok(result) => {
+            inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            inner
+                .metrics
+                .total_dists
+                .fetch_add(result.dists, Ordering::Relaxed);
+            set_state(inner, id, JobState::Done(result));
+            None
+        }
+        Err(failure) => {
+            inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            match failure.kind {
+                FailureKind::Cancelled => {
+                    inner.metrics.cancelled_running.fetch_add(1, Ordering::Relaxed);
+                }
+                FailureKind::Deadline => {
+                    inner.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {}
+            }
+            let kind = failure.kind;
+            set_state(inner, id, JobState::Failed(failure));
+            Some(kind)
+        }
+    };
+    drop(running);
+    kind
+}
+
+/// Classify an unwind payload: a typed [`CancelUnwind`] (checkpoint
+/// trip) vs. a real panic.
+fn failure_from_unwind(
+    payload: &(dyn std::any::Any + Send),
+    stats: Option<QueryStats>,
+) -> JobFailure {
+    if let Some(cu) = payload.downcast_ref::<CancelUnwind>() {
+        return JobFailure::interrupted(cu.reason, stats);
+    }
+    let error = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "job panicked".into());
+    JobFailure { error, kind: FailureKind::Panic, stats }
+}
+
+/// Deadline timer: sleeps until the earliest pending deadline, fires
+/// everything due, exits when the coordinator shuts down. Expiry of a
+/// *queued* job fails it directly (like `cancel`); a running job gets
+/// its slot flagged and unwinds at its next checkpoint.
+fn timer_loop(inner: Arc<Inner>) {
+    let mut heap = inner
+        .deadlines
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    loop {
+        let now = Instant::now();
+        while let Some(&Reverse((due, id))) = heap.peek() {
+            if due > now {
+                break;
+            }
+            heap.pop();
+            expire(&inner, id);
+        }
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        heap = match heap.peek() {
+            Some(&Reverse((due, _))) => {
+                let wait = due.saturating_duration_since(Instant::now());
+                inner
+                    .deadline_cv
+                    .wait_timeout(heap, wait)
+                    .unwrap_or_else(|e| e.into_inner())
+                    .0
+            }
+            None => inner
+                .deadline_cv
+                .wait(heap)
+                .unwrap_or_else(|e| e.into_inner()),
+        };
+    }
+}
+
+/// Fire one job's deadline. Mirrors `cancel`'s three-way resolution
+/// (queued / registered / claimed-but-unregistered); terminal jobs are
+/// left untouched.
+fn expire(inner: &Inner, id: JobId) {
+    {
+        let mut queue = inner.queue.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(pos) = queue.iter().position(|(jid, _, _)| *jid == id) {
+            queue.remove(pos);
+            drop(queue);
+            inner.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            set_state(
+                inner,
+                id,
+                JobState::Failed(JobFailure::interrupted(CancelReason::Deadline, None)),
+            );
+            return;
+        }
+    }
+    let mut running = inner.running.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(slot) = running.slots.get(&id) {
+        slot.set(CancelReason::Deadline);
+        return;
+    }
+    let live = matches!(
+        inner.states.lock().unwrap().get(&id),
+        Some(s) if !s.is_terminal()
+    );
+    if live {
+        running.pending.insert(id, CancelReason::Deadline);
+    }
+}
+
+/// Register a claimed job's cancel slot. Called under the dataset's run
+/// lock (so one slot serves one job at a time) — arms the slot, then
+/// applies any verdict that arrived before registration.
+fn register_running(inner: &Inner, id: JobId, slot: &Arc<CancelSlot>) {
+    let mut running = inner.running.lock().unwrap_or_else(|e| e.into_inner());
+    slot.arm();
+    if let Some(reason) = running.pending.remove(&id) {
+        slot.set(reason);
+    }
+    running.slots.insert(id, Arc::clone(slot));
+}
+
+/// Unregister and read the slot's final verdict, atomically against
+/// cancel/expiry (which only flag slots that are present in the map).
+fn unregister_running(inner: &Inner, id: JobId, slot: &CancelSlot) -> Option<CancelReason> {
+    let mut running = inner.running.lock().unwrap_or_else(|e| e.into_inner());
+    running.slots.remove(&id);
+    slot.get()
+}
+
+/// Should a job on this dataset run? `true` when the breaker is closed,
+/// or half-open with no probe in flight (this job becomes the probe).
+fn breaker_admit(inner: &Inner, key: &str) -> bool {
+    let k = inner.config.breaker_k;
+    if k == 0 {
+        return true;
+    }
+    let mut map = inner.breakers.lock().unwrap_or_else(|e| e.into_inner());
+    let b = map.entry(key.to_string()).or_default();
+    if b.consecutive < k {
+        return true;
+    }
+    match b.open_until {
+        Some(until) if Instant::now() < until => false,
+        _ => {
+            if b.probing {
+                false
+            } else {
+                b.probing = true;
+                true
+            }
+        }
+    }
+}
+
+/// Feed a job outcome to the dataset's breaker: any success closes it;
+/// a panic bumps the consecutive count and (re)opens at the threshold.
+fn breaker_record(inner: &Inner, key: &str, panicked: bool) {
+    if inner.config.breaker_k == 0 {
+        return;
+    }
+    let mut map = inner.breakers.lock().unwrap_or_else(|e| e.into_inner());
+    let b = map.entry(key.to_string()).or_default();
+    if panicked {
+        b.consecutive += 1;
+        b.probing = false;
+        if b.consecutive >= inner.config.breaker_k {
+            b.open_until = Some(Instant::now() + inner.config.breaker_cooldown);
+        }
+    } else {
+        *b = BreakerState::default();
     }
 }
 
@@ -521,8 +1031,14 @@ fn dataset_key(spec: &DatasetSpec) -> String {
 
 fn get_dataset(inner: &Inner, spec: &DatasetSpec) -> Arc<CachedDataset> {
     let key = dataset_key(spec);
-    // Fast path.
-    if let Some(ds) = inner.datasets.lock().unwrap().get(&key) {
+    // Fast path. The map mutex recovers from poison: a panicking build
+    // (caught by the worker) must not wedge every later job.
+    if let Some(ds) = inner
+        .datasets
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(&key)
+    {
         return ds.clone();
     }
     // Build outside the map lock (generation can be slow), then insert —
@@ -532,12 +1048,14 @@ fn get_dataset(inner: &Inner, spec: &DatasetSpec) -> Arc<CachedDataset> {
         trees: Mutex::new(HashMap::new()),
         run_lock: Mutex::new(()),
     });
-    let mut map = inner.datasets.lock().unwrap();
+    let mut map = inner.datasets.lock().unwrap_or_else(|e| e.into_inner());
     map.entry(key).or_insert(built).clone()
 }
 
 fn get_tree(ds: &CachedDataset, rmin: usize, seed: u64, exec: &Executor) -> Arc<MetricTree> {
-    let mut trees = ds.trees.lock().unwrap();
+    // Poison-recovering for the same reason as the dataset map: a panic
+    // mid-build leaves no partial entry behind (insert is post-build).
+    let mut trees = ds.trees.lock().unwrap_or_else(|e| e.into_inner());
     if let Some(t) = trees.get(&rmin) {
         return t.clone();
     }
@@ -579,50 +1097,93 @@ fn get_index(
     }
 }
 
-fn run_job(inner: &Inner, id: JobId, spec: &JobSpec, exec: &Executor) -> Result<JobResult, String> {
+fn run_job(
+    inner: &Inner,
+    id: JobId,
+    spec: &JobSpec,
+    exec: &Executor,
+) -> Result<JobResult, JobFailure> {
     let ds = get_dataset(inner, &spec.dataset);
     // Serialize jobs on this dataset: exact per-job distance accounting.
-    // A panicking query (worker catches it below) unwinds while holding
-    // this guard and poisons the mutex; the lock protects no invariant —
-    // only accounting serialization — so recover rather than letting one
-    // bad request permanently fail every later job on the dataset.
+    // A panicking query unwinds while holding this guard and poisons the
+    // mutex; the lock protects no invariant — only accounting
+    // serialization — so recover rather than letting one bad request
+    // permanently fail every later job on the dataset.
     let _guard = ds.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+    // Register for cooperative cancellation. The slot lives on the
+    // dataset's `Space` (shared with every arena view of it); the run
+    // lock guarantees it serves exactly this job until unregistered.
+    let slot = ds.space.cancel_shared();
+    register_running(inner, id, &slot);
     let start = Instant::now();
     let before = ds.space.dist_count();
-    let index = get_index(inner, &ds, spec, exec);
-    inner.obs.build.record(micros(start.elapsed()));
-    let run_start = Instant::now();
-    let (output, stats) = index.run_traced(&spec.query);
-    let run_us = micros(run_start.elapsed());
-    if let Some(fi) = obs::family_index(spec.query.kind()) {
-        inner.obs.run[fi].record(run_us);
-        inner.obs.stats.lock().unwrap()[fi].accumulate(&stats);
-    }
+    // Baseline for *partial* stats on the interrupted path. The happy
+    // path keeps using `run_traced`'s own attribution, bit-identical to
+    // a coordinator without cancellation support.
+    let stats_before = ds.space.obs().snapshot();
+    ds.space.obs().reset_frontier_peak();
+    let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if crate::faults::active() && crate::faults::should_panic_job(id) {
+            panic!("injected fault: job panic");
+        }
+        let index = get_index(inner, &ds, spec, exec);
+        let build_us = micros(start.elapsed());
+        let run_start = Instant::now();
+        let (output, stats) = index.run_traced(&spec.query);
+        (output, stats, build_us, micros(run_start.elapsed()))
+    }));
+    // Unregister while still holding the run lock (the slot must not be
+    // re-armed by the dataset's next job before this one's verdict is
+    // read), and read the final verdict under the running lock.
+    let verdict = unregister_running(inner, id, &slot);
     let dists = ds.space.dist_count() - before;
-    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
-    if obs::trace::enabled() {
-        use crate::json::Value;
-        obs::trace::span(
-            "job",
-            &[
-                ("id", Value::Num(crate::ids::wire_from_u64(id))),
-                ("op", Value::Str(spec.query.kind().into())),
-                ("dataset", Value::Str(dataset_key(&spec.dataset))),
-                ("dists", Value::Num(crate::ids::wire_from_u64(dists))),
-                (
-                    "nodes_visited",
-                    Value::Num(crate::ids::wire_from_u64(stats.nodes_visited)),
-                ),
-                (
-                    "pruned",
-                    Value::Num(crate::ids::wire_from_u64(stats.total_pruned())),
-                ),
-                ("run_us", Value::Num(crate::ids::wire_from_u64(run_us))),
-                ("wall_ms", Value::Num(wall_ms)),
-            ],
-        );
+    match attempt {
+        Ok((output, stats, build_us, run_us)) => {
+            if let Some(reason) = verdict {
+                // Cancel/deadline landed after the last checkpoint but
+                // before the job finished; the canceller was already
+                // told `true`, so honor it and discard the result.
+                return Err(JobFailure::interrupted(reason, Some(stats)));
+            }
+            inner.obs.build.record(build_us);
+            if let Some(fi) = obs::family_index(spec.query.kind()) {
+                inner.obs.run[fi].record(run_us);
+                inner.obs.stats.lock().unwrap()[fi].accumulate(&stats);
+            }
+            let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+            if obs::trace::enabled() {
+                use crate::json::Value;
+                obs::trace::span(
+                    "job",
+                    &[
+                        ("id", Value::Num(crate::ids::wire_from_u64(id))),
+                        ("op", Value::Str(spec.query.kind().into())),
+                        ("dataset", Value::Str(dataset_key(&spec.dataset))),
+                        ("dists", Value::Num(crate::ids::wire_from_u64(dists))),
+                        (
+                            "nodes_visited",
+                            Value::Num(crate::ids::wire_from_u64(stats.nodes_visited)),
+                        ),
+                        (
+                            "pruned",
+                            Value::Num(crate::ids::wire_from_u64(stats.total_pruned())),
+                        ),
+                        ("run_us", Value::Num(crate::ids::wire_from_u64(run_us))),
+                        ("wall_ms", Value::Num(wall_ms)),
+                    ],
+                );
+            }
+            Ok(JobResult { id, output, stats, dists, wall_ms })
+        }
+        Err(payload) => {
+            // Partial deterministic counters up to the unwind point
+            // (attached for cancelled/deadline jobs and real panics
+            // alike — the observability story for "what was it doing
+            // when it stopped").
+            let partial = ds.space.obs().snapshot().delta_from(&stats_before);
+            Err(failure_from_unwind(payload.as_ref(), Some(partial)))
+        }
     }
-    Ok(JobResult { id, output, stats, dists, wall_ms })
 }
 
 #[cfg(test)]
@@ -633,6 +1194,7 @@ mod tests {
         AllPairsQuery, AnomalyQuery, BallQuery, GaussianEmQuery, KmeansQuery, KnnQuery, KnnTarget,
         MstQuery, XmeansQuery,
     };
+    use crate::faults::{FaultPlan, ScopedFaults};
 
     fn tiny(kind: DatasetKind) -> DatasetSpec {
         DatasetSpec::scaled(kind, 0.004) // a few hundred rows
@@ -643,6 +1205,7 @@ mod tests {
             dataset: tiny(DatasetKind::Squiggles),
             query: Query::Kmeans(KmeansQuery { k, iters: 4, use_tree, ..Default::default() }),
             rmin: 16,
+            deadline_ms: None,
         }
     }
 
@@ -711,21 +1274,25 @@ mod tests {
                 dataset: squiggles.clone(),
                 query: Query::Anomaly(AnomalyQuery { threshold: 5, ..Default::default() }),
                 rmin: 16,
+                deadline_ms: None,
             },
             JobSpec {
                 dataset: squiggles.clone(),
                 query: Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree: true }),
                 rmin: 16,
+                deadline_ms: None,
             },
             JobSpec {
                 dataset: tiny(DatasetKind::Voronoi),
                 query: Query::Mst(MstQuery { use_tree: true }),
                 rmin: 16,
+                deadline_ms: None,
             },
             JobSpec {
                 dataset: squiggles.clone(),
                 query: Query::Xmeans(XmeansQuery { k_min: 1, k_max: 4 }),
                 rmin: 16,
+                deadline_ms: None,
             },
             JobSpec {
                 dataset: squiggles.clone(),
@@ -735,6 +1302,7 @@ mod tests {
                     use_tree: true,
                 }),
                 rmin: 16,
+                deadline_ms: None,
             },
             JobSpec {
                 dataset: squiggles.clone(),
@@ -744,6 +1312,7 @@ mod tests {
                     ..Default::default()
                 }),
                 rmin: 16,
+                deadline_ms: None,
             },
             JobSpec {
                 dataset: squiggles.clone(),
@@ -753,6 +1322,7 @@ mod tests {
                     use_tree: true,
                 }),
                 rmin: 16,
+                deadline_ms: None,
             },
             km(5, true),
         ];
@@ -782,9 +1352,11 @@ mod tests {
                 use_tree: true,
             }),
             rmin: 16,
+            deadline_ms: None,
         };
         let id = coord.submit(bad).unwrap();
-        assert!(matches!(coord.wait(id), JobState::Failed(_)));
+        let JobState::Failed(f) = coord.wait(id) else { panic!("bad job succeeded") };
+        assert_eq!(f.kind, FailureKind::Panic);
         let id = coord.submit(km(3, true)).unwrap();
         match coord.wait(id) {
             JobState::Done(_) => {}
@@ -837,5 +1409,106 @@ mod tests {
             rb.dists,
             ra.dists
         );
+    }
+
+    #[test]
+    fn deadline_fails_a_running_job_with_partial_stats() {
+        // Slow leaves make the traversal take seconds; a 10ms deadline
+        // fires mid-flight and the checkpoint unwind carries partials.
+        let _drill = ScopedFaults::install(FaultPlan {
+            seed: 1,
+            slow_leaf: Some(Duration::from_millis(5)),
+            ..Default::default()
+        });
+        let coord = Coordinator::new(1, 8);
+        let mut spec = km(3, true);
+        spec.deadline_ms = Some(10);
+        let id = coord.submit(spec).unwrap();
+        let JobState::Failed(f) = coord.wait(id) else {
+            panic!("deadline never fired")
+        };
+        assert_eq!(f, "deadline");
+        assert_eq!(f.kind, FailureKind::Deadline);
+        assert!(f.stats.is_some(), "running deadline must attach partial stats");
+        let m = coord.metrics();
+        assert_eq!(m.deadline_exceeded, 1);
+        assert_eq!(m.completed + m.failed, m.submitted);
+    }
+
+    #[test]
+    fn cancel_stops_a_running_job() {
+        let _drill = ScopedFaults::install(FaultPlan {
+            seed: 2,
+            slow_leaf: Some(Duration::from_millis(5)),
+            ..Default::default()
+        });
+        let coord = Coordinator::new(1, 8);
+        let id = coord.submit(km(3, true)).unwrap();
+        // Wait until the job is claimed, then cancel it mid-run.
+        while !matches!(coord.state(id), Some(JobState::Running)) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(coord.cancel(id), "running job must be cancellable");
+        let JobState::Failed(f) = coord.wait(id) else {
+            panic!("cancelled job completed")
+        };
+        assert_eq!(f, "cancelled");
+        assert_eq!(f.kind, FailureKind::Cancelled);
+        let m = coord.metrics();
+        assert_eq!(m.cancelled_running, 1);
+        assert_eq!(m.cancelled, 0, "queued-cancel counter must not move");
+        assert_eq!(m.completed + m.failed, m.submitted);
+        // A terminal job is no longer cancellable.
+        assert!(!coord.cancel(id));
+    }
+
+    #[test]
+    fn breaker_quarantines_after_consecutive_panics() {
+        // Every job panics under the drill; K=2 opens the breaker.
+        let _drill = ScopedFaults::install(FaultPlan {
+            seed: 3,
+            panic_ppm: 1_000_000,
+            ..Default::default()
+        });
+        let coord = Coordinator::with_config(
+            1,
+            16,
+            None,
+            CoordinatorConfig { breaker_k: 2, breaker_cooldown: Duration::from_millis(100) },
+        );
+        for expect_kind in [FailureKind::Panic, FailureKind::Panic, FailureKind::BreakerOpen] {
+            let id = coord.submit(km(3, true)).unwrap();
+            let JobState::Failed(f) = coord.wait(id) else { panic!("job succeeded") };
+            assert_eq!(f.kind, expect_kind, "{}", f.error);
+        }
+        assert_eq!(coord.metrics().breaker_open, 1);
+        // Faults off + cooldown elapsed: the half-open probe succeeds
+        // and closes the breaker for good.
+        crate::faults::install(None);
+        std::thread::sleep(Duration::from_millis(150));
+        for _ in 0..2 {
+            let id = coord.submit(km(3, true)).unwrap();
+            match coord.wait(id) {
+                JobState::Done(_) => {}
+                other => panic!("breaker failed to close: {other:?}"),
+            }
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.completed + m.failed, m.submitted);
+    }
+
+    #[test]
+    fn drain_finishes_in_flight_work_and_rejects_new_submits() {
+        let coord = Coordinator::new(2, 16);
+        let ids: Vec<JobId> = (0..4).map(|_| coord.submit(km(3, true)).unwrap()).collect();
+        assert!(coord.drain(Duration::from_secs(60)), "drain timed out");
+        assert!(matches!(coord.submit(km(3, true)), Err(SubmitError::ShuttingDown)));
+        for id in ids {
+            assert!(matches!(coord.wait(id), JobState::Done(_)));
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.completed + m.failed, m.submitted);
     }
 }

@@ -23,12 +23,20 @@
 //!
 //! Ops beyond `ping`/`submit`/`state`/`wait`:
 //!
-//! * **`cancel`** — `{"cmd":"cancel","id":N}` abandons a job that is
-//!   still queued: `{"ok":true,"id":N,"cancelled":true}`, and the job's
-//!   terminal state becomes `failed` with error `"cancelled"`. Once the
-//!   job is running (or finished, or unknown) the request is a no-op
-//!   and the response is `{"ok":false,...}` — a started job always runs
-//!   to completion so its accounting stays exact.
+//! * **`cancel`** — `{"cmd":"cancel","id":N}` abandons a queued *or
+//!   running* job: `{"ok":true,"id":N,"cancelled":true}`, and the job's
+//!   terminal state becomes `failed` with error `"cancelled"` (a
+//!   running job stops at its next traversal checkpoint and its
+//!   response carries the partial `stats`). Only a finished or unknown
+//!   job answers `{"ok":false,...}` — an affirmative answer is a
+//!   promise that the job ends `failed`.
+//! * **`drain`** — `{"cmd":"drain"}` stops intake on every shard,
+//!   blocks until in-flight and queued work finishes (bounded by
+//!   `timeout_ms`, default 60000), and reports
+//!   `{"ok":true,"drained":bool,"stragglers":[shard,...]}`. After a
+//!   drain, submits fail with `ShuttingDown`; status/metrics ops keep
+//!   working so clients can collect results. The serve loop (see
+//!   `main.rs`) polls [`Server::draining`] and exits cleanly.
 //! * **`metrics`** — aggregate counters plus queue depth: `queue_len`
 //!   is the total across shards and `shard_queue_lens` the per-shard
 //!   depths (index = shard).
@@ -45,7 +53,18 @@
 //!
 //! One thread per connection (std-only environment; connections are few
 //! and long-lived — the heavy concurrency lives in the coordinator's
-//! worker pool, not here).
+//! worker pool, not here). The edge still defends itself
+//! ([`ServerOptions`]): a connection cap (excess accepts get one
+//! `{"ok":false,...}` line and are closed, counted in
+//! `conns_rejected`), and per-socket read/write timeouts so a leaked or
+//! wedged client is reaped instead of pinning a thread forever. The
+//! [`Client`] pairs with that via [`Client::call_retry`] — bounded
+//! reconnect-and-resend with deterministic backoff, annotating resent
+//! requests with `"retry":N` so the server's `retries` counter sees
+//! them. Retried requests are resent verbatim, so only use it for
+//! idempotent ops or connection-time failures (the
+//! [`crate::faults`] drop injector only drops at accept, before any
+//! request is read).
 //!
 //! Note: `wait`/`state` responses carry the *full* result payload
 //! (pairs, edges, centroids, ...) so the wire maps losslessly onto
@@ -67,24 +86,97 @@ use crate::obs::{
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Edge-protection knobs for [`Server::start_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptions {
+    /// Concurrent connection cap; excess accepts get one error line and
+    /// are closed (counted in the `conns_rejected` metric).
+    pub max_conns: usize,
+    /// Per-socket read timeout: an idle connection is reaped after this
+    /// long instead of pinning its thread forever. `None` disables.
+    pub read_timeout: Option<Duration>,
+    /// Per-socket write timeout (a client that stops reading while a
+    /// huge result line is in flight cannot wedge the writer).
+    pub write_timeout: Option<Duration>,
+    /// Default `deadline_ms` applied to submits that carry none (the
+    /// `serve --deadline-ms` flag). `None` = no default.
+    pub default_deadline_ms: Option<u64>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            max_conns: 256,
+            read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(30)),
+            default_deadline_ms: None,
+        }
+    }
+}
+
+/// State shared between the accept loop, the per-connection handlers,
+/// and the [`Server`] handle.
+struct Shared {
+    coord: Arc<ShardedCoordinator>,
+    /// Set by the `drain` op; the serve loop polls it to exit.
+    draining: AtomicBool,
+    /// Connections turned away at the cap.
+    conns_rejected: AtomicU64,
+    /// Requests that arrived with a `"retry":N` annotation (client-side
+    /// reconnects).
+    retries: AtomicU64,
+    active_conns: AtomicUsize,
+    /// See [`ServerOptions::default_deadline_ms`].
+    default_deadline_ms: Option<u64>,
+}
 
 /// A running server handle; dropping it stops accepting new connections.
 pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Decrements the active-connection count however the handler exits.
+struct ConnGuard(Arc<Shared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl Server {
     /// Bind on `addr` ("127.0.0.1:0" for an ephemeral test port) and serve
     /// `coordinator` until the handle is dropped.
     pub fn start(addr: &str, coordinator: Arc<ShardedCoordinator>) -> std::io::Result<Server> {
+        Self::start_with(addr, coordinator, ServerOptions::default())
+    }
+
+    /// As [`Server::start`], with explicit edge-protection knobs.
+    pub fn start_with(
+        addr: &str,
+        coordinator: Arc<ShardedCoordinator>,
+        opts: ServerOptions,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let shared = Arc::new(Shared {
+            coord: coordinator,
+            draining: AtomicBool::new(false),
+            conns_rejected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
+            default_deadline_ms: opts.default_deadline_ms,
+        });
+        let shared2 = Arc::clone(&shared);
         let accept_thread = std::thread::Builder::new()
             .name("coord-server-accept".into())
             .spawn(move || {
@@ -96,24 +188,56 @@ impl Server {
                 }
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
-                        Ok((stream, _)) => {
-                            let coord = Arc::clone(&coordinator);
+                        Ok((mut stream, _)) => {
+                            // Injected connection drop (drills only):
+                            // the client sees a clean close before any
+                            // response — exactly what `call_retry`
+                            // recovers from.
+                            if crate::faults::active() && crate::faults::should_drop_socket() {
+                                drop(stream);
+                                continue;
+                            }
+                            let prev = shared2.active_conns.fetch_add(1, Ordering::SeqCst);
+                            if prev >= opts.max_conns {
+                                shared2.active_conns.fetch_sub(1, Ordering::SeqCst);
+                                shared2.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                                let _ = stream.write_all(
+                                    b"{\"error\":\"server at connection capacity\",\"ok\":false}\n",
+                                );
+                                continue;
+                            }
+                            let guard = ConnGuard(Arc::clone(&shared2));
+                            let _ = stream.set_read_timeout(opts.read_timeout);
+                            let _ = stream.set_write_timeout(opts.write_timeout);
+                            let shared = Arc::clone(&shared2);
                             std::thread::spawn(move || {
-                                let _ = handle_connection(stream, coord);
+                                let _guard = guard;
+                                let _ = handle_connection(stream, &shared);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            std::thread::sleep(Duration::from_millis(10));
                         }
                         Err(_) => break,
                     }
                 }
             })?;
-        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+        Ok(Server { addr: local, stop, shared, accept_thread: Some(accept_thread) })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// `true` once a `drain` op has run: intake is stopped and the
+    /// serve loop should finish up and exit.
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Connections turned away at the connection cap so far.
+    pub fn conns_rejected(&self) -> u64 {
+        self.shared.conns_rejected.load(Ordering::Relaxed)
     }
 }
 
@@ -126,7 +250,7 @@ impl Drop for Server {
     }
 }
 
-fn handle_connection(stream: TcpStream, coord: Arc<ShardedCoordinator>) -> std::io::Result<()> {
+fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -135,7 +259,7 @@ fn handle_connection(stream: TcpStream, coord: Arc<ShardedCoordinator>) -> std::
         if line.trim().is_empty() {
             continue;
         }
-        let response = match handle_request(&line, &coord) {
+        let response = match handle_request(&line, shared) {
             Ok(v) => v,
             Err(msg) => err_obj(&msg),
         };
@@ -162,8 +286,13 @@ fn ok_obj(fields: Vec<(&str, Value)>) -> Value {
     Value::Obj(m)
 }
 
-fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, String> {
+fn handle_request(line: &str, shared: &Shared) -> Result<Value, String> {
+    let coord: &ShardedCoordinator = &shared.coord;
     let req = json::parse(line).map_err(|e| format!("bad JSON: {e}"))?;
+    // Client-side reconnect annotation (see `Client::call_retry`).
+    if req.get("retry").and_then(Value::as_f64).is_some() {
+        shared.retries.fetch_add(1, Ordering::Relaxed);
+    }
     let cmd = req
         .get("cmd")
         .and_then(Value::as_str)
@@ -187,9 +316,27 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
                 ("failed", Value::Num(ids::wire_from_u64(m.failed))),
                 ("rejected", Value::Num(ids::wire_from_u64(m.rejected))),
                 ("cancelled", Value::Num(ids::wire_from_u64(m.cancelled))),
+                (
+                    "cancelled_running",
+                    Value::Num(ids::wire_from_u64(m.cancelled_running)),
+                ),
+                (
+                    "deadline_exceeded",
+                    Value::Num(ids::wire_from_u64(m.deadline_exceeded)),
+                ),
+                ("breaker_open", Value::Num(ids::wire_from_u64(m.breaker_open))),
                 ("total_dists", Value::Num(ids::wire_from_u64(m.total_dists))),
                 ("queue_len", Value::Num(ids::wire_from_usize(total))),
                 ("shard_queue_lens", Value::Arr(per_shard)),
+                (
+                    "conns_rejected",
+                    Value::Num(ids::wire_from_u64(shared.conns_rejected.load(Ordering::Relaxed))),
+                ),
+                (
+                    "retries",
+                    Value::Num(ids::wire_from_u64(shared.retries.load(Ordering::Relaxed))),
+                ),
+                ("draining", Value::Bool(shared.draining.load(Ordering::SeqCst))),
             ]))
         }
         "shards" => {
@@ -221,11 +368,40 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
                 ("queue_wait", hist_obj(&o.queue_wait)),
                 ("build", hist_obj(&o.build)),
                 ("families", Value::Obj(families)),
-                ("text", Value::Str(prometheus_text(&m, &o))),
+                ("text", Value::Str(prometheus_text(&m, &o, shared))),
+            ]))
+        }
+        "drain" => {
+            // Stop intake everywhere, then block this request until the
+            // in-flight and queued work finishes (bounded). Status and
+            // metrics ops on other connections keep answering while the
+            // drain runs, so clients can watch it progress.
+            shared.draining.store(true, Ordering::SeqCst);
+            let timeout_ms = match req.get("timeout_ms").and_then(Value::as_f64) {
+                Some(raw) => ids::wire_u64(raw, "timeout_ms")?,
+                None => 60_000,
+            };
+            let report = coord.drain(Duration::from_millis(timeout_ms));
+            let stragglers: Vec<Value> = report
+                .stragglers
+                .iter()
+                .map(|&s| Value::Num(ids::wire_from_usize(s)))
+                .collect();
+            Ok(ok_obj(vec![
+                ("drained", Value::Bool(report.drained)),
+                ("stragglers", Value::Arr(stragglers)),
+                (
+                    "completed",
+                    Value::Num(ids::wire_from_u64(report.metrics.completed)),
+                ),
+                ("failed", Value::Num(ids::wire_from_u64(report.metrics.failed))),
             ]))
         }
         "submit" => {
-            let spec = parse_spec(&req)?;
+            let mut spec = parse_spec(&req)?;
+            if spec.deadline_ms.is_none() {
+                spec.deadline_ms = shared.default_deadline_ms;
+            }
             match coord.submit(spec) {
                 Ok(id) => Ok(ok_obj(vec![("id", Value::Num(ids::wire_from_u64(id)))])),
                 Err(e) => Err(format!("{e:?}")),
@@ -245,9 +421,7 @@ fn handle_request(line: &str, coord: &ShardedCoordinator) -> Result<Value, Strin
                     ("cancelled", Value::Bool(true)),
                 ]))
             } else {
-                Err(format!(
-                    "job {id} is not queued (already running, finished, or unknown)"
-                ))
+                Err(format!("job {id} is not cancellable (finished or unknown)"))
             }
         }
         "state" | "wait" => {
@@ -288,13 +462,38 @@ fn hist_obj(h: &HistogramSnapshot) -> Value {
 /// Prometheus text exposition of the merged snapshot: job counters,
 /// edge latency histograms, and per-family traversal counters.
 /// Families with no recorded jobs are omitted to keep the page small.
-fn prometheus_text(m: &MetricsSnapshot, o: &ObsSnapshot) -> String {
+fn prometheus_text(m: &MetricsSnapshot, o: &ObsSnapshot, shared: &Shared) -> String {
     let mut out = String::new();
     prometheus_counter(&mut out, "pallas_jobs_submitted_total", "", m.submitted);
     prometheus_counter(&mut out, "pallas_jobs_completed_total", "", m.completed);
     prometheus_counter(&mut out, "pallas_jobs_failed_total", "", m.failed);
     prometheus_counter(&mut out, "pallas_jobs_rejected_total", "", m.rejected);
     prometheus_counter(&mut out, "pallas_jobs_cancelled_total", "", m.cancelled);
+    prometheus_counter(
+        &mut out,
+        "pallas_jobs_cancelled_running_total",
+        "",
+        m.cancelled_running,
+    );
+    prometheus_counter(
+        &mut out,
+        "pallas_jobs_deadline_exceeded_total",
+        "",
+        m.deadline_exceeded,
+    );
+    prometheus_counter(&mut out, "pallas_jobs_breaker_open_total", "", m.breaker_open);
+    prometheus_counter(
+        &mut out,
+        "pallas_conns_rejected_total",
+        "",
+        shared.conns_rejected.load(Ordering::Relaxed),
+    );
+    prometheus_counter(
+        &mut out,
+        "pallas_retries_total",
+        "",
+        shared.retries.load(Ordering::Relaxed),
+    );
     prometheus_counter(&mut out, "pallas_dists_total", "", m.total_dists);
     prometheus_histogram(&mut out, "pallas_queue_wait_us", "", &o.queue_wait);
     prometheus_histogram(&mut out, "pallas_build_us", "", &o.build);
@@ -328,6 +527,18 @@ fn shard_obj(shard: usize, m: &MetricsSnapshot, queue_len: usize) -> Value {
     obj.insert("failed".into(), Value::Num(ids::wire_from_u64(m.failed)));
     obj.insert("rejected".into(), Value::Num(ids::wire_from_u64(m.rejected)));
     obj.insert("cancelled".into(), Value::Num(ids::wire_from_u64(m.cancelled)));
+    obj.insert(
+        "cancelled_running".into(),
+        Value::Num(ids::wire_from_u64(m.cancelled_running)),
+    );
+    obj.insert(
+        "deadline_exceeded".into(),
+        Value::Num(ids::wire_from_u64(m.deadline_exceeded)),
+    );
+    obj.insert(
+        "breaker_open".into(),
+        Value::Num(ids::wire_from_u64(m.breaker_open)),
+    );
     obj.insert("total_dists".into(), Value::Num(ids::wire_from_u64(m.total_dists)));
     Value::Obj(obj)
 }
@@ -351,7 +562,11 @@ fn parse_spec(req: &Value) -> Result<JobSpec, String> {
         Some(raw) => ids::wire_usize(raw, "rmin")?,
         None => 30,
     };
-    Ok(JobSpec { dataset, query, rmin })
+    let deadline_ms = match req.get("deadline_ms").and_then(Value::as_f64) {
+        Some(raw) => Some(ids::wire_u64(raw, "deadline_ms")?),
+        None => None,
+    };
+    Ok(JobSpec { dataset, query, rmin, deadline_ms })
 }
 
 fn state_obj(id: u64, state: &JobState) -> Value {
@@ -359,9 +574,14 @@ fn state_obj(id: u64, state: &JobState) -> Value {
     match state {
         JobState::Queued => fields.push(("state", Value::Str("queued".into()))),
         JobState::Running => fields.push(("state", Value::Str("running".into()))),
-        JobState::Failed(e) => {
+        JobState::Failed(f) => {
             fields.push(("state", Value::Str("failed".into())));
-            fields.push(("error", Value::Str(e.clone())));
+            fields.push(("error", Value::Str(f.error.clone())));
+            // Interrupted jobs (deadline/cancel/panic mid-traversal)
+            // carry their partial deterministic counters.
+            if let Some(stats) = &f.stats {
+                fields.push(("stats", wire::stats_to_json(stats)));
+            }
         }
         JobState::Done(r) => {
             fields.push(("state", Value::Str("done".into())));
@@ -378,13 +598,15 @@ fn state_obj(id: u64, state: &JobState) -> Value {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    addr: std::net::SocketAddr,
 }
 
 impl Client {
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        let addr = stream.peer_addr()?;
+        Ok(Client { reader: BufReader::new(stream), writer, addr })
     }
 
     /// Send one JSON request line and read one JSON response line.
@@ -398,6 +620,48 @@ impl Client {
             .read_line(&mut line)
             .map_err(|e| format!("recv: {e}"))?;
         json::parse(&line).map_err(|e| format!("bad response: {e}"))
+    }
+
+    /// [`Client::call`] with bounded reconnect-and-resend: on a
+    /// transport failure (dropped connection, reaped idle socket) the
+    /// client reconnects after a deterministic backoff (10ms · 2ᵃ,
+    /// capped at 500ms — no jitter, this repo replays byte-for-byte)
+    /// and resends the request annotated with `"retry":attempt` so the
+    /// server's `retries` counter records it. Protocol-level errors
+    /// (`ok:false` responses) are *returned*, not retried — the
+    /// transport worked. The request is resent verbatim, so use this
+    /// for idempotent ops or connection-time failures only.
+    pub fn call_retry(&mut self, request: &Value, max_attempts: u32) -> Result<Value, String> {
+        let mut last = String::new();
+        for attempt in 0..max_attempts.max(1) {
+            if attempt > 0 {
+                let backoff = Duration::from_millis(
+                    10u64.saturating_mul(1 << attempt.min(10)).min(500),
+                );
+                std::thread::sleep(backoff);
+                match Client::connect(self.addr) {
+                    Ok(fresh) => *self = fresh,
+                    Err(e) => {
+                        last = format!("reconnect: {e}");
+                        continue;
+                    }
+                }
+            }
+            let req = if attempt == 0 {
+                request.clone()
+            } else if let Value::Obj(m) = request {
+                let mut m = m.clone();
+                m.insert("retry".into(), Value::Num(f64::from(attempt)));
+                Value::Obj(m)
+            } else {
+                request.clone()
+            };
+            match self.call(&req) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = e,
+            }
+        }
+        Err(format!("gave up after {max_attempts} attempts: {last}"))
     }
 
     /// Convenience: build a request object from key/value pairs.
@@ -583,6 +847,13 @@ mod tests {
         let lens = m.get("shard_queue_lens").and_then(Value::as_arr).unwrap();
         assert_eq!(lens.len(), coord.n_shards());
         assert_eq!(m.get("cancelled").and_then(Value::as_f64), Some(0.0));
+        // The robustness counters ride along from day one.
+        assert_eq!(m.get("cancelled_running").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(m.get("deadline_exceeded").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(m.get("breaker_open").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(m.get("conns_rejected").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(m.get("retries").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(m.get("draining"), Some(&Value::Bool(false)));
     }
 
     #[test]
@@ -670,25 +941,25 @@ mod tests {
                 ("id", Value::Num(doomed)),
             ]))
             .unwrap();
-        // In the (unlikely) event the first job finished before the
-        // cancel arrived, the second may already be running — then the
-        // cancel correctly reports ok:false. Otherwise the job must
-        // land in failed("cancelled").
-        if resp.get("ok") == Some(&Value::Bool(true)) {
-            assert_eq!(resp.get("cancelled"), Some(&Value::Bool(true)));
-            let state = client
-                .call(&Client::request(vec![
-                    ("cmd", Value::Str("wait".into())),
-                    ("id", Value::Num(doomed)),
-                ]))
-                .unwrap();
-            assert_eq!(state.get("state").and_then(Value::as_str), Some("failed"));
-            assert_eq!(state.get("error").and_then(Value::as_str), Some("cancelled"));
-            let m = client
-                .call(&Client::request(vec![("cmd", Value::Str("metrics".into()))]))
-                .unwrap();
-            assert_eq!(m.get("cancelled").and_then(Value::as_f64), Some(1.0));
-        }
+        // The doomed job is still queued (or — if the busy job finished
+        // implausibly fast — running); either way cancel now succeeds
+        // and the job lands in failed("cancelled").
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("cancelled"), Some(&Value::Bool(true)));
+        let state = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(doomed)),
+            ]))
+            .unwrap();
+        assert_eq!(state.get("state").and_then(Value::as_str), Some("failed"));
+        assert_eq!(state.get("error").and_then(Value::as_str), Some("cancelled"));
+        let m = client
+            .call(&Client::request(vec![("cmd", Value::Str("metrics".into()))]))
+            .unwrap();
+        let queued = m.get("cancelled").and_then(Value::as_f64).unwrap();
+        let running = m.get("cancelled_running").and_then(Value::as_f64).unwrap();
+        assert_eq!(queued + running, 1.0, "{m:?}");
         let done = client
             .call(&Client::request(vec![
                 ("cmd", Value::Str("wait".into())),
@@ -709,6 +980,163 @@ mod tests {
             ]))
             .unwrap();
         assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn deadline_over_the_wire() {
+        // 1 worker held busy by an expensive job: the second job's 1ms
+        // deadline fires while it is still queued, long before the
+        // worker could claim it.
+        let coord = Arc::new(ShardedCoordinator::new(1, 1, 16));
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let busy = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("submit".into())),
+                ("dataset", Value::Str("cell".into())),
+                ("scale", Value::Num(0.01)),
+                ("op", Value::Str("mst".into())),
+            ]))
+            .unwrap();
+        let busy_id = busy.get("id").unwrap().as_f64().unwrap();
+        let doomed = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("submit".into())),
+                ("dataset", Value::Str("cell".into())),
+                ("scale", Value::Num(0.005)),
+                ("op", Value::Str("mst".into())),
+                ("deadline_ms", Value::Num(1.0)),
+            ]))
+            .unwrap();
+        let doomed_id = doomed.get("id").unwrap().as_f64().unwrap();
+        let state = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(doomed_id)),
+            ]))
+            .unwrap();
+        assert_eq!(state.get("state").and_then(Value::as_str), Some("failed"));
+        assert_eq!(state.get("error").and_then(Value::as_str), Some("deadline"));
+        let done = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(busy_id)),
+            ]))
+            .unwrap();
+        assert_eq!(done.get("state").and_then(Value::as_str), Some("done"));
+        let m = client
+            .call(&Client::request(vec![("cmd", Value::Str("metrics".into()))]))
+            .unwrap();
+        assert_eq!(m.get("deadline_exceeded").and_then(Value::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn drain_op_finishes_in_flight_and_stops_intake() {
+        let (server, _coord) = start();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let submit = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("submit".into())),
+                ("dataset", Value::Str("squiggles".into())),
+                ("scale", Value::Num(0.003)),
+                ("op", Value::Str("kmeans".into())),
+                ("k", Value::Num(3.0)),
+                ("iters", Value::Num(2.0)),
+            ]))
+            .unwrap();
+        let id = submit.get("id").unwrap().as_f64().unwrap();
+        assert!(!server.draining());
+        let drained = client
+            .call(&Client::request(vec![("cmd", Value::Str("drain".into()))]))
+            .unwrap();
+        assert_eq!(drained.get("ok"), Some(&Value::Bool(true)), "{drained:?}");
+        assert_eq!(drained.get("drained"), Some(&Value::Bool(true)));
+        assert_eq!(
+            drained.get("stragglers").and_then(Value::as_arr).map(Vec::len),
+            Some(0)
+        );
+        assert!(server.draining());
+        // The in-flight job finished and its result is still readable.
+        let done = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("wait".into())),
+                ("id", Value::Num(id)),
+            ]))
+            .unwrap();
+        assert_eq!(done.get("state").and_then(Value::as_str), Some("done"));
+        // New submits are refused, but the connection stays usable.
+        let refused = client
+            .call(&Client::request(vec![
+                ("cmd", Value::Str("submit".into())),
+                ("dataset", Value::Str("squiggles".into())),
+                ("scale", Value::Num(0.002)),
+                ("op", Value::Str("mst".into())),
+            ]))
+            .unwrap();
+        assert_eq!(refused.get("ok"), Some(&Value::Bool(false)), "{refused:?}");
+    }
+
+    #[test]
+    fn connection_cap_rejects_excess_connections() {
+        let coord = Arc::new(ShardedCoordinator::new(1, 1, 16));
+        let opts = ServerOptions { max_conns: 1, ..Default::default() };
+        let server = Server::start_with("127.0.0.1:0", Arc::clone(&coord), opts).unwrap();
+        let mut first = Client::connect(server.addr()).unwrap();
+        let resp = first
+            .call(&Client::request(vec![("cmd", Value::Str("ping".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
+        // Second connection: over the cap — it gets one error line.
+        let mut second = Client::connect(server.addr()).unwrap();
+        let resp = second.call(&Client::request(vec![("cmd", Value::Str("ping".into()))]));
+        match resp {
+            Ok(v) => {
+                assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{v:?}");
+                assert!(
+                    v.get("error")
+                        .and_then(Value::as_str)
+                        .is_some_and(|e| e.contains("capacity")),
+                    "{v:?}"
+                );
+            }
+            // The server may close before our request is written; the
+            // transport error is an equally valid rejection.
+            Err(_) => {}
+        }
+        assert_eq!(server.conns_rejected(), 1);
+        let m = first
+            .call(&Client::request(vec![("cmd", Value::Str("metrics".into()))]))
+            .unwrap();
+        assert_eq!(m.get("conns_rejected").and_then(Value::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn client_retry_survives_a_reaped_connection() {
+        // Tiny read timeout: the server reaps our idle connection, so
+        // the next plain call fails at the transport — and call_retry
+        // reconnects, resends with a "retry" annotation, and succeeds.
+        let coord = Arc::new(ShardedCoordinator::new(1, 1, 16));
+        let opts = ServerOptions {
+            read_timeout: Some(std::time::Duration::from_millis(50)),
+            ..Default::default()
+        };
+        let server = Server::start_with("127.0.0.1:0", Arc::clone(&coord), opts).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let ping = Client::request(vec![("cmd", Value::Str("ping".into()))]);
+        assert_eq!(client.call(&ping).unwrap().get("ok"), Some(&Value::Bool(true)));
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        let resp = client.call_retry(&ping, 4).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        let m = client
+            .call_retry(
+                &Client::request(vec![("cmd", Value::Str("metrics".into()))]),
+                4,
+            )
+            .unwrap();
+        assert!(
+            m.get("retries").and_then(Value::as_f64).unwrap() >= 1.0,
+            "{m:?}"
+        );
     }
 
     #[test]

@@ -49,10 +49,14 @@
 //! multi-host serving where shards and their warm caches move between
 //! processes.
 
-use super::{Coordinator, JobId, JobSpec, JobState, MetricsSnapshot, ObsSnapshot, SubmitError};
+use super::{
+    Coordinator, CoordinatorConfig, JobId, JobSpec, JobState, MetricsSnapshot, ObsSnapshot,
+    SubmitError,
+};
 use crate::ids;
 use crate::runtime::BatchDistanceEngine;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Bits of a [`JobId`] reserved for the shard index.
 pub const SHARD_BITS: u32 = 8;
@@ -183,10 +187,35 @@ impl ShardedCoordinator {
         capacity_per_shard: usize,
         engine: Option<Arc<BatchDistanceEngine>>,
     ) -> Self {
+        Self::with_config(
+            n_shards,
+            workers_per_shard,
+            capacity_per_shard,
+            engine,
+            CoordinatorConfig::default(),
+        )
+    }
+
+    /// As [`ShardedCoordinator::with_engine`], with explicit robustness
+    /// knobs applied to every shard (breakers stay per-dataset, and a
+    /// dataset lives on exactly one shard, so per-shard breaker state is
+    /// also globally consistent).
+    pub fn with_config(
+        n_shards: usize,
+        workers_per_shard: usize,
+        capacity_per_shard: usize,
+        engine: Option<Arc<BatchDistanceEngine>>,
+        config: CoordinatorConfig,
+    ) -> Self {
         let n = n_shards.clamp(1, MAX_SHARDS);
         let shards = (0..n)
             .map(|_| {
-                Coordinator::with_engine(workers_per_shard, capacity_per_shard, engine.clone())
+                Coordinator::with_config(
+                    workers_per_shard,
+                    capacity_per_shard,
+                    engine.clone(),
+                    config,
+                )
             })
             .collect();
         ShardedCoordinator { shards, ring: Ring::new(n) }
@@ -224,8 +253,8 @@ impl ShardedCoordinator {
     /// untrusted ids (e.g. off the wire) should go through
     /// [`ShardedCoordinator::wait_checked`] instead.
     pub fn wait(&self, id: JobId) -> JobState {
-        self.wait_checked(id)
-            .unwrap_or_else(|| panic!("unknown job id {id}"))
+        // pallas-lint: allow(panic-wire, documented trusted-caller API; the wire path resolves untrusted ids via wait_checked)
+        self.wait_checked(id).unwrap_or_else(|| panic!("unknown job id {id}"))
     }
 
     /// Non-panicking [`ShardedCoordinator::wait`]: `None` when the id's
@@ -235,8 +264,9 @@ impl ShardedCoordinator {
         self.shards.get(shard)?.wait_checked(local)
     }
 
-    /// Cancel a still-queued job on whichever shard owns it; see
-    /// [`Coordinator::cancel`] for the exact semantics.
+    /// Cancel a queued *or running* job on whichever shard owns it; see
+    /// [`Coordinator::cancel`] for the exact semantics (an affirmative
+    /// answer is a promise that the job ends `Failed`).
     pub fn cancel(&self, id: JobId) -> bool {
         let (shard, local) = decode_job_id(id);
         self.shards.get(shard).is_some_and(|coord| coord.cancel(local))
@@ -279,16 +309,58 @@ impl ShardedCoordinator {
         self.shards.iter().map(Coordinator::obs).collect()
     }
 
-    /// Drain and join every shard, in shard order (deterministic:
-    /// shard i's queue is fully drained and its workers joined before
-    /// shard i+1 starts shutting down), then return the aggregate
-    /// metrics.
+    /// Stop intake on every shard at once (does not wait; pair with
+    /// [`ShardedCoordinator::drain`] or [`ShardedCoordinator::shutdown`]).
+    pub fn request_shutdown(&self) {
+        for shard in &self.shards {
+            shard.request_shutdown();
+        }
+    }
+
+    /// Stop intake everywhere, then wait — bounded per shard — for
+    /// in-flight and queued work to finish. Intake stops on *all*
+    /// shards before any waiting starts, so the shards drain
+    /// concurrently and a wedged shard never delays the others' drains;
+    /// it is reported as a straggler instead of hanging the caller.
+    pub fn drain(&self, per_shard_timeout: Duration) -> DrainReport {
+        self.request_shutdown();
+        let mut stragglers = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            if !shard.drain(per_shard_timeout) {
+                stragglers.push(i);
+            }
+        }
+        DrainReport {
+            drained: stragglers.is_empty(),
+            stragglers,
+            metrics: self.metrics(),
+        }
+    }
+
+    /// Drain and join every shard, then return the aggregate metrics.
+    /// Intake stops on all shards up front (concurrent drain, as in
+    /// [`ShardedCoordinator::drain`]); each shard's join is bounded, so
+    /// one wedged worker detaches instead of wedging the whole
+    /// teardown.
     pub fn shutdown(self) -> MetricsSnapshot {
+        self.request_shutdown();
         self.shards
             .into_iter()
             .map(Coordinator::shutdown)
             .fold(MetricsSnapshot::default(), |acc, m| acc.merge(&m))
     }
+}
+
+/// Outcome of [`ShardedCoordinator::drain`].
+#[derive(Clone, Debug)]
+pub struct DrainReport {
+    /// Every shard finished all queued and in-flight work in time.
+    pub drained: bool,
+    /// Shards still running a job when their wait bound expired (they
+    /// keep draining in the background).
+    pub stragglers: Vec<usize>,
+    /// Aggregate metrics at the moment the drain ended.
+    pub metrics: MetricsSnapshot,
 }
 
 #[cfg(test)]
@@ -303,6 +375,7 @@ mod tests {
             dataset: DatasetSpec { kind: DatasetKind::Squiggles, scale: 0.003, seed },
             query: Query::Kmeans(query),
             rmin,
+            deadline_ms: None,
         }
     }
 
@@ -412,6 +485,25 @@ mod tests {
         assert!(coord.wait(id).is_terminal());
         // Terminal jobs are not cancellable.
         assert!(!coord.cancel(id));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn drain_finishes_every_shard_and_stops_intake() {
+        let coord = ShardedCoordinator::new(4, 1, 32);
+        let ids: Vec<JobId> = (0..6)
+            .map(|seed| coord.submit(km_spec(seed, 16)).unwrap())
+            .collect();
+        let report = coord.drain(Duration::from_secs(60));
+        assert!(report.drained, "stragglers: {:?}", report.stragglers);
+        assert_eq!(report.metrics.completed, 6);
+        assert!(matches!(
+            coord.submit(km_spec(9, 16)),
+            Err(SubmitError::ShuttingDown)
+        ));
+        for id in ids {
+            assert!(matches!(coord.wait(id), JobState::Done(_)));
+        }
         coord.shutdown();
     }
 

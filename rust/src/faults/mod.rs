@@ -1,0 +1,353 @@
+//! Deterministic fault injection for robustness drills.
+//!
+//! Default **off**: every hook below is behind one relaxed atomic load
+//! ([`active`]), so production and ordinary test runs pay nothing and
+//! observe nothing. A drill installs a [`FaultPlan`] — programmatically
+//! ([`install`] / [`ScopedFaults`]) or from the environment
+//! (`PALLAS_FAULTS=seed:spec`, parsed by [`from_env`] and installed
+//! explicitly by `main.rs`; a set-but-unparsable value is a loud error,
+//! never a silent no-faults run) — and the plan then forces failures at
+//! fixed injection points:
+//!
+//! | key          | value        | injection point                              |
+//! |--------------|--------------|----------------------------------------------|
+//! | `panic`      | prob (0..=1) | job execution panics (coordinator `run_job`) |
+//! | `queue_full` | prob         | `submit` rejects as if the queue were full   |
+//! | `slow_leaf`  | duration     | every traversal checkpoint sleeps this long  |
+//! | `snap_trunc` | prob         | snapshot reads see a truncated stream        |
+//! | `sock_drop`  | prob         | server drops an accepted connection          |
+//!
+//! Example: `PALLAS_FAULTS=7:panic=0.3,slow_leaf=200us,queue_full=0.2`.
+//!
+//! **Determinism.** Every probabilistic decision is a pure function of
+//! `(plan seed, fault tag, decision key)` through a splitmix64 mix —
+//! no RNG state, no wall clock. Decision keys are deterministic
+//! sequence numbers (submit attempts, snapshot reads, accepted
+//! connections) or job ids, and [`install`] resets the sequences, so
+//! re-running a drill with the same plan against the same request
+//! stream reproduces the same faults, fault for fault.
+//! `tests/fault_injection.rs` pins this.
+//!
+//! This module is in pallas-lint D5 (panic-wire) scope: failure-path
+//! code must not itself panic, so everything here returns values and
+//! recovers poisoned locks.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// One part per million; probabilities are stored as ppm so decisions
+/// stay in integer arithmetic.
+const PPM: u64 = 1_000_000;
+
+const TAG_PANIC: u64 = 0x9e37_79b9_7f4a_7c15;
+const TAG_QUEUE: u64 = 0xbf58_476d_1ce4_e5b9;
+const TAG_SNAP: u64 = 0x94d0_49bb_1331_11eb;
+const TAG_SOCK: u64 = 0xd6e8_feb8_6659_fd93;
+
+/// A parsed drill: which faults fire, at what rate, under which seed.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for every probabilistic decision this plan makes.
+    pub seed: u64,
+    /// ppm probability that a job's execution panics.
+    pub panic_ppm: u32,
+    /// ppm probability that a submit is rejected as queue-full.
+    pub queue_full_ppm: u32,
+    /// ppm probability that a snapshot read sees a truncated stream.
+    pub snap_trunc_ppm: u32,
+    /// ppm probability that the server drops an accepted connection.
+    pub sock_drop_ppm: u32,
+    /// Artificial delay at every traversal checkpoint.
+    pub slow_leaf: Option<Duration>,
+}
+
+impl FaultPlan {
+    /// Parse the `seed:spec` form (see the module docs for the grammar).
+    pub fn parse(raw: &str) -> Result<FaultPlan, String> {
+        let (seed_s, rest) = raw
+            .split_once(':')
+            .ok_or_else(|| format!("fault spec {raw:?}: expected \"seed:key=value,...\""))?;
+        let seed = seed_s
+            .trim()
+            .parse::<u64>()
+            .map_err(|e| format!("fault spec seed {seed_s:?}: {e}"))?;
+        let mut plan = FaultPlan { seed, ..FaultPlan::default() };
+        for part in rest.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec item {part:?}: expected key=value"))?;
+            match key.trim() {
+                "panic" => plan.panic_ppm = parse_ppm(value)?,
+                "queue_full" => plan.queue_full_ppm = parse_ppm(value)?,
+                "snap_trunc" => plan.snap_trunc_ppm = parse_ppm(value)?,
+                "sock_drop" => plan.sock_drop_ppm = parse_ppm(value)?,
+                "slow_leaf" => plan.slow_leaf = Some(parse_duration(value)?),
+                other => return Err(format!("fault spec: unknown fault {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_ppm(value: &str) -> Result<u32, String> {
+    let p = value
+        .trim()
+        .parse::<f64>()
+        .map_err(|e| format!("fault probability {value:?}: {e}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("fault probability {value:?}: must be in [0, 1]"));
+    }
+    // In-range by the check above, so the cast is exact up to rounding.
+    Ok((p * PPM as f64).round() as u32)
+}
+
+fn parse_duration(value: &str) -> Result<Duration, String> {
+    let v = value.trim();
+    let (digits, mul_us) = if let Some(d) = v.strip_suffix("ms") {
+        (d, 1_000u64)
+    } else if let Some(d) = v.strip_suffix("us") {
+        (d, 1u64)
+    } else if let Some(d) = v.strip_suffix('s') {
+        (d, 1_000_000u64)
+    } else {
+        return Err(format!("fault duration {v:?}: expected a us/ms/s suffix"));
+    };
+    let n = digits
+        .trim()
+        .parse::<u64>()
+        .map_err(|e| format!("fault duration {v:?}: {e}"))?;
+    Ok(Duration::from_micros(n.saturating_mul(mul_us)))
+}
+
+/// Fast gate: `false` (one relaxed load) unless a plan is installed.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+/// Decision sequence numbers (reset by [`install`] so drills replay).
+static SUBMIT_SEQ: AtomicU64 = AtomicU64::new(0);
+static SNAP_SEQ: AtomicU64 = AtomicU64::new(0);
+static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Install (or clear, with `None`) the process-wide fault plan and
+/// reset the decision sequences — the same plan then reproduces the
+/// same drill against the same request stream.
+pub fn install(plan: Option<FaultPlan>) {
+    let mut slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    SUBMIT_SEQ.store(0, Ordering::SeqCst);
+    SNAP_SEQ.store(0, Ordering::SeqCst);
+    SOCK_SEQ.store(0, Ordering::SeqCst);
+    ACTIVE.store(plan.is_some(), Ordering::SeqCst);
+    *slot = plan.map(Arc::new);
+}
+
+/// Parse `PALLAS_FAULTS` without installing it. Unset → `Ok(None)`;
+/// set but unparsable → `Err` (a drill that silently doesn't run would
+/// turn CI coverage green while testing nothing — same loud-error
+/// policy as `PALLAS_SHARDS`).
+pub fn from_env() -> Result<Option<FaultPlan>, String> {
+    match std::env::var("PALLAS_FAULTS") {
+        Err(_) => Ok(None),
+        Ok(raw) => FaultPlan::parse(&raw)
+            .map(Some)
+            .map_err(|e| format!("$PALLAS_FAULTS: {e}")),
+    }
+}
+
+fn current() -> Option<Arc<FaultPlan>> {
+    if !active() {
+        return None;
+    }
+    PLAN.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// The deterministic coin: a pure function of (seed, tag, key).
+fn decide(seed: u64, tag: u64, key: u64, ppm: u32) -> bool {
+    ppm > 0 && splitmix64(seed ^ tag ^ splitmix64(key)) % PPM < u64::from(ppm)
+}
+
+/// Should the job with this id panic? Keyed by the (globally unique)
+/// job id, so the same submission stream faults the same jobs.
+pub fn should_panic_job(job_id: u64) -> bool {
+    match current() {
+        Some(p) => decide(p.seed, TAG_PANIC, job_id, p.panic_ppm),
+        None => false,
+    }
+}
+
+/// Should this submit be rejected as if the queue were full? Keyed by a
+/// global submit-attempt sequence number.
+pub fn should_reject_submit() -> bool {
+    match current() {
+        Some(p) if p.queue_full_ppm > 0 => {
+            let n = SUBMIT_SEQ.fetch_add(1, Ordering::SeqCst);
+            decide(p.seed, TAG_QUEUE, n, p.queue_full_ppm)
+        }
+        _ => false,
+    }
+}
+
+/// Byte limit to truncate the next snapshot read at, if the fault
+/// fires. Keyed by a global snapshot-read sequence number; the limit
+/// itself is derived from the same mix, so a given read in the stream
+/// always truncates at the same offset.
+pub fn snapshot_truncation() -> Option<u64> {
+    let p = current()?;
+    if p.snap_trunc_ppm == 0 {
+        return None;
+    }
+    let n = SNAP_SEQ.fetch_add(1, Ordering::SeqCst);
+    if !decide(p.seed, TAG_SNAP, n, p.snap_trunc_ppm) {
+        return None;
+    }
+    // Cut somewhere in the header/early-node region: past the magic
+    // often enough to exercise mid-record EOF paths, never the full file.
+    Some(4 + splitmix64(p.seed ^ TAG_SNAP ^ n) % 512)
+}
+
+/// Should the server drop this accepted connection? Keyed by a global
+/// accepted-connection sequence number.
+pub fn should_drop_socket() -> bool {
+    match current() {
+        Some(p) if p.sock_drop_ppm > 0 => {
+            let n = SOCK_SEQ.fetch_add(1, Ordering::SeqCst);
+            decide(p.seed, TAG_SOCK, n, p.sock_drop_ppm)
+        }
+        _ => false,
+    }
+}
+
+/// Slow-leaf hook, called from `Space::checkpoint` behind the
+/// [`active`] gate: sleep the configured delay at every traversal
+/// checkpoint. Timing-only — results and counters are untouched.
+pub fn leaf_checkpoint() {
+    if let Some(d) = current().and_then(|p| p.slow_leaf) {
+        // pallas-lint: allow(threads, fault-injected slow leaves need a real sleep; gated off unless a drill is installed)
+        std::thread::sleep(d);
+    }
+}
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// RAII drill scope for tests: installs a plan, serializes against
+/// other drills in the process (the plan is process-global), and
+/// uninstalls on drop.
+pub struct ScopedFaults {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl ScopedFaults {
+    pub fn install(plan: FaultPlan) -> ScopedFaults {
+        let guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        install(Some(plan));
+        ScopedFaults { _guard: guard }
+    }
+
+    /// Serialize a faults-off section against concurrent drills (e.g. a
+    /// clean baseline run that must not overlap another test's plan).
+    pub fn none() -> ScopedFaults {
+        let guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        install(None);
+        ScopedFaults { _guard: guard }
+    }
+}
+
+impl Drop for ScopedFaults {
+    fn drop(&mut self) {
+        install(None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("7:panic=0.3,slow_leaf=200us,queue_full=0.2,snap_trunc=1,sock_drop=0")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.panic_ppm, 300_000);
+        assert_eq!(p.queue_full_ppm, 200_000);
+        assert_eq!(p.snap_trunc_ppm, 1_000_000);
+        assert_eq!(p.sock_drop_ppm, 0);
+        assert_eq!(p.slow_leaf, Some(Duration::from_micros(200)));
+        // Duration suffixes.
+        assert_eq!(
+            FaultPlan::parse("1:slow_leaf=2ms").unwrap().slow_leaf,
+            Some(Duration::from_millis(2))
+        );
+        assert_eq!(
+            FaultPlan::parse("1:slow_leaf=1s").unwrap().slow_leaf,
+            Some(Duration::from_secs(1))
+        );
+        // Empty spec after the seed is a valid no-op plan.
+        assert_eq!(FaultPlan::parse("9:").unwrap(), FaultPlan { seed: 9, ..Default::default() });
+    }
+
+    #[test]
+    fn parse_rejects_garbage_loudly() {
+        for bad in [
+            "no-seed",
+            "x:panic=0.5",
+            "1:panic",
+            "1:panic=1.5",
+            "1:panic=-0.1",
+            "1:slow_leaf=10",
+            "1:slow_leaf=abcms",
+            "1:warp_core=0.5",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_in_seed_and_key() {
+        let hits = |seed: u64| -> Vec<bool> {
+            (0..256).map(|k| decide(seed, TAG_PANIC, k, 250_000)).collect()
+        };
+        assert_eq!(hits(7), hits(7), "same seed, same decisions");
+        assert_ne!(hits(7), hits(8), "different seed, different drill");
+        let n = hits(7).iter().filter(|&&b| b).count();
+        // ~25% rate, loose bounds: the mix must not be degenerate.
+        assert!(n > 256 / 8 && n < 256 / 2, "rate off: {n}/256");
+    }
+
+    #[test]
+    fn install_resets_sequences() {
+        let _scope = ScopedFaults::install(
+            FaultPlan { seed: 3, queue_full_ppm: 500_000, ..Default::default() },
+        );
+        let first: Vec<bool> = (0..32).map(|_| should_reject_submit()).collect();
+        install(Some(FaultPlan { seed: 3, queue_full_ppm: 500_000, ..Default::default() }));
+        let second: Vec<bool> = (0..32).map(|_| should_reject_submit()).collect();
+        assert_eq!(first, second, "reinstall must replay the drill");
+        assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b));
+    }
+
+    #[test]
+    fn inactive_means_no_faults_anywhere() {
+        let _scope = ScopedFaults::none();
+        assert!(!active());
+        assert!(!should_panic_job(1));
+        assert!(!should_reject_submit());
+        assert!(snapshot_truncation().is_none());
+        assert!(!should_drop_socket());
+        leaf_checkpoint(); // no plan: returns immediately
+    }
+}

@@ -67,11 +67,13 @@
 pub mod algorithms;
 pub mod anchors;
 pub mod bench;
+pub mod cancel;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod dataset;
 pub mod engine;
+pub mod faults;
 pub mod ids;
 pub mod json;
 pub mod metrics;

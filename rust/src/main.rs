@@ -69,9 +69,16 @@ engine queries (common flags: --dataset NAME --scale F --seed N --rmin N
 system
   serve-demo [--workers N] [--jobs N] [--shards N]  exercise the coordinator
   serve      [--addr HOST:PORT] [--workers N] [--shards N] [--capacity N]
+             [--deadline-ms N] [--max-conns N]
              TCP JSON-line job server; --shards N = independent
              coordinator shards (consistent-hash dataset routing),
-             --workers per shard. Default shards: $PALLAS_SHARDS, else 1
+             --workers per shard. Default shards: $PALLAS_SHARDS, else 1.
+             --deadline-ms N = default job deadline for submits that
+             carry none (0 = off); --max-conns = connection cap.
+             Exits 0 after a client-issued {\"cmd\":\"drain\"}
+  drain      [--addr HOST:PORT] [--timeout-ms N]
+             drain a running server: stop intake, wait (bounded) for
+             in-flight jobs, report stragglers; the server then exits
   stats      [--addr HOST:PORT] [--format prom|json]
              fetch a running server's observability snapshot (latency
              histograms + per-family traversal counters); prom prints
@@ -83,6 +90,20 @@ datasets: squiggles voronoi cell covtype reuters50 reuters100
 ";
 
 fn main() {
+    // Deterministic fault drills: $PALLAS_FAULTS (default off). A set
+    // but unparsable spec is a loud exit, not a silently skipped drill.
+    match anchors_hierarchy::faults::from_env() {
+        Ok(plan) => {
+            if let Some(p) = &plan {
+                eprintln!("fault drill active: $PALLAS_FAULTS seed {}", p.seed);
+            }
+            anchors_hierarchy::faults::install(plan);
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
@@ -402,21 +423,60 @@ fn run(args: &Args) -> Result<(), String> {
             // loudly even when the flag is given); else 1. Out-of-range
             // values are clamped by the constructor.
             let shards = args.flag("shards", shard::default_shards()?)?;
+            // Default job deadline for submits that carry none; 0 = off.
+            let deadline_ms = args.flag("deadline-ms", 0u64)?;
+            let max_conns = args.flag("max-conns", 256usize)?;
             args.finish()?;
             let engine = BatchDistanceEngine::open_default().ok().map(Arc::new);
             let coord = Arc::new(ShardedCoordinator::with_engine(
                 shards, workers, capacity, engine,
             ));
             let shards = coord.n_shards();
-            let server = anchors_hierarchy::coordinator::server::Server::start(&addr, coord)
-                .map_err(|e| format!("bind {addr}: {e}"))?;
+            let opts = anchors_hierarchy::coordinator::server::ServerOptions {
+                max_conns,
+                default_deadline_ms: (deadline_ms > 0).then_some(deadline_ms),
+                ..Default::default()
+            };
+            let server =
+                anchors_hierarchy::coordinator::server::Server::start_with(&addr, coord, opts)
+                    .map_err(|e| format!("bind {addr}: {e}"))?;
             println!(
-                "serving newline-delimited JSON on {} ({shards} shard(s) × {workers} workers, queue {capacity} each);\nexample: {{\"cmd\":\"submit\",\"dataset\":\"cell\",\"scale\":0.01,\"op\":\"kmeans\",\"k\":10}}\nCtrl-C to stop",
+                "serving newline-delimited JSON on {} ({shards} shard(s) × {workers} workers, queue {capacity} each);\nexample: {{\"cmd\":\"submit\",\"dataset\":\"cell\",\"scale\":0.01,\"op\":\"kmeans\",\"k\":10}}\nCtrl-C to stop, {{\"cmd\":\"drain\"}} to shut down cleanly",
                 server.addr()
             );
             loop {
                 // pallas-lint: allow(threads, CLI serve loop parks the foreground thread; not a result-producing path)
-                std::thread::sleep(std::time::Duration::from_secs(3600));
+                std::thread::sleep(std::time::Duration::from_millis(500));
+                if server.draining() {
+                    // The drain op already waited for the coordinator:
+                    // every accepted job is terminal. A short grace lets
+                    // in-flight responses flush, then exit cleanly.
+                    println!("drain requested; shutting down");
+                    // pallas-lint: allow(threads, drain grace period before a clean exit; not a result-producing path)
+                    std::thread::sleep(std::time::Duration::from_secs(2));
+                    return Ok(());
+                }
+            }
+        }
+        "drain" => {
+            let addr = args.str_flag("addr", "127.0.0.1:7407");
+            let timeout_ms = args.flag("timeout-ms", 60_000u64)?;
+            args.finish()?;
+            let mut client = anchors_hierarchy::coordinator::server::Client::connect(&*addr)
+                .map_err(|e| format!("connect {addr}: {e}"))?;
+            let req = anchors_hierarchy::coordinator::server::Client::request(vec![
+                ("cmd", Value::Str("drain".into())),
+                ("timeout_ms", Value::Num(anchors_hierarchy::ids::wire_from_u64(timeout_ms))),
+            ]);
+            let resp = client.call(&req)?;
+            if resp.get("ok") != Some(&Value::Bool(true)) {
+                return Err(format!("server error: {}", anchors_hierarchy::json::write(&resp)));
+            }
+            println!("{}", anchors_hierarchy::json::write(&resp));
+            if resp.get("drained") == Some(&Value::Bool(true)) {
+                Ok(())
+            } else {
+                Err("drain timed out with stragglers still running".into())
             }
         }
         "stats" => {
@@ -515,7 +575,7 @@ fn serve_demo(
             3 => Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 5, use_tree: true }),
             _ => Query::Mst(MstQuery { use_tree: true }),
         };
-        let spec = JobSpec { dataset, query, rmin: 30 };
+        let spec = JobSpec { dataset, query, rmin: 30, deadline_ms: None };
         match coord.submit(spec) {
             Ok(id) => ids.push(id),
             Err(e) => println!("job {i} rejected: {e:?}"),
@@ -541,8 +601,16 @@ fn serve_demo(
     }
     let m = coord.shutdown();
     println!(
-        "done: submitted {} completed {} failed {} rejected {} cancelled {} total-dists {}",
-        m.submitted, m.completed, m.failed, m.rejected, m.cancelled, m.total_dists
+        "done: submitted {} completed {} failed {} rejected {} cancelled {}+{} deadline {} breaker {} total-dists {}",
+        m.submitted,
+        m.completed,
+        m.failed,
+        m.rejected,
+        m.cancelled,
+        m.cancelled_running,
+        m.deadline_exceeded,
+        m.breaker_open,
+        m.total_dists
     );
     Ok(())
 }

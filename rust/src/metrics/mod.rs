@@ -39,6 +39,14 @@ pub struct Space {
     /// was handed, and views made by [`Space::select_rows`] charge the
     /// same sink. Pure counting — deterministic at every thread count.
     obs: Arc<crate::obs::ObsSink>,
+    /// Cooperative cancellation flag ([`crate::cancel::CancelSlot`]),
+    /// shared exactly like the counter and the obs sink: views made by
+    /// [`Space::select_rows`] poll the same slot, so a traversal over
+    /// the tree-order arena observes a cancel armed on the parent
+    /// space. Polled only at [`Space::checkpoint`] — one relaxed load
+    /// on the happy path, so results and distance counts are untouched
+    /// unless a cancel actually fires.
+    cancel: Arc<crate::cancel::CancelSlot>,
     /// Opt-in f32 filter tier ([`block::F32Filter`]): when set, the
     /// threshold-pruning leaf scans (knn / ball / anomaly) may run an
     /// 8-wide f32 pre-pass and only recompute ε-margin candidates in
@@ -60,6 +68,7 @@ impl Space {
             metric,
             counter: Arc::new(DistCounter::new()),
             obs: Arc::new(crate::obs::ObsSink::new()),
+            cancel: Arc::new(crate::cancel::CancelSlot::new()),
             f32_tier: false,
         }
     }
@@ -95,6 +104,28 @@ impl Space {
         Arc::clone(&self.obs)
     }
 
+    /// Shared handle to the cancellation slot (mirroring
+    /// [`Space::counter`]). The coordinator holds this across a
+    /// dataset's lifetime: the worker arms it before each job's
+    /// traversal, `cancel`/the deadline timer set it from outside.
+    pub fn cancel_shared(&self) -> Arc<crate::cancel::CancelSlot> {
+        Arc::clone(&self.cancel)
+    }
+
+    /// Traversal checkpoint: called at frontier pops and leaf-scan
+    /// chunk boundaries — never inside a distance kernel. On the happy
+    /// path this is one relaxed load (plus one more when a fault drill
+    /// is installed); when the slot has been set it unwinds with a
+    /// typed [`crate::cancel::CancelUnwind`] payload that the
+    /// coordinator catches and classifies.
+    #[inline]
+    pub fn checkpoint(&self) {
+        self.cancel.check();
+        if crate::faults::active() {
+            crate::faults::leaf_checkpoint();
+        }
+    }
+
     /// Whether the opt-in f32 filter tier is enabled for this space.
     pub fn f32_tier(&self) -> bool {
         self.f32_tier
@@ -119,6 +150,7 @@ impl Space {
             metric: self.metric,
             counter: Arc::clone(&self.counter),
             obs: Arc::clone(&self.obs),
+            cancel: Arc::clone(&self.cancel),
             // The arena inherits the tier flag (and, via Data::select_rows,
             // the parent's cached max|x|), so arena scans behave exactly
             // like original-order scans: same filter decision, same ε.
@@ -613,6 +645,22 @@ mod tests {
                 dense_dot_f32(&a, &b).to_bits()
             );
         }
+    }
+
+    #[test]
+    fn checkpoint_polls_the_shared_cancel_slot() {
+        let s = small_dense();
+        s.checkpoint(); // live slot: free no-op
+        let view = s.select_rows(&[2, 0]);
+        s.cancel_shared().set(crate::cancel::CancelReason::Deadline);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| view.checkpoint()))
+            .expect_err("view must observe the parent's cancel");
+        let cu = err
+            .downcast_ref::<crate::cancel::CancelUnwind>()
+            .expect("typed payload");
+        assert_eq!(cu.reason, crate::cancel::CancelReason::Deadline);
+        s.cancel_shared().arm();
+        view.checkpoint(); // re-armed: live again
     }
 
     #[test]

@@ -108,6 +108,18 @@ fn write_tree_impl(tree: &MetricTree, w: &mut impl Write, with_sum2: bool) -> Re
 /// [`MetricTree::attach_arena`] with the dataset before running any
 /// leaf-scanning query.
 pub fn read_tree(r: &mut impl Read) -> Result<MetricTree> {
+    // Deterministic snapshot-truncation drill ([`crate::faults`],
+    // default off): cap the reader at the injected byte limit so every
+    // mid-record EOF path below gets exercised as a loud `Err`, never a
+    // silently short tree.
+    if let Some(limit) = crate::faults::snapshot_truncation() {
+        let mut limited = r.take(limit);
+        return read_tree_inner(&mut limited);
+    }
+    read_tree_inner(r)
+}
+
+fn read_tree_inner(r: &mut impl Read) -> Result<MetricTree> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     let has_sum2 = match &magic {

@@ -54,7 +54,7 @@ fn random_spec(rng: &mut Rng) -> JobSpec {
         }),
         _ => Query::Mst(MstQuery { use_tree }),
     };
-    JobSpec { dataset, query, rmin: 8 + rng.below(24) }
+    JobSpec { dataset, query, rmin: 8 + rng.below(24), deadline_ms: None }
 }
 
 #[test]
@@ -260,6 +260,7 @@ fn prop_stats_stream_identical_across_shard_counts() {
                     dataset: DatasetSpec { kind, scale: [0.002, 0.003][i % 2], seed: 1 },
                     query,
                     rmin: [12, 24][(i / 2) % 2],
+                    deadline_ms: None,
                 }
             })
             .collect();
@@ -372,8 +373,10 @@ fn sharded_cancel_semantics() {
     let victim = queued[2];
     let cancelled = coord.cancel(victim);
     if cancelled {
-        // Double-cancel must not double-count.
-        assert!(!coord.cancel(victim), "cancel succeeded twice");
+        // Double-cancel may honestly answer true again while the job is
+        // still live (the Failed promise covers both callers), but it
+        // must not double-count — pinned by the metrics sum below.
+        let _ = coord.cancel(victim);
         let JobState::Failed(e) = coord.wait(victim) else {
             panic!("cancelled job not failed");
         };
@@ -389,7 +392,10 @@ fn sharded_cancel_semantics() {
     let m = coord.shutdown();
     assert_eq!(m.submitted, 5);
     assert_eq!(m.completed + m.failed, m.submitted);
-    assert_eq!(m.cancelled, u64::from(cancelled));
+    // The victim was either still queued (cancelled) or already claimed
+    // (cancelled_running) — exactly one of the two counters moved, and
+    // exactly once even after the double-cancel above.
+    assert_eq!(m.cancelled + m.cancelled_running, u64::from(cancelled));
     if cancelled {
         assert!(m.failed >= 1);
     }

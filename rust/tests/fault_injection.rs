@@ -1,0 +1,346 @@
+//! Deterministic fault-injection drills over the serving stack.
+//!
+//! For each fault class, under (workers, shards) combinations spanning
+//! {1, 8} × {1, 4}, these tests pin the robustness contract:
+//!
+//! * **accounting holds** — `completed + failed == submitted`, injected
+//!   submit rejections are counted under `rejected`, and no job is lost
+//!   or duplicated;
+//! * **non-faulted jobs are unaffected** — their results equal a clean
+//!   run's results, bit for bit;
+//! * **drills replay** — the same [`FaultPlan`] against the same
+//!   submission stream reproduces the same faults, fault for fault;
+//! * **no residue** — a faults-off run on a fresh coordinator after a
+//!   drill is bit-identical (results *and* per-job distance counts) to
+//!   a never-faulted run.
+//!
+//! Fault plans are process-global, so every test here serializes on the
+//! `ScopedFaults` lock — including clean baselines (via
+//! [`ScopedFaults::none`]), which must not overlap another test's
+//! drill. Switching plans *inside* one scope uses the raw
+//! [`faults::install`] while the scope holds the lock.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anchors_hierarchy::coordinator::server::{Client, Server};
+use anchors_hierarchy::coordinator::{
+    CoordinatorConfig, FailureKind, JobSpec, JobState, ShardedCoordinator, SubmitError,
+};
+use anchors_hierarchy::data::Data;
+use anchors_hierarchy::dataset::{gaussian_mixture, DatasetKind, DatasetSpec};
+use anchors_hierarchy::engine::{
+    AllPairsQuery, KmeansQuery, KnnQuery, KnnTarget, MstQuery, Query, QueryResult,
+};
+use anchors_hierarchy::faults::{self, FaultPlan, ScopedFaults};
+use anchors_hierarchy::json::Value;
+use anchors_hierarchy::metrics::Space;
+use anchors_hierarchy::tree::middle_out::{self, MiddleOutConfig};
+use anchors_hierarchy::tree::serialize;
+
+/// The full robustness matrix from the issue: worker counts {1, 8}
+/// crossed with shard counts {1, 4}.
+const MATRIX: [(usize, usize); 4] = [(1, 1), (8, 1), (1, 4), (8, 4)];
+
+/// A small deterministic submission stream: three datasets, four query
+/// families each, all tree-backed so the per-dataset build is cached.
+fn stream() -> Vec<JobSpec> {
+    let kinds = [DatasetKind::Squiggles, DatasetKind::Voronoi, DatasetKind::Cell];
+    let mut jobs = Vec::new();
+    for kind in kinds {
+        let dataset = DatasetSpec::scaled(kind, 0.004);
+        let queries = [
+            Query::Kmeans(KmeansQuery { k: 3, iters: 2, use_tree: true, ..Default::default() }),
+            Query::Knn(KnnQuery { target: KnnTarget::Point(3), k: 4, use_tree: true }),
+            Query::Mst(MstQuery { use_tree: true }),
+            Query::AllPairs(AllPairsQuery { tau: 0.5, use_tree: true }),
+        ];
+        for query in queries {
+            jobs.push(JobSpec { dataset: dataset.clone(), query, rmin: 16, deadline_ms: None });
+        }
+    }
+    jobs
+}
+
+/// Per-job terminal outcome, comparable across runs. `Err` carries the
+/// failure's error string.
+type Outcome = Result<(QueryResult, u64), String>;
+
+fn run_stream(coord: &ShardedCoordinator, specs: &[JobSpec]) -> Vec<Outcome> {
+    let ids: Vec<_> = specs
+        .iter()
+        .map(|s| coord.submit(s.clone()).expect("submit below capacity"))
+        .collect();
+    ids.iter()
+        .map(|&id| match coord.wait(id) {
+            JobState::Done(r) => Ok((r.output, r.dists)),
+            JobState::Failed(f) => Err(f.error),
+            other => panic!("wait returned non-terminal {other:?}"),
+        })
+        .collect()
+}
+
+/// Clean reference run for `specs` at this matrix point. Caller must
+/// already hold the scope lock; faults are switched off for the run.
+fn clean_baseline(workers: usize, shards: usize, specs: &[JobSpec]) -> Vec<Outcome> {
+    faults::install(None);
+    let coord = ShardedCoordinator::new(shards, workers, 64);
+    let out = run_stream(&coord, specs);
+    assert!(out.iter().all(Result::is_ok), "clean run must not fail");
+    coord.shutdown();
+    out
+}
+
+#[test]
+fn panic_drill_accounts_every_job_and_spares_the_rest() {
+    let _scope = ScopedFaults::none();
+    let specs = stream();
+    let plan = FaultPlan { seed: 7, panic_ppm: 350_000, ..Default::default() };
+    let mut total_failed = 0u64;
+    for (workers, shards) in MATRIX {
+        let baseline = clean_baseline(workers, shards, &specs);
+        let drill = || -> (Vec<Outcome>, u64) {
+            faults::install(Some(plan.clone()));
+            // Breaker off: the failure set must be exactly the decided
+            // one, not shortened by a quarantine.
+            let coord = ShardedCoordinator::with_config(
+                shards,
+                workers,
+                64,
+                None,
+                CoordinatorConfig { breaker_k: 0, ..Default::default() },
+            );
+            let ids: Vec<_> =
+                specs.iter().map(|s| coord.submit(s.clone()).expect("submit")).collect();
+            let outcomes = ids
+                .iter()
+                .map(|&id| match coord.wait(id) {
+                    JobState::Done(r) => Ok((r.output, r.dists)),
+                    JobState::Failed(f) => {
+                        assert_eq!(f.kind, FailureKind::Panic, "{}", f.error);
+                        assert!(f.error.contains("injected fault"), "{}", f.error);
+                        Err(f.error)
+                    }
+                    other => panic!("non-terminal {other:?}"),
+                })
+                .collect::<Vec<_>>();
+            let m = coord.shutdown();
+            assert_eq!(m.submitted, specs.len() as u64);
+            assert_eq!(m.completed + m.failed, m.submitted, "job lost or duplicated");
+            (outcomes, m.failed)
+        };
+        let (first, failed) = drill();
+        total_failed += failed;
+        // Non-faulted jobs produce exactly the clean results. (Distance
+        // counts are excluded: a panicked first job shifts the one-time
+        // tree-build attribution onto its successor by design.)
+        for (i, (got, want)) in first.iter().zip(&baseline).enumerate() {
+            if let Ok((out, _)) = got {
+                let Ok((want_out, _)) = want else { unreachable!() };
+                assert!(out == want_out, "job {i}: drilled result diverged from clean run");
+            }
+        }
+        // Same plan, same stream → the same drill, fault for fault.
+        let (second, _) = drill();
+        for (i, (a, b)) in first.iter().zip(&second).enumerate() {
+            match (a, b) {
+                (Ok(x), Ok(y)) => assert!(x == y, "job {i}: replay diverged"),
+                (Err(x), Err(y)) => assert_eq!(x, y, "job {i}: replay error diverged"),
+                _ => panic!("job {i}: replay changed the failure set"),
+            }
+        }
+    }
+    assert!(total_failed > 0, "drill never injected a panic across the whole matrix");
+}
+
+#[test]
+fn queue_full_drill_counts_rejections_and_replays() {
+    let _scope = ScopedFaults::none();
+    let specs = stream();
+    let plan = FaultPlan { seed: 11, queue_full_ppm: 300_000, ..Default::default() };
+    let mut total_rejected = 0u64;
+    for (workers, shards) in MATRIX {
+        let baseline = clean_baseline(workers, shards, &specs);
+        // Capacity far above the stream length: every rejection below
+        // is injected, none is a real queue-full.
+        let mut drill = || -> Vec<bool> {
+            faults::install(Some(plan.clone()));
+            let coord = ShardedCoordinator::new(shards, workers, 64);
+            let mut accepted = Vec::new();
+            let mut pattern = Vec::new();
+            for spec in &specs {
+                match coord.submit(spec.clone()) {
+                    Ok(id) => {
+                        pattern.push(true);
+                        accepted.push(Some(id));
+                    }
+                    Err(SubmitError::QueueFull) => {
+                        pattern.push(false);
+                        accepted.push(None);
+                    }
+                    Err(e) => panic!("unexpected submit error {e:?}"),
+                }
+            }
+            for (i, id) in accepted.iter().enumerate() {
+                let Some(id) = id else { continue };
+                match coord.wait(*id) {
+                    JobState::Done(r) => {
+                        let Ok((want_out, _)) = &baseline[i] else { unreachable!() };
+                        assert!(
+                            &r.output == want_out,
+                            "job {i}: accepted job diverged from clean run"
+                        );
+                    }
+                    other => panic!("job {i}: accepted job ended {other:?}"),
+                }
+            }
+            let n_ok = pattern.iter().filter(|&&b| b).count() as u64;
+            let m = coord.shutdown();
+            assert_eq!(m.submitted, n_ok);
+            assert_eq!(m.rejected, specs.len() as u64 - n_ok);
+            assert_eq!(m.completed, n_ok, "an accepted job was lost");
+            assert_eq!(m.failed, 0);
+            total_rejected += m.rejected;
+            pattern
+        };
+        let first = drill();
+        // install() resets the submit-attempt sequence, so the same
+        // plan replays the same accept/reject pattern.
+        let second = drill();
+        assert_eq!(first, second, "rejection pattern did not replay");
+    }
+    assert!(total_rejected > 0, "drill never rejected a submit across the whole matrix");
+}
+
+#[test]
+fn snapshot_truncation_fails_reads_loudly_then_recovers() {
+    let _scope = ScopedFaults::none();
+    let space = Space::euclidean(Data::Dense(gaussian_mixture(400, 6, 4, 12.0, 7)));
+    let tree = middle_out::build(&space, &MiddleOutConfig { rmin: 16, seed: 9, ..Default::default() });
+    let mut buf = Vec::new();
+    serialize::write_tree(&tree, &mut buf).unwrap();
+    // The injected cut lands in the first 516 bytes; the snapshot must
+    // extend past it for the truncation to be a real mid-file EOF.
+    assert!(buf.len() > 600, "snapshot too small to truncate ({} bytes)", buf.len());
+
+    faults::install(Some(FaultPlan { seed: 5, snap_trunc_ppm: 1_000_000, ..Default::default() }));
+    for attempt in 0..3 {
+        let err = serialize::read_tree(&mut buf.as_slice());
+        assert!(err.is_err(), "attempt {attempt}: truncated read did not error");
+    }
+
+    // Clearing the plan restores clean reads of the very same bytes.
+    faults::install(None);
+    let mut back = serialize::read_tree(&mut buf.as_slice()).expect("clean read");
+    back.attach_arena(&space);
+    back.validate(&space).expect("round-tripped tree validates");
+}
+
+#[test]
+fn socket_drop_drill_is_survived_by_client_retry() {
+    let _scope = ScopedFaults::install(FaultPlan {
+        seed: 3,
+        sock_drop_ppm: 400_000,
+        ..Default::default()
+    });
+    let coord = Arc::new(ShardedCoordinator::new(1, 2, 16));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let ping = Client::request(vec![("cmd", Value::Str("ping".into()))]);
+    // The drill drops ~40% of accepted connections before any byte is
+    // served; bounded retry with reconnect must ride through every one.
+    let mut client = Client::connect(server.addr()).unwrap();
+    for i in 0..5 {
+        let resp = client.call_retry(&ping, 12).unwrap_or_else(|e| panic!("ping {i}: {e}"));
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "ping {i}");
+    }
+    // Faults off: a plain, no-retry call works first time.
+    faults::install(None);
+    let mut clean = Client::connect(server.addr()).unwrap();
+    assert_eq!(clean.call(&ping).unwrap().get("pong"), Some(&Value::Bool(true)));
+}
+
+#[test]
+fn post_drill_clean_run_is_bit_identical_to_never_faulted() {
+    let _scope = ScopedFaults::none();
+    let specs = stream();
+    // Never-faulted reference, including exact per-job distance counts.
+    let baseline = clean_baseline(2, 2, &specs);
+
+    // A rough combined drill on a disposable coordinator: panics plus
+    // injected queue-fulls. Only accounting is asserted here; the point
+    // is what comes after.
+    faults::install(Some(FaultPlan {
+        seed: 13,
+        panic_ppm: 300_000,
+        queue_full_ppm: 200_000,
+        ..Default::default()
+    }));
+    let coord = ShardedCoordinator::new(2, 2, 64);
+    let ids: Vec<_> = specs.iter().filter_map(|s| coord.submit(s.clone()).ok()).collect();
+    for id in &ids {
+        assert!(coord.wait(*id).is_terminal());
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed + m.failed, m.submitted);
+
+    // Faults off, fresh coordinator: results AND distance counts must
+    // match the never-faulted run exactly — a drill leaves no residue.
+    let after = clean_baseline(2, 2, &specs);
+    for (i, (a, b)) in baseline.iter().zip(&after).enumerate() {
+        let (Ok((out_a, dists_a)), Ok((out_b, dists_b))) = (a, b) else {
+            panic!("job {i}: clean run failed");
+        };
+        assert!(out_a == out_b, "job {i}: post-drill result diverged");
+        assert_eq!(dists_a, dists_b, "job {i}: post-drill distance count diverged");
+    }
+}
+
+#[test]
+fn wedged_job_is_reported_as_straggler_then_cancel_recovers_the_drain() {
+    // Slow every traversal checkpoint: the MST below runs for far
+    // longer than the first drain bound, wedging its shard on purpose.
+    let _scope = ScopedFaults::install(FaultPlan {
+        seed: 1,
+        slow_leaf: Some(Duration::from_millis(5)),
+        ..Default::default()
+    });
+    let coord = ShardedCoordinator::new(1, 1, 8);
+    let id = coord
+        .submit(JobSpec {
+            dataset: DatasetSpec::scaled(DatasetKind::Cell, 0.004),
+            query: Query::Mst(MstQuery { use_tree: true }),
+            rmin: 16,
+            deadline_ms: None,
+        })
+        .unwrap();
+    // Wait until the job is actually on a worker.
+    loop {
+        match coord.state(id) {
+            Some(JobState::Running) => break,
+            Some(s) if s.is_terminal() => panic!("wedge job finished early: {s:?}"),
+            _ => std::thread::sleep(Duration::from_millis(1)),
+        }
+    }
+    let report = coord.drain(Duration::from_millis(100));
+    assert!(!report.drained, "a wedged shard must not report a clean drain");
+    assert_eq!(report.stragglers, vec![0], "the wedged shard is named");
+
+    // Cancelling the wedged job unblocks the shard; a second drain
+    // completes and the job lands in Failed("cancelled").
+    assert!(coord.cancel(id), "running job must be cancellable");
+    let report = coord.drain(Duration::from_secs(60));
+    assert!(report.drained, "cancel did not unwedge the drain");
+    let JobState::Failed(f) = coord.wait(id) else { panic!("cancelled job not failed") };
+    assert_eq!(f.kind, FailureKind::Cancelled);
+    assert_eq!(report.metrics.cancelled_running + report.metrics.cancelled, 1);
+    // Intake stays closed after a drain.
+    assert!(matches!(
+        coord.submit(JobSpec {
+            dataset: DatasetSpec::scaled(DatasetKind::Cell, 0.004),
+            query: Query::Mst(MstQuery { use_tree: true }),
+            rmin: 16,
+            deadline_ms: None,
+        }),
+        Err(SubmitError::ShuttingDown)
+    ));
+}

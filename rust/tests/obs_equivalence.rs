@@ -178,16 +178,19 @@ fn stats_bit_identical_across_shard_counts() {
                     ..Default::default()
                 }),
                 rmin: 16,
+                deadline_ms: None,
             },
             JobSpec {
                 dataset: DatasetSpec::scaled(DatasetKind::Voronoi, 0.002),
                 query: Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 5, use_tree: true }),
                 rmin: 16,
+                deadline_ms: None,
             },
             JobSpec {
                 dataset: DatasetSpec::scaled(DatasetKind::Cell, 0.005),
                 query: Query::Mst(MstQuery { use_tree: true }),
                 rmin: 16,
+                deadline_ms: None,
             },
         ]
     };
@@ -254,6 +257,7 @@ fn sharded_coordinator_obs_folds_order_invariantly() {
                 dataset: DatasetSpec::scaled(kind, scale),
                 query: Query::Knn(KnnQuery { target: KnnTarget::Point(0), k: 3, use_tree: true }),
                 rmin: 16,
+                deadline_ms: None,
             })
             .unwrap()
     })

@@ -104,11 +104,20 @@ const COUNTED_DIRS: [&str; 4] = [
 const THREAD_EXEMPT_DIRS: [&str; 2] = ["rust/src/parallel/", "rust/src/coordinator/"];
 
 /// D5: wire-facing code where a panic kills a client connection.
-const WIRE_FILES: [&str; 3] = [
+/// `shard.rs` is in scope because the sharded router sits directly on
+/// the request path (routing, drain, cancel) — a panic there takes the
+/// whole serving edge down, not one job.
+const WIRE_FILES: [&str; 4] = [
     "rust/src/coordinator/server.rs",
+    "rust/src/coordinator/shard.rs",
     "rust/src/engine/wire.rs",
     "rust/src/json.rs",
 ];
+
+/// D5, directory form: fault-injection code runs on failure paths by
+/// definition — the harness that forces failures must never add its
+/// own panic on top of the one it is injecting.
+const WIRE_DIRS: [&str; 1] = ["rust/src/faults/"];
 
 /// D6: id/count/wire conversion surfaces (checked helpers live in
 /// `crate::ids`, which is the one sanctioned home for the raw casts).
@@ -597,7 +606,7 @@ fn check_rules(path: &str, code: &str, found: &mut Vec<(&'static str, String)>) 
             }
         }
     }
-    if WIRE_FILES.contains(&path) {
+    if WIRE_FILES.contains(&path) || in_dirs(path, &WIRE_DIRS) {
         for tok in PANIC_TOKENS {
             if has_token(code, tok) {
                 push("panic-wire", tok);

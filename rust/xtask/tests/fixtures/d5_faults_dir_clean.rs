@@ -1,0 +1,8 @@
+//! D5 fixture (clean): the faults directory recovers poisoned locks
+//! and returns values instead of panicking.
+
+pub fn plan_rate(plan: &Plan) -> Option<u32> {
+    let slot = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    slot.as_ref()?;
+    plan.rates.first().copied()
+}

@@ -1,0 +1,9 @@
+//! D5 fixture: panics inside the fault-injection directory scope.
+
+pub fn plan_rate(plan: &Plan) -> u32 {
+    let slot = LOCK.lock().unwrap();
+    if slot.is_none() {
+        unreachable!("drill installed");
+    }
+    plan.rates[0]
+}

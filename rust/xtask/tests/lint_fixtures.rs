@@ -13,6 +13,8 @@ use xtask::lint::{lint_source, Report};
 const ALGO: &str = "rust/src/algorithms/fixture.rs";
 /// Virtual path inside the D5/D6 scopes (wire files).
 const WIRE: &str = "rust/src/engine/wire.rs";
+/// Virtual path inside the D5 directory scope (fault injection).
+const FAULTS: &str = "rust/src/faults/fixture.rs";
 
 fn lint_fixture(name: &str, virtual_path: &str) -> Report {
     let path = Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -140,6 +142,29 @@ fn d5_panic_wire() {
     );
     let c = lint_fixture("d5_panic_wire_clean.rs", WIRE);
     assert_diags(&c, &[]);
+}
+
+#[test]
+fn d5_panic_wire_covers_faults_dir_and_shard_router() {
+    let v = lint_fixture("d5_faults_dir_violate.rs", FAULTS);
+    assert_diags(
+        &v,
+        &[
+            (4, "panic-wire", ".unwrap()"),
+            (6, "panic-wire", "unreachable!"),
+            (8, "panic-wire", "[<int>] indexing"),
+        ],
+    );
+    let c = lint_fixture("d5_faults_dir_clean.rs", FAULTS);
+    assert_diags(&c, &[]);
+    // The sharded router sits on the request path, so the same source
+    // fires under its path too...
+    let s = lint_fixture("d5_faults_dir_violate.rs", "rust/src/coordinator/shard.rs");
+    assert_eq!(s.diagnostics.len(), 3, "{:#?}", s.diagnostics);
+    assert!(s.diagnostics.iter().all(|d| d.rule == "panic-wire"));
+    // ...while a non-wire coordinator path stays out of D5 scope.
+    let out = lint_fixture("d5_faults_dir_violate.rs", "rust/src/coordinator/mod.rs");
+    assert_diags(&out, &[]);
 }
 
 #[test]
